@@ -1,0 +1,61 @@
+//! Row redistribution under skew (§IV.C): run an expensive sentiment UDF
+//! over a heavily skewed partitioned table under Local / RoundRobin /
+//! Auto policies and print the per-process load balance each produces.
+//!
+//! Run: `cargo run --release --example skew_workload`
+
+use snowpark::engine::exchange::ExchangeMode;
+use snowpark::session::Session;
+use snowpark::sim::{register_udfs, TpcxBbDataset, TPCXBB_QUERIES};
+use snowpark::warehouse::PoolConfig;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::builder()
+        .pool(PoolConfig { nodes: 4, procs_per_node: 2, ..Default::default() })
+        .build()?;
+    // skew=2.0: the hot partition holds most of the reviews.
+    let ds = TpcxBbDataset::generate(4_000, 4, 2.0, 7);
+    ds.register(&session)?;
+    println!(
+        "store_sales skew factor (max/mean partition): {:.2}",
+        ds.skew_factor()
+    );
+
+    let mut reg = session.udfs();
+    register_udfs(&mut reg);
+    for q in TPCXBB_QUERIES {
+        let u = reg.scalar(q.udf).unwrap().clone();
+        session.register_scalar_udf(&u.name, u.return_type, u.body.clone());
+        session.set_udf_row_cost(&u.name, u.est_row_cost_ns);
+    }
+
+    for mode in [ExchangeMode::Local, ExchangeMode::RoundRobin, ExchangeMode::Auto] {
+        session.reset_pool();
+        let (out, report) = session.run_distributed_udf(
+            "product_reviews",
+            "sentiment",
+            &["review_text"],
+            mode,
+        )?;
+        let pool = session.pool()?;
+        let busy = pool.busy_by_proc();
+        let max = *busy.iter().max().unwrap_or(&0) as f64;
+        let mean = busy.iter().sum::<u64>() as f64 / busy.len() as f64;
+        println!(
+            "\nmode {:?}: {} rows, redistributed={}, remote_batches={}",
+            mode,
+            out.len(),
+            report.redistributed,
+            report.remote_batches
+        );
+        println!(
+            "  per-proc busy (ms): {:?}",
+            busy.iter().map(|b| b / 1_000_000).collect::<Vec<_>>()
+        );
+        println!(
+            "  straggler/mean imbalance: {:.2} (1.0 = perfectly balanced)",
+            max / mean.max(1.0)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (interpret=True on this CPU image) + oracle."""
+
+from . import minmax, one_hot, pearson, ref  # noqa: F401

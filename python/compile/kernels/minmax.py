@@ -1,0 +1,90 @@
+"""Pallas kernels for min-max scaling (the Fidelity 77x workload, §V.B).
+
+Two kernels so the rust engine can stream arbitrarily large columns through
+fixed-shape AOT artifacts:
+
+- ``minmax_stats_kernel``:  x (N, F)            -> stats (2, F)  [min; max]
+- ``minmax_apply_kernel``:  x (N, F), stats     -> y (N, F)
+
+Both are tiled over row blocks. On real TPU the row-block size is chosen so
+a block (block_rows x F f32) plus the (2, F) stats fit comfortably in VMEM
+(see DESIGN.md §8); on this CPU image they run under ``interpret=True``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stats_body(x_ref, o_ref):
+    """Grid-accumulated column min/max. Sequential grid: step 0 seeds the
+    accumulator, later steps fold their block in."""
+    i = pl.program_id(0)
+    block_min = jnp.min(x_ref[...], axis=0)
+    block_max = jnp.max(x_ref[...], axis=0)
+
+    @pl.when(i == 0)
+    def _seed():
+        o_ref[0, :] = block_min
+        o_ref[1, :] = block_max
+
+    @pl.when(i != 0)
+    def _fold():
+        o_ref[0, :] = jnp.minimum(o_ref[0, :], block_min)
+        o_ref[1, :] = jnp.maximum(o_ref[1, :], block_max)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def minmax_stats(x, *, block_rows=256):
+    """Column-wise [min; max] of ``x`` via a row-block-tiled Pallas kernel."""
+    n, f = x.shape
+    block_rows = min(block_rows, n)
+    if n % block_rows != 0:
+        # Static shapes only: fall back to a single whole-array block. The
+        # AOT artifacts always use divisible shapes; this path serves tests.
+        block_rows = n
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _stats_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((2, f), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, f), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _apply_body(x_ref, stats_ref, o_ref):
+    lo = stats_ref[0, :]
+    rng = stats_ref[1, :] - lo
+    safe = jnp.where(rng == 0, jnp.ones_like(rng), rng)
+    o_ref[...] = (x_ref[...] - lo) / safe
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def minmax_apply(x, stats, *, block_rows=256):
+    """Scale ``x`` into [0, 1] given (2, F) stats; zero ranges map to 0."""
+    n, f = x.shape
+    block_rows = min(block_rows, n)
+    if n % block_rows != 0:
+        block_rows = n
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _apply_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, f), lambda i: (i, 0)),
+            pl.BlockSpec((2, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), x.dtype),
+        interpret=True,
+    )(x, stats)
+
+
+def minmax_scale(x, *, block_rows=256):
+    """One-shot scaling: stats kernel then apply kernel (two pallas_calls
+    that XLA fuses into one module when jitted together)."""
+    return minmax_apply(x, minmax_stats(x, block_rows=block_rows), block_rows=block_rows)

@@ -1,0 +1,43 @@
+"""Pallas kernel for one-hot encoding (the Fidelity 50x workload, §V.B).
+
+Scatter-free formulation: each (block_rows,) slab of integer-valued codes is
+compared against a broadcast class iota, producing a (block_rows, C) f32
+block. On TPU this is pure VPU work with no gather/scatter; on this CPU
+image it runs under ``interpret=True``.
+
+Codes arrive as f32 (the rust runtime marshals every column as f32
+literals); values are compared exactly, so any integer representable in f32
+(|v| < 2^24) round-trips losslessly. Out-of-range codes produce all-zero
+rows — a dictionary miss, matching ref.one_hot.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _one_hot_body(codes_ref, o_ref):
+    codes = codes_ref[...].astype(jnp.float32)  # (block_rows,)
+    c = o_ref.shape[1]
+    classes = jax.lax.broadcasted_iota(jnp.float32, (1, c), 1)
+    o_ref[...] = (codes[:, None] == classes).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "block_rows"))
+def one_hot(codes, num_classes, *, block_rows=256):
+    """One-hot encode ``codes`` (shape (N,), any numeric dtype) to (N, C) f32."""
+    (n,) = codes.shape
+    block_rows = min(block_rows, n)
+    if n % block_rows != 0:
+        block_rows = n
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _one_hot_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_rows, num_classes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, num_classes), jnp.float32),
+        interpret=True,
+    )(codes)

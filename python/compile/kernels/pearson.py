@@ -1,0 +1,65 @@
+"""Pallas kernel for Pearson correlation moments (the Fidelity 17x
+workload, §V.B).
+
+The correlation matrix of the columns of X decomposes into streaming
+moments: X^T X (an F x F Gram matrix) and the column sums. The kernel
+accumulates both over a row-block grid — each grid step contributes
+``x_block.T @ x_block``, which on real TPU is an MXU systolic-array matmul
+with the running Gram matrix resident in VMEM (DESIGN.md §8 discusses MXU
+utilization; the small feature dimension is the roofline limiter).
+
+Finalization (moments -> correlation) is a tiny F x F computation done
+either in jnp (`pearson` below, used by the oracle tests) or natively in
+rust when moments are combined across request-path batches.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _moments_body(x_ref, xtx_ref, colsum_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)
+
+    @pl.when(i == 0)
+    def _seed():
+        xtx_ref[...] = jnp.zeros_like(xtx_ref)
+        colsum_ref[...] = jnp.zeros_like(colsum_ref)
+
+    xtx_ref[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+    colsum_ref[...] += jnp.sum(x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def pearson_moments(x, *, block_rows=256):
+    """(xtx, colsum) moments of ``x`` (N, F) via a row-block-tiled kernel."""
+    n, f = x.shape
+    block_rows = min(block_rows, n)
+    if n % block_rows != 0:
+        block_rows = n
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _moments_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, f), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((f, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, f), jnp.float32),
+            jax.ShapeDtypeStruct((f,), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def pearson(x, *, block_rows=256):
+    """Full correlation matrix: Pallas moments + jnp finalization."""
+    xtx, colsum = pearson_moments(x, block_rows=block_rows)
+    return ref.pearson_finalize(xtx, colsum, x.shape[0])

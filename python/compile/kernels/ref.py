@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: `python/tests/` asserts each Pallas
+kernel (interpret=True) matches its oracle with tight tolerances, and the
+rust integration tests re-derive the same numbers natively to validate the
+AOT -> PJRT path end to end.
+
+The kernels implement the Fidelity case-study workloads from section V.B of
+the paper: min-max scaling, one-hot encoding, and Pearson correlation.
+"""
+
+import jax.numpy as jnp
+
+
+def minmax_stats(x):
+    """Column-wise [min; max] of ``x`` — shape (2, F) for x of shape (N, F)."""
+    return jnp.stack([jnp.min(x, axis=0), jnp.max(x, axis=0)])
+
+
+def minmax_apply(x, stats):
+    """Scale columns of ``x`` into [0, 1] given stats from `minmax_stats`.
+
+    Constant columns (max == min) map to 0.0 rather than NaN, matching the
+    conventional sklearn MinMaxScaler behaviour for zero ranges.
+    """
+    lo, hi = stats[0], stats[1]
+    rng = hi - lo
+    safe = jnp.where(rng == 0, 1.0, rng)
+    return (x - lo) / safe
+
+
+def minmax_scale(x):
+    """One-shot min-max scaling (stats + apply)."""
+    return minmax_apply(x, minmax_stats(x))
+
+
+def one_hot(codes, num_classes):
+    """One-hot encode integer-valued ``codes`` (any float/int dtype) into an
+    (N, num_classes) float32 matrix.
+
+    Out-of-range codes yield all-zero rows (they match no class), mirroring
+    a dictionary-miss in the paper's categorical-encoding scenario.
+    """
+    classes = jnp.arange(num_classes, dtype=jnp.float32)
+    codes_f = codes.astype(jnp.float32)
+    return (codes_f[:, None] == classes[None, :]).astype(jnp.float32)
+
+
+def pearson_moments(x):
+    """Streaming-combinable moments for Pearson correlation.
+
+    Returns (xtx, colsum): xtx = x^T @ x of shape (F, F); colsum of shape
+    (F,). Moments from disjoint row chunks simply add; `pearson_finalize`
+    turns combined moments into the correlation matrix. This is the shape
+    the rust engine consumes batch-by-batch on the request path.
+    """
+    x = x.astype(jnp.float32)
+    return x.T @ x, jnp.sum(x, axis=0)
+
+
+def pearson_finalize(xtx, colsum, n):
+    """Correlation matrix from combined moments over ``n`` rows.
+
+    Zero-variance columns produce 0.0 correlations off-diagonal and 1.0 on
+    the diagonal (conventional guard, avoids NaN).
+    """
+    n = jnp.asarray(n, dtype=jnp.float32)
+    mean = colsum / n
+    cov = xtx / n - jnp.outer(mean, mean)
+    var = jnp.clip(jnp.diag(cov), 0.0, None)
+    std = jnp.sqrt(var)
+    denom = jnp.outer(std, std)
+    corr = jnp.where(denom > 0, cov / jnp.where(denom > 0, denom, 1.0), 0.0)
+    f = corr.shape[0]
+    eye = jnp.eye(f, dtype=corr.dtype)
+    # Exact-1 diagonal by convention (including zero-variance columns).
+    return corr * (1 - eye) + eye
+
+
+def pearson(x):
+    """One-shot Pearson correlation matrix of the columns of ``x``."""
+    xtx, colsum = pearson_moments(x)
+    return pearson_finalize(xtx, colsum, x.shape[0])
+
+
+def featurize(x, codes, stats, num_classes):
+    """Fused feature-engineering graph: scaled numerics ++ one-hot codes."""
+    return jnp.concatenate(
+        [minmax_apply(x, stats), one_hot(codes, num_classes)], axis=1
+    )

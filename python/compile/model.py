@@ -1,0 +1,115 @@
+"""Layer-2 JAX compute graphs for the vectorized UDFs.
+
+Each entry point here becomes one AOT artifact (see `aot.py`). The graphs
+call the Layer-1 Pallas kernels, so the kernels lower into the same HLO
+module; XLA fuses the surrounding glue. The rust engine streams request
+batches of a fixed shape (BATCH_ROWS x NUM_FEATURES) through these, and
+combines streaming moments/stats natively across batches.
+
+Shapes are pinned here and exported through the artifact manifest — the
+rust `runtime::ArtifactManifest` reads them so L3 never hardcodes them.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import minmax, one_hot, pearson
+
+# Request-path batch geometry. 2048 x 16 f32 per batch = 128 KiB, well
+# within a node's rowset-exchange granularity; 2048 rows / 256-row blocks
+# gives the kernels an 8-step grid.
+BATCH_ROWS = 2048
+NUM_FEATURES = 16
+NUM_CLASSES = 32
+BLOCK_ROWS = 256
+
+
+def minmax_stats_graph(x):
+    """x (B, F) -> (2, F) column [min; max] for streaming combination."""
+    return (minmax.minmax_stats(x, block_rows=BLOCK_ROWS),)
+
+
+def minmax_apply_graph(x, stats):
+    """x (B, F), stats (2, F) -> scaled (B, F)."""
+    return (minmax.minmax_apply(x, stats, block_rows=BLOCK_ROWS),)
+
+
+def one_hot_graph(codes):
+    """codes (B,) f32 -> one-hot (B, C) f32."""
+    return (one_hot.one_hot(codes, NUM_CLASSES, block_rows=BLOCK_ROWS),)
+
+
+def pearson_moments_graph(x):
+    """x (B, F) -> (xtx (F, F), colsum (F,)) streaming moments."""
+    return pearson.pearson_moments(x, block_rows=BLOCK_ROWS)
+
+
+def featurize_graph(x, codes, stats):
+    """Fused feature engineering: scaled numerics ++ one-hot categoricals.
+
+    One module, two pallas_calls — demonstrates the L2 fusion story: the
+    scale and encode stages share a single HLO module so XLA schedules them
+    together and the rust runtime pays one dispatch per batch instead of two.
+    """
+    scaled = minmax.minmax_apply(x, stats, block_rows=BLOCK_ROWS)
+    encoded = one_hot.one_hot(codes, NUM_CLASSES, block_rows=BLOCK_ROWS)
+    return (jnp.concatenate([scaled, encoded], axis=1),)
+
+
+def shape_f32(*dims):
+    import jax
+
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+# name -> (fn, example_args, manifest io spec)
+# manifest io spec: list of ("input"|"output", name, dtype, dims)
+ENTRY_POINTS = {
+    "minmax_stats": (
+        minmax_stats_graph,
+        lambda: (shape_f32(BATCH_ROWS, NUM_FEATURES),),
+        [
+            ("input", "x", "f32", (BATCH_ROWS, NUM_FEATURES)),
+            ("output", "stats", "f32", (2, NUM_FEATURES)),
+        ],
+    ),
+    "minmax_apply": (
+        minmax_apply_graph,
+        lambda: (shape_f32(BATCH_ROWS, NUM_FEATURES), shape_f32(2, NUM_FEATURES)),
+        [
+            ("input", "x", "f32", (BATCH_ROWS, NUM_FEATURES)),
+            ("input", "stats", "f32", (2, NUM_FEATURES)),
+            ("output", "y", "f32", (BATCH_ROWS, NUM_FEATURES)),
+        ],
+    ),
+    "one_hot": (
+        one_hot_graph,
+        lambda: (shape_f32(BATCH_ROWS),),
+        [
+            ("input", "codes", "f32", (BATCH_ROWS,)),
+            ("output", "y", "f32", (BATCH_ROWS, NUM_CLASSES)),
+        ],
+    ),
+    "pearson_moments": (
+        pearson_moments_graph,
+        lambda: (shape_f32(BATCH_ROWS, NUM_FEATURES),),
+        [
+            ("input", "x", "f32", (BATCH_ROWS, NUM_FEATURES)),
+            ("output", "xtx", "f32", (NUM_FEATURES, NUM_FEATURES)),
+            ("output", "colsum", "f32", (NUM_FEATURES,)),
+        ],
+    ),
+    "featurize": (
+        featurize_graph,
+        lambda: (
+            shape_f32(BATCH_ROWS, NUM_FEATURES),
+            shape_f32(BATCH_ROWS),
+            shape_f32(2, NUM_FEATURES),
+        ),
+        [
+            ("input", "x", "f32", (BATCH_ROWS, NUM_FEATURES)),
+            ("input", "codes", "f32", (BATCH_ROWS,)),
+            ("input", "stats", "f32", (2, NUM_FEATURES)),
+            ("output", "feats", "f32", (BATCH_ROWS, NUM_FEATURES + NUM_CLASSES)),
+        ],
+    ),
+}

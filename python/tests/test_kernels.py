@@ -1,0 +1,179 @@
+"""Pallas kernels vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes (and dtypes where the kernel is generic); every
+kernel must match `ref.py` to tight tolerances under interpret=True.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import minmax, one_hot, pearson, ref
+
+jax.config.update("jax_enable_x64", True)
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def arr(rng, n, f, dtype=np.float32, lo=-100.0, hi=100.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=(n, f)).astype(dtype))
+
+
+@st.composite
+def shape_and_seed(draw):
+    n = draw(st.integers(min_value=1, max_value=600))
+    f = draw(st.integers(min_value=1, max_value=24))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return n, f, seed
+
+
+class TestMinMax:
+    @SETTINGS
+    @given(shape_and_seed(), st.sampled_from([np.float32, np.float64]))
+    def test_stats_matches_ref(self, sfs, dtype):
+        n, f, seed = sfs
+        x = arr(np.random.default_rng(seed), n, f, dtype)
+        got = minmax.minmax_stats(x)
+        want = ref.minmax_stats(x)
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    @SETTINGS
+    @given(shape_and_seed(), st.sampled_from([np.float32, np.float64]))
+    def test_apply_matches_ref(self, sfs, dtype):
+        n, f, seed = sfs
+        rng = np.random.default_rng(seed)
+        x = arr(rng, n, f, dtype)
+        stats = ref.minmax_stats(x)
+        got = minmax.minmax_apply(x, stats)
+        want = ref.minmax_apply(x, stats)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    @SETTINGS
+    @given(shape_and_seed())
+    def test_scaled_range_is_unit(self, sfs):
+        n, f, seed = sfs
+        x = arr(np.random.default_rng(seed), n, f)
+        y = np.asarray(minmax.minmax_scale(x))
+        assert y.min() >= -1e-6 and y.max() <= 1 + 1e-6
+
+    def test_constant_column_maps_to_zero(self):
+        x = jnp.asarray(np.full((64, 3), 7.5, np.float32))
+        y = minmax.minmax_scale(x)
+        np.testing.assert_array_equal(np.asarray(y), np.zeros((64, 3), np.float32))
+
+    def test_block_tiling_is_invisible(self):
+        # Divisible and non-divisible row counts give identical results.
+        rng = np.random.default_rng(0)
+        x = arr(rng, 512, 8)
+        a = minmax.minmax_scale(x, block_rows=256)
+        b = minmax.minmax_scale(x, block_rows=512)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    def test_single_row(self):
+        x = jnp.asarray([[1.0, -2.0, 3.0]], dtype=jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(minmax.minmax_scale(x)), np.zeros((1, 3), np.float32)
+        )
+
+
+class TestOneHot:
+    @SETTINGS
+    @given(
+        st.integers(min_value=1, max_value=600),
+        st.integers(min_value=2, max_value=40),
+        st.integers(min_value=0, max_value=2**31 - 1),
+        st.sampled_from([np.int32, np.int64, np.float32]),
+    )
+    def test_matches_ref(self, n, c, seed, dtype):
+        rng = np.random.default_rng(seed)
+        codes = jnp.asarray(rng.integers(0, c, size=(n,)).astype(dtype))
+        got = one_hot.one_hot(codes, c)
+        want = ref.one_hot(codes, c)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @SETTINGS
+    @given(
+        st.integers(min_value=1, max_value=300),
+        st.integers(min_value=2, max_value=16),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_row_sums(self, n, c, seed):
+        # Every in-range row has exactly one hot bit.
+        rng = np.random.default_rng(seed)
+        codes = jnp.asarray(rng.integers(0, c, size=(n,)).astype(np.int32))
+        y = np.asarray(one_hot.one_hot(codes, c))
+        np.testing.assert_array_equal(y.sum(axis=1), np.ones(n, np.float32))
+        np.testing.assert_array_equal(y.argmax(axis=1), np.asarray(codes))
+
+    def test_out_of_range_is_all_zero(self):
+        codes = jnp.asarray([-1, 5, 99], dtype=jnp.int32)
+        y = np.asarray(one_hot.one_hot(codes, 5))
+        np.testing.assert_array_equal(y[0], np.zeros(5))
+        np.testing.assert_array_equal(y[2], np.zeros(5))
+        assert y[1].sum() == 0  # 5 is out of range for C=5
+
+
+class TestPearson:
+    @SETTINGS
+    @given(shape_and_seed())
+    def test_moments_match_ref(self, sfs):
+        n, f, seed = sfs
+        x = arr(np.random.default_rng(seed), n, f)
+        got_xtx, got_sum = pearson.pearson_moments(x)
+        want_xtx, want_sum = ref.pearson_moments(x)
+        # f32 accumulation: the absolute error floor scales with
+        # sum(|x_i*x_j|) * eps ~ (100^2 * N) * 1e-7, so atol must scale
+        # with N rather than being a fixed constant.
+        atol = max(1e-2, 2e-3 * n)
+        np.testing.assert_allclose(got_xtx, want_xtx, rtol=1e-4, atol=atol)
+        np.testing.assert_allclose(got_sum, want_sum, rtol=1e-5, atol=1e-2 * n)
+
+    @SETTINGS
+    @given(
+        st.integers(min_value=4, max_value=400),
+        st.integers(min_value=2, max_value=12),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_corr_matches_numpy(self, n, f, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+        got = np.asarray(pearson.pearson(x))
+        want = np.corrcoef(np.asarray(x, np.float64), rowvar=False)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-3)
+
+    def test_perfectly_correlated(self):
+        rng = np.random.default_rng(1)
+        a = rng.normal(size=(256, 1)).astype(np.float32)
+        x = jnp.asarray(np.hstack([a, 2 * a, -3 * a]))
+        got = np.asarray(pearson.pearson(x))
+        want = np.array([[1, 1, -1], [1, 1, -1], [-1, -1, 1]], np.float32)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_zero_variance_guard(self):
+        x = jnp.asarray(
+            np.hstack(
+                [
+                    np.full((128, 1), 3.0, np.float32),
+                    np.random.default_rng(2).normal(size=(128, 1)).astype(np.float32),
+                ]
+            )
+        )
+        got = np.asarray(pearson.pearson(x))
+        assert not np.isnan(got).any()
+        np.testing.assert_allclose(np.diag(got), [1.0, 1.0], atol=1e-6)
+        np.testing.assert_allclose(got[0, 1], 0.0, atol=1e-5)
+
+    def test_streaming_moments_combine(self):
+        # Moments from row chunks must add to the whole-array moments —
+        # this is the contract the rust engine relies on across batches.
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(512, 8)).astype(np.float32))
+        xtx_a, sum_a = pearson.pearson_moments(x[:256])
+        xtx_b, sum_b = pearson.pearson_moments(x[256:])
+        whole = ref.pearson_finalize(xtx_a + xtx_b, sum_a + sum_b, 512)
+        direct = ref.pearson(x)
+        np.testing.assert_allclose(np.asarray(whole), np.asarray(direct), atol=1e-4)

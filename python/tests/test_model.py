@@ -1,0 +1,48 @@
+"""Layer-2 model graph shape checks + fused-graph semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+def test_entry_point_shapes_match_manifest():
+    for name, (fn, example_args, io_spec) in model.ENTRY_POINTS.items():
+        shapes = example_args()
+        concrete = [_rand(s.shape, i) for i, s in enumerate(shapes)]
+        outs = fn(*concrete)
+        declared_inputs = [s for s in io_spec if s[0] == "input"]
+        declared_outputs = [s for s in io_spec if s[0] == "output"]
+        assert len(declared_inputs) == len(shapes), name
+        for spec, shape in zip(declared_inputs, shapes):
+            assert tuple(spec[3]) == tuple(shape.shape), (name, spec)
+        assert len(declared_outputs) == len(outs), name
+        for spec, out in zip(declared_outputs, outs):
+            assert tuple(spec[3]) == tuple(out.shape), (name, spec, out.shape)
+
+
+def test_featurize_is_scale_concat_onehot():
+    x = _rand((model.BATCH_ROWS, model.NUM_FEATURES), 1)
+    codes = jnp.asarray(
+        np.random.default_rng(2)
+        .integers(0, model.NUM_CLASSES, size=(model.BATCH_ROWS,))
+        .astype(np.float32)
+    )
+    stats = ref.minmax_stats(x)
+    (feats,) = model.featurize_graph(x, codes, stats)
+    want = ref.featurize(x, codes, stats, model.NUM_CLASSES)
+    np.testing.assert_allclose(np.asarray(feats), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_entry_points_lower_to_stablehlo():
+    # Every entry point must lower (this is exactly what aot.py does).
+    for name, (fn, example_args, _) in model.ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*example_args())
+        ir = str(lowered.compiler_ir("stablehlo"))
+        assert "func.func public @main" in ir, name

@@ -1,0 +1,218 @@
+//! Ablations over the design choices DESIGN.md §5 calls out:
+//! buffer size B, threshold T, environment-cache capacity, prefetch
+//! on/off, and estimator (K, P, F).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use snowpark::bench::{banner, Table};
+use snowpark::control::{InitPipeline, InitRequest};
+use snowpark::engine::exchange::{simulate_exchange, ExchangeConfig, ExchangeMode};
+use snowpark::packages::{Installer, LatencyModel, PackageUniverse, Prefetcher, Solver, SolverCache};
+use snowpark::scheduler::{
+    DynamicEstimator, MemoryEstimator, QueryRequest, StatsFramework, WarehouseScheduler,
+};
+use snowpark::sim::{memory_workloads, InitTrace};
+use snowpark::util::clock::{Clock, SimClock};
+use snowpark::util::histogram::Sampled;
+use snowpark::util::ids::{QueryId, WarehouseId};
+use snowpark::util::rng::Rng;
+use snowpark::warehouse::{TransportCost, VirtualWarehouse, WarehouseConfig};
+
+fn ablate_batch_size() {
+    println!("\n-- A1: redistribution buffer size B (skewed layout, 25µs/row UDF) --");
+    let rows = [60_000usize, 8_000, 6_000, 6_000];
+    let t = TransportCost::default();
+    let mut table = Table::new(&["B (rows)", "rr makespan (ms)", "remote batches", "gain vs local"]);
+    let local = simulate_exchange(
+        &rows, 25_000, 64, 4, 2, t,
+        ExchangeConfig { mode: ExchangeMode::RoundRobin, batch_rows: 256, threshold_ns: 0 },
+        false,
+    );
+    for b in [1usize, 8, 64, 256, 1024, 8192] {
+        let cfg = ExchangeConfig { mode: ExchangeMode::RoundRobin, batch_rows: b, threshold_ns: 0 };
+        let rr = simulate_exchange(&rows, 25_000, 64, 4, 2, t, cfg, true);
+        table.row(&[
+            format!("{b}"),
+            format!("{:.1}", rr.makespan_ns as f64 / 1e6),
+            format!("{}", rr.remote_batches),
+            format!(
+                "{:+.1}%",
+                (local.makespan_ns as f64 - rr.makespan_ns as f64) / local.makespan_ns as f64
+                    * 100.0
+            ),
+        ]);
+    }
+    table.print();
+}
+
+fn ablate_threshold() {
+    println!("\n-- A2: redistribution threshold T (balanced vs skewed, varied row cost) --");
+    let t = TransportCost::default();
+    let cfg = |mode| ExchangeConfig { mode, batch_rows: 256, threshold_ns: 0 };
+    let mut table = Table::new(&["row cost (ns)", "skewed gain", "balanced gain", "redistribute?"]);
+    for cost in [300u64, 2_000, 8_000, 25_000, 60_000] {
+        let skewed = [60_000usize, 8_000, 6_000, 6_000];
+        let balanced = [20_000usize; 4];
+        let gain = |rows: &[usize]| {
+            let l = simulate_exchange(rows, cost, 64, 4, 2, t, cfg(ExchangeMode::Local), false);
+            let r = simulate_exchange(rows, cost, 64, 4, 2, t, cfg(ExchangeMode::RoundRobin), true);
+            (l.makespan_ns as f64 - r.makespan_ns as f64) / l.makespan_ns as f64 * 100.0
+        };
+        table.row(&[
+            format!("{cost}"),
+            format!("{:+.1}%", gain(&skewed)),
+            format!("{:+.1}%", gain(&balanced)),
+            format!("{}", cost > 8_000),
+        ]);
+    }
+    table.print();
+    println!("(T≈8µs separates the win/lose regimes → the Auto policy's default)");
+}
+
+fn ablate_env_cache_capacity() {
+    println!("\n-- A3: environment-cache capacity (per-node byte budget) --");
+    let universe = PackageUniverse::generate(800, 77);
+    let mut table = Table::new(&["capacity", "env hit rate", "mean init (ms)"]);
+    for cap_gib in [1u64, 4, 16, 64] {
+        let mut rng = Rng::new(5);
+        let trace = InitTrace::new(&universe, 120, 4, 1.4, &mut rng);
+        let pipeline = InitPipeline {
+            solver: Solver::new(&universe),
+            solver_cache: Arc::new(SolverCache::new()),
+            installer: Installer::new(LatencyModel::default()),
+        };
+        let mut wh = VirtualWarehouse::provision(
+            WarehouseId(1),
+            WarehouseConfig {
+                nodes: 4,
+                cache_capacity_bytes: cap_gib << 30,
+                ..Default::default()
+            },
+        );
+        wh.warm_up(&universe, &Prefetcher::new(16, (cap_gib << 30) / 2));
+        let clock = SimClock::new();
+        let mut lat = Sampled::new();
+        for _ in 0..3_000 {
+            let q = trace.next_query(&mut rng);
+            let r = pipeline
+                .run(
+                    &q.specs,
+                    &mut wh,
+                    InitRequest { use_solver_cache: true, use_env_cache: true, node: q.node },
+                    &clock,
+                )
+                .unwrap();
+            lat.record(r.breakdown.total_us());
+        }
+        table.row(&[
+            format!("{cap_gib} GiB"),
+            format!("{:.1}%", wh.env_cache_hit_rate() * 100.0),
+            format!("{:.1}", lat.mean() / 1e3),
+        ]);
+    }
+    table.print();
+}
+
+fn ablate_prefetch() {
+    println!("\n-- A4: prefetch + base-env warm-up (first-query latency on a fresh node) --");
+    let universe = PackageUniverse::generate(800, 78);
+    let mut table = Table::new(&["warm-up", "first-query init (ms)"]);
+    for (name, prefetch, base) in [
+        ("none (cold node)", 0usize, false),
+        ("base env only", 0, true),
+        ("base env + prefetch top-32", 32, true),
+    ] {
+        let pipeline = InitPipeline {
+            solver: Solver::new(&universe),
+            solver_cache: Arc::new(SolverCache::new()),
+            installer: Installer::new(LatencyModel::default()),
+        };
+        let mut wh =
+            VirtualWarehouse::provision(WarehouseId(1), WarehouseConfig::default());
+        if base {
+            wh.warm_up(&universe, &Prefetcher::new(prefetch, 8 << 30));
+        }
+        let clock = SimClock::new();
+        let specs = vec![
+            snowpark::packages::PackageSpec::any(universe.by_name("pandas").unwrap()),
+            snowpark::packages::PackageSpec::any(universe.by_name("numpy").unwrap()),
+        ];
+        let r = pipeline
+            .run(
+                &specs,
+                &mut wh,
+                InitRequest { use_solver_cache: true, use_env_cache: true, node: 0 },
+                &clock,
+            )
+            .unwrap();
+        table.row(&[name.to_string(), format!("{:.1}", r.breakdown.total_us() / 1e3)]);
+    }
+    table.print();
+}
+
+fn ablate_estimator() {
+    println!("\n-- A5: estimator (K, P, F) sweep (OOM rate / mean headroom waste) --");
+    let mut table = Table::new(&["K", "P", "F", "OOM rate", "mean overcommit"]);
+    for (k, p, f) in [
+        (1, 100.0, 1.0),
+        (5, 50.0, 1.0),
+        (5, 100.0, 1.0),
+        (5, 100.0, 1.2),
+        (5, 100.0, 1.5),
+        (10, 90.0, 1.2),
+    ] {
+        let est = DynamicEstimator { k, percentile: p, multiplier: f, default_bytes: 2 << 30 };
+        let mut rng = Rng::new(9);
+        let workloads = memory_workloads(&mut rng);
+        let stats = StatsFramework::new(20);
+        let clock = SimClock::new();
+        let mut sched = WarehouseScheduler::new(&clock, 4, 96 << 30);
+        let mut qid = 0u64;
+        let mut over = Vec::new();
+        for round in 0..60 {
+            for w in &workloads {
+                let actual = w.demand(round, &mut rng);
+                let estimate = est.estimate(&w.name, &stats);
+                stats.record(&w.name, actual);
+                if round > 0 {
+                    over.push(estimate as f64 / actual as f64);
+                }
+                sched.submit(QueryRequest {
+                    id: QueryId(qid),
+                    key: w.name.clone(),
+                    estimate_bytes: estimate,
+                    actual_bytes: actual,
+                    duration: Duration::from_millis(300),
+                    arrival_nanos: clock.now_nanos(),
+                });
+                qid += 1;
+                clock.sleep(Duration::from_millis(2));
+            }
+            sched.run_to_completion();
+        }
+        let oom = sched.oom_count() as f64 / sched.outcomes().len() as f64;
+        let mean_over = over.iter().sum::<f64>() / over.len() as f64;
+        table.row(&[
+            format!("{k}"),
+            format!("{p:.0}"),
+            format!("{f:.1}"),
+            format!("{:.3}%", oom * 100.0),
+            format!("{mean_over:.2}x"),
+        ]);
+    }
+    table.print();
+}
+
+fn main() {
+    banner(
+        "Ablations",
+        "Design-choice sweeps: buffer size B, threshold T, env-cache \
+         capacity, prefetch, estimator (K,P,F).",
+    );
+    ablate_batch_size();
+    ablate_threshold();
+    ablate_env_cache_capacity();
+    ablate_prefetch();
+    ablate_estimator();
+}

@@ -1,0 +1,131 @@
+//! §V.A — the CTC data-engineering case study: a nightly ETL fleet on a
+//! remote managed-Spark-like cluster (export + transfer + compute +
+//! retry-on-failure) vs the same jobs in-situ. The paper reports 54% cost
+//! reduction and, for the first time, hitting the nightly SLA every day.
+//!
+//! Virtual clock; 40 jobs/night × 30 nights, with job failure injection
+//! on the remote path only (in-situ retries are local and cheap).
+
+use std::time::Duration;
+
+use snowpark::bench::{banner, fmt_duration, Table};
+use snowpark::sim::{RemoteCluster, RemoteCostModel};
+use snowpark::util::clock::{Clock, SimClock};
+use snowpark::util::rng::Rng;
+
+const JOBS_PER_NIGHT: usize = 40;
+const NIGHTS: usize = 30;
+const SLA: Duration = Duration::from_secs(12_600); // 3.5h nightly window
+
+struct Job {
+    input_bytes: u64,
+    output_bytes: u64,
+    compute: Duration,
+}
+
+fn job_fleet(rng: &mut Rng) -> Vec<Job> {
+    (0..JOBS_PER_NIGHT)
+        .map(|_| Job {
+            input_bytes: (rng.lognormal(22.0, 1.0)) as u64,        // ~4 GiB median
+            output_bytes: (rng.lognormal(20.0, 1.0)) as u64,       // ~1 GiB median
+            compute: Duration::from_secs_f64(rng.lognormal(5.0, 0.7)), // ~2.5 min median
+        })
+        .collect()
+}
+
+/// Compute-hours are the cost driver: warehouse/cluster $ ∝ occupied time,
+/// plus egress $ for moved bytes.
+fn main() {
+    banner(
+        "§V.A — CTC Nightly ETL",
+        "40 ETL jobs x 30 nights. Remote managed-Spark-like baseline \
+         (export+transfer+retries) vs in-situ (paper: 54% cost cut, SLA \
+         met every night for the first time). Rates: remote VMs $4/h, \
+         warehouse $6/h (managed premium), egress $0.05/GiB.",
+    );
+    let mut rng = Rng::new(20250710);
+    let remote = RemoteCluster::new(RemoteCostModel::default());
+
+    let mut remote_sla_met = 0;
+    let mut insitu_sla_met = 0;
+    let mut remote_hours = 0.0;
+    let mut insitu_hours = 0.0;
+    let mut egress_total = 0.0;
+    let mut remote_attempts = 0u32;
+    let mut remote_nightly = Vec::new();
+    let mut insitu_nightly = Vec::new();
+
+    for night in 0..NIGHTS {
+        let jobs = job_fleet(&mut rng);
+        // Remote path: jobs run serially per pipeline dependency chain
+        // (the CTC story: SLA slips from stragglers + retries).
+        let clock = SimClock::new();
+        for j in &jobs {
+            let out =
+                remote.run_job(j.input_bytes, j.output_bytes, j.compute, &clock, &mut rng);
+            remote_attempts += out.attempts;
+            egress_total += out.egress_dollars;
+        }
+        let remote_night = clock.now();
+        remote_nightly.push(remote_night);
+        remote_hours += remote_night.as_secs_f64() / 3600.0;
+        if remote_night <= SLA {
+            remote_sla_met += 1;
+        }
+        let _ = night;
+
+        // In-situ path: same compute, no movement, no spin-up, reliable.
+        let clock = SimClock::new();
+        for j in &jobs {
+            remote.run_in_situ(j.compute, &clock);
+        }
+        let insitu_night = clock.now();
+        insitu_nightly.push(insitu_night);
+        insitu_hours += insitu_night.as_secs_f64() / 3600.0;
+        if insitu_night <= SLA {
+            insitu_sla_met += 1;
+        }
+    }
+
+    // Cost model: remote commodity VMs at $4/h; the managed warehouse is
+    // premium-priced at $6/h (the paper's win survives a *higher* unit
+    // rate because occupied time + egress dominate).
+    let remote_cost = remote_hours * 4.0 + egress_total;
+    let insitu_cost = insitu_hours * 6.0;
+
+    let mut table = Table::new(&["metric", "remote baseline", "in-situ (Snowpark)", "paper"]);
+    table.row(&[
+        "nights meeting 3.5h SLA".into(),
+        format!("{remote_sla_met}/{NIGHTS}"),
+        format!("{insitu_sla_met}/{NIGHTS}"),
+        "every day (in-situ)".into(),
+    ]);
+    let mean = |v: &[Duration]| {
+        Duration::from_secs_f64(v.iter().map(Duration::as_secs_f64).sum::<f64>() / v.len() as f64)
+    };
+    table.row(&[
+        "mean nightly wall".into(),
+        fmt_duration(mean(&remote_nightly)),
+        fmt_duration(mean(&insitu_nightly)),
+        "-".into(),
+    ]);
+    table.row(&[
+        "job attempts (retries)".into(),
+        format!("{remote_attempts}"),
+        format!("{}", JOBS_PER_NIGHT * NIGHTS),
+        "frequent failures -> none".into(),
+    ]);
+    table.row(&[
+        "30-night cost".into(),
+        format!("${remote_cost:.0}"),
+        format!("${insitu_cost:.0}"),
+        "-".into(),
+    ]);
+    table.row(&[
+        "cost reduction".into(),
+        "-".into(),
+        format!("{:.0}%", (1.0 - insitu_cost / remote_cost) * 100.0),
+        "54%".into(),
+    ]);
+    table.print();
+}

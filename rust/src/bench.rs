@@ -1,0 +1,143 @@
+//! Bench harness (criterion is unavailable offline): timing, repetition,
+//! percentile aggregation, and aligned table printing. Every `[[bench]]`
+//! target (`harness = false`) drives experiments through this module so
+//! the output format is uniform and EXPERIMENTS.md can quote it directly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::histogram::Sampled;
+
+/// Measure `f` with `warmup` unmeasured runs and `iters` measured runs;
+/// returns per-run durations.
+pub fn measure<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> Vec<Duration> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    (0..iters)
+        .map(|_| {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            t.elapsed()
+        })
+        .collect()
+}
+
+/// Best (minimum) of the measured runs — robust to scheduler noise for
+/// compute-bound benches.
+pub fn best(durations: &[Duration]) -> Duration {
+    durations.iter().min().copied().unwrap_or_default()
+}
+
+pub fn mean(durations: &[Duration]) -> Duration {
+    if durations.is_empty() {
+        return Duration::ZERO;
+    }
+    let total: Duration = durations.iter().sum();
+    total / durations.len() as u32
+}
+
+/// Format a duration compactly (µs/ms/s picked by magnitude).
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1_000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.2}s", us / 1e6)
+    }
+}
+
+/// Summary percentiles of a sample set in milliseconds.
+pub fn percentiles_ms(samples: &mut Sampled, ps: &[f64]) -> Vec<f64> {
+    ps.iter().map(|&p| samples.percentile(p) / 1e3).collect()
+}
+
+/// Aligned table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |f: &dyn Fn(usize) -> String| {
+            let cells: Vec<String> = widths.iter().enumerate().map(|(i, _)| f(i)).collect();
+            println!("| {} |", cells.join(" | "));
+        };
+        line(&|i| format!("{:<w$}", self.headers[i], w = widths[i]));
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            line(&|i| format!("{:<w$}", row[i], w = widths[i]));
+        }
+    }
+}
+
+/// Print the standard bench banner.
+pub fn banner(name: &str, description: &str) {
+    println!("\n=== {name} ===");
+    println!("{description}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_expected_times() {
+        let mut count = 0;
+        let ds = measure(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(ds.len(), 5);
+    }
+
+    #[test]
+    fn best_and_mean() {
+        let ds = vec![
+            Duration::from_millis(5),
+            Duration::from_millis(3),
+            Duration::from_millis(7),
+        ];
+        assert_eq!(best(&ds), Duration::from_millis(3));
+        assert_eq!(mean(&ds), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn fmt_picks_unit() {
+        assert!(fmt_duration(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "long_header"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+    }
+}

@@ -1,0 +1,163 @@
+//! `snowparkd` CLI: the launcher for the reproduction.
+//!
+//! Subcommands:
+//! - `info` — environment + artifact status;
+//! - `run-sql "<sql>"` — execute a statement against demo tables;
+//! - `repl`-less batch `demo` — run the quickstart pipeline;
+//! - `serve --queries N` — drive the cluster path on a generated
+//!   TPCx-BB-like workload and print throughput (the end-to-end loop).
+
+use std::sync::Arc;
+
+use crate::dataframe::{col, lit};
+use crate::engine::exchange::ExchangeMode;
+use crate::session::Session;
+use crate::sim::TpcxBbDataset;
+use crate::util::cli::ParsedArgs;
+use crate::warehouse::PoolConfig;
+
+const USAGE: &str = "\
+snowparkd — Snowpark reproduction launcher
+
+USAGE:
+  snowparkd info
+  snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S]
+  snowparkd demo
+  snowparkd serve [--queries N] [--nodes N] [--procs N] [--rows N] [--mode auto|local|rr]
+
+Demo tables (generated): store_sales, product_reviews, web_clickstreams, items.
+Artifacts: set SNOWPARK_ARTIFACTS or run `make artifacts` for XLA UDFs.";
+
+pub fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match ParsedArgs::parse(args, &["help"]) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match parsed.subcommand.as_deref() {
+        Some("info") => info(),
+        Some("run-sql") => run_sql(&parsed),
+        Some("demo") => demo(),
+        Some("serve") => serve(&parsed),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn session_with_data(rows: usize, seed: u64, pool: Option<PoolConfig>) -> anyhow::Result<Arc<Session>> {
+    let mut b = Session::builder();
+    if let Some(p) = pool {
+        b = b.pool(p);
+    }
+    let artifacts = crate::runtime::XlaRuntime::default_dir();
+    if crate::runtime::XlaRuntime::available(&artifacts) {
+        b = b.artifacts(artifacts);
+    }
+    let s = b.build()?;
+    let ds = TpcxBbDataset::generate(rows, 4, 1.4, seed);
+    ds.register(&s)?;
+    let mut reg = s.udfs();
+    crate::sim::register_udfs(&mut reg);
+    for q in crate::sim::TPCXBB_QUERIES {
+        let u = reg.scalar(q.udf).unwrap().clone();
+        s.register_scalar_udf(&u.name, u.return_type, u.body.clone());
+        s.set_udf_row_cost(&u.name, u.est_row_cost_ns);
+    }
+    Ok(s)
+}
+
+fn info() -> anyhow::Result<()> {
+    println!("snowpark-repro (Snowpark paper reproduction, three-layer rust+JAX+Pallas)");
+    let dir = crate::runtime::XlaRuntime::default_dir();
+    if crate::runtime::XlaRuntime::available(&dir) {
+        let rt = crate::runtime::XlaRuntime::open(&dir)?;
+        println!("artifacts: {} (platform {})", dir.display(), rt.platform_name());
+        for k in rt.kernel_names() {
+            println!("  kernel {k}");
+        }
+    } else {
+        println!("artifacts: NOT BUILT (run `make artifacts`)");
+    }
+    println!("cpus: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    Ok(())
+}
+
+fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
+    let sql = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("run-sql expects a SQL string"))?;
+    let rows = args.get_usize("rows", 5_000).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let s = session_with_data(rows, seed, None)?;
+    let out = s.sql(sql)?;
+    println!("{out}");
+    println!("({} rows)", out.num_rows());
+    Ok(())
+}
+
+fn demo() -> anyhow::Result<()> {
+    let s = session_with_data(5_000, 42, None)?;
+    println!("-- DataFrame API: top categories by revenue --");
+    let df = s
+        .table("store_sales")
+        .with_column("revenue", col("price").mul(col("quantity")).mul(lit(1.0).sub(col("discount"))))
+        .join(&s.table("items"), "item_id", "item_id")
+        .group_by(&["category"])
+        .agg(&[("sum", "revenue", "total"), ("count", "*", "n")])
+        .sort("total", true)
+        .limit(5);
+    println!("emitted SQL:\n  {}\n", df.to_sql());
+    println!("{}", df.collect()?);
+    Ok(())
+}
+
+fn serve(args: &ParsedArgs) -> anyhow::Result<()> {
+    let queries = args.get_usize("queries", 24).map_err(anyhow::Error::msg)?;
+    let nodes = args.get_usize("nodes", 4).map_err(anyhow::Error::msg)?;
+    let procs = args.get_usize("procs", 2).map_err(anyhow::Error::msg)?;
+    let rows = args.get_usize("rows", 20_000).map_err(anyhow::Error::msg)?;
+    let mode = match args.get_or("mode", "auto") {
+        "local" => ExchangeMode::Local,
+        "rr" => ExchangeMode::RoundRobin,
+        _ => ExchangeMode::Auto,
+    };
+    let s = session_with_data(
+        rows,
+        7,
+        Some(PoolConfig { nodes, procs_per_node: procs, ..Default::default() }),
+    )?;
+    println!("serving {queries} UDF queries over {nodes} nodes × {procs} procs (mode {mode:?})");
+    let t0 = std::time::Instant::now();
+    let mut total_rows = 0usize;
+    for i in 0..queries {
+        let q = &crate::sim::TPCXBB_QUERIES[i % crate::sim::TPCXBB_QUERIES.len()];
+        let (col, report) = s.run_distributed_udf(q.table, q.udf, q.input_cols, mode)?;
+        total_rows += col.len();
+        println!(
+            "  {:>16} rows={:<7} redistributed={} remote_batches={}",
+            q.name,
+            report.rows,
+            report.redistributed,
+            report.remote_batches
+        );
+    }
+    let wall = t0.elapsed();
+    println!(
+        "\n{} queries, {} rows in {:.2?} ({:.0} rows/s)",
+        queries,
+        total_rows,
+        wall,
+        total_rows as f64 / wall.as_secs_f64()
+    );
+    Ok(())
+}

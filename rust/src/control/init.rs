@@ -1,0 +1,182 @@
+//! The query-initialization pipeline (§IV.A, Fig. 4):
+//!
+//!   solve (solver cache) → prepare env (environment cache: download /
+//!   install / link) → sandbox creation → interpreter start.
+//!
+//! Caching configuration is explicit so the Fig. 4 bench can run the same
+//! trace under {no caches, solver cache only, solver + env caches}.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::packages::{
+    InitBreakdown, Installer, PackageSpec, Resolution, Solver, SolverCache,
+};
+use crate::util::clock::Clock;
+use crate::warehouse::VirtualWarehouse;
+
+/// Which §IV.A optimizations are active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InitRequest {
+    pub use_solver_cache: bool,
+    pub use_env_cache: bool,
+    /// Node index within the warehouse the query landed on.
+    pub node: usize,
+}
+
+/// Outcome: the resolved closure plus the per-stage latency breakdown.
+#[derive(Debug, Clone)]
+pub struct InitResult {
+    pub resolution: Arc<Resolution>,
+    pub breakdown: InitBreakdown,
+}
+
+/// The initialization pipeline bound to a universe + global solver cache.
+pub struct InitPipeline<'u> {
+    pub solver: Solver<'u>,
+    pub solver_cache: Arc<SolverCache>,
+    pub installer: Installer,
+}
+
+impl<'u> InitPipeline<'u> {
+    /// Run initialization for one query on `warehouse.nodes[req.node]`,
+    /// charging elapsed stage time to `clock`.
+    pub fn run(
+        &self,
+        specs: &[PackageSpec],
+        warehouse: &mut VirtualWarehouse,
+        req: InitRequest,
+        clock: &dyn Clock,
+    ) -> Result<InitResult> {
+        let mut breakdown = InitBreakdown::default();
+
+        // Stage 1: dependency solving, short-circuited by the global
+        // solver cache.
+        let (resolution, cache_hit) = if req.use_solver_cache {
+            let (r, hit) = self.solver_cache.resolve(&self.solver, specs)?;
+            (r, hit)
+        } else {
+            (Arc::new(self.solver.solve(&SolverCache::normalize(specs))?), false)
+        };
+        breakdown.solver_cache_hit = cache_hit;
+        breakdown.solve_us = if cache_hit {
+            // Metadata lookup only.
+            500.0
+        } else {
+            self.installer.solve_cost_us(&resolution)
+        };
+        clock.sleep(std::time::Duration::from_nanos((breakdown.solve_us * 1e3) as u64));
+
+        // Stage 2..n: environment preparation on the node.
+        let node = &mut warehouse.nodes[req.node];
+        if req.use_env_cache {
+            self.installer.prepare_env(
+                &resolution,
+                &mut node.env_cache,
+                clock,
+                node.base_env_ready,
+                &mut breakdown,
+            );
+        } else {
+            // No environment cache: every query pays the full download +
+            // install + link cost into a throwaway cache.
+            let mut scratch = crate::packages::EnvironmentCache::new(u64::MAX / 2);
+            self.installer.prepare_env(
+                &resolution,
+                &mut scratch,
+                clock,
+                node.base_env_ready,
+                &mut breakdown,
+            );
+        }
+        Ok(InitResult { resolution, breakdown })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packages::{LatencyModel, PackageUniverse, Prefetcher};
+    use crate::util::clock::SimClock;
+    use crate::util::ids::WarehouseId;
+    use crate::warehouse::WarehouseConfig;
+
+    fn setup(u: &PackageUniverse) -> (InitPipeline<'_>, VirtualWarehouse, SimClock) {
+        let pipeline = InitPipeline {
+            solver: Solver::new(u),
+            solver_cache: Arc::new(SolverCache::new()),
+            installer: Installer::new(LatencyModel::default()),
+        };
+        let mut wh =
+            VirtualWarehouse::provision(WarehouseId(1), WarehouseConfig::default());
+        wh.warm_up(u, &Prefetcher::new(0, 0)); // base env only, no prefetch
+        (pipeline, wh, SimClock::new())
+    }
+
+    #[test]
+    fn cold_warm_hot_ordering() {
+        let u = PackageUniverse::generate(200, 21);
+        let (p, mut wh, clock) = setup(&u);
+        let specs = vec![PackageSpec::any(u.by_name("pandas").unwrap())];
+        let req = InitRequest { use_solver_cache: true, use_env_cache: true, node: 0 };
+
+        let cold = p.run(&specs, &mut wh, req, &clock).unwrap();
+        assert!(!cold.breakdown.solver_cache_hit);
+        assert!(!cold.breakdown.env_cache_hit);
+
+        let hot = p.run(&specs, &mut wh, req, &clock).unwrap();
+        assert!(hot.breakdown.solver_cache_hit);
+        assert!(hot.breakdown.env_cache_hit);
+        assert!(
+            hot.breakdown.total_us() < cold.breakdown.total_us() / 5.0,
+            "hot {} vs cold {}",
+            hot.breakdown.total_us(),
+            cold.breakdown.total_us()
+        );
+    }
+
+    #[test]
+    fn disabling_caches_disables_hits() {
+        let u = PackageUniverse::generate(200, 21);
+        let (p, mut wh, clock) = setup(&u);
+        let specs = vec![PackageSpec::any(0)];
+        let req = InitRequest { use_solver_cache: false, use_env_cache: false, node: 0 };
+        let a = p.run(&specs, &mut wh, req, &clock).unwrap();
+        let b = p.run(&specs, &mut wh, req, &clock).unwrap();
+        assert!(!b.breakdown.solver_cache_hit);
+        assert!(!b.breakdown.env_cache_hit);
+        // Both runs pay roughly the same full cost.
+        let ratio = a.breakdown.total_us() / b.breakdown.total_us();
+        assert!((0.5..2.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn solver_cache_shared_across_warehouse_nodes() {
+        let u = PackageUniverse::generate(200, 21);
+        let (p, mut wh, clock) = setup(&u);
+        let specs = vec![PackageSpec::any(3)];
+        let r0 = InitRequest { use_solver_cache: true, use_env_cache: true, node: 0 };
+        let r1 = InitRequest { use_solver_cache: true, use_env_cache: true, node: 1 };
+        p.run(&specs, &mut wh, r0, &clock).unwrap();
+        let second = p.run(&specs, &mut wh, r1, &clock).unwrap();
+        // Different node: env cache cold, but the *global* solver cache hits.
+        assert!(second.breakdown.solver_cache_hit);
+        assert!(!second.breakdown.env_cache_hit);
+    }
+
+    #[test]
+    fn clock_advances_by_breakdown_total() {
+        let u = PackageUniverse::generate(200, 21);
+        let (p, mut wh, clock) = setup(&u);
+        let specs = vec![PackageSpec::any(1)];
+        let req = InitRequest { use_solver_cache: true, use_env_cache: true, node: 0 };
+        let r = p.run(&specs, &mut wh, req, &clock).unwrap();
+        let sim_us = clock.now_nanos() as f64 / 1e3;
+        assert!(
+            (sim_us - r.breakdown.total_us()).abs() < 1.0,
+            "sim {sim_us} vs breakdown {}",
+            r.breakdown.total_us()
+        );
+    }
+}

@@ -1,0 +1,10 @@
+//! The control plane (§II "Cloud Services", §III): query lifecycle,
+//! warehouse management, the *global* solver cache, the historical stats
+//! framework, and the query-initialization pipeline whose latency Fig. 4
+//! measures.
+
+mod init;
+mod plane;
+
+pub use init::{InitPipeline, InitRequest, InitResult};
+pub use plane::{ControlPlane, ControlPlaneConfig};

@@ -1,0 +1,159 @@
+//! The control plane: owns warehouses, the global solver cache, the
+//! historical stats framework, and end-to-end query orchestration.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::packages::{Installer, LatencyModel, PackageUniverse, Prefetcher, SolverCache};
+use crate::scheduler::StatsFramework;
+use crate::util::ids::{IdGen, WarehouseId};
+use crate::warehouse::{VirtualWarehouse, WarehouseConfig};
+
+/// Control-plane knobs.
+#[derive(Debug, Clone)]
+pub struct ControlPlaneConfig {
+    pub latency: LatencyModel,
+    pub prefetch_top_k: usize,
+    pub prefetch_bytes: u64,
+    pub stats_history: usize,
+}
+
+impl Default for ControlPlaneConfig {
+    fn default() -> Self {
+        Self {
+            latency: LatencyModel::default(),
+            prefetch_top_k: 32,
+            prefetch_bytes: 8 << 30,
+            stats_history: 20,
+        }
+    }
+}
+
+/// The "brain" (§II): one per deployment; warehouses hang off it.
+pub struct ControlPlane {
+    pub universe: Arc<PackageUniverse>,
+    pub solver_cache: Arc<SolverCache>,
+    pub stats: Arc<StatsFramework>,
+    pub config: ControlPlaneConfig,
+    warehouses: HashMap<WarehouseId, VirtualWarehouse>,
+    by_name: HashMap<String, WarehouseId>,
+    ids: IdGen,
+}
+
+impl ControlPlane {
+    pub fn new(universe: Arc<PackageUniverse>, config: ControlPlaneConfig) -> Self {
+        Self {
+            universe,
+            solver_cache: Arc::new(SolverCache::new()),
+            stats: Arc::new(StatsFramework::new(config.stats_history)),
+            config,
+            warehouses: HashMap::new(),
+            by_name: HashMap::new(),
+            ids: IdGen::new(),
+        }
+    }
+
+    /// Provision (and warm up) a warehouse.
+    pub fn create_warehouse(&mut self, config: WarehouseConfig) -> WarehouseId {
+        let id = WarehouseId(self.ids.next());
+        let mut wh = VirtualWarehouse::provision(id, config.clone());
+        wh.warm_up(
+            &self.universe,
+            &Prefetcher::new(self.config.prefetch_top_k, self.config.prefetch_bytes),
+        );
+        self.by_name.insert(config.name.clone(), id);
+        self.warehouses.insert(id, wh);
+        id
+    }
+
+    pub fn warehouse(&self, id: WarehouseId) -> Option<&VirtualWarehouse> {
+        self.warehouses.get(&id)
+    }
+
+    pub fn warehouse_mut(&mut self, id: WarehouseId) -> Option<&mut VirtualWarehouse> {
+        self.warehouses.get_mut(&id)
+    }
+
+    pub fn warehouse_by_name(&self, name: &str) -> Option<WarehouseId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn drop_warehouse(&mut self, id: WarehouseId) -> Result<()> {
+        let wh = self
+            .warehouses
+            .remove(&id)
+            .ok_or_else(|| anyhow!("unknown warehouse {id}"))?;
+        self.by_name.remove(&wh.config.name);
+        Ok(())
+    }
+
+    /// Build an init pipeline bound to this plane's caches.
+    pub fn init_pipeline(&self) -> super::init::InitPipeline<'_> {
+        super::init::InitPipeline {
+            solver: crate::packages::Solver::new(&self.universe),
+            solver_cache: self.solver_cache.clone(),
+            installer: Installer::new(self.config.latency.clone()),
+        }
+    }
+
+    pub fn warehouse_count(&self) -> usize {
+        self.warehouses.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane() -> ControlPlane {
+        ControlPlane::new(
+            Arc::new(PackageUniverse::generate(128, 5)),
+            ControlPlaneConfig::default(),
+        )
+    }
+
+    #[test]
+    fn create_lookup_drop() {
+        let mut cp = plane();
+        let id = cp.create_warehouse(WarehouseConfig {
+            name: "etl".into(),
+            ..Default::default()
+        });
+        assert_eq!(cp.warehouse_by_name("etl"), Some(id));
+        assert_eq!(cp.warehouse_count(), 1);
+        // Warmed on provision.
+        assert!(cp.warehouse(id).unwrap().nodes[0].base_env_ready);
+        cp.drop_warehouse(id).unwrap();
+        assert_eq!(cp.warehouse_count(), 0);
+        assert!(cp.warehouse_by_name("etl").is_none());
+        assert!(cp.drop_warehouse(id).is_err());
+    }
+
+    #[test]
+    fn solver_cache_is_global_across_warehouses() {
+        use crate::packages::PackageSpec;
+        use crate::util::clock::SimClock;
+        let mut cp = plane();
+        let a = cp.create_warehouse(WarehouseConfig { name: "a".into(), ..Default::default() });
+        let b = cp.create_warehouse(WarehouseConfig { name: "b".into(), ..Default::default() });
+        let specs = vec![PackageSpec::any(2)];
+        let clock = SimClock::new();
+        let req = crate::control::InitRequest {
+            use_solver_cache: true,
+            use_env_cache: true,
+            node: 0,
+        };
+        {
+            let pipeline = cp.init_pipeline();
+            let mut wh_a = VirtualWarehouse::provision(a, WarehouseConfig::default());
+            pipeline.run(&specs, &mut wh_a, req, &clock).unwrap();
+            let mut wh_b = VirtualWarehouse::provision(b, WarehouseConfig::default());
+            let r = pipeline.run(&specs, &mut wh_b, req, &clock).unwrap();
+            assert!(r.breakdown.solver_cache_hit, "global cache must hit across warehouses");
+        }
+        assert_eq!(cp.solver_cache.misses(), 1);
+        assert_eq!(cp.solver_cache.hits(), 1);
+    }
+}

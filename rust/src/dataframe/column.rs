@@ -1,0 +1,161 @@
+//! Column expressions for the DataFrame API. Thin builders over the SQL
+//! AST — what the Python `snowpark.functions.col` family does.
+
+use crate::sql::ast::{BinaryOp, Expr, UnaryOp};
+use crate::types::Value;
+
+/// A composable column expression.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnExpr(pub(crate) Expr);
+
+/// Reference a column by name.
+pub fn col(name: &str) -> ColumnExpr {
+    ColumnExpr(Expr::Column(name.to_ascii_lowercase()))
+}
+
+/// A literal value. Accepts anything convertible into [`Value`].
+pub fn lit(v: impl Into<Value>) -> ColumnExpr {
+    ColumnExpr(Expr::Literal(v.into()))
+}
+
+/// Call a UDF (scalar or vectorized) by name.
+pub fn udf_call(name: &str, args: &[ColumnExpr]) -> ColumnExpr {
+    ColumnExpr(Expr::Func {
+        name: name.to_ascii_lowercase(),
+        args: args.iter().map(|c| c.0.clone()).collect(),
+    })
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+
+impl From<i32> for Value {
+    fn from(v: i32) -> Self {
+        Value::Int(v as i64)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float(v)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+macro_rules! binop {
+    ($fn:ident, $op:expr) => {
+        pub fn $fn(&self, other: ColumnExpr) -> ColumnExpr {
+            ColumnExpr(Expr::Binary {
+                op: $op,
+                left: Box::new(self.0.clone()),
+                right: Box::new(other.0),
+            })
+        }
+    };
+}
+
+impl ColumnExpr {
+    binop!(add, BinaryOp::Add);
+    binop!(sub, BinaryOp::Sub);
+    binop!(mul, BinaryOp::Mul);
+    binop!(div, BinaryOp::Div);
+    binop!(rem, BinaryOp::Mod);
+    binop!(eq, BinaryOp::Eq);
+    binop!(neq, BinaryOp::NotEq);
+    binop!(lt, BinaryOp::Lt);
+    binop!(lte, BinaryOp::LtEq);
+    binop!(gt, BinaryOp::Gt);
+    binop!(gte, BinaryOp::GtEq);
+    binop!(and, BinaryOp::And);
+    binop!(or, BinaryOp::Or);
+    binop!(concat, BinaryOp::Concat);
+
+    pub fn neg(&self) -> ColumnExpr {
+        ColumnExpr(Expr::Unary { op: UnaryOp::Neg, expr: Box::new(self.0.clone()) })
+    }
+
+    pub fn not(&self) -> ColumnExpr {
+        ColumnExpr(Expr::Unary { op: UnaryOp::Not, expr: Box::new(self.0.clone()) })
+    }
+
+    pub fn is_null(&self) -> ColumnExpr {
+        ColumnExpr(Expr::IsNull { expr: Box::new(self.0.clone()), negated: false })
+    }
+
+    pub fn is_not_null(&self) -> ColumnExpr {
+        ColumnExpr(Expr::IsNull { expr: Box::new(self.0.clone()), negated: true })
+    }
+
+    pub fn in_list(&self, items: &[ColumnExpr]) -> ColumnExpr {
+        ColumnExpr(Expr::InList {
+            expr: Box::new(self.0.clone()),
+            list: items.iter().map(|c| c.0.clone()).collect(),
+            negated: false,
+        })
+    }
+
+    pub fn between(&self, lo: ColumnExpr, hi: ColumnExpr) -> ColumnExpr {
+        ColumnExpr(Expr::Between {
+            expr: Box::new(self.0.clone()),
+            low: Box::new(lo.0),
+            high: Box::new(hi.0),
+            negated: false,
+        })
+    }
+
+    /// Render to SQL (what `.filter(...)` etc. embed into the emitted
+    /// statement).
+    pub fn to_sql(&self) -> String {
+        self.0.to_sql()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose_to_sql() {
+        let e = col("price").mul(lit(1.1)).gt(lit(100)).and(col("cat").eq(lit("a")));
+        assert_eq!(e.to_sql(), "(((price * 1.1) > 100) AND (cat = 'a'))");
+    }
+
+    #[test]
+    fn null_predicates_and_ranges() {
+        assert_eq!(col("x").is_null().to_sql(), "(x IS NULL)");
+        assert_eq!(col("x").is_not_null().to_sql(), "(x IS NOT NULL)");
+        assert_eq!(
+            col("x").between(lit(1), lit(9)).to_sql(),
+            "(x BETWEEN 1 AND 9)"
+        );
+        assert_eq!(
+            col("x").in_list(&[lit(1), lit(2)]).to_sql(),
+            "(x IN (1, 2))"
+        );
+    }
+
+    #[test]
+    fn udf_calls() {
+        let e = udf_call("Score_Review", &[col("text"), lit(2)]);
+        assert_eq!(e.to_sql(), "score_review(text, 2)");
+    }
+
+    #[test]
+    fn string_literal_escaping() {
+        assert_eq!(lit("o'brien").to_sql(), "'o''brien'");
+    }
+}

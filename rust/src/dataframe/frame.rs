@@ -1,0 +1,269 @@
+//! The lazy DataFrame: every transformation wraps the current query in a
+//! new SELECT, and `collect()` ships the final SQL to the engine — the
+//! exact emission model of the Snowpark client libraries (§III.A).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::session::Session;
+use crate::types::RowSet;
+
+use super::column::ColumnExpr;
+
+/// A lazily-built query bound to a session.
+#[derive(Clone)]
+pub struct DataFrame {
+    session: Arc<Session>,
+    /// The SQL for this frame (a complete SELECT).
+    sql: String,
+}
+
+impl DataFrame {
+    pub(crate) fn from_table(session: Arc<Session>, table: &str) -> Self {
+        Self { session, sql: format!("SELECT * FROM {table}") }
+    }
+
+    pub(crate) fn from_sql(session: Arc<Session>, sql: &str) -> Self {
+        Self { session, sql: sql.to_string() }
+    }
+
+    fn wrap(&self, outer: String) -> DataFrame {
+        DataFrame { session: self.session.clone(), sql: outer }
+    }
+
+    fn subquery(&self) -> String {
+        format!("({}) t", self.sql)
+    }
+
+    /// The SQL this frame will execute — the §III.A emission, inspectable.
+    pub fn to_sql(&self) -> &str {
+        &self.sql
+    }
+
+    /// Keep rows where `predicate` holds.
+    pub fn filter(&self, predicate: ColumnExpr) -> DataFrame {
+        self.wrap(format!(
+            "SELECT * FROM {} WHERE {}",
+            self.subquery(),
+            predicate.to_sql()
+        ))
+    }
+
+    /// Project columns/expressions. Each item is `(expr, alias)`.
+    pub fn select(&self, items: &[(ColumnExpr, &str)]) -> DataFrame {
+        let list: Vec<String> = items
+            .iter()
+            .map(|(e, a)| format!("{} AS {}", e.to_sql(), a))
+            .collect();
+        self.wrap(format!("SELECT {} FROM {}", list.join(", "), self.subquery()))
+    }
+
+    /// Project plain columns by name.
+    pub fn select_cols(&self, names: &[&str]) -> DataFrame {
+        self.wrap(format!("SELECT {} FROM {}", names.join(", "), self.subquery()))
+    }
+
+    /// Add (or replace) one computed column, keeping the rest.
+    pub fn with_column(&self, name: &str, expr: ColumnExpr) -> DataFrame {
+        self.wrap(format!(
+            "SELECT *, {} AS {} FROM {}",
+            expr.to_sql(),
+            name,
+            self.subquery()
+        ))
+    }
+
+    /// Group by `keys`, computing `aggs` = [(func, column, alias)].
+    pub fn group_by(&self, keys: &[&str]) -> GroupedFrame {
+        GroupedFrame { frame: self.clone(), keys: keys.iter().map(|s| s.to_string()).collect() }
+    }
+
+    /// Global aggregation (no keys): `aggs` = [(func, column, alias)].
+    pub fn agg(&self, aggs: &[(&str, &str, &str)]) -> DataFrame {
+        GroupedFrame { frame: self.clone(), keys: vec![] }.agg(aggs)
+    }
+
+    /// Inner-join another frame on equal column names.
+    pub fn join(&self, other: &DataFrame, left_on: &str, right_on: &str) -> DataFrame {
+        self.wrap(format!(
+            "SELECT * FROM ({}) l JOIN ({}) r ON l.{} = r.{}",
+            self.sql, other.sql, left_on, right_on
+        ))
+    }
+
+    /// Sort by one column.
+    pub fn sort(&self, column: &str, descending: bool) -> DataFrame {
+        self.wrap(format!(
+            "SELECT * FROM {} ORDER BY {}{}",
+            self.subquery(),
+            column,
+            if descending { " DESC" } else { "" }
+        ))
+    }
+
+    pub fn limit(&self, n: usize) -> DataFrame {
+        self.wrap(format!("SELECT * FROM {} LIMIT {n}", self.subquery()))
+    }
+
+    /// Execute and materialize.
+    pub fn collect(&self) -> Result<RowSet> {
+        self.session.sql(&self.sql)
+    }
+
+    /// Row count (executes a COUNT(*) wrapper).
+    pub fn count(&self) -> Result<usize> {
+        let rs = self
+            .session
+            .sql(&format!("SELECT COUNT(*) AS n FROM {}", self.subquery()))?;
+        Ok(rs.column(0).value(0).as_i64().unwrap_or(0) as usize)
+    }
+}
+
+/// Intermediate grouped frame (mirrors `DataFrame.group_by(...).agg(...)`).
+pub struct GroupedFrame {
+    frame: DataFrame,
+    keys: Vec<String>,
+}
+
+impl GroupedFrame {
+    /// `aggs` = [(func, column, alias)], e.g. `("sum", "price", "total")`.
+    /// Use column `"*"` with func `"count"` for COUNT(*).
+    pub fn agg(&self, aggs: &[(&str, &str, &str)]) -> DataFrame {
+        let mut list: Vec<String> = self.keys.clone();
+        for (f, c, a) in aggs {
+            list.push(format!("{f}({c}) AS {a}"));
+        }
+        let group = if self.keys.is_empty() {
+            String::new()
+        } else {
+            format!(" GROUP BY {}", self.keys.join(", "))
+        };
+        self.frame.wrap(format!(
+            "SELECT {} FROM {}{}",
+            list.join(", "),
+            self.frame.subquery(),
+            group
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::{col, lit, udf_call};
+    use crate::session::Session;
+    use crate::types::{Column, DataType, Field, Schema, Value};
+
+    fn session() -> Arc<Session> {
+        let s = Session::builder().build().unwrap();
+        let rs = RowSet::new(
+            Schema::new(vec![
+                Field::new("id", DataType::Int64),
+                Field::new("cat", DataType::Utf8),
+                Field::new("price", DataType::Float64),
+            ]),
+            vec![
+                Column::from_i64(vec![1, 2, 3, 4]),
+                Column::from_strings(
+                    ["a", "b", "a", "b"].iter().map(|s| s.to_string()).collect(),
+                ),
+                Column::from_f64(vec![10.0, 20.0, 30.0, 40.0]),
+            ],
+        )
+        .unwrap();
+        s.catalog().register("sales", rs);
+        s
+    }
+
+    #[test]
+    fn emits_nested_sql() {
+        let s = session();
+        let df = s.table("sales").filter(col("price").gt(lit(15))).limit(2);
+        assert_eq!(
+            df.to_sql(),
+            "SELECT * FROM (SELECT * FROM (SELECT * FROM sales) t WHERE (price > 15)) t LIMIT 2"
+        );
+    }
+
+    #[test]
+    fn filter_select_collect() {
+        let s = session();
+        let rows = s
+            .table("sales")
+            .filter(col("price").gte(lit(20)))
+            .select(&[(col("id"), "id"), (col("price").mul(lit(2.0)), "p2")])
+            .collect()
+            .unwrap();
+        assert_eq!(rows.num_rows(), 3);
+        assert_eq!(rows.schema.names(), vec!["id", "p2"]);
+        assert_eq!(rows.row(0)[1], Value::Float(40.0));
+    }
+
+    #[test]
+    fn group_by_agg_sort() {
+        let s = session();
+        let rows = s
+            .table("sales")
+            .group_by(&["cat"])
+            .agg(&[("sum", "price", "total"), ("count", "*", "n")])
+            .sort("total", true)
+            .collect()
+            .unwrap();
+        assert_eq!(rows.num_rows(), 2);
+        assert_eq!(rows.row(0)[0], Value::Str("b".into()));
+        assert_eq!(rows.row(0)[1], Value::Float(60.0));
+        assert_eq!(rows.row(0)[2], Value::Int(2));
+    }
+
+    #[test]
+    fn with_column_and_count() {
+        let s = session();
+        let df = s.table("sales").with_column("taxed", col("price").mul(lit(1.1)));
+        let rows = df.collect().unwrap();
+        assert_eq!(rows.num_columns(), 4);
+        assert_eq!(df.count().unwrap(), 4);
+    }
+
+    #[test]
+    fn join_frames() {
+        let s = session();
+        let labels = RowSet::new(
+            Schema::new(vec![
+                Field::new("cat", DataType::Utf8),
+                Field::new("label", DataType::Utf8),
+            ]),
+            vec![
+                Column::from_strings(vec!["a".into()]),
+                Column::from_strings(vec!["alpha".into()]),
+            ],
+        )
+        .unwrap();
+        s.catalog().register("labels", labels);
+        let joined = s
+            .table("sales")
+            .join(&s.table("labels"), "cat", "cat")
+            .collect()
+            .unwrap();
+        assert_eq!(joined.num_rows(), 2); // only cat 'a'
+    }
+
+    #[test]
+    fn udf_through_dataframe() {
+        use std::sync::Arc as StdArc;
+        let s = session();
+        s.register_scalar_udf(
+            "double_it",
+            DataType::Float64,
+            StdArc::new(|args: &[Value]| {
+                Ok(Value::Float(args[0].as_f64().unwrap_or(0.0) * 2.0))
+            }),
+        );
+        let rows = s
+            .table("sales")
+            .select(&[(udf_call("double_it", &[col("price")]), "d")])
+            .collect()
+            .unwrap();
+        assert_eq!(rows.row(3)[0], Value::Float(80.0));
+    }
+}

@@ -1,0 +1,24 @@
+//! The Snowpark DataFrame API (§III.A): lazy, composable DataFrame
+//! operations that emit SQL for the engine — "The API layer takes Python
+//! DataFrame operations, and emits corresponding SQL statements to
+//! execute in Snowflake."
+//!
+//! ```no_run
+//! # use snowpark::session::Session;
+//! # use snowpark::dataframe::{col, lit};
+//! # let session = Session::builder().build().unwrap();
+//! let df = session
+//!     .table("sales")
+//!     .filter(col("price").gt(lit(10)))
+//!     .group_by(&["cat"])
+//!     .agg(&[("sum", "price", "total")])
+//!     .sort("total", true)
+//!     .limit(5);
+//! let rows = df.collect().unwrap();
+//! ```
+
+mod column;
+mod frame;
+
+pub use column::{col, lit, udf_call, ColumnExpr};
+pub use frame::DataFrame;

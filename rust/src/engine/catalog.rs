@@ -1,0 +1,229 @@
+//! In-memory table catalog + CSV ingest.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::RwLock;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
+
+/// Named tables. Read-mostly: queries take snapshots (Arc'd rowsets would
+/// be an optimization; tables are cloned per scan for isolation).
+#[derive(Default)]
+pub struct Catalog {
+    tables: RwLock<HashMap<String, RowSet>>,
+}
+
+impl Catalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&self, name: &str, table: RowSet) {
+        self.tables
+            .write()
+            .unwrap()
+            .insert(name.to_ascii_lowercase(), table);
+    }
+
+    pub fn get(&self, name: &str) -> Result<RowSet> {
+        self.tables
+            .read()
+            .unwrap()
+            .get(&name.to_ascii_lowercase())
+            .cloned()
+            .ok_or_else(|| anyhow!("table {name:?} not found"))
+    }
+
+    pub fn drop_table(&self, name: &str) -> bool {
+        self.tables
+            .write()
+            .unwrap()
+            .remove(&name.to_ascii_lowercase())
+            .is_some()
+    }
+
+    pub fn table_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.tables.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tables
+            .read()
+            .unwrap()
+            .contains_key(&name.to_ascii_lowercase())
+    }
+
+    /// Load a CSV file with a header row, inferring column types from the
+    /// first data row (int → float → string fallback). Empty cells are
+    /// NULL.
+    pub fn load_csv(&self, name: &str, path: impl AsRef<Path>) -> Result<usize> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let rs = parse_csv(&text)?;
+        let n = rs.num_rows();
+        self.register(name, rs);
+        Ok(n)
+    }
+}
+
+/// Parse CSV text (header + rows, comma-separated, double-quote quoting).
+pub fn parse_csv(text: &str) -> Result<RowSet> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or_else(|| anyhow!("empty CSV"))?;
+    let names = split_csv_line(header)?;
+    if names.is_empty() {
+        bail!("CSV header has no columns");
+    }
+    let rows: Vec<Vec<String>> = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(split_csv_line)
+        .collect::<Result<_>>()?;
+    for (i, r) in rows.iter().enumerate() {
+        if r.len() != names.len() {
+            bail!(
+                "CSV row {} has {} cells, header has {}",
+                i + 2,
+                r.len(),
+                names.len()
+            );
+        }
+    }
+    // Infer each column's type from the first non-empty cell, then verify
+    // against the whole column (fallback to Utf8 when mixed).
+    let n_cols = names.len();
+    let mut types = Vec::with_capacity(n_cols);
+    for c in 0..n_cols {
+        let mut ty = DataType::Int64;
+        let mut saw_any = false;
+        for row in &rows {
+            let cell = row[c].trim();
+            if cell.is_empty() {
+                continue;
+            }
+            saw_any = true;
+            if cell.parse::<i64>().is_ok() {
+                continue;
+            }
+            if cell.parse::<f64>().is_ok() {
+                if ty == DataType::Int64 {
+                    ty = DataType::Float64;
+                }
+                continue;
+            }
+            ty = DataType::Utf8;
+            break;
+        }
+        if !saw_any {
+            ty = DataType::Utf8;
+        }
+        types.push(ty);
+    }
+    let schema = Schema::new(
+        names
+            .iter()
+            .zip(&types)
+            .map(|(n, t)| Field::new(n.trim().to_ascii_lowercase(), *t))
+            .collect(),
+    );
+    let mut columns = Vec::with_capacity(n_cols);
+    for c in 0..n_cols {
+        let values: Vec<Value> = rows
+            .iter()
+            .map(|row| {
+                let cell = row[c].trim();
+                if cell.is_empty() {
+                    return Value::Null;
+                }
+                match types[c] {
+                    DataType::Int64 => Value::Int(cell.parse().unwrap()),
+                    DataType::Float64 => Value::Float(cell.parse().unwrap()),
+                    DataType::Utf8 => Value::Str(cell.to_string()),
+                    DataType::Bool => Value::Bool(cell.eq_ignore_ascii_case("true")),
+                }
+            })
+            .collect();
+        columns.push(Column::from_values(types[c], &values)?);
+    }
+    RowSet::new(schema, columns)
+}
+
+fn split_csv_line(line: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            other => cur.push(other),
+        }
+    }
+    if in_quotes {
+        bail!("unterminated quote in CSV line {line:?}");
+    }
+    out.push(cur);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_get_drop() {
+        let cat = Catalog::new();
+        let rs = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Int64)]),
+            vec![Column::from_i64(vec![1, 2])],
+        )
+        .unwrap();
+        cat.register("T1", rs);
+        assert!(cat.contains("t1"));
+        assert_eq!(cat.get("T1").unwrap().num_rows(), 2);
+        assert!(cat.get("missing").is_err());
+        assert!(cat.drop_table("t1"));
+        assert!(!cat.contains("t1"));
+    }
+
+    #[test]
+    fn csv_type_inference() {
+        let rs = parse_csv("id,price,name\n1,2.5,apple\n2,3,banana\n3,,\n").unwrap();
+        assert_eq!(rs.schema.field(0).data_type, DataType::Int64);
+        assert_eq!(rs.schema.field(1).data_type, DataType::Float64);
+        assert_eq!(rs.schema.field(2).data_type, DataType::Utf8);
+        assert_eq!(rs.num_rows(), 3);
+        assert_eq!(rs.row(2)[1], Value::Null);
+        assert_eq!(rs.row(2)[2], Value::Null);
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let rs = parse_csv("a,b\n\"x,y\",\"he said \"\"hi\"\"\"\n").unwrap();
+        assert_eq!(rs.row(0)[0], Value::Str("x,y".into()));
+        assert_eq!(rs.row(0)[1], Value::Str("he said \"hi\"".into()));
+    }
+
+    #[test]
+    fn csv_errors() {
+        assert!(parse_csv("").is_err());
+        assert!(parse_csv("a,b\n1\n").is_err()); // ragged
+        assert!(parse_csv("a\n\"open\n").is_err()); // unterminated quote
+    }
+
+    #[test]
+    fn mixed_column_falls_back_to_utf8() {
+        let rs = parse_csv("v\n1\nx\n2\n").unwrap();
+        assert_eq!(rs.schema.field(0).data_type, DataType::Utf8);
+    }
+}

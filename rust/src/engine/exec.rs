@@ -1,0 +1,837 @@
+//! Plan execution: vectorized operators over rowsets.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::sql::ast::{Expr, JoinKind, OrderKey};
+use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
+use crate::udf::{UdfRegistry, UdfStatsStore};
+
+use super::catalog::Catalog;
+use super::expr::{eval_expr, eval_predicate, eval_row, resolve_column};
+use super::key::KeyValue;
+use super::plan::{AggCall, AggFunc, Plan};
+
+/// Everything an operator needs at execution time.
+pub struct ExecContext {
+    pub catalog: Arc<Catalog>,
+    pub udfs: Arc<UdfRegistry>,
+    pub udf_stats: Arc<UdfStatsStore>,
+}
+
+impl ExecContext {
+    pub fn new(catalog: Arc<Catalog>, udfs: Arc<UdfRegistry>) -> Self {
+        Self { catalog, udfs, udf_stats: Arc::new(UdfStatsStore::new()) }
+    }
+}
+
+/// Per-query execution statistics (rows processed per operator class).
+#[derive(Debug, Default, Clone)]
+pub struct QueryStats {
+    pub rows_scanned: u64,
+    pub rows_output: u64,
+}
+
+/// Execute a plan to completion.
+pub fn execute_plan(plan: &Plan, ctx: &ExecContext) -> Result<RowSet> {
+    let mut stats = QueryStats::default();
+    let out = exec(plan, ctx, &mut stats)?;
+    Ok(out)
+}
+
+fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet> {
+    match plan {
+        Plan::Scan { table, alias: _ } => {
+            let rs = ctx.catalog.get(table)?;
+            stats.rows_scanned += rs.num_rows() as u64;
+            Ok(rs)
+        }
+        Plan::TableFunc { name, args, alias: _ } => {
+            if name == "__dual" {
+                // SELECT without FROM: one row, zero columns.
+                return Ok(RowSet::new(
+                    Schema::new(vec![Field::new("__dummy", DataType::Int64)]),
+                    vec![Column::from_i64(vec![0])],
+                )
+                .unwrap());
+            }
+            // Evaluate constant args against a dual row.
+            let dual = RowSet::new(
+                Schema::new(vec![Field::new("__dummy", DataType::Int64)]),
+                vec![Column::from_i64(vec![0])],
+            )
+            .unwrap();
+            let arg_vals: Vec<Value> = args
+                .iter()
+                .map(|a| eval_row(a, &dual, 0, &ctx.udfs))
+                .collect::<Result<_>>()?;
+            ctx.catalog
+                .get(name)
+                .or_else(|_| ctx.udfs.call_udtf(name, &arg_vals))
+        }
+        Plan::Filter { input, predicate } => {
+            let rows = exec(input, ctx, stats)?;
+            let mask = eval_predicate(predicate, &rows, &ctx.udfs)?;
+            Ok(rows.filter(&mask))
+        }
+        Plan::Project { input, exprs } => {
+            let rows = exec(input, ctx, stats)?;
+            project(&rows, exprs, ctx)
+        }
+        Plan::Aggregate { input, group, aggs } => {
+            let rows = exec(input, ctx, stats)?;
+            aggregate(&rows, group, aggs, ctx)
+        }
+        Plan::Join { left, right, kind, equi, residual } => {
+            let l = exec(left, ctx, stats)?;
+            let r = exec(right, ctx, stats)?;
+            join(&l, &r, *kind, equi, residual.as_ref(), ctx, plan)
+        }
+        Plan::Sort { input, keys } => {
+            let rows = exec(input, ctx, stats)?;
+            sort(&rows, keys, ctx)
+        }
+        Plan::Limit { input, n } => {
+            let rows = exec(input, ctx, stats)?;
+            Ok(rows.slice(0, (*n).min(rows.num_rows())))
+        }
+    }
+}
+
+fn project(rows: &RowSet, exprs: &[(Expr, String)], ctx: &ExecContext) -> Result<RowSet> {
+    let mut fields = Vec::new();
+    let mut columns = Vec::new();
+    for (e, name) in exprs {
+        // Marker from the planner: keep everything except hidden sort keys.
+        if matches!(e, Expr::Func { name, .. } if name == "__drop_hidden") {
+            for (f, c) in rows.schema.fields.iter().zip(&rows.columns) {
+                if !f.name.starts_with("__sort_") {
+                    fields.push(f.clone());
+                    columns.push(c.clone());
+                }
+            }
+            continue;
+        }
+        if matches!(e, Expr::Star) {
+            // Wildcard expansion mixed with other expressions.
+            for (f, c) in rows.schema.fields.iter().zip(&rows.columns) {
+                fields.push(f.clone());
+                columns.push(c.clone());
+            }
+            continue;
+        }
+        let col = eval_expr(e, rows, &ctx.udfs)?;
+        fields.push(Field::new(name.clone(), col.data_type()));
+        columns.push(col);
+    }
+    RowSet::new(Schema::new(fields), columns)
+}
+
+// ---------------------------------------------------------------- aggregate
+
+struct GroupState {
+    key_row: Vec<Value>,
+    accs: Vec<AggAcc>,
+}
+
+enum AggAcc {
+    CountStar(i64),
+    Count(i64),
+    Sum { sum: f64, all_int: bool, any: bool },
+    Avg { sum: f64, n: i64 },
+    Min(Option<Value>),
+    Max(Option<Value>),
+    Udaf(Box<dyn crate::udf::UdafState>),
+}
+
+impl AggAcc {
+    fn new(call: &AggCall, udfs: &UdfRegistry) -> Result<AggAcc> {
+        Ok(match call.func {
+            AggFunc::CountStar => AggAcc::CountStar(0),
+            AggFunc::Count => AggAcc::Count(0),
+            AggFunc::Sum => AggAcc::Sum { sum: 0.0, all_int: true, any: false },
+            AggFunc::Avg => AggAcc::Avg { sum: 0.0, n: 0 },
+            AggFunc::Min => AggAcc::Min(None),
+            AggFunc::Max => AggAcc::Max(None),
+            AggFunc::Udaf => {
+                let udaf = udfs
+                    .udaf(&call.name)
+                    .ok_or_else(|| anyhow!("no UDAF {:?}", call.name))?;
+                AggAcc::Udaf((udaf.factory)())
+            }
+        })
+    }
+
+    fn update(&mut self, args: &[Value]) -> Result<()> {
+        match self {
+            AggAcc::CountStar(n) => *n += 1,
+            AggAcc::Count(n) => {
+                if !args[0].is_null() {
+                    *n += 1;
+                }
+            }
+            AggAcc::Sum { sum, all_int, any } => {
+                if !args[0].is_null() {
+                    let v = args[0]
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("SUM over non-numeric {}", args[0]))?;
+                    if !matches!(args[0], Value::Int(_)) {
+                        *all_int = false;
+                    }
+                    *sum += v;
+                    *any = true;
+                }
+            }
+            AggAcc::Avg { sum, n } => {
+                if !args[0].is_null() {
+                    *sum += args[0]
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("AVG over non-numeric {}", args[0]))?;
+                    *n += 1;
+                }
+            }
+            AggAcc::Min(cur) => {
+                if !args[0].is_null() {
+                    let replace = match cur {
+                        None => true,
+                        Some(c) => {
+                            args[0].sql_cmp(c) == Some(std::cmp::Ordering::Less)
+                        }
+                    };
+                    if replace {
+                        *cur = Some(args[0].clone());
+                    }
+                }
+            }
+            AggAcc::Max(cur) => {
+                if !args[0].is_null() {
+                    let replace = match cur {
+                        None => true,
+                        Some(c) => {
+                            args[0].sql_cmp(c) == Some(std::cmp::Ordering::Greater)
+                        }
+                    };
+                    if replace {
+                        *cur = Some(args[0].clone());
+                    }
+                }
+            }
+            AggAcc::Udaf(state) => state.update(args)?,
+        }
+        Ok(())
+    }
+
+    fn finish(&self) -> Result<Value> {
+        Ok(match self {
+            AggAcc::CountStar(n) | AggAcc::Count(n) => Value::Int(*n),
+            AggAcc::Sum { sum, all_int, any } => {
+                if !any {
+                    Value::Null
+                } else if *all_int {
+                    Value::Int(*sum as i64)
+                } else {
+                    Value::Float(*sum)
+                }
+            }
+            AggAcc::Avg { sum, n } => {
+                if *n == 0 {
+                    Value::Null
+                } else {
+                    Value::Float(sum / *n as f64)
+                }
+            }
+            AggAcc::Min(v) | AggAcc::Max(v) => v.clone().unwrap_or(Value::Null),
+            AggAcc::Udaf(state) => state.finish()?,
+        })
+    }
+}
+
+fn aggregate(
+    rows: &RowSet,
+    group: &[(Expr, String)],
+    aggs: &[AggCall],
+    ctx: &ExecContext,
+) -> Result<RowSet> {
+    // Evaluate group keys and aggregate arguments as columns first
+    // (vectorized), then fold rows into group states.
+    let key_cols: Vec<Column> = group
+        .iter()
+        .map(|(e, _)| eval_expr(e, rows, &ctx.udfs))
+        .collect::<Result<_>>()?;
+    let arg_cols: Vec<Vec<Column>> = aggs
+        .iter()
+        .map(|a| {
+            a.args
+                .iter()
+                .map(|e| eval_expr(e, rows, &ctx.udfs))
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<_>>()?;
+
+    let n = rows.num_rows();
+    let mut groups: std::collections::HashMap<Vec<KeyValue>, GroupState> =
+        std::collections::HashMap::new();
+    // Preserve first-seen group order for deterministic output.
+    let mut order: Vec<Vec<KeyValue>> = Vec::new();
+
+    for r in 0..n {
+        let key: Vec<KeyValue> = key_cols
+            .iter()
+            .map(|c| KeyValue::from_value(&c.value(r)))
+            .collect();
+        let state = match groups.get_mut(&key) {
+            Some(s) => s,
+            None => {
+                let accs = aggs
+                    .iter()
+                    .map(|a| AggAcc::new(a, &ctx.udfs))
+                    .collect::<Result<Vec<_>>>()?;
+                let key_row = key_cols.iter().map(|c| c.value(r)).collect();
+                order.push(key.clone());
+                groups.insert(key.clone(), GroupState { key_row, accs });
+                groups.get_mut(&key).unwrap()
+            }
+        };
+        for (acc, cols) in state.accs.iter_mut().zip(&arg_cols) {
+            let args: Vec<Value> = cols.iter().map(|c| c.value(r)).collect();
+            acc.update(&args)?;
+        }
+    }
+
+    // Global aggregation over empty input still yields one row.
+    if group.is_empty() && groups.is_empty() {
+        let accs = aggs
+            .iter()
+            .map(|a| AggAcc::new(a, &ctx.udfs))
+            .collect::<Result<Vec<_>>>()?;
+        order.push(vec![]);
+        groups.insert(vec![], GroupState { key_row: vec![], accs });
+    }
+
+    // Materialize output.
+    let mut out_values: Vec<Vec<Value>> = Vec::with_capacity(order.len());
+    for key in &order {
+        let state = &groups[key];
+        let mut row = state.key_row.clone();
+        for acc in &state.accs {
+            row.push(acc.finish()?);
+        }
+        out_values.push(row);
+    }
+    let mut fields = Vec::new();
+    for ((e, name), col) in group.iter().zip(&key_cols) {
+        let _ = e;
+        fields.push(Field::new(name.clone(), col.data_type()));
+    }
+    for a in aggs {
+        let dt = match a.func {
+            AggFunc::CountStar | AggFunc::Count => DataType::Int64,
+            AggFunc::Avg => DataType::Float64,
+            AggFunc::Sum | AggFunc::Min | AggFunc::Max => {
+                // Derive from produced values; default Float64.
+                out_values
+                    .iter()
+                    .find_map(|row| row[group.len() + aggs.iter().position(|x| std::ptr::eq(x, a)).unwrap()].data_type())
+                    .unwrap_or(DataType::Float64)
+            }
+            AggFunc::Udaf => ctx
+                .udfs
+                .udaf(&a.name)
+                .map(|u| u.return_type)
+                .unwrap_or(DataType::Float64),
+        };
+        fields.push(Field::new(a.out_name.clone(), dt));
+    }
+    let schema = Schema::new(fields);
+    let n_cols = schema.len();
+    let mut columns = Vec::with_capacity(n_cols);
+    for c in 0..n_cols {
+        let vals: Vec<Value> = out_values.iter().map(|r| r[c].clone()).collect();
+        // Widen Int to Float if mixed (e.g. SUM over mixed groups).
+        let dt = if schema.field(c).data_type == DataType::Int64
+            && vals.iter().any(|v| matches!(v, Value::Float(_)))
+        {
+            DataType::Float64
+        } else {
+            schema.field(c).data_type
+        };
+        columns.push(Column::from_values(dt, &vals)?);
+    }
+    let fields = schema
+        .fields
+        .iter()
+        .zip(&columns)
+        .map(|(f, c)| Field::new(f.name.clone(), c.data_type()))
+        .collect();
+    RowSet::new(Schema::new(fields), columns)
+}
+
+// --------------------------------------------------------------------- join
+
+/// Build the combined schema for a join, qualifying colliding names.
+fn join_schema(l: &RowSet, lalias: &str, r: &RowSet, ralias: &str) -> Schema {
+    let mut fields = Vec::new();
+    let collides = |name: &str| {
+        l.schema.index_of(name).is_some() && r.schema.index_of(name).is_some()
+    };
+    for f in &l.schema.fields {
+        let name = if collides(&f.name) {
+            format!("{lalias}.{}", f.name)
+        } else {
+            f.name.clone()
+        };
+        fields.push(Field::new(name, f.data_type));
+    }
+    for f in &r.schema.fields {
+        let name = if collides(&f.name) {
+            format!("{ralias}.{}", f.name)
+        } else {
+            f.name.clone()
+        };
+        fields.push(Field::new(name, f.data_type));
+    }
+    Schema::new(fields)
+}
+
+fn plan_alias(p: &Plan, default: &str) -> String {
+    match p {
+        Plan::Scan { table, alias } => alias.clone().unwrap_or_else(|| table.clone()),
+        Plan::TableFunc { name, alias, .. } => alias.clone().unwrap_or_else(|| name.clone()),
+        Plan::Filter { input, .. } | Plan::Limit { input, .. } | Plan::Sort { input, .. } => {
+            plan_alias(input, default)
+        }
+        _ => default.to_string(),
+    }
+}
+
+/// Hash join (equi) with optional residual filter; falls back to a
+/// nested-loop cross product + filter when no equi keys exist.
+fn join(
+    l: &RowSet,
+    r: &RowSet,
+    kind: JoinKind,
+    equi: &[(Expr, Expr)],
+    residual: Option<&Expr>,
+    ctx: &ExecContext,
+    plan: &Plan,
+) -> Result<RowSet> {
+    let (lalias, ralias) = match plan {
+        Plan::Join { left, right, .. } => {
+            (plan_alias(left, "l"), plan_alias(right, "r"))
+        }
+        _ => ("l".to_string(), "r".to_string()),
+    };
+    let out_schema = join_schema(l, &lalias, r, &ralias);
+
+    // Assign each equi pair's sides: an expression belongs to the side
+    // whose schema resolves all its columns.
+    let resolvable = |e: &Expr, rs: &RowSet| -> bool {
+        let mut cols = Vec::new();
+        e.referenced_columns(&mut cols);
+        !cols.is_empty() && cols.iter().all(|c| resolve_column(&rs.schema, c).is_ok())
+    };
+    let mut lkeys: Vec<&Expr> = Vec::new();
+    let mut rkeys: Vec<&Expr> = Vec::new();
+    for (a, b) in equi {
+        if resolvable(a, l) && resolvable(b, r) {
+            lkeys.push(a);
+            rkeys.push(b);
+        } else if resolvable(b, l) && resolvable(a, r) {
+            lkeys.push(b);
+            rkeys.push(a);
+        } else {
+            bail!(
+                "cannot assign join condition {} = {} to sides",
+                a.to_sql(),
+                b.to_sql()
+            );
+        }
+    }
+
+    let mut l_idx: Vec<usize> = Vec::new();
+    let mut r_idx: Vec<i64> = Vec::new(); // -1 = NULL row (left join)
+
+    if lkeys.is_empty() {
+        // Cross product (small inputs only — residual filters after).
+        for i in 0..l.num_rows() {
+            let mut matched = false;
+            for j in 0..r.num_rows() {
+                l_idx.push(i);
+                r_idx.push(j as i64);
+                matched = true;
+            }
+            if !matched && kind == JoinKind::Left {
+                l_idx.push(i);
+                r_idx.push(-1);
+            }
+        }
+    } else {
+        // Build hash table on the right side.
+        let rkey_cols: Vec<Column> = rkeys
+            .iter()
+            .map(|e| eval_expr(e, r, &ctx.udfs))
+            .collect::<Result<_>>()?;
+        let mut table: std::collections::HashMap<Vec<KeyValue>, Vec<usize>> =
+            std::collections::HashMap::new();
+        for j in 0..r.num_rows() {
+            let key: Vec<KeyValue> = rkey_cols
+                .iter()
+                .map(|c| KeyValue::join_normalized(&c.value(j)))
+                .collect();
+            // SQL join: NULL keys never match.
+            if key.iter().any(|k| matches!(k, KeyValue::Null)) {
+                continue;
+            }
+            table.entry(key).or_default().push(j);
+        }
+        let lkey_cols: Vec<Column> = lkeys
+            .iter()
+            .map(|e| eval_expr(e, l, &ctx.udfs))
+            .collect::<Result<_>>()?;
+        for i in 0..l.num_rows() {
+            let key: Vec<KeyValue> = lkey_cols
+                .iter()
+                .map(|c| KeyValue::join_normalized(&c.value(i)))
+                .collect();
+            let matches = if key.iter().any(|k| matches!(k, KeyValue::Null)) {
+                None
+            } else {
+                table.get(&key)
+            };
+            match matches {
+                Some(js) => {
+                    for &j in js {
+                        l_idx.push(i);
+                        r_idx.push(j as i64);
+                    }
+                }
+                None => {
+                    if kind == JoinKind::Left {
+                        l_idx.push(i);
+                        r_idx.push(-1);
+                    }
+                }
+            }
+        }
+    }
+
+    // Materialize the combined rowset.
+    let combined = materialize_join(l, r, &out_schema, &l_idx, &r_idx)?;
+
+    // Residual predicate + left-join NULL-row preservation: rows that fail
+    // the residual are dropped (inner) or, for left joins where every match
+    // fails, the engine would need to re-emit a NULL row. This engine
+    // applies residuals before NULL-row synthesis only for inner joins and
+    // documents the left-join limitation.
+    let combined = match residual {
+        Some(pred) => {
+            let mask = eval_predicate(pred, &combined, &ctx.udfs)?;
+            combined.filter(&mask)
+        }
+        None => combined,
+    };
+    Ok(combined)
+}
+
+fn materialize_join(
+    l: &RowSet,
+    r: &RowSet,
+    schema: &Schema,
+    l_idx: &[usize],
+    r_idx: &[i64],
+) -> Result<RowSet> {
+    let left_cols = l.num_columns();
+    let mut columns = Vec::with_capacity(schema.len());
+    for (c, f) in schema.fields.iter().enumerate() {
+        if c < left_cols {
+            columns.push(l.column(c).take(l_idx));
+        } else {
+            let src = r.column(c - left_cols);
+            // Gather with NULLs for -1 (unmatched left rows).
+            let values: Vec<Value> = r_idx
+                .iter()
+                .map(|&j| {
+                    if j < 0 {
+                        Value::Null
+                    } else {
+                        src.value(j as usize)
+                    }
+                })
+                .collect();
+            columns.push(Column::from_values(f.data_type, &values)?);
+        }
+    }
+    RowSet::new(schema.clone(), columns)
+}
+
+// --------------------------------------------------------------------- sort
+
+fn sort(rows: &RowSet, keys: &[OrderKey], ctx: &ExecContext) -> Result<RowSet> {
+    let key_cols: Vec<Column> = keys
+        .iter()
+        .map(|k| eval_expr(&k.expr, rows, &ctx.udfs))
+        .collect::<Result<_>>()?;
+    let mut idx: Vec<usize> = (0..rows.num_rows()).collect();
+    idx.sort_by(|&a, &b| {
+        for (k, col) in keys.iter().zip(&key_cols) {
+            let va = col.value(a);
+            let vb = col.value(b);
+            // NULLS LAST in ascending order.
+            let ord = match (va.is_null(), vb.is_null()) {
+                (true, true) => std::cmp::Ordering::Equal,
+                (true, false) => std::cmp::Ordering::Greater,
+                (false, true) => std::cmp::Ordering::Less,
+                (false, false) => va.sql_cmp(&vb).unwrap_or(std::cmp::Ordering::Equal),
+            };
+            let ord = if k.descending { ord.reverse() } else { ord };
+            if ord != std::cmp::Ordering::Equal {
+                return ord;
+            }
+        }
+        a.cmp(&b) // stable tiebreak
+    });
+    Ok(rows.take(&idx))
+}
+
+/// Convenience: parse, plan, and execute a SQL string.
+pub fn run_sql(sql: &str, ctx: &ExecContext) -> Result<RowSet> {
+    let q = crate::sql::parse_query(sql)?;
+    let plan = super::plan::plan_query(&q, &ctx.udfs)?;
+    execute_plan(&plan, ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ExecContext {
+        let catalog = Arc::new(Catalog::new());
+        let sales = RowSet::new(
+            Schema::new(vec![
+                Field::new("id", DataType::Int64),
+                Field::new("cat", DataType::Utf8),
+                Field::new("price", DataType::Float64),
+                Field::new("qty", DataType::Int64),
+            ]),
+            vec![
+                Column::from_i64(vec![1, 2, 3, 4, 5]),
+                Column::from_strings(
+                    ["a", "b", "a", "b", "a"].iter().map(|s| s.to_string()).collect(),
+                ),
+                Column::from_f64(vec![10.0, 20.0, 30.0, 40.0, 50.0]),
+                Column::from_i64(vec![1, 2, 3, 4, 5]),
+            ],
+        )
+        .unwrap();
+        catalog.register("sales", sales);
+        let cats = RowSet::new(
+            Schema::new(vec![
+                Field::new("cat", DataType::Utf8),
+                Field::new("label", DataType::Utf8),
+            ]),
+            vec![
+                Column::from_strings(vec!["a".into(), "c".into()]),
+                Column::from_strings(vec!["alpha".into(), "gamma".into()]),
+            ],
+        )
+        .unwrap();
+        catalog.register("cats", cats);
+        ExecContext::new(catalog, Arc::new(UdfRegistry::new()))
+    }
+
+    fn sql(s: &str) -> RowSet {
+        run_sql(s, &ctx()).unwrap_or_else(|e| panic!("{s}: {e}"))
+    }
+
+    #[test]
+    fn scan_filter_project() {
+        let rs = sql("SELECT id, price * qty AS total FROM sales WHERE price > 15");
+        assert_eq!(rs.num_rows(), 4);
+        assert_eq!(rs.schema.names(), vec!["id", "total"]);
+        assert_eq!(rs.row(0), vec![Value::Int(2), Value::Float(40.0)]);
+    }
+
+    #[test]
+    fn select_star() {
+        let rs = sql("SELECT * FROM sales LIMIT 2");
+        assert_eq!(rs.num_rows(), 2);
+        assert_eq!(rs.num_columns(), 4);
+    }
+
+    #[test]
+    fn group_by_and_having() {
+        let rs = sql(
+            "SELECT cat, COUNT(*) AS n, SUM(price) AS total, AVG(qty) AS avg_q \
+             FROM sales GROUP BY cat ORDER BY cat",
+        );
+        assert_eq!(rs.num_rows(), 2);
+        assert_eq!(
+            rs.row(0),
+            vec![
+                Value::Str("a".into()),
+                Value::Int(3),
+                Value::Float(90.0),
+                Value::Float(3.0)
+            ]
+        );
+        let rs = sql("SELECT cat FROM sales GROUP BY cat HAVING SUM(price) > 80 ORDER BY cat");
+        assert_eq!(rs.num_rows(), 1);
+        assert_eq!(rs.row(0)[0], Value::Str("a".into()));
+    }
+
+    #[test]
+    fn global_aggregate_empty_input() {
+        let rs = sql("SELECT COUNT(*) AS n, SUM(price) AS s FROM sales WHERE price > 999");
+        assert_eq!(rs.num_rows(), 1);
+        assert_eq!(rs.row(0), vec![Value::Int(0), Value::Null]);
+    }
+
+    #[test]
+    fn min_max_and_expression_aggregates() {
+        let rs = sql("SELECT MIN(price) AS lo, MAX(price * qty) AS hi FROM sales");
+        assert_eq!(rs.row(0), vec![Value::Float(10.0), Value::Float(250.0)]);
+    }
+
+    #[test]
+    fn inner_join() {
+        let rs = sql(
+            "SELECT s.id, c.label FROM sales s JOIN cats c ON s.cat = c.cat ORDER BY s.id",
+        );
+        assert_eq!(rs.num_rows(), 3); // only cat 'a' matches
+        assert_eq!(rs.row(0), vec![Value::Int(1), Value::Str("alpha".into())]);
+    }
+
+    #[test]
+    fn left_join_preserves_unmatched() {
+        let rs = sql(
+            "SELECT s.id, c.label FROM sales s LEFT JOIN cats c ON s.cat = c.cat ORDER BY s.id",
+        );
+        assert_eq!(rs.num_rows(), 5);
+        assert_eq!(rs.row(1), vec![Value::Int(2), Value::Null]); // cat 'b'
+    }
+
+    #[test]
+    fn join_with_residual() {
+        let rs = sql(
+            "SELECT s.id FROM sales s JOIN cats c ON s.cat = c.cat AND s.price > 25 ORDER BY s.id",
+        );
+        assert_eq!(rs.num_rows(), 2); // ids 3, 5
+    }
+
+    #[test]
+    fn colliding_join_columns_get_qualified() {
+        let rs = sql("SELECT s.cat, c.cat FROM sales s JOIN cats c ON s.cat = c.cat LIMIT 1");
+        assert_eq!(rs.num_columns(), 2);
+    }
+
+    #[test]
+    fn order_by_desc_and_nulls() {
+        let rs = sql("SELECT id FROM sales ORDER BY price DESC LIMIT 2");
+        assert_eq!(rs.row(0)[0], Value::Int(5));
+        assert_eq!(rs.row(1)[0], Value::Int(4));
+    }
+
+    #[test]
+    fn order_by_alias() {
+        let rs = sql("SELECT id, price * qty AS total FROM sales ORDER BY total DESC LIMIT 1");
+        assert_eq!(rs.row(0)[0], Value::Int(5));
+    }
+
+    #[test]
+    fn subquery_pipeline() {
+        let rs = sql(
+            "SELECT cat, n FROM (SELECT cat, COUNT(*) AS n FROM sales GROUP BY cat) t \
+             WHERE n > 2",
+        );
+        assert_eq!(rs.num_rows(), 1);
+        assert_eq!(rs.row(0)[0], Value::Str("a".into()));
+    }
+
+    #[test]
+    fn select_without_from() {
+        let rs = sql("SELECT 1 + 1 AS two");
+        assert_eq!(rs.num_rows(), 1);
+        assert_eq!(rs.row(0)[0], Value::Int(2));
+    }
+
+    #[test]
+    fn case_in_group_by() {
+        let rs = sql(
+            "SELECT CASE WHEN price > 25 THEN 'hi' ELSE 'lo' END AS band, COUNT(*) AS n \
+             FROM sales GROUP BY CASE WHEN price > 25 THEN 'hi' ELSE 'lo' END ORDER BY band",
+        );
+        assert_eq!(rs.num_rows(), 2);
+        assert_eq!(rs.row(0), vec![Value::Str("hi".into()), Value::Int(3)]);
+    }
+
+    #[test]
+    fn limit_zero_and_overrun() {
+        assert_eq!(sql("SELECT * FROM sales LIMIT 0").num_rows(), 0);
+        assert_eq!(sql("SELECT * FROM sales LIMIT 99").num_rows(), 5);
+    }
+
+    #[test]
+    fn scalar_udf_in_query() {
+        let c = ctx();
+        let mut udfs = UdfRegistry::new();
+        udfs.register_scalar(
+            "add_tax",
+            DataType::Float64,
+            Arc::new(|args| {
+                Ok(Value::Float(args[0].as_f64().unwrap_or(0.0) * 1.1))
+            }),
+        );
+        let c = ExecContext::new(c.catalog, Arc::new(udfs));
+        let rs = run_sql("SELECT add_tax(price) AS p FROM sales WHERE id = 1", &c).unwrap();
+        assert_eq!(rs.row(0)[0], Value::Float(11.0));
+    }
+
+    #[test]
+    fn udaf_in_query() {
+        let c = ctx();
+        let mut udfs = UdfRegistry::new();
+        // Geometric-mean UDAF.
+        struct Geo {
+            log_sum: f64,
+            n: i64,
+        }
+        impl crate::udf::UdafState for Geo {
+            fn update(&mut self, args: &[Value]) -> Result<()> {
+                if let Some(x) = args[0].as_f64() {
+                    if x > 0.0 {
+                        self.log_sum += x.ln();
+                        self.n += 1;
+                    }
+                }
+                Ok(())
+            }
+            fn merge(&mut self, other: Box<dyn crate::udf::UdafState>) -> Result<()> {
+                let o = other.as_any().downcast_ref::<Geo>().unwrap();
+                self.log_sum += o.log_sum;
+                self.n += o.n;
+                Ok(())
+            }
+            fn finish(&self) -> Result<Value> {
+                if self.n == 0 {
+                    Ok(Value::Null)
+                } else {
+                    Ok(Value::Float((self.log_sum / self.n as f64).exp()))
+                }
+            }
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+        }
+        udfs.register_udaf(
+            "geomean",
+            DataType::Float64,
+            Arc::new(|| Box::new(Geo { log_sum: 0.0, n: 0 })),
+        );
+        let c = ExecContext::new(c.catalog, Arc::new(udfs));
+        let rs = run_sql("SELECT geomean(price) AS g FROM sales", &c).unwrap();
+        let g = rs.row(0)[0].as_f64().unwrap();
+        let want = (10f64 * 20.0 * 30.0 * 40.0 * 50.0).powf(0.2);
+        assert!((g - want).abs() < 1e-9, "{g} vs {want}");
+    }
+}

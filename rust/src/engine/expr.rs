@@ -1,0 +1,690 @@
+//! Expression evaluation over rowsets.
+//!
+//! Row-wise `Value` semantics (SQL three-valued logic for NULLs) with a
+//! vectorized fast path for f64 arithmetic on Float64 columns — the fast
+//! path was added in the perf pass and is covered by the same tests as the
+//! general path.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::sql::ast::{BinaryOp, Expr, UnaryOp};
+use crate::types::{Column, DataType, RowSet, Schema, Value};
+use crate::udf::UdfRegistry;
+
+/// Resolve a (possibly qualified) column name against a schema.
+///
+/// Resolution order: exact match; if `name` is qualified (`t.c`), the bare
+/// suffix if it is unique; if `name` is bare, a unique qualified field
+/// whose suffix matches.
+pub fn resolve_column(schema: &Schema, name: &str) -> Result<usize> {
+    if let Some(i) = schema.index_of(name) {
+        return Ok(i);
+    }
+    let candidates: Vec<usize> = if let Some((_, bare)) = name.split_once('.') {
+        schema
+            .fields
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.name.eq_ignore_ascii_case(bare))
+            .map(|(i, _)| i)
+            .collect()
+    } else {
+        schema
+            .fields
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| {
+                f.name
+                    .rsplit_once('.')
+                    .map_or(false, |(_, suffix)| suffix.eq_ignore_ascii_case(name))
+            })
+            .map(|(i, _)| i)
+            .collect()
+    };
+    match candidates.len() {
+        0 => bail!(
+            "column {name:?} not found (available: {:?})",
+            schema.names()
+        ),
+        1 => Ok(candidates[0]),
+        _ => bail!("column {name:?} is ambiguous"),
+    }
+}
+
+/// Infer the output type of `expr` against `schema` (best effort; the
+/// engine re-derives concrete types from evaluated columns).
+pub fn infer_type(expr: &Expr, schema: &Schema, udfs: &UdfRegistry) -> DataType {
+    match expr {
+        Expr::Literal(v) => v.data_type().unwrap_or(DataType::Int64),
+        Expr::Column(name) => resolve_column(schema, name)
+            .map(|i| schema.field(i).data_type)
+            .unwrap_or(DataType::Float64),
+        Expr::Unary { op: UnaryOp::Not, .. } => DataType::Bool,
+        Expr::Unary { op: UnaryOp::Neg, expr } => infer_type(expr, schema, udfs),
+        Expr::Binary { op, left, right } => match op {
+            BinaryOp::Eq
+            | BinaryOp::NotEq
+            | BinaryOp::Lt
+            | BinaryOp::LtEq
+            | BinaryOp::Gt
+            | BinaryOp::GtEq
+            | BinaryOp::And
+            | BinaryOp::Or => DataType::Bool,
+            BinaryOp::Concat => DataType::Utf8,
+            BinaryOp::Div => DataType::Float64,
+            _ => {
+                let l = infer_type(left, schema, udfs);
+                let r = infer_type(right, schema, udfs);
+                if l == DataType::Float64 || r == DataType::Float64 {
+                    DataType::Float64
+                } else {
+                    DataType::Int64
+                }
+            }
+        },
+        Expr::Func { name, .. } => match name.as_str() {
+            "length" | "count" => DataType::Int64,
+            "upper" | "lower" | "substr" | "concat" => DataType::Utf8,
+            _ => udfs
+                .scalar_return_type(name)
+                .unwrap_or(DataType::Float64),
+        },
+        Expr::IsNull { .. } | Expr::InList { .. } | Expr::Between { .. } => DataType::Bool,
+        Expr::Case { branches, .. } => infer_type(&branches[0].1, schema, udfs),
+        Expr::Star => DataType::Int64,
+    }
+}
+
+/// Evaluate `expr` over every row of `rows`, producing a column.
+/// Scalar UDF calls are dispatched through `udfs` (per-row, §III.A).
+pub fn eval_expr(expr: &Expr, rows: &RowSet, udfs: &UdfRegistry) -> Result<Column> {
+    // Vectorized fast path: pure-f64 arithmetic trees over Float64 columns.
+    if let Some(col) = try_eval_f64_fast(expr, rows) {
+        return Ok(col);
+    }
+    let n = rows.num_rows();
+    let mut out = Vec::with_capacity(n);
+    for r in 0..n {
+        out.push(eval_row(expr, rows, r, udfs)?);
+    }
+    // Pick a concrete type from the values (first non-null), defaulting by
+    // static inference when all values are NULL.
+    let dt = out
+        .iter()
+        .find_map(Value::data_type)
+        .unwrap_or_else(|| infer_type(expr, &rows.schema, udfs));
+    Column::from_values(coerce_numeric(dt, &out), &out)
+}
+
+/// When a column mixes Int and Float values (e.g. CASE branches), widen.
+fn coerce_numeric(dt: DataType, values: &[Value]) -> DataType {
+    if dt == DataType::Int64
+        && values
+            .iter()
+            .any(|v| matches!(v, Value::Float(_)))
+    {
+        DataType::Float64
+    } else {
+        dt
+    }
+}
+
+/// Evaluate a predicate into a boolean mask (NULL ⇒ false, SQL WHERE).
+pub fn eval_predicate(expr: &Expr, rows: &RowSet, udfs: &UdfRegistry) -> Result<Vec<bool>> {
+    let col = eval_expr(expr, rows, udfs)?;
+    let n = rows.num_rows();
+    let mut mask = Vec::with_capacity(n);
+    for i in 0..n {
+        mask.push(matches!(col.value(i), Value::Bool(true)));
+    }
+    Ok(mask)
+}
+
+fn try_eval_f64_fast(expr: &Expr, rows: &RowSet) -> Option<Column> {
+    fn is_fast(e: &Expr, rows: &RowSet) -> bool {
+        match e {
+            Expr::Literal(Value::Float(_)) | Expr::Literal(Value::Int(_)) => true,
+            Expr::Column(name) => resolve_column(&rows.schema, name)
+                .ok()
+                .map_or(false, |i| {
+                    matches!(rows.column(i), Column::Float64 { valid: None, .. })
+                }),
+            Expr::Unary { op: UnaryOp::Neg, expr } => is_fast(expr, rows),
+            Expr::Binary { op, left, right } => {
+                matches!(
+                    op,
+                    BinaryOp::Add | BinaryOp::Sub | BinaryOp::Mul | BinaryOp::Div
+                ) && is_fast(left, rows)
+                    && is_fast(right, rows)
+            }
+            _ => false,
+        }
+    }
+    // Only worthwhile when at least one column participates.
+    let mut cols = Vec::new();
+    expr.referenced_columns(&mut cols);
+    if cols.is_empty() || !is_fast(expr, rows) {
+        return None;
+    }
+    fn eval_fast(e: &Expr, rows: &RowSet, out: &mut Vec<f64>) {
+        match e {
+            Expr::Literal(v) => {
+                let x = v.as_f64().unwrap();
+                out.clear();
+                out.resize(rows.num_rows(), x);
+            }
+            Expr::Column(name) => {
+                let i = resolve_column(&rows.schema, name).unwrap();
+                out.clear();
+                out.extend_from_slice(rows.column(i).f64_data().unwrap());
+            }
+            Expr::Unary { expr, .. } => {
+                eval_fast(expr, rows, out);
+                for v in out.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            Expr::Binary { op, left, right } => {
+                let mut rhs = Vec::new();
+                eval_fast(left, rows, out);
+                eval_fast(right, rows, &mut rhs);
+                match op {
+                    BinaryOp::Add => {
+                        for (a, b) in out.iter_mut().zip(&rhs) {
+                            *a += b;
+                        }
+                    }
+                    BinaryOp::Sub => {
+                        for (a, b) in out.iter_mut().zip(&rhs) {
+                            *a -= b;
+                        }
+                    }
+                    BinaryOp::Mul => {
+                        for (a, b) in out.iter_mut().zip(&rhs) {
+                            *a *= b;
+                        }
+                    }
+                    BinaryOp::Div => {
+                        for (a, b) in out.iter_mut().zip(&rhs) {
+                            *a /= b;
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    let mut out = Vec::new();
+    eval_fast(expr, rows, &mut out);
+    Some(Column::from_f64(out))
+}
+
+/// Evaluate `expr` for one row.
+pub fn eval_row(expr: &Expr, rows: &RowSet, r: usize, udfs: &UdfRegistry) -> Result<Value> {
+    match expr {
+        Expr::Literal(v) => Ok(v.clone()),
+        Expr::Column(name) => {
+            let i = resolve_column(&rows.schema, name)?;
+            Ok(rows.column(i).value(r))
+        }
+        Expr::Star => bail!("* is only valid inside COUNT(*)"),
+        Expr::Unary { op, expr } => {
+            let v = eval_row(expr, rows, r, udfs)?;
+            match op {
+                UnaryOp::Neg => match v {
+                    Value::Null => Ok(Value::Null),
+                    Value::Int(i) => Ok(Value::Int(-i)),
+                    Value::Float(f) => Ok(Value::Float(-f)),
+                    other => bail!("cannot negate {other}"),
+                },
+                UnaryOp::Not => match v {
+                    Value::Null => Ok(Value::Null),
+                    Value::Bool(b) => Ok(Value::Bool(!b)),
+                    other => bail!("NOT expects a boolean, got {other}"),
+                },
+            }
+        }
+        Expr::Binary { op, left, right } => {
+            // Short-circuit three-valued AND/OR.
+            if matches!(op, BinaryOp::And | BinaryOp::Or) {
+                return eval_logic(*op, left, right, rows, r, udfs);
+            }
+            let l = eval_row(left, rows, r, udfs)?;
+            let rv = eval_row(right, rows, r, udfs)?;
+            eval_binary(*op, &l, &rv)
+        }
+        Expr::Func { name, args } => eval_func(name, args, rows, r, udfs),
+        Expr::IsNull { expr, negated } => {
+            let v = eval_row(expr, rows, r, udfs)?;
+            Ok(Value::Bool(v.is_null() != *negated))
+        }
+        Expr::InList { expr, list, negated } => {
+            let v = eval_row(expr, rows, r, udfs)?;
+            if v.is_null() {
+                return Ok(Value::Null);
+            }
+            let mut saw_null = false;
+            for item in list {
+                let iv = eval_row(item, rows, r, udfs)?;
+                if iv.is_null() {
+                    saw_null = true;
+                    continue;
+                }
+                if v.sql_cmp(&iv) == Some(std::cmp::Ordering::Equal) {
+                    return Ok(Value::Bool(!negated));
+                }
+            }
+            if saw_null {
+                Ok(Value::Null)
+            } else {
+                Ok(Value::Bool(*negated))
+            }
+        }
+        Expr::Between { expr, low, high, negated } => {
+            let v = eval_row(expr, rows, r, udfs)?;
+            let lo = eval_row(low, rows, r, udfs)?;
+            let hi = eval_row(high, rows, r, udfs)?;
+            if v.is_null() || lo.is_null() || hi.is_null() {
+                return Ok(Value::Null);
+            }
+            let ge = v.sql_cmp(&lo).map(|o| o != std::cmp::Ordering::Less);
+            let le = v.sql_cmp(&hi).map(|o| o != std::cmp::Ordering::Greater);
+            match (ge, le) {
+                (Some(a), Some(b)) => Ok(Value::Bool((a && b) != *negated)),
+                _ => bail!("BETWEEN type mismatch"),
+            }
+        }
+        Expr::Case { branches, else_value } => {
+            for (cond, value) in branches {
+                if matches!(eval_row(cond, rows, r, udfs)?, Value::Bool(true)) {
+                    return eval_row(value, rows, r, udfs);
+                }
+            }
+            match else_value {
+                Some(e) => eval_row(e, rows, r, udfs),
+                None => Ok(Value::Null),
+            }
+        }
+    }
+}
+
+fn eval_logic(
+    op: BinaryOp,
+    left: &Expr,
+    right: &Expr,
+    rows: &RowSet,
+    r: usize,
+    udfs: &UdfRegistry,
+) -> Result<Value> {
+    let l = eval_row(left, rows, r, udfs)?;
+    let lb = l.as_bool();
+    match (op, lb, l.is_null()) {
+        (BinaryOp::And, Some(false), _) => return Ok(Value::Bool(false)),
+        (BinaryOp::Or, Some(true), _) => return Ok(Value::Bool(true)),
+        (_, None, false) => bail!("AND/OR expects booleans"),
+        _ => {}
+    }
+    let rv = eval_row(right, rows, r, udfs)?;
+    let rb = rv.as_bool();
+    if !rv.is_null() && rb.is_none() {
+        bail!("AND/OR expects booleans");
+    }
+    Ok(match op {
+        BinaryOp::And => match (lb, rb) {
+            (Some(true), Some(true)) => Value::Bool(true),
+            (_, Some(false)) => Value::Bool(false),
+            _ => Value::Null,
+        },
+        BinaryOp::Or => match (lb, rb) {
+            (_, Some(true)) => Value::Bool(true),
+            (Some(false), Some(false)) => Value::Bool(false),
+            _ => Value::Null,
+        },
+        _ => unreachable!(),
+    })
+}
+
+fn eval_binary(op: BinaryOp, l: &Value, r: &Value) -> Result<Value> {
+    use BinaryOp::*;
+    if l.is_null() || r.is_null() {
+        return Ok(Value::Null);
+    }
+    match op {
+        Add | Sub | Mul | Mod => {
+            if let (Value::Int(a), Value::Int(b)) = (l, r) {
+                return Ok(Value::Int(match op {
+                    Add => a.wrapping_add(*b),
+                    Sub => a.wrapping_sub(*b),
+                    Mul => a.wrapping_mul(*b),
+                    Mod => {
+                        if *b == 0 {
+                            return Ok(Value::Null);
+                        }
+                        a % b
+                    }
+                    _ => unreachable!(),
+                }));
+            }
+            let a = l.as_f64().ok_or_else(|| anyhow!("arith on {l}"))?;
+            let b = r.as_f64().ok_or_else(|| anyhow!("arith on {r}"))?;
+            Ok(Value::Float(match op {
+                Add => a + b,
+                Sub => a - b,
+                Mul => a * b,
+                Mod => a % b,
+                _ => unreachable!(),
+            }))
+        }
+        Div => {
+            let a = l.as_f64().ok_or_else(|| anyhow!("arith on {l}"))?;
+            let b = r.as_f64().ok_or_else(|| anyhow!("arith on {r}"))?;
+            if b == 0.0 {
+                Ok(Value::Null) // SQL: division by zero yields NULL here
+            } else {
+                Ok(Value::Float(a / b))
+            }
+        }
+        Eq | NotEq | Lt | LtEq | Gt | GtEq => {
+            use std::cmp::Ordering::*;
+            let ord = l
+                .sql_cmp(r)
+                .ok_or_else(|| anyhow!("cannot compare {l} with {r}"))?;
+            Ok(Value::Bool(match op {
+                Eq => ord == Equal,
+                NotEq => ord != Equal,
+                Lt => ord == Less,
+                LtEq => ord != Greater,
+                Gt => ord == Greater,
+                GtEq => ord != Less,
+                _ => unreachable!(),
+            }))
+        }
+        Concat => Ok(Value::Str(format!("{l}{r}"))),
+        And | Or => unreachable!("handled by eval_logic"),
+    }
+}
+
+fn eval_func(
+    name: &str,
+    args: &[Expr],
+    rows: &RowSet,
+    r: usize,
+    udfs: &UdfRegistry,
+) -> Result<Value> {
+    // COALESCE is variadic and lazy.
+    if name == "coalesce" {
+        for a in args {
+            let v = eval_row(a, rows, r, udfs)?;
+            if !v.is_null() {
+                return Ok(v);
+            }
+        }
+        return Ok(Value::Null);
+    }
+    let vals: Vec<Value> = args
+        .iter()
+        .map(|a| eval_row(a, rows, r, udfs))
+        .collect::<Result<_>>()?;
+    let num1 = |vals: &[Value]| -> Result<Option<f64>> {
+        if vals.len() != 1 {
+            bail!("{name} expects 1 argument");
+        }
+        if vals[0].is_null() {
+            return Ok(None);
+        }
+        vals[0]
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("{name} expects a number, got {}", vals[0]))
+    };
+    match name {
+        "abs" => Ok(match &vals[..] {
+            [Value::Int(i)] => Value::Int(i.abs()),
+            _ => num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.abs())),
+        }),
+        "sqrt" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.sqrt()))),
+        "exp" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.exp()))),
+        "ln" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.ln()))),
+        "log10" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.log10()))),
+        "floor" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.floor()))),
+        "ceil" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.ceil()))),
+        "round" => match vals.len() {
+            1 => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.round()))),
+            2 => {
+                if vals[0].is_null() || vals[1].is_null() {
+                    return Ok(Value::Null);
+                }
+                let x = vals[0].as_f64().ok_or_else(|| anyhow!("round arg"))?;
+                let d = vals[1].as_i64().ok_or_else(|| anyhow!("round digits"))?;
+                let m = 10f64.powi(d as i32);
+                Ok(Value::Float((x * m).round() / m))
+            }
+            _ => bail!("round expects 1 or 2 arguments"),
+        },
+        "power" | "pow" => {
+            if vals.len() != 2 {
+                bail!("{name} expects 2 arguments");
+            }
+            if vals[0].is_null() || vals[1].is_null() {
+                return Ok(Value::Null);
+            }
+            let a = vals[0].as_f64().ok_or_else(|| anyhow!("power base"))?;
+            let b = vals[1].as_f64().ok_or_else(|| anyhow!("power exp"))?;
+            Ok(Value::Float(a.powf(b)))
+        }
+        "upper" => str1(name, &vals, |s| Value::Str(s.to_uppercase())),
+        "lower" => str1(name, &vals, |s| Value::Str(s.to_lowercase())),
+        "length" => str1(name, &vals, |s| Value::Int(s.len() as i64)),
+        "substr" | "substring" => {
+            if vals.len() != 3 {
+                bail!("substr expects (str, start, len)");
+            }
+            if vals.iter().any(Value::is_null) {
+                return Ok(Value::Null);
+            }
+            let s = vals[0].as_str().ok_or_else(|| anyhow!("substr arg"))?;
+            let start = (vals[1].as_i64().unwrap_or(1).max(1) - 1) as usize;
+            let len = vals[2].as_i64().unwrap_or(0).max(0) as usize;
+            Ok(Value::Str(s.chars().skip(start).take(len).collect()))
+        }
+        "concat" => {
+            let mut s = String::new();
+            for v in &vals {
+                if v.is_null() {
+                    return Ok(Value::Null);
+                }
+                s.push_str(&v.to_string());
+            }
+            Ok(Value::Str(s))
+        }
+        _ => {
+            // Scalar UDF (per-row invocation, §III.A).
+            if udfs.has_scalar(name) {
+                udfs.call_scalar(name, &vals)
+            } else {
+                bail!("unknown function {name:?}")
+            }
+        }
+    }
+}
+
+fn str1(name: &str, vals: &[Value], f: impl Fn(&str) -> Value) -> Result<Value> {
+    if vals.len() != 1 {
+        bail!("{name} expects 1 argument");
+    }
+    if vals[0].is_null() {
+        return Ok(Value::Null);
+    }
+    match &vals[0] {
+        Value::Str(s) => Ok(f(s)),
+        other => bail!("{name} expects a string, got {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Field;
+
+    fn rows() -> RowSet {
+        RowSet::new(
+            Schema::new(vec![
+                Field::new("a", DataType::Int64),
+                Field::new("b", DataType::Float64),
+                Field::new("s", DataType::Utf8),
+            ]),
+            vec![
+                Column::from_i64(vec![1, 2, 3]),
+                Column::from_f64(vec![1.5, -2.0, 0.0]),
+                Column::from_strings(vec!["x".into(), "Hello".into(), "".into()]),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn udfs() -> UdfRegistry {
+        UdfRegistry::new()
+    }
+
+    fn eval1(sql_expr: &str) -> Column {
+        let q = crate::sql::parse_query(&format!("SELECT {sql_expr} FROM t")).unwrap();
+        let expr = match &q.select[0] {
+            crate::sql::SelectItem::Expr { expr, .. } => expr.clone(),
+            _ => panic!(),
+        };
+        eval_expr(&expr, &rows(), &udfs()).unwrap()
+    }
+
+    #[test]
+    fn arithmetic_and_widening() {
+        let c = eval1("a + 1");
+        assert_eq!(c.value(0), Value::Int(2));
+        let c = eval1("a + b");
+        assert_eq!(c.value(0), Value::Float(2.5));
+        let c = eval1("a / 2");
+        assert_eq!(c.value(1), Value::Float(1.0));
+    }
+
+    #[test]
+    fn division_by_zero_is_null() {
+        let c = eval1("a / 0");
+        assert_eq!(c.value(0), Value::Null);
+        let c = eval1("a % 0");
+        assert_eq!(c.value(0), Value::Null);
+    }
+
+    #[test]
+    fn comparisons_and_logic() {
+        let c = eval1("a > 1 AND b < 1.0");
+        assert_eq!(c.value(0), Value::Bool(false));
+        assert_eq!(c.value(1), Value::Bool(true));
+        let c = eval1("a = 1 OR a = 3");
+        assert_eq!(c.value(0), Value::Bool(true));
+        assert_eq!(c.value(1), Value::Bool(false));
+    }
+
+    #[test]
+    fn null_propagation() {
+        let c = eval1("NULL + 1");
+        assert_eq!(c.value(0), Value::Null);
+        let c = eval1("NULL IS NULL");
+        assert_eq!(c.value(0), Value::Bool(true));
+        let c = eval1("a IS NOT NULL");
+        assert_eq!(c.value(0), Value::Bool(true));
+    }
+
+    #[test]
+    fn three_valued_logic() {
+        // FALSE AND NULL = FALSE; TRUE AND NULL = NULL
+        let c = eval1("a > 99 AND NULL IS NULL AND NULL = 1");
+        assert_eq!(c.value(0), Value::Bool(false));
+        let c = eval1("a >= 1 OR NULL = 1");
+        assert_eq!(c.value(0), Value::Bool(true));
+    }
+
+    #[test]
+    fn in_and_between() {
+        let c = eval1("a IN (1, 3)");
+        assert_eq!(c.value(0), Value::Bool(true));
+        assert_eq!(c.value(1), Value::Bool(false));
+        let c = eval1("b BETWEEN -2.0 AND 0.5");
+        assert_eq!(c.value(0), Value::Bool(false));
+        assert_eq!(c.value(1), Value::Bool(true));
+        let c = eval1("a NOT IN (2)");
+        assert_eq!(c.value(0), Value::Bool(true));
+        assert_eq!(c.value(1), Value::Bool(false));
+    }
+
+    #[test]
+    fn case_expression() {
+        let c = eval1("CASE WHEN a = 1 THEN 'one' WHEN a = 2 THEN 'two' ELSE 'many' END");
+        assert_eq!(c.value(0), Value::Str("one".into()));
+        assert_eq!(c.value(1), Value::Str("two".into()));
+        assert_eq!(c.value(2), Value::Str("many".into()));
+        let c = eval1("CASE WHEN a = 99 THEN 1 END");
+        assert_eq!(c.value(0), Value::Null);
+    }
+
+    #[test]
+    fn case_mixed_int_float_widens() {
+        let c = eval1("CASE WHEN a = 1 THEN 1 ELSE 0.5 END");
+        assert_eq!(c.data_type(), DataType::Float64);
+        assert_eq!(c.value(0), Value::Float(1.0));
+    }
+
+    #[test]
+    fn builtin_functions() {
+        assert_eq!(eval1("abs(-3)").value(0), Value::Int(3));
+        assert_eq!(eval1("sqrt(4.0)").value(0), Value::Float(2.0));
+        assert_eq!(eval1("upper(s)").value(1), Value::Str("HELLO".into()));
+        assert_eq!(eval1("length(s)").value(1), Value::Int(5));
+        assert_eq!(eval1("coalesce(NULL, NULL, 7)").value(0), Value::Int(7));
+        assert_eq!(eval1("round(2.345, 2)").value(0), Value::Float(2.35));
+        assert_eq!(eval1("substr('abcdef', 2, 3)").value(0), Value::Str("bcd".into()));
+        assert_eq!(eval1("power(2, 10)").value(0), Value::Float(1024.0));
+        assert_eq!(eval1("s || '!'").value(0), Value::Str("x!".into()));
+    }
+
+    #[test]
+    fn unknown_function_errors() {
+        let q = crate::sql::parse_query("SELECT nope(a) FROM t").unwrap();
+        let expr = match &q.select[0] {
+            crate::sql::SelectItem::Expr { expr, .. } => expr.clone(),
+            _ => panic!(),
+        };
+        assert!(eval_expr(&expr, &rows(), &udfs()).is_err());
+    }
+
+    #[test]
+    fn fast_path_matches_general_path() {
+        let c_fast = eval1("b * 2.0 + b / 4.0 - 1.0");
+        // Force general path by including an Int column (not fast-eligible).
+        let c_gen = eval1("b * 2.0 + b / 4.0 - 1.0 + a - a");
+        for i in 0..3 {
+            let f = c_fast.value(i).as_f64().unwrap();
+            let g = c_gen.value(i).as_f64().unwrap();
+            assert!((f - g).abs() < 1e-12, "{f} vs {g}");
+        }
+    }
+
+    #[test]
+    fn predicate_mask_null_is_false() {
+        let q = crate::sql::parse_query("SELECT * FROM t WHERE NULL = 1").unwrap();
+        let mask = eval_predicate(&q.where_clause.unwrap(), &rows(), &udfs()).unwrap();
+        assert_eq!(mask, vec![false, false, false]);
+    }
+
+    #[test]
+    fn resolve_qualified() {
+        let schema = Schema::new(vec![
+            Field::new("t1.id", DataType::Int64),
+            Field::new("t2.id", DataType::Int64),
+            Field::new("name", DataType::Utf8),
+        ]);
+        assert_eq!(resolve_column(&schema, "t1.id").unwrap(), 0);
+        assert!(resolve_column(&schema, "id").is_err()); // ambiguous
+        assert_eq!(resolve_column(&schema, "name").unwrap(), 2);
+        assert_eq!(resolve_column(&schema, "x.name").unwrap(), 2); // suffix
+    }
+}

@@ -1,0 +1,82 @@
+//! Hashable/comparable value keys for grouping and hash joins.
+
+use crate::types::Value;
+
+/// A `Value` projected into a hashable, totally-ordered domain: floats are
+/// keyed by their bit pattern (NaN groups with NaN, -0.0 != 0.0 is avoided
+/// by normalizing), NULLs group together (SQL GROUP BY semantics).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KeyValue {
+    Null,
+    Int(i64),
+    Float(u64),
+    Str(String),
+    Bool(bool),
+}
+
+impl KeyValue {
+    pub fn from_value(v: &Value) -> KeyValue {
+        match v {
+            Value::Null => KeyValue::Null,
+            Value::Int(i) => KeyValue::Int(*i),
+            Value::Float(f) => {
+                let norm = if *f == 0.0 { 0.0 } else { *f }; // -0.0 -> 0.0
+                KeyValue::Float(norm.to_bits())
+            }
+            Value::Str(s) => KeyValue::Str(s.clone()),
+            Value::Bool(b) => KeyValue::Bool(*b),
+        }
+    }
+
+    /// Equi-join keys must match across Int/Float representations
+    /// (`a.id = b.id_float`): normalize integral floats to Int.
+    pub fn join_normalized(v: &Value) -> KeyValue {
+        match v {
+            Value::Float(f) if f.fract() == 0.0 && f.abs() < 9.0e18 => KeyValue::Int(*f as i64),
+            other => KeyValue::from_value(other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn nulls_group_together() {
+        let a = KeyValue::from_value(&Value::Null);
+        let b = KeyValue::from_value(&Value::Null);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn negative_zero_normalizes() {
+        let a = KeyValue::from_value(&Value::Float(0.0));
+        let b = KeyValue::from_value(&Value::Float(-0.0));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn usable_as_hash_key() {
+        let mut m: HashMap<Vec<KeyValue>, u32> = HashMap::new();
+        let k1 = vec![
+            KeyValue::from_value(&Value::Str("a".into())),
+            KeyValue::from_value(&Value::Int(1)),
+        ];
+        m.insert(k1.clone(), 7);
+        assert_eq!(m.get(&k1), Some(&7));
+    }
+
+    #[test]
+    fn join_normalization_bridges_int_float() {
+        assert_eq!(
+            KeyValue::join_normalized(&Value::Int(5)),
+            KeyValue::join_normalized(&Value::Float(5.0))
+        );
+        assert_ne!(
+            KeyValue::join_normalized(&Value::Int(5)),
+            KeyValue::join_normalized(&Value::Float(5.5))
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Vectorized query engine — the substrate that executes the SQL emitted
+//! by the DataFrame API (§III.A) and hosts the UDF operators whose row
+//! streams the redistribution optimization (§IV.C) rebalances.
+//!
+//! Pull-based, batch-materializing operators over columnar `RowSet`s:
+//! scan, filter, project, hash aggregate, hash join, sort, limit, UDF/UDTF
+//! execution, and the exchange operator implementing row redistribution.
+
+mod catalog;
+mod exec;
+pub mod exchange;
+mod expr;
+mod key;
+mod plan;
+
+pub use catalog::{parse_csv, Catalog};
+pub use exec::{execute_plan, run_sql, ExecContext, QueryStats};
+pub use expr::{eval_expr, eval_predicate, eval_row, resolve_column};
+pub use key::KeyValue;
+pub use plan::{output_name, plan_query, AggCall, AggFunc, Plan};

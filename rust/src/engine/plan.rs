@@ -1,0 +1,694 @@
+//! Logical planning: SQL AST → operator tree.
+
+use anyhow::{bail, Result};
+
+use crate::sql::ast::{Expr, JoinKind, OrderKey, Query, SelectItem, TableRef};
+use crate::udf::UdfRegistry;
+
+/// Built-in aggregate functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggFunc {
+    Count,
+    CountStar,
+    Sum,
+    Avg,
+    Min,
+    Max,
+    /// A registered UDAF (name kept in `AggCall::name`).
+    Udaf,
+}
+
+impl AggFunc {
+    pub fn from_name(name: &str, udfs: &UdfRegistry) -> Option<AggFunc> {
+        match name {
+            "count" => Some(AggFunc::Count),
+            "sum" => Some(AggFunc::Sum),
+            "avg" => Some(AggFunc::Avg),
+            "min" => Some(AggFunc::Min),
+            "max" => Some(AggFunc::Max),
+            _ if udfs.has_udaf(name) => Some(AggFunc::Udaf),
+            _ => None,
+        }
+    }
+}
+
+/// One aggregate invocation, e.g. `SUM(price * qty)`.
+#[derive(Debug, Clone)]
+pub struct AggCall {
+    pub func: AggFunc,
+    pub name: String,
+    /// Argument expressions (empty for COUNT(*)).
+    pub args: Vec<Expr>,
+    /// Output column name (the call's SQL text).
+    pub out_name: String,
+}
+
+/// Logical/physical plan (this engine executes the logical tree directly).
+#[derive(Debug, Clone)]
+pub enum Plan {
+    Scan {
+        table: String,
+        alias: Option<String>,
+    },
+    TableFunc {
+        name: String,
+        args: Vec<Expr>,
+        alias: Option<String>,
+    },
+    Filter {
+        input: Box<Plan>,
+        predicate: Expr,
+    },
+    Project {
+        input: Box<Plan>,
+        exprs: Vec<(Expr, String)>,
+    },
+    Aggregate {
+        input: Box<Plan>,
+        /// Group-key expressions with output names.
+        group: Vec<(Expr, String)>,
+        aggs: Vec<AggCall>,
+    },
+    Join {
+        left: Box<Plan>,
+        right: Box<Plan>,
+        kind: JoinKind,
+        /// Equi-key pairs (left expr, right expr).
+        equi: Vec<(Expr, Expr)>,
+        /// Residual predicate over the combined schema.
+        residual: Option<Expr>,
+    },
+    Sort {
+        input: Box<Plan>,
+        keys: Vec<OrderKey>,
+    },
+    Limit {
+        input: Box<Plan>,
+        n: usize,
+    },
+}
+
+impl Plan {
+    /// Names of every function referenced anywhere in the plan — used to
+    /// compute the package set a query needs (§IV.A).
+    pub fn referenced_functions(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.walk_exprs(&mut |e| {
+            if let Expr::Func { name, .. } = e {
+                if !out.contains(name) {
+                    out.push(name.clone());
+                }
+            }
+        });
+        if let Plan::TableFunc { name, .. } = self {
+            if !out.contains(name) {
+                out.push(name.clone());
+            }
+        }
+        out
+    }
+
+    fn walk_exprs(&self, f: &mut dyn FnMut(&Expr)) {
+        fn walk_expr(e: &Expr, f: &mut dyn FnMut(&Expr)) {
+            f(e);
+            match e {
+                Expr::Unary { expr, .. } => walk_expr(expr, f),
+                Expr::Binary { left, right, .. } => {
+                    walk_expr(left, f);
+                    walk_expr(right, f);
+                }
+                Expr::Func { args, .. } => args.iter().for_each(|a| walk_expr(a, f)),
+                Expr::IsNull { expr, .. } => walk_expr(expr, f),
+                Expr::InList { expr, list, .. } => {
+                    walk_expr(expr, f);
+                    list.iter().for_each(|a| walk_expr(a, f));
+                }
+                Expr::Between { expr, low, high, .. } => {
+                    walk_expr(expr, f);
+                    walk_expr(low, f);
+                    walk_expr(high, f);
+                }
+                Expr::Case { branches, else_value } => {
+                    for (c, v) in branches {
+                        walk_expr(c, f);
+                        walk_expr(v, f);
+                    }
+                    if let Some(e) = else_value {
+                        walk_expr(e, f);
+                    }
+                }
+                _ => {}
+            }
+        }
+        match self {
+            Plan::Scan { .. } => {}
+            Plan::TableFunc { args, .. } => args.iter().for_each(|a| walk_expr(a, f)),
+            Plan::Filter { input, predicate } => {
+                walk_expr(predicate, f);
+                input.walk_exprs(f);
+            }
+            Plan::Project { input, exprs } => {
+                exprs.iter().for_each(|(e, _)| walk_expr(e, f));
+                input.walk_exprs(f);
+            }
+            Plan::Aggregate { input, group, aggs } => {
+                group.iter().for_each(|(e, _)| walk_expr(e, f));
+                for a in aggs {
+                    a.args.iter().for_each(|e| walk_expr(e, f));
+                }
+                input.walk_exprs(f);
+            }
+            Plan::Join { left, right, equi, residual, .. } => {
+                equi.iter().for_each(|(l, r)| {
+                    walk_expr(l, f);
+                    walk_expr(r, f);
+                });
+                if let Some(r) = residual {
+                    walk_expr(r, f);
+                }
+                left.walk_exprs(f);
+                right.walk_exprs(f);
+            }
+            Plan::Sort { input, keys } => {
+                keys.iter().for_each(|k| walk_expr(&k.expr, f));
+                input.walk_exprs(f);
+            }
+            Plan::Limit { input, .. } => input.walk_exprs(f),
+        }
+    }
+}
+
+/// Is `name` an aggregate (builtin or UDAF)?
+fn is_agg(name: &str, udfs: &UdfRegistry) -> bool {
+    AggFunc::from_name(name, udfs).is_some()
+}
+
+/// Plan a parsed query against the given UDF registry.
+pub fn plan_query(q: &Query, udfs: &UdfRegistry) -> Result<Plan> {
+    // FROM clause.
+    let mut plan = match &q.from {
+        None => {
+            // SELECT without FROM: single-row dual table.
+            Plan::TableFunc { name: "__dual".into(), args: vec![], alias: None }
+        }
+        Some(t) => plan_table_ref(t, udfs)?,
+    };
+
+    // JOINs: split ON into equi pairs + residual.
+    for (kind, table, on) in &q.joins {
+        let right = plan_table_ref(table, udfs)?;
+        let (equi, residual) = split_join_on(on);
+        plan = Plan::Join {
+            left: Box::new(plan),
+            right: Box::new(right),
+            kind: *kind,
+            equi,
+            residual,
+        };
+    }
+
+    // WHERE.
+    if let Some(w) = &q.where_clause {
+        if w.contains_func(&|n| is_agg(n, udfs)) {
+            bail!("aggregate functions are not allowed in WHERE");
+        }
+        plan = Plan::Filter { input: Box::new(plan), predicate: w.clone() };
+    }
+
+    // Wildcard-only fast path: SELECT * FROM ... with no grouping.
+    let has_group = !q.group_by.is_empty()
+        || q.select.iter().any(|item| match item {
+            SelectItem::Expr { expr, .. } => expr.contains_func(&|n| is_agg(n, udfs)),
+            SelectItem::Wildcard => false,
+        })
+        || q.having.is_some();
+
+    if has_group {
+        let (agg_plan, exprs, rewritten_keys) = plan_aggregate(q, plan, udfs)?;
+        plan = project_sort_limit(agg_plan, exprs, &rewritten_keys, q.limit);
+    } else {
+        let is_star_only = q.select.len() == 1 && matches!(q.select[0], SelectItem::Wildcard);
+        if is_star_only {
+            // All input columns remain visible; sort directly.
+            if !q.order_by.is_empty() {
+                plan = Plan::Sort { input: Box::new(plan), keys: q.order_by.clone() };
+            }
+            if let Some(n) = q.limit {
+                plan = Plan::Limit { input: Box::new(plan), n };
+            }
+        } else {
+            let mut exprs = Vec::new();
+            for item in &q.select {
+                match item {
+                    SelectItem::Wildcard => {
+                        // Expanded at execution time against the input
+                        // schema via a marker expression.
+                        exprs.push((Expr::Star, "*".to_string()));
+                    }
+                    SelectItem::Expr { expr, alias } => {
+                        let name = alias.clone().unwrap_or_else(|| output_name(expr));
+                        exprs.push((expr.clone(), name));
+                    }
+                }
+            }
+            plan = project_sort_limit(plan, exprs, &q.order_by, q.limit);
+        }
+    }
+    Ok(plan)
+}
+
+/// Project, then sort, then limit — where ORDER BY keys that are neither
+/// select aliases nor select expressions are computed as hidden columns in
+/// the projection and dropped afterwards (standard SQL allows ordering by
+/// input columns not in the select list).
+fn project_sort_limit(
+    input: Plan,
+    mut exprs: Vec<(Expr, String)>,
+    order_by: &[OrderKey],
+    limit: Option<usize>,
+) -> Plan {
+    let visible: Vec<String> = exprs.iter().map(|(_, n)| n.clone()).collect();
+    let mut sort_keys = Vec::new();
+    let mut hidden = 0usize;
+    for (i, k) in order_by.iter().enumerate() {
+        // Alias reference?
+        let alias_hit = matches!(&k.expr, Expr::Column(c)
+            if exprs.iter().any(|(_, n)| n.eq_ignore_ascii_case(c)));
+        if alias_hit {
+            sort_keys.push(k.clone());
+            continue;
+        }
+        // Exact select-expression match?
+        if let Some((_, n)) = exprs.iter().find(|(e, _)| e == &k.expr) {
+            sort_keys.push(OrderKey {
+                expr: Expr::Column(n.clone()),
+                descending: k.descending,
+            });
+            continue;
+        }
+        // Hidden sort column computed over the projection input.
+        let hname = format!("__sort_{i}");
+        exprs.push((k.expr.clone(), hname.clone()));
+        sort_keys.push(OrderKey { expr: Expr::Column(hname), descending: k.descending });
+        hidden += 1;
+    }
+    let mut plan = Plan::Project { input: Box::new(input), exprs };
+    if !sort_keys.is_empty() {
+        plan = Plan::Sort { input: Box::new(plan), keys: sort_keys };
+        if hidden > 0 {
+            // Drop the hidden columns. A wildcard in the select list means
+            // we cannot enumerate visible names statically; in that case
+            // keep a marker the executor resolves (drop __sort_* columns).
+            let drop_exprs: Vec<(Expr, String)> = if visible.iter().any(|n| n == "*") {
+                vec![(Expr::Func { name: "__drop_hidden".into(), args: vec![] }, "*".into())]
+            } else {
+                visible
+                    .iter()
+                    .map(|n| (Expr::Column(n.clone()), n.clone()))
+                    .collect()
+            };
+            plan = Plan::Project { input: Box::new(plan), exprs: drop_exprs };
+        }
+    }
+    if let Some(n) = limit {
+        plan = Plan::Limit { input: Box::new(plan), n };
+    }
+    plan
+}
+
+/// Derive an output column name from an expression.
+pub fn output_name(e: &Expr) -> String {
+    match e {
+        Expr::Column(c) => c
+            .rsplit_once('.')
+            .map(|(_, s)| s.to_string())
+            .unwrap_or_else(|| c.clone()),
+        other => other.to_sql().to_ascii_lowercase(),
+    }
+}
+
+fn plan_table_ref(t: &TableRef, udfs: &UdfRegistry) -> Result<Plan> {
+    Ok(match t {
+        TableRef::Table { name, alias } => {
+            Plan::Scan { table: name.clone(), alias: alias.clone() }
+        }
+        TableRef::Subquery { query, alias } => {
+            let inner = plan_query(query, udfs)?;
+            // Alias is informational; subquery output columns keep their
+            // projected names.
+            let _ = alias;
+            inner
+        }
+        TableRef::TableFunc { name, args, alias } => Plan::TableFunc {
+            name: name.clone(),
+            args: args.clone(),
+            alias: alias.clone(),
+        },
+    })
+}
+
+/// Split an ON expression into equi-join pairs and a residual predicate.
+/// Conjuncts of the form `<expr> = <expr>` become candidate equi pairs;
+/// side assignment happens at execution time (schema-dependent). Anything
+/// else lands in the residual.
+fn split_join_on(on: &Expr) -> (Vec<(Expr, Expr)>, Option<Expr>) {
+    let mut conjuncts = Vec::new();
+    collect_conjuncts(on, &mut conjuncts);
+    let mut equi = Vec::new();
+    let mut residual: Option<Expr> = None;
+    for c in conjuncts {
+        if let Expr::Binary { op: crate::sql::BinaryOp::Eq, left, right } = &c {
+            equi.push((*left.clone(), *right.clone()));
+            continue;
+        }
+        residual = Some(match residual {
+            None => c,
+            Some(prev) => Expr::Binary {
+                op: crate::sql::BinaryOp::And,
+                left: Box::new(prev),
+                right: Box::new(c),
+            },
+        });
+    }
+    (equi, residual)
+}
+
+fn collect_conjuncts(e: &Expr, out: &mut Vec<Expr>) {
+    if let Expr::Binary { op: crate::sql::BinaryOp::And, left, right } = e {
+        collect_conjuncts(left, out);
+        collect_conjuncts(right, out);
+    } else {
+        out.push(e.clone());
+    }
+}
+
+/// Build the Aggregate(+Filter for HAVING) subtree; returns the final
+/// projection expressions (agg calls rewritten to columns) and the ORDER
+/// BY keys rewritten the same way.
+fn plan_aggregate(
+    q: &Query,
+    input: Plan,
+    udfs: &UdfRegistry,
+) -> Result<(Plan, Vec<(Expr, String)>, Vec<OrderKey>)> {
+    let group: Vec<(Expr, String)> = q
+        .group_by
+        .iter()
+        .map(|e| (e.clone(), output_name(e)))
+        .collect();
+
+    // Collect aggregate calls from the select list and HAVING.
+    let mut aggs: Vec<AggCall> = Vec::new();
+    let mut collect = |e: &Expr| -> Result<()> {
+        collect_agg_calls(e, udfs, &mut aggs)
+    };
+    for item in &q.select {
+        match item {
+            SelectItem::Wildcard => {
+                bail!("SELECT * cannot be combined with GROUP BY/aggregates")
+            }
+            SelectItem::Expr { expr, .. } => collect(expr)?,
+        }
+    }
+    if let Some(h) = &q.having {
+        collect(h)?;
+    }
+
+    let agg_plan = Plan::Aggregate { input: Box::new(input), group: group.clone(), aggs: aggs.clone() };
+
+    // HAVING: rewrite aggregate calls to their output columns, filter.
+    let mut plan = agg_plan;
+    if let Some(h) = &q.having {
+        let rewritten = rewrite_aggs_to_columns(h, &aggs, &group);
+        plan = Plan::Filter { input: Box::new(plan), predicate: rewritten };
+    }
+
+    // Final projection: select expressions with agg calls rewritten.
+    let mut exprs = Vec::new();
+    for item in &q.select {
+        if let SelectItem::Expr { expr, alias } = item {
+            let rewritten = rewrite_aggs_to_columns(expr, &aggs, &group);
+            let name = alias.clone().unwrap_or_else(|| output_name(expr));
+            exprs.push((rewritten, name));
+        }
+    }
+    // ORDER BY keys over aggregate output, rewritten the same way.
+    let keys: Vec<OrderKey> = q
+        .order_by
+        .iter()
+        .map(|k| OrderKey {
+            expr: rewrite_aggs_to_columns(&k.expr, &aggs, &group),
+            descending: k.descending,
+        })
+        .collect();
+    Ok((plan, exprs, keys))
+}
+
+fn collect_agg_calls(e: &Expr, udfs: &UdfRegistry, out: &mut Vec<AggCall>) -> Result<()> {
+    match e {
+        Expr::Func { name, args } => {
+            if let Some(func) = AggFunc::from_name(name, udfs) {
+                // Nested aggregates are invalid.
+                for a in args {
+                    if a.contains_func(&|n| AggFunc::from_name(n, udfs).is_some()) {
+                        bail!("nested aggregate in {name}(...)");
+                    }
+                }
+                let (func, args) = if func == AggFunc::Count
+                    && args.len() == 1
+                    && matches!(args[0], Expr::Star)
+                {
+                    (AggFunc::CountStar, vec![])
+                } else {
+                    (func, args.clone())
+                };
+                let out_name = Expr::Func { name: name.clone(), args: args.clone() }
+                    .to_sql()
+                    .to_ascii_lowercase();
+                if !out.iter().any(|a| a.out_name == out_name) {
+                    out.push(AggCall { func, name: name.clone(), args, out_name });
+                }
+            } else {
+                for a in args {
+                    collect_agg_calls(a, udfs, out)?;
+                }
+            }
+        }
+        Expr::Unary { expr, .. } => collect_agg_calls(expr, udfs, out)?,
+        Expr::Binary { left, right, .. } => {
+            collect_agg_calls(left, udfs, out)?;
+            collect_agg_calls(right, udfs, out)?;
+        }
+        Expr::IsNull { expr, .. } => collect_agg_calls(expr, udfs, out)?,
+        Expr::InList { expr, list, .. } => {
+            collect_agg_calls(expr, udfs, out)?;
+            for i in list {
+                collect_agg_calls(i, udfs, out)?;
+            }
+        }
+        Expr::Between { expr, low, high, .. } => {
+            collect_agg_calls(expr, udfs, out)?;
+            collect_agg_calls(low, udfs, out)?;
+            collect_agg_calls(high, udfs, out)?;
+        }
+        Expr::Case { branches, else_value } => {
+            for (c, v) in branches {
+                collect_agg_calls(c, udfs, out)?;
+                collect_agg_calls(v, udfs, out)?;
+            }
+            if let Some(e) = else_value {
+                collect_agg_calls(e, udfs, out)?;
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Replace aggregate calls (and group expressions) with references to the
+/// aggregate operator's output columns.
+fn rewrite_aggs_to_columns(e: &Expr, aggs: &[AggCall], group: &[(Expr, String)]) -> Expr {
+    // Whole-expression match against a group key?
+    for (g, name) in group {
+        if e == g {
+            return Expr::Column(name.clone());
+        }
+    }
+    match e {
+        Expr::Func { name, args } => {
+            let normalized = if name == "count" && args.len() == 1 && matches!(args[0], Expr::Star)
+            {
+                Expr::Func { name: "count".into(), args: vec![] }.to_sql()
+            } else {
+                e.to_sql()
+            }
+            .to_ascii_lowercase();
+            for a in aggs {
+                if a.out_name == normalized {
+                    return Expr::Column(a.out_name.clone());
+                }
+            }
+            Expr::Func {
+                name: name.clone(),
+                args: args
+                    .iter()
+                    .map(|x| rewrite_aggs_to_columns(x, aggs, group))
+                    .collect(),
+            }
+        }
+        Expr::Unary { op, expr } => Expr::Unary {
+            op: *op,
+            expr: Box::new(rewrite_aggs_to_columns(expr, aggs, group)),
+        },
+        Expr::Binary { op, left, right } => Expr::Binary {
+            op: *op,
+            left: Box::new(rewrite_aggs_to_columns(left, aggs, group)),
+            right: Box::new(rewrite_aggs_to_columns(right, aggs, group)),
+        },
+        Expr::IsNull { expr, negated } => Expr::IsNull {
+            expr: Box::new(rewrite_aggs_to_columns(expr, aggs, group)),
+            negated: *negated,
+        },
+        Expr::InList { expr, list, negated } => Expr::InList {
+            expr: Box::new(rewrite_aggs_to_columns(expr, aggs, group)),
+            list: list
+                .iter()
+                .map(|x| rewrite_aggs_to_columns(x, aggs, group))
+                .collect(),
+            negated: *negated,
+        },
+        Expr::Between { expr, low, high, negated } => Expr::Between {
+            expr: Box::new(rewrite_aggs_to_columns(expr, aggs, group)),
+            low: Box::new(rewrite_aggs_to_columns(low, aggs, group)),
+            high: Box::new(rewrite_aggs_to_columns(high, aggs, group)),
+            negated: *negated,
+        },
+        Expr::Case { branches, else_value } => Expr::Case {
+            branches: branches
+                .iter()
+                .map(|(c, v)| {
+                    (
+                        rewrite_aggs_to_columns(c, aggs, group),
+                        rewrite_aggs_to_columns(v, aggs, group),
+                    )
+                })
+                .collect(),
+            else_value: else_value
+                .as_ref()
+                .map(|e| Box::new(rewrite_aggs_to_columns(e, aggs, group))),
+        },
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sql::parse_query;
+
+    fn plan(sql: &str) -> Plan {
+        plan_query(&parse_query(sql).unwrap(), &UdfRegistry::new()).unwrap()
+    }
+
+    #[test]
+    fn select_star_is_bare_scan() {
+        let p = plan("SELECT * FROM t");
+        assert!(matches!(p, Plan::Scan { .. }));
+    }
+
+    #[test]
+    fn filter_project_pipeline() {
+        let p = plan("SELECT a + 1 AS a1 FROM t WHERE a > 0");
+        match p {
+            Plan::Project { input, exprs } => {
+                assert_eq!(exprs[0].1, "a1");
+                assert!(matches!(*input, Plan::Filter { .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn aggregate_detection_without_group_by() {
+        let p = plan("SELECT COUNT(*), SUM(x) FROM t");
+        match p {
+            Plan::Project { input, .. } => match *input {
+                Plan::Aggregate { group, aggs, .. } => {
+                    assert!(group.is_empty());
+                    assert_eq!(aggs.len(), 2);
+                    assert_eq!(aggs[0].func, AggFunc::CountStar);
+                    assert_eq!(aggs[1].func, AggFunc::Sum);
+                }
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn having_becomes_filter_over_aggregate() {
+        let p = plan("SELECT cat, SUM(x) FROM t GROUP BY cat HAVING SUM(x) > 10");
+        match p {
+            Plan::Project { input, .. } => match *input {
+                Plan::Filter { input, predicate } => {
+                    assert!(matches!(*input, Plan::Aggregate { .. }));
+                    // The agg call was rewritten to a column ref.
+                    assert!(predicate.to_sql().contains("sum(x)"));
+                    let mut cols = Vec::new();
+                    predicate.referenced_columns(&mut cols);
+                    assert_eq!(cols, vec!["sum(x)"]);
+                }
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn join_on_split() {
+        let p = plan("SELECT * FROM a JOIN b ON a.id = b.id AND a.x > b.y");
+        match p {
+            Plan::Join { equi, residual, .. } => {
+                assert_eq!(equi.len(), 1);
+                assert!(residual.is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn referenced_functions_found() {
+        let p = plan("SELECT my_udf(a) FROM t WHERE other_udf(b) > 0");
+        let fns = p.referenced_functions();
+        assert!(fns.contains(&"my_udf".to_string()));
+        assert!(fns.contains(&"other_udf".to_string()));
+    }
+
+    #[test]
+    fn wildcard_with_group_by_rejected() {
+        let q = parse_query("SELECT * FROM t GROUP BY a").unwrap();
+        assert!(plan_query(&q, &UdfRegistry::new()).is_err());
+    }
+
+    #[test]
+    fn nested_aggregates_rejected() {
+        let q = parse_query("SELECT SUM(AVG(x)) FROM t").unwrap();
+        assert!(plan_query(&q, &UdfRegistry::new()).is_err());
+    }
+
+    #[test]
+    fn aggregates_in_where_rejected() {
+        let q = parse_query("SELECT a FROM t WHERE SUM(a) > 1").unwrap();
+        assert!(plan_query(&q, &UdfRegistry::new()).is_err());
+    }
+
+    #[test]
+    fn group_key_expression_rewritten_in_select() {
+        let p = plan("SELECT upper(cat), COUNT(*) FROM t GROUP BY upper(cat)");
+        match p {
+            Plan::Project { exprs, .. } => {
+                assert_eq!(exprs[0].0, Expr::Column("upper(cat)".into()));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! # snowpark-repro
+//!
+//! A from-scratch reproduction of *"Snowpark: Performant, Secure,
+//! User-Friendly Data Engineering and AI/ML Next To Your Data"*
+//! (Snowflake, 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! - **Layer 3 (this crate)**: the coordination contribution — virtual
+//!   warehouses, secure sandboxes, Python package caching (solver +
+//!   environment caches), historical-stats-based scheduling, and row
+//!   redistribution for UDFs — plus every substrate they depend on
+//!   (a columnar SQL engine, a DataFrame API, a package dependency
+//!   solver, a control plane).
+//! - **Layer 2 (python/compile/model.py)**: vectorized UDF compute graphs
+//!   in JAX, AOT-lowered to HLO text.
+//! - **Layer 1 (python/compile/kernels/)**: Pallas kernels for the
+//!   feature-engineering hot spots (min-max scaling, one-hot encoding,
+//!   Pearson correlation).
+//!
+//! Python never runs on the request path: `rust/src/runtime` loads the
+//! AOT artifacts via the PJRT C API and serves them from the engine's
+//! vectorized-UDF operator.
+
+pub mod bench;
+pub mod cli;
+pub mod control;
+pub mod dataframe;
+pub mod engine;
+pub mod packages;
+pub mod sandbox;
+pub mod scheduler;
+pub mod session;
+pub mod sim;
+pub mod warehouse;
+pub mod runtime;
+pub mod sql;
+pub mod udf;
+pub mod types;
+pub mod util;
+
+pub use runtime::XlaRuntime;

@@ -1,0 +1,5 @@
+//! `snowparkd` — leader entrypoint + CLI for the Snowpark reproduction.
+
+fn main() {
+    snowpark::cli::main();
+}

@@ -1,0 +1,23 @@
+//! Python package management (§IV.A): the synthetic package universe, the
+//! conda-like dependency solver, the global solver cache, the
+//! per-warehouse environment cache, and the prefetch/warm-up machinery.
+//!
+//! The paper's production numbers this subsystem reproduces:
+//! - solver cache hit rate ≈ 99.95 % (global, metadata-only);
+//! - environment cache hit rate ≈ 92.58 % (per warehouse);
+//! - Fig. 4: init latency reduced ~85 % by the solver cache, a further
+//!   65–85 % by the environment cache (18–48× combined).
+
+mod env_cache;
+mod installer;
+mod prefetch;
+mod solver;
+mod solver_cache;
+mod universe;
+
+pub use env_cache::{EnvKey, EnvLookup, EnvironmentCache};
+pub use installer::{InitBreakdown, Installer, LatencyModel};
+pub use prefetch::Prefetcher;
+pub use solver::{ResolvedPackage, Resolution, SolveError, Solver};
+pub use solver_cache::SolverCache;
+pub use universe::{PackageId, PackageSpec, PackageUniverse, VersionId};

@@ -1,0 +1,100 @@
+//! Package prefetch + base-environment warm-up (§IV.A).
+//!
+//! "As part of the provisioning process, Snowpark will pre-create the root
+//! directory ... as the base environment for Python runtime
+//! initialization. Furthermore, we built a Python package prefetch
+//! mechanism that prefetches popular Python packages to the virtual
+//! warehouse nodes before the first workload starts."
+
+use super::env_cache::EnvironmentCache;
+use super::universe::{PackageId, PackageUniverse};
+
+/// Popularity-ranked prefetcher.
+pub struct Prefetcher {
+    /// How many of the most popular packages to push to fresh nodes.
+    pub top_k: usize,
+    /// Byte budget the prefetcher may use on a node.
+    pub byte_budget: u64,
+}
+
+impl Default for Prefetcher {
+    fn default() -> Self {
+        Self { top_k: 32, byte_budget: 8 << 30 }
+    }
+}
+
+impl Prefetcher {
+    pub fn new(top_k: usize, byte_budget: u64) -> Self {
+        Self { top_k, byte_budget }
+    }
+
+    /// Warm a freshly-provisioned node's binary cache with the newest
+    /// version of the top-K most popular packages (package ids are
+    /// popularity-ranked in the universe). Returns packages prefetched.
+    pub fn warm(
+        &self,
+        universe: &PackageUniverse,
+        env_cache: &mut EnvironmentCache,
+    ) -> Vec<PackageId> {
+        let mut fetched = Vec::new();
+        let mut budget = self.byte_budget;
+        for p in 0..self.top_k.min(universe.len()) {
+            let v = universe.newest(p);
+            let bytes = universe.version(p, v).bytes;
+            if bytes > budget {
+                continue;
+            }
+            env_cache.install_binary(p, v, bytes);
+            budget -= bytes;
+            fetched.push(p);
+        }
+        fetched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warms_top_k_newest_versions() {
+        let u = PackageUniverse::generate(100, 5);
+        let mut cache = EnvironmentCache::new(64 << 30);
+        let fetched = Prefetcher::new(10, 8 << 30).warm(&u, &mut cache);
+        assert_eq!(fetched.len(), 10);
+        for p in 0..10 {
+            assert!(cache.has_binary(p, u.newest(p)), "missing {p}");
+        }
+        assert!(!cache.has_binary(50, u.newest(50)));
+    }
+
+    #[test]
+    fn respects_byte_budget() {
+        let u = PackageUniverse::generate(100, 5);
+        let mut cache = EnvironmentCache::new(64 << 30);
+        let tiny = Prefetcher::new(50, 1_000).warm(&u, &mut cache); // ~nothing fits
+        assert!(tiny.len() < 5);
+    }
+
+    #[test]
+    fn prefetched_binaries_reduce_misses() {
+        use crate::packages::solver::Solver;
+        use crate::packages::universe::PackageSpec;
+        let u = PackageUniverse::generate(100, 5);
+        let solver = Solver::new(&u);
+        let r = solver.solve(&[PackageSpec::any(0), PackageSpec::any(1)]).unwrap();
+
+        let mut cold = EnvironmentCache::new(64 << 30);
+        let cold_missing = match cold.lookup(&r) {
+            crate::packages::EnvLookup::Partial { missing, .. } => missing.len(),
+            _ => 0,
+        };
+        let mut warm = EnvironmentCache::new(64 << 30);
+        Prefetcher::new(32, 8 << 30).warm(&u, &mut warm);
+        let warm_missing = match warm.lookup(&r) {
+            crate::packages::EnvLookup::Partial { missing, .. } => missing.len(),
+            crate::packages::EnvLookup::EnvHit => 0,
+        };
+        assert!(warm_missing < cold_missing, "{warm_missing} !< {cold_missing}");
+    }
+}

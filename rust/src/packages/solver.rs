@@ -1,0 +1,327 @@
+//! Backtracking dependency solver (the "conda solver" of §IV.A).
+//!
+//! Given a set of requirements, finds an assignment package→version whose
+//! transitive closure satisfies every constraint, preferring newest
+//! versions. Solving explores a genuine search space (narrow constraints
+//! create conflicts that force backtracking), so a cache hit that skips
+//! it saves real, super-linear work — exactly the economics the paper's
+//! solver cache exploits.
+
+use std::collections::HashMap;
+
+use super::universe::{PackageId, PackageSpec, PackageUniverse, VersionId};
+
+/// One package pinned by the solver.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResolvedPackage {
+    pub package: PackageId,
+    pub version: VersionId,
+    pub bytes: u64,
+}
+
+/// A successful resolution: the fully-expanded dependency closure, sorted
+/// by package id (deterministic), plus solver work metrics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Resolution {
+    pub packages: Vec<ResolvedPackage>,
+    /// Search nodes explored — the latency model charges time per node.
+    pub nodes_explored: u64,
+    /// Backtracks taken.
+    pub backtracks: u64,
+}
+
+impl Resolution {
+    pub fn total_bytes(&self) -> u64 {
+        self.packages.iter().map(|p| p.bytes).sum()
+    }
+
+    pub fn contains(&self, p: PackageId) -> bool {
+        self.packages.iter().any(|r| r.package == p)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SolveError {
+    /// No version assignment satisfies the constraints.
+    Unsatisfiable { package: PackageId },
+    /// Exceeded the node budget (pathological conflict chains).
+    BudgetExhausted,
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::Unsatisfiable { package } => {
+                write!(f, "no satisfying version assignment for package {package}")
+            }
+            SolveError::BudgetExhausted => write!(f, "solver budget exhausted"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+/// The solver. Stateless apart from the universe reference; cheap to
+/// share behind an `Arc`.
+pub struct Solver<'u> {
+    universe: &'u PackageUniverse,
+    /// Hard cap on explored nodes so adversarial inputs terminate.
+    pub node_budget: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Range {
+    lo: VersionId,
+    hi: VersionId,
+}
+
+impl<'u> Solver<'u> {
+    pub fn new(universe: &'u PackageUniverse) -> Self {
+        Self { universe, node_budget: 2_000_000 }
+    }
+
+    /// Resolve a requirement set to its transitive closure.
+    pub fn solve(&self, specs: &[PackageSpec]) -> Result<Resolution, SolveError> {
+        // Initial ranges from the user specs.
+        let mut ranges: HashMap<PackageId, Range> = HashMap::new();
+        for s in specs {
+            let hi = self.universe.newest(s.package);
+            let lo = s.min_version.unwrap_or(0);
+            let r = ranges.entry(s.package).or_insert(Range { lo: 0, hi });
+            r.lo = r.lo.max(lo);
+            if r.lo > r.hi {
+                return Err(SolveError::Unsatisfiable { package: s.package });
+            }
+        }
+        let mut assigned: HashMap<PackageId, VersionId> = HashMap::new();
+        let mut stats = (0u64, 0u64); // (nodes, backtracks)
+        let roots: Vec<PackageId> = {
+            let mut r: Vec<PackageId> = ranges.keys().cloned().collect();
+            // Solve high-index (most-dependent) packages first: their
+            // constraints narrow foundational packages before those are
+            // pinned, reducing backtracking — and matching how conda
+            // orders its worklist.
+            r.sort_unstable_by(|a, b| b.cmp(a));
+            r
+        };
+        self.assign(&roots, 0, &mut ranges, &mut assigned, &mut stats)?;
+        let mut packages: Vec<ResolvedPackage> = assigned
+            .iter()
+            .map(|(&p, &v)| ResolvedPackage {
+                package: p,
+                version: v,
+                bytes: self.universe.version(p, v).bytes,
+            })
+            .collect();
+        packages.sort();
+        Ok(Resolution { packages, nodes_explored: stats.0, backtracks: stats.1 })
+    }
+
+    /// Recursive backtracking assignment of `worklist[idx..]`.
+    ///
+    /// Choice points are transactional: each candidate version works on a
+    /// cloned (ranges, assigned) state, committed only on success. This
+    /// keeps backtracking trivially correct (no partial-undo bugs) at the
+    /// cost of clones — which is fine: the whole point of the solver cache
+    /// is that solving is expensive.
+    fn assign(
+        &self,
+        worklist: &[PackageId],
+        idx: usize,
+        ranges: &mut HashMap<PackageId, Range>,
+        assigned: &mut HashMap<PackageId, VersionId>,
+        stats: &mut (u64, u64),
+    ) -> Result<(), SolveError> {
+        if idx == worklist.len() {
+            return Ok(());
+        }
+        let pkg = worklist[idx];
+        if let Some(&v) = assigned.get(&pkg) {
+            // Already pinned (reached via another dependency edge): just
+            // verify it still satisfies the current range.
+            let range = *ranges
+                .get(&pkg)
+                .unwrap_or(&Range { lo: 0, hi: self.universe.newest(pkg) });
+            if v < range.lo || v > range.hi {
+                return Err(SolveError::Unsatisfiable { package: pkg });
+            }
+            return self.assign(worklist, idx + 1, ranges, assigned, stats);
+        }
+        let range = *ranges
+            .get(&pkg)
+            .unwrap_or(&Range { lo: 0, hi: self.universe.newest(pkg) });
+        // Try newest-first within the allowed range.
+        for v in (range.lo..=range.hi).rev() {
+            stats.0 += 1;
+            if stats.0 > self.node_budget {
+                return Err(SolveError::BudgetExhausted);
+            }
+            // Tentatively pin pkg=v on a cloned state.
+            let mut t_ranges = ranges.clone();
+            let mut t_assigned = assigned.clone();
+            t_assigned.insert(pkg, v);
+            let deps = &self.universe.version(pkg, v).deps;
+            let mut feasible = true;
+            let mut new_work: Vec<PackageId> = Vec::new();
+            for c in deps {
+                let cur = t_ranges
+                    .get(&c.package)
+                    .copied()
+                    .unwrap_or(Range { lo: 0, hi: self.universe.newest(c.package) });
+                let lo = cur.lo.max(c.lo);
+                let hi = cur.hi.min(c.hi);
+                if lo > hi {
+                    feasible = false;
+                    break;
+                }
+                if let Some(&av) = t_assigned.get(&c.package) {
+                    if av < lo || av > hi {
+                        feasible = false;
+                        break;
+                    }
+                }
+                t_ranges.insert(c.package, Range { lo, hi });
+                if !t_assigned.contains_key(&c.package) && !new_work.contains(&c.package) {
+                    new_work.push(c.package);
+                }
+            }
+            if feasible {
+                // Depth-first: resolve newly-required deps, then continue
+                // the original worklist.
+                new_work.sort_unstable_by(|a, b| b.cmp(a));
+                let deeper = self
+                    .assign(&new_work, 0, &mut t_ranges, &mut t_assigned, stats)
+                    .and_then(|_| {
+                        self.assign(worklist, idx + 1, &mut t_ranges, &mut t_assigned, stats)
+                    });
+                match deeper {
+                    Ok(()) => {
+                        *ranges = t_ranges;
+                        *assigned = t_assigned;
+                        return Ok(());
+                    }
+                    Err(SolveError::BudgetExhausted) => {
+                        return Err(SolveError::BudgetExhausted)
+                    }
+                    Err(_) => stats.1 += 1,
+                }
+            }
+        }
+        Err(SolveError::Unsatisfiable { package: pkg })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn universe() -> PackageUniverse {
+        PackageUniverse::generate(300, 42)
+    }
+
+    #[test]
+    fn single_package_resolves_with_deps() {
+        let u = universe();
+        let s = Solver::new(&u);
+        // pandas depends (transitively) on foundational packages.
+        let pandas = u.by_name("pandas").unwrap();
+        let r = s.solve(&[PackageSpec::any(pandas)]).unwrap();
+        assert!(r.contains(pandas));
+        assert!(r.nodes_explored >= 1);
+        // Closure includes every dep of the chosen pandas version.
+        let v = r
+            .packages
+            .iter()
+            .find(|p| p.package == pandas)
+            .unwrap()
+            .version;
+        for c in &u.version(pandas, v).deps {
+            assert!(r.contains(c.package), "missing dep {}", c.package);
+        }
+    }
+
+    #[test]
+    fn closure_satisfies_all_constraints() {
+        let u = universe();
+        let s = Solver::new(&u);
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let specs = u.sample_spec_set(&mut rng, 6);
+            let Ok(r) = s.solve(&specs) else { continue };
+            let assigned: std::collections::HashMap<_, _> = r
+                .packages
+                .iter()
+                .map(|p| (p.package, p.version))
+                .collect();
+            // Every user spec honored.
+            for spec in &specs {
+                let v = assigned[&spec.package];
+                if let Some(min) = spec.min_version {
+                    assert!(v >= min);
+                }
+            }
+            // Every resolved package's deps present and in range.
+            for p in &r.packages {
+                for c in &u.version(p.package, p.version).deps {
+                    let v = *assigned
+                        .get(&c.package)
+                        .unwrap_or_else(|| panic!("dep {} missing", c.package));
+                    assert!(v >= c.lo && v <= c.hi, "constraint violated");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_resolution() {
+        let u = universe();
+        let s = Solver::new(&u);
+        let mut rng = Rng::new(11);
+        let specs = u.sample_spec_set(&mut rng, 5);
+        let a = s.solve(&specs).unwrap();
+        let b = s.solve(&specs).unwrap();
+        assert_eq!(a.packages, b.packages);
+    }
+
+    #[test]
+    fn min_version_above_newest_is_unsat() {
+        let u = universe();
+        let s = Solver::new(&u);
+        let numpy = u.by_name("numpy").unwrap();
+        let err = s
+            .solve(&[PackageSpec::at_least(numpy, u.newest(numpy) + 5)])
+            .unwrap_err();
+        assert!(matches!(err, SolveError::Unsatisfiable { .. }));
+    }
+
+    #[test]
+    fn prefers_newest_versions() {
+        let u = universe();
+        let s = Solver::new(&u);
+        let numpy = u.by_name("numpy").unwrap();
+        let r = s.solve(&[PackageSpec::any(numpy)]).unwrap();
+        let v = r.packages.iter().find(|p| p.package == numpy).unwrap();
+        assert_eq!(v.version, u.newest(numpy));
+    }
+
+    #[test]
+    fn bigger_spec_sets_cost_more_nodes() {
+        let u = universe();
+        let s = Solver::new(&u);
+        let mut rng = Rng::new(13);
+        let mut small = 0u64;
+        let mut large = 0u64;
+        for _ in 0..50 {
+            let sp = u.sample_spec_set(&mut rng, 2);
+            if let Ok(r) = s.solve(&sp) {
+                small += r.nodes_explored;
+            }
+            let sp = u.sample_spec_set(&mut rng, 8);
+            if let Ok(r) = s.solve(&sp) {
+                large += r.nodes_explored;
+            }
+        }
+        assert!(large > small, "large={large} small={small}");
+    }
+}

@@ -1,0 +1,173 @@
+//! The global solver cache (§IV.A).
+//!
+//! "Snowpark keeps a global solver cache to map package combinations to
+//! their corresponding fully expanded package dependencies. ... Since the
+//! cache is around package metadata and global across all customer
+//! accounts and virtual warehouses, the solver cache hit rate in
+//! production is as high as 99.95%."
+//!
+//! Key = the normalized (sorted, deduplicated) spec set. Read-mostly →
+//! RwLock; values are Arc'd resolutions shared across warehouses.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::solver::{Resolution, SolveError, Solver};
+use super::universe::PackageSpec;
+
+/// Global, metadata-only cache: spec set → resolved closure.
+pub struct SolverCache {
+    map: RwLock<HashMap<Vec<PackageSpec>, Arc<Resolution>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for SolverCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SolverCache {
+    pub fn new() -> Self {
+        Self {
+            map: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Normalize a spec set into the canonical cache key.
+    pub fn normalize(specs: &[PackageSpec]) -> Vec<PackageSpec> {
+        let mut key: Vec<PackageSpec> = specs.to_vec();
+        key.sort();
+        key.dedup();
+        key
+    }
+
+    /// Look up the resolution for `specs`, solving (and caching) on miss.
+    /// Returns the resolution plus whether it was a cache hit.
+    pub fn resolve(
+        &self,
+        solver: &Solver<'_>,
+        specs: &[PackageSpec],
+    ) -> Result<(Arc<Resolution>, bool), SolveError> {
+        let key = Self::normalize(specs);
+        if let Some(r) = self.map.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((r.clone(), true));
+        }
+        // Solve outside the lock (misses are rare but expensive).
+        let resolution = Arc::new(solver.solve(&key)?);
+        let mut map = self.map.write().unwrap();
+        let entry = map.entry(key).or_insert_with(|| resolution.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((entry.clone(), false))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packages::universe::PackageUniverse;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hit_after_miss_same_resolution() {
+        let u = PackageUniverse::generate(200, 1);
+        let solver = Solver::new(&u);
+        let cache = SolverCache::new();
+        let specs = vec![PackageSpec::any(u.by_name("pandas").unwrap())];
+        let (a, hit_a) = cache.resolve(&solver, &specs).unwrap();
+        let (b, hit_b) = cache.resolve(&solver, &specs).unwrap();
+        assert!(!hit_a);
+        assert!(hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn normalization_makes_order_and_dupes_irrelevant() {
+        let u = PackageUniverse::generate(200, 1);
+        let solver = Solver::new(&u);
+        let cache = SolverCache::new();
+        let a = PackageSpec::any(0);
+        let b = PackageSpec::any(5);
+        cache.resolve(&solver, &[a.clone(), b.clone()]).unwrap();
+        let (_, hit) = cache
+            .resolve(&solver, &[b.clone(), a.clone(), a.clone()])
+            .unwrap();
+        assert!(hit);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn production_like_trace_hits_hard() {
+        // Zipf-recurring spec sets: after warmup, hit rate should be high
+        // (the paper reports 99.95% at production scale).
+        let u = PackageUniverse::generate(300, 2);
+        let solver = Solver::new(&u);
+        let cache = SolverCache::new();
+        let mut rng = Rng::new(3);
+        // A catalog of 60 recurring workloads.
+        let workloads: Vec<Vec<PackageSpec>> =
+            (0..60).map(|_| u.sample_spec_set(&mut rng, 5)).collect();
+        let zipf = crate::util::rng::Zipf::new(workloads.len(), 1.2);
+        for _ in 0..5_000 {
+            let w = &workloads[zipf.sample(&mut rng)];
+            let _ = cache.resolve(&solver, w);
+        }
+        assert!(cache.hit_rate() > 0.95, "hit_rate={}", cache.hit_rate());
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let u = Arc::new(PackageUniverse::generate(150, 4));
+        let cache = Arc::new(SolverCache::new());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let u = u.clone();
+            let cache = cache.clone();
+            handles.push(std::thread::spawn(move || {
+                let solver = Solver::new(&u);
+                let mut rng = Rng::new(t);
+                for _ in 0..200 {
+                    let specs = u.sample_spec_set(&mut rng, 4);
+                    let _ = cache.resolve(&solver, &specs);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(cache.hits() + cache.misses() > 0);
+    }
+}

@@ -1,0 +1,276 @@
+//! Synthetic package universe.
+//!
+//! The paper's solver cache works because (a) dependency solving over a
+//! real repository is expensive — the transitive closure must be computed
+//! under version constraints — and (b) package *combinations* recur
+//! heavily across queries. This module generates a repository with the
+//! properties that matter: a deep dependency DAG, semver-range
+//! constraints with genuine conflict potential, Zipf-shaped popularity,
+//! and log-normal package sizes.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Index into the universe's package table.
+pub type PackageId = usize;
+/// Index into a package's version list (0 = oldest).
+pub type VersionId = usize;
+
+/// A user-facing requirement, e.g. `numpy>=2` (package + minimum version).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PackageSpec {
+    pub package: PackageId,
+    /// Minimum acceptable version (inclusive); None = any.
+    pub min_version: Option<VersionId>,
+}
+
+impl PackageSpec {
+    pub fn any(package: PackageId) -> Self {
+        Self { package, min_version: None }
+    }
+
+    pub fn at_least(package: PackageId, v: VersionId) -> Self {
+        Self { package, min_version: Some(v) }
+    }
+}
+
+/// A version-range constraint one package version places on another.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub package: PackageId,
+    /// Inclusive version range [lo, hi].
+    pub lo: VersionId,
+    pub hi: VersionId,
+}
+
+/// One published version of a package.
+#[derive(Debug, Clone)]
+pub struct Version {
+    /// Compressed download size in bytes.
+    pub bytes: u64,
+    pub deps: Vec<Constraint>,
+}
+
+/// One package with its published versions (oldest first).
+#[derive(Debug, Clone)]
+pub struct Package {
+    pub name: String,
+    pub versions: Vec<Version>,
+}
+
+/// The repository.
+pub struct PackageUniverse {
+    pub packages: Vec<Package>,
+    popularity: Zipf,
+}
+
+/// Well-known package names seeded at the popular end of the universe so
+/// examples and tests read naturally.
+const FAMOUS: &[&str] = &[
+    "numpy", "pandas", "scikit-learn", "scipy", "pyarrow", "requests",
+    "matplotlib", "seaborn", "statsmodels", "xgboost", "lightgbm", "nltk",
+    "pillow", "sqlalchemy", "beautifulsoup4", "regexkit", "jsonschema",
+    "protobuf", "grpcio", "cryptography", "boto3", "fsspec", "dask",
+    "numba", "cython", "joblib", "tqdm", "pyyaml", "cloudpickle", "pytz",
+];
+
+impl PackageUniverse {
+    /// Generate a universe of `n` packages with seed-deterministic
+    /// contents. Dependencies always point to *lower-indexed* packages,
+    /// guaranteeing an acyclic dependency graph (like real ecosystems,
+    /// where foundational packages sit at the bottom).
+    pub fn generate(n: usize, seed: u64) -> Self {
+        assert!(n >= FAMOUS.len());
+        let mut rng = Rng::new(seed);
+        let mut packages = Vec::with_capacity(n);
+        for i in 0..n {
+            let name = if i < FAMOUS.len() {
+                FAMOUS[i].to_string()
+            } else {
+                format!("pkg-{i:04}")
+            };
+            let n_versions = 1 + rng.below(5) as usize;
+            let mut versions = Vec::with_capacity(n_versions);
+            for _ in 0..n_versions {
+                // Log-normal sizes: median ~2 MiB, occasional 100 MiB+.
+                let bytes = (rng.lognormal(14.5, 1.3)).min(4.0e8).max(2.0e4) as u64;
+                // Foundational packages have few deps; later ones more.
+                let max_deps = if i < 10 { 1 } else { (i.ilog2() as usize).min(7) };
+                let n_deps = rng.below(max_deps as u64 + 1) as usize;
+                let mut deps: Vec<Constraint> = Vec::with_capacity(n_deps);
+                for _ in 0..n_deps {
+                    if i == 0 {
+                        break;
+                    }
+                    // Prefer popular (low-index) dependencies, like real
+                    // ecosystems depend on numpy et al.
+                    let dep = (rng.below(i as u64).min(rng.below(i as u64))) as usize;
+                    if deps.iter().any(|d| d.package == dep) {
+                        continue;
+                    }
+                    // Constraint range anchored near the dep's newest
+                    // versions; occasionally narrow (conflict potential).
+                    let nv = 0; // placeholder; replaced after generation
+                    let _ = nv;
+                    deps.push(Constraint { package: dep, lo: 0, hi: usize::MAX });
+                }
+                versions.push(Version { bytes, deps });
+            }
+            packages.push(Package { name, versions });
+        }
+        // Second pass: tighten constraint ranges now that all version
+        // counts are known.
+        let version_counts: Vec<usize> = packages.iter().map(|p| p.versions.len()).collect();
+        for p in &mut packages {
+            for v in &mut p.versions {
+                for c in &mut v.deps {
+                    let nv = version_counts[c.package];
+                    let hi = nv - 1;
+                    // 20% of constraints are narrow (pin to one or two
+                    // versions), the rest accept a suffix range.
+                    if rng.bool(0.2) {
+                        let pin = rng.below(nv as u64) as usize;
+                        c.lo = pin;
+                        c.hi = (pin + rng.below(2) as usize).min(hi);
+                    } else {
+                        c.lo = rng.below(nv as u64) as usize / 2;
+                        c.hi = hi;
+                    }
+                }
+            }
+        }
+        Self { packages, popularity: Zipf::new(n, 1.05) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.packages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.packages.is_empty()
+    }
+
+    pub fn package(&self, id: PackageId) -> &Package {
+        &self.packages[id]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<PackageId> {
+        self.packages.iter().position(|p| p.name == name)
+    }
+
+    pub fn newest(&self, id: PackageId) -> VersionId {
+        self.packages[id].versions.len() - 1
+    }
+
+    pub fn version(&self, id: PackageId, v: VersionId) -> &Version {
+        &self.packages[id].versions[v]
+    }
+
+    /// Sample a package by popularity (rank 0 = most popular).
+    pub fn sample_popular(&self, rng: &mut Rng) -> PackageId {
+        self.popularity.sample(rng)
+    }
+
+    /// Sample a realistic requirement set for one query: a handful of
+    /// popular packages, occasionally with a minimum-version pin.
+    pub fn sample_spec_set(&self, rng: &mut Rng, max_pkgs: usize) -> Vec<PackageSpec> {
+        let n = 1 + rng.below(max_pkgs as u64) as usize;
+        let mut specs: Vec<PackageSpec> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let p = self.sample_popular(rng);
+            if specs.iter().any(|s| s.package == p) {
+                continue;
+            }
+            let min_version = if rng.bool(0.15) {
+                Some(rng.below(self.packages[p].versions.len() as u64) as usize)
+            } else {
+                None
+            };
+            specs.push(PackageSpec { package: p, min_version });
+        }
+        specs.sort();
+        specs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn universe() -> PackageUniverse {
+        PackageUniverse::generate(300, 42)
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = PackageUniverse::generate(100, 7);
+        let b = PackageUniverse::generate(100, 7);
+        for (pa, pb) in a.packages.iter().zip(&b.packages) {
+            assert_eq!(pa.name, pb.name);
+            assert_eq!(pa.versions.len(), pb.versions.len());
+            for (va, vb) in pa.versions.iter().zip(&pb.versions) {
+                assert_eq!(va.bytes, vb.bytes);
+                assert_eq!(va.deps.len(), vb.deps.len());
+            }
+        }
+    }
+
+    #[test]
+    fn dependency_graph_is_acyclic_by_construction() {
+        let u = universe();
+        for (i, p) in u.packages.iter().enumerate() {
+            for v in &p.versions {
+                for d in &v.deps {
+                    assert!(d.package < i, "dep {} of {} not lower-indexed", d.package, i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constraints_are_valid_ranges() {
+        let u = universe();
+        for p in &u.packages {
+            for v in &p.versions {
+                for d in &v.deps {
+                    assert!(d.lo <= d.hi);
+                    assert!(d.hi < u.packages[d.package].versions.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn famous_names_present() {
+        let u = universe();
+        assert_eq!(u.by_name("numpy"), Some(0));
+        assert!(u.by_name("pandas").is_some());
+        assert!(u.by_name("nonexistent-pkg").is_none());
+    }
+
+    #[test]
+    fn popularity_skews_to_low_ids() {
+        let u = universe();
+        let mut rng = Rng::new(1);
+        let mut low = 0;
+        for _ in 0..2000 {
+            if u.sample_popular(&mut rng) < 30 {
+                low += 1;
+            }
+        }
+        // Zipf(1.05) over 300: the top-30 should dominate.
+        assert!(low > 800, "low={low}");
+    }
+
+    #[test]
+    fn spec_sets_are_sorted_unique() {
+        let u = universe();
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let specs = u.sample_spec_set(&mut rng, 6);
+            assert!(!specs.is_empty() && specs.len() <= 6);
+            for w in specs.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+}

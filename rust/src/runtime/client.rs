@@ -1,0 +1,142 @@
+//! XLA PJRT client wrapper: compile HLO text once, execute many times.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArtifactManifest, KernelSpec};
+
+/// A compiled XLA executable plus the shape metadata the engine needs to
+/// marshal rowset columns in and out.
+pub struct CompiledKernel {
+    pub spec: KernelSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledKernel {
+    /// Execute with f32 input buffers. Each input is a flat buffer whose
+    /// logical shape is given by `spec.inputs[i]`. Returns the flat f32
+    /// outputs in manifest order.
+    pub fn execute_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "kernel {}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&self.spec.inputs) {
+            let expected: usize = shape.dims.iter().product();
+            if buf.len() != expected {
+                return Err(anyhow!(
+                    "kernel {}: input buffer len {} != shape {:?}",
+                    self.spec.name,
+                    buf.len(),
+                    shape.dims
+                ));
+            }
+            let dims: Vec<i64> = shape.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let mut root = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.decompose_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            out.push(part.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Runtime that owns a PJRT CPU client and a cache of compiled artifacts.
+///
+/// `XlaRuntime` is the only place the `xla` crate is touched; the rest of
+/// the coordinator sees [`CompiledKernel`] handles. Compilation happens at
+/// most once per artifact (keyed by kernel name), mirroring how Snowflake
+/// compiles a query plan fragment once per warehouse.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    manifest: ArtifactManifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<CompiledKernel>>>,
+}
+
+impl XlaRuntime {
+    /// Open the artifacts directory produced by `make artifacts`.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = artifacts_dir.join("manifest.txt");
+        let manifest = ArtifactManifest::load(&manifest_path)
+            .with_context(|| format!("loading {}", manifest_path.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            artifacts_dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location relative to the repo root, honoring
+    /// `SNOWPARK_ARTIFACTS` for tests and examples run from other cwds.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("SNOWPARK_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// True if an artifacts directory with a manifest exists at `dir`.
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.txt").is_file()
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn kernel_names(&self) -> Vec<String> {
+        self.manifest.kernels.iter().map(|k| k.name.clone()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&KernelSpec> {
+        self.manifest.kernels.iter().find(|k| k.name == name)
+    }
+
+    /// Load (compiling on first use) the kernel called `name`.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<CompiledKernel>> {
+        if let Some(k) = self.cache.lock().unwrap().get(name) {
+            return Ok(k.clone());
+        }
+        let spec = self
+            .spec(name)
+            .ok_or_else(|| anyhow!("kernel {name} not in manifest"))?
+            .clone();
+        let path = self.artifacts_dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let kernel = std::sync::Arc::new(CompiledKernel { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), kernel.clone());
+        Ok(kernel)
+    }
+
+    /// Number of kernels compiled so far (for tests / metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,244 @@
+//! XLA-backed vectorized UDFs: the bridge from the engine's vectorized
+//! UDF interface (§III.A) to the AOT-compiled Pallas kernels (L1/L2).
+//!
+//! Each registered UDF marshals rowset columns into f32 literals, pads
+//! the last batch up to the kernel's static shape, executes via PJRT, and
+//! truncates the output — so callers see exact row counts while the
+//! kernels keep fixed AOT shapes. Streaming statistics (min/max, Pearson
+//! moments) are combined natively across batches, matching the L2
+//! contract (`ref.pearson_moments` docs).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::session::Session;
+use crate::types::{DataType, RowSet};
+
+use super::service::XlaService;
+
+/// Geometry of the AOT artifacts (read from the manifest at runtime).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelGeometry {
+    pub batch_rows: usize,
+    pub num_features: usize,
+    pub num_classes: usize,
+}
+
+/// Read the kernel geometry from the manifest.
+pub fn geometry(rt: &XlaService) -> Result<KernelGeometry> {
+    let mm = rt
+        .spec("minmax_stats")
+        .ok_or_else(|| anyhow!("minmax_stats not in manifest"))?;
+    let oh = rt
+        .spec("one_hot")
+        .ok_or_else(|| anyhow!("one_hot not in manifest"))?;
+    Ok(KernelGeometry {
+        batch_rows: mm.inputs[0].dims[0],
+        num_features: mm.inputs[0].dims[1],
+        num_classes: oh.outputs[0].dims[1],
+    })
+}
+
+/// Marshal `count` rows of a single numeric column into a padded
+/// (batch_rows × features) buffer by repeating the last row (padding rows
+/// are sliced away after execution; repetition keeps min/max unbiased).
+fn pad_tail(buf: &mut Vec<f32>, rows: usize, batch_rows: usize, width: usize) {
+    debug_assert_eq!(buf.len(), rows * width);
+    if rows == 0 {
+        buf.resize(batch_rows * width, 0.0);
+        return;
+    }
+    let last: Vec<f32> = buf[(rows - 1) * width..rows * width].to_vec();
+    for _ in rows..batch_rows {
+        buf.extend_from_slice(&last);
+    }
+}
+
+/// Min-max scale one f64 column to [0,1] via the AOT kernels, streaming
+/// in fixed-size batches: pass 1 combines per-batch stats kernels, pass 2
+/// applies. Returns the scaled values.
+///
+/// PERF (EXPERIMENTS.md §Perf, L1 iteration 1): the column is *packed*
+/// across all F feature lanes — each kernel call consumes B×F consecutive
+/// elements instead of B elements in lane 0 — cutting PJRT dispatches by
+/// F× (16×). The per-lane stats rows are combined natively (min of lane
+/// mins / max of lane maxes), and the apply pass broadcasts the global
+/// stats to every lane, so numerics are identical to the unpacked layout.
+pub fn minmax_scale_column(rt: &XlaService, data: &[f64]) -> Result<Vec<f64>> {
+    let geo = geometry(rt)?;
+    let (b, f) = (geo.batch_rows, geo.num_features);
+    let chunk = b * f;
+    let n = data.len();
+
+    // Pass 1: global min/max from packed stats kernels.
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    let mut off = 0;
+    while off < n {
+        let take = chunk.min(n - off);
+        let mut buf: Vec<f32> = Vec::with_capacity(chunk);
+        buf.extend(data[off..off + take].iter().map(|&v| v as f32));
+        // Pad by repeating the last element: unbiased for min/max.
+        let last = buf[take - 1];
+        buf.resize(chunk, last);
+        let out = rt.execute("minmax_stats", vec![buf])?;
+        // Combine all lane mins / lane maxes.
+        for lane in 0..f {
+            lo = lo.min(out[0][lane]);
+            hi = hi.max(out[0][f + lane]);
+        }
+        off += take;
+    }
+
+    // Pass 2: apply with the global stats broadcast to every lane.
+    let mut stats = vec![0.0f32; 2 * f];
+    for lane in 0..f {
+        stats[lane] = lo;
+        stats[f + lane] = hi;
+    }
+    let mut result = Vec::with_capacity(n);
+    off = 0;
+    while off < n {
+        let take = chunk.min(n - off);
+        let mut buf: Vec<f32> = Vec::with_capacity(chunk);
+        buf.extend(data[off..off + take].iter().map(|&v| v as f32));
+        buf.resize(chunk, 0.0);
+        let out = rt.execute("minmax_apply", vec![buf, stats.clone()])?;
+        result.extend(out[0][..take].iter().map(|&v| v as f64));
+        off += take;
+    }
+    Ok(result)
+}
+
+/// One-hot encode an integer-coded column; returns row-major (n × C).
+pub fn one_hot_column(rt: &XlaService, codes: &[f64]) -> Result<(Vec<f32>, usize)> {
+    let geo = geometry(rt)?;
+    let b = geo.batch_rows;
+    let c = geo.num_classes;
+    let n = codes.len();
+    let mut out = Vec::with_capacity(n * c);
+    let mut off = 0;
+    while off < n {
+        let take = b.min(n - off);
+        let mut buf: Vec<f32> = codes[off..off + take].iter().map(|&v| v as f32).collect();
+        pad_tail(&mut buf, take, b, 1);
+        let res = rt.execute("one_hot", vec![buf])?;
+        out.extend_from_slice(&res[0][..take * c]);
+        off += take;
+    }
+    Ok((out, c))
+}
+
+/// Pearson correlation of up to F columns via streamed moment kernels
+/// combined natively. Returns the (w × w) correlation matrix row-major.
+pub fn pearson_columns(rt: &XlaService, columns: &[&[f64]]) -> Result<Vec<f64>> {
+    let geo = geometry(rt)?;
+    let (b, f) = (geo.batch_rows, geo.num_features);
+    let w = columns.len();
+    if w == 0 || w > f {
+        return Err(anyhow!("pearson supports 1..={f} columns, got {w}"));
+    }
+    let n = columns[0].len();
+    if columns.iter().any(|c| c.len() != n) {
+        return Err(anyhow!("ragged columns"));
+    }
+    let mut xtx = vec![0.0f64; f * f];
+    let mut colsum = vec![0.0f64; f];
+    let mut off = 0;
+    let mut rows_used = 0usize;
+    // PERF (§Perf, L3 iteration 2): one reusable marshalling buffer per
+    // call instead of a fresh zeroed Vec per chunk; columns are written
+    // with per-column inner loops (sequential reads per source column).
+    let mut buf = vec![0.0f32; b * f];
+    while off < n {
+        let take = b.min(n - off);
+        // Zero-pad the tail: zero rows contribute nothing to moments, so
+        // moments over `rows_used` rows stay exact.
+        if take < b {
+            buf.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for (j, col) in columns.iter().enumerate() {
+            let src = &col[off..off + take];
+            for (i, &v) in src.iter().enumerate() {
+                buf[i * f + j] = v as f32;
+            }
+        }
+        let out = rt.execute("pearson_moments", vec![buf.clone()])?;
+        for i in 0..f * f {
+            xtx[i] += out[0][i] as f64;
+        }
+        for i in 0..f {
+            colsum[i] += out[1][i] as f64;
+        }
+        rows_used += take;
+        off += take;
+    }
+    // Finalize natively (the rust half of the streaming contract).
+    let nf = rows_used as f64;
+    let mut corr = vec![0.0f64; w * w];
+    let mean: Vec<f64> = (0..w).map(|j| colsum[j] / nf).collect();
+    let mut cov = vec![0.0f64; w * w];
+    for a in 0..w {
+        for bb in 0..w {
+            cov[a * w + bb] = xtx[a * f + bb] / nf - mean[a] * mean[bb];
+        }
+    }
+    let std: Vec<f64> = (0..w).map(|j| cov[j * w + j].max(0.0).sqrt()).collect();
+    for a in 0..w {
+        for bb in 0..w {
+            corr[a * w + bb] = if a == bb {
+                1.0
+            } else if std[a] > 0.0 && std[bb] > 0.0 {
+                cov[a * w + bb] / (std[a] * std[bb])
+            } else {
+                0.0
+            };
+        }
+    }
+    Ok(corr)
+}
+
+/// Register the XLA-backed vectorized UDFs on a session:
+/// - `xla_minmax_scale(x)` — §V.B min-max scaling (77× case study);
+/// - `xla_one_hot_idx(code)` — the hot index of the one-hot row (full
+///   matrix callers use `one_hot_column` directly);
+/// Pearson is a table-level statistic, exposed via `pearson_columns`.
+pub fn register_xla_udfs(session: &Arc<Session>, rt: Arc<XlaService>) -> Result<()> {
+    {
+        let rt = rt.clone();
+        session.register_vectorized_udf(
+            "xla_minmax_scale",
+            DataType::Float64,
+            Arc::new(move |rows: &RowSet| {
+                let data = rows.column(0).to_f32_vec()?;
+                let data64: Vec<f64> = data.iter().map(|&v| v as f64).collect();
+                minmax_scale_column(&rt, &data64)
+            }),
+        );
+    }
+    {
+        let rt = rt.clone();
+        session.register_vectorized_udf(
+            "xla_one_hot_idx",
+            DataType::Float64,
+            Arc::new(move |rows: &RowSet| {
+                let codes = rows.column(0).to_f32_vec()?;
+                let codes64: Vec<f64> = codes.iter().map(|&v| v as f64).collect();
+                let (mat, c) = one_hot_column(&rt, &codes64)?;
+                Ok((0..codes64.len())
+                    .map(|i| {
+                        let row = &mat[i * c..(i + 1) * c];
+                        row.iter()
+                            .position(|&v| v == 1.0)
+                            .map(|p| p as f64)
+                            .unwrap_or(-1.0)
+                    })
+                    .collect())
+            }),
+        );
+    }
+    session.set_udf_packages("xla_minmax_scale", &["numpy", "scikit-learn"]);
+    session.set_udf_packages("xla_one_hot_idx", &["numpy", "scikit-learn"]);
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Artifact manifest: shape/dtype metadata for each AOT-compiled kernel.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` in a simple
+//! line-oriented format (no serde available offline):
+//!
+//! ```text
+//! kernel <name> <file>
+//! input <name> <dtype> <d0>x<d1>x...
+//! output <name> <dtype> <d0>x<d1>x...
+//! end
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Logical tensor shape + dtype of a kernel input or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorShape {
+    pub name: String,
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorShape {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-compiled kernel: the HLO text file plus its I/O signature.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorShape>,
+    pub outputs: Vec<TensorShape>,
+}
+
+/// The set of kernels shipped in an artifacts directory.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub kernels: Vec<KernelSpec>,
+}
+
+fn parse_shape(line: &str) -> Result<TensorShape> {
+    // e.g. `input x f32 1024x16`
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    if parts.len() != 4 {
+        bail!("malformed shape line: {line:?}");
+    }
+    let dims = parts[3]
+        .split('x')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d}: {e}")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorShape {
+        name: parts[1].to_string(),
+        dtype: parts[2].to_string(),
+        dims,
+    })
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kernels = Vec::new();
+        let mut current: Option<KernelSpec> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let err = |msg: &str| anyhow!("manifest line {}: {msg}: {line:?}", lineno + 1);
+            if let Some(rest) = line.strip_prefix("kernel ") {
+                if current.is_some() {
+                    bail!(err("nested kernel block"));
+                }
+                let parts: Vec<&str> = rest.split_whitespace().collect();
+                if parts.len() != 2 {
+                    bail!(err("expected `kernel <name> <file>`"));
+                }
+                current = Some(KernelSpec {
+                    name: parts[0].to_string(),
+                    file: parts[1].to_string(),
+                    inputs: Vec::new(),
+                    outputs: Vec::new(),
+                });
+            } else if line.starts_with("input ") {
+                current
+                    .as_mut()
+                    .ok_or_else(|| err("input outside kernel block"))?
+                    .inputs
+                    .push(parse_shape(line)?);
+            } else if line.starts_with("output ") {
+                current
+                    .as_mut()
+                    .ok_or_else(|| err("output outside kernel block"))?
+                    .outputs
+                    .push(parse_shape(line)?);
+            } else if line == "end" {
+                let k = current.take().ok_or_else(|| err("end without kernel"))?;
+                kernels.push(k);
+            } else {
+                bail!(err("unrecognized directive"));
+            }
+        }
+        if current.is_some() {
+            bail!("manifest ended inside a kernel block");
+        }
+        Ok(Self { kernels })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_round_trip() {
+        let text = "\
+# comment
+kernel minmax_scale minmax_scale.hlo.txt
+input x f32 1024x16
+output y f32 1024x16
+end
+kernel pearson pearson.hlo.txt
+input x f32 1024x16
+output corr f32 16x16
+end
+";
+        let m = ArtifactManifest::parse(text).unwrap();
+        assert_eq!(m.kernels.len(), 2);
+        assert_eq!(m.kernels[0].name, "minmax_scale");
+        assert_eq!(m.kernels[0].inputs[0].dims, vec![1024, 16]);
+        assert_eq!(m.kernels[0].inputs[0].elements(), 1024 * 16);
+        assert_eq!(m.kernels[1].outputs[0].dims, vec![16, 16]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse("bogus line").is_err());
+        assert!(ArtifactManifest::parse("kernel a f\ninput x f32 4\n").is_err());
+        assert!(ArtifactManifest::parse("input x f32 4\nend\n").is_err());
+        assert!(ArtifactManifest::parse("kernel a f\ninput x f32 4y4\nend\n").is_err());
+    }
+}

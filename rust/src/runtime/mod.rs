@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them
+//! from the Layer-3 hot path. Python is never on the request path — it
+//! runs once at build time (`make artifacts`) to produce
+//! `artifacts/*.hlo.txt`, which this module compiles with the XLA CPU
+//! PJRT client and serves as vectorized-UDF executables.
+
+mod client;
+mod service;
+pub mod kernels;
+mod manifest;
+
+pub use client::{CompiledKernel, XlaRuntime};
+pub use service::XlaService;
+pub use manifest::{ArtifactManifest, KernelSpec, TensorShape};

@@ -1,0 +1,98 @@
+//! XLA execution service: a dedicated thread owns the (non-`Send`) PJRT
+//! client and serves execution requests over channels, so the rest of the
+//! coordinator — interpreter pool threads included — can call kernels
+//! through a `Send + Sync` handle. One service per node in a real
+//! deployment; one per process here.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::client::XlaRuntime;
+use super::manifest::ArtifactManifest;
+
+enum Req {
+    Execute {
+        kernel: String,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe handle to the runtime thread.
+pub struct XlaService {
+    tx: mpsc::Sender<Req>,
+    manifest: ArtifactManifest,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl XlaService {
+    /// Start the service: the runtime (PJRT client + executable cache)
+    /// lives entirely on the spawned thread.
+    pub fn start(artifacts_dir: impl AsRef<Path>) -> Result<XlaService> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(dir.join("manifest.txt"))?;
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || {
+                let runtime = match XlaRuntime::open(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Shutdown => break,
+                        Req::Execute { kernel, inputs, reply } => {
+                            let res = runtime
+                                .load(&kernel)
+                                .and_then(|k| k.execute_f32(&inputs));
+                            let _ = reply.send(res);
+                        }
+                    }
+                }
+            })
+            .expect("spawn xla-service");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("xla service thread died during startup"))??;
+        Ok(XlaService { tx, manifest, handle: Some(handle) })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&super::manifest::KernelSpec> {
+        self.manifest.kernels.iter().find(|k| k.name == name)
+    }
+
+    /// Execute a kernel by name (blocking; requests are serialized on the
+    /// service thread — PJRT CPU parallelizes internally).
+    pub fn execute(&self, kernel: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Execute { kernel: kernel.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("xla service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla service dropped the request"))?
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

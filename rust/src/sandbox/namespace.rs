@@ -1,0 +1,110 @@
+//! Namespace isolation (§III.C: "We use namespaces to isolate processes").
+//!
+//! Simulation of the Linux namespace kinds a Snowpark sandbox unshares.
+//! The invariant we test: two sandboxes never share a namespace instance
+//! unless explicitly configured to (there is no sharing API — full
+//! isolation by construction).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Linux namespace kinds relevant to the sandbox.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NamespaceKind {
+    Pid,
+    Mount,
+    Network,
+    Uts,
+    Ipc,
+    User,
+    Cgroup,
+}
+
+pub const ALL_KINDS: [NamespaceKind; 7] = [
+    NamespaceKind::Pid,
+    NamespaceKind::Mount,
+    NamespaceKind::Network,
+    NamespaceKind::Uts,
+    NamespaceKind::Ipc,
+    NamespaceKind::User,
+    NamespaceKind::Cgroup,
+];
+
+static NEXT_NS_ID: AtomicU64 = AtomicU64::new(1);
+
+/// The set of (fresh) namespaces one sandbox owns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NamespaceSet {
+    /// (kind, unique instance id) — ids are globally unique, so equality
+    /// of ids across sandboxes would indicate (forbidden) sharing.
+    members: Vec<(NamespaceKind, u64)>,
+}
+
+impl NamespaceSet {
+    /// Unshare every namespace kind (the standard Snowpark sandbox).
+    pub fn full() -> Self {
+        Self {
+            members: ALL_KINDS
+                .iter()
+                .map(|&k| (k, NEXT_NS_ID.fetch_add(1, Ordering::Relaxed)))
+                .collect(),
+        }
+    }
+
+    /// Unshare only the given kinds (e.g. a lighter sandbox for UDFs that
+    /// need host networking through the egress proxy).
+    pub fn of(kinds: &[NamespaceKind]) -> Self {
+        Self {
+            members: kinds
+                .iter()
+                .map(|&k| (k, NEXT_NS_ID.fetch_add(1, Ordering::Relaxed)))
+                .collect(),
+        }
+    }
+
+    pub fn has(&self, kind: NamespaceKind) -> bool {
+        self.members.iter().any(|(k, _)| *k == kind)
+    }
+
+    pub fn id_of(&self, kind: NamespaceKind) -> Option<u64> {
+        self.members.iter().find(|(k, _)| *k == kind).map(|(_, id)| *id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_set_has_every_kind() {
+        let ns = NamespaceSet::full();
+        for k in ALL_KINDS {
+            assert!(ns.has(k), "{k:?}");
+        }
+        assert_eq!(ns.len(), 7);
+    }
+
+    #[test]
+    fn sandboxes_never_share_namespace_instances() {
+        let a = NamespaceSet::full();
+        let b = NamespaceSet::full();
+        for k in ALL_KINDS {
+            assert_ne!(a.id_of(k), b.id_of(k), "{k:?} shared!");
+        }
+    }
+
+    #[test]
+    fn partial_sets() {
+        let ns = NamespaceSet::of(&[NamespaceKind::Pid, NamespaceKind::Mount]);
+        assert!(ns.has(NamespaceKind::Pid));
+        assert!(!ns.has(NamespaceKind::Network));
+        assert_eq!(ns.len(), 2);
+    }
+}

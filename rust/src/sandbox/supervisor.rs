@@ -1,0 +1,140 @@
+//! Supervisor process (§III.C): "logging capabilities to track all denied
+//! syscalls in the sandbox. We leverage these logging data to monitor
+//! workloads' patterns and identify potential malicious actors."
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::syscall::Syscall;
+use crate::util::ids::ProcId;
+
+/// One audit-log entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SupervisorEvent {
+    pub proc: ProcId,
+    pub syscall: String,
+    pub seq: u64,
+}
+
+/// The supervisor: denial audit log + per-process counters + a simple
+/// anomaly heuristic (processes probing many distinct denied syscalls).
+#[derive(Default)]
+pub struct Supervisor {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    log: Vec<SupervisorEvent>,
+    by_proc: HashMap<ProcId, HashMap<String, u64>>,
+    seq: u64,
+}
+
+impl Supervisor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_denial(&self, proc: ProcId, call: &Syscall) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.seq += 1;
+        let seq = inner.seq;
+        inner.log.push(SupervisorEvent { proc, syscall: call.name.clone(), seq });
+        *inner
+            .by_proc
+            .entry(proc)
+            .or_default()
+            .entry(call.name.clone())
+            .or_insert(0) += 1;
+    }
+
+    pub fn denial_count(&self) -> usize {
+        self.inner.lock().unwrap().log.len()
+    }
+
+    pub fn denials_for(&self, proc: ProcId) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .by_proc
+            .get(&proc)
+            .map(|m| m.values().sum())
+            .unwrap_or(0)
+    }
+
+    /// Distinct denied syscalls for a process — a probing signature.
+    pub fn distinct_denied(&self, proc: ProcId) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .by_proc
+            .get(&proc)
+            .map(|m| m.len())
+            .unwrap_or(0)
+    }
+
+    /// Processes whose denial pattern looks like active probing: more
+    /// than `distinct_threshold` distinct denied syscalls.
+    pub fn suspicious_procs(&self, distinct_threshold: usize) -> Vec<ProcId> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<ProcId> = inner
+            .by_proc
+            .iter()
+            .filter(|(_, m)| m.len() > distinct_threshold)
+            .map(|(&p, _)| p)
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// The most recent `n` events (operator console view).
+    pub fn tail(&self, n: usize) -> Vec<SupervisorEvent> {
+        let inner = self.inner.lock().unwrap();
+        inner.log.iter().rev().take(n).rev().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_and_counters() {
+        let s = Supervisor::new();
+        s.record_denial(ProcId(1), &Syscall::new("ptrace"));
+        s.record_denial(ProcId(1), &Syscall::new("ptrace"));
+        s.record_denial(ProcId(2), &Syscall::new("mount"));
+        assert_eq!(s.denial_count(), 3);
+        assert_eq!(s.denials_for(ProcId(1)), 2);
+        assert_eq!(s.denials_for(ProcId(2)), 1);
+        assert_eq!(s.denials_for(ProcId(3)), 0);
+        assert_eq!(s.distinct_denied(ProcId(1)), 1);
+    }
+
+    #[test]
+    fn probing_detection() {
+        let s = Supervisor::new();
+        // proc 7 probes many syscalls; proc 1 just repeats one.
+        for name in ["ptrace", "mount", "setuid", "reboot", "init_module"] {
+            s.record_denial(ProcId(7), &Syscall::new(name));
+        }
+        for _ in 0..100 {
+            s.record_denial(ProcId(1), &Syscall::new("socket"));
+        }
+        assert_eq!(s.suspicious_procs(3), vec![ProcId(7)]);
+        assert!(s.suspicious_procs(10).is_empty());
+    }
+
+    #[test]
+    fn tail_returns_most_recent_in_order() {
+        let s = Supervisor::new();
+        for i in 0..10 {
+            s.record_denial(ProcId(i), &Syscall::new("x"));
+        }
+        let t = s.tail(3);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].proc, ProcId(7));
+        assert_eq!(t[2].proc, ProcId(9));
+        assert!(t[0].seq < t[1].seq && t[1].seq < t[2].seq);
+    }
+}

@@ -1,0 +1,211 @@
+//! Syscall filtering (§III.C): "a syscall filtering layer to make sure
+//! insecure syscalls are blocked. The layer maintains a list of allowed or
+//! conditionally allowed syscalls and denies other potentially malicious
+//! syscalls."
+//!
+//! Default-deny policy engine. Conditional rules carry an argument
+//! predicate (e.g. `socket` allowed only for AF_UNIX; `openat` allowed
+//! only under the sandbox root).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One (simulated) syscall invocation.
+#[derive(Debug, Clone)]
+pub struct Syscall {
+    pub name: String,
+    /// Coarse argument model: string key/value pairs the predicates read
+    /// (e.g. "family" => "AF_INET", "path" => "/etc/shadow").
+    pub args: Vec<(String, String)>,
+}
+
+impl Syscall {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), args: Vec::new() }
+    }
+
+    pub fn with_arg(mut self, key: &str, value: &str) -> Self {
+        self.args.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn arg(&self, key: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Filter decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Allow,
+    Deny,
+}
+
+/// Per-syscall policy.
+#[derive(Clone)]
+pub enum SyscallPolicy {
+    Allow,
+    /// Allowed only when the predicate accepts the arguments.
+    Conditional(Arc<dyn Fn(&Syscall) -> bool + Send + Sync>),
+}
+
+/// The filter: name → policy; anything unlisted is denied.
+#[derive(Clone, Default)]
+pub struct SyscallFilter {
+    rules: HashMap<String, SyscallPolicy>,
+}
+
+impl SyscallFilter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn allow(&mut self, name: &str) -> &mut Self {
+        self.rules.insert(name.to_string(), SyscallPolicy::Allow);
+        self
+    }
+
+    pub fn allow_if(
+        &mut self,
+        name: &str,
+        pred: impl Fn(&Syscall) -> bool + Send + Sync + 'static,
+    ) -> &mut Self {
+        self.rules
+            .insert(name.to_string(), SyscallPolicy::Conditional(Arc::new(pred)));
+        self
+    }
+
+    pub fn check(&self, call: &Syscall) -> Verdict {
+        match self.rules.get(&call.name) {
+            None => Verdict::Deny,
+            Some(SyscallPolicy::Allow) => Verdict::Allow,
+            Some(SyscallPolicy::Conditional(pred)) => {
+                if pred(call) {
+                    Verdict::Allow
+                } else {
+                    Verdict::Deny
+                }
+            }
+        }
+    }
+
+    pub fn rule_count(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// The default Snowpark-like policy: compute and in-sandbox I/O are
+    /// allowed; introspection, privilege, and raw-network calls are not.
+    /// Network `connect` is conditionally allowed only toward the local
+    /// egress proxy (the proxy applies the §III.C egress policies).
+    pub fn default_policy() -> Self {
+        let mut f = SyscallFilter::new();
+        for name in [
+            "read", "write", "close", "fstat", "lseek", "mmap", "munmap",
+            "brk", "rt_sigaction", "rt_sigprocmask", "ioctl", "pread64",
+            "pwrite64", "readv", "writev", "pipe", "select", "poll",
+            "epoll_wait", "epoll_ctl", "epoll_create1", "dup", "dup2",
+            "nanosleep", "getpid", "gettid", "exit", "exit_group", "futex",
+            "clock_gettime", "getrandom", "sched_yield", "madvise",
+        ] {
+            f.allow(name);
+        }
+        // Filesystem access only under the sandbox root or /tmp scratch.
+        f.allow_if("openat", |c| {
+            c.arg("path")
+                .map(|p| p.starts_with("/sandbox/") || p.starts_with("/tmp/"))
+                .unwrap_or(false)
+        });
+        f.allow_if("unlink", |c| {
+            c.arg("path").map(|p| p.starts_with("/tmp/")).unwrap_or(false)
+        });
+        // Process creation: fork/clone allowed without CLONE_NEWUSER
+        // escalation flags.
+        f.allow_if("clone", |c| {
+            c.arg("flags")
+                .map(|fl| !fl.contains("CLONE_NEWUSER"))
+                .unwrap_or(true)
+        });
+        // Sockets: UNIX-domain only (gRPC to the worker), or TCP to the
+        // egress proxy.
+        f.allow_if("socket", |c| c.arg("family") == Some("AF_UNIX"));
+        f.allow_if("connect", |c| {
+            c.arg("dest") == Some("egress-proxy") || c.arg("family") == Some("AF_UNIX")
+        });
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_deny() {
+        let f = SyscallFilter::new();
+        assert_eq!(f.check(&Syscall::new("read")), Verdict::Deny);
+    }
+
+    #[test]
+    fn allow_list() {
+        let f = SyscallFilter::default_policy();
+        assert_eq!(f.check(&Syscall::new("read")), Verdict::Allow);
+        assert_eq!(f.check(&Syscall::new("write")), Verdict::Allow);
+        assert_eq!(f.check(&Syscall::new("ptrace")), Verdict::Deny);
+        assert_eq!(f.check(&Syscall::new("mount")), Verdict::Deny);
+        assert_eq!(f.check(&Syscall::new("setuid")), Verdict::Deny);
+        assert_eq!(f.check(&Syscall::new("kexec_load")), Verdict::Deny);
+    }
+
+    #[test]
+    fn conditional_openat_paths() {
+        let f = SyscallFilter::default_policy();
+        let ok = Syscall::new("openat").with_arg("path", "/sandbox/data/x.parquet");
+        let tmp = Syscall::new("openat").with_arg("path", "/tmp/scratch");
+        let bad = Syscall::new("openat").with_arg("path", "/etc/shadow");
+        let none = Syscall::new("openat");
+        assert_eq!(f.check(&ok), Verdict::Allow);
+        assert_eq!(f.check(&tmp), Verdict::Allow);
+        assert_eq!(f.check(&bad), Verdict::Deny);
+        assert_eq!(f.check(&none), Verdict::Deny);
+    }
+
+    #[test]
+    fn conditional_sockets() {
+        let f = SyscallFilter::default_policy();
+        let unix = Syscall::new("socket").with_arg("family", "AF_UNIX");
+        let inet = Syscall::new("socket").with_arg("family", "AF_INET");
+        assert_eq!(f.check(&unix), Verdict::Allow);
+        assert_eq!(f.check(&inet), Verdict::Deny);
+        let proxy = Syscall::new("connect").with_arg("dest", "egress-proxy");
+        let direct = Syscall::new("connect").with_arg("dest", "evil.example.com:443");
+        assert_eq!(f.check(&proxy), Verdict::Allow);
+        assert_eq!(f.check(&direct), Verdict::Deny);
+    }
+
+    #[test]
+    fn clone_escalation_blocked() {
+        let f = SyscallFilter::default_policy();
+        let ok = Syscall::new("clone").with_arg("flags", "CLONE_VM|CLONE_FS");
+        let bad = Syscall::new("clone").with_arg("flags", "CLONE_VM|CLONE_NEWUSER");
+        assert_eq!(f.check(&ok), Verdict::Allow);
+        assert_eq!(f.check(&bad), Verdict::Deny);
+    }
+
+    #[test]
+    fn policy_is_extensible() {
+        // §III.C: "these syscall mechanisms have evolved ... providing
+        // more functionality inside the sandbox — for example, adding
+        // external network access".
+        let mut f = SyscallFilter::default_policy();
+        let n = f.rule_count();
+        f.allow_if("socket", |c| {
+            matches!(c.arg("family"), Some("AF_UNIX") | Some("AF_INET"))
+        });
+        assert_eq!(f.rule_count(), n); // replaced, not duplicated
+        let inet = Syscall::new("socket").with_arg("family", "AF_INET");
+        assert_eq!(f.check(&inet), Verdict::Allow);
+    }
+}

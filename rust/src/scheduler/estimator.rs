@@ -1,0 +1,139 @@
+//! Memory estimators: the paper's (K, P, F) dynamic estimator vs the
+//! static-allocation baseline of Fig. 5.
+
+use super::stats::StatsFramework;
+
+/// Anything that can estimate a query's memory demand before it runs.
+pub trait MemoryEstimator: Send + Sync {
+    fn estimate(&self, key: &str, stats: &StatsFramework) -> u64;
+    fn name(&self) -> &'static str;
+}
+
+/// Fig. 5 baseline: every query gets the same fixed allocation.
+pub struct StaticEstimator {
+    pub bytes: u64,
+}
+
+impl StaticEstimator {
+    pub fn new(bytes: u64) -> Self {
+        Self { bytes }
+    }
+}
+
+impl MemoryEstimator for StaticEstimator {
+    fn estimate(&self, _key: &str, _stats: &StatsFramework) -> u64 {
+        self.bytes
+    }
+
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// The paper's estimator: look back at the last K executions' max-memory
+/// stats, take the P percentile, multiply by F. Falls back to `default`
+/// for never-seen queries (the cold-start case).
+pub struct DynamicEstimator {
+    pub k: usize,
+    /// Percentile in [0, 100].
+    pub percentile: f64,
+    pub multiplier: f64,
+    pub default_bytes: u64,
+}
+
+impl DynamicEstimator {
+    /// Production-flavoured defaults: K=5, P=100 (max), F=1.2, 2 GiB cold.
+    pub fn paper_defaults() -> Self {
+        Self { k: 5, percentile: 100.0, multiplier: 1.2, default_bytes: 2 << 30 }
+    }
+}
+
+impl MemoryEstimator for DynamicEstimator {
+    fn estimate(&self, key: &str, stats: &StatsFramework) -> u64 {
+        let history = stats.lookback(key, self.k);
+        if history.is_empty() {
+            return self.default_bytes;
+        }
+        let mut h = history;
+        h.sort_unstable();
+        // Nearest-rank percentile over the K observations.
+        let rank = ((self.percentile / 100.0) * (h.len() - 1) as f64).round() as usize;
+        let p = h[rank.min(h.len() - 1)];
+        (p as f64 * self.multiplier).ceil() as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_is_constant() {
+        let e = StaticEstimator::new(1000);
+        let s = StatsFramework::new(10);
+        s.record("q", 999_999);
+        assert_eq!(e.estimate("q", &s), 1000);
+        assert_eq!(e.estimate("other", &s), 1000);
+    }
+
+    #[test]
+    fn dynamic_cold_start_uses_default() {
+        let e = DynamicEstimator::paper_defaults();
+        let s = StatsFramework::new(10);
+        assert_eq!(e.estimate("never-seen", &s), 2 << 30);
+    }
+
+    #[test]
+    fn dynamic_uses_percentile_and_multiplier() {
+        let e = DynamicEstimator { k: 5, percentile: 100.0, multiplier: 1.5, default_bytes: 1 };
+        let s = StatsFramework::new(10);
+        for v in [100, 300, 200] {
+            s.record("q", v);
+        }
+        // max of history = 300; × 1.5 = 450.
+        assert_eq!(e.estimate("q", &s), 450);
+        let median = DynamicEstimator { k: 5, percentile: 50.0, multiplier: 1.0, default_bytes: 1 };
+        assert_eq!(median.estimate("q", &s), 200);
+    }
+
+    #[test]
+    fn dynamic_lookback_is_bounded_by_k() {
+        let e = DynamicEstimator { k: 2, percentile: 100.0, multiplier: 1.0, default_bytes: 1 };
+        let s = StatsFramework::new(100);
+        s.record("q", 10_000); // old spike, outside K=2
+        s.record("q", 100);
+        s.record("q", 120);
+        assert_eq!(e.estimate("q", &s), 120);
+    }
+
+    #[test]
+    fn dynamic_is_monotone_in_history() {
+        // Adding a larger observation never decreases the estimate
+        // (property also hammered in rust/tests/prop_coordinator.rs).
+        let e = DynamicEstimator::paper_defaults();
+        let s = StatsFramework::new(10);
+        s.record("q", 500);
+        let before = e.estimate("q", &s);
+        s.record("q", 900);
+        let after = e.estimate("q", &s);
+        assert!(after >= before);
+    }
+
+    #[test]
+    fn stable_workloads_estimate_tightly() {
+        // §IV.B: "production workloads ... are usually stable, or evolve
+        // gradually" — for a stable query the estimate should sit within
+        // F of the true demand.
+        let e = DynamicEstimator::paper_defaults();
+        let s = StatsFramework::new(10);
+        for _ in 0..5 {
+            s.record("q", 1_000_000);
+        }
+        let est = e.estimate("q", &s);
+        assert_eq!(est, 1_200_000);
+    }
+}

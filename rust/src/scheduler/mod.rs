@@ -1,0 +1,18 @@
+//! Historical-stats-based scheduling (§IV.B, Fig. 5).
+//!
+//! "Snowpark built a historical workload execution stats tracking
+//! framework. During Snowpark query execution, the query periodically
+//! reports the current memory consumption. The framework tracks the max
+//! memory consumption through the life cycle of a query ... When a new
+//! execution of the same query starts, it looks back at the past K
+//! executions' memory consumption stats, and takes the P percentile
+//! value, with a multiplier factor F, as the query's memory consumption
+//! estimation."
+
+mod admission;
+mod estimator;
+mod stats;
+
+pub use admission::{AdmissionOutcome, NodeState, QueryRequest, WarehouseScheduler};
+pub use estimator::{DynamicEstimator, MemoryEstimator, StaticEstimator};
+pub use stats::{QueryKey, StatsFramework};

@@ -1,0 +1,129 @@
+//! The historical workload execution stats tracking framework (§IV.B).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Identifies "the same query" across executions — in production this is
+/// the parameterized query hash; here, any stable string (e.g. SQL text or
+/// job name).
+pub type QueryKey = String;
+
+/// Tracks a bounded history of per-execution max-memory observations.
+pub struct StatsFramework {
+    /// Max executions remembered per query (the paper's lookback K bound).
+    pub max_history: usize,
+    inner: Mutex<HashMap<QueryKey, Vec<u64>>>,
+}
+
+/// In-flight tracker for one execution: folds periodic memory reports
+/// into a lifecycle max (the paper's "tracks the max memory consumption
+/// through the life cycle of a query").
+#[derive(Debug, Default, Clone)]
+pub struct ExecutionTracker {
+    max_seen: u64,
+}
+
+impl ExecutionTracker {
+    pub fn report(&mut self, current_bytes: u64) {
+        self.max_seen = self.max_seen.max(current_bytes);
+    }
+
+    pub fn max_bytes(&self) -> u64 {
+        self.max_seen
+    }
+}
+
+impl StatsFramework {
+    pub fn new(max_history: usize) -> Self {
+        assert!(max_history > 0);
+        Self { max_history, inner: Mutex::new(HashMap::new()) }
+    }
+
+    /// Begin tracking one execution.
+    pub fn start_execution(&self) -> ExecutionTracker {
+        ExecutionTracker::default()
+    }
+
+    /// Store a finished execution's lifecycle max in the query metadata.
+    pub fn finish_execution(&self, key: &str, tracker: &ExecutionTracker) {
+        self.record(key, tracker.max_bytes());
+    }
+
+    /// Record a max-memory observation directly.
+    pub fn record(&self, key: &str, max_bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let h = inner.entry(key.to_string()).or_default();
+        h.push(max_bytes);
+        let len = h.len();
+        if len > self.max_history {
+            h.drain(0..len - self.max_history);
+        }
+    }
+
+    /// The last `k` observations (most recent last), if any.
+    pub fn lookback(&self, key: &str, k: usize) -> Vec<u64> {
+        let inner = self.inner.lock().unwrap();
+        match inner.get(key) {
+            None => Vec::new(),
+            Some(h) => {
+                let start = h.len().saturating_sub(k);
+                h[start..].to_vec()
+            }
+        }
+    }
+
+    pub fn executions_seen(&self, key: &str) -> usize {
+        self.inner.lock().unwrap().get(key).map_or(0, Vec::len)
+    }
+
+    pub fn tracked_queries(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_keeps_lifecycle_max() {
+        let f = StatsFramework::new(10);
+        let mut t = f.start_execution();
+        t.report(100);
+        t.report(700);
+        t.report(300);
+        assert_eq!(t.max_bytes(), 700);
+        f.finish_execution("q1", &t);
+        assert_eq!(f.lookback("q1", 5), vec![700]);
+    }
+
+    #[test]
+    fn lookback_returns_most_recent_k() {
+        let f = StatsFramework::new(100);
+        for v in 1..=10u64 {
+            f.record("q", v * 100);
+        }
+        assert_eq!(f.lookback("q", 3), vec![800, 900, 1000]);
+        assert_eq!(f.lookback("q", 99).len(), 10);
+        assert!(f.lookback("unknown", 3).is_empty());
+    }
+
+    #[test]
+    fn history_is_bounded() {
+        let f = StatsFramework::new(5);
+        for v in 0..50u64 {
+            f.record("q", v);
+        }
+        assert_eq!(f.executions_seen("q"), 5);
+        assert_eq!(f.lookback("q", 5), vec![45, 46, 47, 48, 49]);
+    }
+
+    #[test]
+    fn per_query_isolation() {
+        let f = StatsFramework::new(10);
+        f.record("a", 1);
+        f.record("b", 2);
+        assert_eq!(f.tracked_queries(), 2);
+        assert_eq!(f.lookback("a", 10), vec![1]);
+    }
+}

@@ -1,0 +1,327 @@
+//! The user-facing session: the composition root that binds the catalog,
+//! the UDF registry, the interpreter pool, the exchange policy, and the
+//! (optional) XLA runtime into one handle — what `snowpark.Session` is to
+//! the Python client.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::dataframe::DataFrame;
+use crate::engine::exchange::{run_udf_exchange, ExchangeConfig, ExchangeMode, ExchangeReport};
+use crate::engine::{Catalog, ExecContext};
+use crate::runtime::XlaService;
+use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
+use crate::udf::{ScalarFn, UdfRegistry, UdfStatsStore, VectorizedFn};
+use crate::warehouse::{InterpreterPool, PoolConfig};
+
+/// Builder for [`Session`].
+pub struct SessionBuilder {
+    pool: Option<PoolConfig>,
+    exchange: ExchangeConfig,
+    artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl SessionBuilder {
+    pub fn pool(mut self, config: PoolConfig) -> Self {
+        self.pool = Some(config);
+        self
+    }
+
+    pub fn exchange(mut self, config: ExchangeConfig) -> Self {
+        self.exchange = config;
+        self
+    }
+
+    /// Attach AOT artifacts (enables the XLA-backed vectorized UDFs).
+    pub fn artifacts(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    pub fn build(self) -> Result<Arc<Session>> {
+        let catalog = Arc::new(Catalog::new());
+        let registry = Arc::new(RwLock::new(UdfRegistry::new()));
+        let stats = Arc::new(UdfStatsStore::new());
+        let runtime = match &self.artifacts_dir {
+            Some(dir) if crate::runtime::XlaRuntime::available(dir) => {
+                Some(Arc::new(XlaService::start(dir)?))
+            }
+            Some(dir) => {
+                return Err(anyhow!(
+                    "no artifacts at {} — run `make artifacts` first",
+                    dir.display()
+                ))
+            }
+            None => None,
+        };
+        let session = Arc::new(Session {
+            catalog,
+            registry,
+            stats,
+            pool_config: self.pool,
+            pool: Mutex::new(None),
+            exchange: self.exchange,
+            runtime,
+            partitioned: RwLock::new(HashMap::new()),
+        });
+        if let Some(rt) = &session.runtime {
+            crate::runtime::kernels::register_xla_udfs(&session, rt.clone())?;
+        }
+        Ok(session)
+    }
+}
+
+/// A Snowpark session.
+pub struct Session {
+    catalog: Arc<Catalog>,
+    registry: Arc<RwLock<UdfRegistry>>,
+    stats: Arc<UdfStatsStore>,
+    pool_config: Option<PoolConfig>,
+    /// Lazily-spawned interpreter pool (threads are only created when a
+    /// distributed UDF query actually runs).
+    pool: Mutex<Option<Arc<InterpreterPool>>>,
+    exchange: ExchangeConfig,
+    runtime: Option<Arc<XlaService>>,
+    /// Partitioned tables: name → per-node rowsets (the source rowset
+    /// operator's placement for §IV.C).
+    partitioned: RwLock<HashMap<String, Vec<RowSet>>>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder {
+            pool: None,
+            exchange: ExchangeConfig::default(),
+            artifacts_dir: None,
+        }
+    }
+
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+
+    pub fn runtime(&self) -> Option<&Arc<XlaService>> {
+        self.runtime.as_ref()
+    }
+
+    pub fn udf_stats(&self) -> &Arc<UdfStatsStore> {
+        &self.stats
+    }
+
+    pub fn exchange_config(&self) -> ExchangeConfig {
+        self.exchange
+    }
+
+    /// Register a scalar UDF (row-at-a-time, §III.A).
+    pub fn register_scalar_udf(&self, name: &str, return_type: DataType, body: ScalarFn) {
+        self.registry
+            .write()
+            .unwrap()
+            .register_scalar(name, return_type, body);
+    }
+
+    /// Register a vectorized UDF (batch-at-a-time, §III.A "vectorized
+    /// interfaces for Python UDFs").
+    pub fn register_vectorized_udf(&self, name: &str, return_type: DataType, body: VectorizedFn) {
+        self.registry
+            .write()
+            .unwrap()
+            .register_vectorized(name, return_type, body);
+    }
+
+    /// Declare the packages a UDF imports (drives §IV.A init costs).
+    pub fn set_udf_packages(&self, name: &str, packages: &[&str]) {
+        self.registry.write().unwrap().set_packages(name, packages);
+    }
+
+    /// Set the static per-row cost estimate for a scalar UDF (seed for
+    /// the §IV.C threshold decision before history exists).
+    pub fn set_udf_row_cost(&self, name: &str, ns: u64) {
+        self.registry.write().unwrap().set_row_cost(name, ns);
+    }
+
+    /// Snapshot of the registry (cheap clone of definitions).
+    pub fn udfs(&self) -> UdfRegistry {
+        self.registry.read().unwrap().clone()
+    }
+
+    /// Register a table partitioned across warehouse nodes: partition `i`
+    /// lives on node `i % nodes`. The merged view is also queryable.
+    pub fn register_partitioned(&self, name: &str, partitions: Vec<RowSet>) -> Result<()> {
+        let mut merged = partitions
+            .first()
+            .map(|p| RowSet::empty(p.schema.clone()))
+            .ok_or_else(|| anyhow!("no partitions"))?;
+        for p in &partitions {
+            merged.append(p)?;
+        }
+        self.catalog.register(name, merged);
+        self.partitioned
+            .write()
+            .unwrap()
+            .insert(name.to_ascii_lowercase(), partitions);
+        Ok(())
+    }
+
+    pub fn partitions_of(&self, name: &str) -> Option<Vec<RowSet>> {
+        self.partitioned
+            .read()
+            .unwrap()
+            .get(&name.to_ascii_lowercase())
+            .cloned()
+    }
+
+    fn exec_context(&self) -> ExecContext {
+        ExecContext {
+            catalog: self.catalog.clone(),
+            udfs: Arc::new(self.udfs()),
+            udf_stats: self.stats.clone(),
+        }
+    }
+
+    /// Run a SQL statement on the leader.
+    pub fn sql(&self, text: &str) -> Result<RowSet> {
+        let ctx = self.exec_context();
+        crate::engine::run_sql(text, &ctx)
+    }
+
+    /// Open a DataFrame on a table.
+    pub fn table(self: &Arc<Self>, name: &str) -> DataFrame {
+        DataFrame::from_table(self.clone(), name)
+    }
+
+    /// Open a DataFrame over arbitrary SQL.
+    pub fn sql_frame(self: &Arc<Self>, sql: &str) -> DataFrame {
+        DataFrame::from_sql(self.clone(), sql)
+    }
+
+    /// Get (spawning on first use) the interpreter pool.
+    pub fn pool(&self) -> Result<Arc<InterpreterPool>> {
+        let mut guard = self.pool.lock().unwrap();
+        if guard.is_none() {
+            let cfg = self
+                .pool_config
+                .ok_or_else(|| anyhow!("session built without a pool configuration"))?;
+            *guard = Some(Arc::new(InterpreterPool::spawn(
+                cfg,
+                Arc::new(self.udfs()),
+                self.stats.clone(),
+            )));
+        }
+        Ok(guard.as_ref().unwrap().clone())
+    }
+
+    /// Drop the pool (it respawns with fresh registry state on next use).
+    pub fn reset_pool(&self) {
+        *self.pool.lock().unwrap() = None;
+    }
+
+    /// Distributed UDF projection over a partitioned table (§IV.C): apply
+    /// `udf(input_col)` to every row of `table`, routing batches through
+    /// the interpreter pool under `mode`. Returns the output column
+    /// (ordered: partition 0's rows first) and the exchange report.
+    pub fn run_distributed_udf(
+        &self,
+        table: &str,
+        udf: &str,
+        input_cols: &[&str],
+        mode: ExchangeMode,
+    ) -> Result<(Column, ExchangeReport)> {
+        let partitions = self
+            .partitions_of(table)
+            .ok_or_else(|| anyhow!("table {table:?} is not partitioned"))?;
+        // Project the UDF's argument columns per partition.
+        let projected: Vec<RowSet> = partitions
+            .iter()
+            .map(|p| {
+                let mut fields = Vec::new();
+                let mut cols = Vec::new();
+                for c in input_cols {
+                    let col = p
+                        .column_by_name(c)
+                        .ok_or_else(|| anyhow!("no column {c:?} in {table:?}"))?
+                        .clone();
+                    fields.push(Field::new(*c, col.data_type()));
+                    cols.push(col);
+                }
+                RowSet::new(Schema::new(fields), cols)
+            })
+            .collect::<Result<_>>()?;
+        let pool = self.pool()?;
+        let registry = self.udfs();
+        let cfg = ExchangeConfig { mode, ..self.exchange };
+        let (columns, report) = run_udf_exchange(&projected, udf, &pool, &registry, cfg)?;
+        // Stitch partition outputs into one column (partition order).
+        let mut values: Vec<Value> = Vec::new();
+        for c in &columns {
+            for i in 0..c.len() {
+                values.push(c.value(i));
+            }
+        }
+        let dt = values
+            .iter()
+            .find_map(Value::data_type)
+            .unwrap_or(DataType::Float64);
+        Ok((Column::from_values(dt, &values)?, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parts() -> Vec<RowSet> {
+        (0..2)
+            .map(|p| {
+                RowSet::new(
+                    Schema::new(vec![Field::new("x", DataType::Float64)]),
+                    vec![Column::from_f64(
+                        (0..10).map(|i| (p * 100 + i) as f64).collect(),
+                    )],
+                )
+                .unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn partitioned_table_also_queryable_merged() {
+        let s = Session::builder().build().unwrap();
+        s.register_partitioned("events", parts()).unwrap();
+        let rs = s.sql("SELECT COUNT(*) AS n FROM events").unwrap();
+        assert_eq!(rs.row(0)[0], Value::Int(20));
+        assert_eq!(s.partitions_of("events").unwrap().len(), 2);
+        assert!(s.partitions_of("missing").is_none());
+    }
+
+    #[test]
+    fn distributed_udf_round_trip() {
+        let s = Session::builder()
+            .pool(PoolConfig { nodes: 2, procs_per_node: 2, ..Default::default() })
+            .build()
+            .unwrap();
+        s.register_partitioned("events", parts()).unwrap();
+        s.register_scalar_udf(
+            "plus1",
+            DataType::Float64,
+            Arc::new(|args| Ok(Value::Float(args[0].as_f64().unwrap_or(0.0) + 1.0))),
+        );
+        for mode in [ExchangeMode::Local, ExchangeMode::RoundRobin] {
+            let (col, report) = s
+                .run_distributed_udf("events", "plus1", &["x"], mode)
+                .unwrap();
+            assert_eq!(col.len(), 20);
+            assert_eq!(col.value(0), Value::Float(1.0));
+            assert_eq!(col.value(10), Value::Float(101.0));
+            assert_eq!(report.rows, 20);
+        }
+    }
+
+    #[test]
+    fn pool_requires_config() {
+        let s = Session::builder().build().unwrap();
+        assert!(s.pool().is_err());
+    }
+}

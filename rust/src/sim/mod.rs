@@ -1,0 +1,12 @@
+//! Workload simulation: the TPCx-BB-inspired retail dataset + UDF query
+//! set (Fig. 6), the remote-cluster (Spark-like) baseline with data
+//! movement and failure injection (§V case studies), and the calibrated
+//! production trace generators (Fig. 4 / Fig. 5).
+
+mod remote;
+mod tpcxbb;
+mod workload;
+
+pub use remote::{RemoteCluster, RemoteCostModel, RemoteJobOutcome};
+pub use tpcxbb::{register_udfs, TpcxBbDataset, TpcxBbQuery, TPCXBB_QUERIES};
+pub use workload::{memory_workloads, InitTrace, MemoryWorkload, TraceQuery};

@@ -1,0 +1,190 @@
+//! The remote-cluster baseline (§V): "customers would conduct certain data
+//! analytics activities in Snowflake, but transferred data out to other
+//! systems, such as Spark, for data engineering or AI/ML tasks, and moved
+//! the results back".
+//!
+//! Cost model for that round-trip — export from the warehouse, wire
+//! transfer, remote processing, import back — plus the failure injection
+//! behind the CTC reliability story ("struggled with performance as well
+//! as frequent job failures, impacting critical SLAs"). Runs on a virtual
+//! clock.
+
+use std::time::Duration;
+
+use crate::util::clock::Clock;
+use crate::util::rng::Rng;
+
+/// Cost knobs for the remote (Spark-like) path.
+#[derive(Debug, Clone)]
+pub struct RemoteCostModel {
+    /// Export throughput from the warehouse (bytes/s).
+    pub export_bytes_per_sec: f64,
+    /// Wide-area transfer throughput (bytes/s).
+    pub wire_bytes_per_sec: f64,
+    /// Import throughput back into the warehouse (bytes/s).
+    pub import_bytes_per_sec: f64,
+    /// Remote cluster spin-up / job-submit overhead.
+    pub job_startup: Duration,
+    /// Remote compute speed relative to in-situ (1.0 = same).
+    pub compute_speedup: f64,
+    /// Probability a job fails and must be retried from scratch.
+    pub failure_rate: f64,
+    /// Egress $ per GiB (the §V.A "costly data transfers").
+    pub egress_cost_per_gib: f64,
+}
+
+impl Default for RemoteCostModel {
+    fn default() -> Self {
+        Self {
+            export_bytes_per_sec: 200.0e6,
+            wire_bytes_per_sec: 120.0e6,
+            import_bytes_per_sec: 200.0e6,
+            job_startup: Duration::from_secs(45),
+            compute_speedup: 1.0,
+            failure_rate: 0.06,
+            egress_cost_per_gib: 0.05,
+        }
+    }
+}
+
+/// Outcome of one remote job (including retries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteJobOutcome {
+    pub wall: Duration,
+    pub attempts: u32,
+    pub egress_dollars: f64,
+    /// Total bytes moved over the wire (both directions, all attempts).
+    pub bytes_moved: u64,
+}
+
+/// A simulated remote cluster.
+pub struct RemoteCluster {
+    pub model: RemoteCostModel,
+}
+
+impl RemoteCluster {
+    pub fn new(model: RemoteCostModel) -> Self {
+        Self { model }
+    }
+
+    /// Run one job: move `input_bytes` out, compute for `compute` (in-situ
+    /// terms), move `output_bytes` back. Failures restart the attempt.
+    /// Advances `clock`; draws failures from `rng`.
+    pub fn run_job(
+        &self,
+        input_bytes: u64,
+        output_bytes: u64,
+        compute: Duration,
+        clock: &dyn Clock,
+        rng: &mut Rng,
+    ) -> RemoteJobOutcome {
+        let m = &self.model;
+        let mut attempts = 0u32;
+        let mut bytes_moved = 0u64;
+        loop {
+            attempts += 1;
+            let export = Duration::from_secs_f64(input_bytes as f64 / m.export_bytes_per_sec);
+            let wire_out = Duration::from_secs_f64(input_bytes as f64 / m.wire_bytes_per_sec);
+            let remote_compute =
+                Duration::from_secs_f64(compute.as_secs_f64() / m.compute_speedup);
+            let attempt_time = m.job_startup + export + wire_out + remote_compute;
+            // Failures strike mid-run: charge a uniformly-random fraction
+            // of the attempt, then retry.
+            if rng.bool(m.failure_rate) {
+                let frac = rng.f64();
+                clock.sleep(Duration::from_secs_f64(attempt_time.as_secs_f64() * frac));
+                bytes_moved += (input_bytes as f64 * frac) as u64;
+                continue;
+            }
+            let wire_back =
+                Duration::from_secs_f64(output_bytes as f64 / m.wire_bytes_per_sec);
+            let import =
+                Duration::from_secs_f64(output_bytes as f64 / m.import_bytes_per_sec);
+            clock.sleep(attempt_time + wire_back + import);
+            bytes_moved += input_bytes + output_bytes;
+            let egress_dollars =
+                bytes_moved as f64 / (1u64 << 30) as f64 * m.egress_cost_per_gib;
+            return RemoteJobOutcome { wall: clock.now(), attempts, egress_dollars, bytes_moved };
+        }
+    }
+
+    /// The in-situ comparator: same compute, no movement, no spin-up
+    /// (warehouse already running), no failure tax (retries are local and
+    /// cheap — modeled as reliability 1 per the §V.A "resolved the
+    /// reliability issues" outcome).
+    pub fn run_in_situ(&self, compute: Duration, clock: &dyn Clock) -> Duration {
+        clock.sleep(compute);
+        clock.now()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::SimClock;
+
+    #[test]
+    fn remote_pays_movement_and_startup() {
+        let clock = SimClock::new();
+        let mut rng = Rng::new(1);
+        let cluster = RemoteCluster::new(RemoteCostModel {
+            failure_rate: 0.0,
+            ..Default::default()
+        });
+        let out = cluster.run_job(
+            10 << 30, // 10 GiB in
+            1 << 30,  // 1 GiB out
+            Duration::from_secs(60),
+            &clock,
+            &mut rng,
+        );
+        assert_eq!(out.attempts, 1);
+        // 45s startup + ~50s export + ~85s wire + 60s compute + ~14s back.
+        assert!(out.wall > Duration::from_secs(200), "{:?}", out.wall);
+        assert!(out.egress_dollars > 0.4, "{}", out.egress_dollars);
+    }
+
+    #[test]
+    fn in_situ_is_just_compute() {
+        let clock = SimClock::new();
+        let cluster = RemoteCluster::new(RemoteCostModel::default());
+        let wall = cluster.run_in_situ(Duration::from_secs(60), &clock);
+        assert_eq!(wall, Duration::from_secs(60));
+    }
+
+    #[test]
+    fn failures_cause_retries_and_inflate_wall() {
+        let clock_flaky = SimClock::new();
+        let clock_stable = SimClock::new();
+        let mut rng = Rng::new(42);
+        let flaky = RemoteCluster::new(RemoteCostModel {
+            failure_rate: 0.5,
+            ..Default::default()
+        });
+        let stable = RemoteCluster::new(RemoteCostModel {
+            failure_rate: 0.0,
+            ..Default::default()
+        });
+        let mut attempts = 0;
+        for _ in 0..20 {
+            let o = flaky.run_job(1 << 30, 1 << 20, Duration::from_secs(30), &clock_flaky, &mut rng);
+            attempts += o.attempts;
+        }
+        for _ in 0..20 {
+            stable.run_job(1 << 30, 1 << 20, Duration::from_secs(30), &clock_stable, &mut rng);
+        }
+        assert!(attempts > 25, "attempts={attempts}");
+        assert!(clock_flaky.now() > clock_stable.now());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let clock = SimClock::new();
+            let mut rng = Rng::new(9);
+            let c = RemoteCluster::new(RemoteCostModel::default());
+            c.run_job(1 << 28, 1 << 20, Duration::from_secs(10), &clock, &mut rng)
+        };
+        assert_eq!(run(), run());
+    }
+}

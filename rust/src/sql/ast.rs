@@ -1,0 +1,398 @@
+//! SQL abstract syntax tree.
+
+use crate::types::Value;
+
+/// Scalar expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Literal(Value),
+    /// Column reference (already lowercased unless quoted).
+    Column(String),
+    Unary {
+        op: UnaryOp,
+        expr: Box<Expr>,
+    },
+    Binary {
+        op: BinaryOp,
+        left: Box<Expr>,
+        right: Box<Expr>,
+    },
+    /// Function call — builtin scalar, aggregate, or UDF/UDAF; classified
+    /// at plan time. `COUNT(*)` is `Func{name: "count", args: [Star]}`.
+    Func {
+        name: String,
+        args: Vec<Expr>,
+    },
+    /// `*` inside a function call (COUNT(*)) or the select list.
+    Star,
+    IsNull {
+        expr: Box<Expr>,
+        negated: bool,
+    },
+    InList {
+        expr: Box<Expr>,
+        list: Vec<Expr>,
+        negated: bool,
+    },
+    Between {
+        expr: Box<Expr>,
+        low: Box<Expr>,
+        high: Box<Expr>,
+        negated: bool,
+    },
+    Case {
+        /// WHEN cond THEN value pairs.
+        branches: Vec<(Expr, Expr)>,
+        else_value: Option<Box<Expr>>,
+    },
+}
+
+impl Expr {
+    pub fn col(name: &str) -> Expr {
+        Expr::Column(name.to_string())
+    }
+
+    pub fn lit(v: Value) -> Expr {
+        Expr::Literal(v)
+    }
+
+    /// Does this expression (transitively) contain a call to any function
+    /// in `names`? Used by the planner for aggregate detection.
+    pub fn contains_func(&self, pred: &dyn Fn(&str) -> bool) -> bool {
+        match self {
+            Expr::Func { name, args } => {
+                pred(name) || args.iter().any(|a| a.contains_func(pred))
+            }
+            Expr::Unary { expr, .. } => expr.contains_func(pred),
+            Expr::Binary { left, right, .. } => {
+                left.contains_func(pred) || right.contains_func(pred)
+            }
+            Expr::IsNull { expr, .. } => expr.contains_func(pred),
+            Expr::InList { expr, list, .. } => {
+                expr.contains_func(pred) || list.iter().any(|e| e.contains_func(pred))
+            }
+            Expr::Between { expr, low, high, .. } => {
+                expr.contains_func(pred) || low.contains_func(pred) || high.contains_func(pred)
+            }
+            Expr::Case { branches, else_value } => {
+                branches
+                    .iter()
+                    .any(|(c, v)| c.contains_func(pred) || v.contains_func(pred))
+                    || else_value.as_ref().map_or(false, |e| e.contains_func(pred))
+            }
+            _ => false,
+        }
+    }
+
+    /// Column names referenced by this expression.
+    pub fn referenced_columns(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Column(c) => out.push(c.clone()),
+            Expr::Unary { expr, .. } => expr.referenced_columns(out),
+            Expr::Binary { left, right, .. } => {
+                left.referenced_columns(out);
+                right.referenced_columns(out);
+            }
+            Expr::Func { args, .. } => {
+                for a in args {
+                    a.referenced_columns(out);
+                }
+            }
+            Expr::IsNull { expr, .. } => expr.referenced_columns(out),
+            Expr::InList { expr, list, .. } => {
+                expr.referenced_columns(out);
+                for e in list {
+                    e.referenced_columns(out);
+                }
+            }
+            Expr::Between { expr, low, high, .. } => {
+                expr.referenced_columns(out);
+                low.referenced_columns(out);
+                high.referenced_columns(out);
+            }
+            Expr::Case { branches, else_value } => {
+                for (c, v) in branches {
+                    c.referenced_columns(out);
+                    v.referenced_columns(out);
+                }
+                if let Some(e) = else_value {
+                    e.referenced_columns(out);
+                }
+            }
+            Expr::Literal(_) | Expr::Star => {}
+        }
+    }
+
+    /// Render back to SQL text (the DataFrame API builds Expr trees and
+    /// emits SQL through this).
+    pub fn to_sql(&self) -> String {
+        match self {
+            Expr::Literal(Value::Str(s)) => format!("'{}'", s.replace('\'', "''")),
+            Expr::Literal(v) => v.to_string(),
+            Expr::Column(c) => c.clone(),
+            Expr::Star => "*".to_string(),
+            Expr::Unary { op, expr } => match op {
+                UnaryOp::Neg => format!("(-{})", expr.to_sql()),
+                UnaryOp::Not => format!("(NOT {})", expr.to_sql()),
+            },
+            Expr::Binary { op, left, right } => {
+                format!("({} {} {})", left.to_sql(), op.sql(), right.to_sql())
+            }
+            Expr::Func { name, args } => {
+                let args: Vec<String> = args.iter().map(Expr::to_sql).collect();
+                format!("{}({})", name, args.join(", "))
+            }
+            Expr::IsNull { expr, negated } => format!(
+                "({} IS{} NULL)",
+                expr.to_sql(),
+                if *negated { " NOT" } else { "" }
+            ),
+            Expr::InList { expr, list, negated } => {
+                let items: Vec<String> = list.iter().map(Expr::to_sql).collect();
+                format!(
+                    "({}{} IN ({}))",
+                    expr.to_sql(),
+                    if *negated { " NOT" } else { "" },
+                    items.join(", ")
+                )
+            }
+            Expr::Between { expr, low, high, negated } => format!(
+                "({}{} BETWEEN {} AND {})",
+                expr.to_sql(),
+                if *negated { " NOT" } else { "" },
+                low.to_sql(),
+                high.to_sql()
+            ),
+            Expr::Case { branches, else_value } => {
+                let mut s = String::from("CASE");
+                for (c, v) in branches {
+                    s.push_str(&format!(" WHEN {} THEN {}", c.to_sql(), v.to_sql()));
+                }
+                if let Some(e) = else_value {
+                    s.push_str(&format!(" ELSE {}", e.to_sql()));
+                }
+                s.push_str(" END");
+                s
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryOp {
+    Neg,
+    Not,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinaryOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    NotEq,
+    Lt,
+    LtEq,
+    Gt,
+    GtEq,
+    And,
+    Or,
+    Concat,
+}
+
+impl BinaryOp {
+    pub fn sql(&self) -> &'static str {
+        match self {
+            BinaryOp::Add => "+",
+            BinaryOp::Sub => "-",
+            BinaryOp::Mul => "*",
+            BinaryOp::Div => "/",
+            BinaryOp::Mod => "%",
+            BinaryOp::Eq => "=",
+            BinaryOp::NotEq => "<>",
+            BinaryOp::Lt => "<",
+            BinaryOp::LtEq => "<=",
+            BinaryOp::Gt => ">",
+            BinaryOp::GtEq => ">=",
+            BinaryOp::And => "AND",
+            BinaryOp::Or => "OR",
+            BinaryOp::Concat => "||",
+        }
+    }
+}
+
+/// One item in the select list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectItem {
+    /// `*`
+    Wildcard,
+    /// `expr [AS alias]`
+    Expr { expr: Expr, alias: Option<String> },
+}
+
+/// Join type (the engine implements inner and left outer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinKind {
+    Inner,
+    Left,
+}
+
+/// A table reference in FROM.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TableRef {
+    /// Named table in the catalog.
+    Table { name: String, alias: Option<String> },
+    /// `(SELECT ...) alias`
+    Subquery { query: Box<Query>, alias: Option<String> },
+    /// `TABLE(udtf(args...))` — table function (UDTF) invocation.
+    TableFunc {
+        name: String,
+        args: Vec<Expr>,
+        alias: Option<String>,
+    },
+}
+
+/// ORDER BY key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OrderKey {
+    pub expr: Expr,
+    pub descending: bool,
+}
+
+/// A parsed SELECT query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    pub select: Vec<SelectItem>,
+    pub from: Option<TableRef>,
+    pub joins: Vec<(JoinKind, TableRef, Expr)>,
+    pub where_clause: Option<Expr>,
+    pub group_by: Vec<Expr>,
+    pub having: Option<Expr>,
+    pub order_by: Vec<OrderKey>,
+    pub limit: Option<usize>,
+}
+
+impl Query {
+    /// Render back to SQL (round-trip property-tested in the parser).
+    pub fn to_sql(&self) -> String {
+        let mut s = String::from("SELECT ");
+        let items: Vec<String> = self
+            .select
+            .iter()
+            .map(|i| match i {
+                SelectItem::Wildcard => "*".to_string(),
+                SelectItem::Expr { expr, alias } => match alias {
+                    Some(a) => format!("{} AS {}", expr.to_sql(), a),
+                    None => expr.to_sql(),
+                },
+            })
+            .collect();
+        s.push_str(&items.join(", "));
+        if let Some(from) = &self.from {
+            s.push_str(" FROM ");
+            s.push_str(&table_ref_sql(from));
+        }
+        for (kind, t, on) in &self.joins {
+            s.push_str(match kind {
+                JoinKind::Inner => " JOIN ",
+                JoinKind::Left => " LEFT JOIN ",
+            });
+            s.push_str(&table_ref_sql(t));
+            s.push_str(" ON ");
+            s.push_str(&on.to_sql());
+        }
+        if let Some(w) = &self.where_clause {
+            s.push_str(" WHERE ");
+            s.push_str(&w.to_sql());
+        }
+        if !self.group_by.is_empty() {
+            s.push_str(" GROUP BY ");
+            let g: Vec<String> = self.group_by.iter().map(Expr::to_sql).collect();
+            s.push_str(&g.join(", "));
+        }
+        if let Some(h) = &self.having {
+            s.push_str(" HAVING ");
+            s.push_str(&h.to_sql());
+        }
+        if !self.order_by.is_empty() {
+            s.push_str(" ORDER BY ");
+            let o: Vec<String> = self
+                .order_by
+                .iter()
+                .map(|k| {
+                    format!(
+                        "{}{}",
+                        k.expr.to_sql(),
+                        if k.descending { " DESC" } else { "" }
+                    )
+                })
+                .collect();
+            s.push_str(&o.join(", "));
+        }
+        if let Some(n) = self.limit {
+            s.push_str(&format!(" LIMIT {n}"));
+        }
+        s
+    }
+}
+
+fn table_ref_sql(t: &TableRef) -> String {
+    match t {
+        TableRef::Table { name, alias } => match alias {
+            Some(a) => format!("{name} {a}"),
+            None => name.clone(),
+        },
+        TableRef::Subquery { query, alias } => match alias {
+            Some(a) => format!("({}) {a}", query.to_sql()),
+            None => format!("({})", query.to_sql()),
+        },
+        TableRef::TableFunc { name, args, alias } => {
+            let args: Vec<String> = args.iter().map(Expr::to_sql).collect();
+            let base = format!("TABLE({}({}))", name, args.join(", "));
+            match alias {
+                Some(a) => format!("{base} {a}"),
+                None => base,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_helpers() {
+        let e = Expr::Binary {
+            op: BinaryOp::Add,
+            left: Box::new(Expr::col("a")),
+            right: Box::new(Expr::lit(Value::Int(1))),
+        };
+        assert_eq!(e.to_sql(), "(a + 1)");
+        let mut cols = Vec::new();
+        e.referenced_columns(&mut cols);
+        assert_eq!(cols, vec!["a"]);
+    }
+
+    #[test]
+    fn contains_func_transitive() {
+        let e = Expr::Binary {
+            op: BinaryOp::Mul,
+            left: Box::new(Expr::Func {
+                name: "sum".into(),
+                args: vec![Expr::col("x")],
+            }),
+            right: Box::new(Expr::lit(Value::Int(2))),
+        };
+        assert!(e.contains_func(&|n| n == "sum"));
+        assert!(!e.contains_func(&|n| n == "avg"));
+    }
+
+    #[test]
+    fn string_literals_escape() {
+        let e = Expr::lit(Value::Str("it's".into()));
+        assert_eq!(e.to_sql(), "'it''s'");
+    }
+}

@@ -1,0 +1,13 @@
+//! Minimal SQL layer: the substrate the DataFrame API emits into
+//! (§III.A: "The API layer takes Python DataFrame operations, and emits
+//! corresponding SQL statements to execute in Snowflake").
+//!
+//! Pipeline: [`lexer`] → [`parser`] → [`ast`] → `engine::planner`.
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+
+pub use ast::{BinaryOp, Expr, JoinKind, OrderKey, Query, SelectItem, TableRef, UnaryOp};
+pub use lexer::{tokenize, Token};
+pub use parser::parse_query;

@@ -1,0 +1,569 @@
+//! Recursive-descent SQL parser with precedence-climbing expressions.
+
+use anyhow::{bail, Result};
+
+use super::ast::*;
+use super::lexer::{tokenize, Token};
+use crate::types::Value;
+
+/// Parse one SELECT query.
+pub fn parse_query(sql: &str) -> Result<Query> {
+    let tokens = tokenize(sql)?;
+    let mut p = Parser { tokens, pos: 0 };
+    let q = p.query()?;
+    if p.pos != p.tokens.len() {
+        bail!("trailing tokens after query: {:?}", &p.tokens[p.pos..]);
+    }
+    Ok(q)
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Token> {
+        self.tokens.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.tokens.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat_keyword(&mut self, kw: &str) -> bool {
+        if let Some(Token::Ident(w)) = self.peek() {
+            if w == kw {
+                self.pos += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn peek_keyword(&self, kw: &str) -> bool {
+        matches!(self.peek(), Some(Token::Ident(w)) if w == kw)
+    }
+
+    fn expect_keyword(&mut self, kw: &str) -> Result<()> {
+        if self.eat_keyword(kw) {
+            Ok(())
+        } else {
+            bail!("expected {kw:?}, found {:?}", self.peek())
+        }
+    }
+
+    fn expect(&mut self, tok: &Token) -> Result<()> {
+        match self.next() {
+            Some(t) if &t == tok => Ok(()),
+            other => bail!("expected {tok:?}, found {other:?}"),
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next() {
+            Some(Token::Ident(s)) => Ok(s),
+            Some(Token::QuotedIdent(s)) => Ok(s),
+            other => bail!("expected identifier, found {other:?}"),
+        }
+    }
+
+    fn query(&mut self) -> Result<Query> {
+        self.expect_keyword("select")?;
+        let select = self.select_list()?;
+
+        let from = if self.eat_keyword("from") {
+            Some(self.table_ref()?)
+        } else {
+            None
+        };
+
+        let mut joins = Vec::new();
+        loop {
+            let kind = if self.peek_keyword("join") || self.peek_keyword("inner") {
+                self.eat_keyword("inner");
+                self.expect_keyword("join")?;
+                JoinKind::Inner
+            } else if self.peek_keyword("left") {
+                self.eat_keyword("left");
+                self.eat_keyword("outer");
+                self.expect_keyword("join")?;
+                JoinKind::Left
+            } else {
+                break;
+            };
+            let table = self.table_ref()?;
+            self.expect_keyword("on")?;
+            let on = self.expr(0)?;
+            joins.push((kind, table, on));
+        }
+
+        let where_clause = if self.eat_keyword("where") {
+            Some(self.expr(0)?)
+        } else {
+            None
+        };
+
+        let mut group_by = Vec::new();
+        if self.eat_keyword("group") {
+            self.expect_keyword("by")?;
+            loop {
+                group_by.push(self.expr(0)?);
+                if !self.eat_comma() {
+                    break;
+                }
+            }
+        }
+
+        let having = if self.eat_keyword("having") {
+            Some(self.expr(0)?)
+        } else {
+            None
+        };
+
+        let mut order_by = Vec::new();
+        if self.eat_keyword("order") {
+            self.expect_keyword("by")?;
+            loop {
+                let expr = self.expr(0)?;
+                let descending = if self.eat_keyword("desc") {
+                    true
+                } else {
+                    self.eat_keyword("asc");
+                    false
+                };
+                order_by.push(OrderKey { expr, descending });
+                if !self.eat_comma() {
+                    break;
+                }
+            }
+        }
+
+        let limit = if self.eat_keyword("limit") {
+            match self.next() {
+                Some(Token::Int(n)) if n >= 0 => Some(n as usize),
+                other => bail!("LIMIT expects a non-negative integer, found {other:?}"),
+            }
+        } else {
+            None
+        };
+
+        Ok(Query {
+            select,
+            from,
+            joins,
+            where_clause,
+            group_by,
+            having,
+            order_by,
+            limit,
+        })
+    }
+
+    fn eat_comma(&mut self) -> bool {
+        if self.peek() == Some(&Token::Comma) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn select_list(&mut self) -> Result<Vec<SelectItem>> {
+        let mut items = Vec::new();
+        loop {
+            if self.peek() == Some(&Token::Star) {
+                self.pos += 1;
+                items.push(SelectItem::Wildcard);
+            } else {
+                let expr = self.expr(0)?;
+                let alias = if self.eat_keyword("as") {
+                    Some(self.ident()?)
+                } else if let Some(Token::Ident(w)) = self.peek() {
+                    // Bare alias, unless it's a clause keyword.
+                    const CLAUSES: &[&str] = &[
+                        "from", "where", "group", "having", "order", "limit", "join",
+                        "inner", "left", "on",
+                    ];
+                    if CLAUSES.contains(&w.as_str()) {
+                        None
+                    } else {
+                        Some(self.ident()?)
+                    }
+                } else {
+                    None
+                };
+                items.push(SelectItem::Expr { expr, alias });
+            }
+            if !self.eat_comma() {
+                break;
+            }
+        }
+        Ok(items)
+    }
+
+    fn table_ref(&mut self) -> Result<TableRef> {
+        if self.peek() == Some(&Token::LParen) {
+            self.pos += 1;
+            let query = self.query()?;
+            self.expect(&Token::RParen)?;
+            let alias = self.table_alias()?;
+            return Ok(TableRef::Subquery { query: Box::new(query), alias });
+        }
+        if self.peek_keyword("table") {
+            // TABLE(udtf(args...))
+            self.pos += 1;
+            self.expect(&Token::LParen)?;
+            let name = self.ident()?;
+            self.expect(&Token::LParen)?;
+            let mut args = Vec::new();
+            if self.peek() != Some(&Token::RParen) {
+                loop {
+                    args.push(self.expr(0)?);
+                    if !self.eat_comma() {
+                        break;
+                    }
+                }
+            }
+            self.expect(&Token::RParen)?;
+            self.expect(&Token::RParen)?;
+            let alias = self.table_alias()?;
+            return Ok(TableRef::TableFunc { name, args, alias });
+        }
+        let name = self.ident()?;
+        let alias = self.table_alias()?;
+        Ok(TableRef::Table { name, alias })
+    }
+
+    fn table_alias(&mut self) -> Result<Option<String>> {
+        if self.eat_keyword("as") {
+            return Ok(Some(self.ident()?));
+        }
+        if let Some(Token::Ident(w)) = self.peek() {
+            const CLAUSES: &[&str] = &[
+                "where", "group", "having", "order", "limit", "join", "inner", "left", "on",
+            ];
+            if !CLAUSES.contains(&w.as_str()) {
+                return Ok(Some(self.ident()?));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Precedence-climbing expression parser.
+    /// Levels: OR(1) < AND(2) < NOT(3) < cmp/IS/IN/BETWEEN(4) < ||(5)
+    ///         < +-(6) < */%(7) < unary-(8).
+    fn expr(&mut self, min_prec: u8) -> Result<Expr> {
+        let mut lhs = self.prefix()?;
+        loop {
+            let (prec, op) = match self.peek() {
+                Some(Token::Ident(w)) if w == "or" => (1u8, Some(BinaryOp::Or)),
+                Some(Token::Ident(w)) if w == "and" => (2, Some(BinaryOp::And)),
+                Some(Token::Ident(w)) if w == "is" => (4, None),
+                Some(Token::Ident(w)) if w == "in" => (4, None),
+                Some(Token::Ident(w)) if w == "between" => (4, None),
+                Some(Token::Ident(w)) if w == "not" => (4, None),
+                Some(Token::Eq) => (4, Some(BinaryOp::Eq)),
+                Some(Token::NotEq) => (4, Some(BinaryOp::NotEq)),
+                Some(Token::Lt) => (4, Some(BinaryOp::Lt)),
+                Some(Token::LtEq) => (4, Some(BinaryOp::LtEq)),
+                Some(Token::Gt) => (4, Some(BinaryOp::Gt)),
+                Some(Token::GtEq) => (4, Some(BinaryOp::GtEq)),
+                Some(Token::Concat) => (5, Some(BinaryOp::Concat)),
+                Some(Token::Plus) => (6, Some(BinaryOp::Add)),
+                Some(Token::Minus) => (6, Some(BinaryOp::Sub)),
+                Some(Token::Star) => (7, Some(BinaryOp::Mul)),
+                Some(Token::Slash) => (7, Some(BinaryOp::Div)),
+                Some(Token::Percent) => (7, Some(BinaryOp::Mod)),
+                _ => break,
+            };
+            if prec < min_prec {
+                break;
+            }
+            match op {
+                Some(op) => {
+                    self.pos += 1;
+                    let rhs = self.expr(prec + 1)?;
+                    lhs = Expr::Binary { op, left: Box::new(lhs), right: Box::new(rhs) };
+                }
+                None => {
+                    // IS [NOT] NULL / [NOT] IN / [NOT] BETWEEN
+                    if self.eat_keyword("is") {
+                        let negated = self.eat_keyword("not");
+                        self.expect_keyword("null")?;
+                        lhs = Expr::IsNull { expr: Box::new(lhs), negated };
+                    } else if self.eat_keyword("in") {
+                        lhs = self.in_list(lhs, false)?;
+                    } else if self.eat_keyword("between") {
+                        lhs = self.between(lhs, false)?;
+                    } else if self.eat_keyword("not") {
+                        if self.eat_keyword("in") {
+                            lhs = self.in_list(lhs, true)?;
+                        } else if self.eat_keyword("between") {
+                            lhs = self.between(lhs, true)?;
+                        } else {
+                            bail!("expected IN or BETWEEN after NOT");
+                        }
+                    }
+                }
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn in_list(&mut self, lhs: Expr, negated: bool) -> Result<Expr> {
+        self.expect(&Token::LParen)?;
+        let mut list = Vec::new();
+        loop {
+            list.push(self.expr(0)?);
+            if !self.eat_comma() {
+                break;
+            }
+        }
+        self.expect(&Token::RParen)?;
+        Ok(Expr::InList { expr: Box::new(lhs), list, negated })
+    }
+
+    fn between(&mut self, lhs: Expr, negated: bool) -> Result<Expr> {
+        // Parse bounds above AND's precedence so the AND binds to BETWEEN.
+        let low = self.expr(3)?;
+        self.expect_keyword("and")?;
+        let high = self.expr(3)?;
+        Ok(Expr::Between {
+            expr: Box::new(lhs),
+            low: Box::new(low),
+            high: Box::new(high),
+            negated,
+        })
+    }
+
+    fn prefix(&mut self) -> Result<Expr> {
+        match self.next() {
+            Some(Token::Int(v)) => Ok(Expr::Literal(Value::Int(v))),
+            Some(Token::Float(v)) => Ok(Expr::Literal(Value::Float(v))),
+            Some(Token::Str(s)) => Ok(Expr::Literal(Value::Str(s))),
+            Some(Token::Minus) => {
+                let e = self.expr(8)?;
+                Ok(Expr::Unary { op: UnaryOp::Neg, expr: Box::new(e) })
+            }
+            Some(Token::LParen) => {
+                let e = self.expr(0)?;
+                self.expect(&Token::RParen)?;
+                Ok(e)
+            }
+            Some(Token::Star) => Ok(Expr::Star),
+            Some(Token::Ident(w)) => match w.as_str() {
+                "null" => Ok(Expr::Literal(Value::Null)),
+                "true" => Ok(Expr::Literal(Value::Bool(true))),
+                "false" => Ok(Expr::Literal(Value::Bool(false))),
+                "not" => {
+                    let e = self.expr(3)?;
+                    Ok(Expr::Unary { op: UnaryOp::Not, expr: Box::new(e) })
+                }
+                "case" => self.case_expr(),
+                _ => self.ident_or_call(w),
+            },
+            Some(Token::QuotedIdent(s)) => Ok(Expr::Column(s)),
+            other => bail!("unexpected token in expression: {other:?}"),
+        }
+    }
+
+    fn case_expr(&mut self) -> Result<Expr> {
+        let mut branches = Vec::new();
+        let mut else_value = None;
+        loop {
+            if self.eat_keyword("when") {
+                let cond = self.expr(0)?;
+                self.expect_keyword("then")?;
+                let value = self.expr(0)?;
+                branches.push((cond, value));
+            } else if self.eat_keyword("else") {
+                else_value = Some(Box::new(self.expr(0)?));
+            } else if self.eat_keyword("end") {
+                break;
+            } else {
+                bail!("expected WHEN/ELSE/END in CASE, found {:?}", self.peek());
+            }
+        }
+        if branches.is_empty() {
+            bail!("CASE requires at least one WHEN branch");
+        }
+        Ok(Expr::Case { branches, else_value })
+    }
+
+    fn ident_or_call(&mut self, name: String) -> Result<Expr> {
+        if self.peek() == Some(&Token::LParen) {
+            self.pos += 1;
+            let mut args = Vec::new();
+            if self.peek() != Some(&Token::RParen) {
+                loop {
+                    if self.peek() == Some(&Token::Star) {
+                        self.pos += 1;
+                        args.push(Expr::Star);
+                    } else {
+                        args.push(self.expr(0)?);
+                    }
+                    if !self.eat_comma() {
+                        break;
+                    }
+                }
+            }
+            self.expect(&Token::RParen)?;
+            return Ok(Expr::Func { name, args });
+        }
+        // Qualified column `t.c` — the planner resolves on the last part;
+        // we keep the qualifier for disambiguation.
+        if self.peek() == Some(&Token::Dot) {
+            self.pos += 1;
+            let col = self.ident()?;
+            return Ok(Expr::Column(format!("{name}.{col}")));
+        }
+        Ok(Expr::Column(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(sql: &str) -> Query {
+        parse_query(sql).unwrap_or_else(|e| panic!("parse {sql:?}: {e}"))
+    }
+
+    #[test]
+    fn simple_select() {
+        let q = parse("SELECT a, b + 1 AS b1 FROM t WHERE a > 2 LIMIT 10");
+        assert_eq!(q.select.len(), 2);
+        assert!(matches!(&q.from, Some(TableRef::Table { name, .. }) if name == "t"));
+        assert!(q.where_clause.is_some());
+        assert_eq!(q.limit, Some(10));
+    }
+
+    #[test]
+    fn precedence() {
+        let q = parse("SELECT a + b * c FROM t");
+        if let SelectItem::Expr { expr, .. } = &q.select[0] {
+            assert_eq!(expr.to_sql(), "(a + (b * c))");
+        } else {
+            panic!()
+        }
+        let q = parse("SELECT a = 1 OR b = 2 AND c = 3 FROM t");
+        if let SelectItem::Expr { expr, .. } = &q.select[0] {
+            assert_eq!(expr.to_sql(), "((a = 1) OR ((b = 2) AND (c = 3)))");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn group_by_having_order() {
+        let q = parse(
+            "SELECT cat, SUM(x) AS total FROM t GROUP BY cat HAVING SUM(x) > 5 \
+             ORDER BY total DESC, cat LIMIT 3",
+        );
+        assert_eq!(q.group_by.len(), 1);
+        assert!(q.having.is_some());
+        assert_eq!(q.order_by.len(), 2);
+        assert!(q.order_by[0].descending);
+        assert!(!q.order_by[1].descending);
+    }
+
+    #[test]
+    fn joins() {
+        let q = parse("SELECT * FROM a JOIN b ON a.id = b.id LEFT JOIN c ON b.k = c.k");
+        assert_eq!(q.joins.len(), 2);
+        assert_eq!(q.joins[0].0, JoinKind::Inner);
+        assert_eq!(q.joins[1].0, JoinKind::Left);
+    }
+
+    #[test]
+    fn subquery_and_table_func() {
+        let q = parse("SELECT x FROM (SELECT a AS x FROM t) sub WHERE x > 0");
+        assert!(matches!(&q.from, Some(TableRef::Subquery { alias: Some(a), .. }) if a == "sub"));
+        let q = parse("SELECT * FROM TABLE(explode_sessions(10, 'web')) s");
+        match &q.from {
+            Some(TableRef::TableFunc { name, args, alias }) => {
+                assert_eq!(name, "explode_sessions");
+                assert_eq!(args.len(), 2);
+                assert_eq!(alias.as_deref(), Some("s"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn count_star_and_functions() {
+        let q = parse("SELECT COUNT(*), AVG(price), my_udf(a, 2) FROM t");
+        if let SelectItem::Expr { expr, .. } = &q.select[0] {
+            assert_eq!(expr, &Expr::Func { name: "count".into(), args: vec![Expr::Star] });
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn null_predicates_and_in_between() {
+        let q = parse(
+            "SELECT * FROM t WHERE a IS NOT NULL AND b IN (1, 2, 3) \
+             AND c NOT BETWEEN 0 AND 9 AND d IS NULL",
+        );
+        let w = q.where_clause.unwrap().to_sql();
+        assert!(w.contains("IS NOT NULL"), "{w}");
+        assert!(w.contains("IN (1, 2, 3)"), "{w}");
+        assert!(w.contains("NOT BETWEEN 0 AND 9"), "{w}");
+    }
+
+    #[test]
+    fn case_expression() {
+        let q = parse("SELECT CASE WHEN a > 0 THEN 'pos' ELSE 'neg' END AS sign FROM t");
+        if let SelectItem::Expr { expr, alias } = &q.select[0] {
+            assert!(matches!(expr, Expr::Case { .. }));
+            assert_eq!(alias.as_deref(), Some("sign"));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn unary_and_not() {
+        let q = parse("SELECT -a, NOT b FROM t WHERE NOT a > 1");
+        assert_eq!(q.select.len(), 2);
+    }
+
+    #[test]
+    fn round_trip_to_sql() {
+        for sql in [
+            "SELECT a, (b + 1) AS b1 FROM t WHERE (a > 2) LIMIT 10",
+            "SELECT cat, sum(x) AS total FROM sales GROUP BY cat ORDER BY total DESC",
+            "SELECT * FROM a JOIN b ON (a.id = b.id) WHERE (x IS NULL)",
+        ] {
+            let q1 = parse(sql);
+            let q2 = parse(&q1.to_sql());
+            assert_eq!(q1, q2, "round-trip of {sql:?} via {:?}", q1.to_sql());
+        }
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_query("SELECT").is_err());
+        assert!(parse_query("SELECT a FROM").is_err());
+        assert!(parse_query("SELECT a FROM t WHERE").is_err());
+        assert!(parse_query("SELECT a FROM t LIMIT -1").is_err());
+        assert!(parse_query("SELECT a FROM t extra garbage !!").is_err());
+        assert!(parse_query("SELECT CASE END FROM t").is_err());
+    }
+
+    #[test]
+    fn qualified_columns() {
+        let q = parse("SELECT t.a FROM t");
+        if let SelectItem::Expr { expr, .. } = &q.select[0] {
+            assert_eq!(expr, &Expr::Column("t.a".into()));
+        } else {
+            panic!()
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Logical types: scalar values, data types, schemas.
+
+mod rowset;
+mod value;
+
+pub use rowset::{Column, RowSet, RowSetBuilder};
+pub use value::{DataType, Field, Schema, Value};

@@ -1,0 +1,634 @@
+//! Columnar rowsets — the unit of data exchange between operators and the
+//! unit shipped to interpreter processes (§III.B: "worker threads
+//! communicate with the Snowpark Python interpreter processes ... to pass
+//! rowsets for computation").
+//!
+//! Columns are typed vectors with an optional validity mask; a `RowSet`
+//! bundles columns with a schema. All engine operators are vectorized over
+//! rowsets; per-row access exists for the scalar-UDF path.
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::value::{DataType, Schema, Value};
+
+/// A typed column with validity. `valid[i] == false` means NULL.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    Int64 { data: Vec<i64>, valid: Option<Vec<bool>> },
+    Float64 { data: Vec<f64>, valid: Option<Vec<bool>> },
+    Utf8 { data: Vec<String>, valid: Option<Vec<bool>> },
+    Bool { data: Vec<bool>, valid: Option<Vec<bool>> },
+}
+
+impl Column {
+    pub fn data_type(&self) -> DataType {
+        match self {
+            Column::Int64 { .. } => DataType::Int64,
+            Column::Float64 { .. } => DataType::Float64,
+            Column::Utf8 { .. } => DataType::Utf8,
+            Column::Bool { .. } => DataType::Bool,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Int64 { data, .. } => data.len(),
+            Column::Float64 { data, .. } => data.len(),
+            Column::Utf8 { data, .. } => data.len(),
+            Column::Bool { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn from_i64(data: Vec<i64>) -> Self {
+        Column::Int64 { data, valid: None }
+    }
+
+    pub fn from_f64(data: Vec<f64>) -> Self {
+        Column::Float64 { data, valid: None }
+    }
+
+    pub fn from_strings(data: Vec<String>) -> Self {
+        Column::Utf8 { data, valid: None }
+    }
+
+    pub fn from_bools(data: Vec<bool>) -> Self {
+        Column::Bool { data, valid: None }
+    }
+
+    pub fn empty(dt: DataType) -> Self {
+        match dt {
+            DataType::Int64 => Column::Int64 { data: vec![], valid: None },
+            DataType::Float64 => Column::Float64 { data: vec![], valid: None },
+            DataType::Utf8 => Column::Utf8 { data: vec![], valid: None },
+            DataType::Bool => Column::Bool { data: vec![], valid: None },
+        }
+    }
+
+    #[inline]
+    pub fn is_valid(&self, idx: usize) -> bool {
+        let valid = match self {
+            Column::Int64 { valid, .. } => valid,
+            Column::Float64 { valid, .. } => valid,
+            Column::Utf8 { valid, .. } => valid,
+            Column::Bool { valid, .. } => valid,
+        };
+        valid.as_ref().map_or(true, |v| v[idx])
+    }
+
+    /// Scalar view of one cell.
+    pub fn value(&self, idx: usize) -> Value {
+        if !self.is_valid(idx) {
+            return Value::Null;
+        }
+        match self {
+            Column::Int64 { data, .. } => Value::Int(data[idx]),
+            Column::Float64 { data, .. } => Value::Float(data[idx]),
+            Column::Utf8 { data, .. } => Value::Str(data[idx].clone()),
+            Column::Bool { data, .. } => Value::Bool(data[idx]),
+        }
+    }
+
+    /// Fast typed accessors for vectorized paths (no Value allocation).
+    pub fn f64_data(&self) -> Option<&[f64]> {
+        match self {
+            Column::Float64 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn i64_data(&self) -> Option<&[i64]> {
+        match self {
+            Column::Int64 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// Lossy f32 view for the XLA marshalling path (Int64/Float64 only).
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        match self {
+            Column::Float64 { data, .. } => Ok(data.iter().map(|&v| v as f32).collect()),
+            Column::Int64 { data, .. } => Ok(data.iter().map(|&v| v as f32).collect()),
+            other => bail!("cannot marshal {:?} column to f32", other.data_type()),
+        }
+    }
+
+    /// Build a value-by-value column of the given type.
+    pub fn from_values(dt: DataType, values: &[Value]) -> Result<Self> {
+        let n = values.len();
+        let mut valid = vec![true; n];
+        let mut any_null = false;
+        let col = match dt {
+            DataType::Int64 => {
+                let mut data = Vec::with_capacity(n);
+                for (i, v) in values.iter().enumerate() {
+                    match v {
+                        Value::Null => {
+                            valid[i] = false;
+                            any_null = true;
+                            data.push(0);
+                        }
+                        other => data.push(
+                            other
+                                .as_i64()
+                                .ok_or_else(|| anyhow!("expected INT, got {other}"))?,
+                        ),
+                    }
+                }
+                Column::Int64 { data, valid: any_null.then_some(valid) }
+            }
+            DataType::Float64 => {
+                let mut data = Vec::with_capacity(n);
+                for (i, v) in values.iter().enumerate() {
+                    match v {
+                        Value::Null => {
+                            valid[i] = false;
+                            any_null = true;
+                            data.push(0.0);
+                        }
+                        other => data.push(
+                            other
+                                .as_f64()
+                                .ok_or_else(|| anyhow!("expected DOUBLE, got {other}"))?,
+                        ),
+                    }
+                }
+                Column::Float64 { data, valid: any_null.then_some(valid) }
+            }
+            DataType::Utf8 => {
+                let mut data = Vec::with_capacity(n);
+                for (i, v) in values.iter().enumerate() {
+                    match v {
+                        Value::Null => {
+                            valid[i] = false;
+                            any_null = true;
+                            data.push(String::new());
+                        }
+                        Value::Str(s) => data.push(s.clone()),
+                        other => data.push(other.to_string()),
+                    }
+                }
+                Column::Utf8 { data, valid: any_null.then_some(valid) }
+            }
+            DataType::Bool => {
+                let mut data = Vec::with_capacity(n);
+                for (i, v) in values.iter().enumerate() {
+                    match v {
+                        Value::Null => {
+                            valid[i] = false;
+                            any_null = true;
+                            data.push(false);
+                        }
+                        other => data.push(
+                            other
+                                .as_bool()
+                                .ok_or_else(|| anyhow!("expected BOOLEAN, got {other}"))?,
+                        ),
+                    }
+                }
+                Column::Bool { data, valid: any_null.then_some(valid) }
+            }
+        };
+        Ok(col)
+    }
+
+    /// Select the rows where `mask` is true.
+    pub fn filter(&self, mask: &[bool]) -> Column {
+        assert_eq!(mask.len(), self.len());
+        let idx: Vec<usize> = mask
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &keep)| keep.then_some(i))
+            .collect();
+        self.take(&idx)
+    }
+
+    /// Gather rows by index.
+    pub fn take(&self, indices: &[usize]) -> Column {
+        fn take_valid(valid: &Option<Vec<bool>>, idx: &[usize]) -> Option<Vec<bool>> {
+            valid
+                .as_ref()
+                .map(|v| idx.iter().map(|&i| v[i]).collect())
+        }
+        match self {
+            Column::Int64 { data, valid } => Column::Int64 {
+                data: indices.iter().map(|&i| data[i]).collect(),
+                valid: take_valid(valid, indices),
+            },
+            Column::Float64 { data, valid } => Column::Float64 {
+                data: indices.iter().map(|&i| data[i]).collect(),
+                valid: take_valid(valid, indices),
+            },
+            Column::Utf8 { data, valid } => Column::Utf8 {
+                data: indices.iter().map(|&i| data[i].clone()).collect(),
+                valid: take_valid(valid, indices),
+            },
+            Column::Bool { data, valid } => Column::Bool {
+                data: indices.iter().map(|&i| data[i]).collect(),
+                valid: take_valid(valid, indices),
+            },
+        }
+    }
+
+    /// Zero-extend this column with the rows of `other` (same type).
+    pub fn append(&mut self, other: &Column) -> Result<()> {
+        if self.data_type() != other.data_type() {
+            bail!(
+                "append type mismatch: {:?} vs {:?}",
+                self.data_type(),
+                other.data_type()
+            );
+        }
+        let self_len = self.len();
+        let other_len = other.len();
+        fn merge_valid(
+            a: &mut Option<Vec<bool>>,
+            b: &Option<Vec<bool>>,
+            a_len: usize,
+            b_len: usize,
+        ) {
+            if a.is_none() && b.is_none() {
+                return;
+            }
+            let mut v = a.take().unwrap_or_else(|| vec![true; a_len]);
+            match b {
+                Some(bv) => v.extend_from_slice(bv),
+                None => v.extend(std::iter::repeat(true).take(b_len)),
+            }
+            *a = Some(v);
+        }
+        match (self, other) {
+            (Column::Int64 { data: a, valid: va }, Column::Int64 { data: b, valid: vb }) => {
+                merge_valid(va, vb, self_len, other_len);
+                a.extend_from_slice(b);
+            }
+            (Column::Float64 { data: a, valid: va }, Column::Float64 { data: b, valid: vb }) => {
+                merge_valid(va, vb, self_len, other_len);
+                a.extend_from_slice(b);
+            }
+            (Column::Utf8 { data: a, valid: va }, Column::Utf8 { data: b, valid: vb }) => {
+                merge_valid(va, vb, self_len, other_len);
+                a.extend_from_slice(b);
+            }
+            (Column::Bool { data: a, valid: va }, Column::Bool { data: b, valid: vb }) => {
+                merge_valid(va, vb, self_len, other_len);
+                a.extend_from_slice(b);
+            }
+            _ => unreachable!("type equality checked above"),
+        }
+        Ok(())
+    }
+
+    /// Contiguous slice [offset, offset+len).
+    pub fn slice(&self, offset: usize, len: usize) -> Column {
+        let idx: Vec<usize> = (offset..offset + len).collect();
+        self.take(&idx)
+    }
+
+    /// Approximate in-memory footprint in bytes (for memory accounting).
+    pub fn byte_size(&self) -> u64 {
+        let base = match self {
+            Column::Int64 { data, .. } => data.len() * 8,
+            Column::Float64 { data, .. } => data.len() * 8,
+            Column::Utf8 { data, .. } => data.iter().map(|s| s.len() + 24).sum(),
+            Column::Bool { data, .. } => data.len(),
+        };
+        base as u64
+    }
+}
+
+/// A batch of rows in columnar layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowSet {
+    pub schema: Schema,
+    pub columns: Vec<Column>,
+}
+
+impl RowSet {
+    pub fn new(schema: Schema, columns: Vec<Column>) -> Result<Self> {
+        if schema.len() != columns.len() {
+            bail!(
+                "schema has {} fields but {} columns given",
+                schema.len(),
+                columns.len()
+            );
+        }
+        let mut len = None;
+        for (f, c) in schema.fields.iter().zip(&columns) {
+            if f.data_type != c.data_type() {
+                bail!(
+                    "column {} declared {} but is {:?}",
+                    f.name,
+                    f.data_type,
+                    c.data_type()
+                );
+            }
+            match len {
+                None => len = Some(c.len()),
+                Some(l) if l != c.len() => {
+                    bail!("ragged rowset: {} vs {} rows", l, c.len())
+                }
+                _ => {}
+            }
+        }
+        Ok(Self { schema, columns })
+    }
+
+    pub fn empty(schema: Schema) -> Self {
+        let columns = schema
+            .fields
+            .iter()
+            .map(|f| Column::empty(f.data_type))
+            .collect();
+        Self { schema, columns }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.columns.first().map_or(0, Column::len)
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn column(&self, idx: usize) -> &Column {
+        &self.columns[idx]
+    }
+
+    pub fn column_by_name(&self, name: &str) -> Option<&Column> {
+        self.schema.index_of(name).map(|i| &self.columns[i])
+    }
+
+    /// One row as scalars (scalar-UDF path, result printing).
+    pub fn row(&self, idx: usize) -> Vec<Value> {
+        self.columns.iter().map(|c| c.value(idx)).collect()
+    }
+
+    pub fn filter(&self, mask: &[bool]) -> RowSet {
+        RowSet {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.filter(mask)).collect(),
+        }
+    }
+
+    pub fn take(&self, indices: &[usize]) -> RowSet {
+        RowSet {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.take(indices)).collect(),
+        }
+    }
+
+    pub fn slice(&self, offset: usize, len: usize) -> RowSet {
+        RowSet {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.slice(offset, len)).collect(),
+        }
+    }
+
+    pub fn append(&mut self, other: &RowSet) -> Result<()> {
+        if self.schema != other.schema {
+            bail!("append schema mismatch");
+        }
+        for (a, b) in self.columns.iter_mut().zip(&other.columns) {
+            a.append(b)?;
+        }
+        Ok(())
+    }
+
+    /// Split into batches of at most `batch_rows` rows.
+    pub fn batches(&self, batch_rows: usize) -> Vec<RowSet> {
+        assert!(batch_rows > 0);
+        let n = self.num_rows();
+        let mut out = Vec::with_capacity(n.div_ceil(batch_rows));
+        let mut off = 0;
+        while off < n {
+            let len = batch_rows.min(n - off);
+            out.push(self.slice(off, len));
+            off += len;
+        }
+        out
+    }
+
+    pub fn byte_size(&self) -> u64 {
+        self.columns.iter().map(Column::byte_size).sum()
+    }
+}
+
+impl fmt::Display for RowSet {
+    /// Pretty table (examples and the CLI REPL use this).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let names = self.schema.names();
+        let mut widths: Vec<usize> = names.iter().map(|n| n.len()).collect();
+        let n = self.num_rows().min(50);
+        let mut rendered: Vec<Vec<String>> = Vec::with_capacity(n);
+        for r in 0..n {
+            let row: Vec<String> = self.row(r).iter().map(|v| v.to_string()).collect();
+            for (w, cell) in widths.iter_mut().zip(&row) {
+                *w = (*w).max(cell.len());
+            }
+            rendered.push(row);
+        }
+        let sep = |f: &mut fmt::Formatter<'_>| -> fmt::Result {
+            write!(f, "+")?;
+            for w in &widths {
+                write!(f, "{}+", "-".repeat(w + 2))?;
+            }
+            writeln!(f)
+        };
+        sep(f)?;
+        write!(f, "|")?;
+        for (name, w) in names.iter().zip(&widths) {
+            write!(f, " {name:<w$} |")?;
+        }
+        writeln!(f)?;
+        sep(f)?;
+        for row in &rendered {
+            write!(f, "|")?;
+            for (cell, w) in row.iter().zip(&widths) {
+                write!(f, " {cell:<w$} |")?;
+            }
+            writeln!(f)?;
+        }
+        sep(f)?;
+        if self.num_rows() > n {
+            writeln!(f, "... {} more rows", self.num_rows() - n)?;
+        }
+        Ok(())
+    }
+}
+
+/// Row-at-a-time builder (UDTF output, test fixtures, CSV ingest).
+#[derive(Debug)]
+pub struct RowSetBuilder {
+    schema: Schema,
+    rows: Vec<Vec<Value>>,
+}
+
+impl RowSetBuilder {
+    pub fn new(schema: Schema) -> Self {
+        Self { schema, rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<Value>) -> Result<()> {
+        if row.len() != self.schema.len() {
+            bail!(
+                "row has {} values, schema has {} fields",
+                row.len(),
+                self.schema.len()
+            );
+        }
+        self.rows.push(row);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn finish(self) -> Result<RowSet> {
+        let n_cols = self.schema.len();
+        let mut columns = Vec::with_capacity(n_cols);
+        for c in 0..n_cols {
+            let values: Vec<Value> = self.rows.iter().map(|r| r[c].clone()).collect();
+            columns.push(Column::from_values(self.schema.field(c).data_type, &values)?);
+        }
+        RowSet::new(self.schema, columns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Field;
+
+    fn sample() -> RowSet {
+        RowSet::new(
+            Schema::new(vec![
+                Field::new("id", DataType::Int64),
+                Field::new("price", DataType::Float64),
+                Field::new("name", DataType::Utf8),
+            ]),
+            vec![
+                Column::from_i64(vec![1, 2, 3, 4]),
+                Column::from_f64(vec![10.0, 20.0, 30.0, 40.0]),
+                Column::from_strings(vec!["a".into(), "b".into(), "c".into(), "d".into()]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_validates() {
+        let schema = Schema::new(vec![Field::new("x", DataType::Int64)]);
+        assert!(RowSet::new(schema.clone(), vec![]).is_err()); // arity
+        assert!(RowSet::new(schema.clone(), vec![Column::from_f64(vec![1.0])]).is_err()); // type
+        let schema2 = Schema::new(vec![
+            Field::new("x", DataType::Int64),
+            Field::new("y", DataType::Int64),
+        ]);
+        assert!(RowSet::new(
+            schema2,
+            vec![Column::from_i64(vec![1]), Column::from_i64(vec![1, 2])]
+        )
+        .is_err()); // ragged
+    }
+
+    #[test]
+    fn filter_take_slice() {
+        let rs = sample();
+        let filtered = rs.filter(&[true, false, true, false]);
+        assert_eq!(filtered.num_rows(), 2);
+        assert_eq!(filtered.column(0).value(1), Value::Int(3));
+
+        let taken = rs.take(&[3, 0]);
+        assert_eq!(taken.row(0), vec![
+            Value::Int(4),
+            Value::Float(40.0),
+            Value::Str("d".into())
+        ]);
+
+        let sliced = rs.slice(1, 2);
+        assert_eq!(sliced.num_rows(), 2);
+        assert_eq!(sliced.column(0).value(0), Value::Int(2));
+    }
+
+    #[test]
+    fn append_and_batches() {
+        let mut a = sample();
+        let b = sample();
+        a.append(&b).unwrap();
+        assert_eq!(a.num_rows(), 8);
+        let batches = a.batches(3);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].num_rows(), 3);
+        assert_eq!(batches[2].num_rows(), 2);
+        let total: usize = batches.iter().map(RowSet::num_rows).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn nulls_round_trip_through_builder() {
+        let schema = Schema::new(vec![
+            Field::new("x", DataType::Int64),
+            Field::new("s", DataType::Utf8),
+        ]);
+        let mut b = RowSetBuilder::new(schema);
+        b.push(vec![Value::Int(1), Value::Null]).unwrap();
+        b.push(vec![Value::Null, Value::Str("hi".into())]).unwrap();
+        let rs = b.finish().unwrap();
+        assert_eq!(rs.row(0), vec![Value::Int(1), Value::Null]);
+        assert_eq!(rs.row(1), vec![Value::Null, Value::Str("hi".into())]);
+    }
+
+    #[test]
+    fn builder_rejects_wrong_arity_and_type() {
+        let schema = Schema::new(vec![Field::new("x", DataType::Int64)]);
+        let mut b = RowSetBuilder::new(schema.clone());
+        assert!(b.push(vec![Value::Int(1), Value::Int(2)]).is_err());
+        let mut b = RowSetBuilder::new(schema);
+        b.push(vec![Value::Str("nope".into())]).unwrap();
+        assert!(b.finish().is_err());
+    }
+
+    #[test]
+    fn f32_marshalling() {
+        let c = Column::from_f64(vec![1.5, -2.5]);
+        assert_eq!(c.to_f32_vec().unwrap(), vec![1.5f32, -2.5f32]);
+        let c = Column::from_i64(vec![3]);
+        assert_eq!(c.to_f32_vec().unwrap(), vec![3.0f32]);
+        let c = Column::from_strings(vec!["x".into()]);
+        assert!(c.to_f32_vec().is_err());
+    }
+
+    #[test]
+    fn append_merges_validity() {
+        let mut a = Column::from_i64(vec![1, 2]);
+        let b = Column::Int64 { data: vec![3, 4], valid: Some(vec![true, false]) };
+        a.append(&b).unwrap();
+        assert_eq!(a.len(), 4);
+        assert!(a.is_valid(0) && a.is_valid(2) && !a.is_valid(3));
+        assert_eq!(a.value(3), Value::Null);
+    }
+
+    #[test]
+    fn display_renders_table() {
+        let s = sample().to_string();
+        assert!(s.contains("| id | price | name |"), "{s}");
+        assert!(s.contains("| 1  | 10.0  | a    |"), "{s}");
+    }
+
+    #[test]
+    fn byte_size_accounts_strings() {
+        let rs = sample();
+        assert!(rs.byte_size() > 4 * 16);
+    }
+}

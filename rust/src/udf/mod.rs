@@ -1,0 +1,16 @@
+//! User-defined function framework (§III.A): scalar UDFs (per-row),
+//! vectorized UDFs (per-batch, Pandas-style — here backed by the AOT
+//! XLA kernels), table functions (UDTFs), and aggregate functions (UDAFs).
+//!
+//! The registry stores definitions; execution happens either inline (for
+//! expression evaluation) or through the warehouse interpreter pool (the
+//! `warehouse::interp` module), which is where the §IV.C redistribution
+//! decision lives.
+
+mod registry;
+mod stats;
+
+pub use registry::{
+    ScalarFn, Udaf, UdafFactory, UdafState, Udf, UdfKind, UdfRegistry, Udtf, VectorizedFn,
+};
+pub use stats::{UdfStats, UdfStatsStore};

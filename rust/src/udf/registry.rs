@@ -1,0 +1,348 @@
+//! UDF registry: definitions for scalar / vectorized / table / aggregate
+//! user functions.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::types::{DataType, RowSet, Schema, Value};
+
+/// A scalar UDF body: one row of argument values in, one value out.
+/// This models the paper's row-at-a-time Python UDF.
+pub type ScalarFn = Arc<dyn Fn(&[Value]) -> Result<Value> + Send + Sync>;
+
+/// A vectorized UDF body: a batch of argument columns in (as a RowSet),
+/// one output column of f64 values out. Models the paper's vectorized
+/// (Pandas-DataFrame) UDF interface; the XLA-backed implementations
+/// (`runtime::kernels`) plug in through this same type.
+pub type VectorizedFn = Arc<dyn Fn(&RowSet) -> Result<Vec<f64>> + Send + Sync>;
+
+/// UDTF: rows of argument values in, a table out.
+pub type UdtfFn = Arc<dyn Fn(&[Value]) -> Result<RowSet> + Send + Sync>;
+
+/// UDAF incremental state.
+pub trait UdafState: Send {
+    fn update(&mut self, args: &[Value]) -> Result<()>;
+    /// Merge another state of the same UDAF (parallel partial aggregation).
+    fn merge(&mut self, other: Box<dyn UdafState>) -> Result<()>;
+    fn finish(&self) -> Result<Value>;
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Factory producing fresh UDAF states.
+pub type UdafFactory = Arc<dyn Fn() -> Box<dyn UdafState> + Send + Sync>;
+
+/// What kind of UDF a name refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UdfKind {
+    Scalar,
+    Vectorized,
+    Table,
+    Aggregate,
+}
+
+/// A registered scalar UDF.
+#[derive(Clone)]
+pub struct Udf {
+    pub name: String,
+    pub return_type: DataType,
+    pub body: ScalarFn,
+    /// Estimated per-row cost in nanoseconds, used to seed the §IV.C
+    /// redistribution decision before history exists.
+    pub est_row_cost_ns: u64,
+    /// Packages this UDF imports (drives the §IV.A package-cache path).
+    pub packages: Vec<String>,
+}
+
+/// A registered vectorized UDF.
+#[derive(Clone)]
+pub struct VectorizedUdf {
+    pub name: String,
+    pub return_type: DataType,
+    pub body: VectorizedFn,
+    pub packages: Vec<String>,
+}
+
+/// A registered table function.
+#[derive(Clone)]
+pub struct Udtf {
+    pub name: String,
+    pub schema: Schema,
+    pub body: UdtfFn,
+    pub packages: Vec<String>,
+}
+
+/// A registered aggregate function.
+#[derive(Clone)]
+pub struct Udaf {
+    pub name: String,
+    pub return_type: DataType,
+    pub factory: UdafFactory,
+    pub packages: Vec<String>,
+}
+
+/// The registry: one namespace per function kind, like Snowflake's
+/// function catalog.
+#[derive(Default, Clone)]
+pub struct UdfRegistry {
+    scalars: HashMap<String, Udf>,
+    vectorized: HashMap<String, VectorizedUdf>,
+    tables: HashMap<String, Udtf>,
+    aggregates: HashMap<String, Udaf>,
+}
+
+impl UdfRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register_scalar(
+        &mut self,
+        name: &str,
+        return_type: DataType,
+        body: ScalarFn,
+    ) -> &mut Udf {
+        let name = name.to_ascii_lowercase();
+        self.scalars.insert(
+            name.clone(),
+            Udf {
+                name: name.clone(),
+                return_type,
+                body,
+                est_row_cost_ns: 1_000,
+                packages: Vec::new(),
+            },
+        );
+        self.scalars.get_mut(&name).unwrap()
+    }
+
+    pub fn register_vectorized(
+        &mut self,
+        name: &str,
+        return_type: DataType,
+        body: VectorizedFn,
+    ) {
+        let name = name.to_ascii_lowercase();
+        self.vectorized.insert(
+            name.clone(),
+            VectorizedUdf { name, return_type, body, packages: Vec::new() },
+        );
+    }
+
+    pub fn register_udtf(&mut self, name: &str, schema: Schema, body: UdtfFn) {
+        let name = name.to_ascii_lowercase();
+        self.tables
+            .insert(name.clone(), Udtf { name, schema, body, packages: Vec::new() });
+    }
+
+    pub fn register_udaf(&mut self, name: &str, return_type: DataType, factory: UdafFactory) {
+        let name = name.to_ascii_lowercase();
+        self.aggregates.insert(
+            name.clone(),
+            Udaf { name, return_type, factory, packages: Vec::new() },
+        );
+    }
+
+    /// Attach required packages to a registered function (any kind).
+    pub fn set_packages(&mut self, name: &str, packages: &[&str]) {
+        let name = name.to_ascii_lowercase();
+        let pkgs: Vec<String> = packages.iter().map(|s| s.to_string()).collect();
+        if let Some(u) = self.scalars.get_mut(&name) {
+            u.packages = pkgs.clone();
+        }
+        if let Some(u) = self.vectorized.get_mut(&name) {
+            u.packages = pkgs.clone();
+        }
+        if let Some(u) = self.tables.get_mut(&name) {
+            u.packages = pkgs.clone();
+        }
+        if let Some(u) = self.aggregates.get_mut(&name) {
+            u.packages = pkgs;
+        }
+    }
+
+    /// Set the estimated per-row cost of a scalar UDF (nanoseconds).
+    pub fn set_row_cost(&mut self, name: &str, ns: u64) {
+        if let Some(u) = self.scalars.get_mut(&name.to_ascii_lowercase()) {
+            u.est_row_cost_ns = ns;
+        }
+    }
+
+    pub fn kind_of(&self, name: &str) -> Option<UdfKind> {
+        let name = name.to_ascii_lowercase();
+        if self.scalars.contains_key(&name) {
+            Some(UdfKind::Scalar)
+        } else if self.vectorized.contains_key(&name) {
+            Some(UdfKind::Vectorized)
+        } else if self.tables.contains_key(&name) {
+            Some(UdfKind::Table)
+        } else if self.aggregates.contains_key(&name) {
+            Some(UdfKind::Aggregate)
+        } else {
+            None
+        }
+    }
+
+    pub fn has_scalar(&self, name: &str) -> bool {
+        self.scalars.contains_key(&name.to_ascii_lowercase())
+    }
+
+    pub fn has_vectorized(&self, name: &str) -> bool {
+        self.vectorized.contains_key(&name.to_ascii_lowercase())
+    }
+
+    pub fn has_udaf(&self, name: &str) -> bool {
+        self.aggregates.contains_key(&name.to_ascii_lowercase())
+    }
+
+    pub fn scalar(&self, name: &str) -> Option<&Udf> {
+        self.scalars.get(&name.to_ascii_lowercase())
+    }
+
+    pub fn vectorized(&self, name: &str) -> Option<&VectorizedUdf> {
+        self.vectorized.get(&name.to_ascii_lowercase())
+    }
+
+    pub fn udtf(&self, name: &str) -> Option<&Udtf> {
+        self.tables.get(&name.to_ascii_lowercase())
+    }
+
+    pub fn udaf(&self, name: &str) -> Option<&Udaf> {
+        self.aggregates.get(&name.to_ascii_lowercase())
+    }
+
+    pub fn call_scalar(&self, name: &str, args: &[Value]) -> Result<Value> {
+        let udf = self
+            .scalar(name)
+            .ok_or_else(|| anyhow!("no scalar UDF named {name:?}"))?;
+        (udf.body)(args)
+    }
+
+    pub fn call_udtf(&self, name: &str, args: &[Value]) -> Result<RowSet> {
+        let udtf = self
+            .udtf(name)
+            .ok_or_else(|| anyhow!("no UDTF named {name:?}"))?;
+        let out = (udtf.body)(args)?;
+        if out.schema != udtf.schema {
+            bail!("UDTF {name:?} returned a rowset with an unexpected schema");
+        }
+        Ok(out)
+    }
+
+    pub fn scalar_return_type(&self, name: &str) -> Option<DataType> {
+        let name = name.to_ascii_lowercase();
+        self.scalars
+            .get(&name)
+            .map(|u| u.return_type)
+            .or_else(|| self.vectorized.get(&name).map(|u| u.return_type))
+            .or_else(|| self.aggregates.get(&name).map(|u| u.return_type))
+    }
+
+    /// Union of packages required by the given function names — the input
+    /// to the §IV.A package solving/caching pipeline for a query.
+    pub fn packages_for(&self, names: &[String]) -> Vec<String> {
+        let mut pkgs: Vec<String> = Vec::new();
+        for n in names {
+            let n = n.to_ascii_lowercase();
+            let list = self
+                .scalars
+                .get(&n)
+                .map(|u| &u.packages)
+                .or_else(|| self.vectorized.get(&n).map(|u| &u.packages))
+                .or_else(|| self.tables.get(&n).map(|u| &u.packages))
+                .or_else(|| self.aggregates.get(&n).map(|u| &u.packages));
+            if let Some(list) = list {
+                for p in list {
+                    if !pkgs.contains(p) {
+                        pkgs.push(p.clone());
+                    }
+                }
+            }
+        }
+        pkgs.sort();
+        pkgs
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .scalars
+            .keys()
+            .chain(self.vectorized.keys())
+            .chain(self.tables.keys())
+            .chain(self.aggregates.keys())
+            .cloned()
+            .collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Field;
+
+    fn registry() -> UdfRegistry {
+        let mut r = UdfRegistry::new();
+        r.register_scalar(
+            "double_it",
+            DataType::Float64,
+            Arc::new(|args| {
+                let x = args[0].as_f64().unwrap_or(0.0);
+                Ok(Value::Float(x * 2.0))
+            }),
+        );
+        r
+    }
+
+    #[test]
+    fn scalar_registration_and_call() {
+        let r = registry();
+        assert!(r.has_scalar("double_it"));
+        assert!(r.has_scalar("DOUBLE_IT")); // case-insensitive
+        assert_eq!(r.kind_of("double_it"), Some(UdfKind::Scalar));
+        let v = r.call_scalar("double_it", &[Value::Float(3.0)]).unwrap();
+        assert_eq!(v, Value::Float(6.0));
+        assert!(r.call_scalar("missing", &[]).is_err());
+    }
+
+    #[test]
+    fn udtf_schema_enforced() {
+        let mut r = UdfRegistry::new();
+        let schema = Schema::new(vec![Field::new("n", DataType::Int64)]);
+        let schema2 = schema.clone();
+        r.register_udtf(
+            "range_table",
+            schema,
+            Arc::new(move |args| {
+                let n = args[0].as_i64().unwrap_or(0);
+                let col = crate::types::Column::from_i64((0..n).collect());
+                RowSet::new(schema2.clone(), vec![col])
+            }),
+        );
+        let out = r.call_udtf("range_table", &[Value::Int(4)]).unwrap();
+        assert_eq!(out.num_rows(), 4);
+    }
+
+    #[test]
+    fn packages_union_sorted_dedup() {
+        let mut r = registry();
+        r.set_packages("double_it", &["numpy", "pandas"]);
+        r.register_scalar(
+            "other",
+            DataType::Float64,
+            Arc::new(|_| Ok(Value::Null)),
+        );
+        r.set_packages("other", &["numpy", "scikit-learn"]);
+        let pkgs = r.packages_for(&["double_it".into(), "other".into()]);
+        assert_eq!(pkgs, vec!["numpy", "pandas", "scikit-learn"]);
+    }
+
+    #[test]
+    fn row_cost_settable() {
+        let mut r = registry();
+        r.set_row_cost("double_it", 50_000);
+        assert_eq!(r.scalar("double_it").unwrap().est_row_cost_ns, 50_000);
+    }
+}

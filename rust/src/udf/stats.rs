@@ -1,0 +1,110 @@
+//! Historical per-UDF execution statistics.
+//!
+//! §IV.C: "we examine the workload's per-row execution time from
+//! historical stats and define a threshold (T) to determine whether it is
+//! worth row level redistribution." This store tracks an exponentially
+//! weighted per-row cost per UDF, fed by the interpreter pool after each
+//! batch.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Aggregated execution stats for one UDF.
+#[derive(Debug, Clone, Default)]
+pub struct UdfStats {
+    /// EWMA of per-row execution time in nanoseconds.
+    pub ewma_row_ns: f64,
+    /// Total rows processed (all time).
+    pub total_rows: u64,
+    /// Total batches processed.
+    pub total_batches: u64,
+}
+
+/// Thread-safe store of per-UDF stats.
+#[derive(Debug, Default)]
+pub struct UdfStatsStore {
+    inner: Mutex<HashMap<String, UdfStats>>,
+    /// EWMA smoothing factor.
+    alpha: f64,
+}
+
+impl UdfStatsStore {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(HashMap::new()), alpha: 0.3 }
+    }
+
+    /// Record one executed batch: `rows` rows in `elapsed_ns` total.
+    pub fn record_batch(&self, udf: &str, rows: u64, elapsed_ns: u64) {
+        if rows == 0 {
+            return;
+        }
+        let per_row = elapsed_ns as f64 / rows as f64;
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner.entry(udf.to_string()).or_default();
+        if e.total_batches == 0 {
+            e.ewma_row_ns = per_row;
+        } else {
+            e.ewma_row_ns = self.alpha * per_row + (1.0 - self.alpha) * e.ewma_row_ns;
+        }
+        e.total_rows += rows;
+        e.total_batches += 1;
+    }
+
+    /// Historical per-row cost, if any executions have been observed.
+    pub fn row_cost_ns(&self, udf: &str) -> Option<f64> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .get(udf)
+            .filter(|s| s.total_batches > 0)
+            .map(|s| s.ewma_row_ns)
+    }
+
+    pub fn get(&self, udf: &str) -> Option<UdfStats> {
+        self.inner.lock().unwrap().get(udf).cloned()
+    }
+
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_batch_seeds_ewma() {
+        let s = UdfStatsStore::new();
+        assert_eq!(s.row_cost_ns("f"), None);
+        s.record_batch("f", 100, 1_000_000); // 10µs/row
+        assert_eq!(s.row_cost_ns("f"), Some(10_000.0));
+    }
+
+    #[test]
+    fn ewma_moves_toward_new_observations() {
+        let s = UdfStatsStore::new();
+        s.record_batch("f", 100, 1_000_000); // 10µs/row
+        s.record_batch("f", 100, 3_000_000); // 30µs/row
+        let v = s.row_cost_ns("f").unwrap();
+        assert!(v > 10_000.0 && v < 30_000.0, "v={v}");
+        let stats = s.get("f").unwrap();
+        assert_eq!(stats.total_rows, 200);
+        assert_eq!(stats.total_batches, 2);
+    }
+
+    #[test]
+    fn zero_row_batches_ignored() {
+        let s = UdfStatsStore::new();
+        s.record_batch("f", 0, 500);
+        assert_eq!(s.row_cost_ns("f"), None);
+    }
+
+    #[test]
+    fn per_udf_isolation() {
+        let s = UdfStatsStore::new();
+        s.record_batch("a", 10, 10_000);
+        s.record_batch("b", 10, 99_000);
+        assert!((s.row_cost_ns("a").unwrap() - 1_000.0).abs() < 1e-9);
+        assert!((s.row_cost_ns("b").unwrap() - 9_900.0).abs() < 1e-9);
+    }
+}

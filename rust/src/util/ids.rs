@@ -1,0 +1,78 @@
+//! Strongly-typed identifiers used across the coordinator.
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident, $prefix:expr) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub struct $name(pub u64);
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}-{}", $prefix, self.0)
+            }
+        }
+
+        impl From<u64> for $name {
+            fn from(v: u64) -> Self {
+                Self(v)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// A query submitted to the control plane.
+    QueryId, "q"
+);
+id_type!(
+    /// A virtual warehouse.
+    WarehouseId, "wh"
+);
+id_type!(
+    /// A node (VM) inside a virtual warehouse.
+    NodeId, "node"
+);
+id_type!(
+    /// A (simulated) Python interpreter process in a sandbox.
+    ProcId, "proc"
+);
+id_type!(
+    /// A customer account (solver cache is global *across* accounts).
+    AccountId, "acct"
+);
+
+/// Monotonic id allocator (thread-safe).
+#[derive(Debug, Default)]
+pub struct IdGen {
+    next: std::sync::atomic::AtomicU64,
+}
+
+impl IdGen {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn next(&self) -> u64 {
+        self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_order() {
+        assert_eq!(QueryId(3).to_string(), "q-3");
+        assert_eq!(WarehouseId(0).to_string(), "wh-0");
+        assert!(QueryId(1) < QueryId(2));
+    }
+
+    #[test]
+    fn idgen_monotonic() {
+        let g = IdGen::new();
+        assert_eq!(g.next(), 0);
+        assert_eq!(g.next(), 1);
+        assert_eq!(g.next(), 2);
+    }
+}

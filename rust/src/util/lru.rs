@@ -1,0 +1,236 @@
+//! Byte-budgeted LRU cache.
+//!
+//! Backs the environment cache (§IV.A): entries carry an explicit byte
+//! weight (installed package size), eviction is strictly
+//! least-recently-used, and the cache never exceeds its capacity — an
+//! invariant the property tests in `rust/tests/prop_coordinator.rs` hammer.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+#[derive(Debug)]
+struct Entry<V> {
+    value: V,
+    bytes: u64,
+    stamp: u64,
+}
+
+/// LRU keyed by `K`, weighted in bytes.
+#[derive(Debug)]
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    map: HashMap<K, Entry<V>>,
+    capacity_bytes: u64,
+    used_bytes: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self {
+            map: HashMap::new(),
+            capacity_bytes,
+            used_bytes: 0,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    fn touch(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Look up, bumping recency on hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let stamp = self.touch();
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.stamp = stamp;
+                self.hits += 1;
+                Some(&e.value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without recency bump or hit accounting (metrics, tests).
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|e| &e.value)
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert (replacing any previous entry), then evict LRU entries until
+    /// within budget. An entry larger than the whole budget is rejected
+    /// (returns false) — matching "don't cache what can never fit".
+    pub fn insert(&mut self, key: K, value: V, bytes: u64) -> bool {
+        if bytes > self.capacity_bytes {
+            return false;
+        }
+        let stamp = self.touch();
+        if let Some(old) = self.map.insert(key, Entry { value, bytes, stamp }) {
+            self.used_bytes -= old.bytes;
+        }
+        self.used_bytes += bytes;
+        self.evict_to_fit();
+        true
+    }
+
+    pub fn remove(&mut self, key: &K) -> Option<V> {
+        self.map.remove(key).map(|e| {
+            self.used_bytes -= e.bytes;
+            e.value
+        })
+    }
+
+    fn evict_to_fit(&mut self) {
+        while self.used_bytes > self.capacity_bytes {
+            // O(n) scan; caches hold at most a few thousand entries and
+            // eviction is off the hot path (insert-after-install).
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone())
+                .expect("used_bytes > 0 implies non-empty");
+            let e = self.map.remove(&victim).unwrap();
+            self.used_bytes -= e.bytes;
+            self.evictions += 1;
+        }
+    }
+
+    /// Drop everything (warehouse VM recycle, §IV.A: "the environment
+    /// cache gets reset when the virtual warehouse machines are recycled").
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.used_bytes = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &K> {
+        self.map.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_hit_miss() {
+        let mut c: LruCache<&str, u32> = LruCache::new(100);
+        assert!(c.get(&"a").is_none());
+        c.insert("a", 1, 10);
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u32, u32> = LruCache::new(30);
+        c.insert(1, 1, 10);
+        c.insert(2, 2, 10);
+        c.insert(3, 3, 10);
+        c.get(&1); // 1 is now most recent; 2 is LRU
+        c.insert(4, 4, 10);
+        assert!(c.contains(&1));
+        assert!(!c.contains(&2), "2 should have been evicted");
+        assert!(c.contains(&3));
+        assert!(c.contains(&4));
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn never_exceeds_capacity() {
+        let mut c: LruCache<u32, ()> = LruCache::new(55);
+        for i in 0..100 {
+            c.insert(i, (), 7);
+            assert!(c.used_bytes() <= 55, "used={}", c.used_bytes());
+        }
+        assert_eq!(c.len(), 7); // 7 * 7 = 49 <= 55 < 56
+    }
+
+    #[test]
+    fn oversized_entry_rejected() {
+        let mut c: LruCache<u32, ()> = LruCache::new(10);
+        assert!(!c.insert(1, (), 11));
+        assert!(c.is_empty());
+        assert!(c.insert(2, (), 10));
+    }
+
+    #[test]
+    fn replace_updates_bytes() {
+        let mut c: LruCache<u32, u32> = LruCache::new(100);
+        c.insert(1, 10, 40);
+        c.insert(1, 20, 60);
+        assert_eq!(c.used_bytes(), 60);
+        assert_eq!(c.get(&1), Some(&20));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c: LruCache<u32, u32> = LruCache::new(100);
+        c.insert(1, 1, 50);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+        assert!(c.get(&1).is_none());
+    }
+
+    #[test]
+    fn remove_returns_value() {
+        let mut c: LruCache<u32, String> = LruCache::new(100);
+        c.insert(1, "x".into(), 10);
+        assert_eq!(c.remove(&1), Some("x".into()));
+        assert_eq!(c.used_bytes(), 0);
+        assert_eq!(c.remove(&1), None);
+    }
+}

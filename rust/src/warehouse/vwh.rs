@@ -1,0 +1,136 @@
+//! A virtual warehouse: a named, elastically-sized cluster of nodes.
+
+use crate::packages::{PackageUniverse, Prefetcher};
+use crate::util::ids::{NodeId, WarehouseId};
+
+use super::node::Node;
+
+/// Size/shape configuration for one warehouse.
+#[derive(Debug, Clone)]
+pub struct WarehouseConfig {
+    pub name: String,
+    pub nodes: usize,
+    pub node_memory_bytes: u64,
+    pub cache_capacity_bytes: u64,
+    pub procs_per_node: usize,
+}
+
+impl Default for WarehouseConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            nodes: 2,
+            node_memory_bytes: 16 << 30,
+            cache_capacity_bytes: 16 << 30,
+            procs_per_node: 4,
+        }
+    }
+}
+
+/// A running warehouse.
+pub struct VirtualWarehouse {
+    pub id: WarehouseId,
+    pub config: WarehouseConfig,
+    pub nodes: Vec<Node>,
+}
+
+impl VirtualWarehouse {
+    pub fn provision(id: WarehouseId, config: WarehouseConfig) -> Self {
+        let nodes = (0..config.nodes)
+            .map(|i| {
+                Node::new(
+                    NodeId((id.0 << 16) + i as u64),
+                    config.node_memory_bytes,
+                    config.cache_capacity_bytes,
+                )
+            })
+            .collect();
+        Self { id, config, nodes }
+    }
+
+    /// Warm every node (base env + prefetch).
+    pub fn warm_up(&mut self, universe: &PackageUniverse, prefetcher: &Prefetcher) {
+        for n in &mut self.nodes {
+            n.warm_up(universe, prefetcher);
+        }
+    }
+
+    /// Elastic resize (§II: "elastic clusters of virtual machines").
+    /// Growing adds cold nodes; shrinking drops from the tail.
+    pub fn resize(&mut self, nodes: usize) {
+        let cur = self.nodes.len();
+        if nodes > cur {
+            for i in cur..nodes {
+                self.nodes.push(Node::new(
+                    NodeId((self.id.0 << 16) + i as u64),
+                    self.config.node_memory_bytes,
+                    self.config.cache_capacity_bytes,
+                ));
+            }
+        } else {
+            self.nodes.truncate(nodes);
+        }
+        self.config.nodes = nodes;
+    }
+
+    /// Cloud-provider recycle of one node.
+    pub fn recycle_node(&mut self, idx: usize) {
+        self.nodes[idx].recycle();
+    }
+
+    /// Warehouse-level env-cache hit rate (aggregated over nodes) — the
+    /// §IV.A production metric (92.58 %).
+    pub fn env_cache_hit_rate(&self) -> f64 {
+        let (mut h, mut m) = (0u64, 0u64);
+        for n in &self.nodes {
+            h += n.env_cache.env_hits();
+            m += n.env_cache.env_misses();
+        }
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    pub fn total_procs(&self) -> usize {
+        self.nodes.len() * self.config.procs_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn provision_and_resize() {
+        let mut wh = VirtualWarehouse::provision(
+            WarehouseId(1),
+            WarehouseConfig { nodes: 2, ..Default::default() },
+        );
+        assert_eq!(wh.nodes.len(), 2);
+        assert_eq!(wh.total_procs(), 8);
+        wh.resize(4);
+        assert_eq!(wh.nodes.len(), 4);
+        assert!(!wh.nodes[3].base_env_ready); // cold
+        wh.resize(1);
+        assert_eq!(wh.nodes.len(), 1);
+    }
+
+    #[test]
+    fn node_ids_unique_across_warehouses() {
+        let a = VirtualWarehouse::provision(WarehouseId(1), WarehouseConfig::default());
+        let b = VirtualWarehouse::provision(WarehouseId(2), WarehouseConfig::default());
+        assert_ne!(a.nodes[0].id, b.nodes[0].id);
+    }
+
+    #[test]
+    fn recycle_is_per_node() {
+        let u = PackageUniverse::generate(64, 9);
+        let mut wh = VirtualWarehouse::provision(WarehouseId(1), WarehouseConfig::default());
+        wh.warm_up(&u, &Prefetcher::new(4, 4 << 30));
+        wh.recycle_node(0);
+        assert!(!wh.nodes[0].base_env_ready);
+        assert!(wh.nodes[1].base_env_ready);
+    }
+}

@@ -1,0 +1,98 @@
+//! Integration: §IV.A caching semantics under realistic event sequences —
+//! shared binaries across combos, eviction under pressure, recycle, and
+//! the solver cache's account-global sharing.
+
+use std::sync::Arc;
+
+use snowpark::packages::{
+    EnvLookup, EnvironmentCache, PackageSpec, PackageUniverse, Prefetcher, Solver, SolverCache,
+};
+
+#[test]
+fn overlapping_combos_share_binaries() {
+    let u = PackageUniverse::generate(300, 41);
+    let solver = Solver::new(&u);
+    let numpy = u.by_name("numpy").unwrap();
+    let pandas = u.by_name("pandas").unwrap();
+    let sklearn = u.by_name("scikit-learn").unwrap();
+
+    let r1 = solver.solve(&[PackageSpec::any(numpy), PackageSpec::any(pandas)]).unwrap();
+    let r2 = solver.solve(&[PackageSpec::any(numpy), PackageSpec::any(sklearn)]).unwrap();
+
+    let mut cache = EnvironmentCache::new(64 << 30);
+    // Install combo 1 fully.
+    if let EnvLookup::Partial { missing, .. } = cache.lookup(&r1) {
+        for (p, v) in missing {
+            let bytes = u.version(p, v).bytes;
+            cache.install_binary(p, v, bytes);
+        }
+    }
+    cache.register_env(&r1);
+    assert_eq!(cache.lookup(&r1), EnvLookup::EnvHit);
+
+    // Combo 2 shares the numpy-rooted closure: fewer missing than total.
+    match cache.lookup(&r2) {
+        EnvLookup::Partial { cached, missing } => {
+            assert!(!cached.is_empty(), "shared binaries should be cached");
+            assert!(missing.len() < r2.packages.len());
+        }
+        EnvLookup::EnvHit => panic!("combo 2 was never registered"),
+    }
+}
+
+#[test]
+fn eviction_pressure_preserves_correctness() {
+    let u = PackageUniverse::generate(300, 43);
+    let solver = Solver::new(&u);
+    // Tiny cache: constant eviction churn.
+    let mut cache = EnvironmentCache::new(32 << 20);
+    let mut rng = snowpark::util::rng::Rng::new(7);
+    for _ in 0..200 {
+        let specs = u.sample_spec_set(&mut rng, 4);
+        let Ok(r) = solver.solve(&specs) else { continue };
+        match cache.lookup(&r) {
+            EnvLookup::EnvHit => {}
+            EnvLookup::Partial { missing, .. } => {
+                for (p, v) in missing {
+                    cache.install_binary(p, v, u.version(p, v).bytes);
+                }
+                cache.register_env(&r);
+            }
+        }
+        // Core invariant under churn: never exceed capacity.
+        assert!(cache.binary_bytes() <= cache.capacity_bytes());
+    }
+}
+
+#[test]
+fn solver_cache_key_is_account_agnostic() {
+    // "global across all customer accounts": two 'tenants' with the same
+    // spec set share one entry.
+    let u = PackageUniverse::generate(200, 47);
+    let solver = Solver::new(&u);
+    let cache = Arc::new(SolverCache::new());
+    let tenant_a_specs = vec![PackageSpec::any(0), PackageSpec::any(3)];
+    let tenant_b_specs = vec![PackageSpec::any(3), PackageSpec::any(0)]; // reordered
+    cache.resolve(&solver, &tenant_a_specs).unwrap();
+    let (_, hit) = cache.resolve(&solver, &tenant_b_specs).unwrap();
+    assert!(hit);
+    assert_eq!(cache.len(), 1);
+}
+
+#[test]
+fn prefetch_then_first_query_fast_path() {
+    let u = PackageUniverse::generate(300, 53);
+    let solver = Solver::new(&u);
+    let mut cold = EnvironmentCache::new(64 << 30);
+    let mut warm = EnvironmentCache::new(64 << 30);
+    Prefetcher::new(32, 16 << 30).warm(&u, &mut warm);
+
+    let r = solver
+        .solve(&[PackageSpec::any(u.by_name("numpy").unwrap())])
+        .unwrap();
+    let missing = |c: &mut EnvironmentCache| match c.lookup(&r) {
+        EnvLookup::Partial { missing, .. } => missing.len(),
+        EnvLookup::EnvHit => 0,
+    };
+    assert!(missing(&mut warm) < missing(&mut cold));
+}

@@ -1,0 +1,149 @@
+//! Integration: the cluster path — control plane, init pipeline over a
+//! warehouse, recycle semantics, distributed UDF execution through the
+//! interpreter pool, and sandbox enforcement on the way.
+
+use std::sync::Arc;
+
+use snowpark::control::{ControlPlane, ControlPlaneConfig, InitRequest};
+use snowpark::engine::exchange::ExchangeMode;
+use snowpark::packages::{PackageSpec, PackageUniverse};
+use snowpark::sandbox::{CgroupLimits, EgressPolicy, Sandbox, Syscall, Verdict};
+use snowpark::session::Session;
+use snowpark::sim::{register_udfs, TpcxBbDataset, TPCXBB_QUERIES};
+use snowpark::types::Value;
+use snowpark::util::clock::SimClock;
+use snowpark::util::ids::ProcId;
+use snowpark::warehouse::{PoolConfig, WarehouseConfig};
+
+#[test]
+fn control_plane_lifecycle_and_caching() {
+    let universe = Arc::new(PackageUniverse::generate(300, 31));
+    let mut cp = ControlPlane::new(universe.clone(), ControlPlaneConfig::default());
+    let id = cp.create_warehouse(WarehouseConfig { name: "etl".into(), nodes: 2, ..Default::default() });
+    let clock = SimClock::new();
+    let specs = vec![
+        PackageSpec::any(universe.by_name("numpy").unwrap()),
+        PackageSpec::any(universe.by_name("pandas").unwrap()),
+    ];
+    let pipeline = cp.init_pipeline();
+    let req = InitRequest { use_solver_cache: true, use_env_cache: true, node: 0 };
+
+    // Cold → warm → recycle → cold again.
+    let mut wh = snowpark::warehouse::VirtualWarehouse::provision(id, WarehouseConfig { nodes: 2, ..Default::default() });
+    wh.warm_up(&universe, &snowpark::packages::Prefetcher::new(0, 0));
+    let cold = pipeline.run(&specs, &mut wh, req, &clock).unwrap();
+    let warm = pipeline.run(&specs, &mut wh, req, &clock).unwrap();
+    assert!(!cold.breakdown.env_cache_hit && warm.breakdown.env_cache_hit);
+    assert!(warm.breakdown.total_us() < cold.breakdown.total_us());
+
+    wh.recycle_node(0);
+    let after = pipeline.run(&specs, &mut wh, req, &clock).unwrap();
+    assert!(!after.breakdown.env_cache_hit, "recycle must clear the env cache");
+    assert!(after.breakdown.solver_cache_hit, "solver cache is global, survives recycle");
+}
+
+#[test]
+fn distributed_udf_identical_results_across_modes() {
+    let s = Session::builder()
+        .pool(PoolConfig { nodes: 3, procs_per_node: 2, ..Default::default() })
+        .build()
+        .unwrap();
+    TpcxBbDataset::generate(1_200, 3, 1.5, 17).register(&s).unwrap();
+    let mut reg = s.udfs();
+    register_udfs(&mut reg);
+    for q in TPCXBB_QUERIES {
+        let u = reg.scalar(q.udf).unwrap().clone();
+        s.register_scalar_udf(&u.name, u.return_type, u.body.clone());
+    }
+    let run = |mode| {
+        s.reset_pool();
+        s.run_distributed_udf("store_sales", "net_margin", &["price", "discount", "quantity"], mode)
+            .unwrap()
+            .0
+    };
+    let local = run(ExchangeMode::Local);
+    let rr = run(ExchangeMode::RoundRobin);
+    assert_eq!(local.len(), rr.len());
+    for i in 0..local.len() {
+        let a = local.value(i).as_f64().unwrap();
+        let b = rr.value(i).as_f64().unwrap();
+        assert!((a - b).abs() < 1e-9, "row {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn sandboxed_udf_denials_are_audited() {
+    // Simulated user code probing the sandbox while a query runs.
+    let sb = Sandbox::standard(
+        CgroupLimits::default(),
+        EgressPolicy::deny_all().allow("api.partner.com", Some(443)),
+    );
+    // Legit work.
+    assert_eq!(sb.check_syscall(ProcId(1), &Syscall::new("read")), Verdict::Allow);
+    assert_eq!(
+        sb.check_syscall(
+            ProcId(1),
+            &Syscall::new("openat").with_arg("path", "/sandbox/stage/part0.rs")
+        ),
+        Verdict::Allow
+    );
+    // Probing.
+    for name in ["ptrace", "mount", "setuid", "init_module"] {
+        assert_eq!(sb.check_syscall(ProcId(2), &Syscall::new(name)), Verdict::Deny);
+    }
+    assert_eq!(sb.supervisor.denials_for(ProcId(2)), 4);
+    assert_eq!(sb.supervisor.suspicious_procs(2), vec![ProcId(2)]);
+    // Egress through the proxy honors the user policy.
+    assert_eq!(
+        sb.egress.connect("api.partner.com", 443),
+        snowpark::sandbox::EgressDecision::Forwarded
+    );
+    assert_eq!(
+        sb.egress.connect("exfil.evil.io", 443),
+        snowpark::sandbox::EgressDecision::Blocked
+    );
+}
+
+#[test]
+fn oom_kill_reaps_only_offender() {
+    let sb = Sandbox::standard(
+        CgroupLimits { memory_bytes: 1 << 20, cpu_weight: 100, pids_max: 8 },
+        EgressPolicy::deny_all(),
+    );
+    sb.cgroup.charge_memory(ProcId(1), 700 << 10).unwrap();
+    let err = sb.cgroup.charge_memory(ProcId(2), 600 << 10);
+    assert!(err.is_err());
+    assert_eq!(sb.cgroup.oom_kills(), 1);
+    assert_eq!(sb.cgroup.memory_used(), 700 << 10); // proc 1 unharmed
+}
+
+#[test]
+fn udf_stats_feed_redistribution_decision() {
+    let s = Session::builder()
+        .pool(PoolConfig { nodes: 2, procs_per_node: 2, ..Default::default() })
+        .build()
+        .unwrap();
+    TpcxBbDataset::generate(600, 2, 1.3, 5).register(&s).unwrap();
+    s.register_scalar_udf(
+        "slowish",
+        snowpark::types::DataType::Float64,
+        Arc::new(|args: &[Value]| {
+            let mut acc = args[0].as_f64().unwrap_or(0.0);
+            for i in 0..4_000u64 {
+                acc = (acc + i as f64).sqrt() + 1.0;
+            }
+            Ok(Value::Float(acc))
+        }),
+    );
+    // First run under Auto (no history, est 1µs default → local).
+    let (_, r1) = s
+        .run_distributed_udf("store_sales", "slowish", &["price"], ExchangeMode::Auto)
+        .unwrap();
+    assert!(!r1.redistributed);
+    // History now shows the true cost; Auto flips to redistribution.
+    assert!(s.udf_stats().row_cost_ns("slowish").unwrap() > s.exchange_config().threshold_ns as f64);
+    let (_, r2) = s
+        .run_distributed_udf("store_sales", "slowish", &["price"], ExchangeMode::Auto)
+        .unwrap();
+    assert!(r2.redistributed, "history should trigger redistribution");
+}

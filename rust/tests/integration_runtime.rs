@@ -1,0 +1,210 @@
+//! End-to-end validation of the AOT bridge: artifacts produced by
+//! `python/compile/aot.py` (JAX + Pallas, interpret=True) are loaded,
+//! compiled, and executed via the PJRT CPU client, and the numerics are
+//! checked against independently-computed rust oracles.
+//!
+//! Requires `make artifacts` to have run; tests are skipped (not failed)
+//! when the artifacts directory is missing so `cargo test` stays runnable
+//! on a fresh checkout.
+
+use snowpark::runtime::XlaRuntime;
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = XlaRuntime::default_dir();
+    if !XlaRuntime::available(&dir) {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(XlaRuntime::open(dir).expect("open runtime"))
+}
+
+/// Deterministic pseudo-random f32s (SplitMix64-derived), so the test is
+/// reproducible without a rand crate.
+fn pseudo_data(n: usize, seed: u64) -> Vec<f32> {
+    let mut state = seed;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^= z >> 31;
+            // Map to [-50, 50).
+            (z >> 40) as f32 / (1u64 << 24) as f32 * 100.0 - 50.0
+        })
+        .collect()
+}
+
+const B: usize = 2048;
+const F: usize = 16;
+const C: usize = 32;
+
+#[test]
+fn manifest_lists_all_kernels() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.kernel_names();
+    for want in [
+        "minmax_stats",
+        "minmax_apply",
+        "one_hot",
+        "pearson_moments",
+        "featurize",
+    ] {
+        assert!(names.iter().any(|n| n == want), "missing kernel {want}");
+    }
+    let spec = rt.spec("minmax_stats").unwrap();
+    assert_eq!(spec.inputs[0].dims, vec![B, F]);
+    assert_eq!(spec.outputs[0].dims, vec![2, F]);
+}
+
+#[test]
+fn minmax_stats_and_apply_match_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let x = pseudo_data(B * F, 7);
+
+    // Oracle: column-wise min/max.
+    let mut lo = vec![f32::INFINITY; F];
+    let mut hi = vec![f32::NEG_INFINITY; F];
+    for r in 0..B {
+        for c in 0..F {
+            let v = x[r * F + c];
+            lo[c] = lo[c].min(v);
+            hi[c] = hi[c].max(v);
+        }
+    }
+
+    let stats_kernel = rt.load("minmax_stats").unwrap();
+    let out = stats_kernel.execute_f32(&[x.clone()]).unwrap();
+    assert_eq!(out.len(), 1);
+    let stats = &out[0];
+    assert_eq!(stats.len(), 2 * F);
+    for c in 0..F {
+        assert_eq!(stats[c], lo[c], "min col {c}");
+        assert_eq!(stats[F + c], hi[c], "max col {c}");
+    }
+
+    let apply_kernel = rt.load("minmax_apply").unwrap();
+    let scaled = &apply_kernel.execute_f32(&[x.clone(), stats.clone()]).unwrap()[0];
+    for r in 0..B {
+        for c in 0..F {
+            let rng = hi[c] - lo[c];
+            let want = if rng == 0.0 { 0.0 } else { (x[r * F + c] - lo[c]) / rng };
+            let got = scaled[r * F + c];
+            assert!(
+                (got - want).abs() <= 1e-6,
+                "r={r} c={c} got={got} want={want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn one_hot_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let codes: Vec<f32> = (0..B).map(|i| ((i * 7) % C) as f32).collect();
+    let kernel = rt.load("one_hot").unwrap();
+    let y = &kernel.execute_f32(&[codes.clone()]).unwrap()[0];
+    assert_eq!(y.len(), B * C);
+    for r in 0..B {
+        for c in 0..C {
+            let want = if codes[r] as usize == c { 1.0 } else { 0.0 };
+            assert_eq!(y[r * C + c], want, "r={r} c={c}");
+        }
+    }
+}
+
+#[test]
+fn pearson_moments_match_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let x = pseudo_data(B * F, 11);
+    let kernel = rt.load("pearson_moments").unwrap();
+    let out = kernel.execute_f32(&[x.clone()]).unwrap();
+    assert_eq!(out.len(), 2);
+    let (xtx, colsum) = (&out[0], &out[1]);
+
+    // Oracle in f64 then compare loosely (kernel accumulates in f32).
+    let mut want_xtx = vec![0f64; F * F];
+    let mut want_sum = vec![0f64; F];
+    for r in 0..B {
+        for a in 0..F {
+            want_sum[a] += x[r * F + a] as f64;
+            for b in 0..F {
+                want_xtx[a * F + b] += (x[r * F + a] as f64) * (x[r * F + b] as f64);
+            }
+        }
+    }
+    for i in 0..F * F {
+        let got = xtx[i] as f64;
+        assert!(
+            (got - want_xtx[i]).abs() <= want_xtx[i].abs() * 1e-4 + 1e-1,
+            "xtx[{i}] got={got} want={}",
+            want_xtx[i]
+        );
+    }
+    for c in 0..F {
+        let got = colsum[c] as f64;
+        assert!(
+            (got - want_sum[c]).abs() <= want_sum[c].abs() * 1e-4 + 1e-1,
+            "colsum[{c}] got={got} want={}",
+            want_sum[c]
+        );
+    }
+}
+
+#[test]
+fn featurize_concats_scaled_and_one_hot() {
+    let Some(rt) = runtime() else { return };
+    let x = pseudo_data(B * F, 13);
+    let codes: Vec<f32> = (0..B).map(|i| ((i * 3) % C) as f32).collect();
+
+    let stats_kernel = rt.load("minmax_stats").unwrap();
+    let stats = stats_kernel.execute_f32(&[x.clone()]).unwrap()[0].clone();
+
+    let fused = rt.load("featurize").unwrap();
+    let feats = &fused
+        .execute_f32(&[x.clone(), codes.clone(), stats.clone()])
+        .unwrap()[0];
+    assert_eq!(feats.len(), B * (F + C));
+
+    let apply_kernel = rt.load("minmax_apply").unwrap();
+    let scaled = &apply_kernel.execute_f32(&[x.clone(), stats]).unwrap()[0];
+    let onehot_kernel = rt.load("one_hot").unwrap();
+    let encoded = &onehot_kernel.execute_f32(&[codes]).unwrap()[0];
+
+    for r in 0..B {
+        for c in 0..F {
+            assert_eq!(feats[r * (F + C) + c], scaled[r * F + c], "num r={r} c={c}");
+        }
+        for c in 0..C {
+            assert_eq!(
+                feats[r * (F + C) + F + c],
+                encoded[r * C + c],
+                "cat r={r} c={c}"
+            );
+        }
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.compiled_count(), 0);
+    let a = rt.load("one_hot").unwrap();
+    let b = rt.load("one_hot").unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    // Both handles execute fine.
+    let codes: Vec<f32> = vec![1.0; B];
+    a.execute_f32(&[codes.clone()]).unwrap();
+    b.execute_f32(&[codes]).unwrap();
+}
+
+#[test]
+fn execute_rejects_wrong_arity_and_shape() {
+    let Some(rt) = runtime() else { return };
+    let k = rt.load("minmax_apply").unwrap();
+    assert!(k.execute_f32(&[vec![0.0; B * F]]).is_err(), "arity");
+    assert!(
+        k.execute_f32(&[vec![0.0; 3], vec![0.0; 2 * F]]).is_err(),
+        "shape"
+    );
+}

@@ -1,0 +1,151 @@
+//! Integration: SQL engine end-to-end over the TPCx-BB-like dataset.
+
+use std::sync::Arc;
+
+use snowpark::session::Session;
+use snowpark::sim::TpcxBbDataset;
+use snowpark::types::{DataType, Value};
+
+fn session() -> Arc<Session> {
+    let s = Session::builder().build().unwrap();
+    TpcxBbDataset::generate(2_000, 2, 1.2, 11).register(&s).unwrap();
+    s
+}
+
+#[test]
+fn counts_and_aggregates() {
+    let s = session();
+    let total = s.sql("SELECT COUNT(*) AS n FROM store_sales").unwrap();
+    let n = total.row(0)[0].as_i64().unwrap();
+    assert!(n >= 2_000, "{n}");
+    let agg = s
+        .sql("SELECT SUM(quantity) AS q, MIN(price) AS lo, MAX(price) AS hi FROM store_sales")
+        .unwrap();
+    assert!(agg.row(0)[0].as_i64().unwrap() > n);
+    assert!(agg.row(0)[1].as_f64().unwrap() <= agg.row(0)[2].as_f64().unwrap());
+}
+
+#[test]
+fn join_group_order_limit_pipeline() {
+    let s = session();
+    let rs = s
+        .sql(
+            "SELECT category, COUNT(*) AS n, SUM(price * quantity) AS rev \
+             FROM store_sales JOIN items ON store_sales.item_id = items.item_id \
+             GROUP BY category HAVING COUNT(*) > 5 ORDER BY rev DESC LIMIT 4",
+        )
+        .unwrap();
+    assert!(rs.num_rows() >= 1 && rs.num_rows() <= 4);
+    // Descending revenue.
+    for i in 1..rs.num_rows() {
+        let prev = rs.row(i - 1)[2].as_f64().unwrap();
+        let cur = rs.row(i)[2].as_f64().unwrap();
+        assert!(prev >= cur);
+    }
+}
+
+#[test]
+fn subqueries_and_case() {
+    let s = session();
+    let rs = s
+        .sql(
+            "SELECT band, COUNT(*) AS n FROM \
+             (SELECT CASE WHEN stars >= 4 THEN 'good' WHEN stars >= 2 THEN 'mid' \
+              ELSE 'bad' END AS band FROM product_reviews) t \
+             GROUP BY band ORDER BY band",
+        )
+        .unwrap();
+    assert!(rs.num_rows() >= 2);
+    let total: i64 = (0..rs.num_rows())
+        .map(|i| rs.row(i)[1].as_i64().unwrap())
+        .sum();
+    let reviews = s
+        .sql("SELECT COUNT(*) AS n FROM product_reviews")
+        .unwrap()
+        .row(0)[0]
+        .as_i64()
+        .unwrap();
+    assert_eq!(total, reviews);
+}
+
+#[test]
+fn string_functions_and_predicates() {
+    let s = session();
+    let rs = s
+        .sql(
+            "SELECT upper(category) AS cat FROM items \
+             WHERE category IN ('toys', 'books') AND item_id BETWEEN 0 AND 100 LIMIT 5",
+        )
+        .unwrap();
+    for i in 0..rs.num_rows() {
+        let v = rs.row(i)[0].as_str().unwrap().to_string();
+        assert!(v == "TOYS" || v == "BOOKS");
+    }
+}
+
+#[test]
+fn scalar_udf_and_udaf_mix() {
+    let s = session();
+    s.register_scalar_udf(
+        "clamp99",
+        DataType::Float64,
+        Arc::new(|args: &[Value]| {
+            Ok(Value::Float(args[0].as_f64().unwrap_or(0.0).min(99.0)))
+        }),
+    );
+    let rs = s
+        .sql("SELECT AVG(clamp99(price)) AS a, MAX(clamp99(price)) AS m FROM store_sales")
+        .unwrap();
+    assert!(rs.row(0)[1].as_f64().unwrap() <= 99.0);
+    assert!(rs.row(0)[0].as_f64().unwrap() <= 99.0);
+}
+
+#[test]
+fn udtf_in_from_clause() {
+    // §III.A: "UDTFs return a set of rows (i.e. a table)" — invoked via
+    // TABLE(fn(args)) in FROM.
+    use snowpark::types::{Column, Field, RowSet, Schema};
+    let s = session();
+    let schema = Schema::new(vec![
+        Field::new("n", DataType::Int64),
+        Field::new("sq", DataType::Int64),
+    ]);
+    let schema2 = schema.clone();
+    let mut reg = s.udfs();
+    reg.register_udtf(
+        "squares",
+        schema,
+        Arc::new(move |args: &[Value]| {
+            let k = args[0].as_i64().unwrap_or(0);
+            RowSet::new(
+                schema2.clone(),
+                vec![
+                    Column::from_i64((0..k).collect()),
+                    Column::from_i64((0..k).map(|v| v * v).collect()),
+                ],
+            )
+        }),
+    );
+    let ctx = snowpark::engine::ExecContext::new(
+        std::sync::Arc::new(snowpark::engine::Catalog::new()),
+        Arc::new(reg),
+    );
+    let rs = snowpark::engine::run_sql(
+        "SELECT sq FROM TABLE(squares(5)) t WHERE n >= 2 ORDER BY sq DESC",
+        &ctx,
+    )
+    .unwrap();
+    assert_eq!(rs.num_rows(), 3);
+    assert_eq!(rs.row(0)[0], Value::Int(16));
+    assert_eq!(rs.row(2)[0], Value::Int(4));
+}
+
+#[test]
+fn errors_are_reported_not_panics() {
+    let s = session();
+    assert!(s.sql("SELECT missing_col FROM store_sales").is_err());
+    assert!(s.sql("SELECT * FROM no_such_table").is_err());
+    assert!(s.sql("SELECT nope(price) FROM store_sales").is_err());
+    assert!(s.sql("THIS IS NOT SQL").is_err());
+    assert!(s.sql("SELECT SUM(AVG(price)) FROM store_sales").is_err());
+}

@@ -1,0 +1,224 @@
+//! Property tests on coordinator invariants (via the from-scratch
+//! `util::quick` framework — proptest is unavailable offline).
+//!
+//! Routing: the exchange delivers every row exactly once, row-aligned,
+//! and round-robin load spread is balanced. Batching: buffered async
+//! redistribution preserves the row multiset. State: caches respect
+//! budgets, the solver cache equals a fresh solve, the estimator is
+//! monotone, admission never oversubscribes reservations.
+
+use std::sync::Arc;
+
+use snowpark::engine::exchange::{run_udf_exchange, simulate_exchange, ExchangeConfig, ExchangeMode};
+use snowpark::packages::{PackageSpec, PackageUniverse, Solver, SolverCache};
+use snowpark::scheduler::{DynamicEstimator, MemoryEstimator, StatsFramework};
+use snowpark::types::{Column, DataType, Field, RowSet, Schema, Value};
+use snowpark::udf::{UdfRegistry, UdfStatsStore};
+use snowpark::util::lru::LruCache;
+use snowpark::util::quick::{forall, prop_assert, Config};
+use snowpark::warehouse::{InterpreterPool, PoolConfig};
+
+fn ident_registry() -> Arc<UdfRegistry> {
+    let mut r = UdfRegistry::new();
+    r.register_scalar(
+        "ident",
+        DataType::Float64,
+        Arc::new(|args: &[Value]| Ok(args[0].clone())),
+    );
+    Arc::new(r)
+}
+
+#[test]
+fn prop_exchange_routes_each_row_exactly_once() {
+    let reg = ident_registry();
+    let pool = InterpreterPool::spawn(
+        PoolConfig { nodes: 2, procs_per_node: 2, queue_depth: 2, ..Default::default() },
+        reg.clone(),
+        Arc::new(UdfStatsStore::new()),
+    );
+    forall(Config::cases(40), |g| {
+        let n_parts = 1 + g.usize_in(0..4);
+        let mut next = 0.0f64;
+        let parts: Vec<RowSet> = (0..n_parts)
+            .map(|_| {
+                let n = g.usize_in(0..200);
+                let vals: Vec<f64> = (0..n)
+                    .map(|_| {
+                        next += 1.0;
+                        next
+                    })
+                    .collect();
+                RowSet::new(
+                    Schema::new(vec![Field::new("x", DataType::Float64)]),
+                    vec![Column::from_f64(vals)],
+                )
+                .unwrap()
+            })
+            .collect();
+        let mode = *g.choose(&[ExchangeMode::Local, ExchangeMode::RoundRobin, ExchangeMode::Auto]);
+        let batch_rows = 1 + g.usize_in(0..64);
+        let cfg = ExchangeConfig { mode, batch_rows, threshold_ns: g.usize_in(0..10_000) as u64 };
+        let (cols, report) = run_udf_exchange(&parts, "ident", &pool, &reg, cfg).unwrap();
+        // Row-aligned identity: output i of partition p == input i.
+        for (c, part) in cols.iter().zip(&parts) {
+            prop_assert(c.len() == part.num_rows(), "arity")?;
+            for i in 0..c.len() {
+                if c.value(i) != part.column(0).value(i) {
+                    return Err(format!(
+                        "misrouted row: partition value {:?} became {:?}",
+                        part.column(0).value(i),
+                        c.value(i)
+                    ));
+                }
+            }
+        }
+        prop_assert(
+            report.rows == parts.iter().map(RowSet::num_rows).sum::<usize>(),
+            "row count",
+        )
+    });
+}
+
+#[test]
+fn prop_round_robin_balances_batches() {
+    // In the deterministic model, round-robin assigns batch counts that
+    // differ by at most one across processes.
+    forall(Config::cases(60), |g| {
+        let nodes = 1 + g.usize_in(0..4);
+        let procs = 1 + g.usize_in(0..4);
+        let parts: Vec<usize> = (0..nodes).map(|_| g.usize_in(0..5_000)).collect();
+        let batch = 1 + g.usize_in(0..512);
+        let cfg = ExchangeConfig {
+            mode: ExchangeMode::RoundRobin,
+            batch_rows: batch,
+            threshold_ns: 0,
+        };
+        let sim = simulate_exchange(
+            &parts,
+            1_000,
+            64,
+            nodes,
+            procs,
+            Default::default(),
+            cfg,
+            true,
+        );
+        let total_batches: usize = parts.iter().map(|r| r.div_ceil(batch)).sum();
+        prop_assert(
+            sim.total_batches == total_batches,
+            format!("batches {} != {}", sim.total_batches, total_batches),
+        )
+    });
+}
+
+#[test]
+fn prop_lru_never_exceeds_budget_and_keeps_hot_keys() {
+    forall(Config::cases(80), |g| {
+        let cap = 100 + g.usize_in(0..10_000) as u64;
+        let mut lru: LruCache<u32, ()> = LruCache::new(cap);
+        let hot_key = 0u32;
+        lru.insert(hot_key, (), 50);
+        for _ in 0..g.usize_in(0..300) {
+            let key = 1 + g.u32_below(500);
+            let bytes = 1 + g.usize_in(0..200) as u64;
+            lru.insert(key, (), bytes);
+            let _ = lru.get(&hot_key); // keep it hot
+            if lru.used_bytes() > cap {
+                return Err(format!("over budget: {} > {cap}", lru.used_bytes()));
+            }
+        }
+        prop_assert(lru.contains(&hot_key), "hot key evicted despite recency")
+    });
+}
+
+#[test]
+fn prop_solver_cache_equals_fresh_solve() {
+    let u = PackageUniverse::generate(200, 61);
+    let solver = Solver::new(&u);
+    let cache = SolverCache::new();
+    forall(Config::cases(40), |g| {
+        let n = 1 + g.usize_in(0..4);
+        let specs: Vec<PackageSpec> = (0..n)
+            .map(|_| PackageSpec::any(g.usize_in(0..u.len())))
+            .collect();
+        let fresh = solver.solve(&SolverCache::normalize(&specs));
+        let cached = cache.resolve(&solver, &specs);
+        match (fresh, cached) {
+            (Ok(f), Ok((c, _))) => prop_assert(f.packages == c.packages, "closure mismatch"),
+            (Err(_), Err(_)) => Ok(()),
+            (f, c) => Err(format!("divergence: fresh={:?} cached={:?}", f.is_ok(), c.is_ok())),
+        }
+    });
+}
+
+#[test]
+fn prop_estimator_monotone_and_bounded() {
+    forall(Config::cases(80), |g| {
+        let est = DynamicEstimator {
+            k: 1 + g.usize_in(0..10),
+            percentile: g.f64_in(0.0, 100.0),
+            multiplier: g.f64_in(1.0, 2.0),
+            default_bytes: 1 << 30,
+        };
+        let stats = StatsFramework::new(32);
+        let mut max_seen = 0u64;
+        let mut min_seen = u64::MAX;
+        for _ in 0..(1 + g.usize_in(0..20)) {
+            let v = 1 + g.usize_in(0..1_000_000) as u64;
+            stats.record("q", v);
+            max_seen = max_seen.max(v);
+            min_seen = min_seen.min(v);
+        }
+        let e = est.estimate("q", &stats);
+        // Bounded: between min observation and max × multiplier.
+        if (e as f64) > max_seen as f64 * est.multiplier + 1.0 {
+            return Err(format!("estimate {e} above max*{:.2}", est.multiplier));
+        }
+        prop_assert(e as f64 >= min_seen as f64, "estimate below min observation")?;
+        // Monotone: a new all-time-high observation cannot lower a
+        // max-percentile estimate.
+        if est.percentile == 100.0 {
+            let before = est.estimate("q", &stats);
+            stats.record("q", max_seen * 2);
+            let after = est.estimate("q", &stats);
+            prop_assert(after >= before, "estimator not monotone at P100")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulated_exchange_work_conserved() {
+    // Total work is conserved up to remote-transport additions; makespan
+    // is between (total/procs) and total.
+    forall(Config::cases(80), |g| {
+        let nodes = 1 + g.usize_in(0..4);
+        let procs = 1 + g.usize_in(0..3);
+        let parts: Vec<usize> = (0..nodes).map(|_| g.usize_in(0..3_000)).collect();
+        let cost = 100 + g.usize_in(0..50_000) as u64;
+        let cfg = ExchangeConfig {
+            mode: ExchangeMode::RoundRobin,
+            batch_rows: 1 + g.usize_in(0..512),
+            threshold_ns: 0,
+        };
+        for redistribute in [false, true] {
+            let sim = simulate_exchange(
+                &parts, cost, 64, nodes, procs, Default::default(), cfg, redistribute,
+            );
+            let base_work: u64 = parts.iter().map(|&r| r as u64 * cost).sum();
+            if sim.total_work_ns < base_work {
+                return Err(format!(
+                    "work lost: {} < {base_work}",
+                    sim.total_work_ns
+                ));
+            }
+            let per_proc_floor = sim.total_work_ns / (nodes * procs) as u64;
+            prop_assert(
+                sim.makespan_ns >= per_proc_floor.saturating_sub(1)
+                    && sim.makespan_ns <= sim.total_work_ns,
+                "makespan out of bounds",
+            )?;
+        }
+        Ok(())
+    });
+}
