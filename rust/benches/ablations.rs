@@ -5,9 +5,12 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use snowpark::bench::{banner, Table};
+use snowpark::bench::{banner, best, fmt_duration, measure, Table};
 use snowpark::control::{InitPipeline, InitRequest};
 use snowpark::engine::exchange::{simulate_exchange, ExchangeConfig, ExchangeMode};
+use snowpark::engine::{run_sql, Catalog, ExecContext};
+use snowpark::types::{Column, DataType, Field, RowSet, Schema};
+use snowpark::udf::UdfRegistry;
 use snowpark::packages::{Installer, LatencyModel, PackageUniverse, Prefetcher, Solver, SolverCache};
 use snowpark::scheduler::{
     DynamicEstimator, MemoryEstimator, QueryRequest, StatsFramework, WarehouseScheduler,
@@ -16,7 +19,7 @@ use snowpark::sim::{memory_workloads, InitTrace};
 use snowpark::util::clock::{Clock, SimClock};
 use snowpark::util::histogram::Sampled;
 use snowpark::util::ids::{QueryId, WarehouseId};
-use snowpark::util::rng::Rng;
+use snowpark::util::rng::{Rng, Zipf};
 use snowpark::warehouse::{TransportCost, VirtualWarehouse, WarehouseConfig};
 
 fn ablate_batch_size() {
@@ -204,15 +207,127 @@ fn ablate_estimator() {
     table.print();
 }
 
+/// Register a 1M-row fact table (`facts(k BIGINT, cat VARCHAR, v DOUBLE)`)
+/// plus a dimension table (`dim(k BIGINT, label VARCHAR)`) with uniform or
+/// Zipf-distributed keys.
+fn engine_tables(n_rows: usize, n_keys: usize, zipf_s: Option<f64>, seed: u64) -> Arc<Catalog> {
+    let mut rng = Rng::new(seed);
+    let mut keys = Vec::with_capacity(n_rows);
+    match zipf_s {
+        Some(s) => {
+            let z = Zipf::new(n_keys, s);
+            for _ in 0..n_rows {
+                keys.push(z.sample(&mut rng) as i64);
+            }
+        }
+        None => {
+            for _ in 0..n_rows {
+                keys.push(rng.below(n_keys as u64) as i64);
+            }
+        }
+    }
+    let cats: Vec<String> = keys.iter().map(|k| format!("cat_{:03}", k % 512)).collect();
+    let vals: Vec<f64> = (0..n_rows).map(|_| rng.uniform(0.0, 100.0)).collect();
+    let facts = RowSet::new(
+        Schema::new(vec![
+            Field::new("k", DataType::Int64),
+            Field::new("cat", DataType::Utf8),
+            Field::new("v", DataType::Float64),
+        ]),
+        vec![
+            Column::from_i64(keys),
+            Column::from_strings(cats),
+            Column::from_f64(vals),
+        ],
+    )
+    .unwrap();
+    let dim = RowSet::new(
+        Schema::new(vec![
+            Field::new("k", DataType::Int64),
+            Field::new("label", DataType::Utf8),
+        ]),
+        vec![
+            Column::from_i64((0..n_keys as i64).collect()),
+            Column::from_strings((0..n_keys).map(|k| format!("label_{k}")).collect()),
+        ],
+    )
+    .unwrap();
+    let catalog = Arc::new(Catalog::new());
+    catalog.register("facts", facts);
+    catalog.register("dim", dim);
+    catalog
+}
+
+/// A6: the columnar key codec + grouped kernels vs the legacy
+/// row-at-a-time aggregate/join/sort, on 1M rows with uniform and skewed
+/// (Zipf) key distributions. Returns JSON rows for BENCH_engine.json.
+fn ablate_groupby_kernels() -> Vec<String> {
+    println!("\n-- A6: columnar key codec + grouped kernels (1M rows, codec on/off) --");
+    const N: usize = 1_000_000;
+    const KEYS: usize = 100_000;
+    let mut table = Table::new(&["query", "distribution", "codec off", "codec on", "speedup"]);
+    let mut json = Vec::new();
+    for (dist, zipf_s) in [("uniform", None), ("zipf-1.2", Some(1.2))] {
+        let catalog = engine_tables(N, KEYS, zipf_s, 42);
+        let queries = [
+            ("groupby-int", "SELECT k, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY k"),
+            ("groupby-str", "SELECT cat, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY cat"),
+            ("hash-join", "SELECT COUNT(*) AS n FROM facts JOIN dim ON facts.k = dim.k"),
+            ("sort-limit", "SELECT k, v FROM facts ORDER BY v DESC LIMIT 100"),
+        ];
+        for (name, stmt) in queries {
+            let ctx_on = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()));
+            let ctx_off = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_vectorized(false);
+            let t_on = best(&measure(1, 3, || run_sql(stmt, &ctx_on).unwrap()));
+            let t_off = best(&measure(1, 3, || run_sql(stmt, &ctx_off).unwrap()));
+            let speedup = t_off.as_secs_f64() / t_on.as_secs_f64().max(1e-12);
+            table.row(&[
+                name.to_string(),
+                dist.to_string(),
+                fmt_duration(t_off),
+                fmt_duration(t_on),
+                format!("{speedup:.1}x"),
+            ]);
+            json.push(format!(
+                "{{\"bench\":\"groupby_kernels\",\"query\":\"{name}\",\"dist\":\"{dist}\",\
+                 \"rows\":{N},\"codec_off_ms\":{:.3},\"codec_on_ms\":{:.3},\
+                 \"speedup\":{speedup:.2}}}",
+                t_off.as_secs_f64() * 1e3,
+                t_on.as_secs_f64() * 1e3,
+            ));
+        }
+    }
+    table.print();
+    println!("(target: ≥5x on the 1M-row group-by/join microbenches)");
+    json
+}
+
+/// Record the engine microbench trajectory where the driver (and
+/// EXPERIMENTS.md) can quote it.
+fn write_bench_json(rows: &[String]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    let body = format!(
+        "{{\n  \"bench\": \"groupby_kernels\",\n  \"generated_by\": \"cargo bench --bench ablations\",\n  \"results\": [\n    {}\n  ]\n}}\n",
+        rows.join(",\n    ")
+    );
+    match std::fs::write(path, body) {
+        Ok(()) => println!("\n(recorded {} entries to {path})", rows.len()),
+        Err(e) => eprintln!("warn: could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     banner(
         "Ablations",
         "Design-choice sweeps: buffer size B, threshold T, env-cache \
-         capacity, prefetch, estimator (K,P,F).",
+         capacity, prefetch, estimator (K,P,F), engine key codec.",
     );
     ablate_batch_size();
     ablate_threshold();
     ablate_env_cache_capacity();
     ablate_prefetch();
     ablate_estimator();
+    let json = ablate_groupby_kernels();
+    write_bench_json(&json);
 }

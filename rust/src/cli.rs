@@ -21,7 +21,7 @@ snowparkd — Snowpark reproduction launcher
 
 USAGE:
   snowparkd info
-  snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S]
+  snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats]
   snowparkd demo
   snowparkd serve [--queries N] [--nodes N] [--procs N] [--rows N] [--mode auto|local|rr]
 
@@ -30,7 +30,7 @@ Artifacts: set SNOWPARK_ARTIFACTS or run `make artifacts` for XLA UDFs.";
 
 pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let parsed = match ParsedArgs::parse(args, &["help"]) {
+    let parsed = match ParsedArgs::parse(args, &["help", "stats"]) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -99,9 +99,16 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
     let rows = args.get_usize("rows", 5_000).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
     let s = session_with_data(rows, seed, None)?;
-    let out = s.sql(sql)?;
-    println!("{out}");
-    println!("({} rows)", out.num_rows());
+    if args.flag("stats") {
+        let (out, stats) = s.sql_with_stats(sql)?;
+        println!("{out}");
+        println!("({} rows)", out.num_rows());
+        println!("\n-- operator stats --\n{}", stats.report());
+    } else {
+        let out = s.sql(sql)?;
+        println!("{out}");
+        println!("({} rows)", out.num_rows());
+    }
     Ok(())
 }
 

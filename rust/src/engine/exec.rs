@@ -1,6 +1,20 @@
 //! Plan execution: vectorized operators over rowsets.
+//!
+//! The heavy operators (aggregate, join, sort) run on the columnar key
+//! codec in [`super::hash`]: group/join keys are encoded once per batch
+//! into flat fixed-stride byte rows with precomputed hashes, grouping and
+//! probing compare `&[u8]` slices, and aggregation runs typed grouped
+//! kernels over raw `&[i64]`/`&[f64]` column slices. Output
+//! materialization goes through typed gathers (`RowSet::gather`) instead
+//! of per-cell `Value` round trips.
+//!
+//! The legacy row-at-a-time paths are kept behind
+//! `ExecContext::vectorized = false` for differential tests and the
+//! codec on/off ablation (`benches/ablations.rs`).
 
+use std::cmp::Ordering;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -10,6 +24,7 @@ use crate::udf::{UdfRegistry, UdfStatsStore};
 
 use super::catalog::Catalog;
 use super::expr::{eval_expr, eval_predicate, eval_row, resolve_column};
+use super::hash::{assign_group_ids, EncodedKeys, JoinTable, KeyDict, KeyMode};
 use super::key::KeyValue;
 use super::plan::{AggCall, AggFunc, Plan};
 
@@ -18,83 +33,241 @@ pub struct ExecContext {
     pub catalog: Arc<Catalog>,
     pub udfs: Arc<UdfRegistry>,
     pub udf_stats: Arc<UdfStatsStore>,
+    /// Run aggregate/join/sort on the columnar key codec (the default).
+    /// The row-at-a-time paths remain for differential testing and the
+    /// codec on/off ablation.
+    pub vectorized: bool,
 }
 
 impl ExecContext {
     pub fn new(catalog: Arc<Catalog>, udfs: Arc<UdfRegistry>) -> Self {
-        Self { catalog, udfs, udf_stats: Arc::new(UdfStatsStore::new()) }
+        Self {
+            catalog,
+            udfs,
+            udf_stats: Arc::new(UdfStatsStore::new()),
+            vectorized: true,
+        }
+    }
+
+    pub fn with_vectorized(mut self, on: bool) -> Self {
+        self.vectorized = on;
+        self
     }
 }
 
-/// Per-query execution statistics (rows processed per operator class).
+/// Rows processed and wall time spent in one operator class.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct OpStats {
+    pub invocations: u64,
+    pub rows_in: u64,
+    pub rows_out: u64,
+    pub nanos: u64,
+}
+
+impl OpStats {
+    fn record(&mut self, rows_in: u64, rows_out: u64, started: Instant) {
+        self.invocations += 1;
+        self.rows_in += rows_in;
+        self.rows_out += rows_out;
+        self.nanos += started.elapsed().as_nanos() as u64;
+    }
+}
+
+/// Per-query execution statistics: per-operator row counts and timings.
 #[derive(Debug, Default, Clone)]
 pub struct QueryStats {
     pub rows_scanned: u64,
     pub rows_output: u64,
+    pub scan: OpStats,
+    pub filter: OpStats,
+    pub project: OpStats,
+    pub aggregate: OpStats,
+    pub join: OpStats,
+    pub sort: OpStats,
+    pub limit: OpStats,
+}
+
+impl QueryStats {
+    fn operators(&self) -> [(&'static str, &OpStats); 7] {
+        [
+            ("scan", &self.scan),
+            ("filter", &self.filter),
+            ("project", &self.project),
+            ("aggregate", &self.aggregate),
+            ("join", &self.join),
+            ("sort", &self.sort),
+            ("limit", &self.limit),
+        ]
+    }
+
+    /// Aligned per-operator report (`snowparkd run-sql --stats` prints it).
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "{:<10} {:>6} {:>12} {:>12} {:>12}\n",
+            "operator", "calls", "rows_in", "rows_out", "time"
+        );
+        for (name, op) in self.operators() {
+            if op.invocations == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{:<10} {:>6} {:>12} {:>12} {:>9.3}ms\n",
+                name,
+                op.invocations,
+                op.rows_in,
+                op.rows_out,
+                op.nanos as f64 / 1e6
+            ));
+        }
+        out
+    }
 }
 
 /// Execute a plan to completion.
 pub fn execute_plan(plan: &Plan, ctx: &ExecContext) -> Result<RowSet> {
+    Ok(execute_plan_with_stats(plan, ctx)?.0)
+}
+
+/// Execute a plan, returning per-operator row counts and timings.
+pub fn execute_plan_with_stats(plan: &Plan, ctx: &ExecContext) -> Result<(RowSet, QueryStats)> {
     let mut stats = QueryStats::default();
     let out = exec(plan, ctx, &mut stats)?;
-    Ok(out)
+    stats.rows_output = out.num_rows() as u64;
+    Ok((out, stats))
 }
 
 fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet> {
     match plan {
         Plan::Scan { table, alias: _ } => {
+            let t0 = Instant::now();
             let rs = ctx.catalog.get(table)?;
-            stats.rows_scanned += rs.num_rows() as u64;
+            let n = rs.num_rows() as u64;
+            stats.rows_scanned += n;
+            stats.scan.record(n, n, t0);
             Ok(rs)
         }
         Plan::TableFunc { name, args, alias: _ } => {
-            if name == "__dual" {
+            let t0 = Instant::now();
+            let rs = if name == "__dual" {
                 // SELECT without FROM: one row, zero columns.
-                return Ok(RowSet::new(
+                RowSet::new(
                     Schema::new(vec![Field::new("__dummy", DataType::Int64)]),
                     vec![Column::from_i64(vec![0])],
                 )
-                .unwrap());
-            }
-            // Evaluate constant args against a dual row.
-            let dual = RowSet::new(
-                Schema::new(vec![Field::new("__dummy", DataType::Int64)]),
-                vec![Column::from_i64(vec![0])],
-            )
-            .unwrap();
-            let arg_vals: Vec<Value> = args
-                .iter()
-                .map(|a| eval_row(a, &dual, 0, &ctx.udfs))
-                .collect::<Result<_>>()?;
-            ctx.catalog
-                .get(name)
-                .or_else(|_| ctx.udfs.call_udtf(name, &arg_vals))
+                .unwrap()
+            } else {
+                // Evaluate constant args against a dual row.
+                let dual = RowSet::new(
+                    Schema::new(vec![Field::new("__dummy", DataType::Int64)]),
+                    vec![Column::from_i64(vec![0])],
+                )
+                .unwrap();
+                let arg_vals: Vec<Value> = args
+                    .iter()
+                    .map(|a| eval_row(a, &dual, 0, &ctx.udfs))
+                    .collect::<Result<_>>()?;
+                ctx.catalog
+                    .get(name)
+                    .or_else(|_| ctx.udfs.call_udtf(name, &arg_vals))?
+            };
+            let n = rs.num_rows() as u64;
+            stats.scan.record(n, n, t0);
+            Ok(rs)
         }
         Plan::Filter { input, predicate } => {
             let rows = exec(input, ctx, stats)?;
+            let t0 = Instant::now();
             let mask = eval_predicate(predicate, &rows, &ctx.udfs)?;
-            Ok(rows.filter(&mask))
+            let out = rows.filter(&mask);
+            stats
+                .filter
+                .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+            Ok(out)
         }
         Plan::Project { input, exprs } => {
             let rows = exec(input, ctx, stats)?;
-            project(&rows, exprs, ctx)
+            let t0 = Instant::now();
+            let out = project(&rows, exprs, ctx)?;
+            stats
+                .project
+                .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+            Ok(out)
         }
         Plan::Aggregate { input, group, aggs } => {
             let rows = exec(input, ctx, stats)?;
-            aggregate(&rows, group, aggs, ctx)
+            let t0 = Instant::now();
+            let out = aggregate(&rows, group, aggs, ctx)?;
+            stats
+                .aggregate
+                .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+            Ok(out)
         }
         Plan::Join { left, right, kind, equi, residual } => {
             let l = exec(left, ctx, stats)?;
             let r = exec(right, ctx, stats)?;
-            join(&l, &r, *kind, equi, residual.as_ref(), ctx, plan)
+            let t0 = Instant::now();
+            let out = join(&l, &r, *kind, equi, residual.as_ref(), ctx, plan)?;
+            stats.join.record(
+                (l.num_rows() + r.num_rows()) as u64,
+                out.num_rows() as u64,
+                t0,
+            );
+            Ok(out)
         }
         Plan::Sort { input, keys } => {
             let rows = exec(input, ctx, stats)?;
-            sort(&rows, keys, ctx)
+            let t0 = Instant::now();
+            let out = sort(&rows, keys, ctx, None)?;
+            stats
+                .sort
+                .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+            Ok(out)
         }
         Plan::Limit { input, n } => {
-            let rows = exec(input, ctx, stats)?;
-            Ok(rows.slice(0, (*n).min(rows.num_rows())))
+            // `ORDER BY ... LIMIT k` short-circuits into a top-k partial
+            // sort instead of sorting the full input. The sort may sit
+            // directly below, or below the hidden-column-dropping
+            // projection the planner inserts.
+            match input.as_ref() {
+                Plan::Sort { input: sort_input, keys } => {
+                    let rows = exec(sort_input, ctx, stats)?;
+                    let t0 = Instant::now();
+                    let out = sort(&rows, keys, ctx, Some(*n))?;
+                    stats
+                        .sort
+                        .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+                    Ok(out)
+                }
+                Plan::Project { input: proj_input, exprs }
+                    if matches!(proj_input.as_ref(), Plan::Sort { .. }) =>
+                {
+                    if let Plan::Sort { input: sort_input, keys } = proj_input.as_ref() {
+                        let rows = exec(sort_input, ctx, stats)?;
+                        let t0 = Instant::now();
+                        let sorted = sort(&rows, keys, ctx, Some(*n))?;
+                        stats
+                            .sort
+                            .record(rows.num_rows() as u64, sorted.num_rows() as u64, t0);
+                        let t0 = Instant::now();
+                        let out = project(&sorted, exprs, ctx)?;
+                        stats
+                            .project
+                            .record(sorted.num_rows() as u64, out.num_rows() as u64, t0);
+                        Ok(out)
+                    } else {
+                        unreachable!("guarded by matches! above")
+                    }
+                }
+                _ => {
+                    let rows = exec(input, ctx, stats)?;
+                    let t0 = Instant::now();
+                    let out = rows.slice(0, (*n).min(rows.num_rows()));
+                    stats
+                        .limit
+                        .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+                    Ok(out)
+                }
+            }
         }
     }
 }
@@ -138,7 +311,10 @@ struct GroupState {
 enum AggAcc {
     CountStar(i64),
     Count(i64),
-    Sum { sum: f64, all_int: bool, any: bool },
+    /// SUM accumulates exactly in `i64` while every input is an integer,
+    /// switching to `f64` on the first float input or on `i64` overflow
+    /// (fixes silent precision loss past 2^53).
+    Sum { isum: i64, fsum: f64, float_mode: bool, any: bool },
     Avg { sum: f64, n: i64 },
     Min(Option<Value>),
     Max(Option<Value>),
@@ -150,7 +326,7 @@ impl AggAcc {
         Ok(match call.func {
             AggFunc::CountStar => AggAcc::CountStar(0),
             AggFunc::Count => AggAcc::Count(0),
-            AggFunc::Sum => AggAcc::Sum { sum: 0.0, all_int: true, any: false },
+            AggFunc::Sum => AggAcc::Sum { isum: 0, fsum: 0.0, float_mode: false, any: false },
             AggFunc::Avg => AggAcc::Avg { sum: 0.0, n: 0 },
             AggFunc::Min => AggAcc::Min(None),
             AggFunc::Max => AggAcc::Max(None),
@@ -171,18 +347,34 @@ impl AggAcc {
                     *n += 1;
                 }
             }
-            AggAcc::Sum { sum, all_int, any } => {
-                if !args[0].is_null() {
-                    let v = args[0]
-                        .as_f64()
-                        .ok_or_else(|| anyhow!("SUM over non-numeric {}", args[0]))?;
-                    if !matches!(args[0], Value::Int(_)) {
-                        *all_int = false;
-                    }
-                    *sum += v;
+            AggAcc::Sum { isum, fsum, float_mode, any } => match &args[0] {
+                Value::Null => {}
+                Value::Int(i) => {
                     *any = true;
+                    if *float_mode {
+                        *fsum += *i as f64;
+                    } else {
+                        match isum.checked_add(*i) {
+                            Some(s) => *isum = s,
+                            None => {
+                                *float_mode = true;
+                                *fsum = *isum as f64 + *i as f64;
+                            }
+                        }
+                    }
                 }
-            }
+                v => {
+                    let x = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("SUM over non-numeric {v}"))?;
+                    *any = true;
+                    if !*float_mode {
+                        *float_mode = true;
+                        *fsum = *isum as f64;
+                    }
+                    *fsum += x;
+                }
+            },
             AggAcc::Avg { sum, n } => {
                 if !args[0].is_null() {
                     *sum += args[0]
@@ -225,13 +417,13 @@ impl AggAcc {
     fn finish(&self) -> Result<Value> {
         Ok(match self {
             AggAcc::CountStar(n) | AggAcc::Count(n) => Value::Int(*n),
-            AggAcc::Sum { sum, all_int, any } => {
+            AggAcc::Sum { isum, fsum, float_mode, any } => {
                 if !any {
                     Value::Null
-                } else if *all_int {
-                    Value::Int(*sum as i64)
+                } else if *float_mode {
+                    Value::Float(*fsum)
                 } else {
-                    Value::Float(*sum)
+                    Value::Int(*isum)
                 }
             }
             AggAcc::Avg { sum, n } => {
@@ -254,7 +446,7 @@ fn aggregate(
     ctx: &ExecContext,
 ) -> Result<RowSet> {
     // Evaluate group keys and aggregate arguments as columns first
-    // (vectorized), then fold rows into group states.
+    // (vectorized), then group.
     let key_cols: Vec<Column> = group
         .iter()
         .map(|(e, _)| eval_expr(e, rows, &ctx.udfs))
@@ -268,7 +460,327 @@ fn aggregate(
                 .collect::<Result<Vec<_>>>()
         })
         .collect::<Result<_>>()?;
+    if ctx.vectorized {
+        aggregate_vectorized(rows, group, aggs, &key_cols, &arg_cols, ctx)
+    } else {
+        aggregate_rowwise(rows, group, aggs, &key_cols, &arg_cols, ctx)
+    }
+}
 
+/// Two-pass vectorized aggregation: (1) assign each row a dense group id
+/// via the key codec, (2) run typed grouped kernels over raw column
+/// slices. Group output order is first-seen order, like the legacy path.
+fn aggregate_vectorized(
+    rows: &RowSet,
+    group: &[(Expr, String)],
+    aggs: &[AggCall],
+    key_cols: &[Column],
+    arg_cols: &[Vec<Column>],
+    ctx: &ExecContext,
+) -> Result<RowSet> {
+    let n = rows.num_rows();
+    // Pass 1: dense group ids.
+    let (group_of, rep_rows, n_groups) = if group.is_empty() {
+        // Global aggregation: one group, even over empty input.
+        (vec![0u32; n], Vec::new(), 1)
+    } else {
+        let mut dict = KeyDict::new();
+        let keys = EncodedKeys::encode(key_cols, KeyMode::Group, &mut dict);
+        let g = assign_group_ids(&keys);
+        let n_groups = g.n_groups();
+        (g.ids, g.rep_rows, n_groups)
+    };
+
+    // Pass 2: key columns gather from the representative rows; aggregates
+    // run typed kernels.
+    let mut fields = Vec::with_capacity(group.len() + aggs.len());
+    let mut columns = Vec::with_capacity(group.len() + aggs.len());
+    for ((_, name), col) in group.iter().zip(key_cols) {
+        let out = col.take(&rep_rows);
+        fields.push(Field::new(name.clone(), out.data_type()));
+        columns.push(out);
+    }
+    for (call, cols) in aggs.iter().zip(arg_cols) {
+        let out = agg_kernel(call, cols, &group_of, n_groups, ctx)?;
+        fields.push(Field::new(call.out_name.clone(), out.data_type()));
+        columns.push(out);
+    }
+    RowSet::new(Schema::new(fields), columns)
+}
+
+/// Dispatch one aggregate call to its typed grouped kernel; UDAFs fall
+/// back to the accumulator path (per group, not per row-key).
+fn agg_kernel(
+    call: &AggCall,
+    args: &[Column],
+    gids: &[u32],
+    n_groups: usize,
+    ctx: &ExecContext,
+) -> Result<Column> {
+    match call.func {
+        AggFunc::CountStar => {
+            let mut counts = vec![0i64; n_groups];
+            for &g in gids {
+                counts[g as usize] += 1;
+            }
+            Ok(Column::from_i64(counts))
+        }
+        AggFunc::Count => Ok(count_by_group(&args[0], gids, n_groups)),
+        AggFunc::Sum => sum_by_group(&args[0], gids, n_groups),
+        AggFunc::Avg => avg_by_group(&args[0], gids, n_groups),
+        AggFunc::Min => Ok(min_max_by_group(&args[0], gids, n_groups, true)),
+        AggFunc::Max => Ok(min_max_by_group(&args[0], gids, n_groups, false)),
+        AggFunc::Udaf => udaf_by_group(call, args, gids, n_groups, ctx),
+    }
+}
+
+/// All-NULL Float64 column — the type the legacy value-derived schema
+/// assigned when an aggregate produced no non-NULL value at all.
+fn null_f64_column(n: usize) -> Column {
+    Column::Float64 {
+        data: vec![0.0; n],
+        valid: if n > 0 { Some(vec![false; n]) } else { None },
+    }
+}
+
+/// `None` when every group has a value (no validity mask needed).
+fn mask_from_any(any: &[bool]) -> Option<Vec<bool>> {
+    if any.iter().all(|&a| a) {
+        None
+    } else {
+        Some(any.to_vec())
+    }
+}
+
+/// SUM/AVG over a non-numeric column: error on the first non-NULL value
+/// (matching the legacy row path); all-NULL input yields NULL sums.
+fn non_numeric_agg(what: &str, col: &Column, n_groups: usize) -> Result<Column> {
+    for r in 0..col.len() {
+        if col.is_valid(r) {
+            bail!("{what} over non-numeric {}", col.value(r));
+        }
+    }
+    Ok(null_f64_column(n_groups))
+}
+
+fn count_by_group(col: &Column, gids: &[u32], n_groups: usize) -> Column {
+    let mut counts = vec![0i64; n_groups];
+    match col.validity() {
+        None => {
+            for &g in gids {
+                counts[g as usize] += 1;
+            }
+        }
+        Some(valid) => {
+            for (r, &g) in gids.iter().enumerate() {
+                if valid[r] {
+                    counts[g as usize] += 1;
+                }
+            }
+        }
+    }
+    Column::from_i64(counts)
+}
+
+/// Grouped SUM. Int64 inputs accumulate in `i64` with overflow-checked
+/// widening to `f64` (per group; any overflow widens the output column).
+fn sum_by_group(col: &Column, gids: &[u32], n_groups: usize) -> Result<Column> {
+    match col {
+        Column::Int64 { data, valid } => {
+            let mut isums = vec![0i64; n_groups];
+            // Allocated lazily on the first overflow.
+            let mut fsums: Vec<f64> = Vec::new();
+            let mut overflowed: Vec<bool> = Vec::new();
+            let mut any = vec![false; n_groups];
+            for (r, &g) in gids.iter().enumerate() {
+                if valid.as_ref().map_or(true, |v| v[r]) {
+                    let g = g as usize;
+                    any[g] = true;
+                    if !overflowed.is_empty() && overflowed[g] {
+                        fsums[g] += data[r] as f64;
+                    } else {
+                        match isums[g].checked_add(data[r]) {
+                            Some(s) => isums[g] = s,
+                            None => {
+                                if overflowed.is_empty() {
+                                    overflowed = vec![false; n_groups];
+                                    fsums = vec![0.0; n_groups];
+                                }
+                                overflowed[g] = true;
+                                fsums[g] = isums[g] as f64 + data[r] as f64;
+                            }
+                        }
+                    }
+                }
+            }
+            if !any.iter().any(|&a| a) {
+                return Ok(null_f64_column(n_groups));
+            }
+            if overflowed.is_empty() {
+                Ok(Column::Int64 { data: isums, valid: mask_from_any(&any) })
+            } else {
+                // At least one group overflowed i64: widen the column.
+                let data: Vec<f64> = (0..n_groups)
+                    .map(|g| if overflowed[g] { fsums[g] } else { isums[g] as f64 })
+                    .collect();
+                Ok(Column::Float64 { data, valid: mask_from_any(&any) })
+            }
+        }
+        Column::Float64 { data, valid } => {
+            let mut sums = vec![0.0f64; n_groups];
+            let mut any = vec![false; n_groups];
+            for (r, &g) in gids.iter().enumerate() {
+                if valid.as_ref().map_or(true, |v| v[r]) {
+                    sums[g as usize] += data[r];
+                    any[g as usize] = true;
+                }
+            }
+            if !any.iter().any(|&a| a) {
+                return Ok(null_f64_column(n_groups));
+            }
+            Ok(Column::Float64 { data: sums, valid: mask_from_any(&any) })
+        }
+        other => non_numeric_agg("SUM", other, n_groups),
+    }
+}
+
+fn avg_by_group(col: &Column, gids: &[u32], n_groups: usize) -> Result<Column> {
+    let mut sums = vec![0.0f64; n_groups];
+    let mut counts = vec![0i64; n_groups];
+    match col {
+        Column::Int64 { data, valid } => {
+            for (r, &g) in gids.iter().enumerate() {
+                if valid.as_ref().map_or(true, |v| v[r]) {
+                    sums[g as usize] += data[r] as f64;
+                    counts[g as usize] += 1;
+                }
+            }
+        }
+        Column::Float64 { data, valid } => {
+            for (r, &g) in gids.iter().enumerate() {
+                if valid.as_ref().map_or(true, |v| v[r]) {
+                    sums[g as usize] += data[r];
+                    counts[g as usize] += 1;
+                }
+            }
+        }
+        other => return non_numeric_agg("AVG", other, n_groups),
+    }
+    let data: Vec<f64> = sums
+        .iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect();
+    let any: Vec<bool> = counts.iter().map(|&c| c > 0).collect();
+    Ok(Column::Float64 { data, valid: mask_from_any(&any) })
+}
+
+/// Grouped MIN/MAX via best-row indices: one typed compare per row, then a
+/// single typed gather — no `Value` comparisons, no string clones.
+fn min_max_by_group(col: &Column, gids: &[u32], n_groups: usize, is_min: bool) -> Column {
+    fn scan_best<F: Fn(usize, usize) -> bool>(
+        gids: &[u32],
+        valid: Option<&[bool]>,
+        best: &mut [i64],
+        better: F,
+    ) {
+        for (r, &g) in gids.iter().enumerate() {
+            if valid.map_or(true, |v| v[r]) {
+                let b = &mut best[g as usize];
+                if *b < 0 || better(r, *b as usize) {
+                    *b = r as i64;
+                }
+            }
+        }
+    }
+
+    let mut best: Vec<i64> = vec![-1; n_groups];
+    let valid = col.validity();
+    match col {
+        Column::Int64 { data, .. } => scan_best(gids, valid, &mut best, |r, b| {
+            if is_min {
+                data[r] < data[b]
+            } else {
+                data[r] > data[b]
+            }
+        }),
+        Column::Float64 { data, .. } => scan_best(gids, valid, &mut best, |r, b| {
+            // Mirrors `Value::sql_cmp`: NaN compares as unknown, so it
+            // never replaces the current best.
+            let ord = data[r].partial_cmp(&data[b]);
+            if is_min {
+                ord == Some(Ordering::Less)
+            } else {
+                ord == Some(Ordering::Greater)
+            }
+        }),
+        Column::Utf8 { data, .. } => scan_best(gids, valid, &mut best, |r, b| {
+            if is_min {
+                data[r] < data[b]
+            } else {
+                data[r] > data[b]
+            }
+        }),
+        Column::Bool { data, .. } => scan_best(gids, valid, &mut best, |r, b| {
+            if is_min {
+                !data[r] & data[b]
+            } else {
+                data[r] & !data[b]
+            }
+        }),
+    }
+    if best.iter().all(|&b| b < 0) {
+        // No non-NULL input anywhere: legacy schema derivation fell back
+        // to Float64.
+        return null_f64_column(n_groups);
+    }
+    col.gather_opt(&best)
+}
+
+/// UDAF fallback: accumulator states per dense group id (still avoids the
+/// per-row key materialization of the legacy path).
+fn udaf_by_group(
+    call: &AggCall,
+    args: &[Column],
+    gids: &[u32],
+    n_groups: usize,
+    ctx: &ExecContext,
+) -> Result<Column> {
+    let udaf = ctx
+        .udfs
+        .udaf(&call.name)
+        .ok_or_else(|| anyhow!("no UDAF {:?}", call.name))?;
+    let mut states: Vec<Box<dyn crate::udf::UdafState>> =
+        (0..n_groups).map(|_| (udaf.factory)()).collect();
+    let mut argv: Vec<Value> = Vec::with_capacity(args.len());
+    for (r, &g) in gids.iter().enumerate() {
+        argv.clear();
+        for c in args {
+            argv.push(c.value(r));
+        }
+        states[g as usize].update(&argv)?;
+    }
+    let mut vals = Vec::with_capacity(n_groups);
+    for s in &states {
+        vals.push(s.finish()?);
+    }
+    let mut dt = udaf.return_type;
+    if dt == DataType::Int64 && vals.iter().any(|v| matches!(v, Value::Float(_))) {
+        dt = DataType::Float64;
+    }
+    Column::from_values(dt, &vals)
+}
+
+/// Legacy row-at-a-time aggregation (kept for differential tests and the
+/// codec on/off ablation).
+fn aggregate_rowwise(
+    rows: &RowSet,
+    group: &[(Expr, String)],
+    aggs: &[AggCall],
+    key_cols: &[Column],
+    arg_cols: &[Vec<Column>],
+    ctx: &ExecContext,
+) -> Result<RowSet> {
     let n = rows.num_rows();
     let mut groups: std::collections::HashMap<Vec<KeyValue>, GroupState> =
         std::collections::HashMap::new();
@@ -293,7 +805,7 @@ fn aggregate(
                 groups.get_mut(&key).unwrap()
             }
         };
-        for (acc, cols) in state.accs.iter_mut().zip(&arg_cols) {
+        for (acc, cols) in state.accs.iter_mut().zip(arg_cols) {
             let args: Vec<Value> = cols.iter().map(|c| c.value(r)).collect();
             acc.update(&args)?;
         }
@@ -320,11 +832,13 @@ fn aggregate(
         out_values.push(row);
     }
     let mut fields = Vec::new();
-    for ((e, name), col) in group.iter().zip(&key_cols) {
-        let _ = e;
+    for ((_, name), col) in group.iter().zip(key_cols) {
         fields.push(Field::new(name.clone(), col.data_type()));
     }
-    for a in aggs {
+    // Each aggregate's output type is computed once from its own output
+    // column (the old code re-scanned `aggs` per produced row, which was
+    // quadratic in the number of aggregates times groups).
+    for (ai, a) in aggs.iter().enumerate() {
         let dt = match a.func {
             AggFunc::CountStar | AggFunc::Count => DataType::Int64,
             AggFunc::Avg => DataType::Float64,
@@ -332,7 +846,7 @@ fn aggregate(
                 // Derive from produced values; default Float64.
                 out_values
                     .iter()
-                    .find_map(|row| row[group.len() + aggs.iter().position(|x| std::ptr::eq(x, a)).unwrap()].data_type())
+                    .find_map(|row| row[group.len() + ai].data_type())
                     .unwrap_or(DataType::Float64)
             }
             AggFunc::Udaf => ctx
@@ -348,7 +862,7 @@ fn aggregate(
     let mut columns = Vec::with_capacity(n_cols);
     for c in 0..n_cols {
         let vals: Vec<Value> = out_values.iter().map(|r| r[c].clone()).collect();
-        // Widen Int to Float if mixed (e.g. SUM over mixed groups).
+        // Widen Int to Float if mixed (e.g. SUM overflow in some groups).
         let dt = if schema.field(c).data_type == DataType::Int64
             && vals.iter().any(|v| matches!(v, Value::Float(_)))
         {
@@ -406,7 +920,10 @@ fn plan_alias(p: &Plan, default: &str) -> String {
 }
 
 /// Hash join (equi) with optional residual filter; falls back to a
-/// nested-loop cross product + filter when no equi keys exist.
+/// nested-loop cross product + filter when no equi keys exist. The
+/// vectorized path builds its table from codec-encoded keys and probes
+/// with `&[u8]` compares; both paths emit `l_idx`/`r_idx` gather vectors
+/// that materialize through typed column gathers.
 fn join(
     l: &RowSet,
     r: &RowSet,
@@ -449,7 +966,7 @@ fn join(
         }
     }
 
-    let mut l_idx: Vec<usize> = Vec::new();
+    let mut l_idx: Vec<i64> = Vec::new();
     let mut r_idx: Vec<i64> = Vec::new(); // -1 = NULL row (left join)
 
     if lkeys.is_empty() {
@@ -457,66 +974,92 @@ fn join(
         for i in 0..l.num_rows() {
             let mut matched = false;
             for j in 0..r.num_rows() {
-                l_idx.push(i);
+                l_idx.push(i as i64);
                 r_idx.push(j as i64);
                 matched = true;
             }
             if !matched && kind == JoinKind::Left {
-                l_idx.push(i);
+                l_idx.push(i as i64);
                 r_idx.push(-1);
             }
         }
     } else {
-        // Build hash table on the right side.
         let rkey_cols: Vec<Column> = rkeys
             .iter()
             .map(|e| eval_expr(e, r, &ctx.udfs))
             .collect::<Result<_>>()?;
-        let mut table: std::collections::HashMap<Vec<KeyValue>, Vec<usize>> =
-            std::collections::HashMap::new();
-        for j in 0..r.num_rows() {
-            let key: Vec<KeyValue> = rkey_cols
-                .iter()
-                .map(|c| KeyValue::join_normalized(&c.value(j)))
-                .collect();
-            // SQL join: NULL keys never match.
-            if key.iter().any(|k| matches!(k, KeyValue::Null)) {
-                continue;
-            }
-            table.entry(key).or_default().push(j);
-        }
         let lkey_cols: Vec<Column> = lkeys
             .iter()
             .map(|e| eval_expr(e, l, &ctx.udfs))
             .collect::<Result<_>>()?;
-        for i in 0..l.num_rows() {
-            let key: Vec<KeyValue> = lkey_cols
-                .iter()
-                .map(|c| KeyValue::join_normalized(&c.value(i)))
-                .collect();
-            let matches = if key.iter().any(|k| matches!(k, KeyValue::Null)) {
-                None
-            } else {
-                table.get(&key)
-            };
-            match matches {
-                Some(js) => {
-                    for &j in js {
-                        l_idx.push(i);
+        if ctx.vectorized {
+            // One shared dict so equal strings on both sides intern to
+            // equal ids; one hash per row, zero key clones.
+            let mut dict = KeyDict::new();
+            let table =
+                JoinTable::build(EncodedKeys::encode(&rkey_cols, KeyMode::Join, &mut dict));
+            let probe = EncodedKeys::encode(&lkey_cols, KeyMode::Join, &mut dict);
+            for i in 0..l.num_rows() {
+                let mut matched = false;
+                if !probe.has_null(i) {
+                    // SQL join: NULL keys never match.
+                    let mut m = table.first_match(probe.key(i), probe.hash(i));
+                    while let Some(j) = m {
+                        l_idx.push(i as i64);
                         r_idx.push(j as i64);
+                        matched = true;
+                        m = table.next_match(j);
                     }
                 }
-                None => {
-                    if kind == JoinKind::Left {
-                        l_idx.push(i);
-                        r_idx.push(-1);
+                if !matched && kind == JoinKind::Left {
+                    l_idx.push(i as i64);
+                    r_idx.push(-1);
+                }
+            }
+        } else {
+            // Legacy path: per-row KeyValue materialization.
+            let mut table: std::collections::HashMap<Vec<KeyValue>, Vec<usize>> =
+                std::collections::HashMap::new();
+            for j in 0..r.num_rows() {
+                let key: Vec<KeyValue> = rkey_cols
+                    .iter()
+                    .map(|c| KeyValue::join_normalized(&c.value(j)))
+                    .collect();
+                // SQL join: NULL keys never match.
+                if key.iter().any(|k| matches!(k, KeyValue::Null)) {
+                    continue;
+                }
+                table.entry(key).or_default().push(j);
+            }
+            for i in 0..l.num_rows() {
+                let key: Vec<KeyValue> = lkey_cols
+                    .iter()
+                    .map(|c| KeyValue::join_normalized(&c.value(i)))
+                    .collect();
+                let matches = if key.iter().any(|k| matches!(k, KeyValue::Null)) {
+                    None
+                } else {
+                    table.get(&key)
+                };
+                match matches {
+                    Some(js) => {
+                        for &j in js {
+                            l_idx.push(i as i64);
+                            r_idx.push(j as i64);
+                        }
+                    }
+                    None => {
+                        if kind == JoinKind::Left {
+                            l_idx.push(i as i64);
+                            r_idx.push(-1);
+                        }
                     }
                 }
             }
         }
     }
 
-    // Materialize the combined rowset.
+    // Materialize the combined rowset through typed gathers.
     let combined = materialize_join(l, r, &out_schema, &l_idx, &r_idx)?;
 
     // Residual predicate + left-join NULL-row preservation: rows that fail
@@ -538,67 +1081,149 @@ fn materialize_join(
     l: &RowSet,
     r: &RowSet,
     schema: &Schema,
-    l_idx: &[usize],
+    l_idx: &[i64],
     r_idx: &[i64],
 ) -> Result<RowSet> {
-    let left_cols = l.num_columns();
-    let mut columns = Vec::with_capacity(schema.len());
-    for (c, f) in schema.fields.iter().enumerate() {
-        if c < left_cols {
-            columns.push(l.column(c).take(l_idx));
-        } else {
-            let src = r.column(c - left_cols);
-            // Gather with NULLs for -1 (unmatched left rows).
-            let values: Vec<Value> = r_idx
-                .iter()
-                .map(|&j| {
-                    if j < 0 {
-                        Value::Null
-                    } else {
-                        src.value(j as usize)
-                    }
-                })
-                .collect();
-            columns.push(Column::from_values(f.data_type, &values)?);
-        }
-    }
+    let left = l.gather(l_idx, false);
+    let right = r.gather(r_idx, true); // -1 = NULL row (unmatched left rows)
+    let mut columns = left.columns;
+    columns.extend(right.columns);
     RowSet::new(schema.clone(), columns)
 }
 
 // --------------------------------------------------------------------- sort
 
-fn sort(rows: &RowSet, keys: &[OrderKey], ctx: &ExecContext) -> Result<RowSet> {
+/// A decorated sort key: raw typed slice + validity + direction, computed
+/// once so the comparator never materializes a `Value` (or clones a
+/// string) per comparison.
+enum SortVals<'a> {
+    I64(&'a [i64]),
+    F64(&'a [f64]),
+    Str(&'a [String]),
+    Bool(&'a [bool]),
+}
+
+struct SortKeyCol<'a> {
+    vals: SortVals<'a>,
+    valid: Option<&'a [bool]>,
+    descending: bool,
+}
+
+fn decorate<'a>(keys: &[OrderKey], cols: &'a [Column]) -> Vec<SortKeyCol<'a>> {
+    keys.iter()
+        .zip(cols)
+        .map(|(k, c)| {
+            let vals = match c {
+                Column::Int64 { data, .. } => SortVals::I64(data),
+                Column::Float64 { data, .. } => SortVals::F64(data),
+                Column::Utf8 { data, .. } => SortVals::Str(data),
+                Column::Bool { data, .. } => SortVals::Bool(data),
+            };
+            SortKeyCol { vals, valid: c.validity(), descending: k.descending }
+        })
+        .collect()
+}
+
+fn cmp_decorated(keys: &[SortKeyCol], a: usize, b: usize) -> Ordering {
+    for k in keys {
+        let na = k.valid.map_or(false, |v| !v[a]);
+        let nb = k.valid.map_or(false, |v| !v[b]);
+        // NULLS LAST in ascending order.
+        let ord = match (na, nb) {
+            (true, true) => Ordering::Equal,
+            (true, false) => Ordering::Greater,
+            (false, true) => Ordering::Less,
+            (false, false) => match &k.vals {
+                SortVals::I64(d) => d[a].cmp(&d[b]),
+                SortVals::F64(d) => d[a].partial_cmp(&d[b]).unwrap_or(Ordering::Equal),
+                SortVals::Str(d) => d[a].cmp(&d[b]),
+                SortVals::Bool(d) => d[a].cmp(&d[b]),
+            },
+        };
+        let ord = if k.descending { ord.reverse() } else { ord };
+        if ord != Ordering::Equal {
+            return ord;
+        }
+    }
+    Ordering::Equal
+}
+
+/// Legacy comparator over scalar `Value`s (row-at-a-time path).
+fn cmp_values(keys: &[OrderKey], cols: &[Column], a: usize, b: usize) -> Ordering {
+    for (k, col) in keys.iter().zip(cols) {
+        let va = col.value(a);
+        let vb = col.value(b);
+        // NULLS LAST in ascending order.
+        let ord = match (va.is_null(), vb.is_null()) {
+            (true, true) => Ordering::Equal,
+            (true, false) => Ordering::Greater,
+            (false, true) => Ordering::Less,
+            (false, false) => va.sql_cmp(&vb).unwrap_or(Ordering::Equal),
+        };
+        let ord = if k.descending { ord.reverse() } else { ord };
+        if ord != Ordering::Equal {
+            return ord;
+        }
+    }
+    Ordering::Equal
+}
+
+/// Order `idx` by `cmp`; with a limit, partition the top `k` first
+/// (`select_nth_unstable_by`) and only sort that prefix.
+fn apply_order<F: FnMut(&usize, &usize) -> Ordering>(
+    idx: &mut Vec<usize>,
+    limit: Option<usize>,
+    cmp: &mut F,
+) {
+    match limit {
+        Some(0) => idx.clear(),
+        Some(k) if k < idx.len() => {
+            let _ = idx.select_nth_unstable_by(k - 1, &mut *cmp);
+            idx[..k].sort_unstable_by(&mut *cmp);
+            idx.truncate(k);
+        }
+        _ => idx.sort_unstable_by(&mut *cmp),
+    }
+}
+
+/// Sort (optionally top-k when `limit` is set). Sort keys are decorated
+/// once — typed slices + validity — instead of materializing two `Value`s
+/// per comparison. The comparator is a strict total order (index
+/// tiebreak), so top-k output is identical to sort-then-limit.
+fn sort(
+    rows: &RowSet,
+    keys: &[OrderKey],
+    ctx: &ExecContext,
+    limit: Option<usize>,
+) -> Result<RowSet> {
     let key_cols: Vec<Column> = keys
         .iter()
         .map(|k| eval_expr(&k.expr, rows, &ctx.udfs))
         .collect::<Result<_>>()?;
     let mut idx: Vec<usize> = (0..rows.num_rows()).collect();
-    idx.sort_by(|&a, &b| {
-        for (k, col) in keys.iter().zip(&key_cols) {
-            let va = col.value(a);
-            let vb = col.value(b);
-            // NULLS LAST in ascending order.
-            let ord = match (va.is_null(), vb.is_null()) {
-                (true, true) => std::cmp::Ordering::Equal,
-                (true, false) => std::cmp::Ordering::Greater,
-                (false, true) => std::cmp::Ordering::Less,
-                (false, false) => va.sql_cmp(&vb).unwrap_or(std::cmp::Ordering::Equal),
-            };
-            let ord = if k.descending { ord.reverse() } else { ord };
-            if ord != std::cmp::Ordering::Equal {
-                return ord;
-            }
-        }
-        a.cmp(&b) // stable tiebreak
-    });
+    if ctx.vectorized {
+        let dk = decorate(keys, &key_cols);
+        let mut cmp =
+            |a: &usize, b: &usize| cmp_decorated(&dk, *a, *b).then_with(|| a.cmp(b));
+        apply_order(&mut idx, limit, &mut cmp);
+    } else {
+        let mut cmp =
+            |a: &usize, b: &usize| cmp_values(keys, &key_cols, *a, *b).then_with(|| a.cmp(b));
+        apply_order(&mut idx, limit, &mut cmp);
+    }
     Ok(rows.take(&idx))
 }
 
 /// Convenience: parse, plan, and execute a SQL string.
 pub fn run_sql(sql: &str, ctx: &ExecContext) -> Result<RowSet> {
+    Ok(run_sql_with_stats(sql, ctx)?.0)
+}
+
+/// Like [`run_sql`], also returning per-operator rows and timings.
+pub fn run_sql_with_stats(sql: &str, ctx: &ExecContext) -> Result<(RowSet, QueryStats)> {
     let q = crate::sql::parse_query(sql)?;
     let plan = super::plan::plan_query(&q, &ctx.udfs)?;
-    execute_plan(&plan, ctx)
+    execute_plan_with_stats(&plan, ctx)
 }
 
 #[cfg(test)]
@@ -642,6 +1267,14 @@ mod tests {
 
     fn sql(s: &str) -> RowSet {
         run_sql(s, &ctx()).unwrap_or_else(|e| panic!("{s}: {e}"))
+    }
+
+    /// Same statement through the codec and the legacy row path.
+    fn sql_both(s: &str) -> (RowSet, RowSet) {
+        let vectorized = run_sql(s, &ctx()).unwrap_or_else(|e| panic!("{s}: {e}"));
+        let rowwise = run_sql(s, &ctx().with_vectorized(false))
+            .unwrap_or_else(|e| panic!("{s} (rowwise): {e}"));
+        (vectorized, rowwise)
     }
 
     #[test]
@@ -769,6 +1402,88 @@ mod tests {
     fn limit_zero_and_overrun() {
         assert_eq!(sql("SELECT * FROM sales LIMIT 0").num_rows(), 0);
         assert_eq!(sql("SELECT * FROM sales LIMIT 99").num_rows(), 5);
+    }
+
+    #[test]
+    fn codec_and_rowwise_paths_agree() {
+        for q in [
+            "SELECT cat, COUNT(*) AS n, SUM(price) AS s, AVG(qty) AS a, MIN(price) AS lo, \
+             MAX(price) AS hi FROM sales GROUP BY cat",
+            "SELECT qty, COUNT(*) AS n FROM sales GROUP BY qty",
+            "SELECT s.id, c.label FROM sales s JOIN cats c ON s.cat = c.cat",
+            "SELECT s.id, c.label FROM sales s LEFT JOIN cats c ON s.cat = c.cat",
+            "SELECT id, cat FROM sales ORDER BY cat, price DESC",
+            "SELECT id FROM sales ORDER BY price DESC LIMIT 3",
+        ] {
+            let (vectorized, rowwise) = sql_both(q);
+            assert_eq!(vectorized, rowwise, "{q}");
+        }
+    }
+
+    #[test]
+    fn sum_int_keeps_i64_precision() {
+        // 2^53 + 1 is not representable in f64: the old f64 accumulator
+        // silently rounded it.
+        let catalog = Arc::new(Catalog::new());
+        let big = (1i64 << 53) + 1;
+        let t = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Int64)]),
+            vec![Column::from_i64(vec![big, 0])],
+        )
+        .unwrap();
+        catalog.register("t", t);
+        for vectorized in [true, false] {
+            let c = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_vectorized(vectorized);
+            let rs = run_sql("SELECT SUM(x) AS s FROM t", &c).unwrap();
+            assert_eq!(rs.row(0)[0], Value::Int(big), "vectorized={vectorized}");
+        }
+    }
+
+    #[test]
+    fn sum_int_overflow_widens_to_float() {
+        let catalog = Arc::new(Catalog::new());
+        let t = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Int64)]),
+            vec![Column::from_i64(vec![i64::MAX, i64::MAX])],
+        )
+        .unwrap();
+        catalog.register("t", t);
+        for vectorized in [true, false] {
+            let c = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_vectorized(vectorized);
+            let rs = run_sql("SELECT SUM(x) AS s FROM t", &c).unwrap();
+            let got = rs.row(0)[0].as_f64().unwrap();
+            let want = i64::MAX as f64 * 2.0;
+            assert!((got - want).abs() / want < 1e-12, "vectorized={vectorized}: {got}");
+        }
+    }
+
+    #[test]
+    fn top_k_matches_full_sort() {
+        let rs_k = sql("SELECT id FROM sales ORDER BY price DESC, id LIMIT 2");
+        assert_eq!(rs_k.num_rows(), 2);
+        assert_eq!(rs_k.row(0)[0], Value::Int(5));
+        assert_eq!(rs_k.row(1)[0], Value::Int(4));
+        // Hidden sort key (ORDER BY column not in the select list) also
+        // takes the top-k path through the planner's projection.
+        let rs_h = sql("SELECT cat FROM sales ORDER BY price DESC LIMIT 1");
+        assert_eq!(rs_h.row(0)[0], Value::Str("a".into()));
+        assert_eq!(rs_h.schema.names(), vec!["cat"]);
+    }
+
+    #[test]
+    fn query_stats_observe_operators() {
+        let (out, stats) =
+            run_sql_with_stats("SELECT cat, COUNT(*) AS n FROM sales GROUP BY cat", &ctx())
+                .unwrap();
+        assert_eq!(stats.rows_scanned, 5);
+        assert_eq!(stats.rows_output, out.num_rows() as u64);
+        assert_eq!(stats.aggregate.invocations, 1);
+        assert_eq!(stats.aggregate.rows_in, 5);
+        assert_eq!(stats.aggregate.rows_out, 2);
+        let report = stats.report();
+        assert!(report.contains("aggregate"), "{report}");
     }
 
     #[test]

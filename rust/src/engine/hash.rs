@@ -1,0 +1,461 @@
+//! Columnar key codec for grouping and hash joins.
+//!
+//! `EncodedKeys` turns a batch of key columns into a flat fixed-stride byte
+//! buffer (one 9-byte `tag + payload` cell per key column per row) plus a
+//! precomputed 64-bit hash per row. Strings are interned through a
+//! per-batch [`KeyDict`], so equal strings encode to equal 8-byte ids and
+//! key comparison is a plain `&[u8]` slice compare — no `Value` or
+//! `Vec<KeyValue>` materialization, no per-row clones.
+//!
+//! On top of the codec sit two open-addressing tables (power-of-two
+//! capacity, linear probing, ≤ 0.5 load factor, so no resizing):
+//! [`assign_group_ids`] maps every row to a dense `u32` group id in
+//! first-seen order, and [`JoinTable`] is a build-side multimap that the
+//! probe side walks via `first_match`/`next_match`. Each input row costs
+//! exactly one hash and zero key clones.
+//!
+//! Normalization mirrors `engine::key::KeyValue`:
+//! - GROUP BY ([`KeyMode::Group`]): NULLs group together, `-0.0`
+//!   normalizes to `0.0`, `Int` and `Float` stay distinct.
+//! - Joins ([`KeyMode::Join`]): integral floats additionally collapse to
+//!   ints so `a.id = b.id_float` matches; rows with a NULL key are flagged
+//!   (`has_null`) so the operators can apply "NULL never matches".
+
+use std::collections::HashMap;
+
+use crate::types::Column;
+
+const TAG_NULL: u8 = 0;
+const TAG_INT: u8 = 1;
+const TAG_FLOAT: u8 = 2;
+const TAG_STR: u8 = 3;
+const TAG_BOOL: u8 = 4;
+
+/// Bytes per key column per row: 1 tag byte + 8 payload bytes.
+const KEY_WIDTH: usize = 9;
+
+/// Sentinel for "empty slot" / "no next row" in the open-addressing tables.
+const NO_ROW: u32 = u32::MAX;
+
+/// Key normalization mode (GROUP BY vs equi-join semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyMode {
+    /// GROUP BY: `Int(5)` and `Float(5.0)` are distinct keys.
+    Group,
+    /// Equi-join: integral floats normalize to ints so they match across
+    /// representations.
+    Join,
+}
+
+/// Per-batch string interner. Share one dict across the build and probe
+/// sides of a join so equal strings on both sides get equal ids.
+#[derive(Debug, Default)]
+pub struct KeyDict {
+    ids: HashMap<String, u64>,
+}
+
+impl KeyDict {
+    pub fn new() -> Self {
+        Self { ids: HashMap::new() }
+    }
+
+    /// Id for `s`, allocating the next dense id on first sight.
+    pub fn intern(&mut self, s: &str) -> u64 {
+        if let Some(&id) = self.ids.get(s) {
+            return id;
+        }
+        let id = self.ids.len() as u64;
+        self.ids.insert(s.to_string(), id);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+/// A batch of key rows, encoded to fixed-stride bytes with precomputed
+/// hashes and a per-row "any key is NULL" flag.
+#[derive(Debug)]
+pub struct EncodedKeys {
+    stride: usize,
+    len: usize,
+    buf: Vec<u8>,
+    hashes: Vec<u64>,
+    nulls: Vec<bool>,
+}
+
+impl EncodedKeys {
+    /// Encode `cols` (all the same length) under `mode`, interning strings
+    /// into `dict`.
+    pub fn encode(cols: &[Column], mode: KeyMode, dict: &mut KeyDict) -> EncodedKeys {
+        let n = cols.first().map_or(0, Column::len);
+        let stride = cols.len() * KEY_WIDTH;
+        let mut buf = vec![0u8; n * stride];
+        let mut nulls = vec![false; n];
+        for (j, col) in cols.iter().enumerate() {
+            let off = j * KEY_WIDTH;
+            let valid = col.validity();
+            match col {
+                Column::Int64 { data, .. } => {
+                    for r in 0..n {
+                        if valid.map_or(true, |v| v[r]) {
+                            let cell = &mut buf[r * stride + off..r * stride + off + KEY_WIDTH];
+                            cell[0] = TAG_INT;
+                            cell[1..].copy_from_slice(&data[r].to_le_bytes());
+                        } else {
+                            nulls[r] = true; // cell stays TAG_NULL + zeros
+                        }
+                    }
+                }
+                Column::Float64 { data, .. } => {
+                    for r in 0..n {
+                        if valid.map_or(true, |v| v[r]) {
+                            let f = data[r];
+                            let cell = &mut buf[r * stride + off..r * stride + off + KEY_WIDTH];
+                            if mode == KeyMode::Join && f.fract() == 0.0 && f.abs() < 9.0e18 {
+                                cell[0] = TAG_INT;
+                                cell[1..].copy_from_slice(&(f as i64).to_le_bytes());
+                            } else {
+                                let norm = if f == 0.0 { 0.0 } else { f }; // -0.0 -> 0.0
+                                cell[0] = TAG_FLOAT;
+                                cell[1..].copy_from_slice(&norm.to_bits().to_le_bytes());
+                            }
+                        } else {
+                            nulls[r] = true;
+                        }
+                    }
+                }
+                Column::Utf8 { data, .. } => {
+                    for r in 0..n {
+                        if valid.map_or(true, |v| v[r]) {
+                            let id = dict.intern(&data[r]);
+                            let cell = &mut buf[r * stride + off..r * stride + off + KEY_WIDTH];
+                            cell[0] = TAG_STR;
+                            cell[1..].copy_from_slice(&id.to_le_bytes());
+                        } else {
+                            nulls[r] = true;
+                        }
+                    }
+                }
+                Column::Bool { data, .. } => {
+                    for r in 0..n {
+                        if valid.map_or(true, |v| v[r]) {
+                            let cell = &mut buf[r * stride + off..r * stride + off + KEY_WIDTH];
+                            cell[0] = TAG_BOOL;
+                            cell[1..].copy_from_slice(&u64::from(data[r]).to_le_bytes());
+                        } else {
+                            nulls[r] = true;
+                        }
+                    }
+                }
+            }
+        }
+        let hashes = (0..n)
+            .map(|r| hash_bytes(&buf[r * stride..(r + 1) * stride]))
+            .collect();
+        EncodedKeys { stride, len: n, buf, hashes, nulls }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The encoded bytes of one key row.
+    #[inline]
+    pub fn key(&self, row: usize) -> &[u8] {
+        &self.buf[row * self.stride..(row + 1) * self.stride]
+    }
+
+    #[inline]
+    pub fn hash(&self, row: usize) -> u64 {
+        self.hashes[row]
+    }
+
+    /// True iff any key column is NULL in this row.
+    #[inline]
+    pub fn has_null(&self, row: usize) -> bool {
+        self.nulls[row]
+    }
+}
+
+/// FNV-1a over the encoded key bytes with a murmur3-style finalizer so the
+/// low bits (used for power-of-two bucket masking) are well mixed.
+#[inline]
+fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h
+}
+
+/// Dense group assignment: `ids[r]` is the group of row `r`, `rep_rows[g]`
+/// the first row seen for group `g` (so group order is first-seen order).
+#[derive(Debug)]
+pub struct GroupIds {
+    pub ids: Vec<u32>,
+    pub rep_rows: Vec<usize>,
+}
+
+impl GroupIds {
+    pub fn n_groups(&self) -> usize {
+        self.rep_rows.len()
+    }
+}
+
+/// Assign each encoded key row a dense group id via open addressing.
+/// One hash per row, key equality via `&[u8]` compare against the group's
+/// representative row.
+pub fn assign_group_ids(keys: &EncodedKeys) -> GroupIds {
+    let n = keys.len();
+    if n == 0 {
+        return GroupIds { ids: Vec::new(), rep_rows: Vec::new() };
+    }
+    let cap = (n * 2).next_power_of_two();
+    let mask = cap - 1;
+    let mut slots = vec![NO_ROW; cap]; // group id, or NO_ROW when empty
+    let mut ids = Vec::with_capacity(n);
+    let mut rep_rows: Vec<usize> = Vec::new();
+    for r in 0..n {
+        let h = keys.hash(r);
+        let mut slot = h as usize & mask;
+        loop {
+            let g = slots[slot];
+            if g == NO_ROW {
+                let gid = rep_rows.len() as u32;
+                slots[slot] = gid;
+                rep_rows.push(r);
+                ids.push(gid);
+                break;
+            }
+            let rep = rep_rows[g as usize];
+            if keys.hash(rep) == h && keys.key(rep) == keys.key(r) {
+                ids.push(g);
+                break;
+            }
+            slot = (slot + 1) & mask;
+        }
+    }
+    GroupIds { ids, rep_rows }
+}
+
+/// Hash multimap over the build side of an equi-join. Rows whose key
+/// contains a NULL are skipped at build time (SQL: NULL never matches);
+/// rows with equal keys chain in insertion (ascending row) order.
+#[derive(Debug)]
+pub struct JoinTable {
+    slots: Vec<u32>, // entry index, or NO_ROW when empty
+    mask: usize,
+    entries: Vec<JoinEntry>,
+    next: Vec<u32>, // per build row: next row with the same key
+    keys: EncodedKeys,
+}
+
+#[derive(Debug)]
+struct JoinEntry {
+    /// First build row with this key (representative for comparisons).
+    row: u32,
+    /// Last build row with this key (chain tail for O(1) append).
+    last: u32,
+}
+
+impl JoinTable {
+    pub fn build(keys: EncodedKeys) -> JoinTable {
+        let n = keys.len();
+        let cap = (n.max(1) * 2).next_power_of_two();
+        let mask = cap - 1;
+        let mut slots = vec![NO_ROW; cap];
+        let mut entries: Vec<JoinEntry> = Vec::new();
+        let mut next = vec![NO_ROW; n];
+        for r in 0..n {
+            if keys.has_null(r) {
+                continue;
+            }
+            let h = keys.hash(r);
+            let mut slot = h as usize & mask;
+            loop {
+                let e = slots[slot];
+                if e == NO_ROW {
+                    slots[slot] = entries.len() as u32;
+                    entries.push(JoinEntry { row: r as u32, last: r as u32 });
+                    break;
+                }
+                let rep = entries[e as usize].row as usize;
+                if keys.hash(rep) == h && keys.key(rep) == keys.key(r) {
+                    let ent = &mut entries[e as usize];
+                    next[ent.last as usize] = r as u32;
+                    ent.last = r as u32;
+                    break;
+                }
+                slot = (slot + 1) & mask;
+            }
+        }
+        JoinTable { slots, mask, entries, next, keys }
+    }
+
+    /// First build row matching the probe key, if any.
+    pub fn first_match(&self, key: &[u8], hash: u64) -> Option<u32> {
+        let mut slot = hash as usize & self.mask;
+        loop {
+            let e = self.slots[slot];
+            if e == NO_ROW {
+                return None;
+            }
+            let rep = self.entries[e as usize].row as usize;
+            if self.keys.hash(rep) == hash && self.keys.key(rep) == key {
+                return Some(rep as u32);
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    /// Next build row with the same key as `row`, if any.
+    #[inline]
+    pub fn next_match(&self, row: u32) -> Option<u32> {
+        let nx = self.next[row as usize];
+        if nx == NO_ROW {
+            None
+        } else {
+            Some(nx)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc(cols: &[Column], mode: KeyMode) -> EncodedKeys {
+        let mut dict = KeyDict::new();
+        EncodedKeys::encode(cols, mode, &mut dict)
+    }
+
+    #[test]
+    fn group_mode_keeps_int_float_distinct() {
+        let cols = vec![Column::from_i64(vec![5, 5])];
+        let fcols = vec![Column::from_f64(vec![5.0, 5.0])];
+        let a = enc(&cols, KeyMode::Group);
+        let b = enc(&fcols, KeyMode::Group);
+        assert_ne!(a.key(0), b.key(0));
+        assert_eq!(a.key(0), a.key(1));
+    }
+
+    #[test]
+    fn join_mode_bridges_int_float() {
+        let icols = vec![Column::from_i64(vec![5])];
+        let fcols = vec![Column::from_f64(vec![5.0, 5.5])];
+        let a = enc(&icols, KeyMode::Join);
+        let b = enc(&fcols, KeyMode::Join);
+        assert_eq!(a.key(0), b.key(0));
+        assert_ne!(a.key(0), b.key(1));
+        assert_eq!(a.hash(0), b.hash(0));
+    }
+
+    #[test]
+    fn negative_zero_normalizes() {
+        let cols = vec![Column::from_f64(vec![0.0, -0.0])];
+        let k = enc(&cols, KeyMode::Group);
+        assert_eq!(k.key(0), k.key(1));
+    }
+
+    #[test]
+    fn null_rows_flagged_and_group_together() {
+        let col = Column::Int64 { data: vec![1, 0, 0], valid: Some(vec![true, false, false]) };
+        let k = enc(&[col], KeyMode::Group);
+        assert!(!k.has_null(0));
+        assert!(k.has_null(1) && k.has_null(2));
+        // NULLs encode identically, so GROUP BY groups them together.
+        assert_eq!(k.key(1), k.key(2));
+    }
+
+    #[test]
+    fn strings_intern_to_equal_ids_across_batches() {
+        let mut dict = KeyDict::new();
+        let a = EncodedKeys::encode(
+            &[Column::from_strings(vec!["x".into(), "y".into()])],
+            KeyMode::Join,
+            &mut dict,
+        );
+        let b = EncodedKeys::encode(
+            &[Column::from_strings(vec!["y".into(), "z".into()])],
+            KeyMode::Join,
+            &mut dict,
+        );
+        assert_eq!(a.key(1), b.key(0)); // "y" == "y"
+        assert_ne!(a.key(0), b.key(1)); // "x" != "z"
+        assert_eq!(dict.len(), 3);
+    }
+
+    #[test]
+    fn group_ids_first_seen_order() {
+        let cols = vec![Column::from_i64(vec![7, 3, 7, 9, 3, 7])];
+        let k = enc(&cols, KeyMode::Group);
+        let g = assign_group_ids(&k);
+        assert_eq!(g.n_groups(), 3);
+        assert_eq!(g.ids, vec![0, 1, 0, 2, 1, 0]);
+        assert_eq!(g.rep_rows, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn group_ids_multi_column() {
+        let cols = vec![
+            Column::from_strings(vec!["a".into(), "a".into(), "b".into(), "a".into()]),
+            Column::from_i64(vec![1, 2, 1, 1]),
+        ];
+        let k = enc(&cols, KeyMode::Group);
+        let g = assign_group_ids(&k);
+        assert_eq!(g.n_groups(), 3);
+        assert_eq!(g.ids, vec![0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn join_table_chains_in_row_order() {
+        let build = enc(&[Column::from_i64(vec![1, 2, 1, 1])], KeyMode::Join);
+        let probe = enc(&[Column::from_i64(vec![1, 3])], KeyMode::Join);
+        let t = JoinTable::build(build);
+        let mut matches = Vec::new();
+        let mut m = t.first_match(probe.key(0), probe.hash(0));
+        while let Some(j) = m {
+            matches.push(j);
+            m = t.next_match(j);
+        }
+        assert_eq!(matches, vec![0, 2, 3]);
+        assert_eq!(t.first_match(probe.key(1), probe.hash(1)), None);
+    }
+
+    #[test]
+    fn join_table_skips_null_build_rows() {
+        let col = Column::Int64 { data: vec![1, 1], valid: Some(vec![true, false]) };
+        let build = enc(&[col], KeyMode::Join);
+        let probe = enc(&[Column::from_i64(vec![1])], KeyMode::Join);
+        let t = JoinTable::build(build);
+        let first = t.first_match(probe.key(0), probe.hash(0));
+        assert_eq!(first, Some(0));
+        assert_eq!(t.next_match(0), None); // the NULL row never entered
+    }
+
+    #[test]
+    fn empty_batch() {
+        let k = enc(&[Column::from_i64(vec![])], KeyMode::Group);
+        assert_eq!(k.len(), 0);
+        let g = assign_group_ids(&k);
+        assert_eq!(g.n_groups(), 0);
+        let t = JoinTable::build(enc(&[Column::from_i64(vec![])], KeyMode::Join));
+        let probe = enc(&[Column::from_i64(vec![4])], KeyMode::Join);
+        assert_eq!(t.first_match(probe.key(0), probe.hash(0)), None);
+    }
+}

@@ -10,11 +10,15 @@ mod catalog;
 mod exec;
 pub mod exchange;
 mod expr;
+pub mod hash;
 mod key;
 mod plan;
 
 pub use catalog::{parse_csv, Catalog};
-pub use exec::{execute_plan, run_sql, ExecContext, QueryStats};
+pub use exec::{
+    execute_plan, execute_plan_with_stats, run_sql, run_sql_with_stats, ExecContext, OpStats,
+    QueryStats,
+};
 pub use expr::{eval_expr, eval_predicate, eval_row, resolve_column};
 pub use key::KeyValue;
 pub use plan::{output_name, plan_query, AggCall, AggFunc, Plan};

@@ -178,6 +178,7 @@ impl Session {
             catalog: self.catalog.clone(),
             udfs: Arc::new(self.udfs()),
             udf_stats: self.stats.clone(),
+            vectorized: true,
         }
     }
 
@@ -185,6 +186,12 @@ impl Session {
     pub fn sql(&self, text: &str) -> Result<RowSet> {
         let ctx = self.exec_context();
         crate::engine::run_sql(text, &ctx)
+    }
+
+    /// Run a SQL statement, also returning per-operator rows and timings.
+    pub fn sql_with_stats(&self, text: &str) -> Result<(RowSet, crate::engine::QueryStats)> {
+        let ctx = self.exec_context();
+        crate::engine::run_sql_with_stats(text, &ctx)
     }
 
     /// Open a DataFrame on a table.

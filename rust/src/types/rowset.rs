@@ -109,6 +109,76 @@ impl Column {
         }
     }
 
+    pub fn str_data(&self) -> Option<&[String]> {
+        match self {
+            Column::Utf8 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn bool_data(&self) -> Option<&[bool]> {
+        match self {
+            Column::Bool { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// Validity mask, if any row is NULL (`None` = all rows valid).
+    pub fn validity(&self) -> Option<&[bool]> {
+        match self {
+            Column::Int64 { valid, .. } => valid.as_deref(),
+            Column::Float64 { valid, .. } => valid.as_deref(),
+            Column::Utf8 { valid, .. } => valid.as_deref(),
+            Column::Bool { valid, .. } => valid.as_deref(),
+        }
+    }
+
+    /// Typed gather with NULL padding: index `-1` yields a NULL cell.
+    /// Copies raw buffers directly — no per-cell `Value` round trip.
+    pub fn gather_opt(&self, indices: &[i64]) -> Column {
+        fn gathered<T: Clone + Default>(
+            data: &[T],
+            valid: Option<&[bool]>,
+            indices: &[i64],
+        ) -> (Vec<T>, Option<Vec<bool>>) {
+            let mut out = Vec::with_capacity(indices.len());
+            let mut mask = Vec::with_capacity(indices.len());
+            let mut any_null = false;
+            for &i in indices {
+                if i < 0 {
+                    out.push(T::default());
+                    mask.push(false);
+                    any_null = true;
+                } else {
+                    let i = i as usize;
+                    let ok = valid.map_or(true, |v| v[i]);
+                    any_null |= !ok;
+                    out.push(if ok { data[i].clone() } else { T::default() });
+                    mask.push(ok);
+                }
+            }
+            (out, if any_null { Some(mask) } else { None })
+        }
+        match self {
+            Column::Int64 { data, valid } => {
+                let (data, valid) = gathered(data, valid.as_deref(), indices);
+                Column::Int64 { data, valid }
+            }
+            Column::Float64 { data, valid } => {
+                let (data, valid) = gathered(data, valid.as_deref(), indices);
+                Column::Float64 { data, valid }
+            }
+            Column::Utf8 { data, valid } => {
+                let (data, valid) = gathered(data, valid.as_deref(), indices);
+                Column::Utf8 { data, valid }
+            }
+            Column::Bool { data, valid } => {
+                let (data, valid) = gathered(data, valid.as_deref(), indices);
+                Column::Bool { data, valid }
+            }
+        }
+    }
+
     /// Lossy f32 view for the XLA marshalling path (Int64/Float64 only).
     pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
         match self {
@@ -383,6 +453,20 @@ impl RowSet {
         }
     }
 
+    /// Zero-copy-style gather through typed column buffers. With
+    /// `null_pad`, index `-1` produces an all-NULL row (the outer-join
+    /// padding case); without it, negative indices are a caller bug.
+    pub fn gather(&self, indices: &[i64], null_pad: bool) -> RowSet {
+        debug_assert!(
+            null_pad || indices.iter().all(|&i| i >= 0),
+            "negative gather index without null_pad"
+        );
+        RowSet {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.gather_opt(indices)).collect(),
+        }
+    }
+
     pub fn slice(&self, offset: usize, len: usize) -> RowSet {
         RowSet {
             schema: self.schema.clone(),
@@ -559,6 +643,49 @@ mod tests {
         let sliced = rs.slice(1, 2);
         assert_eq!(sliced.num_rows(), 2);
         assert_eq!(sliced.column(0).value(0), Value::Int(2));
+    }
+
+    #[test]
+    fn gather_with_null_padding() {
+        let rs = sample();
+        let gathered = rs.gather(&[2, -1, 0], true);
+        assert_eq!(gathered.num_rows(), 3);
+        assert_eq!(gathered.row(0), vec![
+            Value::Int(3),
+            Value::Float(30.0),
+            Value::Str("c".into())
+        ]);
+        assert_eq!(gathered.row(1), vec![Value::Null, Value::Null, Value::Null]);
+        assert_eq!(gathered.row(2), vec![
+            Value::Int(1),
+            Value::Float(10.0),
+            Value::Str("a".into())
+        ]);
+        // Schema (and column types) survive the gather.
+        assert_eq!(gathered.schema, rs.schema);
+    }
+
+    #[test]
+    fn gather_opt_propagates_source_nulls() {
+        let c = Column::Int64 { data: vec![1, 2, 3], valid: Some(vec![true, false, true]) };
+        let g = c.gather_opt(&[1, 2, -1]);
+        assert_eq!(g.value(0), Value::Null);
+        assert_eq!(g.value(1), Value::Int(3));
+        assert_eq!(g.value(2), Value::Null);
+        // NULL slots are normalized to default payloads.
+        assert_eq!(g, Column::Int64 { data: vec![0, 3, 0], valid: Some(vec![false, true, false]) });
+    }
+
+    #[test]
+    fn validity_and_typed_accessors() {
+        let c = Column::Int64 { data: vec![1, 2], valid: Some(vec![true, false]) };
+        assert_eq!(c.validity(), Some(&[true, false][..]));
+        assert_eq!(Column::from_i64(vec![1]).validity(), None);
+        assert_eq!(
+            Column::from_strings(vec!["a".into()]).str_data().map(|d| d.len()),
+            Some(1)
+        );
+        assert_eq!(Column::from_bools(vec![true]).bool_data(), Some(&[true][..]));
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Integration: the columnar key codec preserves SQL semantics.
+//!
+//! NULL-key behavior (joins never match, GROUP BY groups together),
+//! `-0.0`/`0.0` and Int/integral-Float normalization, first-seen group
+//! output order, i64 SUM precision, and top-k — each checked on the codec
+//! path and differentially against the legacy row-at-a-time path.
+
+use std::sync::Arc;
+
+use snowpark::engine::{run_sql, Catalog, ExecContext};
+use snowpark::types::{Column, DataType, Field, RowSet, RowSetBuilder, Schema, Value};
+use snowpark::udf::UdfRegistry;
+use snowpark::util::rng::Rng;
+
+fn ctx_for(catalog: Arc<Catalog>, vectorized: bool) -> ExecContext {
+    ExecContext::new(catalog, Arc::new(UdfRegistry::new())).with_vectorized(vectorized)
+}
+
+/// Run `stmt` through the codec path, asserting the legacy row path
+/// produces the identical rowset (schema, types, values, and order).
+fn check_both(catalog: &Arc<Catalog>, stmt: &str) -> RowSet {
+    let vectorized = run_sql(stmt, &ctx_for(catalog.clone(), true))
+        .unwrap_or_else(|e| panic!("{stmt}: {e}"));
+    let rowwise = run_sql(stmt, &ctx_for(catalog.clone(), false))
+        .unwrap_or_else(|e| panic!("{stmt} (rowwise): {e}"));
+    assert_eq!(vectorized, rowwise, "codec/rowwise divergence for {stmt}");
+    vectorized
+}
+
+fn catalog_with_nulls() -> Arc<Catalog> {
+    let catalog = Arc::new(Catalog::new());
+    let mut b = RowSetBuilder::new(Schema::new(vec![
+        Field::new("k", DataType::Int64),
+        Field::new("s", DataType::Utf8),
+        Field::new("v", DataType::Float64),
+    ]));
+    let rows = [
+        (Value::Int(1), Value::Str("a".into()), Value::Float(10.0)),
+        (Value::Null, Value::Str("b".into()), Value::Float(20.0)),
+        (Value::Int(2), Value::Null, Value::Float(30.0)),
+        (Value::Null, Value::Str("b".into()), Value::Null),
+        (Value::Int(1), Value::Str("a".into()), Value::Float(40.0)),
+        (Value::Int(2), Value::Null, Value::Null),
+    ];
+    for (k, s, v) in rows {
+        b.push(vec![k, s, v]).unwrap();
+    }
+    catalog.register("t", b.finish().unwrap());
+
+    let mut d = RowSetBuilder::new(Schema::new(vec![
+        Field::new("k", DataType::Int64),
+        Field::new("label", DataType::Utf8),
+    ]));
+    d.push(vec![Value::Int(1), Value::Str("one".into())]).unwrap();
+    d.push(vec![Value::Null, Value::Str("null-key".into())]).unwrap();
+    d.push(vec![Value::Int(3), Value::Str("three".into())]).unwrap();
+    catalog.register("d", d.finish().unwrap());
+    catalog
+}
+
+#[test]
+fn null_join_keys_never_match() {
+    let catalog = catalog_with_nulls();
+    // t has two NULL-k rows and d has one NULL-k row: none may pair up.
+    let rs = check_both(&catalog, "SELECT t.k, d.label FROM t JOIN d ON t.k = d.k");
+    assert_eq!(rs.num_rows(), 2); // the two k=1 rows of t
+    for i in 0..rs.num_rows() {
+        assert_eq!(rs.row(i), vec![Value::Int(1), Value::Str("one".into())]);
+    }
+}
+
+#[test]
+fn null_join_keys_pad_in_left_join() {
+    let catalog = catalog_with_nulls();
+    let rs = check_both(
+        &catalog,
+        "SELECT t.v, d.label FROM t LEFT JOIN d ON t.k = d.k",
+    );
+    // All 6 left rows survive; NULL-k rows get NULL labels.
+    assert_eq!(rs.num_rows(), 6);
+    assert_eq!(rs.row(1), vec![Value::Float(20.0), Value::Null]);
+    assert_eq!(rs.row(3), vec![Value::Null, Value::Null]);
+}
+
+#[test]
+fn nulls_group_together_in_group_by() {
+    let catalog = catalog_with_nulls();
+    let rs = check_both(&catalog, "SELECT k, COUNT(*) AS n FROM t GROUP BY k");
+    // Groups in first-seen order: 1, NULL, 2 — NULLs form ONE group.
+    assert_eq!(rs.num_rows(), 3);
+    assert_eq!(rs.row(0), vec![Value::Int(1), Value::Int(2)]);
+    assert_eq!(rs.row(1), vec![Value::Null, Value::Int(2)]);
+    assert_eq!(rs.row(2), vec![Value::Int(2), Value::Int(2)]);
+}
+
+#[test]
+fn count_skips_nulls_and_sum_of_all_null_group() {
+    let catalog = catalog_with_nulls();
+    let rs = check_both(
+        &catalog,
+        "SELECT s, COUNT(v) AS n, SUM(v) AS sv FROM t GROUP BY s",
+    );
+    // Groups first-seen: "a", "b", NULL.
+    assert_eq!(rs.num_rows(), 3);
+    assert_eq!(rs.row(0), vec![Value::Str("a".into()), Value::Int(2), Value::Float(50.0)]);
+    assert_eq!(rs.row(1), vec![Value::Str("b".into()), Value::Int(1), Value::Float(20.0)]);
+    assert_eq!(rs.row(2), vec![Value::Null, Value::Int(1), Value::Float(30.0)]);
+}
+
+#[test]
+fn negative_zero_groups_with_zero() {
+    let catalog = Arc::new(Catalog::new());
+    let t = RowSet::new(
+        Schema::new(vec![Field::new("x", DataType::Float64)]),
+        vec![Column::from_f64(vec![0.0, -0.0, 1.0, -0.0])],
+    )
+    .unwrap();
+    catalog.register("t", t);
+    let rs = check_both(&catalog, "SELECT x, COUNT(*) AS n FROM t GROUP BY x");
+    assert_eq!(rs.num_rows(), 2);
+    assert_eq!(rs.row(0)[1], Value::Int(3)); // 0.0 and -0.0 together
+    assert_eq!(rs.row(1)[1], Value::Int(1));
+}
+
+#[test]
+fn int_and_integral_float_join_keys_match() {
+    let catalog = Arc::new(Catalog::new());
+    let l = RowSet::new(
+        Schema::new(vec![Field::new("id", DataType::Int64)]),
+        vec![Column::from_i64(vec![1, 2, 3])],
+    )
+    .unwrap();
+    let r = RowSet::new(
+        Schema::new(vec![
+            Field::new("fid", DataType::Float64),
+            Field::new("tag", DataType::Utf8),
+        ]),
+        vec![
+            Column::from_f64(vec![1.0, 2.5, 3.0, -0.0]),
+            Column::from_strings(vec!["one".into(), "2.5".into(), "three".into(), "zero".into()]),
+        ],
+    )
+    .unwrap();
+    catalog.register("l", l);
+    catalog.register("r", r);
+    let rs = check_both(
+        &catalog,
+        "SELECT l.id, r.tag FROM l JOIN r ON l.id = r.fid ORDER BY l.id",
+    );
+    assert_eq!(rs.num_rows(), 2);
+    assert_eq!(rs.row(0), vec![Value::Int(1), Value::Str("one".into())]);
+    assert_eq!(rs.row(1), vec![Value::Int(3), Value::Str("three".into())]);
+}
+
+#[test]
+fn group_output_preserves_first_seen_order() {
+    let catalog = Arc::new(Catalog::new());
+    let t = RowSet::new(
+        Schema::new(vec![Field::new("c", DataType::Utf8)]),
+        vec![Column::from_strings(
+            ["z", "m", "z", "a", "m", "q", "z"].iter().map(|s| s.to_string()).collect(),
+        )],
+    )
+    .unwrap();
+    catalog.register("t", t);
+    // No ORDER BY: output order is first-seen group order.
+    let rs = check_both(&catalog, "SELECT c, COUNT(*) AS n FROM t GROUP BY c");
+    let got: Vec<Value> = (0..rs.num_rows()).map(|i| rs.row(i)[0].clone()).collect();
+    assert_eq!(
+        got,
+        vec![
+            Value::Str("z".into()),
+            Value::Str("m".into()),
+            Value::Str("a".into()),
+            Value::Str("q".into()),
+        ]
+    );
+}
+
+#[test]
+fn sum_keeps_precision_near_i64_max() {
+    // Regression for the f64 SUM accumulator: values near i64::MAX >> 8
+    // lose low bits in f64; the i64 accumulator must not.
+    let catalog = Arc::new(Catalog::new());
+    let a = (i64::MAX >> 8) + 3;
+    let b = (i64::MAX >> 8) + 5;
+    let t = RowSet::new(
+        Schema::new(vec![Field::new("x", DataType::Int64)]),
+        vec![Column::from_i64(vec![a, b])],
+    )
+    .unwrap();
+    catalog.register("t", t);
+    let rs = check_both(&catalog, "SELECT SUM(x) AS s FROM t");
+    assert_eq!(rs.row(0)[0], Value::Int(a + b));
+    // Sanity: the old f64 path would have rounded this.
+    assert_ne!((a as f64 + b as f64) as i64, a + b);
+}
+
+#[test]
+fn top_k_equals_full_sort_prefix() {
+    let catalog = Arc::new(Catalog::new());
+    let mut rng = Rng::new(7);
+    let n = 5_000;
+    let vals: Vec<i64> = (0..n).map(|_| rng.below(500) as i64).collect();
+    let ids: Vec<i64> = (0..n as i64).collect();
+    let t = RowSet::new(
+        Schema::new(vec![
+            Field::new("id", DataType::Int64),
+            Field::new("v", DataType::Int64),
+        ]),
+        vec![Column::from_i64(ids), Column::from_i64(vals)],
+    )
+    .unwrap();
+    catalog.register("t", t);
+    let full = check_both(&catalog, "SELECT id, v FROM t ORDER BY v DESC, id");
+    for k in [0usize, 1, 17, 4_999, 5_000, 9_000] {
+        let stmt = format!("SELECT id, v FROM t ORDER BY v DESC, id LIMIT {k}");
+        let topk = check_both(&catalog, &stmt);
+        assert_eq!(topk, full.slice(0, k.min(n)), "k={k}");
+    }
+}
+
+#[test]
+fn randomized_differential_group_join_sort() {
+    // Random tables with NULLs: the codec path and the legacy row path
+    // must produce identical rowsets for grouping, joining, and sorting.
+    let mut rng = Rng::new(123);
+    let catalog = Arc::new(Catalog::new());
+    let n = 3_000;
+    let mut b = RowSetBuilder::new(Schema::new(vec![
+        Field::new("k", DataType::Int64),
+        Field::new("s", DataType::Utf8),
+        Field::new("f", DataType::Float64),
+        Field::new("v", DataType::Int64),
+    ]));
+    for _ in 0..n {
+        let k = if rng.bool(0.1) { Value::Null } else { Value::Int(rng.below(40) as i64) };
+        let s = if rng.bool(0.1) {
+            Value::Null
+        } else {
+            Value::Str(format!("s{}", rng.below(25)))
+        };
+        let f = if rng.bool(0.1) {
+            Value::Null
+        } else {
+            // Integral floats sometimes, to exercise join normalization.
+            let x = rng.below(60) as f64;
+            Value::Float(if rng.bool(0.5) { x } else { x + 0.5 })
+        };
+        let v = Value::Int(rng.range_inclusive(-1000, 1000));
+        b.push(vec![k, s, f, v]).unwrap();
+    }
+    catalog.register("t", b.finish().unwrap());
+
+    let mut d = RowSetBuilder::new(Schema::new(vec![
+        Field::new("k", DataType::Int64),
+        Field::new("w", DataType::Float64),
+    ]));
+    for i in 0..60 {
+        let k = if i % 7 == 0 { Value::Null } else { Value::Int(i) };
+        d.push(vec![k, Value::Float(i as f64 * 1.5)]).unwrap();
+    }
+    catalog.register("d", d.finish().unwrap());
+
+    for stmt in [
+        "SELECT k, COUNT(*) AS n, COUNT(s) AS ns, SUM(v) AS sv, AVG(f) AS af, \
+         MIN(f) AS lo, MAX(s) AS hi FROM t GROUP BY k",
+        "SELECT s, k, SUM(v) AS sv FROM t GROUP BY s, k",
+        "SELECT f, COUNT(*) AS n FROM t GROUP BY f",
+        "SELECT t.v, d.w FROM t JOIN d ON t.k = d.k",
+        "SELECT t.v, d.w FROM t LEFT JOIN d ON t.k = d.k",
+        "SELECT t.v, d.w FROM t JOIN d ON t.f = d.k",
+        "SELECT v, s FROM t ORDER BY s, v DESC",
+        "SELECT v, f FROM t ORDER BY f DESC, v LIMIT 50",
+        "SELECT COUNT(*) AS n, SUM(v) AS s, MIN(k) AS lo FROM t",
+    ] {
+        check_both(&catalog, stmt);
+    }
+}
+
+#[test]
+fn stats_expose_operator_rows_and_timings() {
+    let catalog = catalog_with_nulls();
+    let ctx = ctx_for(catalog, true);
+    let (out, stats) = snowpark::engine::run_sql_with_stats(
+        "SELECT k, COUNT(*) AS n FROM t GROUP BY k",
+        &ctx,
+    )
+    .unwrap();
+    assert_eq!(stats.rows_scanned, 6);
+    assert_eq!(stats.rows_output, out.num_rows() as u64);
+    assert_eq!(stats.aggregate.rows_in, 6);
+    assert_eq!(stats.aggregate.rows_out, 3);
+    assert!(stats.report().contains("scan"));
+}
