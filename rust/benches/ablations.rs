@@ -9,7 +9,7 @@ use snowpark::bench::{banner, best, fmt_duration, measure, Table};
 use snowpark::control::{InitPipeline, InitRequest};
 use snowpark::engine::exchange::{simulate_exchange, ExchangeConfig, ExchangeMode};
 use snowpark::engine::{run_sql, Catalog, ExecContext};
-use snowpark::types::{Column, DataType, Field, RowSet, Schema};
+use snowpark::types::{Column, DataType, Field, RowSet, RowSetBuilder, Schema, Value, WireBatch};
 use snowpark::udf::UdfRegistry;
 use snowpark::packages::{Installer, LatencyModel, PackageUniverse, Prefetcher, Solver, SolverCache};
 use snowpark::scheduler::{
@@ -303,12 +303,174 @@ fn ablate_groupby_kernels() -> Vec<String> {
     json
 }
 
+/// A7: the columnar expression kernels vs the row-at-a-time `eval_row`
+/// path, on 1M-row projection/filter workloads (the last operators PR 1
+/// left row-wise). Returns JSON rows for BENCH_engine.json.
+fn ablate_expr_kernels() -> Vec<String> {
+    println!("\n-- A7: columnar expression kernels (1M rows, vectorized vs eval_row) --");
+    const N: usize = 1_000_000;
+    let catalog = engine_tables(N, 100_000, None, 43);
+    let mut registry = UdfRegistry::new();
+    registry.register_scalar(
+        "add1",
+        DataType::Float64,
+        Arc::new(|args| match &args[0] {
+            Value::Null => Ok(Value::Null),
+            v => Ok(Value::Float(v.as_f64().unwrap_or(0.0) + 1.0)),
+        }),
+    );
+    let registry = Arc::new(registry);
+    let queries = [
+        (
+            "project-arith",
+            "SELECT k + 1 AS k1, v * 2.0 + 1.0 AS a, v / 3.0 AS b FROM facts",
+        ),
+        ("filter-compare", "SELECT k FROM facts WHERE v > 25.0 AND v < 75.0"),
+        (
+            "filter-string",
+            "SELECT k FROM facts WHERE cat <> 'cat_007' AND length(cat) > 3",
+        ),
+        (
+            "case-abs",
+            "SELECT CASE WHEN v > 50.0 THEN 1 ELSE 0 END AS hot, abs(v - 50.0) AS d \
+             FROM facts",
+        ),
+        ("scalar-udf", "SELECT add1(v) AS y FROM facts"),
+    ];
+    let mut table = Table::new(&["query", "eval_row", "vectorized", "speedup"]);
+    let mut json = Vec::new();
+    for (name, stmt) in queries {
+        let ctx_on = ExecContext::new(catalog.clone(), registry.clone());
+        let ctx_off =
+            ExecContext::new(catalog.clone(), registry.clone()).with_vectorized(false);
+        let t_on = best(&measure(1, 3, || run_sql(stmt, &ctx_on).unwrap()));
+        let t_off = best(&measure(1, 3, || run_sql(stmt, &ctx_off).unwrap()));
+        let speedup = t_off.as_secs_f64() / t_on.as_secs_f64().max(1e-12);
+        table.row(&[
+            name.to_string(),
+            fmt_duration(t_off),
+            fmt_duration(t_on),
+            format!("{speedup:.1}x"),
+        ]);
+        json.push(format!(
+            "{{\"bench\":\"expr_kernels\",\"query\":\"{name}\",\"rows\":{N},\
+             \"rowwise_ms\":{:.3},\"vectorized_ms\":{:.3},\"speedup\":{speedup:.2}}}",
+            t_off.as_secs_f64() * 1e3,
+            t_on.as_secs_f64() * 1e3,
+        ));
+    }
+    table.print();
+    println!("(target: vectorized beats eval_row on every 1M-row projection/filter)");
+    json
+}
+
+/// Zipf-skewed multi-column partitions shaped like the Fig. 6
+/// redistribution bench input.
+fn codec_partitions(sizes: &[usize]) -> Vec<RowSet> {
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(p, &n)| {
+            let mut rng = Rng::new(97 + p as u64);
+            RowSet::new(
+                Schema::new(vec![
+                    Field::new("x", DataType::Float64),
+                    Field::new("k", DataType::Int64),
+                    Field::new("tag", DataType::Utf8),
+                ]),
+                vec![
+                    Column::from_f64((0..n).map(|_| rng.uniform(0.0, 1000.0)).collect()),
+                    Column::from_i64((0..n).map(|_| rng.below(1 << 20) as i64).collect()),
+                    Column::from_strings(
+                        (0..n).map(|_| format!("tag_{:04}", rng.below(4096))).collect(),
+                    ),
+                ],
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+/// Per-row baseline: the pre-codec shipping path — slice the partition,
+/// pull each row through `RowSet::row`, rebuild through `RowSetBuilder`.
+fn perrow_roundtrip(parts: &[RowSet], batch_rows: usize) -> usize {
+    let mut total = 0usize;
+    for part in parts {
+        let mut off = 0;
+        while off < part.num_rows() {
+            let len = batch_rows.min(part.num_rows() - off);
+            let sliced = part.slice(off, len);
+            let mut b = RowSetBuilder::new(sliced.schema.clone());
+            for r in 0..len {
+                b.push(sliced.row(r)).unwrap();
+            }
+            total += b.finish().unwrap().num_rows();
+            off += len;
+        }
+    }
+    total
+}
+
+/// Columnar codec: encode each batch range straight from the column
+/// buffers, decode with typed appends. Returns (rows, wire bytes).
+fn columnar_roundtrip(parts: &[RowSet], batch_rows: usize) -> (usize, usize) {
+    let mut total = 0usize;
+    let mut bytes = 0usize;
+    for part in parts {
+        let mut off = 0;
+        while off < part.num_rows() {
+            let len = batch_rows.min(part.num_rows() - off);
+            let w = WireBatch::encode_range(part, off, len);
+            bytes += w.wire_len();
+            total += w.decode().unwrap().num_rows();
+            off += len;
+        }
+    }
+    (total, bytes)
+}
+
+/// A8: the column-major exchange wire codec vs per-row encode on the
+/// Fig. 6 redistribution batch shape. Returns JSON rows for
+/// BENCH_engine.json.
+fn ablate_exchange_codec() -> Vec<String> {
+    println!("\n-- A8: exchange batch codec (Fig. 6 shape, per-row vs columnar) --");
+    let sizes = [120_000usize, 40_000, 25_000, 15_000]; // skewed 4-partition layout
+    let parts = codec_partitions(&sizes);
+    let total_rows: usize = sizes.iter().sum();
+    let mut table = Table::new(&["B (rows)", "per-row", "columnar", "speedup", "wire MB"]);
+    let mut json = Vec::new();
+    for batch_rows in [64usize, 256, 1024] {
+        let t_row = best(&measure(1, 3, || perrow_roundtrip(&parts, batch_rows)));
+        let t_col = best(&measure(1, 3, || columnar_roundtrip(&parts, batch_rows)));
+        let (_, bytes) = columnar_roundtrip(&parts, batch_rows);
+        let speedup = t_row.as_secs_f64() / t_col.as_secs_f64().max(1e-12);
+        table.row(&[
+            format!("{batch_rows}"),
+            fmt_duration(t_row),
+            fmt_duration(t_col),
+            format!("{speedup:.1}x"),
+            format!("{:.1}", bytes as f64 / 1e6),
+        ]);
+        json.push(format!(
+            "{{\"bench\":\"exchange_codec\",\"workload\":\"fig6-batches\",\
+             \"rows\":{total_rows},\"batch_rows\":{batch_rows},\
+             \"perrow_ms\":{:.3},\"columnar_ms\":{:.3},\"speedup\":{speedup:.2},\
+             \"wire_bytes\":{bytes}}}",
+            t_row.as_secs_f64() * 1e3,
+            t_col.as_secs_f64() * 1e3,
+        ));
+    }
+    table.print();
+    println!("(target: columnar encode+decode beats per-row at every buffer size B)");
+    json
+}
+
 /// Record the engine microbench trajectory where the driver (and
 /// EXPERIMENTS.md) can quote it.
 fn write_bench_json(rows: &[String]) {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
     let body = format!(
-        "{{\n  \"bench\": \"groupby_kernels\",\n  \"generated_by\": \"cargo bench --bench ablations\",\n  \"results\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"engine_ablations\",\n  \"generated_by\": \"cargo bench --bench ablations\",\n  \"results\": [\n    {}\n  ]\n}}\n",
         rows.join(",\n    ")
     );
     match std::fs::write(path, body) {
@@ -321,13 +483,16 @@ fn main() {
     banner(
         "Ablations",
         "Design-choice sweeps: buffer size B, threshold T, env-cache \
-         capacity, prefetch, estimator (K,P,F), engine key codec.",
+         capacity, prefetch, estimator (K,P,F), engine key codec, \
+         expression kernels, exchange batch codec.",
     );
     ablate_batch_size();
     ablate_threshold();
     ablate_env_cache_capacity();
     ablate_prefetch();
     ablate_estimator();
-    let json = ablate_groupby_kernels();
+    let mut json = ablate_groupby_kernels();
+    json.extend(ablate_expr_kernels());
+    json.extend(ablate_exchange_codec());
     write_bench_json(&json);
 }

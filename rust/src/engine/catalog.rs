@@ -16,10 +16,12 @@ pub struct Catalog {
 }
 
 impl Catalog {
+    /// Empty catalog.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Register (or replace) a table under `name` (case-insensitive).
     pub fn register(&self, name: &str, table: RowSet) {
         self.tables
             .write()
@@ -27,6 +29,7 @@ impl Catalog {
             .insert(name.to_ascii_lowercase(), table);
     }
 
+    /// Snapshot of the named table (cloned for isolation).
     pub fn get(&self, name: &str) -> Result<RowSet> {
         self.tables
             .read()
@@ -36,6 +39,7 @@ impl Catalog {
             .ok_or_else(|| anyhow!("table {name:?} not found"))
     }
 
+    /// Remove a table; returns whether it existed.
     pub fn drop_table(&self, name: &str) -> bool {
         self.tables
             .write()
@@ -44,12 +48,14 @@ impl Catalog {
             .is_some()
     }
 
+    /// Sorted list of registered table names.
     pub fn table_names(&self) -> Vec<String> {
         let mut names: Vec<String> = self.tables.read().unwrap().keys().cloned().collect();
         names.sort();
         names
     }
 
+    /// Does a table with this name exist?
     pub fn contains(&self, name: &str) -> bool {
         self.tables
             .read()

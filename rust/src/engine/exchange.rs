@@ -43,6 +43,7 @@ pub enum ExchangeMode {
 /// Exchange configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ExchangeConfig {
+    /// Redistribution policy.
     pub mode: ExchangeMode,
     /// Rows per buffered batch (the paper's buffering knob B).
     pub batch_rows: usize,
@@ -59,10 +60,16 @@ impl Default for ExchangeConfig {
 /// Report of one exchange execution (feeds Fig. 6's production table).
 #[derive(Debug, Clone, Default)]
 pub struct ExchangeReport {
+    /// Whether the policy decided to redistribute across all nodes.
     pub redistributed: bool,
+    /// Total batches shipped.
     pub batches: usize,
+    /// Batches delivered to a process on a different node.
     pub remote_batches: usize,
+    /// Total input rows across all partitions.
     pub rows: usize,
+    /// Total column-major wire bytes encoded for the batches.
+    pub wire_bytes: usize,
 }
 
 /// Decide whether `Auto` should redistribute this UDF, per §IV.C.
@@ -107,7 +114,10 @@ pub fn run_udf_exchange(
     };
 
     // Cut every partition into buffered batches, tagged with a global
-    // sequence so results stitch back deterministically.
+    // sequence so results stitch back deterministically. Each batch is
+    // encoded into the column-major wire format once, straight from the
+    // partition's column buffers — no per-row `RowSet::row` round trips
+    // and no intermediate sliced rowsets.
     struct Slot {
         partition: usize,
         offset: usize,
@@ -122,12 +132,9 @@ pub fn run_udf_exchange(
             let len = cfg.batch_rows.min(part.num_rows() - off);
             let seq = batches.len() as u64;
             slots.push(Slot { partition: pid, offset: off, len });
-            batches.push(Batch {
-                seq,
-                udf: udf.to_string(),
-                rows: part.slice(off, len),
-                origin_node: pid % n_nodes,
-            });
+            let batch = Batch::from_range(seq, udf, part, off, len, pid % n_nodes);
+            report.wire_bytes += batch.payload.wire_len();
+            batches.push(batch);
             off += len;
         }
     }
@@ -208,12 +215,18 @@ pub fn run_udf_exchange(
 /// multi-node warehouse.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimulatedExchange {
+    /// Busy time of the busiest process (the straggler / makespan).
     pub makespan_ns: u64,
+    /// Sum of busy time over all processes.
     pub total_work_ns: u64,
+    /// Batches that crossed a node boundary.
     pub remote_batches: usize,
+    /// Total batches dealt.
     pub total_batches: usize,
 }
 
+/// Run the deterministic makespan model with the given shape and policy
+/// (see [`SimulatedExchange`]).
 pub fn simulate_exchange(
     partition_rows: &[usize],
     row_cost_ns: u64,

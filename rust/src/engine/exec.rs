@@ -8,9 +8,15 @@
 //! materialization goes through typed gathers (`RowSet::gather`) instead
 //! of per-cell `Value` round trips.
 //!
-//! The legacy row-at-a-time paths are kept behind
-//! `ExecContext::vectorized = false` for differential tests and the
-//! codec on/off ablation (`benches/ablations.rs`).
+//! Expressions (projections, predicates, group/join/sort keys) run on the
+//! columnar kernels in `engine::expr`; residual join predicates evaluate
+//! over the `l_idx`/`r_idx` gather vectors on only their referenced
+//! columns, before the wide output is materialized.
+//!
+//! The legacy row-at-a-time paths (including row-wise expression
+//! evaluation) are kept behind `ExecContext::vectorized = false` for
+//! differential tests and the `groupby_kernels`/`expr_kernels` ablations
+//! (`benches/ablations.rs`).
 
 use std::cmp::Ordering;
 use std::sync::Arc;
@@ -23,23 +29,31 @@ use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
 use crate::udf::{UdfRegistry, UdfStatsStore};
 
 use super::catalog::Catalog;
-use super::expr::{eval_expr, eval_predicate, eval_row, resolve_column};
+use super::expr::{
+    eval_expr, eval_expr_rowwise, eval_predicate, eval_predicate_rowwise, eval_row,
+    resolve_column,
+};
 use super::hash::{assign_group_ids, EncodedKeys, JoinTable, KeyDict, KeyMode};
 use super::key::KeyValue;
 use super::plan::{AggCall, AggFunc, Plan};
 
 /// Everything an operator needs at execution time.
 pub struct ExecContext {
+    /// Table catalog queries scan from.
     pub catalog: Arc<Catalog>,
+    /// Registered user-defined functions (scalar/vectorized/table/agg).
     pub udfs: Arc<UdfRegistry>,
+    /// Historical per-UDF cost statistics (feeds the §IV.C decision).
     pub udf_stats: Arc<UdfStatsStore>,
-    /// Run aggregate/join/sort on the columnar key codec (the default).
-    /// The row-at-a-time paths remain for differential testing and the
-    /// codec on/off ablation.
+    /// Run expressions on the columnar kernels and aggregate/join/sort on
+    /// the columnar key codec (the default). The row-at-a-time paths
+    /// remain for differential testing and the `groupby_kernels` /
+    /// `expr_kernels` ablations.
     pub vectorized: bool,
 }
 
 impl ExecContext {
+    /// Context with the default (vectorized) execution paths.
     pub fn new(catalog: Arc<Catalog>, udfs: Arc<UdfRegistry>) -> Self {
         Self {
             catalog,
@@ -49,18 +63,41 @@ impl ExecContext {
         }
     }
 
+    /// Toggle the vectorized paths (expressions + key codec) on or off.
     pub fn with_vectorized(mut self, on: bool) -> Self {
         self.vectorized = on;
         self
     }
 }
 
+/// Evaluate an expression through the path selected by `ctx.vectorized`.
+fn eval(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Column> {
+    if ctx.vectorized {
+        eval_expr(e, rows, &ctx.udfs)
+    } else {
+        eval_expr_rowwise(e, rows, &ctx.udfs)
+    }
+}
+
+/// Evaluate a predicate mask through the path selected by `ctx.vectorized`.
+fn eval_pred(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Vec<bool>> {
+    if ctx.vectorized {
+        eval_predicate(e, rows, &ctx.udfs)
+    } else {
+        eval_predicate_rowwise(e, rows, &ctx.udfs)
+    }
+}
+
 /// Rows processed and wall time spent in one operator class.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct OpStats {
+    /// How many times this operator class ran in the query.
     pub invocations: u64,
+    /// Total input rows across invocations.
     pub rows_in: u64,
+    /// Total output rows across invocations.
     pub rows_out: u64,
+    /// Total wall time in nanoseconds.
     pub nanos: u64,
 }
 
@@ -76,14 +113,23 @@ impl OpStats {
 /// Per-query execution statistics: per-operator row counts and timings.
 #[derive(Debug, Default, Clone)]
 pub struct QueryStats {
+    /// Rows read by all table scans.
     pub rows_scanned: u64,
+    /// Rows in the query's final result.
     pub rows_output: u64,
+    /// Scan / table-function operator stats.
     pub scan: OpStats,
+    /// Filter (WHERE / HAVING) operator stats.
     pub filter: OpStats,
+    /// Projection operator stats.
     pub project: OpStats,
+    /// Hash-aggregate operator stats.
     pub aggregate: OpStats,
+    /// Join operator stats.
     pub join: OpStats,
+    /// Sort / top-k operator stats.
     pub sort: OpStats,
+    /// Limit operator stats.
     pub limit: OpStats,
 }
 
@@ -177,7 +223,7 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
         Plan::Filter { input, predicate } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
-            let mask = eval_predicate(predicate, &rows, &ctx.udfs)?;
+            let mask = eval_pred(predicate, &rows, ctx)?;
             let out = rows.filter(&mask);
             stats
                 .filter
@@ -294,7 +340,7 @@ fn project(rows: &RowSet, exprs: &[(Expr, String)], ctx: &ExecContext) -> Result
             }
             continue;
         }
-        let col = eval_expr(e, rows, &ctx.udfs)?;
+        let col = eval(e, rows, ctx)?;
         fields.push(Field::new(name.clone(), col.data_type()));
         columns.push(col);
     }
@@ -449,14 +495,14 @@ fn aggregate(
     // (vectorized), then group.
     let key_cols: Vec<Column> = group
         .iter()
-        .map(|(e, _)| eval_expr(e, rows, &ctx.udfs))
+        .map(|(e, _)| eval(e, rows, ctx))
         .collect::<Result<_>>()?;
     let arg_cols: Vec<Vec<Column>> = aggs
         .iter()
         .map(|a| {
             a.args
                 .iter()
-                .map(|e| eval_expr(e, rows, &ctx.udfs))
+                .map(|e| eval(e, rows, ctx))
                 .collect::<Result<Vec<_>>>()
         })
         .collect::<Result<_>>()?;
@@ -986,11 +1032,11 @@ fn join(
     } else {
         let rkey_cols: Vec<Column> = rkeys
             .iter()
-            .map(|e| eval_expr(e, r, &ctx.udfs))
+            .map(|e| eval(e, r, ctx))
             .collect::<Result<_>>()?;
         let lkey_cols: Vec<Column> = lkeys
             .iter()
-            .map(|e| eval_expr(e, l, &ctx.udfs))
+            .map(|e| eval(e, l, ctx))
             .collect::<Result<_>>()?;
         if ctx.vectorized {
             // One shared dict so equal strings on both sides intern to
@@ -1059,22 +1105,74 @@ fn join(
         }
     }
 
-    // Materialize the combined rowset through typed gathers.
-    let combined = materialize_join(l, r, &out_schema, &l_idx, &r_idx)?;
-
-    // Residual predicate + left-join NULL-row preservation: rows that fail
-    // the residual are dropped (inner) or, for left joins where every match
-    // fails, the engine would need to re-emit a NULL row. This engine
-    // applies residuals before NULL-row synthesis only for inner joins and
-    // documents the left-join limitation.
-    let combined = match residual {
+    // Residual predicate, evaluated BEFORE materialization: only the
+    // columns the predicate references are gathered through the
+    // `l_idx`/`r_idx` vectors, the mask compacts the index vectors, and
+    // rows the residual drops are never gathered into the wide output.
+    // (Left-join NULL-row preservation caveat as before: a left row whose
+    // every match fails the residual is dropped, not re-NULL-padded.)
+    let (l_idx, r_idx) = match residual {
         Some(pred) => {
-            let mask = eval_predicate(pred, &combined, &ctx.udfs)?;
-            combined.filter(&mask)
+            let mask = residual_mask(pred, l, r, &out_schema, &l_idx, &r_idx, ctx)?;
+            let mut fl = Vec::with_capacity(l_idx.len());
+            let mut fr = Vec::with_capacity(r_idx.len());
+            for (k, keep) in mask.iter().enumerate() {
+                if *keep {
+                    fl.push(l_idx[k]);
+                    fr.push(r_idx[k]);
+                }
+            }
+            (fl, fr)
         }
-        None => combined,
+        None => (l_idx, r_idx),
     };
-    Ok(combined)
+
+    // Materialize the combined rowset through typed gathers.
+    materialize_join(l, r, &out_schema, &l_idx, &r_idx)
+}
+
+/// Evaluate a residual join predicate over the gather vectors without
+/// materializing the full combined rowset: resolve the predicate's
+/// referenced columns against the combined schema, gather only those,
+/// and return the keep-mask over the candidate matches.
+fn residual_mask(
+    pred: &Expr,
+    l: &RowSet,
+    r: &RowSet,
+    out_schema: &Schema,
+    l_idx: &[i64],
+    r_idx: &[i64],
+    ctx: &ExecContext,
+) -> Result<Vec<bool>> {
+    let mut names = Vec::new();
+    pred.referenced_columns(&mut names);
+    let mut needed: Vec<usize> = names
+        .iter()
+        .map(|n| resolve_column(out_schema, n))
+        .collect::<Result<_>>()?;
+    needed.sort_unstable();
+    needed.dedup();
+    let ln = l.num_columns();
+    let mut fields = Vec::with_capacity(needed.len().max(1));
+    let mut cols = Vec::with_capacity(needed.len().max(1));
+    if needed.is_empty() {
+        // Column-free residual (e.g. a constant conjunct): a zero-column
+        // rowset would report zero rows, so carry a dummy column that
+        // pins the row count to the number of candidate matches.
+        fields.push(Field::new("__residual_dummy", DataType::Int64));
+        cols.push(Column::from_i64(vec![0; l_idx.len()]));
+    }
+    for &ci in &needed {
+        fields.push(out_schema.field(ci).clone());
+        let col = if ci < ln {
+            l.column(ci).gather_opt(l_idx)
+        } else {
+            r.column(ci - ln).gather_opt(r_idx)
+        };
+        cols.push(col);
+    }
+    let narrow = RowSet::new(Schema::new(fields), cols)?;
+    eval_pred(pred, &narrow, ctx)
 }
 
 fn materialize_join(
@@ -1198,7 +1296,7 @@ fn sort(
 ) -> Result<RowSet> {
     let key_cols: Vec<Column> = keys
         .iter()
-        .map(|k| eval_expr(&k.expr, rows, &ctx.udfs))
+        .map(|k| eval(&k.expr, rows, ctx))
         .collect::<Result<_>>()?;
     let mut idx: Vec<usize> = (0..rows.num_rows()).collect();
     if ctx.vectorized {

@@ -1,14 +1,35 @@
 //! Expression evaluation over rowsets.
 //!
-//! Row-wise `Value` semantics (SQL three-valued logic for NULLs) with a
-//! vectorized fast path for f64 arithmetic on Float64 columns — the fast
-//! path was added in the perf pass and is covered by the same tests as the
-//! general path.
+//! Two evaluators share one semantics (SQL three-valued logic for NULLs):
+//!
+//! - **Columnar** ([`eval_expr`], the default): every operator runs as a
+//!   typed kernel over raw column slices with null bitmaps — arithmetic,
+//!   comparison, and logical kernels, typed CASE/IN/BETWEEN selection,
+//!   constant folding of literal subtrees, a batched `Value`-marshalling
+//!   fast path for registered scalar UDFs (one conversion per *column*
+//!   instead of one expression-tree dispatch per *cell*), and an
+//!   expression-level fast path that hands whole batches to registered
+//!   vectorized UDFs.
+//! - **Row-at-a-time** ([`eval_expr_rowwise`] / [`eval_row`]): the
+//!   reference implementation, kept for differential tests and the
+//!   `expr_kernels` ablation (`ExecContext::vectorized = false`).
+//!
+//! The columnar evaluator mirrors the row path bit-for-bit on results —
+//! including NULL-slot payload normalization, `-0.0` handling, and the
+//! output-type derivation for all-NULL columns — so the two paths can be
+//! compared with `assert_eq!` on whole rowsets. The one intentional
+//! divergence is *error laziness*: the row path short-circuits AND/OR,
+//! CASE, and COALESCE per row, so a row that is never reached can hide a
+//! type error that the columnar path (which evaluates whole columns)
+//! surfaces. Well-typed queries behave identically.
+
+use std::borrow::Cow;
+use std::cmp::Ordering;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::sql::ast::{BinaryOp, Expr, UnaryOp};
-use crate::types::{Column, DataType, RowSet, Schema, Value};
+use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
 use crate::udf::UdfRegistry;
 
 /// Resolve a (possibly qualified) column name against a schema.
@@ -95,25 +116,74 @@ pub fn infer_type(expr: &Expr, schema: &Schema, udfs: &UdfRegistry) -> DataType 
     }
 }
 
-/// Evaluate `expr` over every row of `rows`, producing a column.
-/// Scalar UDF calls are dispatched through `udfs` (per-row, §III.A).
+/// Builtin scalar functions (these shadow same-named UDFs, exactly like
+/// the row path's dispatch order).
+fn is_builtin(name: &str) -> bool {
+    matches!(
+        name,
+        "coalesce"
+            | "abs"
+            | "sqrt"
+            | "exp"
+            | "ln"
+            | "log10"
+            | "floor"
+            | "ceil"
+            | "round"
+            | "power"
+            | "pow"
+            | "upper"
+            | "lower"
+            | "length"
+            | "substr"
+            | "substring"
+            | "concat"
+    )
+}
+
+// ------------------------------------------------------------- entry points
+
+/// Evaluate `expr` over every row of `rows` with the columnar kernels,
+/// producing a column. Registered scalar UDFs go through the batched
+/// `Value`-marshalling fast path; registered vectorized UDFs receive the
+/// whole batch at once.
 pub fn eval_expr(expr: &Expr, rows: &RowSet, udfs: &UdfRegistry) -> Result<Column> {
-    // Vectorized fast path: pure-f64 arithmetic trees over Float64 columns.
-    if let Some(col) = try_eval_f64_fast(expr, rows) {
-        return Ok(col);
-    }
+    let dual = dual_rowset();
+    let folded = fold_constants(expr, udfs, &dual);
+    // Interior nodes borrow column references instead of cloning them;
+    // a borrowed result is only materialized (and NULL-payload
+    // normalized) here at the top.
+    Ok(match eval_vec(&folded, rows, udfs)? {
+        Cow::Borrowed(c) => normalized_column(c),
+        Cow::Owned(c) => c,
+    })
+}
+
+/// Evaluate `expr` row by row through [`eval_row`] — the reference
+/// implementation the columnar kernels are differentially tested against.
+pub fn eval_expr_rowwise(expr: &Expr, rows: &RowSet, udfs: &UdfRegistry) -> Result<Column> {
     let n = rows.num_rows();
     let mut out = Vec::with_capacity(n);
     for r in 0..n {
         out.push(eval_row(expr, rows, r, udfs)?);
     }
-    // Pick a concrete type from the values (first non-null), defaulting by
-    // static inference when all values are NULL.
+    column_from_values_tail(&out, expr, &rows.schema, udfs)
+}
+
+/// Pick a concrete output type from evaluated values (first non-NULL),
+/// defaulting by static inference when every value is NULL — shared by the
+/// row path and the columnar fallbacks so both derive identical schemas.
+fn column_from_values_tail(
+    out: &[Value],
+    expr: &Expr,
+    schema: &Schema,
+    udfs: &UdfRegistry,
+) -> Result<Column> {
     let dt = out
         .iter()
         .find_map(Value::data_type)
-        .unwrap_or_else(|| infer_type(expr, &rows.schema, udfs));
-    Column::from_values(coerce_numeric(dt, &out), &out)
+        .unwrap_or_else(|| infer_type(expr, schema, udfs));
+    Column::from_values(coerce_numeric(dt, out), out)
 }
 
 /// When a column mixes Int and Float values (e.g. CASE branches), widen.
@@ -129,98 +199,1040 @@ fn coerce_numeric(dt: DataType, values: &[Value]) -> DataType {
     }
 }
 
-/// Evaluate a predicate into a boolean mask (NULL ⇒ false, SQL WHERE).
+/// Evaluate a predicate into a boolean mask (NULL ⇒ false, SQL WHERE),
+/// through the columnar kernels.
 pub fn eval_predicate(expr: &Expr, rows: &RowSet, udfs: &UdfRegistry) -> Result<Vec<bool>> {
     let col = eval_expr(expr, rows, udfs)?;
-    let n = rows.num_rows();
-    let mut mask = Vec::with_capacity(n);
-    for i in 0..n {
-        mask.push(matches!(col.value(i), Value::Bool(true)));
-    }
-    Ok(mask)
+    Ok(mask_from_column(&col, rows.num_rows()))
 }
 
-fn try_eval_f64_fast(expr: &Expr, rows: &RowSet) -> Option<Column> {
-    fn is_fast(e: &Expr, rows: &RowSet) -> bool {
-        match e {
-            Expr::Literal(Value::Float(_)) | Expr::Literal(Value::Int(_)) => true,
-            Expr::Column(name) => resolve_column(&rows.schema, name)
-                .ok()
-                .map_or(false, |i| {
-                    matches!(rows.column(i), Column::Float64 { valid: None, .. })
-                }),
-            Expr::Unary { op: UnaryOp::Neg, expr } => is_fast(expr, rows),
-            Expr::Binary { op, left, right } => {
-                matches!(
-                    op,
-                    BinaryOp::Add | BinaryOp::Sub | BinaryOp::Mul | BinaryOp::Div
-                ) && is_fast(left, rows)
-                    && is_fast(right, rows)
+/// Evaluate a predicate into a boolean mask through the row-at-a-time
+/// reference path.
+pub fn eval_predicate_rowwise(
+    expr: &Expr,
+    rows: &RowSet,
+    udfs: &UdfRegistry,
+) -> Result<Vec<bool>> {
+    let col = eval_expr_rowwise(expr, rows, udfs)?;
+    Ok(mask_from_column(&col, rows.num_rows()))
+}
+
+/// `true` exactly where the column holds a valid `true` (non-boolean
+/// columns yield an all-false mask, like the row path's `matches!`).
+fn mask_from_column(col: &Column, n: usize) -> Vec<bool> {
+    match col {
+        Column::Bool { data, valid } => (0..n)
+            .map(|i| data[i] && valid.as_ref().map_or(true, |v| v[i]))
+            .collect(),
+        _ => vec![false; n],
+    }
+}
+
+// --------------------------------------------------------- constant folding
+
+/// One-row dummy table for evaluating column-free subtrees at fold time.
+fn dual_rowset() -> RowSet {
+    RowSet::new(
+        Schema::new(vec![Field::new("__dual", DataType::Int64)]),
+        vec![Column::from_i64(vec![0])],
+    )
+    .expect("static dual rowset")
+}
+
+fn is_lit(e: &Expr) -> bool {
+    matches!(e, Expr::Literal(_))
+}
+
+/// Can `e` be pre-evaluated once? True when every direct child is already
+/// a literal and the node itself is pure (no column refs, builtin
+/// functions only — UDF calls keep their per-row invocation semantics).
+fn foldable(e: &Expr) -> bool {
+    match e {
+        Expr::Unary { expr, .. } => is_lit(expr),
+        Expr::Binary { left, right, .. } => is_lit(left) && is_lit(right),
+        Expr::Func { name, args } => is_builtin(name) && args.iter().all(is_lit),
+        Expr::IsNull { expr, .. } => is_lit(expr),
+        Expr::InList { expr, list, .. } => is_lit(expr) && list.iter().all(is_lit),
+        Expr::Between { expr, low, high, .. } => is_lit(expr) && is_lit(low) && is_lit(high),
+        Expr::Case { branches, else_value } => {
+            branches.iter().all(|(c, v)| is_lit(c) && is_lit(v))
+                && else_value.as_ref().map_or(true, |e| is_lit(e))
+        }
+        _ => false,
+    }
+}
+
+/// Bottom-up constant folding: literal-only subtrees collapse to a single
+/// pre-evaluated literal, so the kernels see them as broadcasts instead of
+/// re-deriving them per batch. Folding never *introduces* errors: a
+/// subtree whose evaluation fails is left intact for the kernels to
+/// report (or not, if no row exercises it).
+fn fold_constants(expr: &Expr, udfs: &UdfRegistry, dual: &RowSet) -> Expr {
+    let folded = match expr {
+        Expr::Literal(_) | Expr::Column(_) | Expr::Star => expr.clone(),
+        Expr::Unary { op, expr: e } => Expr::Unary {
+            op: *op,
+            expr: Box::new(fold_constants(e, udfs, dual)),
+        },
+        Expr::Binary { op, left, right } => Expr::Binary {
+            op: *op,
+            left: Box::new(fold_constants(left, udfs, dual)),
+            right: Box::new(fold_constants(right, udfs, dual)),
+        },
+        Expr::Func { name, args } => Expr::Func {
+            name: name.clone(),
+            args: args.iter().map(|a| fold_constants(a, udfs, dual)).collect(),
+        },
+        Expr::IsNull { expr: e, negated } => Expr::IsNull {
+            expr: Box::new(fold_constants(e, udfs, dual)),
+            negated: *negated,
+        },
+        Expr::InList { expr: e, list, negated } => Expr::InList {
+            expr: Box::new(fold_constants(e, udfs, dual)),
+            list: list.iter().map(|x| fold_constants(x, udfs, dual)).collect(),
+            negated: *negated,
+        },
+        Expr::Between { expr: e, low, high, negated } => Expr::Between {
+            expr: Box::new(fold_constants(e, udfs, dual)),
+            low: Box::new(fold_constants(low, udfs, dual)),
+            high: Box::new(fold_constants(high, udfs, dual)),
+            negated: *negated,
+        },
+        Expr::Case { branches, else_value } => Expr::Case {
+            branches: branches
+                .iter()
+                .map(|(c, v)| {
+                    (
+                        fold_constants(c, udfs, dual),
+                        fold_constants(v, udfs, dual),
+                    )
+                })
+                .collect(),
+            else_value: else_value
+                .as_ref()
+                .map(|e| Box::new(fold_constants(e, udfs, dual))),
+        },
+    };
+    if foldable(&folded) {
+        if let Ok(v) = eval_row(&folded, dual, 0, udfs) {
+            // A NULL result carries no type: folding `1/0` or `upper(NULL)`
+            // to a bare NULL literal would erase the subtree's static type
+            // (Float64 / Utf8). Keep the node and let the kernels type it.
+            if !v.is_null() {
+                return Expr::Literal(v);
             }
-            _ => false,
         }
     }
-    // Only worthwhile when at least one column participates.
-    let mut cols = Vec::new();
-    expr.referenced_columns(&mut cols);
-    if cols.is_empty() || !is_fast(expr, rows) {
-        return None;
+    folded
+}
+
+// ------------------------------------------------------- columnar evaluator
+
+fn is_numeric(c: &Column) -> bool {
+    matches!(c, Column::Int64 { .. } | Column::Float64 { .. })
+}
+
+/// Numeric cell widened to f64 (caller guarantees the column is numeric).
+#[inline]
+fn f64_at(c: &Column, i: usize) -> f64 {
+    match c {
+        Column::Int64 { data, .. } => data[i] as f64,
+        Column::Float64 { data, .. } => data[i],
+        _ => unreachable!("f64_at on non-numeric column"),
     }
-    fn eval_fast(e: &Expr, rows: &RowSet, out: &mut Vec<f64>) {
-        match e {
-            Expr::Literal(v) => {
-                let x = v.as_f64().unwrap();
-                out.clear();
-                out.resize(rows.num_rows(), x);
+}
+
+/// All-NULL column of type `dt`, with default payloads (matching what
+/// `Column::from_values` produces for NULL slots).
+fn all_null_column(dt: DataType, n: usize) -> Column {
+    let valid = (n > 0).then(|| vec![false; n]);
+    match dt {
+        DataType::Int64 => Column::Int64 { data: vec![0; n], valid },
+        DataType::Float64 => Column::Float64 { data: vec![0.0; n], valid },
+        DataType::Utf8 => Column::Utf8 { data: vec![String::new(); n], valid },
+        DataType::Bool => Column::Bool { data: vec![false; n], valid },
+    }
+}
+
+/// Copy of `c` with NULL-slot payloads zeroed and a redundant all-true
+/// mask dropped — the normal form every kernel emits, so differential
+/// comparisons against the row path (which rebuilds through
+/// `Column::from_values`) are exact. Only applied when a borrowed source
+/// column becomes the expression result: every kernel consults validity
+/// before reading payloads, so junk-under-NULL never leaks through an
+/// interior node.
+fn normalized_column(c: &Column) -> Column {
+    if c.validity().is_none() {
+        return c.clone();
+    }
+    let n = c.len();
+    let mut valid = vec![true; n];
+    let mut any_null = false;
+    for i in 0..n {
+        if !c.is_valid(i) {
+            valid[i] = false;
+            any_null = true;
+        }
+    }
+    match c {
+        Column::Int64 { data, .. } => Column::Int64 {
+            data: (0..n).map(|i| if valid[i] { data[i] } else { 0 }).collect(),
+            valid: any_null.then_some(valid),
+        },
+        Column::Float64 { data, .. } => Column::Float64 {
+            data: (0..n)
+                .map(|i| if valid[i] { data[i] } else { 0.0 })
+                .collect(),
+            valid: any_null.then_some(valid),
+        },
+        Column::Utf8 { data, .. } => Column::Utf8 {
+            data: (0..n)
+                .map(|i| if valid[i] { data[i].clone() } else { String::new() })
+                .collect(),
+            valid: any_null.then_some(valid),
+        },
+        Column::Bool { data, .. } => Column::Bool {
+            data: (0..n).map(|i| valid[i] && data[i]).collect(),
+            valid: any_null.then_some(valid),
+        },
+    }
+}
+
+/// Broadcast a literal to a column of `n` rows. A NULL literal broadcasts
+/// to an all-NULL Int64 column (the row path's static default type).
+fn broadcast_value(v: &Value, n: usize) -> Column {
+    match v {
+        Value::Null => all_null_column(DataType::Int64, n),
+        Value::Int(i) => Column::from_i64(vec![*i; n]),
+        Value::Float(f) => Column::from_f64(vec![*f; n]),
+        Value::Str(s) => Column::from_strings(vec![s.clone(); n]),
+        Value::Bool(b) => Column::from_bools(vec![*b; n]),
+    }
+}
+
+/// The columnar evaluator core: one typed kernel per operator. Column
+/// references are returned as borrows (no clone); every other node owns
+/// its freshly-computed, normalized output.
+fn eval_vec<'a>(expr: &Expr, rows: &'a RowSet, udfs: &UdfRegistry) -> Result<Cow<'a, Column>> {
+    let n = rows.num_rows();
+    match expr {
+        Expr::Literal(v) => Ok(Cow::Owned(broadcast_value(v, n))),
+        Expr::Column(name) => {
+            let i = resolve_column(&rows.schema, name)?;
+            Ok(Cow::Borrowed(rows.column(i)))
+        }
+        Expr::Star => bail!("* is only valid inside COUNT(*)"),
+        Expr::Unary { op, expr: e } => {
+            let c = eval_vec(e, rows, udfs)?;
+            match op {
+                UnaryOp::Neg => neg_kernel(c.as_ref(), n).map(Cow::Owned),
+                UnaryOp::Not => not_kernel(c.as_ref(), n).map(Cow::Owned),
             }
-            Expr::Column(name) => {
-                let i = resolve_column(&rows.schema, name).unwrap();
-                out.clear();
-                out.extend_from_slice(rows.column(i).f64_data().unwrap());
+        }
+        Expr::Binary { op, left, right } => {
+            let l = eval_vec(left, rows, udfs)?;
+            let r = eval_vec(right, rows, udfs)?;
+            let (l, r) = (l.as_ref(), r.as_ref());
+            match op {
+                BinaryOp::Add | BinaryOp::Sub | BinaryOp::Mul | BinaryOp::Div | BinaryOp::Mod => {
+                    arith_kernel(*op, l, r, n)
+                }
+                BinaryOp::Eq
+                | BinaryOp::NotEq
+                | BinaryOp::Lt
+                | BinaryOp::LtEq
+                | BinaryOp::Gt
+                | BinaryOp::GtEq => cmp_kernel(*op, l, r, n),
+                BinaryOp::And | BinaryOp::Or => logic_kernel(*op, l, r, n),
+                BinaryOp::Concat => concat_kernel(l, r, n),
             }
-            Expr::Unary { expr, .. } => {
-                eval_fast(expr, rows, out);
-                for v in out.iter_mut() {
-                    *v = -*v;
+            .map(Cow::Owned)
+        }
+        Expr::Func { name, args } => {
+            eval_func_vec(name, args, expr, rows, udfs).map(Cow::Owned)
+        }
+        Expr::IsNull { expr: e, negated } => {
+            let c = eval_vec(e, rows, udfs)?;
+            let data: Vec<bool> = (0..n).map(|i| !c.is_valid(i) != *negated).collect();
+            Ok(Cow::Owned(Column::from_bools(data)))
+        }
+        Expr::InList { expr: e, list, negated } => {
+            let c = eval_vec(e, rows, udfs)?;
+            let items: Vec<Cow<Column>> = list
+                .iter()
+                .map(|x| eval_vec(x, rows, udfs))
+                .collect::<Result<_>>()?;
+            in_list_kernel(c.as_ref(), &items, *negated, n).map(Cow::Owned)
+        }
+        Expr::Between { expr: e, low, high, negated } => {
+            let v = eval_vec(e, rows, udfs)?;
+            let lo = eval_vec(low, rows, udfs)?;
+            let hi = eval_vec(high, rows, udfs)?;
+            between_kernel(v.as_ref(), lo.as_ref(), hi.as_ref(), *negated, n).map(Cow::Owned)
+        }
+        Expr::Case { branches, else_value } => {
+            let conds: Vec<Cow<Column>> = branches
+                .iter()
+                .map(|(c, _)| eval_vec(c, rows, udfs))
+                .collect::<Result<_>>()?;
+            let mut vals: Vec<Cow<Column>> = branches
+                .iter()
+                .map(|(_, v)| eval_vec(v, rows, udfs))
+                .collect::<Result<_>>()?;
+            let else_idx = vals.len() as i32;
+            if let Some(e) = else_value {
+                vals.push(eval_vec(e, rows, udfs)?);
+            }
+            // choice[i]: index into `vals` (first matching branch, else the
+            // ELSE column), or -1 ⇒ NULL.
+            let mut choice = vec![-1i32; n];
+            for (bi, cond) in conds.iter().enumerate() {
+                if let Column::Bool { data, valid } = cond.as_ref() {
+                    for i in 0..n {
+                        if choice[i] < 0
+                            && data[i]
+                            && valid.as_ref().map_or(true, |v| v[i])
+                        {
+                            choice[i] = bi as i32;
+                        }
+                    }
+                }
+                // Non-boolean condition columns never match (row-path
+                // `matches!(..., Value::Bool(true))` semantics).
+            }
+            if else_value.is_some() {
+                for ch in choice.iter_mut() {
+                    if *ch < 0 {
+                        *ch = else_idx;
+                    }
                 }
             }
-            Expr::Binary { op, left, right } => {
-                let mut rhs = Vec::new();
-                eval_fast(left, rows, out);
-                eval_fast(right, rows, &mut rhs);
-                match op {
-                    BinaryOp::Add => {
-                        for (a, b) in out.iter_mut().zip(&rhs) {
-                            *a += b;
-                        }
-                    }
-                    BinaryOp::Sub => {
-                        for (a, b) in out.iter_mut().zip(&rhs) {
-                            *a -= b;
-                        }
-                    }
-                    BinaryOp::Mul => {
-                        for (a, b) in out.iter_mut().zip(&rhs) {
-                            *a *= b;
-                        }
-                    }
-                    BinaryOp::Div => {
-                        for (a, b) in out.iter_mut().zip(&rhs) {
-                            *a /= b;
+            select_case(&choice, &vals, expr, rows, udfs, n).map(Cow::Owned)
+        }
+    }
+}
+
+fn neg_kernel(c: &Column, n: usize) -> Result<Column> {
+    match c {
+        Column::Int64 { data, .. } => {
+            let mut out = vec![0i64; n];
+            let mut valid = vec![true; n];
+            let mut any_null = false;
+            for i in 0..n {
+                if c.is_valid(i) {
+                    out[i] = -data[i];
+                } else {
+                    valid[i] = false;
+                    any_null = true;
+                }
+            }
+            Ok(Column::Int64 { data: out, valid: any_null.then_some(valid) })
+        }
+        Column::Float64 { data, .. } => {
+            let mut out = vec![0.0f64; n];
+            let mut valid = vec![true; n];
+            let mut any_null = false;
+            for i in 0..n {
+                if c.is_valid(i) {
+                    out[i] = -data[i];
+                } else {
+                    valid[i] = false;
+                    any_null = true;
+                }
+            }
+            Ok(Column::Float64 { data: out, valid: any_null.then_some(valid) })
+        }
+        other => {
+            for i in 0..n {
+                if other.is_valid(i) {
+                    bail!("cannot negate {}", other.value(i));
+                }
+            }
+            Ok(all_null_column(other.data_type(), n))
+        }
+    }
+}
+
+fn not_kernel(c: &Column, n: usize) -> Result<Column> {
+    match c {
+        Column::Bool { data, .. } => {
+            let mut out = vec![false; n];
+            let mut valid = vec![true; n];
+            let mut any_null = false;
+            for i in 0..n {
+                if c.is_valid(i) {
+                    out[i] = !data[i];
+                } else {
+                    valid[i] = false;
+                    any_null = true;
+                }
+            }
+            Ok(Column::Bool { data: out, valid: any_null.then_some(valid) })
+        }
+        other => {
+            for i in 0..n {
+                if other.is_valid(i) {
+                    bail!("NOT expects a boolean, got {}", other.value(i));
+                }
+            }
+            Ok(all_null_column(DataType::Bool, n))
+        }
+    }
+}
+
+fn arith_kernel(op: BinaryOp, l: &Column, r: &Column, n: usize) -> Result<Column> {
+    use BinaryOp::*;
+    let lv = l.validity();
+    let rv = r.validity();
+    let both_valid =
+        |i: usize| lv.map_or(true, |v| v[i]) && rv.map_or(true, |v| v[i]);
+    if !is_numeric(l) || !is_numeric(r) {
+        // Mirror the row path: error on the first row where both operands
+        // are non-NULL; NULL propagation wins everywhere else.
+        for i in 0..n {
+            if both_valid(i) {
+                let bad = if !is_numeric(l) { l.value(i) } else { r.value(i) };
+                bail!("arith on {bad}");
+            }
+        }
+        let dt = if matches!(op, Div)
+            || l.data_type() == DataType::Float64
+            || r.data_type() == DataType::Float64
+        {
+            DataType::Float64
+        } else {
+            DataType::Int64
+        };
+        return Ok(all_null_column(dt, n));
+    }
+    match (l, r, op) {
+        (
+            Column::Int64 { data: a, .. },
+            Column::Int64 { data: b, .. },
+            Add | Sub | Mul | Mod,
+        ) => {
+            let mut data = vec![0i64; n];
+            let mut valid = vec![true; n];
+            let mut any_null = false;
+            for i in 0..n {
+                if !both_valid(i) {
+                    valid[i] = false;
+                    any_null = true;
+                    continue;
+                }
+                data[i] = match op {
+                    Add => a[i].wrapping_add(b[i]),
+                    Sub => a[i].wrapping_sub(b[i]),
+                    Mul => a[i].wrapping_mul(b[i]),
+                    Mod => {
+                        if b[i] == 0 {
+                            valid[i] = false;
+                            any_null = true;
+                            0
+                        } else {
+                            a[i] % b[i]
                         }
                     }
                     _ => unreachable!(),
+                };
+            }
+            Ok(Column::Int64 { data, valid: any_null.then_some(valid) })
+        }
+        (_, _, Div) => {
+            // SQL: division by zero yields NULL.
+            let mut data = vec![0.0f64; n];
+            let mut valid = vec![true; n];
+            let mut any_null = false;
+            for i in 0..n {
+                if !both_valid(i) {
+                    valid[i] = false;
+                    any_null = true;
+                    continue;
+                }
+                let b = f64_at(r, i);
+                if b == 0.0 {
+                    valid[i] = false;
+                    any_null = true;
+                } else {
+                    data[i] = f64_at(l, i) / b;
                 }
             }
-            _ => unreachable!(),
+            Ok(Column::Float64 { data, valid: any_null.then_some(valid) })
+        }
+        _ => {
+            // Mixed / float arithmetic widens to f64.
+            let mut data = vec![0.0f64; n];
+            let mut valid = vec![true; n];
+            let mut any_null = false;
+            for i in 0..n {
+                if !both_valid(i) {
+                    valid[i] = false;
+                    any_null = true;
+                    continue;
+                }
+                let a = f64_at(l, i);
+                let b = f64_at(r, i);
+                data[i] = match op {
+                    Add => a + b,
+                    Sub => a - b,
+                    Mul => a * b,
+                    Mod => a % b,
+                    _ => unreachable!(),
+                };
+            }
+            Ok(Column::Float64 { data, valid: any_null.then_some(valid) })
         }
     }
-    let mut out = Vec::new();
-    eval_fast(expr, rows, &mut out);
-    Some(Column::from_f64(out))
 }
 
-/// Evaluate `expr` for one row.
+/// Cell-wise mirror of `Value::sql_cmp` (both cells assumed valid): string
+/// and bool compare within their type, numerics compare as f64, mismatched
+/// types (and NaN) are unknown.
+fn cell_cmp(l: &Column, r: &Column, i: usize) -> Option<Ordering> {
+    match (l, r) {
+        (Column::Utf8 { data: a, .. }, Column::Utf8 { data: b, .. }) => Some(a[i].cmp(&b[i])),
+        (Column::Bool { data: a, .. }, Column::Bool { data: b, .. }) => Some(a[i].cmp(&b[i])),
+        _ => {
+            if !is_numeric(l) || !is_numeric(r) {
+                return None;
+            }
+            f64_at(l, i).partial_cmp(&f64_at(r, i))
+        }
+    }
+}
+
+fn cmp_kernel(op: BinaryOp, l: &Column, r: &Column, n: usize) -> Result<Column> {
+    use std::cmp::Ordering::*;
+    let lv = l.validity();
+    let rv = r.validity();
+    let mut data = vec![false; n];
+    let mut valid = vec![true; n];
+    let mut any_null = false;
+    for i in 0..n {
+        if !(lv.map_or(true, |v| v[i]) && rv.map_or(true, |v| v[i])) {
+            valid[i] = false;
+            any_null = true;
+            continue;
+        }
+        let ord = cell_cmp(l, r, i).ok_or_else(|| {
+            anyhow!("cannot compare {} with {}", l.value(i), r.value(i))
+        })?;
+        data[i] = match op {
+            BinaryOp::Eq => ord == Equal,
+            BinaryOp::NotEq => ord != Equal,
+            BinaryOp::Lt => ord == Less,
+            BinaryOp::LtEq => ord != Greater,
+            BinaryOp::Gt => ord == Greater,
+            BinaryOp::GtEq => ord != Less,
+            _ => unreachable!(),
+        };
+    }
+    Ok(Column::Bool { data, valid: any_null.then_some(valid) })
+}
+
+/// Per-row boolean view of a column: `Some(b)` for a valid bool, `None`
+/// for NULL. Any valid non-boolean cell is an error (row-path semantics).
+fn bool_cells(c: &Column, n: usize) -> Result<Vec<Option<bool>>> {
+    match c {
+        Column::Bool { data, valid } => Ok((0..n)
+            .map(|i| {
+                if valid.as_ref().map_or(true, |v| v[i]) {
+                    Some(data[i])
+                } else {
+                    None
+                }
+            })
+            .collect()),
+        other => {
+            for i in 0..n {
+                if other.is_valid(i) {
+                    bail!("AND/OR expects booleans");
+                }
+            }
+            Ok(vec![None; n])
+        }
+    }
+}
+
+/// Three-valued (Kleene) AND/OR over boolean columns.
+fn logic_kernel(op: BinaryOp, l: &Column, r: &Column, n: usize) -> Result<Column> {
+    let a = bool_cells(l, n)?;
+    let b = bool_cells(r, n)?;
+    let mut data = vec![false; n];
+    let mut valid = vec![true; n];
+    let mut any_null = false;
+    for i in 0..n {
+        let v = match op {
+            BinaryOp::And => match (a[i], b[i]) {
+                (Some(false), _) | (_, Some(false)) => Some(false),
+                (Some(true), Some(true)) => Some(true),
+                _ => None,
+            },
+            BinaryOp::Or => match (a[i], b[i]) {
+                (Some(true), _) | (_, Some(true)) => Some(true),
+                (Some(false), Some(false)) => Some(false),
+                _ => None,
+            },
+            _ => unreachable!(),
+        };
+        match v {
+            Some(x) => data[i] = x,
+            None => {
+                valid[i] = false;
+                any_null = true;
+            }
+        }
+    }
+    Ok(Column::Bool { data, valid: any_null.then_some(valid) })
+}
+
+/// Append one cell rendered exactly like `Value`'s `Display` (so `||`
+/// output matches the row path byte-for-byte).
+fn push_cell_display(out: &mut String, c: &Column, i: usize) {
+    use std::fmt::Write;
+    match c {
+        Column::Int64 { data, .. } => {
+            let _ = write!(out, "{}", data[i]);
+        }
+        Column::Float64 { data, .. } => {
+            let x = data[i];
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                let _ = write!(out, "{x:.1}");
+            } else {
+                let _ = write!(out, "{x}");
+            }
+        }
+        Column::Utf8 { data, .. } => out.push_str(&data[i]),
+        Column::Bool { data, .. } => {
+            let _ = write!(out, "{}", data[i]);
+        }
+    }
+}
+
+fn concat_kernel(l: &Column, r: &Column, n: usize) -> Result<Column> {
+    let mut data = vec![String::new(); n];
+    let mut valid = vec![true; n];
+    let mut any_null = false;
+    for i in 0..n {
+        if l.is_valid(i) && r.is_valid(i) {
+            let mut s = String::new();
+            push_cell_display(&mut s, l, i);
+            push_cell_display(&mut s, r, i);
+            data[i] = s;
+        } else {
+            valid[i] = false;
+            any_null = true;
+        }
+    }
+    Ok(Column::Utf8 { data, valid: any_null.then_some(valid) })
+}
+
+fn in_list_kernel(
+    e: &Column,
+    items: &[Cow<'_, Column>],
+    negated: bool,
+    n: usize,
+) -> Result<Column> {
+    let mut data = vec![false; n];
+    let mut valid = vec![true; n];
+    let mut any_null = false;
+    for i in 0..n {
+        if !e.is_valid(i) {
+            valid[i] = false;
+            any_null = true;
+            continue;
+        }
+        let mut saw_null = false;
+        let mut hit = false;
+        for item in items {
+            let item = item.as_ref();
+            if !item.is_valid(i) {
+                saw_null = true;
+                continue;
+            }
+            if cell_cmp(e, item, i) == Some(Ordering::Equal) {
+                hit = true;
+                break;
+            }
+        }
+        if hit {
+            data[i] = !negated;
+        } else if saw_null {
+            valid[i] = false;
+            any_null = true;
+        } else {
+            data[i] = negated;
+        }
+    }
+    Ok(Column::Bool { data, valid: any_null.then_some(valid) })
+}
+
+fn between_kernel(
+    v: &Column,
+    lo: &Column,
+    hi: &Column,
+    negated: bool,
+    n: usize,
+) -> Result<Column> {
+    let mut data = vec![false; n];
+    let mut valid = vec![true; n];
+    let mut any_null = false;
+    for i in 0..n {
+        if !(v.is_valid(i) && lo.is_valid(i) && hi.is_valid(i)) {
+            valid[i] = false;
+            any_null = true;
+            continue;
+        }
+        let ge = cell_cmp(v, lo, i).map(|o| o != Ordering::Less);
+        let le = cell_cmp(v, hi, i).map(|o| o != Ordering::Greater);
+        match (ge, le) {
+            (Some(a), Some(b)) => data[i] = (a && b) != negated,
+            _ => bail!("BETWEEN type mismatch"),
+        }
+    }
+    Ok(Column::Bool { data, valid: any_null.then_some(valid) })
+}
+
+/// Materialize CASE output from the per-row branch choice. Same-typed
+/// branch columns go through a typed select; mixed types fall back to the
+/// row path's value-based type derivation (including its string coercion).
+fn select_case(
+    choice: &[i32],
+    vals: &[Cow<'_, Column>],
+    expr: &Expr,
+    rows: &RowSet,
+    udfs: &UdfRegistry,
+    n: usize,
+) -> Result<Column> {
+    if !vals.is_empty() && vals.iter().all(|c| c.data_type() == vals[0].data_type()) {
+        let c = select_typed(choice, vals, n);
+        // All-NULL output defers to the row path's static type derivation.
+        if (0..n).any(|i| c.is_valid(i)) {
+            return Ok(c);
+        }
+    }
+    let out: Vec<Value> = (0..n)
+        .map(|i| {
+            let k = choice[i];
+            if k < 0 {
+                Value::Null
+            } else {
+                vals[k as usize].value(i)
+            }
+        })
+        .collect();
+    column_from_values_tail(&out, expr, &rows.schema, udfs)
+}
+
+/// Typed gather across same-typed columns: `out[i] = vals[choice[i]][i]`.
+fn select_typed(choice: &[i32], vals: &[Cow<'_, Column>], n: usize) -> Column {
+    let mut valid = vec![true; n];
+    let mut any_null = false;
+    // The chosen column for row i, when it holds a valid cell there.
+    let mut chosen = |i: usize| -> Option<&Column> {
+        let k = choice[i];
+        if k >= 0 && vals[k as usize].is_valid(i) {
+            Some(vals[k as usize].as_ref())
+        } else {
+            valid[i] = false;
+            any_null = true;
+            None
+        }
+    };
+    match vals[0].data_type() {
+        DataType::Int64 => {
+            let mut data = vec![0i64; n];
+            for i in 0..n {
+                if let Some(Column::Int64 { data: d, .. }) = chosen(i) {
+                    data[i] = d[i];
+                }
+            }
+            Column::Int64 { data, valid: any_null.then_some(valid) }
+        }
+        DataType::Float64 => {
+            let mut data = vec![0.0f64; n];
+            for i in 0..n {
+                if let Some(Column::Float64 { data: d, .. }) = chosen(i) {
+                    data[i] = d[i];
+                }
+            }
+            Column::Float64 { data, valid: any_null.then_some(valid) }
+        }
+        DataType::Utf8 => {
+            let mut data = vec![String::new(); n];
+            for i in 0..n {
+                if let Some(Column::Utf8 { data: d, .. }) = chosen(i) {
+                    data[i] = d[i].clone();
+                }
+            }
+            Column::Utf8 { data, valid: any_null.then_some(valid) }
+        }
+        DataType::Bool => {
+            let mut data = vec![false; n];
+            for i in 0..n {
+                if let Some(Column::Bool { data: d, .. }) = chosen(i) {
+                    data[i] = d[i];
+                }
+            }
+            Column::Bool { data, valid: any_null.then_some(valid) }
+        }
+    }
+}
+
+/// Vectorized function dispatch: typed builtin kernels where available,
+/// bulk-marshalled per-row application otherwise, batched scalar-UDF
+/// marshalling, and whole-batch vectorized-UDF invocation.
+fn eval_func_vec(
+    name: &str,
+    args: &[Expr],
+    expr: &Expr,
+    rows: &RowSet,
+    udfs: &UdfRegistry,
+) -> Result<Column> {
+    let n = rows.num_rows();
+    let eval_args = |args: &[Expr]| {
+        args.iter()
+            .map(|a| eval_vec(a, rows, udfs))
+            .collect::<Result<Vec<_>>>()
+    };
+    if is_builtin(name) {
+        let cols = eval_args(args)?;
+        if let Some(col) = builtin_kernel(name, &cols, n)? {
+            return Ok(col);
+        }
+        // Generic builtin: marshal each argument column once, apply per row.
+        let vals: Vec<Vec<Value>> = cols.iter().map(|c| column_to_values(c.as_ref())).collect();
+        let mut out = Vec::with_capacity(n);
+        let mut argv: Vec<Value> = Vec::with_capacity(cols.len());
+        for i in 0..n {
+            argv.clear();
+            for v in &vals {
+                argv.push(v[i].clone());
+            }
+            out.push(apply_builtin(name, &argv)?);
+        }
+        return column_from_values_tail(&out, expr, &rows.schema, udfs);
+    }
+    if udfs.has_scalar(name) {
+        // Batched Value marshalling: one conversion per argument column,
+        // then one registry call per row — no expression-tree dispatch and
+        // no per-cell column probing in the hot loop (§III.A semantics).
+        let cols = eval_args(args)?;
+        let vals: Vec<Vec<Value>> = cols.iter().map(|c| column_to_values(c.as_ref())).collect();
+        let mut out = Vec::with_capacity(n);
+        let mut argv: Vec<Value> = Vec::with_capacity(cols.len());
+        for i in 0..n {
+            argv.clear();
+            for v in &vals {
+                argv.push(v[i].clone());
+            }
+            out.push(udfs.call_scalar(name, &argv)?);
+        }
+        return column_from_values_tail(&out, expr, &rows.schema, udfs);
+    }
+    if let Some(v) = udfs.vectorized(name) {
+        // Expression-level vectorized-UDF fast path: the whole batch goes
+        // to the UDF body in one call. UDF bodies may read raw payloads
+        // without consulting validity, so borrowed argument columns are
+        // normalized before handing the batch over.
+        let cows = eval_args(args)?;
+        let fields = cows
+            .iter()
+            .enumerate()
+            .map(|(i, c)| Field::new(format!("arg{i}"), c.data_type()))
+            .collect();
+        let cols: Vec<Column> = cows
+            .into_iter()
+            .map(|c| match c {
+                Cow::Borrowed(b) => normalized_column(b),
+                Cow::Owned(o) => o,
+            })
+            .collect();
+        let rs = RowSet::new(Schema::new(fields), cols)?;
+        let out = (v.body)(&rs)?;
+        if out.len() != n {
+            bail!(
+                "vectorized UDF {name:?} returned {} values for {} rows",
+                out.len(),
+                n
+            );
+        }
+        return Ok(Column::from_f64(out));
+    }
+    bail!("unknown function {name:?}")
+}
+
+/// Bulk scalar view of a column: one `Value` conversion per cell, done
+/// once per column (the batched-marshalling amortization for scalar UDFs
+/// and generic builtins).
+fn column_to_values(c: &Column) -> Vec<Value> {
+    (0..c.len()).map(|i| c.value(i)).collect()
+}
+
+/// Typed kernels for the hottest builtins; `Ok(None)` falls back to the
+/// generic bulk-marshalled path.
+fn builtin_kernel(name: &str, cols: &[Cow<'_, Column>], n: usize) -> Result<Option<Column>> {
+    match name {
+        "sqrt" | "exp" | "ln" | "log10" | "floor" | "ceil" => {
+            if cols.len() != 1 {
+                bail!("{name} expects 1 argument");
+            }
+            let c = cols[0].as_ref();
+            if !is_numeric(c) {
+                for i in 0..n {
+                    if c.is_valid(i) {
+                        bail!("{name} expects a number, got {}", c.value(i));
+                    }
+                }
+                return Ok(Some(all_null_column(DataType::Float64, n)));
+            }
+            let f = |x: f64| -> f64 {
+                match name {
+                    "sqrt" => x.sqrt(),
+                    "exp" => x.exp(),
+                    "ln" => x.ln(),
+                    "log10" => x.log10(),
+                    "floor" => x.floor(),
+                    _ => x.ceil(),
+                }
+            };
+            let mut data = vec![0.0f64; n];
+            let mut valid = vec![true; n];
+            let mut any_null = false;
+            for i in 0..n {
+                if c.is_valid(i) {
+                    data[i] = f(f64_at(c, i));
+                } else {
+                    valid[i] = false;
+                    any_null = true;
+                }
+            }
+            Ok(Some(Column::Float64 { data, valid: any_null.then_some(valid) }))
+        }
+        "abs" => {
+            if cols.len() != 1 {
+                bail!("abs expects 1 argument");
+            }
+            let c = cols[0].as_ref();
+            match c {
+                Column::Int64 { data, .. } => {
+                    if !(0..n).any(|i| c.is_valid(i)) {
+                        // Row path: all-NULL output falls back to the
+                        // static default type (Float64).
+                        return Ok(Some(all_null_column(DataType::Float64, n)));
+                    }
+                    let mut out = vec![0i64; n];
+                    let mut valid = vec![true; n];
+                    let mut any_null = false;
+                    for i in 0..n {
+                        if c.is_valid(i) {
+                            out[i] = data[i].abs();
+                        } else {
+                            valid[i] = false;
+                            any_null = true;
+                        }
+                    }
+                    Ok(Some(Column::Int64 { data: out, valid: any_null.then_some(valid) }))
+                }
+                Column::Float64 { data, .. } => {
+                    let mut out = vec![0.0f64; n];
+                    let mut valid = vec![true; n];
+                    let mut any_null = false;
+                    for i in 0..n {
+                        if c.is_valid(i) {
+                            out[i] = data[i].abs();
+                        } else {
+                            valid[i] = false;
+                            any_null = true;
+                        }
+                    }
+                    Ok(Some(Column::Float64 { data: out, valid: any_null.then_some(valid) }))
+                }
+                other => {
+                    for i in 0..n {
+                        if other.is_valid(i) {
+                            bail!("abs expects a number, got {}", other.value(i));
+                        }
+                    }
+                    Ok(Some(all_null_column(DataType::Float64, n)))
+                }
+            }
+        }
+        "round" if cols.len() == 1 => {
+            let c = cols[0].as_ref();
+            if !is_numeric(c) {
+                for i in 0..n {
+                    if c.is_valid(i) {
+                        bail!("round expects a number, got {}", c.value(i));
+                    }
+                }
+                return Ok(Some(all_null_column(DataType::Float64, n)));
+            }
+            let mut data = vec![0.0f64; n];
+            let mut valid = vec![true; n];
+            let mut any_null = false;
+            for i in 0..n {
+                if c.is_valid(i) {
+                    data[i] = f64_at(c, i).round();
+                } else {
+                    valid[i] = false;
+                    any_null = true;
+                }
+            }
+            Ok(Some(Column::Float64 { data, valid: any_null.then_some(valid) }))
+        }
+        "upper" | "lower" | "length" => {
+            if cols.len() != 1 {
+                bail!("{name} expects 1 argument");
+            }
+            let c = cols[0].as_ref();
+            let Column::Utf8 { data, .. } = c else {
+                for i in 0..n {
+                    if c.is_valid(i) {
+                        bail!("{name} expects a string, got {}", c.value(i));
+                    }
+                }
+                let dt = if name == "length" { DataType::Int64 } else { DataType::Utf8 };
+                return Ok(Some(all_null_column(dt, n)));
+            };
+            let mut valid = vec![true; n];
+            let mut any_null = false;
+            if name == "length" {
+                let mut out = vec![0i64; n];
+                for i in 0..n {
+                    if c.is_valid(i) {
+                        out[i] = data[i].len() as i64;
+                    } else {
+                        valid[i] = false;
+                        any_null = true;
+                    }
+                }
+                Ok(Some(Column::Int64 { data: out, valid: any_null.then_some(valid) }))
+            } else {
+                let mut out = vec![String::new(); n];
+                for i in 0..n {
+                    if c.is_valid(i) {
+                        out[i] = if name == "upper" {
+                            data[i].to_uppercase()
+                        } else {
+                            data[i].to_lowercase()
+                        };
+                    } else {
+                        valid[i] = false;
+                        any_null = true;
+                    }
+                }
+                Ok(Some(Column::Utf8 { data: out, valid: any_null.then_some(valid) }))
+            }
+        }
+        _ => Ok(None),
+    }
+}
+
+// ------------------------------------------------------- row-at-a-time path
+
+/// Evaluate `expr` for one row (the reference semantics both evaluators
+/// share).
 pub fn eval_row(expr: &Expr, rows: &RowSet, r: usize, udfs: &UdfRegistry) -> Result<Value> {
     match expr {
         Expr::Literal(v) => Ok(v.clone()),
@@ -412,7 +1424,7 @@ fn eval_func(
     r: usize,
     udfs: &UdfRegistry,
 ) -> Result<Value> {
-    // COALESCE is variadic and lazy.
+    // COALESCE is variadic and lazy on the row path.
     if name == "coalesce" {
         for a in args {
             let v = eval_row(a, rows, r, udfs)?;
@@ -426,6 +1438,58 @@ fn eval_func(
         .iter()
         .map(|a| eval_row(a, rows, r, udfs))
         .collect::<Result<_>>()?;
+    if is_builtin(name) {
+        return apply_builtin(name, &vals);
+    }
+    if udfs.has_scalar(name) {
+        // Scalar UDF (per-row invocation, §III.A).
+        return udfs.call_scalar(name, &vals);
+    }
+    if udfs.has_vectorized(name) {
+        return call_vectorized_once(name, &vals, udfs);
+    }
+    bail!("unknown function {name:?}")
+}
+
+/// Invoke a vectorized UDF on a single row (row-path parity for UDFs that
+/// only have a batch implementation).
+fn call_vectorized_once(name: &str, vals: &[Value], udfs: &UdfRegistry) -> Result<Value> {
+    let v = udfs
+        .vectorized(name)
+        .ok_or_else(|| anyhow!("no vectorized UDF named {name:?}"))?;
+    let fields = vals
+        .iter()
+        .enumerate()
+        .map(|(i, x)| {
+            Field::new(format!("arg{i}"), x.data_type().unwrap_or(DataType::Float64))
+        })
+        .collect();
+    let cols = vals
+        .iter()
+        .map(|x| {
+            Column::from_values(
+                x.data_type().unwrap_or(DataType::Float64),
+                std::slice::from_ref(x),
+            )
+        })
+        .collect::<Result<_>>()?;
+    let rs = RowSet::new(Schema::new(fields), cols)?;
+    let out = (v.body)(&rs)?;
+    Ok(out.first().map(|&f| Value::Float(f)).unwrap_or(Value::Null))
+}
+
+/// Apply a builtin scalar function to materialized argument values
+/// (shared by the row path and the columnar generic fallback; `coalesce`
+/// here is the eager variant — arguments are already evaluated).
+fn apply_builtin(name: &str, vals: &[Value]) -> Result<Value> {
+    if name == "coalesce" {
+        for v in vals {
+            if !v.is_null() {
+                return Ok(v.clone());
+            }
+        }
+        return Ok(Value::Null);
+    }
     let num1 = |vals: &[Value]| -> Result<Option<f64>> {
         if vals.len() != 1 {
             bail!("{name} expects 1 argument");
@@ -441,16 +1505,16 @@ fn eval_func(
     match name {
         "abs" => Ok(match &vals[..] {
             [Value::Int(i)] => Value::Int(i.abs()),
-            _ => num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.abs())),
+            _ => num1(vals)?.map_or(Value::Null, |x| Value::Float(x.abs())),
         }),
-        "sqrt" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.sqrt()))),
-        "exp" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.exp()))),
-        "ln" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.ln()))),
-        "log10" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.log10()))),
-        "floor" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.floor()))),
-        "ceil" => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.ceil()))),
+        "sqrt" => Ok(num1(vals)?.map_or(Value::Null, |x| Value::Float(x.sqrt()))),
+        "exp" => Ok(num1(vals)?.map_or(Value::Null, |x| Value::Float(x.exp()))),
+        "ln" => Ok(num1(vals)?.map_or(Value::Null, |x| Value::Float(x.ln()))),
+        "log10" => Ok(num1(vals)?.map_or(Value::Null, |x| Value::Float(x.log10()))),
+        "floor" => Ok(num1(vals)?.map_or(Value::Null, |x| Value::Float(x.floor()))),
+        "ceil" => Ok(num1(vals)?.map_or(Value::Null, |x| Value::Float(x.ceil()))),
         "round" => match vals.len() {
-            1 => Ok(num1(&vals)?.map_or(Value::Null, |x| Value::Float(x.round()))),
+            1 => Ok(num1(vals)?.map_or(Value::Null, |x| Value::Float(x.round()))),
             2 => {
                 if vals[0].is_null() || vals[1].is_null() {
                     return Ok(Value::Null);
@@ -473,9 +1537,9 @@ fn eval_func(
             let b = vals[1].as_f64().ok_or_else(|| anyhow!("power exp"))?;
             Ok(Value::Float(a.powf(b)))
         }
-        "upper" => str1(name, &vals, |s| Value::Str(s.to_uppercase())),
-        "lower" => str1(name, &vals, |s| Value::Str(s.to_lowercase())),
-        "length" => str1(name, &vals, |s| Value::Int(s.len() as i64)),
+        "upper" => str1(name, vals, |s| Value::Str(s.to_uppercase())),
+        "lower" => str1(name, vals, |s| Value::Str(s.to_lowercase())),
+        "length" => str1(name, vals, |s| Value::Int(s.len() as i64)),
         "substr" | "substring" => {
             if vals.len() != 3 {
                 bail!("substr expects (str, start, len)");
@@ -490,7 +1554,7 @@ fn eval_func(
         }
         "concat" => {
             let mut s = String::new();
-            for v in &vals {
+            for v in vals {
                 if v.is_null() {
                     return Ok(Value::Null);
                 }
@@ -498,14 +1562,7 @@ fn eval_func(
             }
             Ok(Value::Str(s))
         }
-        _ => {
-            // Scalar UDF (per-row invocation, §III.A).
-            if udfs.has_scalar(name) {
-                udfs.call_scalar(name, &vals)
-            } else {
-                bail!("unknown function {name:?}")
-            }
-        }
+        other => bail!("unknown function {other:?}"),
     }
 }
 
@@ -526,6 +1583,7 @@ fn str1(name: &str, vals: &[Value], f: impl Fn(&str) -> Value) -> Result<Value> 
 mod tests {
     use super::*;
     use crate::types::Field;
+    use std::sync::Arc;
 
     fn rows() -> RowSet {
         RowSet::new(
@@ -547,13 +1605,16 @@ mod tests {
         UdfRegistry::new()
     }
 
-    fn eval1(sql_expr: &str) -> Column {
+    fn parse_expr(sql_expr: &str) -> Expr {
         let q = crate::sql::parse_query(&format!("SELECT {sql_expr} FROM t")).unwrap();
-        let expr = match &q.select[0] {
+        match &q.select[0] {
             crate::sql::SelectItem::Expr { expr, .. } => expr.clone(),
             _ => panic!(),
-        };
-        eval_expr(&expr, &rows(), &udfs()).unwrap()
+        }
+    }
+
+    fn eval1(sql_expr: &str) -> Column {
+        eval_expr(&parse_expr(sql_expr), &rows(), &udfs()).unwrap()
     }
 
     #[test]
@@ -648,24 +1709,9 @@ mod tests {
 
     #[test]
     fn unknown_function_errors() {
-        let q = crate::sql::parse_query("SELECT nope(a) FROM t").unwrap();
-        let expr = match &q.select[0] {
-            crate::sql::SelectItem::Expr { expr, .. } => expr.clone(),
-            _ => panic!(),
-        };
+        let expr = parse_expr("nope(a)");
         assert!(eval_expr(&expr, &rows(), &udfs()).is_err());
-    }
-
-    #[test]
-    fn fast_path_matches_general_path() {
-        let c_fast = eval1("b * 2.0 + b / 4.0 - 1.0");
-        // Force general path by including an Int column (not fast-eligible).
-        let c_gen = eval1("b * 2.0 + b / 4.0 - 1.0 + a - a");
-        for i in 0..3 {
-            let f = c_fast.value(i).as_f64().unwrap();
-            let g = c_gen.value(i).as_f64().unwrap();
-            assert!((f - g).abs() < 1e-12, "{f} vs {g}");
-        }
+        assert!(eval_expr_rowwise(&expr, &rows(), &udfs()).is_err());
     }
 
     #[test]
@@ -686,5 +1732,182 @@ mod tests {
         assert!(resolve_column(&schema, "id").is_err()); // ambiguous
         assert_eq!(resolve_column(&schema, "name").unwrap(), 2);
         assert_eq!(resolve_column(&schema, "x.name").unwrap(), 2); // suffix
+    }
+
+    #[test]
+    fn constant_folding_collapses_literal_trees() {
+        let dual = dual_rowset();
+        let folded = fold_constants(&parse_expr("1 + 2 * 3"), &udfs(), &dual);
+        assert_eq!(folded, Expr::Literal(Value::Int(7)));
+        // Column-bearing subtrees stay unfolded.
+        let folded = fold_constants(&parse_expr("a + (2 * 3)"), &udfs(), &dual);
+        match folded {
+            Expr::Binary { right, .. } => assert_eq!(*right, Expr::Literal(Value::Int(6))),
+            other => panic!("{other:?}"),
+        }
+        // An erroring constant subtree is left for the kernels.
+        let folded = fold_constants(&parse_expr("upper(1)"), &udfs(), &dual);
+        assert!(matches!(folded, Expr::Func { .. }));
+        // A NULL-valued constant subtree is NOT folded: a bare NULL
+        // literal would lose the subtree's static type (1/0 is Float64).
+        let folded = fold_constants(&parse_expr("1 / 0"), &udfs(), &dual);
+        assert!(matches!(folded, Expr::Binary { .. }));
+        let c = eval_expr(&parse_expr("1 / 0"), &rows(), &udfs()).unwrap();
+        assert_eq!(c.data_type(), DataType::Float64);
+        assert_eq!(c.value(0), Value::Null);
+        let c = eval_expr(&parse_expr("upper(NULL)"), &rows(), &udfs()).unwrap();
+        assert_eq!(c.data_type(), DataType::Utf8);
+    }
+
+    /// The columnar kernels and the row path must agree on whole columns,
+    /// including NULL payload normalization and derived types.
+    #[test]
+    fn vectorized_matches_rowwise() {
+        let rs = RowSet::new(
+            Schema::new(vec![
+                Field::new("a", DataType::Int64),
+                Field::new("b", DataType::Float64),
+                Field::new("s", DataType::Utf8),
+                Field::new("t", DataType::Bool),
+            ]),
+            vec![
+                Column::Int64 {
+                    data: vec![1, 0, 3, -4, 5],
+                    valid: Some(vec![true, false, true, true, true]),
+                },
+                Column::Float64 {
+                    data: vec![1.5, -0.0, 0.0, 9.25, 0.0],
+                    valid: Some(vec![true, true, true, true, false]),
+                },
+                Column::Utf8 {
+                    data: vec!["x".into(), "".into(), "Hello".into(), "z".into(), "".into()],
+                    valid: Some(vec![true, true, true, true, false]),
+                },
+                Column::Bool {
+                    data: vec![true, false, true, false, false],
+                    valid: Some(vec![true, true, false, true, true]),
+                },
+            ],
+        )
+        .unwrap();
+        let reg = udfs();
+        for e in [
+            "a + 1",
+            "a - b",
+            "a * a + b / 2.0",
+            "b / a",
+            "a % 2",
+            "-a",
+            "-b",
+            "NOT t",
+            "a = 3",
+            "a <> 3",
+            "b >= 0.0",
+            "a < b",
+            "s = 'x'",
+            "s || s",
+            "a || '#' || b",
+            "t AND a > 1",
+            "t OR b > 0.0",
+            "a IS NULL",
+            "b IS NOT NULL",
+            "a IN (1, 5, NULL)",
+            "s NOT IN ('x', 'z')",
+            "a BETWEEN 0 AND 4",
+            "b NOT BETWEEN -1.0 AND 1.0",
+            "CASE WHEN a > 2 THEN b ELSE -b END",
+            "CASE WHEN a > 2 THEN 'big' WHEN a > 0 THEN 'small' END",
+            "CASE WHEN t THEN 1 ELSE 2.5 END",
+            "abs(a)",
+            "abs(b)",
+            "sqrt(abs(b))",
+            "floor(b)",
+            "round(b)",
+            "upper(s)",
+            "length(s)",
+            "coalesce(a, 0)",
+            "coalesce(NULL, b, 1.0)",
+            "substr(s, 1, 2)",
+            "concat(s, '-', a)",
+        ] {
+            let expr = parse_expr(e);
+            let vec = eval_expr(&expr, &rs, &reg)
+                .unwrap_or_else(|err| panic!("{e} (vectorized): {err}"));
+            let row = eval_expr_rowwise(&expr, &rs, &reg)
+                .unwrap_or_else(|err| panic!("{e} (rowwise): {err}"));
+            assert_eq!(vec, row, "divergence for {e}");
+        }
+    }
+
+    #[test]
+    fn batched_scalar_udf_matches_rowwise() {
+        let mut reg = UdfRegistry::new();
+        reg.register_scalar(
+            "plus_ten",
+            DataType::Float64,
+            Arc::new(|args| match &args[0] {
+                Value::Null => Ok(Value::Null),
+                v => Ok(Value::Float(v.as_f64().unwrap_or(0.0) + 10.0)),
+            }),
+        );
+        let rs = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Float64)]),
+            vec![Column::Float64 {
+                data: vec![1.0, 0.0, 3.5],
+                valid: Some(vec![true, false, true]),
+            }],
+        )
+        .unwrap();
+        let expr = parse_expr("plus_ten(x) + 1.0");
+        let vec = eval_expr(&expr, &rs, &reg).unwrap();
+        let row = eval_expr_rowwise(&expr, &rs, &reg).unwrap();
+        assert_eq!(vec, row);
+        assert_eq!(vec.value(0), Value::Float(12.0));
+        assert_eq!(vec.value(1), Value::Null);
+    }
+
+    #[test]
+    fn vectorized_udf_fast_path_at_expression_level() {
+        let mut reg = UdfRegistry::new();
+        reg.register_vectorized(
+            "vmul2",
+            DataType::Float64,
+            Arc::new(|rows| {
+                Ok(rows
+                    .column(0)
+                    .f64_data()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v * 2.0)
+                    .collect())
+            }),
+        );
+        let rs = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Float64)]),
+            vec![Column::from_f64(vec![1.0, 2.0, 3.0])],
+        )
+        .unwrap();
+        let expr = parse_expr("vmul2(x)");
+        let vec = eval_expr(&expr, &rs, &reg).unwrap();
+        assert_eq!(vec.value(2), Value::Float(6.0));
+        // The row path reaches the same UDF through single-row batches.
+        let row = eval_expr_rowwise(&expr, &rs, &reg).unwrap();
+        assert_eq!(vec, row);
+    }
+
+    #[test]
+    fn junk_payload_under_null_is_normalized() {
+        // Hand-built columns may carry arbitrary payloads under NULL
+        // slots; the evaluator must normalize them to defaults.
+        let rs = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Int64)]),
+            vec![Column::Int64 { data: vec![7, 99], valid: Some(vec![true, false]) }],
+        )
+        .unwrap();
+        let c = eval_expr(&parse_expr("x"), &rs, &udfs()).unwrap();
+        assert_eq!(
+            c,
+            Column::Int64 { data: vec![7, 0], valid: Some(vec![true, false]) }
+        );
     }
 }

@@ -7,6 +7,42 @@
 //! key comparison is a plain `&[u8]` slice compare — no `Value` or
 //! `Vec<KeyValue>` materialization, no per-row clones.
 //!
+//! ## Byte layout
+//!
+//! One key row occupies `n_key_cols × 9` contiguous bytes (`stride`); key
+//! row `r` lives at `buf[r * stride .. (r + 1) * stride]`. Each key
+//! column contributes one fixed-width 9-byte cell:
+//!
+//! ```text
+//! | tag: u8 | payload: 8 bytes, little-endian |
+//!
+//! tag 0 NULL   payload zeroed
+//! tag 1 INT    i64 value
+//! tag 2 FLOAT  f64 bit pattern (after -0.0 → 0.0 normalization)
+//! tag 3 STR    u64 intern id from the batch's KeyDict
+//! tag 4 BOOL   0 or 1 as u64
+//! ```
+//!
+//! Fixed width is what makes equality a single `&[u8]` memcmp and lets
+//! the hash be computed in one pass per row.
+//!
+//! ## Hashing and interning invariants
+//!
+//! - **Hash = FNV-1a over the encoded bytes + murmur3 finalizer** (the
+//!   private `hash_bytes` helper): equal encoded keys always have equal
+//!   hashes, and the finalizer mixes the low bits used for power-of-two
+//!   bucket masking.
+//! - **Intern ids are only comparable within one `KeyDict`.** The build
+//!   and probe sides of a join MUST share a dict so equal strings get
+//!   equal ids; two independently-encoded batches are not comparable.
+//!   Ids are dense (`0..dict.len()`), assigned in first-sight order.
+//! - **Tags separate type domains:** `Int(5)` (`tag 1`) never collides
+//!   with the string with intern id 5 (`tag 3`), and in
+//!   [`KeyMode::Group`] `Int(5)` stays distinct from `Float(5.0)`.
+//! - **NULL cells are all-zero** (`tag 0` + zero payload), so NULL keys
+//!   compare equal (GROUP BY groups them together) and the per-row
+//!   `has_null` flag lets joins implement "NULL never matches".
+//!
 //! On top of the codec sit two open-addressing tables (power-of-two
 //! capacity, linear probing, ≤ 0.5 load factor, so no resizing):
 //! [`assign_group_ids`] maps every row to a dense `u32` group id in
@@ -55,6 +91,7 @@ pub struct KeyDict {
 }
 
 impl KeyDict {
+    /// Empty interner.
     pub fn new() -> Self {
         Self { ids: HashMap::new() }
     }
@@ -69,10 +106,12 @@ impl KeyDict {
         id
     }
 
+    /// Number of distinct strings interned so far.
     pub fn len(&self) -> usize {
         self.ids.len()
     }
 
+    /// True when nothing has been interned.
     pub fn is_empty(&self) -> bool {
         self.ids.is_empty()
     }
@@ -161,11 +200,13 @@ impl EncodedKeys {
         EncodedKeys { stride, len: n, buf, hashes, nulls }
     }
 
+    /// Number of encoded key rows.
     #[inline]
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when the batch has no rows.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -176,6 +217,7 @@ impl EncodedKeys {
         &self.buf[row * self.stride..(row + 1) * self.stride]
     }
 
+    /// The precomputed hash of one key row.
     #[inline]
     pub fn hash(&self, row: usize) -> u64 {
         self.hashes[row]
@@ -207,11 +249,14 @@ fn hash_bytes(bytes: &[u8]) -> u64 {
 /// the first row seen for group `g` (so group order is first-seen order).
 #[derive(Debug)]
 pub struct GroupIds {
+    /// `ids[r]` is the dense group id of input row `r`.
     pub ids: Vec<u32>,
+    /// `rep_rows[g]` is the first input row seen for group `g`.
     pub rep_rows: Vec<usize>,
 }
 
 impl GroupIds {
+    /// Number of distinct groups.
     pub fn n_groups(&self) -> usize {
         self.rep_rows.len()
     }
@@ -274,6 +319,7 @@ struct JoinEntry {
 }
 
 impl JoinTable {
+    /// Build the multimap over the build side's encoded keys.
     pub fn build(keys: EncodedKeys) -> JoinTable {
         let n = keys.len();
         let cap = (n.max(1) * 2).next_power_of_two();

@@ -7,14 +7,21 @@ use crate::types::Value;
 /// by normalizing), NULLs group together (SQL GROUP BY semantics).
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum KeyValue {
+    /// SQL NULL (all NULLs are one key).
     Null,
+    /// Integer key.
     Int(i64),
+    /// Float key by bit pattern (after `-0.0` normalization).
     Float(u64),
+    /// String key.
     Str(String),
+    /// Boolean key.
     Bool(bool),
 }
 
 impl KeyValue {
+    /// GROUP BY key projection: NULLs group together, `-0.0` → `0.0`,
+    /// Int and Float stay distinct.
     pub fn from_value(v: &Value) -> KeyValue {
         match v {
             Value::Null => KeyValue::Null,

@@ -19,6 +19,9 @@ pub use exec::{
     execute_plan, execute_plan_with_stats, run_sql, run_sql_with_stats, ExecContext, OpStats,
     QueryStats,
 };
-pub use expr::{eval_expr, eval_predicate, eval_row, resolve_column};
+pub use expr::{
+    eval_expr, eval_expr_rowwise, eval_predicate, eval_predicate_rowwise, eval_row,
+    resolve_column,
+};
 pub use key::KeyValue;
 pub use plan::{output_name, plan_query, AggCall, AggFunc, Plan};

@@ -8,17 +8,25 @@ use crate::udf::UdfRegistry;
 /// Built-in aggregate functions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AggFunc {
+    /// `COUNT(expr)` — non-NULL count.
     Count,
+    /// `COUNT(*)` — row count.
     CountStar,
+    /// `SUM(expr)`.
     Sum,
+    /// `AVG(expr)`.
     Avg,
+    /// `MIN(expr)`.
     Min,
+    /// `MAX(expr)`.
     Max,
     /// A registered UDAF (name kept in `AggCall::name`).
     Udaf,
 }
 
 impl AggFunc {
+    /// Classify a function name as an aggregate (builtin or registered
+    /// UDAF); `None` for non-aggregates.
     pub fn from_name(name: &str, udfs: &UdfRegistry) -> Option<AggFunc> {
         match name {
             "count" => Some(AggFunc::Count),
@@ -35,7 +43,9 @@ impl AggFunc {
 /// One aggregate invocation, e.g. `SUM(price * qty)`.
 #[derive(Debug, Clone)]
 pub struct AggCall {
+    /// Which aggregate to run.
     pub func: AggFunc,
+    /// The function name as written (identifies the UDAF for `Udaf`).
     pub name: String,
     /// Argument expressions (empty for COUNT(*)).
     pub args: Vec<Expr>,
@@ -46,44 +56,70 @@ pub struct AggCall {
 /// Logical/physical plan (this engine executes the logical tree directly).
 #[derive(Debug, Clone)]
 pub enum Plan {
+    /// Read a named table from the catalog.
     Scan {
+        /// Catalog table name.
         table: String,
+        /// FROM-clause alias, if any.
         alias: Option<String>,
     },
+    /// Invoke a table function (UDTF) with constant arguments.
     TableFunc {
+        /// UDTF name (`__dual` is the hidden one-row table).
         name: String,
+        /// Constant argument expressions.
         args: Vec<Expr>,
+        /// FROM-clause alias, if any.
         alias: Option<String>,
     },
+    /// Keep rows where the predicate is true (WHERE / HAVING).
     Filter {
+        /// Input operator.
         input: Box<Plan>,
+        /// Boolean predicate (NULL ⇒ drop).
         predicate: Expr,
     },
+    /// Compute output expressions (SELECT list).
     Project {
+        /// Input operator.
         input: Box<Plan>,
+        /// (expression, output name) pairs.
         exprs: Vec<(Expr, String)>,
     },
+    /// Hash aggregation.
     Aggregate {
+        /// Input operator.
         input: Box<Plan>,
         /// Group-key expressions with output names.
         group: Vec<(Expr, String)>,
+        /// Aggregate calls.
         aggs: Vec<AggCall>,
     },
+    /// Hash join (nested-loop when no equi keys).
     Join {
+        /// Probe-side input.
         left: Box<Plan>,
+        /// Build-side input.
         right: Box<Plan>,
+        /// Inner or left outer.
         kind: JoinKind,
         /// Equi-key pairs (left expr, right expr).
         equi: Vec<(Expr, Expr)>,
         /// Residual predicate over the combined schema.
         residual: Option<Expr>,
     },
+    /// Sort by keys (top-k when directly under a Limit).
     Sort {
+        /// Input operator.
         input: Box<Plan>,
+        /// ORDER BY keys.
         keys: Vec<OrderKey>,
     },
+    /// Keep the first `n` rows.
     Limit {
+        /// Input operator.
         input: Box<Plan>,
+        /// Row cap.
         n: usize,
     },
 }

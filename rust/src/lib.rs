@@ -19,11 +19,48 @@
 //! Python never runs on the request path: `rust/src/runtime` loads the
 //! AOT artifacts via the PJRT C API and serves them from the engine's
 //! vectorized-UDF operator.
+//!
+//! ## Execution path (end-to-end columnar)
+//!
+//! Data stays columnar from scan to UDF redistribution: expressions run
+//! as typed kernels over null-bitmapped column slices
+//! ([`engine::eval_expr`]), aggregate/join/sort run on the fixed-stride
+//! key codec (`engine::hash`), and the exchange operator ships batches as
+//! a compact column-major wire buffer ([`types::WireBatch`]) that
+//! receivers decode with typed appends. Row-at-a-time reference paths
+//! survive behind `ExecContext::vectorized = false` for differential
+//! tests and the `expr_kernels` / `groupby_kernels` ablations.
+//!
+//! See `README.md` for build/run instructions and `docs/ARCHITECTURE.md`
+//! for the paper-section → module map.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use std::sync::Arc;
+//! use snowpark::engine::{run_sql, Catalog, ExecContext};
+//! use snowpark::types::{Column, DataType, Field, RowSet, Schema};
+//! use snowpark::udf::UdfRegistry;
+//!
+//! let catalog = Arc::new(Catalog::new());
+//! catalog.register(
+//!     "t",
+//!     RowSet::new(
+//!         Schema::new(vec![Field::new("x", DataType::Int64)]),
+//!         vec![Column::from_i64(vec![1, 2, 3])],
+//!     )
+//!     .unwrap(),
+//! );
+//! let ctx = ExecContext::new(catalog, Arc::new(UdfRegistry::new()));
+//! let out = run_sql("SELECT SUM(x) AS s FROM t WHERE x > 1", &ctx).unwrap();
+//! assert_eq!(out.num_rows(), 1);
+//! ```
 
 pub mod bench;
 pub mod cli;
 pub mod control;
 pub mod dataframe;
+#[warn(missing_docs)]
 pub mod engine;
 pub mod packages;
 pub mod sandbox;
@@ -33,8 +70,9 @@ pub mod sim;
 pub mod warehouse;
 pub mod runtime;
 pub mod sql;
-pub mod udf;
+#[warn(missing_docs)]
 pub mod types;
+pub mod udf;
 pub mod util;
 
 pub use runtime::XlaRuntime;

@@ -1,7 +1,10 @@
-//! Logical types: scalar values, data types, schemas.
+//! Logical types: scalar values, data types, schemas, columnar rowsets,
+//! and the column-major wire codec used to ship batches between nodes.
 
 mod rowset;
 mod value;
+mod wire;
 
 pub use rowset::{Column, RowSet, RowSetBuilder};
 pub use value::{DataType, Field, Schema, Value};
+pub use wire::WireBatch;

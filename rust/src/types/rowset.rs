@@ -13,16 +13,42 @@ use anyhow::{anyhow, bail, Result};
 
 use super::value::{DataType, Schema, Value};
 
-/// A typed column with validity. `valid[i] == false` means NULL.
+/// A typed column with validity. `valid[i] == false` means NULL (`None`
+/// means every row is valid).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Column {
-    Int64 { data: Vec<i64>, valid: Option<Vec<bool>> },
-    Float64 { data: Vec<f64>, valid: Option<Vec<bool>> },
-    Utf8 { data: Vec<String>, valid: Option<Vec<bool>> },
-    Bool { data: Vec<bool>, valid: Option<Vec<bool>> },
+    /// 64-bit integer column.
+    Int64 {
+        /// Cell payloads (NULL slots hold `0`).
+        data: Vec<i64>,
+        /// Validity mask; `None` = all rows valid.
+        valid: Option<Vec<bool>>,
+    },
+    /// 64-bit float column.
+    Float64 {
+        /// Cell payloads (NULL slots hold `0.0`).
+        data: Vec<f64>,
+        /// Validity mask; `None` = all rows valid.
+        valid: Option<Vec<bool>>,
+    },
+    /// UTF-8 string column.
+    Utf8 {
+        /// Cell payloads (NULL slots hold `""`).
+        data: Vec<String>,
+        /// Validity mask; `None` = all rows valid.
+        valid: Option<Vec<bool>>,
+    },
+    /// Boolean column.
+    Bool {
+        /// Cell payloads (NULL slots hold `false`).
+        data: Vec<bool>,
+        /// Validity mask; `None` = all rows valid.
+        valid: Option<Vec<bool>>,
+    },
 }
 
 impl Column {
+    /// The column's logical type.
     pub fn data_type(&self) -> DataType {
         match self {
             Column::Int64 { .. } => DataType::Int64,
@@ -32,6 +58,7 @@ impl Column {
         }
     }
 
+    /// Number of rows.
     pub fn len(&self) -> usize {
         match self {
             Column::Int64 { data, .. } => data.len(),
@@ -41,26 +68,32 @@ impl Column {
         }
     }
 
+    /// True when the column has no rows.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// All-valid Int64 column from raw data.
     pub fn from_i64(data: Vec<i64>) -> Self {
         Column::Int64 { data, valid: None }
     }
 
+    /// All-valid Float64 column from raw data.
     pub fn from_f64(data: Vec<f64>) -> Self {
         Column::Float64 { data, valid: None }
     }
 
+    /// All-valid Utf8 column from raw data.
     pub fn from_strings(data: Vec<String>) -> Self {
         Column::Utf8 { data, valid: None }
     }
 
+    /// All-valid Bool column from raw data.
     pub fn from_bools(data: Vec<bool>) -> Self {
         Column::Bool { data, valid: None }
     }
 
+    /// Zero-row column of the given type.
     pub fn empty(dt: DataType) -> Self {
         match dt {
             DataType::Int64 => Column::Int64 { data: vec![], valid: None },
@@ -70,6 +103,7 @@ impl Column {
         }
     }
 
+    /// Is row `idx` non-NULL?
     #[inline]
     pub fn is_valid(&self, idx: usize) -> bool {
         let valid = match self {
@@ -94,7 +128,8 @@ impl Column {
         }
     }
 
-    /// Fast typed accessors for vectorized paths (no Value allocation).
+    /// Fast typed accessor for vectorized paths (no Value allocation):
+    /// the raw f64 payloads, if this is a Float64 column.
     pub fn f64_data(&self) -> Option<&[f64]> {
         match self {
             Column::Float64 { data, .. } => Some(data),
@@ -102,6 +137,7 @@ impl Column {
         }
     }
 
+    /// Raw i64 payloads, if this is an Int64 column.
     pub fn i64_data(&self) -> Option<&[i64]> {
         match self {
             Column::Int64 { data, .. } => Some(data),
@@ -109,6 +145,7 @@ impl Column {
         }
     }
 
+    /// Raw string payloads, if this is a Utf8 column.
     pub fn str_data(&self) -> Option<&[String]> {
         match self {
             Column::Utf8 { data, .. } => Some(data),
@@ -116,6 +153,7 @@ impl Column {
         }
     }
 
+    /// Raw bool payloads, if this is a Bool column.
     pub fn bool_data(&self) -> Option<&[bool]> {
         match self {
             Column::Bool { data, .. } => Some(data),
@@ -375,11 +413,15 @@ impl Column {
 /// A batch of rows in columnar layout.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RowSet {
+    /// Field names and types, one per column.
     pub schema: Schema,
+    /// The typed columns, all the same length.
     pub columns: Vec<Column>,
 }
 
 impl RowSet {
+    /// Validated constructor: schema arity, column types, and row counts
+    /// must line up.
     pub fn new(schema: Schema, columns: Vec<Column>) -> Result<Self> {
         if schema.len() != columns.len() {
             bail!(
@@ -409,6 +451,7 @@ impl RowSet {
         Ok(Self { schema, columns })
     }
 
+    /// Zero-row rowset with the given schema.
     pub fn empty(schema: Schema) -> Self {
         let columns = schema
             .fields
@@ -418,18 +461,22 @@ impl RowSet {
         Self { schema, columns }
     }
 
+    /// Number of rows.
     pub fn num_rows(&self) -> usize {
         self.columns.first().map_or(0, Column::len)
     }
 
+    /// Number of columns.
     pub fn num_columns(&self) -> usize {
         self.columns.len()
     }
 
+    /// Column by position.
     pub fn column(&self, idx: usize) -> &Column {
         &self.columns[idx]
     }
 
+    /// Column by (case-insensitive) field name.
     pub fn column_by_name(&self, name: &str) -> Option<&Column> {
         self.schema.index_of(name).map(|i| &self.columns[i])
     }
@@ -439,6 +486,7 @@ impl RowSet {
         self.columns.iter().map(|c| c.value(idx)).collect()
     }
 
+    /// Select the rows where `mask` is true.
     pub fn filter(&self, mask: &[bool]) -> RowSet {
         RowSet {
             schema: self.schema.clone(),
@@ -446,6 +494,7 @@ impl RowSet {
         }
     }
 
+    /// Gather rows by index.
     pub fn take(&self, indices: &[usize]) -> RowSet {
         RowSet {
             schema: self.schema.clone(),
@@ -467,6 +516,7 @@ impl RowSet {
         }
     }
 
+    /// Contiguous row range `[offset, offset + len)`.
     pub fn slice(&self, offset: usize, len: usize) -> RowSet {
         RowSet {
             schema: self.schema.clone(),
@@ -474,6 +524,7 @@ impl RowSet {
         }
     }
 
+    /// Append all rows of `other` (schemas must match exactly).
     pub fn append(&mut self, other: &RowSet) -> Result<()> {
         if self.schema != other.schema {
             bail!("append schema mismatch");
@@ -498,6 +549,7 @@ impl RowSet {
         out
     }
 
+    /// Approximate in-memory footprint in bytes.
     pub fn byte_size(&self) -> u64 {
         self.columns.iter().map(Column::byte_size).sum()
     }
@@ -546,18 +598,160 @@ impl fmt::Display for RowSet {
     }
 }
 
-/// Row-at-a-time builder (UDTF output, test fixtures, CSV ingest).
+/// A typed, growing column with validity — the unit [`RowSetBuilder`]
+/// appends into.
+#[derive(Debug)]
+enum ColumnBuilder {
+    Int64 { data: Vec<i64>, valid: Vec<bool>, any_null: bool },
+    Float64 { data: Vec<f64>, valid: Vec<bool>, any_null: bool },
+    Utf8 { data: Vec<String>, valid: Vec<bool>, any_null: bool },
+    Bool { data: Vec<bool>, valid: Vec<bool>, any_null: bool },
+}
+
+impl ColumnBuilder {
+    fn new(dt: DataType) -> ColumnBuilder {
+        match dt {
+            DataType::Int64 => {
+                ColumnBuilder::Int64 { data: Vec::new(), valid: Vec::new(), any_null: false }
+            }
+            DataType::Float64 => {
+                ColumnBuilder::Float64 { data: Vec::new(), valid: Vec::new(), any_null: false }
+            }
+            DataType::Utf8 => {
+                ColumnBuilder::Utf8 { data: Vec::new(), valid: Vec::new(), any_null: false }
+            }
+            DataType::Bool => {
+                ColumnBuilder::Bool { data: Vec::new(), valid: Vec::new(), any_null: false }
+            }
+        }
+    }
+
+    /// Append one cell. Conversions mirror [`Column::from_values`]; a
+    /// value that cannot convert appends NULL (so lengths stay aligned)
+    /// and returns the conversion error message.
+    fn push(&mut self, v: Value) -> std::result::Result<(), String> {
+        match self {
+            ColumnBuilder::Int64 { data, valid, any_null } => match v {
+                Value::Null => {
+                    data.push(0);
+                    valid.push(false);
+                    *any_null = true;
+                }
+                other => match other.as_i64() {
+                    Some(x) => {
+                        data.push(x);
+                        valid.push(true);
+                    }
+                    None => {
+                        data.push(0);
+                        valid.push(false);
+                        *any_null = true;
+                        return Err(format!("expected INT, got {other}"));
+                    }
+                },
+            },
+            ColumnBuilder::Float64 { data, valid, any_null } => match v {
+                Value::Null => {
+                    data.push(0.0);
+                    valid.push(false);
+                    *any_null = true;
+                }
+                other => match other.as_f64() {
+                    Some(x) => {
+                        data.push(x);
+                        valid.push(true);
+                    }
+                    None => {
+                        data.push(0.0);
+                        valid.push(false);
+                        *any_null = true;
+                        return Err(format!("expected DOUBLE, got {other}"));
+                    }
+                },
+            },
+            ColumnBuilder::Utf8 { data, valid, any_null } => match v {
+                Value::Null => {
+                    data.push(String::new());
+                    valid.push(false);
+                    *any_null = true;
+                }
+                Value::Str(s) => {
+                    data.push(s);
+                    valid.push(true);
+                }
+                other => {
+                    data.push(other.to_string());
+                    valid.push(true);
+                }
+            },
+            ColumnBuilder::Bool { data, valid, any_null } => match v {
+                Value::Null => {
+                    data.push(false);
+                    valid.push(false);
+                    *any_null = true;
+                }
+                other => match other.as_bool() {
+                    Some(x) => {
+                        data.push(x);
+                        valid.push(true);
+                    }
+                    None => {
+                        data.push(false);
+                        valid.push(false);
+                        *any_null = true;
+                        return Err(format!("expected BOOLEAN, got {other}"));
+                    }
+                },
+            },
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> Column {
+        match self {
+            ColumnBuilder::Int64 { data, valid, any_null } => {
+                Column::Int64 { data, valid: any_null.then_some(valid) }
+            }
+            ColumnBuilder::Float64 { data, valid, any_null } => {
+                Column::Float64 { data, valid: any_null.then_some(valid) }
+            }
+            ColumnBuilder::Utf8 { data, valid, any_null } => {
+                Column::Utf8 { data, valid: any_null.then_some(valid) }
+            }
+            ColumnBuilder::Bool { data, valid, any_null } => {
+                Column::Bool { data, valid: any_null.then_some(valid) }
+            }
+        }
+    }
+}
+
+/// Row-at-a-time builder (UDTF output, test fixtures, CSV ingest) that
+/// appends every cell straight into typed column buffers — no
+/// `Vec<Vec<Value>>` buffering and no second per-cell conversion pass at
+/// [`RowSetBuilder::finish`]. Type errors are deferred to `finish`
+/// (historical behavior): the offending slot becomes NULL and the first
+/// conversion error is reported when the rowset is materialized.
 #[derive(Debug)]
 pub struct RowSetBuilder {
     schema: Schema,
-    rows: Vec<Vec<Value>>,
+    builders: Vec<ColumnBuilder>,
+    len: usize,
+    error: Option<String>,
 }
 
 impl RowSetBuilder {
+    /// Empty builder for the given schema.
     pub fn new(schema: Schema) -> Self {
-        Self { schema, rows: Vec::new() }
+        let builders = schema
+            .fields
+            .iter()
+            .map(|f| ColumnBuilder::new(f.data_type))
+            .collect();
+        Self { schema, builders, len: 0, error: None }
     }
 
+    /// Append one row of scalars (arity-checked immediately; cell type
+    /// errors are deferred to [`RowSetBuilder::finish`]).
     pub fn push(&mut self, row: Vec<Value>) -> Result<()> {
         if row.len() != self.schema.len() {
             bail!(
@@ -566,25 +760,35 @@ impl RowSetBuilder {
                 self.schema.len()
             );
         }
-        self.rows.push(row);
+        for (b, v) in self.builders.iter_mut().zip(row) {
+            if let Err(e) = b.push(v) {
+                if self.error.is_none() {
+                    self.error = Some(e);
+                }
+            }
+        }
+        self.len += 1;
         Ok(())
     }
 
+    /// Rows appended so far.
     pub fn len(&self) -> usize {
-        self.rows.len()
+        self.len
     }
 
+    /// True when no row has been appended.
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.len == 0
     }
 
+    /// Materialize the rowset (no per-cell work left: the typed buffers
+    /// move straight into the columns). Reports the first deferred cell
+    /// conversion error, if any.
     pub fn finish(self) -> Result<RowSet> {
-        let n_cols = self.schema.len();
-        let mut columns = Vec::with_capacity(n_cols);
-        for c in 0..n_cols {
-            let values: Vec<Value> = self.rows.iter().map(|r| r[c].clone()).collect();
-            columns.push(Column::from_values(self.schema.field(c).data_type, &values)?);
+        if let Some(e) = self.error {
+            bail!("{e}");
         }
+        let columns = self.builders.into_iter().map(ColumnBuilder::finish).collect();
         RowSet::new(self.schema, columns)
     }
 }

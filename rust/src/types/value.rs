@@ -6,9 +6,13 @@ use std::fmt;
 /// Logical column type.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DataType {
+    /// 64-bit signed integer (SQL `BIGINT`).
     Int64,
+    /// 64-bit float (SQL `DOUBLE`).
     Float64,
+    /// UTF-8 string (SQL `VARCHAR`).
     Utf8,
+    /// Boolean (SQL `BOOLEAN`).
     Bool,
 }
 
@@ -28,14 +32,20 @@ impl fmt::Display for DataType {
 /// "per row" (§III.A) and the expression evaluator folds over.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// SQL NULL (no type).
     Null,
+    /// Integer scalar.
     Int(i64),
+    /// Float scalar.
     Float(f64),
+    /// String scalar.
     Str(String),
+    /// Boolean scalar.
     Bool(bool),
 }
 
 impl Value {
+    /// The value's type; `None` for NULL.
     pub fn data_type(&self) -> Option<DataType> {
         match self {
             Value::Null => None,
@@ -46,6 +56,7 @@ impl Value {
         }
     }
 
+    /// Is this the SQL NULL value?
     pub fn is_null(&self) -> bool {
         matches!(self, Value::Null)
     }
@@ -59,6 +70,7 @@ impl Value {
         }
     }
 
+    /// Integer view (floats truncate) — SQL cast-to-int semantics.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -67,6 +79,7 @@ impl Value {
         }
     }
 
+    /// Borrowed string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -74,6 +87,7 @@ impl Value {
         }
     }
 
+    /// Boolean payload, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -118,11 +132,14 @@ impl fmt::Display for Value {
 /// A named, typed column in a schema.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Field {
+    /// Column name (SQL identifiers fold to lowercase at parse time).
     pub name: String,
+    /// Column type.
     pub data_type: DataType,
 }
 
 impl Field {
+    /// Construct a field.
     pub fn new(name: impl Into<String>, data_type: DataType) -> Self {
         Self { name: name.into(), data_type }
     }
@@ -132,36 +149,44 @@ impl Field {
 /// identifiers fold to lowercase at parse time).
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct Schema {
+    /// The ordered fields.
     pub fields: Vec<Field>,
 }
 
 impl Schema {
+    /// Schema from an ordered field list.
     pub fn new(fields: Vec<Field>) -> Self {
         Self { fields }
     }
 
+    /// Schema with no fields.
     pub fn empty() -> Self {
         Self::default()
     }
 
+    /// Number of fields.
     pub fn len(&self) -> usize {
         self.fields.len()
     }
 
+    /// True when the schema has no fields.
     pub fn is_empty(&self) -> bool {
         self.fields.is_empty()
     }
 
+    /// Position of the field named `name` (case-insensitive).
     pub fn index_of(&self, name: &str) -> Option<usize> {
         self.fields
             .iter()
             .position(|f| f.name.eq_ignore_ascii_case(name))
     }
 
+    /// Field by position.
     pub fn field(&self, idx: usize) -> &Field {
         &self.fields[idx]
     }
 
+    /// All field names, in order.
     pub fn names(&self) -> Vec<&str> {
         self.fields.iter().map(|f| f.name.as_str()).collect()
     }

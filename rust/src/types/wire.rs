@@ -1,0 +1,334 @@
+//! Compact column-major wire format for shipping rowset batches to
+//! interpreter processes (§IV.C) — the gRPC payload stand-in.
+//!
+//! A [`WireBatch`] is encoded **once per batch** directly from a
+//! contiguous row range of a source [`RowSet`] (no intermediate sliced
+//! rowset, no per-row `RowSet::row` → `Vec<Value>` round trip), and the
+//! receiver decodes it back with typed bulk appends into column buffers.
+//!
+//! ## Byte layout (all integers little-endian)
+//!
+//! ```text
+//! u32 n_cols
+//! u32 n_rows
+//! per column:
+//!   u16  name_len, name bytes (UTF-8 field name)
+//!   u8   dtype tag        (0=Int64, 1=Float64, 2=Utf8, 3=Bool)
+//!   u8   has_validity     (1 ⇒ a packed validity bitmap follows)
+//!   [ceil(n_rows/8) bytes]  validity bitmap, bit i = row i is non-NULL
+//!   payload:
+//!     Int64/Float64 : n_rows × 8 bytes raw
+//!     Bool          : ceil(n_rows/8) bytes, packed bits
+//!     Utf8          : n_rows × u32 byte lengths, then the concatenated
+//!                     string bytes
+//! ```
+//!
+//! NULL slots ship their (default) payloads so a decode round-trips to a
+//! rowset equal to `rs.slice(offset, len)` under `PartialEq`.
+
+use anyhow::{bail, Result};
+
+use super::rowset::{Column, RowSet};
+use super::value::{DataType, Field, Schema};
+
+/// One encoded column-major batch (self-describing: schema travels with
+/// the payload).
+///
+/// ```
+/// use snowpark::types::{Column, DataType, Field, RowSet, Schema, WireBatch};
+/// let rs = RowSet::new(
+///     Schema::new(vec![Field::new("x", DataType::Int64)]),
+///     vec![Column::from_i64(vec![1, 2, 3])],
+/// )
+/// .unwrap();
+/// let wire = WireBatch::encode(&rs);
+/// assert_eq!(wire.decode().unwrap(), rs);
+/// ```
+#[derive(Debug, Clone)]
+pub struct WireBatch {
+    bytes: Vec<u8>,
+    rows: usize,
+}
+
+const TAG_I64: u8 = 0;
+const TAG_F64: u8 = 1;
+const TAG_UTF8: u8 = 2;
+const TAG_BOOL: u8 = 3;
+
+fn pack_bits<F: Fn(usize) -> bool>(n: usize, bit: F, out: &mut Vec<u8>) {
+    let mut byte = 0u8;
+    for i in 0..n {
+        if bit(i) {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if n % 8 != 0 {
+        out.push(byte);
+    }
+}
+
+fn unpack_bits(bytes: &[u8], n: usize) -> Vec<bool> {
+    (0..n).map(|i| bytes[i / 8] & (1 << (i % 8)) != 0).collect()
+}
+
+/// Bounds-checked reader over the wire bytes.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated wire batch: need {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+impl WireBatch {
+    /// Encode a whole rowset.
+    pub fn encode(rs: &RowSet) -> WireBatch {
+        Self::encode_range(rs, 0, rs.num_rows())
+    }
+
+    /// Encode rows `[offset, offset + len)` of `rs` straight from its
+    /// column buffers — one pass per column, no intermediate rowset.
+    pub fn encode_range(rs: &RowSet, offset: usize, len: usize) -> WireBatch {
+        assert!(offset + len <= rs.num_rows(), "encode_range out of bounds");
+        let mut out: Vec<u8> = Vec::with_capacity(16 + len * rs.num_columns() * 8);
+        out.extend_from_slice(&(rs.num_columns() as u32).to_le_bytes());
+        out.extend_from_slice(&(len as u32).to_le_bytes());
+        for (field, col) in rs.schema.fields.iter().zip(&rs.columns) {
+            let name = field.name.as_bytes();
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name);
+            let tag = match col.data_type() {
+                DataType::Int64 => TAG_I64,
+                DataType::Float64 => TAG_F64,
+                DataType::Utf8 => TAG_UTF8,
+                DataType::Bool => TAG_BOOL,
+            };
+            out.push(tag);
+            match col.validity() {
+                Some(valid) => {
+                    out.push(1);
+                    pack_bits(len, |i| valid[offset + i], &mut out);
+                }
+                None => out.push(0),
+            }
+            match col {
+                Column::Int64 { data, .. } => {
+                    for &v in &data[offset..offset + len] {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Column::Float64 { data, .. } => {
+                    for &v in &data[offset..offset + len] {
+                        out.extend_from_slice(&v.to_bits().to_le_bytes());
+                    }
+                }
+                Column::Bool { data, .. } => {
+                    pack_bits(len, |i| data[offset + i], &mut out);
+                }
+                Column::Utf8 { data, .. } => {
+                    for s in &data[offset..offset + len] {
+                        out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                    }
+                    for s in &data[offset..offset + len] {
+                        out.extend_from_slice(s.as_bytes());
+                    }
+                }
+            }
+        }
+        WireBatch { bytes: out, rows: len }
+    }
+
+    /// Decode back into a rowset with typed bulk appends.
+    pub fn decode(&self) -> Result<RowSet> {
+        let mut r = Reader { buf: &self.bytes, pos: 0 };
+        let n_cols = r.u32()? as usize;
+        let n_rows = r.u32()? as usize;
+        let mut fields = Vec::with_capacity(n_cols);
+        let mut columns = Vec::with_capacity(n_cols);
+        for _ in 0..n_cols {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .map_err(|e| anyhow::anyhow!("bad field name in wire batch: {e}"))?;
+            let tag = r.u8()?;
+            let has_valid = r.u8()? != 0;
+            let valid = if has_valid {
+                let bm = r.take(n_rows.div_ceil(8))?;
+                Some(unpack_bits(bm, n_rows))
+            } else {
+                None
+            };
+            let (dt, col) = match tag {
+                TAG_I64 => {
+                    let raw = r.take(n_rows * 8)?;
+                    let data: Vec<i64> = raw
+                        .chunks_exact(8)
+                        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    (DataType::Int64, Column::Int64 { data, valid })
+                }
+                TAG_F64 => {
+                    let raw = r.take(n_rows * 8)?;
+                    let data: Vec<f64> = raw
+                        .chunks_exact(8)
+                        .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+                        .collect();
+                    (DataType::Float64, Column::Float64 { data, valid })
+                }
+                TAG_BOOL => {
+                    let bm = r.take(n_rows.div_ceil(8))?;
+                    (DataType::Bool, Column::Bool { data: unpack_bits(bm, n_rows), valid })
+                }
+                TAG_UTF8 => {
+                    let raw = r.take(n_rows * 4)?;
+                    let lens: Vec<usize> = raw
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+                        .collect();
+                    let mut data = Vec::with_capacity(n_rows);
+                    for len in lens {
+                        let s = String::from_utf8(r.take(len)?.to_vec())
+                            .map_err(|e| anyhow::anyhow!("bad UTF-8 in wire batch: {e}"))?;
+                        data.push(s);
+                    }
+                    (DataType::Utf8, Column::Utf8 { data, valid })
+                }
+                other => bail!("unknown wire column tag {other}"),
+            };
+            fields.push(Field::new(name, dt));
+            columns.push(col);
+        }
+        RowSet::new(Schema::new(fields), columns)
+    }
+
+    /// Encoded size in bytes — what the transport-cost model charges.
+    pub fn wire_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Number of rows in the batch (without decoding).
+    pub fn num_rows(&self) -> usize {
+        self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Value;
+
+    fn sample() -> RowSet {
+        RowSet::new(
+            Schema::new(vec![
+                Field::new("i", DataType::Int64),
+                Field::new("f", DataType::Float64),
+                Field::new("s", DataType::Utf8),
+                Field::new("b", DataType::Bool),
+            ]),
+            vec![
+                Column::Int64 {
+                    data: vec![1, 0, -3, 4, 5, 6, 7, 8, 9],
+                    valid: Some(vec![true, false, true, true, true, true, true, true, true]),
+                },
+                Column::from_f64(vec![0.5, -0.0, 2.0, 3.5, 4.0, 5.5, 6.0, 7.5, f64::MAX]),
+                Column::Utf8 {
+                    data: (0..9).map(|i| format!("s{i}")).collect(),
+                    valid: Some(vec![true; 8].into_iter().chain([false]).collect()),
+                },
+                Column::from_bools(vec![
+                    true, false, true, true, false, false, true, false, true,
+                ]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn round_trip_whole_rowset() {
+        let rs = sample();
+        let decoded = WireBatch::encode(&rs).decode().unwrap();
+        assert_eq!(decoded, rs);
+    }
+
+    #[test]
+    fn round_trip_ranges() {
+        let rs = sample();
+        // 9 rows exercises the partial-byte bitmap tail.
+        for (off, len) in [(0, 9), (0, 8), (1, 8), (3, 3), (8, 1), (4, 0)] {
+            let decoded = WireBatch::encode_range(&rs, off, len).decode().unwrap();
+            assert_eq!(decoded, rs.slice(off, len), "range ({off}, {len})");
+        }
+    }
+
+    #[test]
+    fn negative_zero_and_nulls_survive() {
+        let rs = sample();
+        let decoded = WireBatch::encode(&rs).decode().unwrap();
+        // -0.0 keeps its sign bit through the bit-level f64 encoding.
+        let f = decoded.column(1).f64_data().unwrap();
+        assert!(f[1] == 0.0 && f[1].is_sign_negative());
+        assert_eq!(decoded.column(0).value(1), Value::Null);
+        assert_eq!(decoded.column(2).value(8), Value::Null);
+    }
+
+    #[test]
+    fn empty_rowset_round_trips() {
+        let rs = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Int64)]),
+            vec![Column::from_i64(vec![])],
+        )
+        .unwrap();
+        let w = WireBatch::encode(&rs);
+        assert_eq!(w.num_rows(), 0);
+        assert_eq!(w.decode().unwrap(), rs);
+    }
+
+    #[test]
+    fn truncated_input_is_an_error_not_a_panic() {
+        let rs = sample();
+        let w = WireBatch::encode(&rs);
+        for cut in [0, 4, 9, w.wire_len() / 2, w.wire_len() - 1] {
+            let t = WireBatch { bytes: w.bytes[..cut].to_vec(), rows: w.rows };
+            assert!(t.decode().is_err(), "cut at {cut} should fail");
+        }
+    }
+
+    #[test]
+    fn wire_len_is_compact() {
+        let rs = sample();
+        let w = WireBatch::encode(&rs);
+        // Column-major fixed-width payloads: well under a Value-per-cell
+        // representation, and within 2x of the raw column bytes.
+        assert!(w.wire_len() as u64 <= rs.byte_size() * 2 + 128);
+    }
+}

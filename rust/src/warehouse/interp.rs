@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::types::{RowSet, Value};
+use crate::types::{RowSet, Value, WireBatch};
 use crate::udf::{UdfRegistry, UdfStatsStore};
 use crate::util::ids::ProcId;
 
@@ -68,14 +68,44 @@ impl Default for PoolConfig {
     }
 }
 
-/// One unit of work: run `udf` over the rows of `rows`, tagged so results
-/// can be stitched back in order.
+/// One unit of work: run `udf` over an encoded batch of rows, tagged so
+/// results can be stitched back in order. The rows travel as a
+/// column-major [`WireBatch`] — encoded once by the sender, decoded with
+/// typed appends by the receiving process (the gRPC payload of §III.B).
 pub struct Batch {
+    /// Global sequence number for deterministic result stitching.
     pub seq: u64,
+    /// Name of the UDF to run over the rows.
     pub udf: String,
-    pub rows: RowSet,
+    /// Column-major encoded rows.
+    pub payload: WireBatch,
     /// Node the batch originates from (for remote-cost accounting).
     pub origin_node: usize,
+}
+
+impl Batch {
+    /// Encode a whole rowset into a batch.
+    pub fn from_rows(seq: u64, udf: &str, rows: &RowSet, origin_node: usize) -> Batch {
+        Batch::from_range(seq, udf, rows, 0, rows.num_rows(), origin_node)
+    }
+
+    /// Encode rows `[offset, offset + len)` of `rows` into a batch —
+    /// straight from the source column buffers, one encode per batch.
+    pub fn from_range(
+        seq: u64,
+        udf: &str,
+        rows: &RowSet,
+        offset: usize,
+        len: usize,
+        origin_node: usize,
+    ) -> Batch {
+        Batch {
+            seq,
+            udf: udf.to_string(),
+            payload: WireBatch::encode_range(rows, offset, len),
+            origin_node,
+        }
+    }
 }
 
 /// The result of one batch.
@@ -147,10 +177,12 @@ impl InterpreterPool {
                                     // Remote delivery pays the transport
                                     // cost on the receiving side (spin to
                                     // consume real CPU — a sleep would
-                                    // under-charge on busy hosts).
+                                    // under-charge on busy hosts). The
+                                    // charge is the actual encoded wire
+                                    // size of the batch.
                                     if batch.origin_node != node {
-                                        let cost =
-                                            transport.cost(batch.rows.byte_size());
+                                        let cost = transport
+                                            .cost(batch.payload.wire_len() as u64);
                                         let target =
                                             cpu0 + cost.as_nanos() as u64;
                                         while thread_cpu_ns() < target {
@@ -168,7 +200,7 @@ impl InterpreterPool {
                                     if let Ok(_r) = &res {
                                         stats.record_batch(
                                             &batch.udf,
-                                            batch.rows.num_rows() as u64,
+                                            batch.payload.num_rows() as u64,
                                             cpu,
                                         );
                                     }
@@ -266,21 +298,34 @@ impl Drop for InterpreterPool {
     }
 }
 
-/// Execute one batch: the scalar UDF applied per row (§III.A semantics),
-/// or a vectorized UDF applied to the whole batch.
+/// Execute one batch: decode the column-major payload once (typed
+/// appends), then run the scalar UDF per row (§III.A semantics) or a
+/// vectorized UDF on the whole decoded batch.
 fn run_batch(batch: &Batch, udfs: &UdfRegistry) -> Result<Vec<Value>> {
+    let rows = batch.payload.decode()?;
     if let Some(v) = udfs.vectorized(&batch.udf) {
-        let out = (v.body)(&batch.rows)?;
+        let out = (v.body)(&rows)?;
         return Ok(out.into_iter().map(Value::Float).collect());
     }
     let udf = udfs
         .scalar(&batch.udf)
         .ok_or_else(|| anyhow!("no UDF named {:?}", batch.udf))?;
-    let n = batch.rows.num_rows();
+    let n = rows.num_rows();
     let mut out = Vec::with_capacity(n);
+    // Bulk-marshal each argument column once, then assemble per-row
+    // argument slices — no per-cell column probing in the UDF loop.
+    let arg_cols: Vec<Vec<Value>> = rows
+        .columns
+        .iter()
+        .map(|c| (0..n).map(|i| c.value(i)).collect())
+        .collect();
+    let mut argv: Vec<Value> = Vec::with_capacity(arg_cols.len());
     for r in 0..n {
-        let args = batch.rows.row(r);
-        out.push((udf.body)(&args)?);
+        argv.clear();
+        for c in &arg_cols {
+            argv.push(c[r].clone());
+        }
+        out.push((udf.body)(&argv)?);
     }
     Ok(out)
 }
@@ -334,12 +379,7 @@ mod tests {
     fn executes_scalar_batches() {
         let p = pool();
         let (tx, rx) = mpsc::channel();
-        p.submit(
-            0,
-            Batch { seq: 0, udf: "inc".into(), rows: test_rows(4), origin_node: 0 },
-            tx,
-        )
-        .unwrap();
+        p.submit(0, Batch::from_rows(0, "inc", &test_rows(4), 0), tx).unwrap();
         let r = rx.recv().unwrap().unwrap();
         assert_eq!(r.seq, 0);
         assert_eq!(
@@ -357,12 +397,7 @@ mod tests {
     fn executes_vectorized_batches() {
         let p = pool();
         let (tx, rx) = mpsc::channel();
-        p.submit(
-            1,
-            Batch { seq: 7, udf: "vec_inc".into(), rows: test_rows(3), origin_node: 0 },
-            tx,
-        )
-        .unwrap();
+        p.submit(1, Batch::from_rows(7, "vec_inc", &test_rows(3), 0), tx).unwrap();
         let r = rx.recv().unwrap().unwrap();
         assert_eq!(r.values.len(), 3);
         assert_eq!(r.values[2], Value::Float(3.0));
@@ -372,12 +407,7 @@ mod tests {
     fn unknown_udf_is_an_error_not_a_hang() {
         let p = pool();
         let (tx, rx) = mpsc::channel();
-        p.submit(
-            0,
-            Batch { seq: 0, udf: "nope".into(), rows: test_rows(1), origin_node: 0 },
-            tx,
-        )
-        .unwrap();
+        p.submit(0, Batch::from_rows(0, "nope", &test_rows(1), 0), tx).unwrap();
         assert!(rx.recv().unwrap().is_err());
     }
 
@@ -407,20 +437,11 @@ mod tests {
         );
         let (tx, rx) = mpsc::channel();
         // Local to proc 0 (node 0).
-        p.submit(
-            0,
-            Batch { seq: 0, udf: "inc".into(), rows: test_rows(8), origin_node: 0 },
-            tx.clone(),
-        )
-        .unwrap();
+        p.submit(0, Batch::from_rows(0, "inc", &test_rows(8), 0), tx.clone())
+            .unwrap();
         let local = rx.recv().unwrap().unwrap().elapsed;
         // Remote: proc 1 lives on node 1.
-        p.submit(
-            1,
-            Batch { seq: 1, udf: "inc".into(), rows: test_rows(8), origin_node: 0 },
-            tx,
-        )
-        .unwrap();
+        p.submit(1, Batch::from_rows(1, "inc", &test_rows(8), 0), tx).unwrap();
         let remote = rx.recv().unwrap().unwrap().elapsed;
         assert!(
             remote > local + Duration::from_millis(1),
@@ -432,12 +453,7 @@ mod tests {
     fn stats_recorded_per_batch() {
         let p = pool();
         let (tx, rx) = mpsc::channel();
-        p.submit(
-            0,
-            Batch { seq: 0, udf: "inc".into(), rows: test_rows(100), origin_node: 0 },
-            tx,
-        )
-        .unwrap();
+        p.submit(0, Batch::from_rows(0, "inc", &test_rows(100), 0), tx).unwrap();
         rx.recv().unwrap().unwrap();
         assert!(p.stats().row_cost_ns("inc").is_some());
         assert!(p.busy_nanos() > 0);

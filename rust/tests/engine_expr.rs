@@ -1,0 +1,441 @@
+//! Integration: the columnar expression kernels and the exchange wire
+//! codec preserve row-path semantics.
+//!
+//! - Randomized differential tests: every expression evaluates to the
+//!   identical column (schema, types, values, NULL payload normalization)
+//!   through the vectorized kernels and the `eval_row` reference path.
+//! - Whole-query differentials through `ExecContext::vectorized` on/off,
+//!   covering filter/project/join-residual/sort/aggregate expression use.
+//! - Columnar exchange round-trips: `WireBatch` encode/decode equals the
+//!   per-row `RowSet::row`/`RowSetBuilder` rebuild, including NULLs,
+//!   `-0.0`, and empty batches.
+
+use std::sync::Arc;
+
+use snowpark::engine::{
+    eval_expr, eval_expr_rowwise, run_sql, Catalog, ExecContext,
+};
+use snowpark::sql::{parse_query, SelectItem};
+use snowpark::types::{
+    Column, DataType, Field, RowSet, RowSetBuilder, Schema, Value, WireBatch,
+};
+use snowpark::udf::UdfRegistry;
+use snowpark::util::rng::Rng;
+
+fn parse_expr(sql_expr: &str) -> snowpark::sql::Expr {
+    let q = parse_query(&format!("SELECT {sql_expr} FROM t")).unwrap();
+    match &q.select[0] {
+        SelectItem::Expr { expr, .. } => expr.clone(),
+        _ => panic!("expected expression"),
+    }
+}
+
+/// Random table with NULLs in every column, integral floats (to exercise
+/// Int/Float comparison bridging), `-0.0`, empty strings, and negatives.
+fn random_table(seed: u64, n: usize) -> RowSet {
+    let mut rng = Rng::new(seed);
+    let mut b = RowSetBuilder::new(Schema::new(vec![
+        Field::new("a", DataType::Int64),
+        Field::new("b", DataType::Float64),
+        Field::new("s", DataType::Utf8),
+        Field::new("t", DataType::Bool),
+    ]));
+    for _ in 0..n {
+        let a = if rng.bool(0.15) {
+            Value::Null
+        } else {
+            Value::Int(rng.range_inclusive(-50, 50))
+        };
+        let b_v = if rng.bool(0.15) {
+            Value::Null
+        } else {
+            let x = rng.range_inclusive(-40, 40) as f64;
+            Value::Float(match rng.below(4) {
+                0 => x,
+                1 => x + 0.5,
+                2 => -0.0,
+                _ => x / 3.0,
+            })
+        };
+        let s = if rng.bool(0.15) {
+            Value::Null
+        } else if rng.bool(0.1) {
+            Value::Str(String::new())
+        } else {
+            Value::Str(format!("s{}", rng.below(20)))
+        };
+        let t = if rng.bool(0.15) {
+            Value::Null
+        } else {
+            Value::Bool(rng.bool(0.5))
+        };
+        b.push(vec![a, b_v, s, t]).unwrap();
+    }
+    b.finish().unwrap()
+}
+
+const EXPRS: &[&str] = &[
+    "a + 1",
+    "a - b",
+    "a * a + b / 2.0",
+    "b / a",
+    "a % 7",
+    "a / 0",
+    "-a",
+    "-b",
+    "NOT t",
+    "a = 3",
+    "a <> 3",
+    "b >= 0.0",
+    "b = 0.0", // -0.0 must compare equal to 0.0
+    "a < b",
+    "a = b", // Int/Float comparison bridging
+    "s = 'x'",
+    "s < 's5'",
+    "t = TRUE",
+    "s || s",
+    "a || '#' || b",
+    "t AND a > 1",
+    "t OR b > 0.0",
+    "(a > 0 AND b > 0.0) OR t",
+    "a IS NULL",
+    "b IS NOT NULL",
+    "a IN (1, 5, NULL)",
+    "a NOT IN (2, 4)",
+    "s IN ('s1', 's2', 's3')",
+    "a BETWEEN -10 AND 10",
+    "b NOT BETWEEN -1.0 AND 1.0",
+    "a BETWEEN b AND 20",
+    "CASE WHEN a > 2 THEN b ELSE -b END",
+    "CASE WHEN a > 10 THEN 'big' WHEN a > 0 THEN 'small' END",
+    "CASE WHEN t THEN 1 ELSE 2.5 END",
+    "CASE WHEN s = 's1' THEN a WHEN s = 's2' THEN a * 2 ELSE 0 END",
+    "abs(a)",
+    "abs(b)",
+    "sqrt(abs(b))",
+    "exp(b / 100.0)",
+    "floor(b)",
+    "ceil(b)",
+    "round(b)",
+    "round(b, 1)",
+    "power(2, a % 5)",
+    "upper(s)",
+    "lower(s)",
+    "length(s)",
+    "coalesce(a, 0)",
+    "coalesce(NULL, b, 1.0)",
+    "coalesce(s, 'fallback')",
+    "substr(s, 1, 1)",
+    "concat(s, '-', a)",
+    "1 + 2 * 3",
+    "NULL + 1",
+    // NULL-valued constant subtrees stay unfolded so the static type is
+    // preserved (Float64 for 1/0, Utf8 for upper(NULL)).
+    "1 / 0",
+    "1.5 + NULL",
+    "upper(NULL)",
+    "coalesce(NULL, NULL)",
+    // NB: constant expressions here must keep the same output type under
+    // static inference (row path on empty input) and folding (vectorized
+    // path) — `length` infers Int64, matching its folded value.
+    "length('abc') + 1",
+];
+
+#[test]
+fn randomized_differential_vectorized_vs_eval_row() {
+    let reg = UdfRegistry::new();
+    for seed in [11u64, 222, 3333] {
+        let rs = random_table(seed, 2_000);
+        for e in EXPRS {
+            let expr = parse_expr(e);
+            let vec = eval_expr(&expr, &rs, &reg)
+                .unwrap_or_else(|err| panic!("seed {seed}, {e} (vectorized): {err}"));
+            let row = eval_expr_rowwise(&expr, &rs, &reg)
+                .unwrap_or_else(|err| panic!("seed {seed}, {e} (rowwise): {err}"));
+            assert_eq!(vec, row, "seed {seed}: divergence for {e}");
+        }
+    }
+}
+
+#[test]
+fn differential_on_empty_input() {
+    let reg = UdfRegistry::new();
+    let rs = random_table(1, 0);
+    for e in EXPRS {
+        let expr = parse_expr(e);
+        let vec = eval_expr(&expr, &rs, &reg).unwrap();
+        let row = eval_expr_rowwise(&expr, &rs, &reg).unwrap();
+        assert_eq!(vec, row, "empty input: divergence for {e}");
+        assert_eq!(vec.len(), 0);
+    }
+}
+
+#[test]
+fn scalar_udf_differential_with_nulls() {
+    let mut reg = UdfRegistry::new();
+    reg.register_scalar(
+        "halve",
+        DataType::Float64,
+        Arc::new(|args| match &args[0] {
+            Value::Null => Ok(Value::Null),
+            v => Ok(Value::Float(v.as_f64().unwrap_or(0.0) / 2.0)),
+        }),
+    );
+    let rs = random_table(77, 1_000);
+    for e in ["halve(b)", "halve(a) + 1.0", "halve(coalesce(b, 0.0))"] {
+        let expr = parse_expr(e);
+        let vec = eval_expr(&expr, &rs, &reg).unwrap();
+        let row = eval_expr_rowwise(&expr, &rs, &reg).unwrap();
+        assert_eq!(vec, row, "divergence for {e}");
+    }
+}
+
+fn query_catalog() -> Arc<Catalog> {
+    let catalog = Arc::new(Catalog::new());
+    catalog.register("t", random_table(5, 1_500));
+    let mut d = RowSetBuilder::new(Schema::new(vec![
+        Field::new("a", DataType::Int64),
+        Field::new("w", DataType::Float64),
+    ]));
+    for i in -20i64..=20 {
+        let k = if i % 6 == 0 { Value::Null } else { Value::Int(i) };
+        d.push(vec![k, Value::Float(i as f64 * 0.5)]).unwrap();
+    }
+    catalog.register("d", d.finish().unwrap());
+    catalog
+}
+
+/// Whole queries agree between the vectorized and row-at-a-time engines
+/// (expressions, residual-before-materialization, aggregates, sort).
+#[test]
+fn whole_query_differential() {
+    let catalog = query_catalog();
+    for stmt in [
+        "SELECT a + 1 AS a1, b * 2.0 AS b2, upper(s) AS u FROM t WHERE b > 0.0",
+        "SELECT a FROM t WHERE s IN ('s1', 's2') AND a IS NOT NULL",
+        "SELECT CASE WHEN a > 0 THEN 'pos' ELSE 'neg' END AS sign, COUNT(*) AS n \
+         FROM t GROUP BY CASE WHEN a > 0 THEN 'pos' ELSE 'neg' END",
+        "SELECT t.a, d.w FROM t JOIN d ON t.a = d.a AND t.b > d.w",
+        "SELECT t.a, d.w FROM t LEFT JOIN d ON t.a = d.a AND t.b > d.w",
+        "SELECT t.s, d.w FROM t JOIN d ON t.a = d.a AND length(t.s) > 1",
+        "SELECT a, b FROM t ORDER BY abs(b) DESC, a LIMIT 40",
+        "SELECT s, SUM(a) AS sa, AVG(b) AS ab FROM t GROUP BY s HAVING COUNT(*) > 5",
+    ] {
+        let on = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()));
+        let off = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+            .with_vectorized(false);
+        let v = run_sql(stmt, &on).unwrap_or_else(|e| panic!("{stmt}: {e}"));
+        let r = run_sql(stmt, &off).unwrap_or_else(|e| panic!("{stmt} (rowwise): {e}"));
+        assert_eq!(v, r, "query divergence for {stmt}");
+    }
+}
+
+/// The residual is evaluated pre-materialization; make sure semantics
+/// (including constant residuals and qualified column refs) survived.
+#[test]
+fn residual_join_semantics() {
+    let catalog = Arc::new(Catalog::new());
+    let l = RowSet::new(
+        Schema::new(vec![
+            Field::new("k", DataType::Int64),
+            Field::new("x", DataType::Int64),
+        ]),
+        vec![
+            Column::from_i64(vec![1, 1, 2, 3]),
+            Column::from_i64(vec![10, 20, 30, 40]),
+        ],
+    )
+    .unwrap();
+    let r = RowSet::new(
+        Schema::new(vec![
+            Field::new("k", DataType::Int64),
+            Field::new("y", DataType::Int64),
+        ]),
+        vec![
+            Column::from_i64(vec![1, 2, 2]),
+            Column::from_i64(vec![15, 25, 35]),
+        ],
+    )
+    .unwrap();
+    catalog.register("l", l);
+    catalog.register("r", r);
+    let ctx = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()));
+
+    // Residual drops the (x=10, y=15) pair and the (x=30, y=35) pair.
+    let rs = run_sql(
+        "SELECT l.x, r.y FROM l JOIN r ON l.k = r.k AND l.x > r.y ORDER BY l.x, r.y",
+        &ctx,
+    )
+    .unwrap();
+    assert_eq!(rs.num_rows(), 2);
+    assert_eq!(rs.row(0), vec![Value::Int(20), Value::Int(15)]);
+    assert_eq!(rs.row(1), vec![Value::Int(30), Value::Int(25)]);
+
+    // Qualified duplicate column names resolve inside the residual.
+    let rs = run_sql(
+        "SELECT l.k, r.k FROM l JOIN r ON l.k = r.k AND l.k + r.k > 2",
+        &ctx,
+    )
+    .unwrap();
+    assert_eq!(rs.num_rows(), 2); // only the k=2 matches survive
+
+    // Column-free residual conjunct: always-true keeps every match,
+    // always-false drops them all.
+    let rs = run_sql("SELECT l.x FROM l JOIN r ON l.k = r.k AND 1 < 2", &ctx).unwrap();
+    assert_eq!(rs.num_rows(), 4);
+    let rs = run_sql("SELECT l.x FROM l JOIN r ON l.k = r.k AND 1 > 2", &ctx).unwrap();
+    assert_eq!(rs.num_rows(), 0);
+
+    // Left join: rows whose every match fails the residual are dropped
+    // (documented limitation), unmatched left rows keep their NULL pad.
+    let rs = run_sql(
+        "SELECT l.x, r.y FROM l LEFT JOIN r ON l.k = r.k AND r.y > 100",
+        &ctx,
+    )
+    .unwrap();
+    let rowwise = run_sql(
+        "SELECT l.x, r.y FROM l LEFT JOIN r ON l.k = r.k AND r.y > 100",
+        &ExecContext::new(catalog, Arc::new(UdfRegistry::new())).with_vectorized(false),
+    )
+    .unwrap();
+    assert_eq!(rs, rowwise);
+}
+
+/// Vectorized UDFs are callable at the expression level (whole-batch
+/// dispatch), and the row path agrees via single-row batches.
+#[test]
+fn vectorized_udf_in_query() {
+    let catalog = Arc::new(Catalog::new());
+    catalog.register(
+        "t",
+        RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Float64)]),
+            vec![Column::from_f64(vec![1.0, 2.0, 3.0, 4.0])],
+        )
+        .unwrap(),
+    );
+    let mut reg = UdfRegistry::new();
+    reg.register_vectorized(
+        "vsq",
+        DataType::Float64,
+        Arc::new(|rows| {
+            Ok(rows
+                .column(0)
+                .f64_data()
+                .unwrap()
+                .iter()
+                .map(|v| v * v)
+                .collect())
+        }),
+    );
+    let reg = Arc::new(reg);
+    let on = ExecContext::new(catalog.clone(), reg.clone());
+    let off = ExecContext::new(catalog, reg).with_vectorized(false);
+    let v = run_sql("SELECT vsq(x) AS y FROM t WHERE vsq(x) > 3.0", &on).unwrap();
+    let r = run_sql("SELECT vsq(x) AS y FROM t WHERE vsq(x) > 3.0", &off).unwrap();
+    assert_eq!(v, r);
+    assert_eq!(v.num_rows(), 3);
+    assert_eq!(v.row(0)[0], Value::Float(4.0));
+}
+
+// ------------------------------------------------------- exchange codec
+
+fn codec_fixture() -> RowSet {
+    let mut b = RowSetBuilder::new(Schema::new(vec![
+        Field::new("i", DataType::Int64),
+        Field::new("f", DataType::Float64),
+        Field::new("s", DataType::Utf8),
+        Field::new("t", DataType::Bool),
+    ]));
+    let mut rng = Rng::new(404);
+    for k in 0..997 {
+        // 997 rows: exercises bitmap tails and uneven final batches.
+        let i = if rng.bool(0.2) { Value::Null } else { Value::Int(k) };
+        let f = if rng.bool(0.2) {
+            Value::Null
+        } else if rng.bool(0.1) {
+            Value::Float(-0.0)
+        } else {
+            Value::Float(k as f64 / 7.0)
+        };
+        let s = if rng.bool(0.2) {
+            Value::Null
+        } else {
+            Value::Str(format!("row-{k}"))
+        };
+        let t = if rng.bool(0.2) {
+            Value::Null
+        } else {
+            Value::Bool(k % 3 == 0)
+        };
+        b.push(vec![i, f, s, t]).unwrap();
+    }
+    b.finish().unwrap()
+}
+
+/// Columnar encode/decode must equal the per-row rebuild for every batch
+/// of the partition — the differential for the exchange codec.
+#[test]
+fn wire_codec_matches_perrow_rebuild() {
+    let part = codec_fixture();
+    let n = part.num_rows();
+    for batch_rows in [1usize, 7, 256, 2_000] {
+        let mut off = 0;
+        while off < n {
+            let len = batch_rows.min(n - off);
+            // Columnar path.
+            let decoded = WireBatch::encode_range(&part, off, len).decode().unwrap();
+            // Per-row reference path.
+            let sliced = part.slice(off, len);
+            let mut b = RowSetBuilder::new(part.schema.clone());
+            for r in 0..len {
+                b.push(sliced.row(r)).unwrap();
+            }
+            let rebuilt = b.finish().unwrap();
+            assert_eq!(decoded, rebuilt, "batch at {off}+{len} (B={batch_rows})");
+            assert_eq!(decoded, sliced, "slice mismatch at {off}+{len}");
+            off += len;
+        }
+    }
+}
+
+#[test]
+fn wire_codec_preserves_normalization_edges() {
+    let rs = RowSet::new(
+        Schema::new(vec![
+            Field::new("f", DataType::Float64),
+            Field::new("i", DataType::Int64),
+        ]),
+        vec![
+            Column::from_f64(vec![-0.0, 0.0, f64::MIN, f64::MAX, 2f64.powi(53) + 2.0]),
+            Column::from_i64(vec![i64::MIN, -1, 0, 1, i64::MAX]),
+        ],
+    )
+    .unwrap();
+    let decoded = WireBatch::encode(&rs).decode().unwrap();
+    assert_eq!(decoded, rs);
+    let f = decoded.column(0).f64_data().unwrap();
+    assert!(f[0].is_sign_negative() && f[0] == 0.0, "-0.0 sign must survive");
+    assert_eq!(decoded.column(1).i64_data().unwrap()[0], i64::MIN);
+}
+
+#[test]
+fn wire_codec_empty_and_all_null() {
+    // Zero rows.
+    let empty = RowSet::empty(Schema::new(vec![
+        Field::new("x", DataType::Int64),
+        Field::new("s", DataType::Utf8),
+    ]));
+    assert_eq!(WireBatch::encode(&empty).decode().unwrap(), empty);
+    // All-NULL column.
+    let rs = RowSet::new(
+        Schema::new(vec![Field::new("x", DataType::Int64)]),
+        vec![Column::Int64 { data: vec![0, 0, 0], valid: Some(vec![false; 3]) }],
+    )
+    .unwrap();
+    let decoded = WireBatch::encode(&rs).decode().unwrap();
+    assert_eq!(decoded, rs);
+    for i in 0..3 {
+        assert_eq!(decoded.column(0).value(i), Value::Null);
+    }
+}
