@@ -8,7 +8,7 @@ use std::time::Duration;
 use snowpark::bench::{banner, best, fmt_duration, measure, Table};
 use snowpark::control::{InitPipeline, InitRequest};
 use snowpark::engine::exchange::{simulate_exchange, ExchangeConfig, ExchangeMode};
-use snowpark::engine::{run_sql, Catalog, ExecContext};
+use snowpark::engine::{default_parallelism, run_sql, Catalog, ExecContext};
 use snowpark::types::{Column, DataType, Field, RowSet, RowSetBuilder, Schema, Value, WireBatch};
 use snowpark::udf::UdfRegistry;
 use snowpark::packages::{Installer, LatencyModel, PackageUniverse, Prefetcher, Solver, SolverCache};
@@ -364,6 +364,56 @@ fn ablate_expr_kernels() -> Vec<String> {
     json
 }
 
+/// A9: morsel-driven parallel execution vs the sequential path
+/// (`parallelism = 1`), on the 1M-row aggregate/join/sort workloads of
+/// A6 plus a filter→project pipeline. Returns JSON rows for
+/// BENCH_engine.json.
+fn ablate_parallel_pipeline() -> Vec<String> {
+    let threads = default_parallelism();
+    println!("\n-- A9: morsel-driven parallelism (1M rows, 1 vs {threads} threads) --");
+    const N: usize = 1_000_000;
+    const KEYS: usize = 100_000;
+    let mut table = Table::new(&["query", "distribution", "1 thread", "par", "speedup"]);
+    let mut json = Vec::new();
+    for (dist, zipf_s) in [("uniform", None), ("zipf-1.2", Some(1.2))] {
+        let catalog = engine_tables(N, KEYS, zipf_s, 44);
+        let queries = [
+            ("groupby-int", "SELECT k, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY k"),
+            ("groupby-str", "SELECT cat, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY cat"),
+            ("hash-join", "SELECT COUNT(*) AS n FROM facts JOIN dim ON facts.k = dim.k"),
+            ("sort-limit", "SELECT k, v FROM facts ORDER BY v DESC LIMIT 100"),
+            ("sort-full", "SELECT k FROM facts ORDER BY v DESC, k"),
+            ("filter-project", "SELECT k + 1 AS k1, v * 2.0 AS v2 FROM facts WHERE v > 25.0"),
+        ];
+        for (name, stmt) in queries {
+            let ctx_seq = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(1);
+            let ctx_par = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(threads);
+            let t_seq = best(&measure(1, 3, || run_sql(stmt, &ctx_seq).unwrap()));
+            let t_par = best(&measure(1, 3, || run_sql(stmt, &ctx_par).unwrap()));
+            let speedup = t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-12);
+            table.row(&[
+                name.to_string(),
+                dist.to_string(),
+                fmt_duration(t_seq),
+                fmt_duration(t_par),
+                format!("{speedup:.1}x"),
+            ]);
+            json.push(format!(
+                "{{\"bench\":\"parallel_pipeline\",\"query\":\"{name}\",\"dist\":\"{dist}\",\
+                 \"rows\":{N},\"threads\":{threads},\"seq_ms\":{:.3},\"par_ms\":{:.3},\
+                 \"speedup\":{speedup:.2}}}",
+                t_seq.as_secs_f64() * 1e3,
+                t_par.as_secs_f64() * 1e3,
+            ));
+        }
+    }
+    table.print();
+    println!("(target on ≥4-core hosts: parallel beats sequential on aggregate/join/sort)");
+    json
+}
+
 /// Zipf-skewed multi-column partitions shaped like the Fig. 6
 /// redistribution bench input.
 fn codec_partitions(sizes: &[usize]) -> Vec<RowSet> {
@@ -484,7 +534,7 @@ fn main() {
         "Ablations",
         "Design-choice sweeps: buffer size B, threshold T, env-cache \
          capacity, prefetch, estimator (K,P,F), engine key codec, \
-         expression kernels, exchange batch codec.",
+         expression kernels, exchange batch codec, morsel parallelism.",
     );
     ablate_batch_size();
     ablate_threshold();
@@ -494,5 +544,6 @@ fn main() {
     let mut json = ablate_groupby_kernels();
     json.extend(ablate_expr_kernels());
     json.extend(ablate_exchange_codec());
+    json.extend(ablate_parallel_pipeline());
     write_bench_json(&json);
 }

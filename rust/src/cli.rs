@@ -21,9 +21,12 @@ snowparkd — Snowpark reproduction launcher
 
 USAGE:
   snowparkd info
-  snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats]
+  snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T]
   snowparkd demo
   snowparkd serve [--queries N] [--nodes N] [--procs N] [--rows N] [--mode auto|local|rr]
+
+--parallelism T caps the engine's morsel worker threads (default: the
+SNOWPARK_PARALLELISM env var, else the host's cores; 1 = sequential).
 
 Demo tables (generated): store_sales, product_reviews, web_clickstreams, items.
 Artifacts: set SNOWPARK_ARTIFACTS or run `make artifacts` for XLA UDFs.";
@@ -53,10 +56,18 @@ pub fn main() {
     }
 }
 
-fn session_with_data(rows: usize, seed: u64, pool: Option<PoolConfig>) -> anyhow::Result<Arc<Session>> {
+fn session_with_data(
+    rows: usize,
+    seed: u64,
+    pool: Option<PoolConfig>,
+    parallelism: Option<usize>,
+) -> anyhow::Result<Arc<Session>> {
     let mut b = Session::builder();
     if let Some(p) = pool {
         b = b.pool(p);
+    }
+    if let Some(t) = parallelism {
+        b = b.parallelism(t);
     }
     let artifacts = crate::runtime::XlaRuntime::default_dir();
     if crate::runtime::XlaRuntime::available(&artifacts) {
@@ -98,7 +109,9 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("run-sql expects a SQL string"))?;
     let rows = args.get_usize("rows", 5_000).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
-    let s = session_with_data(rows, seed, None)?;
+    // 0 = auto (engine default: SNOWPARK_PARALLELISM env var, else cores).
+    let parallelism = args.get_usize("parallelism", 0).map_err(anyhow::Error::msg)?;
+    let s = session_with_data(rows, seed, None, (parallelism > 0).then_some(parallelism))?;
     if args.flag("stats") {
         let (out, stats) = s.sql_with_stats(sql)?;
         println!("{out}");
@@ -113,7 +126,7 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
 }
 
 fn demo() -> anyhow::Result<()> {
-    let s = session_with_data(5_000, 42, None)?;
+    let s = session_with_data(5_000, 42, None, None)?;
     println!("-- DataFrame API: top categories by revenue --");
     let df = s
         .table("store_sales")
@@ -142,6 +155,7 @@ fn serve(args: &ParsedArgs) -> anyhow::Result<()> {
         rows,
         7,
         Some(PoolConfig { nodes, procs_per_node: procs, ..Default::default() }),
+        None,
     )?;
     println!("serving {queries} UDF queries over {nodes} nodes × {procs} procs (mode {mode:?})");
     let t0 = std::time::Instant::now();

@@ -191,14 +191,26 @@ pub fn run_udf_exchange(
         outputs[slot.partition][slot.offset..slot.offset + slot.len]
             .clone_from_slice(&values);
     }
+    // The registry's declared return type is authoritative, so every
+    // partition of one UDF column comes back with the same dtype and
+    // empty / all-NULL partitions don't fall back to Float64 when the
+    // UDF declares otherwise; value inference only covers UDFs with no
+    // declared type. A declared Int64 widens to Float64 when any
+    // partition produced a float — computed over ALL partitions so the
+    // dtype stays consistent — matching the inline expression path
+    // (`expr.rs` numeric coercion) and the UDAF finish rule instead of
+    // silently truncating.
+    let mut dt = registry
+        .scalar_return_type(udf)
+        .or_else(|| outputs.iter().flatten().find_map(Value::data_type))
+        .unwrap_or(crate::types::DataType::Float64);
+    if dt == crate::types::DataType::Int64
+        && outputs.iter().flatten().any(|v| matches!(v, Value::Float(_)))
+    {
+        dt = crate::types::DataType::Float64;
+    }
     let mut columns = Vec::with_capacity(outputs.len());
-    for (vals, part) in outputs.iter().zip(partitions) {
-        let dt = vals
-            .iter()
-            .find_map(Value::data_type)
-            .or_else(|| registry.scalar_return_type(udf))
-            .unwrap_or(crate::types::DataType::Float64);
-        let _ = part;
+    for vals in &outputs {
         columns.push(Column::from_values(dt, vals)?);
     }
     Ok((columns, report))
@@ -227,6 +239,7 @@ pub struct SimulatedExchange {
 
 /// Run the deterministic makespan model with the given shape and policy
 /// (see [`SimulatedExchange`]).
+#[allow(clippy::too_many_arguments)]
 pub fn simulate_exchange(
     partition_rows: &[usize],
     row_cost_ns: u64,

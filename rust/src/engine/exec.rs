@@ -13,6 +13,25 @@
 //! over the `l_idx`/`r_idx` gather vectors on only their referenced
 //! columns, before the wide output is materialized.
 //!
+//! ## Morsel-driven parallelism
+//!
+//! The hot operators split their input into contiguous row-range
+//! *morsels* ([`MORSEL_MIN_ROWS`] rows or more each) and evaluate them on
+//! scoped worker threads (`std::thread::scope`; the crate deliberately
+//! has no rayon dependency). [`ExecContext::parallelism`] caps the worker
+//! count — it defaults to [`default_parallelism`] (the
+//! `SNOWPARK_PARALLELISM` env var, else the host's available cores) and
+//! is derived from the warehouse shape by `Session` (one worker per
+//! interpreter process on a node). Every parallel path is constructed to
+//! be **byte-identical** to the sequential one: expression morsels
+//! concatenate in row order, aggregation merges thread-local key-codec
+//! tables into global first-seen group order, joins probe a shared
+//! hash-partitioned table whose match order equals a single-table build,
+//! and sort merges per-morsel runs under the same index-tiebroken total
+//! order. `parallelism = 1` runs fully single-threaded on the
+//! sequential code paths (one structural difference: the join probe
+//! goes through the same partitioned-table API with one partition).
+//!
 //! The legacy row-at-a-time paths (including row-wise expression
 //! evaluation) are kept behind `ExecContext::vectorized = false` for
 //! differential tests and the `groupby_kernels`/`expr_kernels` ablations
@@ -26,16 +45,36 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::sql::ast::{Expr, JoinKind, OrderKey};
 use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
-use crate::udf::{UdfRegistry, UdfStatsStore};
+use crate::udf::{UdafState, UdfRegistry, UdfStatsStore};
 
 use super::catalog::Catalog;
 use super::expr::{
     eval_expr, eval_expr_rowwise, eval_predicate, eval_predicate_rowwise, eval_row,
     resolve_column,
 };
-use super::hash::{assign_group_ids, EncodedKeys, JoinTable, KeyDict, KeyMode};
+use super::hash::{
+    assign_group_ids, EncodedKeys, JoinTable, KeyDict, KeyMode, PartitionedJoinTable,
+};
 use super::key::KeyValue;
 use super::plan::{AggCall, AggFunc, Plan};
+
+/// Minimum rows per morsel: below this, thread spawn + merge overhead
+/// dominates and operators stay sequential.
+pub const MORSEL_MIN_ROWS: usize = 4096;
+
+/// The default intra-query parallelism: the `SNOWPARK_PARALLELISM`
+/// environment variable when set to a positive integer, otherwise the
+/// host's available cores.
+pub fn default_parallelism() -> usize {
+    if let Ok(s) = std::env::var("SNOWPARK_PARALLELISM") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 /// Everything an operator needs at execution time.
 pub struct ExecContext {
@@ -50,6 +89,13 @@ pub struct ExecContext {
     /// remain for differential testing and the `groupby_kernels` /
     /// `expr_kernels` ablations.
     pub vectorized: bool,
+    /// Maximum worker threads for morsel-driven operators. `1` (or any
+    /// input smaller than two morsels) takes the exact sequential code
+    /// path; larger values parallelize scans/filters/projections,
+    /// aggregation, join build/probe, and sort. Defaults to
+    /// [`default_parallelism`]; `Session` derives it from the warehouse
+    /// shape (`procs_per_node`).
+    pub parallelism: usize,
 }
 
 impl ExecContext {
@@ -60,6 +106,7 @@ impl ExecContext {
             udfs,
             udf_stats: Arc::new(UdfStatsStore::new()),
             vectorized: true,
+            parallelism: default_parallelism(),
         }
     }
 
@@ -68,24 +115,215 @@ impl ExecContext {
         self.vectorized = on;
         self
     }
+
+    /// Set the morsel-parallel worker-thread cap (clamped to ≥ 1).
+    pub fn with_parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = threads.max(1);
+        self
+    }
 }
 
-/// Evaluate an expression through the path selected by `ctx.vectorized`.
+/// Worker threads a morsel-parallel operator should use over `n` rows:
+/// 1 (single-threaded sequential execution) unless the context allows
+/// more and every worker gets at least [`MORSEL_MIN_ROWS`] rows.
+fn parallel_threads(n: usize, ctx: &ExecContext) -> usize {
+    if !ctx.vectorized || ctx.parallelism <= 1 {
+        return 1;
+    }
+    (n / MORSEL_MIN_ROWS).clamp(1, ctx.parallelism)
+}
+
+/// Split `n` rows into `threads` contiguous `(offset, len)` morsels of
+/// near-equal size (never empty).
+fn morsel_ranges(n: usize, threads: usize) -> Vec<(usize, usize)> {
+    let t = threads.min(n).max(1);
+    let base = n / t;
+    let rem = n % t;
+    let mut ranges = Vec::with_capacity(t);
+    let mut off = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < rem);
+        ranges.push((off, len));
+        off += len;
+    }
+    ranges
+}
+
+/// Run `f(morsel_index, offset, len)` for every morsel on scoped worker
+/// threads, collecting results in morsel order. The first error in
+/// morsel (row-range) order wins, matching the sequential path, and
+/// worker panics propagate to the caller.
+fn par_morsels<T, F>(ranges: &[(usize, usize)], f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> Result<T> + Sync,
+{
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = ranges
+            .iter()
+            .enumerate()
+            .map(|(i, &(off, len))| s.spawn(move || f(i, off, len)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
+    })
+}
+
+/// Does the expression call a registered *vectorized* UDF anywhere?
+/// Vectorized UDFs run batch-at-a-time and may be batch-dependent (the
+/// XLA min-max scaler computes statistics over the batch it is handed),
+/// so expressions containing one keep whole-input evaluation instead of
+/// morsel-splitting — splitting would move the batch boundary and change
+/// their results.
+fn has_vectorized_udf(e: &Expr, udfs: &UdfRegistry) -> bool {
+    match e {
+        Expr::Func { name, args } => {
+            udfs.has_vectorized(name) || args.iter().any(|a| has_vectorized_udf(a, udfs))
+        }
+        Expr::Unary { expr, .. } | Expr::IsNull { expr, .. } => has_vectorized_udf(expr, udfs),
+        Expr::Binary { left, right, .. } => {
+            has_vectorized_udf(left, udfs) || has_vectorized_udf(right, udfs)
+        }
+        Expr::InList { expr, list, .. } => {
+            has_vectorized_udf(expr, udfs) || list.iter().any(|a| has_vectorized_udf(a, udfs))
+        }
+        Expr::Between { expr, low, high, .. } => {
+            has_vectorized_udf(expr, udfs)
+                || has_vectorized_udf(low, udfs)
+                || has_vectorized_udf(high, udfs)
+        }
+        Expr::Case { branches, else_value } => {
+            branches
+                .iter()
+                .any(|(c, v)| has_vectorized_udf(c, udfs) || has_vectorized_udf(v, udfs))
+                || else_value
+                    .as_ref()
+                    .map_or(false, |e| has_vectorized_udf(e, udfs))
+        }
+        Expr::Literal(_) | Expr::Column(_) | Expr::Star => false,
+    }
+}
+
+/// The morsel plan for evaluating `e` over `rows`: the morsel ranges
+/// plus the narrow projection (schema + column indices) each morsel
+/// slices — only referenced columns are copied, so wide tables don't get
+/// duplicated for a predicate touching one column. `None` means evaluate
+/// whole-input: sequential context, too few rows, a batch-dependent
+/// vectorized UDF, or a column-free (constant-foldable) expression.
+/// Single source of truth for [`eval`], [`eval_pred`], and the
+/// `QueryStats` morsel counters. Names resolve against the *full*
+/// schema, so resolution (and its errors) match whole-input evaluation.
+#[allow(clippy::type_complexity)]
+fn morsel_plan(
+    e: &Expr,
+    rows: &RowSet,
+    ctx: &ExecContext,
+) -> Result<Option<(Vec<(usize, usize)>, Schema, Vec<usize>)>> {
+    if !ctx.vectorized {
+        return Ok(None);
+    }
+    let threads = parallel_threads(rows.num_rows(), ctx);
+    if threads <= 1 || has_vectorized_udf(e, &ctx.udfs) {
+        return Ok(None);
+    }
+    let mut names = Vec::new();
+    e.referenced_columns(&mut names);
+    if names.is_empty() {
+        return Ok(None);
+    }
+    let mut needed: Vec<usize> = names
+        .iter()
+        .map(|n| resolve_column(&rows.schema, n))
+        .collect::<Result<_>>()?;
+    needed.sort_unstable();
+    needed.dedup();
+    let fields = needed.iter().map(|&i| rows.schema.field(i).clone()).collect();
+    Ok(Some((morsel_ranges(rows.num_rows(), threads), Schema::new(fields), needed)))
+}
+
+/// One morsel's input: the needed columns sliced to `[off, off + len)`.
+fn narrow_morsel(
+    rows: &RowSet,
+    schema: &Schema,
+    needed: &[usize],
+    off: usize,
+    len: usize,
+) -> Result<RowSet> {
+    let cols: Vec<Column> = needed.iter().map(|&ci| rows.column(ci).slice(off, len)).collect();
+    RowSet::new(schema.clone(), cols)
+}
+
+/// Evaluate an expression through the path selected by `ctx.vectorized`,
+/// splitting large inputs into morsels evaluated on worker threads. The
+/// per-morsel columns concatenate in row order, so the result (values
+/// and validity representation) is identical to whole-input evaluation.
 fn eval(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Column> {
-    if ctx.vectorized {
-        eval_expr(e, rows, &ctx.udfs)
-    } else {
-        eval_expr_rowwise(e, rows, &ctx.udfs)
+    if !ctx.vectorized {
+        return eval_expr_rowwise(e, rows, &ctx.udfs);
+    }
+    let (ranges, schema, needed) = match morsel_plan(e, rows, ctx)? {
+        Some(plan) => plan,
+        None => return eval_expr(e, rows, &ctx.udfs),
+    };
+    let parts = par_morsels(&ranges, |_, off, len| {
+        let morsel = narrow_morsel(rows, &schema, &needed, off, len)?;
+        eval_expr(e, &morsel, &ctx.udfs)
+    })?;
+    let mut iter = parts.into_iter();
+    let mut out = iter.next().expect("at least one morsel");
+    for part in iter {
+        out.append(&part)?;
+    }
+    Ok(out)
+}
+
+/// Evaluate a predicate mask through the path selected by
+/// `ctx.vectorized`, morsel-parallel like [`eval`].
+fn eval_pred(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Vec<bool>> {
+    if !ctx.vectorized {
+        return eval_predicate_rowwise(e, rows, &ctx.udfs);
+    }
+    let (ranges, schema, needed) = match morsel_plan(e, rows, ctx)? {
+        Some(plan) => plan,
+        None => return eval_predicate(e, rows, &ctx.udfs),
+    };
+    let parts = par_morsels(&ranges, |_, off, len| {
+        let morsel = narrow_morsel(rows, &schema, &needed, off, len)?;
+        eval_predicate(e, &morsel, &ctx.udfs)
+    })?;
+    let mut mask = Vec::with_capacity(rows.num_rows());
+    for part in parts {
+        mask.extend_from_slice(&part);
+    }
+    Ok(mask)
+}
+
+/// Morsel count [`eval`]/[`eval_pred`] will actually use for `e` over
+/// `rows` — 1 whenever [`morsel_plan`] forces whole-input evaluation.
+/// Keeps the `QueryStats` morsel columns honest.
+fn eval_threads(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> u64 {
+    match morsel_plan(e, rows, ctx) {
+        Ok(Some((ranges, _, _))) => ranges.len() as u64,
+        _ => 1,
     }
 }
 
-/// Evaluate a predicate mask through the path selected by `ctx.vectorized`.
-fn eval_pred(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Vec<bool>> {
-    if ctx.vectorized {
-        eval_predicate(e, rows, &ctx.udfs)
-    } else {
-        eval_predicate_rowwise(e, rows, &ctx.udfs)
-    }
+/// Worst-case (max) morsel count across a projection's expressions; the
+/// pass-through markers (`*`, `__drop_hidden`) copy columns without
+/// evaluation and count as 1.
+fn project_threads(exprs: &[(Expr, String)], rows: &RowSet, ctx: &ExecContext) -> u64 {
+    exprs
+        .iter()
+        .map(|(e, _)| match e {
+            Expr::Star => 1,
+            Expr::Func { name, .. } if name == "__drop_hidden" => 1,
+            _ => eval_threads(e, rows, ctx),
+        })
+        .max()
+        .unwrap_or(1)
 }
 
 /// Rows processed and wall time spent in one operator class.
@@ -97,15 +335,24 @@ pub struct OpStats {
     pub rows_in: u64,
     /// Total output rows across invocations.
     pub rows_out: u64,
+    /// Morsels across invocations — the worker-thread count of each
+    /// invocation's widest parallel stage (for a projection: the max
+    /// across its expressions). The static scheduler hands each worker
+    /// one contiguous morsel; a sequential invocation contributes 1.
+    pub morsels: u64,
+    /// Largest worker-thread count any single invocation used.
+    pub max_threads: u64,
     /// Total wall time in nanoseconds.
     pub nanos: u64,
 }
 
 impl OpStats {
-    fn record(&mut self, rows_in: u64, rows_out: u64, started: Instant) {
+    fn record(&mut self, rows_in: u64, rows_out: u64, morsels: u64, started: Instant) {
         self.invocations += 1;
         self.rows_in += rows_in;
         self.rows_out += rows_out;
+        self.morsels += morsels;
+        self.max_threads = self.max_threads.max(morsels);
         self.nanos += started.elapsed().as_nanos() as u64;
     }
 }
@@ -149,19 +396,21 @@ impl QueryStats {
     /// Aligned per-operator report (`snowparkd run-sql --stats` prints it).
     pub fn report(&self) -> String {
         let mut out = format!(
-            "{:<10} {:>6} {:>12} {:>12} {:>12}\n",
-            "operator", "calls", "rows_in", "rows_out", "time"
+            "{:<10} {:>6} {:>12} {:>12} {:>8} {:>8} {:>12}\n",
+            "operator", "calls", "rows_in", "rows_out", "morsels", "threads", "time"
         );
         for (name, op) in self.operators() {
             if op.invocations == 0 {
                 continue;
             }
             out.push_str(&format!(
-                "{:<10} {:>6} {:>12} {:>12} {:>9.3}ms\n",
+                "{:<10} {:>6} {:>12} {:>12} {:>8} {:>8} {:>9.3}ms\n",
                 name,
                 op.invocations,
                 op.rows_in,
                 op.rows_out,
+                op.morsels,
+                op.max_threads,
                 op.nanos as f64 / 1e6
             ));
         }
@@ -189,7 +438,7 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
             let rs = ctx.catalog.get(table)?;
             let n = rs.num_rows() as u64;
             stats.rows_scanned += n;
-            stats.scan.record(n, n, t0);
+            stats.scan.record(n, n, 1, t0);
             Ok(rs)
         }
         Plan::TableFunc { name, args, alias: _ } => {
@@ -217,45 +466,57 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
                     .or_else(|_| ctx.udfs.call_udtf(name, &arg_vals))?
             };
             let n = rs.num_rows() as u64;
-            stats.scan.record(n, n, t0);
+            stats.scan.record(n, n, 1, t0);
             Ok(rs)
         }
         Plan::Filter { input, predicate } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
+            let morsels = eval_threads(predicate, &rows, ctx);
             let mask = eval_pred(predicate, &rows, ctx)?;
             let out = rows.filter(&mask);
             stats
                 .filter
-                .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+                .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
             Ok(out)
         }
         Plan::Project { input, exprs } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
+            let morsels = project_threads(exprs, &rows, ctx);
             let out = project(&rows, exprs, ctx)?;
             stats
                 .project
-                .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+                .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
             Ok(out)
         }
         Plan::Aggregate { input, group, aggs } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
+            let morsels = parallel_threads(rows.num_rows(), ctx) as u64;
             let out = aggregate(&rows, group, aggs, ctx)?;
             stats
                 .aggregate
-                .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+                .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
             Ok(out)
         }
         Plan::Join { left, right, kind, equi, residual } => {
             let l = exec(left, ctx, stats)?;
             let r = exec(right, ctx, stats)?;
             let t0 = Instant::now();
+            // Probe-side morsels; the build side partitions separately.
+            // A cross join (no equi keys) runs its nested loop
+            // sequentially, so it reports 1.
+            let morsels = if equi.is_empty() {
+                1
+            } else {
+                parallel_threads(l.num_rows(), ctx) as u64
+            };
             let out = join(&l, &r, *kind, equi, residual.as_ref(), ctx, plan)?;
             stats.join.record(
                 (l.num_rows() + r.num_rows()) as u64,
                 out.num_rows() as u64,
+                morsels,
                 t0,
             );
             Ok(out)
@@ -263,10 +524,11 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
         Plan::Sort { input, keys } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
+            let morsels = parallel_threads(rows.num_rows(), ctx) as u64;
             let out = sort(&rows, keys, ctx, None)?;
             stats
                 .sort
-                .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+                .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
             Ok(out)
         }
         Plan::Limit { input, n } => {
@@ -278,10 +540,14 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
                 Plan::Sort { input: sort_input, keys } => {
                     let rows = exec(sort_input, ctx, stats)?;
                     let t0 = Instant::now();
+                    // LIMIT 0 short-circuits to an empty result without
+                    // sorting runs.
+                    let morsels =
+                        if *n == 0 { 1 } else { parallel_threads(rows.num_rows(), ctx) as u64 };
                     let out = sort(&rows, keys, ctx, Some(*n))?;
                     stats
                         .sort
-                        .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+                        .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
                     Ok(out)
                 }
                 Plan::Project { input: proj_input, exprs }
@@ -290,15 +556,18 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
                     if let Plan::Sort { input: sort_input, keys } = proj_input.as_ref() {
                         let rows = exec(sort_input, ctx, stats)?;
                         let t0 = Instant::now();
+                        let morsels =
+                            if *n == 0 { 1 } else { parallel_threads(rows.num_rows(), ctx) as u64 };
                         let sorted = sort(&rows, keys, ctx, Some(*n))?;
                         stats
                             .sort
-                            .record(rows.num_rows() as u64, sorted.num_rows() as u64, t0);
+                            .record(rows.num_rows() as u64, sorted.num_rows() as u64, morsels, t0);
                         let t0 = Instant::now();
+                        let morsels = project_threads(exprs, &sorted, ctx);
                         let out = project(&sorted, exprs, ctx)?;
                         stats
                             .project
-                            .record(sorted.num_rows() as u64, out.num_rows() as u64, t0);
+                            .record(sorted.num_rows() as u64, out.num_rows() as u64, morsels, t0);
                         Ok(out)
                     } else {
                         unreachable!("guarded by matches! above")
@@ -310,7 +579,7 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
                     let out = rows.slice(0, (*n).min(rows.num_rows()));
                     stats
                         .limit
-                        .record(rows.num_rows() as u64, out.num_rows() as u64, t0);
+                        .record(rows.num_rows() as u64, out.num_rows() as u64, 1, t0);
                     Ok(out)
                 }
             }
@@ -506,10 +775,14 @@ fn aggregate(
                 .collect::<Result<Vec<_>>>()
         })
         .collect::<Result<_>>()?;
-    if ctx.vectorized {
+    if !ctx.vectorized {
+        return aggregate_rowwise(rows, group, aggs, &key_cols, &arg_cols, ctx);
+    }
+    let threads = parallel_threads(rows.num_rows(), ctx);
+    if threads <= 1 {
         aggregate_vectorized(rows, group, aggs, &key_cols, &arg_cols, ctx)
     } else {
-        aggregate_rowwise(rows, group, aggs, &key_cols, &arg_cols, ctx)
+        aggregate_parallel(rows, group, aggs, &key_cols, &arg_cols, ctx, threads)
     }
 }
 
@@ -817,6 +1090,502 @@ fn udaf_by_group(
     Column::from_values(dt, &vals)
 }
 
+// ---------------------------------------------------- parallel aggregation
+
+/// Is row `r` strictly better than the current best row `b` for MIN (or
+/// MAX) on `col`? Mirrors the typed comparators in `min_max_by_group` —
+/// including NaN comparing as unknown — and is strict, so earlier rows
+/// win ties exactly like the sequential scan.
+fn min_max_better(col: &Column, r: usize, b: usize, is_min: bool) -> bool {
+    match col {
+        Column::Int64 { data, .. } => {
+            if is_min {
+                data[r] < data[b]
+            } else {
+                data[r] > data[b]
+            }
+        }
+        Column::Float64 { data, .. } => {
+            let ord = data[r].partial_cmp(&data[b]);
+            if is_min {
+                ord == Some(Ordering::Less)
+            } else {
+                ord == Some(Ordering::Greater)
+            }
+        }
+        Column::Utf8 { data, .. } => {
+            if is_min {
+                data[r] < data[b]
+            } else {
+                data[r] > data[b]
+            }
+        }
+        Column::Bool { data, .. } => {
+            if is_min {
+                !data[r] & data[b]
+            } else {
+                data[r] & !data[b]
+            }
+        }
+    }
+}
+
+/// A mergeable per-group partial state for one aggregate call, built by
+/// one morsel worker and folded into the global state by the merge pass.
+/// The variant is chosen from the aggregate function and its argument
+/// column type, so every morsel of one call produces the same variant.
+enum PartialAgg {
+    /// COUNT(*) per group.
+    CountStar(Vec<i64>),
+    /// COUNT(expr) per group (non-NULL cells).
+    Count(Vec<i64>),
+    /// SUM over Int64: exact i64 accumulation with per-group
+    /// overflow-checked widening (mirrors `sum_by_group`). Known caveat:
+    /// the sequential scan's widening is sticky on its running prefix, so
+    /// a sum that *transiently* overflows i64 mid-scan but lands back in
+    /// range comes out Float64 sequentially while exact per-morsel
+    /// partials may merge without ever overflowing and stay Int64 (a
+    /// more precise answer, but a dtype divergence at the i64 boundary).
+    IntSum { isums: Vec<i64>, fsums: Vec<f64>, overflowed: Vec<bool>, any: Vec<bool> },
+    /// SUM over Float64.
+    FloatSum { sums: Vec<f64>, any: Vec<bool> },
+    /// SUM/AVG over a non-numeric column: any non-NULL cell errors at
+    /// build time (mirroring `non_numeric_agg`); all-NULL input finishes
+    /// as an all-NULL Float64 column.
+    NullAgg,
+    /// AVG over a numeric column.
+    Avg { sums: Vec<f64>, counts: Vec<i64> },
+    /// MIN/MAX: best *global* row index per group (`-1` = none yet).
+    MinMax { best: Vec<i64>, is_min: bool },
+    /// UDAF accumulator states per group, folded via [`UdafState::merge`].
+    Udaf(Vec<Box<dyn UdafState>>),
+}
+
+impl PartialAgg {
+    /// Zeroed partial state for `call` over `n_groups` groups.
+    fn empty(
+        call: &AggCall,
+        args: &[Column],
+        n_groups: usize,
+        ctx: &ExecContext,
+    ) -> Result<PartialAgg> {
+        Ok(match call.func {
+            AggFunc::CountStar => PartialAgg::CountStar(vec![0; n_groups]),
+            AggFunc::Count => PartialAgg::Count(vec![0; n_groups]),
+            AggFunc::Sum => match &args[0] {
+                Column::Int64 { .. } => PartialAgg::IntSum {
+                    isums: vec![0; n_groups],
+                    fsums: vec![0.0; n_groups],
+                    overflowed: vec![false; n_groups],
+                    any: vec![false; n_groups],
+                },
+                Column::Float64 { .. } => {
+                    PartialAgg::FloatSum { sums: vec![0.0; n_groups], any: vec![false; n_groups] }
+                }
+                _ => PartialAgg::NullAgg,
+            },
+            AggFunc::Avg => match &args[0] {
+                Column::Int64 { .. } | Column::Float64 { .. } => {
+                    PartialAgg::Avg { sums: vec![0.0; n_groups], counts: vec![0; n_groups] }
+                }
+                _ => PartialAgg::NullAgg,
+            },
+            AggFunc::Min => PartialAgg::MinMax { best: vec![-1; n_groups], is_min: true },
+            AggFunc::Max => PartialAgg::MinMax { best: vec![-1; n_groups], is_min: false },
+            AggFunc::Udaf => {
+                let udaf = ctx
+                    .udfs
+                    .udaf(&call.name)
+                    .ok_or_else(|| anyhow!("no UDAF {:?}", call.name))?;
+                PartialAgg::Udaf((0..n_groups).map(|_| (udaf.factory)()).collect())
+            }
+        })
+    }
+
+    /// Accumulate rows `offset..offset + gids.len()` (whose per-row local
+    /// group ids are `gids`) into this partial state, in row order.
+    fn update(
+        &mut self,
+        call: &AggCall,
+        args: &[Column],
+        offset: usize,
+        gids: &[u32],
+    ) -> Result<()> {
+        match self {
+            PartialAgg::CountStar(counts) => {
+                for &g in gids {
+                    counts[g as usize] += 1;
+                }
+            }
+            PartialAgg::Count(counts) => match args[0].validity() {
+                None => {
+                    for &g in gids {
+                        counts[g as usize] += 1;
+                    }
+                }
+                Some(valid) => {
+                    for (k, &g) in gids.iter().enumerate() {
+                        if valid[offset + k] {
+                            counts[g as usize] += 1;
+                        }
+                    }
+                }
+            },
+            PartialAgg::IntSum { isums, fsums, overflowed, any } => {
+                let (data, valid) = match &args[0] {
+                    Column::Int64 { data, valid } => (data, valid.as_deref()),
+                    other => bail!("SUM partial over {:?}", other.data_type()),
+                };
+                for (k, &g) in gids.iter().enumerate() {
+                    let r = offset + k;
+                    if valid.map_or(true, |v| v[r]) {
+                        let g = g as usize;
+                        any[g] = true;
+                        if overflowed[g] {
+                            fsums[g] += data[r] as f64;
+                        } else {
+                            match isums[g].checked_add(data[r]) {
+                                Some(s) => isums[g] = s,
+                                None => {
+                                    overflowed[g] = true;
+                                    fsums[g] = isums[g] as f64 + data[r] as f64;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            PartialAgg::FloatSum { sums, any } => {
+                let (data, valid) = match &args[0] {
+                    Column::Float64 { data, valid } => (data, valid.as_deref()),
+                    other => bail!("SUM partial over {:?}", other.data_type()),
+                };
+                for (k, &g) in gids.iter().enumerate() {
+                    let r = offset + k;
+                    if valid.map_or(true, |v| v[r]) {
+                        sums[g as usize] += data[r];
+                        any[g as usize] = true;
+                    }
+                }
+            }
+            PartialAgg::NullAgg => {
+                let what = if matches!(call.func, AggFunc::Sum) { "SUM" } else { "AVG" };
+                let col = &args[0];
+                for k in 0..gids.len() {
+                    let r = offset + k;
+                    if col.is_valid(r) {
+                        bail!("{what} over non-numeric {}", col.value(r));
+                    }
+                }
+            }
+            PartialAgg::Avg { sums, counts } => match &args[0] {
+                Column::Int64 { data, valid } => {
+                    let valid = valid.as_deref();
+                    for (k, &g) in gids.iter().enumerate() {
+                        let r = offset + k;
+                        if valid.map_or(true, |v| v[r]) {
+                            sums[g as usize] += data[r] as f64;
+                            counts[g as usize] += 1;
+                        }
+                    }
+                }
+                Column::Float64 { data, valid } => {
+                    let valid = valid.as_deref();
+                    for (k, &g) in gids.iter().enumerate() {
+                        let r = offset + k;
+                        if valid.map_or(true, |v| v[r]) {
+                            sums[g as usize] += data[r];
+                            counts[g as usize] += 1;
+                        }
+                    }
+                }
+                other => bail!("AVG partial over {:?}", other.data_type()),
+            },
+            PartialAgg::MinMax { best, is_min } => {
+                let col = &args[0];
+                let is_min = *is_min;
+                for (k, &g) in gids.iter().enumerate() {
+                    let r = offset + k;
+                    if col.is_valid(r) {
+                        let b = &mut best[g as usize];
+                        if *b < 0 || min_max_better(col, r, *b as usize, is_min) {
+                            *b = r as i64;
+                        }
+                    }
+                }
+            }
+            PartialAgg::Udaf(states) => {
+                let mut argv: Vec<Value> = Vec::with_capacity(args.len());
+                for (k, &g) in gids.iter().enumerate() {
+                    let r = offset + k;
+                    argv.clear();
+                    for c in args {
+                        argv.push(c.value(r));
+                    }
+                    states[g as usize].update(&argv)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold `other` (a later morsel's partial over its local groups) into
+    /// this global partial; local group `l` maps to global `map[l]`.
+    /// Morsels merge in row-range order, so MIN/MAX ties keep the
+    /// earliest row and UDAF states merge in scan order — exactly like
+    /// the sequential pass. (Known caveat, mirroring the sequential
+    /// scan's own quirk: a Float NaN compares as unknown and so "absorbs"
+    /// every later candidate in its run; when a NaN leads a morsel, the
+    /// absorbed span differs from the sequential scan's, so MIN/MAX over
+    /// NaN-bearing floats can pick a different — equally NaN-shadowed —
+    /// row.)
+    fn merge(&mut self, other: PartialAgg, map: &[u32], args: &[Column]) -> Result<()> {
+        match (self, other) {
+            (PartialAgg::CountStar(g), PartialAgg::CountStar(l))
+            | (PartialAgg::Count(g), PartialAgg::Count(l)) => {
+                for (lg, c) in l.into_iter().enumerate() {
+                    g[map[lg] as usize] += c;
+                }
+            }
+            (
+                PartialAgg::IntSum { isums, fsums, overflowed, any },
+                PartialAgg::IntSum { isums: li, fsums: lf, overflowed: lo, any: la },
+            ) => {
+                for lg in 0..map.len() {
+                    if !la[lg] {
+                        continue;
+                    }
+                    let g = map[lg] as usize;
+                    any[g] = true;
+                    if overflowed[g] || lo[lg] {
+                        let a = if overflowed[g] { fsums[g] } else { isums[g] as f64 };
+                        let b = if lo[lg] { lf[lg] } else { li[lg] as f64 };
+                        overflowed[g] = true;
+                        fsums[g] = a + b;
+                    } else {
+                        match isums[g].checked_add(li[lg]) {
+                            Some(s) => isums[g] = s,
+                            None => {
+                                overflowed[g] = true;
+                                fsums[g] = isums[g] as f64 + li[lg] as f64;
+                            }
+                        }
+                    }
+                }
+            }
+            (PartialAgg::FloatSum { sums, any }, PartialAgg::FloatSum { sums: ls, any: la }) => {
+                for lg in 0..map.len() {
+                    if !la[lg] {
+                        continue;
+                    }
+                    let g = map[lg] as usize;
+                    sums[g] += ls[lg];
+                    any[g] = true;
+                }
+            }
+            (PartialAgg::NullAgg, PartialAgg::NullAgg) => {}
+            (
+                PartialAgg::Avg { sums, counts },
+                PartialAgg::Avg { sums: ls, counts: lc },
+            ) => {
+                for lg in 0..map.len() {
+                    if lc[lg] == 0 {
+                        continue;
+                    }
+                    let g = map[lg] as usize;
+                    sums[g] += ls[lg];
+                    counts[g] += lc[lg];
+                }
+            }
+            (PartialAgg::MinMax { best, is_min }, PartialAgg::MinMax { best: lb, .. }) => {
+                let col = &args[0];
+                for lg in 0..map.len() {
+                    if lb[lg] < 0 {
+                        continue;
+                    }
+                    let g = map[lg] as usize;
+                    if best[g] < 0
+                        || min_max_better(col, lb[lg] as usize, best[g] as usize, *is_min)
+                    {
+                        best[g] = lb[lg];
+                    }
+                }
+            }
+            (PartialAgg::Udaf(states), PartialAgg::Udaf(ls)) => {
+                for (lg, s) in ls.into_iter().enumerate() {
+                    states[map[lg] as usize].merge(s)?;
+                }
+            }
+            _ => bail!("mismatched aggregate partial variants"),
+        }
+        Ok(())
+    }
+
+    /// Finish the merged partial into the output column, with the same
+    /// type and validity derivation as the sequential grouped kernels.
+    fn finish(
+        self,
+        call: &AggCall,
+        args: &[Column],
+        n_groups: usize,
+        ctx: &ExecContext,
+    ) -> Result<Column> {
+        Ok(match self {
+            PartialAgg::CountStar(counts) | PartialAgg::Count(counts) => {
+                Column::from_i64(counts)
+            }
+            PartialAgg::IntSum { isums, fsums, overflowed, any } => {
+                if !any.iter().any(|&a| a) {
+                    null_f64_column(n_groups)
+                } else if !overflowed.iter().any(|&o| o) {
+                    Column::Int64 { data: isums, valid: mask_from_any(&any) }
+                } else {
+                    let data: Vec<f64> = (0..n_groups)
+                        .map(|g| if overflowed[g] { fsums[g] } else { isums[g] as f64 })
+                        .collect();
+                    Column::Float64 { data, valid: mask_from_any(&any) }
+                }
+            }
+            PartialAgg::FloatSum { sums, any } => {
+                if !any.iter().any(|&a| a) {
+                    null_f64_column(n_groups)
+                } else {
+                    Column::Float64 { data: sums, valid: mask_from_any(&any) }
+                }
+            }
+            PartialAgg::NullAgg => null_f64_column(n_groups),
+            PartialAgg::Avg { sums, counts } => {
+                let data: Vec<f64> = sums
+                    .iter()
+                    .zip(&counts)
+                    .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+                    .collect();
+                let any: Vec<bool> = counts.iter().map(|&c| c > 0).collect();
+                Column::Float64 { data, valid: mask_from_any(&any) }
+            }
+            PartialAgg::MinMax { best, .. } => {
+                if best.iter().all(|&b| b < 0) {
+                    null_f64_column(n_groups)
+                } else {
+                    args[0].gather_opt(&best)
+                }
+            }
+            PartialAgg::Udaf(states) => {
+                let udaf = ctx
+                    .udfs
+                    .udaf(&call.name)
+                    .ok_or_else(|| anyhow!("no UDAF {:?}", call.name))?;
+                let mut vals = Vec::with_capacity(n_groups);
+                for s in &states {
+                    vals.push(s.finish()?);
+                }
+                let mut dt = udaf.return_type;
+                if dt == DataType::Int64 && vals.iter().any(|v| matches!(v, Value::Float(_))) {
+                    dt = DataType::Float64;
+                }
+                Column::from_values(dt, &vals)?
+            }
+        })
+    }
+}
+
+/// Morsel-parallel aggregation: every worker builds a thread-local
+/// key-codec table (dense local group ids in first-seen order) plus
+/// mergeable per-group partials for its contiguous row range; the merge
+/// pass then re-keys local representatives into global dense ids — the
+/// morsel-order walk reproduces the sequential first-seen group order —
+/// and folds the partials (UDAF states fold through
+/// [`UdafState::merge`]). Output matches `aggregate_vectorized` exactly,
+/// up to float-summation re-association across morsel boundaries.
+fn aggregate_parallel(
+    rows: &RowSet,
+    group: &[(Expr, String)],
+    aggs: &[AggCall],
+    key_cols: &[Column],
+    arg_cols: &[Vec<Column>],
+    ctx: &ExecContext,
+    threads: usize,
+) -> Result<RowSet> {
+    struct MorselAgg {
+        /// Global row index of each local group's first row.
+        rep_rows: Vec<usize>,
+        /// One partial per aggregate call.
+        partials: Vec<PartialAgg>,
+    }
+    let n = rows.num_rows();
+    let ranges = morsel_ranges(n, threads);
+    let morsels: Vec<MorselAgg> = par_morsels(&ranges, |_, off, len| {
+        let (gids, rep_rows, n_local) = if group.is_empty() {
+            // Global aggregation: one group per (non-empty) morsel.
+            (vec![0u32; len], Vec::new(), 1)
+        } else {
+            let mut dict = KeyDict::new();
+            let keys = EncodedKeys::encode_range(key_cols, off, len, KeyMode::Group, &mut dict);
+            let g = assign_group_ids(&keys);
+            let n_local = g.n_groups();
+            (g.ids, g.rep_rows.iter().map(|&r| r + off).collect(), n_local)
+        };
+        let partials = aggs
+            .iter()
+            .zip(arg_cols)
+            .map(|(call, cols)| {
+                let mut p = PartialAgg::empty(call, cols, n_local, ctx)?;
+                p.update(call, cols, off, &gids)?;
+                Ok(p)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MorselAgg { rep_rows, partials })
+    })?;
+
+    // Merge pass: assign global dense group ids over the morsels' local
+    // representatives, walked in morsel order — which is exactly the
+    // sequential first-seen order, because earlier morsels cover earlier
+    // rows and a key's first morsel holds its first row.
+    let (n_groups, group_maps, global_reps) = if group.is_empty() {
+        (1usize, vec![vec![0u32]; morsels.len()], Vec::new())
+    } else {
+        let all_reps: Vec<usize> =
+            morsels.iter().flat_map(|m| m.rep_rows.iter().copied()).collect();
+        let rep_cols: Vec<Column> = key_cols.iter().map(|c| c.take(&all_reps)).collect();
+        let mut dict = KeyDict::new();
+        let keys = EncodedKeys::encode(&rep_cols, KeyMode::Group, &mut dict);
+        let merged = assign_group_ids(&keys);
+        let mut maps = Vec::with_capacity(morsels.len());
+        let mut at = 0;
+        for m in &morsels {
+            maps.push(merged.ids[at..at + m.rep_rows.len()].to_vec());
+            at += m.rep_rows.len();
+        }
+        let reps: Vec<usize> = merged.rep_rows.iter().map(|&p| all_reps[p]).collect();
+        (merged.n_groups(), maps, reps)
+    };
+
+    let mut merged_partials: Vec<PartialAgg> = aggs
+        .iter()
+        .zip(arg_cols)
+        .map(|(call, cols)| PartialAgg::empty(call, cols, n_groups, ctx))
+        .collect::<Result<_>>()?;
+    for (m, map) in morsels.into_iter().zip(&group_maps) {
+        for ((global, local), cols) in merged_partials.iter_mut().zip(m.partials).zip(arg_cols) {
+            global.merge(local, map, cols)?;
+        }
+    }
+
+    let mut fields = Vec::with_capacity(group.len() + aggs.len());
+    let mut columns = Vec::with_capacity(group.len() + aggs.len());
+    for ((_, name), col) in group.iter().zip(key_cols) {
+        let out = col.take(&global_reps);
+        fields.push(Field::new(name.clone(), out.data_type()));
+        columns.push(out);
+    }
+    for ((call, cols), partial) in aggs.iter().zip(arg_cols).zip(merged_partials) {
+        let out = partial.finish(call, cols, n_groups, ctx)?;
+        fields.push(Field::new(call.out_name.clone(), out.data_type()));
+        columns.push(out);
+    }
+    RowSet::new(Schema::new(fields), columns)
+}
+
 /// Legacy row-at-a-time aggregation (kept for differential tests and the
 /// codec on/off ablation).
 fn aggregate_rowwise(
@@ -1042,24 +1811,75 @@ fn join(
             // One shared dict so equal strings on both sides intern to
             // equal ids; one hash per row, zero key clones.
             let mut dict = KeyDict::new();
-            let table =
-                JoinTable::build(EncodedKeys::encode(&rkey_cols, KeyMode::Join, &mut dict));
-            let probe = EncodedKeys::encode(&lkey_cols, KeyMode::Join, &mut dict);
-            for i in 0..l.num_rows() {
+            let build_keys = EncodedKeys::encode(&rkey_cols, KeyMode::Join, &mut dict);
+            let probe_keys = EncodedKeys::encode(&lkey_cols, KeyMode::Join, &mut dict);
+            // Build the shared table, hash-partitioned across workers
+            // when the build side is large: one O(n) pass routes each
+            // non-NULL build row to its partition, then the sub-tables
+            // build concurrently from their (ascending) row lists. Equal
+            // keys share a hash, so every partition owns all rows of its
+            // keys and the combined table behaves exactly like a
+            // single-table build.
+            let n_parts = parallel_threads(r.num_rows(), ctx);
+            let parts: Vec<JoinTable> = if n_parts > 1 {
+                let mut part_rows: Vec<Vec<u32>> = vec![Vec::new(); n_parts];
+                for row in 0..build_keys.len() {
+                    if !build_keys.has_null(row) {
+                        part_rows[super::hash::join_partition(build_keys.hash(row), n_parts)]
+                            .push(row as u32);
+                    }
+                }
+                let bk = &build_keys;
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = part_rows
+                        .into_iter()
+                        .map(|rows| s.spawn(move || JoinTable::build_from_rows(bk, rows)))
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+                        .collect()
+                })
+            } else {
+                vec![JoinTable::build(&build_keys)]
+            };
+            let table = PartitionedJoinTable::from_parts(parts);
+            // Probe in row order; per-row match enumeration is what the
+            // sequential loop does, so per-morsel output segments
+            // concatenate to the identical (l_idx, r_idx) sequence.
+            let probe_row = |i: usize, li: &mut Vec<i64>, ri: &mut Vec<i64>| {
                 let mut matched = false;
-                if !probe.has_null(i) {
+                if !probe_keys.has_null(i) {
                     // SQL join: NULL keys never match.
-                    let mut m = table.first_match(probe.key(i), probe.hash(i));
-                    while let Some(j) = m {
-                        l_idx.push(i as i64);
-                        r_idx.push(j as i64);
+                    for j in table.matches(probe_keys.key(i), probe_keys.hash(i)) {
+                        li.push(i as i64);
+                        ri.push(j as i64);
                         matched = true;
-                        m = table.next_match(j);
                     }
                 }
                 if !matched && kind == JoinKind::Left {
-                    l_idx.push(i as i64);
-                    r_idx.push(-1);
+                    li.push(i as i64);
+                    ri.push(-1);
+                }
+            };
+            let probe_threads = parallel_threads(l.num_rows(), ctx);
+            if probe_threads > 1 {
+                let ranges = morsel_ranges(l.num_rows(), probe_threads);
+                let segments = par_morsels(&ranges, |_, off, len| {
+                    let mut li = Vec::new();
+                    let mut ri = Vec::new();
+                    for i in off..off + len {
+                        probe_row(i, &mut li, &mut ri);
+                    }
+                    Ok((li, ri))
+                })?;
+                for (li, ri) in segments {
+                    l_idx.extend_from_slice(&li);
+                    r_idx.extend_from_slice(&ri);
+                }
+            } else {
+                for i in 0..l.num_rows() {
+                    probe_row(i, &mut l_idx, &mut r_idx);
                 }
             }
         } else {
@@ -1128,7 +1948,7 @@ fn join(
     };
 
     // Materialize the combined rowset through typed gathers.
-    materialize_join(l, r, &out_schema, &l_idx, &r_idx)
+    materialize_join(l, r, &out_schema, &l_idx, &r_idx, ctx)
 }
 
 /// Evaluate a residual join predicate over the gather vectors without
@@ -1181,7 +2001,28 @@ fn materialize_join(
     schema: &Schema,
     l_idx: &[i64],
     r_idx: &[i64],
+    ctx: &ExecContext,
 ) -> Result<RowSet> {
+    let ln = l.num_columns();
+    let n_cols = ln + r.num_columns();
+    let threads = parallel_threads(l_idx.len(), ctx).min(n_cols);
+    if threads > 1 && n_cols > 1 {
+        // Wide outputs gather concurrently: columns chunk across at most
+        // `ctx.parallelism` workers; each per-column gather is unchanged,
+        // so the rowset is identical.
+        let gather_col = |ci: usize| {
+            if ci < ln {
+                l.column(ci).gather_opt(l_idx)
+            } else {
+                r.column(ci - ln).gather_opt(r_idx)
+            }
+        };
+        let chunks = par_morsels(&morsel_ranges(n_cols, threads), |_, off, len| {
+            Ok((off..off + len).map(|ci| gather_col(ci)).collect::<Vec<Column>>())
+        })?;
+        let columns: Vec<Column> = chunks.into_iter().flatten().collect();
+        return RowSet::new(schema.clone(), columns);
+    }
     let left = l.gather(l_idx, false);
     let right = r.gather(r_idx, true); // -1 = NULL row (unmatched left rows)
     let mut columns = left.columns;
@@ -1284,10 +2125,48 @@ fn apply_order<F: FnMut(&usize, &usize) -> Ordering>(
     }
 }
 
+/// Merge per-morsel sorted runs under the strict total order `cmp`,
+/// optionally stopping after `limit` outputs. Because the order is total
+/// (index tiebreak — no two rows compare equal), the merged sequence is
+/// the unique globally sorted order, and per-run top-k truncation cannot
+/// drop a global top-k row.
+fn kway_merge<F: Fn(usize, usize) -> Ordering>(
+    runs: Vec<Vec<usize>>,
+    limit: Option<usize>,
+    cmp: F,
+) -> Vec<usize> {
+    let total: usize = runs.iter().map(Vec::len).sum();
+    let want = limit.map_or(total, |k| k.min(total));
+    let mut pos = vec![0usize; runs.len()];
+    let mut out = Vec::with_capacity(want);
+    while out.len() < want {
+        // Linear scan over run heads: the run count is the worker-thread
+        // count, so a heap would not pay for itself.
+        let mut best: Option<usize> = None;
+        for (ri, run) in runs.iter().enumerate() {
+            if pos[ri] >= run.len() {
+                continue;
+            }
+            best = match best {
+                Some(b) if cmp(run[pos[ri]], runs[b][pos[b]]) != Ordering::Less => Some(b),
+                _ => Some(ri),
+            };
+        }
+        let b = best.expect("runs exhausted before limit");
+        out.push(runs[b][pos[b]]);
+        pos[b] += 1;
+    }
+    out
+}
+
 /// Sort (optionally top-k when `limit` is set). Sort keys are decorated
 /// once — typed slices + validity — instead of materializing two `Value`s
 /// per comparison. The comparator is a strict total order (index
-/// tiebreak), so top-k output is identical to sort-then-limit.
+/// tiebreak), so top-k output is identical to sort-then-limit. Large
+/// inputs sort as per-morsel runs on worker threads (each run top-k
+/// truncated when a limit is set) followed by a k-way merge; the total
+/// order makes the result identical to the sequential sort at any thread
+/// count.
 fn sort(
     rows: &RowSet,
     keys: &[OrderKey],
@@ -1298,18 +2177,33 @@ fn sort(
         .iter()
         .map(|k| eval(&k.expr, rows, ctx))
         .collect::<Result<_>>()?;
-    let mut idx: Vec<usize> = (0..rows.num_rows()).collect();
+    let n = rows.num_rows();
     if ctx.vectorized {
         let dk = decorate(keys, &key_cols);
-        let mut cmp =
-            |a: &usize, b: &usize| cmp_decorated(&dk, *a, *b).then_with(|| a.cmp(b));
-        apply_order(&mut idx, limit, &mut cmp);
+        let cmp = |a: usize, b: usize| cmp_decorated(&dk, a, b).then_with(|| a.cmp(&b));
+        let threads = parallel_threads(n, ctx);
+        let idx = if threads > 1 && limit != Some(0) {
+            let runs = par_morsels(&morsel_ranges(n, threads), |_, off, len| {
+                let mut run: Vec<usize> = (off..off + len).collect();
+                let mut c = |a: &usize, b: &usize| cmp(*a, *b);
+                apply_order(&mut run, limit, &mut c);
+                Ok(run)
+            })?;
+            kway_merge(runs, limit, cmp)
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            let mut c = |a: &usize, b: &usize| cmp(*a, *b);
+            apply_order(&mut idx, limit, &mut c);
+            idx
+        };
+        Ok(rows.take(&idx))
     } else {
+        let mut idx: Vec<usize> = (0..n).collect();
         let mut cmp =
             |a: &usize, b: &usize| cmp_values(keys, &key_cols, *a, *b).then_with(|| a.cmp(b));
         apply_order(&mut idx, limit, &mut cmp);
+        Ok(rows.take(&idx))
     }
-    Ok(rows.take(&idx))
 }
 
 /// Convenience: parse, plan, and execute a SQL string.
@@ -1646,5 +2540,115 @@ mod tests {
         let g = rs.row(0)[0].as_f64().unwrap();
         let want = (10f64 * 20.0 * 30.0 * 40.0 * 50.0).powf(0.2);
         assert!((g - want).abs() < 1e-9, "{g} vs {want}");
+    }
+
+    #[test]
+    fn morsel_ranges_cover_input() {
+        for (n, t) in [(10usize, 3usize), (4096, 1), (100_000, 8), (5, 9)] {
+            let ranges = morsel_ranges(n, t);
+            assert_eq!(ranges.iter().map(|&(_, len)| len).sum::<usize>(), n);
+            let mut off = 0;
+            for &(o, len) in &ranges {
+                assert_eq!(o, off, "n={n} t={t}");
+                assert!(len > 0, "n={n} t={t}: empty morsel");
+                off += len;
+            }
+        }
+    }
+
+    /// A table big enough that parallelism 8 splits into several morsels
+    /// (40 000 / MORSEL_MIN_ROWS ≥ 8). Values are quarter-integers so
+    /// float sums are exact and parallel aggregation is byte-identical.
+    fn big_catalog() -> Arc<Catalog> {
+        let catalog = Arc::new(Catalog::new());
+        let n = 40_000usize;
+        let mut state = 0x9e37_79b9_7f4a_7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let keys: Vec<i64> = (0..n).map(|_| (next() % 300) as i64).collect();
+        let vals: Vec<f64> = (0..n).map(|_| (next() % 2000) as f64 / 4.0).collect();
+        let vmask: Vec<bool> = (0..n).map(|_| next() % 10 != 0).collect();
+        let tags: Vec<String> = keys.iter().map(|k| format!("t{:02}", k % 40)).collect();
+        let facts = RowSet::new(
+            Schema::new(vec![
+                Field::new("k", DataType::Int64),
+                Field::new("v", DataType::Float64),
+                Field::new("tag", DataType::Utf8),
+            ]),
+            vec![
+                Column::from_i64(keys),
+                Column::Float64 { data: vals, valid: Some(vmask) },
+                Column::from_strings(tags),
+            ],
+        )
+        .unwrap();
+        catalog.register("facts", facts);
+        let dim = RowSet::new(
+            Schema::new(vec![
+                Field::new("k", DataType::Int64),
+                Field::new("label", DataType::Utf8),
+            ]),
+            vec![
+                Column::from_i64((0..200i64).collect()),
+                Column::from_strings((0..200).map(|k| format!("label_{k}")).collect()),
+            ],
+        )
+        .unwrap();
+        catalog.register("dim", dim);
+        catalog
+    }
+
+    #[test]
+    fn parallel_operators_match_sequential() {
+        let catalog = big_catalog();
+        for q in [
+            "SELECT k, COUNT(*) AS n, COUNT(v) AS nv, SUM(v) AS s, AVG(v) AS a, \
+             MIN(v) AS lo, MAX(tag) AS hi FROM facts GROUP BY k",
+            "SELECT tag, SUM(k) AS s FROM facts WHERE v > 100.0 GROUP BY tag",
+            "SELECT COUNT(*) AS n, SUM(v) AS s FROM facts",
+            "SELECT facts.k, label FROM facts JOIN dim ON facts.k = dim.k AND v > 400.0",
+            "SELECT facts.k, label FROM facts LEFT JOIN dim ON facts.k = dim.k",
+            "SELECT k, v FROM facts ORDER BY v DESC, k",
+            "SELECT k, v FROM facts ORDER BY tag, v LIMIT 37",
+            "SELECT k + 1 AS k1, v * 2.0 AS v2 FROM facts WHERE k < 250",
+        ] {
+            let seq = run_sql(
+                q,
+                &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                    .with_parallelism(1),
+            )
+            .unwrap_or_else(|e| panic!("{q}: {e}"));
+            for p in [2usize, 8] {
+                let par = run_sql(
+                    q,
+                    &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                        .with_parallelism(p),
+                )
+                .unwrap_or_else(|e| panic!("{q} (parallelism {p}): {e}"));
+                assert_eq!(par, seq, "{q} at parallelism {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn query_stats_count_morsels() {
+        let catalog = big_catalog();
+        let seq = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+            .with_parallelism(1);
+        let (_, stats) =
+            run_sql_with_stats("SELECT k, COUNT(*) AS n FROM facts GROUP BY k", &seq).unwrap();
+        assert_eq!(stats.aggregate.morsels, 1);
+        assert_eq!(stats.aggregate.max_threads, 1);
+        let par = ExecContext::new(catalog, Arc::new(UdfRegistry::new())).with_parallelism(4);
+        let (_, stats) =
+            run_sql_with_stats("SELECT k, COUNT(*) AS n FROM facts GROUP BY k", &par).unwrap();
+        assert_eq!(stats.aggregate.max_threads, 4); // 40 000 rows / 4096 ≥ 4
+        assert_eq!(stats.aggregate.morsels, 4);
+        let report = stats.report();
+        assert!(report.contains("morsels"), "{report}");
     }
 }

@@ -47,7 +47,7 @@
 //! capacity, linear probing, ≤ 0.5 load factor, so no resizing):
 //! [`assign_group_ids`] maps every row to a dense `u32` group id in
 //! first-seen order, and [`JoinTable`] is a build-side multimap that the
-//! probe side walks via `first_match`/`next_match`. Each input row costs
+//! probe side walks via [`JoinTable::matches`]. Each input row costs
 //! exactly one hash and zero key clones.
 //!
 //! Normalization mirrors `engine::key::KeyValue`:
@@ -133,28 +133,45 @@ impl EncodedKeys {
     /// into `dict`.
     pub fn encode(cols: &[Column], mode: KeyMode, dict: &mut KeyDict) -> EncodedKeys {
         let n = cols.first().map_or(0, Column::len);
+        EncodedKeys::encode_range(cols, 0, n, mode, dict)
+    }
+
+    /// Encode the row range `[offset, offset + len)` of `cols` under
+    /// `mode`, interning strings into `dict`. Row `r` of the result is
+    /// source row `offset + r`; this is what lets morsel-parallel
+    /// operators encode their row range without slicing (copying) the
+    /// key columns first.
+    pub fn encode_range(
+        cols: &[Column],
+        offset: usize,
+        len: usize,
+        mode: KeyMode,
+        dict: &mut KeyDict,
+    ) -> EncodedKeys {
         let stride = cols.len() * KEY_WIDTH;
-        let mut buf = vec![0u8; n * stride];
-        let mut nulls = vec![false; n];
+        let mut buf = vec![0u8; len * stride];
+        let mut nulls = vec![false; len];
         for (j, col) in cols.iter().enumerate() {
             let off = j * KEY_WIDTH;
             let valid = col.validity();
             match col {
                 Column::Int64 { data, .. } => {
-                    for r in 0..n {
-                        if valid.map_or(true, |v| v[r]) {
+                    for r in 0..len {
+                        let src = offset + r;
+                        if valid.map_or(true, |v| v[src]) {
                             let cell = &mut buf[r * stride + off..r * stride + off + KEY_WIDTH];
                             cell[0] = TAG_INT;
-                            cell[1..].copy_from_slice(&data[r].to_le_bytes());
+                            cell[1..].copy_from_slice(&data[src].to_le_bytes());
                         } else {
                             nulls[r] = true; // cell stays TAG_NULL + zeros
                         }
                     }
                 }
                 Column::Float64 { data, .. } => {
-                    for r in 0..n {
-                        if valid.map_or(true, |v| v[r]) {
-                            let f = data[r];
+                    for r in 0..len {
+                        let src = offset + r;
+                        if valid.map_or(true, |v| v[src]) {
+                            let f = data[src];
                             let cell = &mut buf[r * stride + off..r * stride + off + KEY_WIDTH];
                             if mode == KeyMode::Join && f.fract() == 0.0 && f.abs() < 9.0e18 {
                                 cell[0] = TAG_INT;
@@ -170,9 +187,10 @@ impl EncodedKeys {
                     }
                 }
                 Column::Utf8 { data, .. } => {
-                    for r in 0..n {
-                        if valid.map_or(true, |v| v[r]) {
-                            let id = dict.intern(&data[r]);
+                    for r in 0..len {
+                        let src = offset + r;
+                        if valid.map_or(true, |v| v[src]) {
+                            let id = dict.intern(&data[src]);
                             let cell = &mut buf[r * stride + off..r * stride + off + KEY_WIDTH];
                             cell[0] = TAG_STR;
                             cell[1..].copy_from_slice(&id.to_le_bytes());
@@ -182,11 +200,12 @@ impl EncodedKeys {
                     }
                 }
                 Column::Bool { data, .. } => {
-                    for r in 0..n {
-                        if valid.map_or(true, |v| v[r]) {
+                    for r in 0..len {
+                        let src = offset + r;
+                        if valid.map_or(true, |v| v[src]) {
                             let cell = &mut buf[r * stride + off..r * stride + off + KEY_WIDTH];
                             cell[0] = TAG_BOOL;
-                            cell[1..].copy_from_slice(&u64::from(data[r]).to_le_bytes());
+                            cell[1..].copy_from_slice(&u64::from(data[src]).to_le_bytes());
                         } else {
                             nulls[r] = true;
                         }
@@ -194,10 +213,10 @@ impl EncodedKeys {
                 }
             }
         }
-        let hashes = (0..n)
+        let hashes = (0..len)
             .map(|r| hash_bytes(&buf[r * stride..(r + 1) * stride]))
             .collect();
-        EncodedKeys { stride, len: n, buf, hashes, nulls }
+        EncodedKeys { stride, len, buf, hashes, nulls }
     }
 
     /// Number of encoded key rows.
@@ -298,86 +317,168 @@ pub fn assign_group_ids(keys: &EncodedKeys) -> GroupIds {
     GroupIds { ids, rep_rows }
 }
 
+/// The hash partition a key row routes to: high hash bits, so routing is
+/// independent of the low bits the tables use for bucket masking. Every
+/// row of one key routes to the same partition (equal keys → equal
+/// hashes), which is what makes a partitioned build exactly equivalent to
+/// a single-table build.
+#[inline]
+pub fn join_partition(hash: u64, n_parts: usize) -> usize {
+    if n_parts <= 1 {
+        0
+    } else {
+        ((hash >> 32) as usize) % n_parts
+    }
+}
+
 /// Hash multimap over the build side of an equi-join. Rows whose key
 /// contains a NULL are skipped at build time (SQL: NULL never matches);
 /// rows with equal keys chain in insertion (ascending row) order.
+///
+/// The table borrows its [`EncodedKeys`] so several hash-partitioned
+/// tables (see [`JoinTable::build_from_rows`] / [`PartitionedJoinTable`])
+/// can be built concurrently over one shared encoding. Chains are
+/// indexed by *local position* in the table's own row list, so a
+/// partition's memory is proportional to its share of the build rows,
+/// not to the full build side.
 #[derive(Debug)]
-pub struct JoinTable {
+pub struct JoinTable<'k> {
     slots: Vec<u32>, // entry index, or NO_ROW when empty
     mask: usize,
     entries: Vec<JoinEntry>,
-    next: Vec<u32>, // per build row: next row with the same key
-    keys: EncodedKeys,
+    /// The table's build rows in insertion (ascending) order.
+    rows: Vec<u32>,
+    /// Per local position: next position with the same key (NO_ROW = end).
+    next: Vec<u32>,
+    keys: &'k EncodedKeys,
 }
 
 #[derive(Debug)]
 struct JoinEntry {
-    /// First build row with this key (representative for comparisons).
-    row: u32,
-    /// Last build row with this key (chain tail for O(1) append).
+    /// First local position with this key (representative for compares).
+    first: u32,
+    /// Last local position with this key (chain tail for O(1) append).
     last: u32,
 }
 
-impl JoinTable {
+impl<'k> JoinTable<'k> {
     /// Build the multimap over the build side's encoded keys.
-    pub fn build(keys: EncodedKeys) -> JoinTable {
-        let n = keys.len();
-        let cap = (n.max(1) * 2).next_power_of_two();
+    pub fn build(keys: &'k EncodedKeys) -> JoinTable<'k> {
+        let rows: Vec<u32> =
+            (0..keys.len() as u32).filter(|&r| !keys.has_null(r as usize)).collect();
+        JoinTable::build_from_rows(keys, rows)
+    }
+
+    /// Build the multimap over only the given build rows (a hash
+    /// partition's share; the caller pre-filters NULL-key rows and
+    /// routes by [`join_partition`]). `rows` must be ascending so chains
+    /// keep ascending-row order — then a probe against the owning
+    /// partition returns exactly the matches a single-table build would.
+    pub fn build_from_rows(keys: &'k EncodedKeys, rows: Vec<u32>) -> JoinTable<'k> {
+        let m = rows.len();
+        let cap = (m.max(1) * 2).next_power_of_two();
         let mask = cap - 1;
         let mut slots = vec![NO_ROW; cap];
         let mut entries: Vec<JoinEntry> = Vec::new();
-        let mut next = vec![NO_ROW; n];
-        for r in 0..n {
-            if keys.has_null(r) {
-                continue;
-            }
+        let mut next = vec![NO_ROW; m];
+        for (pos, &row) in rows.iter().enumerate() {
+            let r = row as usize;
+            debug_assert!(!keys.has_null(r), "NULL-key rows must be pre-filtered");
             let h = keys.hash(r);
             let mut slot = h as usize & mask;
             loop {
                 let e = slots[slot];
                 if e == NO_ROW {
                     slots[slot] = entries.len() as u32;
-                    entries.push(JoinEntry { row: r as u32, last: r as u32 });
+                    entries.push(JoinEntry { first: pos as u32, last: pos as u32 });
                     break;
                 }
-                let rep = entries[e as usize].row as usize;
+                let rep = rows[entries[e as usize].first as usize] as usize;
                 if keys.hash(rep) == h && keys.key(rep) == keys.key(r) {
                     let ent = &mut entries[e as usize];
-                    next[ent.last as usize] = r as u32;
-                    ent.last = r as u32;
+                    next[ent.last as usize] = pos as u32;
+                    ent.last = pos as u32;
                     break;
                 }
                 slot = (slot + 1) & mask;
             }
         }
-        JoinTable { slots, mask, entries, next, keys }
+        JoinTable { slots, mask, entries, rows, next, keys }
     }
 
-    /// First build row matching the probe key, if any.
-    pub fn first_match(&self, key: &[u8], hash: u64) -> Option<u32> {
+    /// Iterate the build rows matching the probe key, in ascending-row
+    /// (insertion) order; empty when nothing matches.
+    pub fn matches(&self, key: &[u8], hash: u64) -> JoinMatches<'_> {
         let mut slot = hash as usize & self.mask;
-        loop {
+        let first = loop {
             let e = self.slots[slot];
             if e == NO_ROW {
-                return None;
+                break NO_ROW;
             }
-            let rep = self.entries[e as usize].row as usize;
-            if self.keys.hash(rep) == hash && self.keys.key(rep) == key {
-                return Some(rep as u32);
+            let first = self.entries[e as usize].first;
+            if self.keys.hash(self.rows[first as usize] as usize) == hash
+                && self.keys.key(self.rows[first as usize] as usize) == key
+            {
+                break first;
             }
             slot = (slot + 1) & self.mask;
+        };
+        JoinMatches { rows: &self.rows, next: &self.next, pos: first }
+    }
+}
+
+/// Iterator over the build rows matching one probe key (see
+/// [`JoinTable::matches`]).
+#[derive(Debug)]
+pub struct JoinMatches<'t> {
+    rows: &'t [u32],
+    next: &'t [u32],
+    pos: u32,
+}
+
+impl Iterator for JoinMatches<'_> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        if self.pos == NO_ROW {
+            return None;
         }
+        let row = self.rows[self.pos as usize];
+        self.pos = self.next[self.pos as usize];
+        Some(row)
+    }
+}
+
+/// A set of hash-partitioned [`JoinTable`]s over one shared key encoding.
+/// Route build rows once with [`join_partition`], build each part from
+/// its row list with [`JoinTable::build_from_rows`] (concurrently if
+/// desired), then probe through this wrapper, which routes every probe by
+/// the same hash bits the build used. Match sets and their order are
+/// identical to a single-table build at any partition count.
+#[derive(Debug)]
+pub struct PartitionedJoinTable<'k> {
+    parts: Vec<JoinTable<'k>>,
+}
+
+impl<'k> PartitionedJoinTable<'k> {
+    /// Wrap pre-built partitions (`parts[p]` must hold partition `p` of
+    /// `parts.len()`).
+    pub fn from_parts(parts: Vec<JoinTable<'k>>) -> PartitionedJoinTable<'k> {
+        assert!(!parts.is_empty(), "at least one join partition required");
+        PartitionedJoinTable { parts }
     }
 
-    /// Next build row with the same key as `row`, if any.
+    /// Number of hash partitions.
+    pub fn n_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Iterate the build rows matching the probe key, in ascending-row
+    /// order (identical to a single-table probe).
     #[inline]
-    pub fn next_match(&self, row: u32) -> Option<u32> {
-        let nx = self.next[row as usize];
-        if nx == NO_ROW {
-            None
-        } else {
-            Some(nx)
-        }
+    pub fn matches(&self, key: &[u8], hash: u64) -> JoinMatches<'_> {
+        self.parts[join_partition(hash, self.parts.len())].matches(key, hash)
     }
 }
 
@@ -472,15 +573,10 @@ mod tests {
     fn join_table_chains_in_row_order() {
         let build = enc(&[Column::from_i64(vec![1, 2, 1, 1])], KeyMode::Join);
         let probe = enc(&[Column::from_i64(vec![1, 3])], KeyMode::Join);
-        let t = JoinTable::build(build);
-        let mut matches = Vec::new();
-        let mut m = t.first_match(probe.key(0), probe.hash(0));
-        while let Some(j) = m {
-            matches.push(j);
-            m = t.next_match(j);
-        }
+        let t = JoinTable::build(&build);
+        let matches: Vec<u32> = t.matches(probe.key(0), probe.hash(0)).collect();
         assert_eq!(matches, vec![0, 2, 3]);
-        assert_eq!(t.first_match(probe.key(1), probe.hash(1)), None);
+        assert_eq!(t.matches(probe.key(1), probe.hash(1)).next(), None);
     }
 
     #[test]
@@ -488,10 +584,9 @@ mod tests {
         let col = Column::Int64 { data: vec![1, 1], valid: Some(vec![true, false]) };
         let build = enc(&[col], KeyMode::Join);
         let probe = enc(&[Column::from_i64(vec![1])], KeyMode::Join);
-        let t = JoinTable::build(build);
-        let first = t.first_match(probe.key(0), probe.hash(0));
-        assert_eq!(first, Some(0));
-        assert_eq!(t.next_match(0), None); // the NULL row never entered
+        let t = JoinTable::build(&build);
+        let matches: Vec<u32> = t.matches(probe.key(0), probe.hash(0)).collect();
+        assert_eq!(matches, vec![0]); // the NULL row never entered
     }
 
     #[test]
@@ -500,8 +595,69 @@ mod tests {
         assert_eq!(k.len(), 0);
         let g = assign_group_ids(&k);
         assert_eq!(g.n_groups(), 0);
-        let t = JoinTable::build(enc(&[Column::from_i64(vec![])], KeyMode::Join));
+        let empty = enc(&[Column::from_i64(vec![])], KeyMode::Join);
+        let t = JoinTable::build(&empty);
         let probe = enc(&[Column::from_i64(vec![4])], KeyMode::Join);
-        assert_eq!(t.first_match(probe.key(0), probe.hash(0)), None);
+        assert_eq!(t.matches(probe.key(0), probe.hash(0)).next(), None);
+    }
+
+    #[test]
+    fn encode_range_matches_full_encode() {
+        let cols = vec![
+            Column::Int64 { data: vec![7, 3, 7, 9, 3], valid: Some(vec![true, true, false, true, true]) },
+            Column::from_strings(vec!["a".into(), "b".into(), "a".into(), "c".into(), "b".into()]),
+        ];
+        let mut full_dict = KeyDict::new();
+        let full = EncodedKeys::encode(&cols, KeyMode::Group, &mut full_dict);
+        // Ranges encoded with a shared dict are row-for-row identical to
+        // the corresponding full-encode rows.
+        let mut dict = KeyDict::new();
+        let a = EncodedKeys::encode_range(&cols, 0, 2, KeyMode::Group, &mut dict);
+        let b = EncodedKeys::encode_range(&cols, 2, 3, KeyMode::Group, &mut dict);
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 3);
+        for r in 0..2 {
+            assert_eq!(a.key(r), full.key(r));
+            assert_eq!(a.has_null(r), full.has_null(r));
+        }
+        for r in 0..3 {
+            assert_eq!(b.key(r), full.key(2 + r));
+            assert_eq!(b.has_null(r), full.has_null(2 + r));
+        }
+    }
+
+    #[test]
+    fn partitioned_join_table_matches_single_table() {
+        // Keys with duplicates and NULLs: every probe must see the same
+        // match rows in the same order through the partitioned table.
+        let build_col = Column::Int64 {
+            data: vec![5, 9, 5, 2, 9, 5, 0, 7],
+            valid: Some(vec![true, true, true, true, true, true, false, true]),
+        };
+        let mut dict = KeyDict::new();
+        let build = EncodedKeys::encode(&[build_col], KeyMode::Join, &mut dict);
+        let probe =
+            EncodedKeys::encode(&[Column::from_i64(vec![5, 9, 2, 7, 4])], KeyMode::Join, &mut dict);
+        let single = JoinTable::build(&build);
+        for n_parts in [2usize, 3, 4] {
+            let mut part_rows: Vec<Vec<u32>> = vec![Vec::new(); n_parts];
+            for r in 0..build.len() {
+                if !build.has_null(r) {
+                    part_rows[join_partition(build.hash(r), n_parts)].push(r as u32);
+                }
+            }
+            let parts: Vec<JoinTable> = part_rows
+                .into_iter()
+                .map(|rows| JoinTable::build_from_rows(&build, rows))
+                .collect();
+            let pt = PartitionedJoinTable::from_parts(parts);
+            assert_eq!(pt.n_parts(), n_parts);
+            for i in 0..probe.len() {
+                let (key, hash) = (probe.key(i), probe.hash(i));
+                let want: Vec<u32> = single.matches(key, hash).collect();
+                let got: Vec<u32> = pt.matches(key, hash).collect();
+                assert_eq!(got, want, "n_parts={n_parts} probe row {i}");
+            }
+        }
     }
 }

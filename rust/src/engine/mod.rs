@@ -5,6 +5,9 @@
 //! Pull-based, batch-materializing operators over columnar `RowSet`s:
 //! scan, filter, project, hash aggregate, hash join, sort, limit, UDF/UDTF
 //! execution, and the exchange operator implementing row redistribution.
+//! The hot operators are morsel-driven parallel: large inputs split into
+//! contiguous row ranges executed on scoped worker threads, capped by
+//! [`ExecContext::parallelism`] (see `exec` module docs).
 
 mod catalog;
 mod exec;
@@ -16,8 +19,8 @@ mod plan;
 
 pub use catalog::{parse_csv, Catalog};
 pub use exec::{
-    execute_plan, execute_plan_with_stats, run_sql, run_sql_with_stats, ExecContext, OpStats,
-    QueryStats,
+    default_parallelism, execute_plan, execute_plan_with_stats, run_sql, run_sql_with_stats,
+    ExecContext, OpStats, QueryStats, MORSEL_MIN_ROWS,
 };
 pub use expr::{
     eval_expr, eval_expr_rowwise, eval_predicate, eval_predicate_rowwise, eval_row,

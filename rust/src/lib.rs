@@ -27,9 +27,13 @@
 //! ([`engine::eval_expr`]), aggregate/join/sort run on the fixed-stride
 //! key codec (`engine::hash`), and the exchange operator ships batches as
 //! a compact column-major wire buffer ([`types::WireBatch`]) that
-//! receivers decode with typed appends. Row-at-a-time reference paths
-//! survive behind `ExecContext::vectorized = false` for differential
-//! tests and the `expr_kernels` / `groupby_kernels` ablations.
+//! receivers decode with typed appends. The hot operators are
+//! morsel-driven parallel: contiguous row ranges execute on scoped
+//! worker threads sized by the warehouse shape (see
+//! [`engine::ExecContext::parallelism`]), with outputs byte-identical to
+//! sequential execution. Row-at-a-time reference paths survive behind
+//! `ExecContext::vectorized = false` for differential tests and the
+//! `expr_kernels` / `groupby_kernels` ablations.
 //!
 //! See `README.md` for build/run instructions and `docs/ARCHITECTURE.md`
 //! for the paper-section → module map.

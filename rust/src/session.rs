@@ -12,7 +12,7 @@ use crate::dataframe::DataFrame;
 use crate::engine::exchange::{run_udf_exchange, ExchangeConfig, ExchangeMode, ExchangeReport};
 use crate::engine::{Catalog, ExecContext};
 use crate::runtime::XlaService;
-use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
+use crate::types::{Column, DataType, Field, RowSet, Schema};
 use crate::udf::{ScalarFn, UdfRegistry, UdfStatsStore, VectorizedFn};
 use crate::warehouse::{InterpreterPool, PoolConfig};
 
@@ -21,6 +21,7 @@ pub struct SessionBuilder {
     pool: Option<PoolConfig>,
     exchange: ExchangeConfig,
     artifacts_dir: Option<std::path::PathBuf>,
+    parallelism: Option<usize>,
 }
 
 impl SessionBuilder {
@@ -31,6 +32,15 @@ impl SessionBuilder {
 
     pub fn exchange(mut self, config: ExchangeConfig) -> Self {
         self.exchange = config;
+        self
+    }
+
+    /// Pin the engine's intra-query (morsel) parallelism. Without this,
+    /// sessions with a pool use the warehouse shape (one worker per
+    /// interpreter process on a node, i.e. `procs_per_node`) and
+    /// pool-less sessions use [`crate::engine::default_parallelism`].
+    pub fn parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = Some(threads.max(1));
         self
     }
 
@@ -64,6 +74,7 @@ impl SessionBuilder {
             pool: Mutex::new(None),
             exchange: self.exchange,
             runtime,
+            parallelism: self.parallelism,
             partitioned: RwLock::new(HashMap::new()),
         });
         if let Some(rt) = &session.runtime {
@@ -84,6 +95,9 @@ pub struct Session {
     pool: Mutex<Option<Arc<InterpreterPool>>>,
     exchange: ExchangeConfig,
     runtime: Option<Arc<XlaService>>,
+    /// Explicit intra-query parallelism override (None = derive from the
+    /// warehouse shape, else the engine default).
+    parallelism: Option<usize>,
     /// Partitioned tables: name → per-node rowsets (the source rowset
     /// operator's placement for §IV.C).
     partitioned: RwLock<HashMap<String, Vec<RowSet>>>,
@@ -95,6 +109,7 @@ impl Session {
             pool: None,
             exchange: ExchangeConfig::default(),
             artifacts_dir: None,
+            parallelism: None,
         }
     }
 
@@ -173,12 +188,24 @@ impl Session {
             .cloned()
     }
 
+    /// The morsel parallelism queries run with: the explicit builder
+    /// override, else the warehouse shape (`procs_per_node` — the SQL
+    /// operators of one query run on one node's interpreter-process
+    /// budget), else the engine default (env var / host cores).
+    pub fn query_parallelism(&self) -> usize {
+        self.parallelism
+            .or_else(|| self.pool_config.map(|c| c.procs_per_node))
+            .unwrap_or_else(crate::engine::default_parallelism)
+            .max(1)
+    }
+
     fn exec_context(&self) -> ExecContext {
         ExecContext {
             catalog: self.catalog.clone(),
             udfs: Arc::new(self.udfs()),
             udf_stats: self.stats.clone(),
             vectorized: true,
+            parallelism: self.query_parallelism(),
         }
     }
 
@@ -260,24 +287,25 @@ impl Session {
         let registry = self.udfs();
         let cfg = ExchangeConfig { mode, ..self.exchange };
         let (columns, report) = run_udf_exchange(&projected, udf, &pool, &registry, cfg)?;
-        // Stitch partition outputs into one column (partition order).
-        let mut values: Vec<Value> = Vec::new();
-        for c in &columns {
-            for i in 0..c.len() {
-                values.push(c.value(i));
-            }
+        // Stitch partition outputs into one column (partition order) by
+        // concatenating the typed columns directly — the exchange already
+        // typed every partition from the registry's declared return type,
+        // so no per-cell `Value` round trips and no dtype re-inference.
+        let mut iter = columns.into_iter();
+        let mut out = iter
+            .next()
+            .ok_or_else(|| anyhow!("exchange returned no partitions"))?;
+        for c in iter {
+            out.append(&c)?;
         }
-        let dt = values
-            .iter()
-            .find_map(Value::data_type)
-            .unwrap_or(DataType::Float64);
-        Ok((Column::from_values(dt, &values)?, report))
+        Ok((out, report))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::types::Value;
 
     fn parts() -> Vec<RowSet> {
         (0..2)
@@ -330,5 +358,62 @@ mod tests {
     fn pool_requires_config() {
         let s = Session::builder().build().unwrap();
         assert!(s.pool().is_err());
+    }
+
+    #[test]
+    fn parallelism_derived_from_warehouse_shape() {
+        // With a pool: one morsel worker per interpreter process on a node.
+        let s = Session::builder()
+            .pool(PoolConfig { nodes: 2, procs_per_node: 3, ..Default::default() })
+            .build()
+            .unwrap();
+        assert_eq!(s.query_parallelism(), 3);
+        // Explicit override wins.
+        let s = Session::builder().parallelism(7).build().unwrap();
+        assert_eq!(s.query_parallelism(), 7);
+        // Pool-less sessions fall back to the engine default.
+        let s = Session::builder().build().unwrap();
+        assert!(s.query_parallelism() >= 1);
+    }
+
+    #[test]
+    fn distributed_udf_keeps_declared_dtype() {
+        // A UDF that returns NULL for every row of the first partition:
+        // the output column must still carry the declared Float64 dtype
+        // (not a Float64-by-fallback that breaks for other decls), and
+        // all-Int UDFs must come back Int64.
+        let s = Session::builder()
+            .pool(PoolConfig { nodes: 2, procs_per_node: 2, ..Default::default() })
+            .build()
+            .unwrap();
+        s.register_partitioned("events", parts()).unwrap();
+        s.register_scalar_udf(
+            "to_int",
+            DataType::Int64,
+            Arc::new(|args| Ok(Value::Int(args[0].as_f64().unwrap_or(0.0) as i64))),
+        );
+        let (col, _) = s
+            .run_distributed_udf("events", "to_int", &["x"], ExchangeMode::Local)
+            .unwrap();
+        assert_eq!(col.data_type(), DataType::Int64);
+        assert_eq!(col.len(), 20);
+        s.register_scalar_udf("all_null", DataType::Float64, Arc::new(|_| Ok(Value::Null)));
+        let (col, _) = s
+            .run_distributed_udf("events", "all_null", &["x"], ExchangeMode::Local)
+            .unwrap();
+        assert_eq!(col.data_type(), DataType::Float64);
+        assert!((0..col.len()).all(|i| !col.is_valid(i)));
+        // Declared Int64 but emits floats: widened (like the inline
+        // expression path), never silently truncated.
+        s.register_scalar_udf(
+            "halvef",
+            DataType::Int64,
+            Arc::new(|args| Ok(Value::Float(args[0].as_f64().unwrap_or(0.0) / 2.0))),
+        );
+        let (col, _) = s
+            .run_distributed_udf("events", "halvef", &["x"], ExchangeMode::Local)
+            .unwrap();
+        assert_eq!(col.data_type(), DataType::Float64);
+        assert_eq!(col.value(1), Value::Float(0.5));
     }
 }

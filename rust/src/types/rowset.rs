@@ -392,10 +392,31 @@ impl Column {
         Ok(())
     }
 
-    /// Contiguous slice [offset, offset+len).
+    /// Contiguous slice [offset, offset+len). Copies the ranges directly
+    /// — no index-vector materialization — since this sits on the
+    /// per-morsel hot path of parallel expression evaluation.
     pub fn slice(&self, offset: usize, len: usize) -> Column {
-        let idx: Vec<usize> = (offset..offset + len).collect();
-        self.take(&idx)
+        fn sub(valid: &Option<Vec<bool>>, offset: usize, len: usize) -> Option<Vec<bool>> {
+            valid.as_ref().map(|v| v[offset..offset + len].to_vec())
+        }
+        match self {
+            Column::Int64 { data, valid } => Column::Int64 {
+                data: data[offset..offset + len].to_vec(),
+                valid: sub(valid, offset, len),
+            },
+            Column::Float64 { data, valid } => Column::Float64 {
+                data: data[offset..offset + len].to_vec(),
+                valid: sub(valid, offset, len),
+            },
+            Column::Utf8 { data, valid } => Column::Utf8 {
+                data: data[offset..offset + len].to_vec(),
+                valid: sub(valid, offset, len),
+            },
+            Column::Bool { data, valid } => Column::Bool {
+                data: data[offset..offset + len].to_vec(),
+                valid: sub(valid, offset, len),
+            },
+        }
     }
 
     /// Approximate in-memory footprint in bytes (for memory accounting).

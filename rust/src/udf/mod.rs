@@ -5,7 +5,9 @@
 //! The registry stores definitions; execution happens either inline (for
 //! expression evaluation) or through the warehouse interpreter pool (the
 //! `warehouse::interp` module), which is where the §IV.C redistribution
-//! decision lives.
+//! decision lives. UDAF states additionally support [`UdafState::merge`],
+//! which the engine's morsel-parallel aggregate uses to fold thread-local
+//! partial states into the final per-group value.
 
 mod registry;
 mod stats;

@@ -22,11 +22,23 @@ pub type VectorizedFn = Arc<dyn Fn(&RowSet) -> Result<Vec<f64>> + Send + Sync>;
 pub type UdtfFn = Arc<dyn Fn(&[Value]) -> Result<RowSet> + Send + Sync>;
 
 /// UDAF incremental state.
+///
+/// States are `Send` so the morsel-parallel aggregate can build one state
+/// per group on each worker thread; the engine then folds the
+/// thread-local states with [`UdafState::merge`] in row-range order.
 pub trait UdafState: Send {
+    /// Fold one row of argument values into the state.
     fn update(&mut self, args: &[Value]) -> Result<()>;
-    /// Merge another state of the same UDAF (parallel partial aggregation).
+    /// Merge another state of the same UDAF into this one (parallel
+    /// partial aggregation). States merge in input scan order, and
+    /// merging into a freshly-created state must be equivalent to
+    /// adopting `other`, so `merge` must behave like
+    /// "`update` everything `other` saw, after everything I saw".
     fn merge(&mut self, other: Box<dyn UdafState>) -> Result<()>;
+    /// Produce the aggregate value for everything folded in so far.
     fn finish(&self) -> Result<Value>;
+    /// Downcast hook so `merge` implementations can reach the concrete
+    /// state type of `other`.
     fn as_any(&self) -> &dyn std::any::Any;
 }
 

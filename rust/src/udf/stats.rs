@@ -21,11 +21,21 @@ pub struct UdfStats {
 }
 
 /// Thread-safe store of per-UDF stats.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct UdfStatsStore {
     inner: Mutex<HashMap<String, UdfStats>>,
     /// EWMA smoothing factor.
     alpha: f64,
+}
+
+/// Same as [`UdfStatsStore::new`]. (The derived `Default` used to zero
+/// `alpha`, which froze the EWMA at its first sample — every later
+/// `record_batch` contributed `alpha * per_row = 0`, so
+/// `should_redistribute` never adapted to observed cost.)
+impl Default for UdfStatsStore {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl UdfStatsStore {
@@ -97,6 +107,18 @@ mod tests {
         let s = UdfStatsStore::new();
         s.record_batch("f", 0, 500);
         assert_eq!(s.row_cost_ns("f"), None);
+    }
+
+    #[test]
+    fn default_store_ewma_adapts() {
+        // Regression: the derived Default left `alpha = 0.0`, freezing
+        // the EWMA at its first sample.
+        let s = UdfStatsStore::default();
+        s.record_batch("f", 100, 1_000_000); // 10µs/row
+        s.record_batch("f", 100, 3_000_000); // 30µs/row
+        let v = s.row_cost_ns("f").unwrap();
+        assert!(v > 10_000.0, "EWMA frozen at first sample: {v}");
+        assert!(v < 30_000.0, "{v}");
     }
 
     #[test]

@@ -27,6 +27,18 @@ impl Default for WarehouseConfig {
     }
 }
 
+impl WarehouseConfig {
+    /// Morsel-parallel worker threads one node's SQL operators should
+    /// use: the per-node interpreter-process budget. A query executes on
+    /// one node of the warehouse, so its intra-query parallelism rides
+    /// the same shape knob that sizes the UDF interpreter pool
+    /// (`Session::query_parallelism` applies the same rule to
+    /// `PoolConfig`).
+    pub fn intra_query_parallelism(&self) -> usize {
+        self.procs_per_node.max(1)
+    }
+}
+
 /// A running warehouse.
 pub struct VirtualWarehouse {
     pub id: WarehouseId,
@@ -101,6 +113,14 @@ impl VirtualWarehouse {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn intra_query_parallelism_follows_shape() {
+        let cfg = WarehouseConfig { procs_per_node: 6, ..Default::default() };
+        assert_eq!(cfg.intra_query_parallelism(), 6);
+        let cfg = WarehouseConfig { procs_per_node: 0, ..Default::default() };
+        assert_eq!(cfg.intra_query_parallelism(), 1);
+    }
 
     #[test]
     fn provision_and_resize() {
