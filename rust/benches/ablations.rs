@@ -5,7 +5,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use snowpark::bench::{banner, best, fmt_duration, measure, Table};
+use snowpark::bench::{banner, bench_iters, best, fmt_duration, measure, quick_mode, Table};
 use snowpark::control::{InitPipeline, InitRequest};
 use snowpark::engine::exchange::{simulate_exchange, ExchangeConfig, ExchangeMode};
 use snowpark::engine::{default_parallelism, run_sql, Catalog, ExecContext};
@@ -96,7 +96,8 @@ fn ablate_env_cache_capacity() {
         wh.warm_up(&universe, &Prefetcher::new(16, (cap_gib << 30) / 2));
         let clock = SimClock::new();
         let mut lat = Sampled::new();
-        for _ in 0..3_000 {
+        let queries = if quick_mode() { 300 } else { 3_000 };
+        for _ in 0..queries {
             let q = trace.next_query(&mut rng);
             let r = pipeline
                 .run(
@@ -173,7 +174,8 @@ fn ablate_estimator() {
         let mut sched = WarehouseScheduler::new(&clock, 4, 96 << 30);
         let mut qid = 0u64;
         let mut over = Vec::new();
-        for round in 0..60 {
+        let rounds = if quick_mode() { 10 } else { 60 };
+        for round in 0..rounds {
             for w in &workloads {
                 let actual = w.demand(round, &mut rng);
                 let estimate = est.estimate(&w.name, &stats);
@@ -258,17 +260,28 @@ fn engine_tables(n_rows: usize, n_keys: usize, zipf_s: Option<f64>, seed: u64) -
     catalog
 }
 
+/// Engine-bench input size: 1M rows (100k keys) normally, 100k rows
+/// (10k keys) in quick mode (`SNOWPARK_BENCH_QUICK=1`, the CI
+/// `bench-smoke` job).
+fn engine_rows() -> (usize, usize) {
+    if quick_mode() {
+        (100_000, 10_000)
+    } else {
+        (1_000_000, 100_000)
+    }
+}
+
 /// A6: the columnar key codec + grouped kernels vs the legacy
 /// row-at-a-time aggregate/join/sort, on 1M rows with uniform and skewed
 /// (Zipf) key distributions. Returns JSON rows for BENCH_engine.json.
 fn ablate_groupby_kernels() -> Vec<String> {
-    println!("\n-- A6: columnar key codec + grouped kernels (1M rows, codec on/off) --");
-    const N: usize = 1_000_000;
-    const KEYS: usize = 100_000;
+    let (n, keys) = engine_rows();
+    let (warmup, iters) = bench_iters();
+    println!("\n-- A6: columnar key codec + grouped kernels ({n} rows, codec on/off) --");
     let mut table = Table::new(&["query", "distribution", "codec off", "codec on", "speedup"]);
     let mut json = Vec::new();
     for (dist, zipf_s) in [("uniform", None), ("zipf-1.2", Some(1.2))] {
-        let catalog = engine_tables(N, KEYS, zipf_s, 42);
+        let catalog = engine_tables(n, keys, zipf_s, 42);
         let queries = [
             ("groupby-int", "SELECT k, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY k"),
             ("groupby-str", "SELECT cat, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY cat"),
@@ -279,8 +292,8 @@ fn ablate_groupby_kernels() -> Vec<String> {
             let ctx_on = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()));
             let ctx_off = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
                 .with_vectorized(false);
-            let t_on = best(&measure(1, 3, || run_sql(stmt, &ctx_on).unwrap()));
-            let t_off = best(&measure(1, 3, || run_sql(stmt, &ctx_off).unwrap()));
+            let t_on = best(&measure(warmup, iters, || run_sql(stmt, &ctx_on).unwrap()));
+            let t_off = best(&measure(warmup, iters, || run_sql(stmt, &ctx_off).unwrap()));
             let speedup = t_off.as_secs_f64() / t_on.as_secs_f64().max(1e-12);
             table.row(&[
                 name.to_string(),
@@ -291,7 +304,7 @@ fn ablate_groupby_kernels() -> Vec<String> {
             ]);
             json.push(format!(
                 "{{\"bench\":\"groupby_kernels\",\"query\":\"{name}\",\"dist\":\"{dist}\",\
-                 \"rows\":{N},\"codec_off_ms\":{:.3},\"codec_on_ms\":{:.3},\
+                 \"rows\":{n},\"codec_off_ms\":{:.3},\"codec_on_ms\":{:.3},\
                  \"speedup\":{speedup:.2}}}",
                 t_off.as_secs_f64() * 1e3,
                 t_on.as_secs_f64() * 1e3,
@@ -299,7 +312,7 @@ fn ablate_groupby_kernels() -> Vec<String> {
         }
     }
     table.print();
-    println!("(target: ≥5x on the 1M-row group-by/join microbenches)");
+    println!("(target: ≥5x on the full-size group-by/join microbenches)");
     json
 }
 
@@ -307,9 +320,10 @@ fn ablate_groupby_kernels() -> Vec<String> {
 /// path, on 1M-row projection/filter workloads (the last operators PR 1
 /// left row-wise). Returns JSON rows for BENCH_engine.json.
 fn ablate_expr_kernels() -> Vec<String> {
-    println!("\n-- A7: columnar expression kernels (1M rows, vectorized vs eval_row) --");
-    const N: usize = 1_000_000;
-    let catalog = engine_tables(N, 100_000, None, 43);
+    let (n, keys) = engine_rows();
+    let (warmup, iters) = bench_iters();
+    println!("\n-- A7: columnar expression kernels ({n} rows, vectorized vs eval_row) --");
+    let catalog = engine_tables(n, keys, None, 43);
     let mut registry = UdfRegistry::new();
     registry.register_scalar(
         "add1",
@@ -343,8 +357,8 @@ fn ablate_expr_kernels() -> Vec<String> {
         let ctx_on = ExecContext::new(catalog.clone(), registry.clone());
         let ctx_off =
             ExecContext::new(catalog.clone(), registry.clone()).with_vectorized(false);
-        let t_on = best(&measure(1, 3, || run_sql(stmt, &ctx_on).unwrap()));
-        let t_off = best(&measure(1, 3, || run_sql(stmt, &ctx_off).unwrap()));
+        let t_on = best(&measure(warmup, iters, || run_sql(stmt, &ctx_on).unwrap()));
+        let t_off = best(&measure(warmup, iters, || run_sql(stmt, &ctx_off).unwrap()));
         let speedup = t_off.as_secs_f64() / t_on.as_secs_f64().max(1e-12);
         table.row(&[
             name.to_string(),
@@ -353,14 +367,14 @@ fn ablate_expr_kernels() -> Vec<String> {
             format!("{speedup:.1}x"),
         ]);
         json.push(format!(
-            "{{\"bench\":\"expr_kernels\",\"query\":\"{name}\",\"rows\":{N},\
+            "{{\"bench\":\"expr_kernels\",\"query\":\"{name}\",\"rows\":{n},\
              \"rowwise_ms\":{:.3},\"vectorized_ms\":{:.3},\"speedup\":{speedup:.2}}}",
             t_off.as_secs_f64() * 1e3,
             t_on.as_secs_f64() * 1e3,
         ));
     }
     table.print();
-    println!("(target: vectorized beats eval_row on every 1M-row projection/filter)");
+    println!("(target: vectorized beats eval_row on every full-size projection/filter)");
     json
 }
 
@@ -370,13 +384,13 @@ fn ablate_expr_kernels() -> Vec<String> {
 /// BENCH_engine.json.
 fn ablate_parallel_pipeline() -> Vec<String> {
     let threads = default_parallelism();
-    println!("\n-- A9: morsel-driven parallelism (1M rows, 1 vs {threads} threads) --");
-    const N: usize = 1_000_000;
-    const KEYS: usize = 100_000;
+    let (n, keys) = engine_rows();
+    let (warmup, iters) = bench_iters();
+    println!("\n-- A9: morsel-driven parallelism ({n} rows, 1 vs {threads} threads) --");
     let mut table = Table::new(&["query", "distribution", "1 thread", "par", "speedup"]);
     let mut json = Vec::new();
     for (dist, zipf_s) in [("uniform", None), ("zipf-1.2", Some(1.2))] {
-        let catalog = engine_tables(N, KEYS, zipf_s, 44);
+        let catalog = engine_tables(n, keys, zipf_s, 44);
         let queries = [
             ("groupby-int", "SELECT k, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY k"),
             ("groupby-str", "SELECT cat, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY cat"),
@@ -387,11 +401,13 @@ fn ablate_parallel_pipeline() -> Vec<String> {
         ];
         for (name, stmt) in queries {
             let ctx_seq = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
-                .with_parallelism(1);
+                .with_parallelism(1)
+                .with_nodes(1);
             let ctx_par = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
-                .with_parallelism(threads);
-            let t_seq = best(&measure(1, 3, || run_sql(stmt, &ctx_seq).unwrap()));
-            let t_par = best(&measure(1, 3, || run_sql(stmt, &ctx_par).unwrap()));
+                .with_parallelism(threads)
+                .with_nodes(1);
+            let t_seq = best(&measure(warmup, iters, || run_sql(stmt, &ctx_seq).unwrap()));
+            let t_par = best(&measure(warmup, iters, || run_sql(stmt, &ctx_par).unwrap()));
             let speedup = t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-12);
             table.row(&[
                 name.to_string(),
@@ -402,7 +418,7 @@ fn ablate_parallel_pipeline() -> Vec<String> {
             ]);
             json.push(format!(
                 "{{\"bench\":\"parallel_pipeline\",\"query\":\"{name}\",\"dist\":\"{dist}\",\
-                 \"rows\":{N},\"threads\":{threads},\"seq_ms\":{:.3},\"par_ms\":{:.3},\
+                 \"rows\":{n},\"threads\":{threads},\"seq_ms\":{:.3},\"par_ms\":{:.3},\
                  \"speedup\":{speedup:.2}}}",
                 t_seq.as_secs_f64() * 1e3,
                 t_par.as_secs_f64() * 1e3,
@@ -411,6 +427,58 @@ fn ablate_parallel_pipeline() -> Vec<String> {
     }
     table.print();
     println!("(target on ≥4-core hosts: parallel beats sequential on aggregate/join/sort)");
+    json
+}
+
+/// A10: distributed morsel dispatch — static assignment vs work
+/// stealing, on one node vs spread across four warehouse nodes — over
+/// Zipf-skewed keys (the skew that collapses static partitioning; see
+/// arXiv:2301.07896). Honors quick mode. Returns JSON rows for
+/// BENCH_engine.json.
+fn ablate_distributed_morsels() -> Vec<String> {
+    let (n, keys) = engine_rows();
+    let (warmup, iters) = bench_iters();
+    println!("\n-- A10: distributed morsels ({n} rows, static vs stealing, 1 vs 4 nodes) --");
+    let catalog = engine_tables(n, keys, Some(1.2), 45);
+    let queries = [
+        ("groupby-int", "SELECT k, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY k"),
+        ("hash-join", "SELECT COUNT(*) AS n FROM facts JOIN dim ON facts.k = dim.k"),
+        ("filter-project", "SELECT k + 1 AS k1, v * 2.0 AS v2 FROM facts WHERE v > 25.0"),
+    ];
+    let mut table = Table::new(&["query", "nodes", "static", "stealing", "steal gain"]);
+    let mut json = Vec::new();
+    for (name, stmt) in queries {
+        for nodes in [1usize, 4] {
+            let ctx_static = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(2)
+                .with_nodes(nodes)
+                .with_stealing(false);
+            let ctx_steal = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(2)
+                .with_nodes(nodes)
+                .with_stealing(true);
+            let t_static = best(&measure(warmup, iters, || run_sql(stmt, &ctx_static).unwrap()));
+            let t_steal = best(&measure(warmup, iters, || run_sql(stmt, &ctx_steal).unwrap()));
+            let gain = (t_static.as_secs_f64() - t_steal.as_secs_f64())
+                / t_static.as_secs_f64().max(1e-12);
+            table.row(&[
+                name.to_string(),
+                format!("{nodes}"),
+                fmt_duration(t_static),
+                fmt_duration(t_steal),
+                format!("{:+.1}%", gain * 100.0),
+            ]);
+            json.push(format!(
+                "{{\"bench\":\"distributed_morsels\",\"query\":\"{name}\",\"dist\":\"zipf-1.2\",\
+                 \"rows\":{n},\"nodes\":{nodes},\"workers_per_node\":2,\
+                 \"static_ms\":{:.3},\"steal_ms\":{:.3},\"steal_gain\":{gain:.3}}}",
+                t_static.as_secs_f64() * 1e3,
+                t_steal.as_secs_f64() * 1e3,
+            ));
+        }
+    }
+    table.print();
+    println!("(stealing should never lose; multi-node pays the cross-node wire charge)");
     json
 }
 
@@ -484,14 +552,17 @@ fn columnar_roundtrip(parts: &[RowSet], batch_rows: usize) -> (usize, usize) {
 /// BENCH_engine.json.
 fn ablate_exchange_codec() -> Vec<String> {
     println!("\n-- A8: exchange batch codec (Fig. 6 shape, per-row vs columnar) --");
-    let sizes = [120_000usize, 40_000, 25_000, 15_000]; // skewed 4-partition layout
+    // Skewed 4-partition layout (scaled down in quick mode).
+    let scale = if quick_mode() { 10 } else { 1 };
+    let sizes = [120_000usize / scale, 40_000 / scale, 25_000 / scale, 15_000 / scale];
+    let (warmup, iters) = bench_iters();
     let parts = codec_partitions(&sizes);
     let total_rows: usize = sizes.iter().sum();
     let mut table = Table::new(&["B (rows)", "per-row", "columnar", "speedup", "wire MB"]);
     let mut json = Vec::new();
     for batch_rows in [64usize, 256, 1024] {
-        let t_row = best(&measure(1, 3, || perrow_roundtrip(&parts, batch_rows)));
-        let t_col = best(&measure(1, 3, || columnar_roundtrip(&parts, batch_rows)));
+        let t_row = best(&measure(warmup, iters, || perrow_roundtrip(&parts, batch_rows)));
+        let t_col = best(&measure(warmup, iters, || columnar_roundtrip(&parts, batch_rows)));
         let (_, bytes) = columnar_roundtrip(&parts, batch_rows);
         let speedup = t_row.as_secs_f64() / t_col.as_secs_f64().max(1e-12);
         table.row(&[
@@ -520,7 +591,8 @@ fn ablate_exchange_codec() -> Vec<String> {
 fn write_bench_json(rows: &[String]) {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
     let body = format!(
-        "{{\n  \"bench\": \"engine_ablations\",\n  \"generated_by\": \"cargo bench --bench ablations\",\n  \"results\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"engine_ablations\",\n  \"generated_by\": \"cargo bench --bench ablations\",\n  \"quick\": {},\n  \"results\": [\n    {}\n  ]\n}}\n",
+        quick_mode(),
         rows.join(",\n    ")
     );
     match std::fs::write(path, body) {
@@ -534,8 +606,12 @@ fn main() {
         "Ablations",
         "Design-choice sweeps: buffer size B, threshold T, env-cache \
          capacity, prefetch, estimator (K,P,F), engine key codec, \
-         expression kernels, exchange batch codec, morsel parallelism.",
+         expression kernels, exchange batch codec, morsel parallelism, \
+         distributed morsel dispatch (static vs stealing).",
     );
+    if quick_mode() {
+        println!("(SNOWPARK_BENCH_QUICK set: reduced rows/iterations)");
+    }
     ablate_batch_size();
     ablate_threshold();
     ablate_env_cache_capacity();
@@ -545,5 +621,6 @@ fn main() {
     json.extend(ablate_expr_kernels());
     json.extend(ablate_exchange_codec());
     json.extend(ablate_parallel_pipeline());
+    json.extend(ablate_distributed_morsels());
     write_bench_json(&json);
 }

@@ -7,6 +7,30 @@ use std::time::{Duration, Instant};
 
 use crate::util::histogram::Sampled;
 
+/// Quick mode (`SNOWPARK_BENCH_QUICK=1`): shrink inputs and iteration
+/// counts so the full bench target finishes in CI-smoke time. Bench
+/// mains consult this to scale row counts and sweeps; results recorded
+/// under quick mode are tagged as such in `BENCH_engine.json`.
+pub fn quick_mode() -> bool {
+    match std::env::var("SNOWPARK_BENCH_QUICK") {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+        }
+        Err(_) => false,
+    }
+}
+
+/// `(warmup, iters)` for [`measure`] under the current bench mode: one
+/// cold iteration in quick mode, warmed triples otherwise.
+pub fn bench_iters() -> (usize, usize) {
+    if quick_mode() {
+        (0, 1)
+    } else {
+        (1, 3)
+    }
+}
+
 /// Measure `f` with `warmup` unmeasured runs and `iters` measured runs;
 /// returns per-run durations.
 pub fn measure<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> Vec<Duration> {

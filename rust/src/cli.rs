@@ -21,12 +21,16 @@ snowparkd — Snowpark reproduction launcher
 
 USAGE:
   snowparkd info
-  snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T]
+  snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T] [--nodes N]
   snowparkd demo
   snowparkd serve [--queries N] [--nodes N] [--procs N] [--rows N] [--mode auto|local|rr]
 
---parallelism T caps the engine's morsel worker threads (default: the
-SNOWPARK_PARALLELISM env var, else the host's cores; 1 = sequential).
+--parallelism T caps the engine's morsel worker threads per node
+(default: the SNOWPARK_PARALLELISM env var, else the host's cores;
+1 = sequential). --nodes N spreads the morsels of each operator across
+N simulated warehouse nodes through the columnar exchange (default: the
+SNOWPARK_NODES env var, else 1); `--stats` then reports per-node morsel,
+steal, and wire-byte counts.
 
 Demo tables (generated): store_sales, product_reviews, web_clickstreams, items.
 Artifacts: set SNOWPARK_ARTIFACTS or run `make artifacts` for XLA UDFs.";
@@ -61,6 +65,7 @@ fn session_with_data(
     seed: u64,
     pool: Option<PoolConfig>,
     parallelism: Option<usize>,
+    nodes: Option<usize>,
 ) -> anyhow::Result<Arc<Session>> {
     let mut b = Session::builder();
     if let Some(p) = pool {
@@ -68,6 +73,9 @@ fn session_with_data(
     }
     if let Some(t) = parallelism {
         b = b.parallelism(t);
+    }
+    if let Some(n) = nodes {
+        b = b.nodes(n);
     }
     let artifacts = crate::runtime::XlaRuntime::default_dir();
     if crate::runtime::XlaRuntime::available(&artifacts) {
@@ -109,9 +117,16 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("run-sql expects a SQL string"))?;
     let rows = args.get_usize("rows", 5_000).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
-    // 0 = auto (engine default: SNOWPARK_PARALLELISM env var, else cores).
+    // 0 = auto (engine defaults: SNOWPARK_PARALLELISM / SNOWPARK_NODES).
     let parallelism = args.get_usize("parallelism", 0).map_err(anyhow::Error::msg)?;
-    let s = session_with_data(rows, seed, None, (parallelism > 0).then_some(parallelism))?;
+    let nodes = args.get_usize("nodes", 0).map_err(anyhow::Error::msg)?;
+    let s = session_with_data(
+        rows,
+        seed,
+        None,
+        (parallelism > 0).then_some(parallelism),
+        (nodes > 0).then_some(nodes),
+    )?;
     if args.flag("stats") {
         let (out, stats) = s.sql_with_stats(sql)?;
         println!("{out}");
@@ -126,7 +141,7 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
 }
 
 fn demo() -> anyhow::Result<()> {
-    let s = session_with_data(5_000, 42, None, None)?;
+    let s = session_with_data(5_000, 42, None, None, None)?;
     println!("-- DataFrame API: top categories by revenue --");
     let df = s
         .table("store_sales")
@@ -155,6 +170,7 @@ fn serve(args: &ParsedArgs) -> anyhow::Result<()> {
         rows,
         7,
         Some(PoolConfig { nodes, procs_per_node: procs, ..Default::default() }),
+        None,
         None,
     )?;
     println!("serving {queries} UDF queries over {nodes} nodes × {procs} procs (mode {mode:?})");

@@ -26,8 +26,29 @@ use std::sync::mpsc;
 
 use anyhow::{anyhow, Result};
 
-use crate::types::{Column, RowSet, Value};
-use crate::warehouse::{Batch, InterpreterPool};
+use crate::types::{Column, Field, RowSet, Value, WireBatch};
+use crate::warehouse::{Batch, InterpreterPool, TransportCost};
+
+/// Ship a contiguous row span of loose columns to a warehouse node
+/// through the columnar wire codec: encode once from the source buffers,
+/// pay the transport cost for the encoded bytes as real CPU on the
+/// receiving (calling) thread, and decode into the node-local copy the
+/// remote workers will compute on. Returns the decoded span and the wire
+/// bytes charged. This is the same payload path UDF batches take through
+/// the interpreter pool (§III.B / §IV.C); the engine's node dispatch
+/// uses it to spread operator morsels across nodes.
+pub fn ship_columns(
+    fields: &[Field],
+    cols: &[&Column],
+    offset: usize,
+    len: usize,
+    transport: TransportCost,
+) -> Result<(RowSet, u64)> {
+    let wire = WireBatch::encode_columns(fields, cols, offset, len);
+    let bytes = wire.wire_len() as u64;
+    transport.charge_cpu(bytes);
+    Ok((wire.decode()?, bytes))
+}
 
 /// Redistribution policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -488,6 +509,17 @@ mod tests {
             rr.makespan_ns,
             local.makespan_ns
         );
+    }
+
+    #[test]
+    fn ship_columns_round_trips_span() {
+        let parts = partitions(&[40]);
+        let rs = &parts[0];
+        let cols: Vec<&Column> = rs.columns.iter().collect();
+        let (decoded, bytes) =
+            ship_columns(&rs.schema.fields, &cols, 8, 16, TransportCost::default()).unwrap();
+        assert_eq!(decoded, rs.slice(8, 16));
+        assert!(bytes > 0);
     }
 
     #[test]

@@ -13,24 +13,39 @@
 //! over the `l_idx`/`r_idx` gather vectors on only their referenced
 //! columns, before the wide output is materialized.
 //!
-//! ## Morsel-driven parallelism
+//! ## Morsel-driven parallelism across workers and warehouse nodes
 //!
 //! The hot operators split their input into contiguous row-range
-//! *morsels* ([`MORSEL_MIN_ROWS`] rows or more each) and evaluate them on
-//! scoped worker threads (`std::thread::scope`; the crate deliberately
-//! has no rayon dependency). [`ExecContext::parallelism`] caps the worker
-//! count — it defaults to [`default_parallelism`] (the
-//! `SNOWPARK_PARALLELISM` env var, else the host's available cores) and
-//! is derived from the warehouse shape by `Session` (one worker per
-//! interpreter process on a node). Every parallel path is constructed to
-//! be **byte-identical** to the sequential one: expression morsels
-//! concatenate in row order, aggregation merges thread-local key-codec
+//! *morsels* (about [`MORSEL_MIN_ROWS`] rows each; the morsel layout is
+//! a function of the row count only, never of the worker shape). Morsel
+//! spans are dealt across the warehouse's **nodes**
+//! ([`ExecContext::nodes`]): the leader keeps its span in memory, every
+//! other node receives its span of the operator's referenced columns as
+//! a column-major [`crate::types::WireBatch`] through the exchange path
+//! (`engine::exchange::ship_columns`), paying the pool's transport cost
+//! in real CPU. Within a node, morsels run on a **work-stealing
+//! scheduler** ([`super::morsel::run_stealing`]): a lock-free global
+//! queue of morsel descriptors plus per-worker LIFO deques with
+//! steal-half semantics, so skewed morsel costs (hot Zipf keys, noisy
+//! cores) rebalance instead of stalling on a straggler.
+//! [`ExecContext::parallelism`] caps the per-node worker count — it
+//! defaults to [`default_parallelism`] (the `SNOWPARK_PARALLELISM` env
+//! var, else the host's available cores) and is derived from the
+//! warehouse shape by `Session` (one worker per interpreter process on a
+//! node; the node count comes from the pool shape or `SNOWPARK_NODES`).
+//!
+//! Every parallel path is constructed to be **byte-identical** to the
+//! sequential one at any `(nodes × parallelism)` shape: results are
+//! keyed by morsel index and merged in morsel order, expression morsels
+//! concatenate in row order, aggregation merges per-morsel key-codec
 //! tables into global first-seen group order, joins probe a shared
 //! hash-partitioned table whose match order equals a single-table build,
 //! and sort merges per-morsel runs under the same index-tiebroken total
-//! order. `parallelism = 1` runs fully single-threaded on the
-//! sequential code paths (one structural difference: the join probe
-//! goes through the same partitioned-table API with one partition).
+//! order (morsel layout being shape-independent, even float-sum
+//! association is identical across parallel shapes). `parallelism = 1,
+//! nodes = 1` runs fully single-threaded on the sequential code paths
+//! (one structural difference: the join probe goes through the same
+//! partitioned-table API with one partition).
 //!
 //! The legacy row-at-a-time paths (including row-wise expression
 //! evaluation) are kept behind `ExecContext::vectorized = false` for
@@ -46,6 +61,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::sql::ast::{Expr, JoinKind, OrderKey};
 use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
 use crate::udf::{UdafState, UdfRegistry, UdfStatsStore};
+use crate::warehouse::TransportCost;
 
 use super::catalog::Catalog;
 use super::expr::{
@@ -56,10 +72,11 @@ use super::hash::{
     assign_group_ids, EncodedKeys, JoinTable, KeyDict, KeyMode, PartitionedJoinTable,
 };
 use super::key::KeyValue;
+use super::morsel::{run_stealing, ExecTally, NodeCounters, StealConfig};
 use super::plan::{AggCall, AggFunc, Plan};
 
-/// Minimum rows per morsel: below this, thread spawn + merge overhead
-/// dominates and operators stay sequential.
+/// Target rows per morsel: below two of these, scheduler + merge
+/// overhead dominates and operators stay sequential.
 pub const MORSEL_MIN_ROWS: usize = 4096;
 
 /// The default intra-query parallelism: the `SNOWPARK_PARALLELISM`
@@ -76,6 +93,21 @@ pub fn default_parallelism() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// The default warehouse-node count for query dispatch: the
+/// `SNOWPARK_NODES` environment variable when set to a positive integer,
+/// otherwise 1 (single-node). `Session` overrides this from the pool
+/// shape.
+pub fn default_nodes() -> usize {
+    if let Ok(s) = std::env::var("SNOWPARK_NODES") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    1
+}
+
 /// Everything an operator needs at execution time.
 pub struct ExecContext {
     /// Table catalog queries scan from.
@@ -89,13 +121,28 @@ pub struct ExecContext {
     /// remain for differential testing and the `groupby_kernels` /
     /// `expr_kernels` ablations.
     pub vectorized: bool,
-    /// Maximum worker threads for morsel-driven operators. `1` (or any
-    /// input smaller than two morsels) takes the exact sequential code
-    /// path; larger values parallelize scans/filters/projections,
-    /// aggregation, join build/probe, and sort. Defaults to
-    /// [`default_parallelism`]; `Session` derives it from the warehouse
-    /// shape (`procs_per_node`).
+    /// Morsel worker threads *per node*. `parallelism = 1, nodes = 1`
+    /// (or any input smaller than two morsels) takes the exact
+    /// sequential code path; larger shapes parallelize
+    /// scans/filters/projections, aggregation, join build/probe, and
+    /// sort. Defaults to [`default_parallelism`]; `Session` derives it
+    /// from the warehouse shape (`procs_per_node`).
     pub parallelism: usize,
+    /// Warehouse nodes the operator morsels spread across. Node 0 is the
+    /// leader; every other node receives its contiguous span of the
+    /// operator's referenced columns through the columnar exchange and
+    /// pays [`ExecContext::transport`] for it. Defaults to
+    /// [`default_nodes`]; `Session` derives it from the pool shape.
+    pub nodes: usize,
+    /// Work-steal between a node's morsel workers (the default). `false`
+    /// pins the PR 3 static contiguous assignment — kept for the
+    /// `distributed_morsels` ablation baseline.
+    pub steal: bool,
+    /// Cross-node shipping cost model for node-dispatched morsels.
+    pub transport: TransportCost,
+    /// Per-node morsel/steal/wire counters, reset per query and drained
+    /// into [`QueryStats::node_stats`].
+    pub tally: Arc<ExecTally>,
 }
 
 impl ExecContext {
@@ -107,6 +154,10 @@ impl ExecContext {
             udf_stats: Arc::new(UdfStatsStore::new()),
             vectorized: true,
             parallelism: default_parallelism(),
+            nodes: default_nodes(),
+            steal: true,
+            transport: TransportCost::default(),
+            tally: Arc::new(ExecTally::default()),
         }
     }
 
@@ -116,27 +167,75 @@ impl ExecContext {
         self
     }
 
-    /// Set the morsel-parallel worker-thread cap (clamped to ≥ 1).
+    /// Set the per-node morsel worker-thread cap (clamped to ≥ 1).
     pub fn with_parallelism(mut self, threads: usize) -> Self {
         self.parallelism = threads.max(1);
         self
     }
+
+    /// Set the warehouse-node count morsels spread across (clamped ≥ 1).
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes.max(1);
+        self
+    }
+
+    /// Toggle work stealing between a node's morsel workers.
+    pub fn with_stealing(mut self, steal: bool) -> Self {
+        self.steal = steal;
+        self
+    }
+
+    /// Set the cross-node transport cost model.
+    pub fn with_transport(mut self, transport: TransportCost) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// Total morsel workers across the warehouse: `nodes × parallelism`.
+    pub fn total_workers(&self) -> usize {
+        self.nodes.max(1) * self.parallelism.max(1)
+    }
 }
 
-/// Worker threads a morsel-parallel operator should use over `n` rows:
+/// Worker count a morsel-parallel stage over `n` rows can actually use:
 /// 1 (single-threaded sequential execution) unless the context allows
-/// more and every worker gets at least [`MORSEL_MIN_ROWS`] rows.
+/// more and every worker gets at least one morsel. Used for join-build
+/// partitioning, output-column gathers, and the `QueryStats` thread
+/// column.
 fn parallel_threads(n: usize, ctx: &ExecContext) -> usize {
-    if !ctx.vectorized || ctx.parallelism <= 1 {
+    if !ctx.vectorized || ctx.total_workers() <= 1 {
         return 1;
     }
-    (n / MORSEL_MIN_ROWS).clamp(1, ctx.parallelism)
+    (n / MORSEL_MIN_ROWS).clamp(1, ctx.total_workers())
 }
 
-/// Split `n` rows into `threads` contiguous `(offset, len)` morsels of
+/// The morsel layout over `n` rows: `⌊n / MORSEL_MIN_ROWS⌋` near-equal
+/// contiguous ranges. A function of `n` only — never of the worker or
+/// node shape — so every parallel shape sees identical morsel
+/// boundaries and merges (including float-sum association) are
+/// byte-identical across shapes.
+fn morsel_count(n: usize) -> usize {
+    (n / MORSEL_MIN_ROWS).max(1)
+}
+
+/// The morsel ranges a parallel operator over `n` rows should dispatch,
+/// or `None` when the operator must stay on the sequential path (row
+/// path selected, a 1×1 shape, or fewer than two morsels of input).
+fn parallel_ranges(n: usize, ctx: &ExecContext) -> Option<Vec<(usize, usize)>> {
+    if !ctx.vectorized || ctx.total_workers() <= 1 {
+        return None;
+    }
+    let m = morsel_count(n);
+    if m < 2 {
+        return None;
+    }
+    Some(morsel_ranges(n, m))
+}
+
+/// Split `n` rows into `parts` contiguous `(offset, len)` ranges of
 /// near-equal size (never empty).
-fn morsel_ranges(n: usize, threads: usize) -> Vec<(usize, usize)> {
-    let t = threads.min(n).max(1);
+fn morsel_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let t = parts.min(n).max(1);
     let base = n / t;
     let rem = n % t;
     let mut ranges = Vec::with_capacity(t);
@@ -149,27 +248,150 @@ fn morsel_ranges(n: usize, threads: usize) -> Vec<(usize, usize)> {
     ranges
 }
 
-/// Run `f(morsel_index, offset, len)` for every morsel on scoped worker
-/// threads, collecting results in morsel order. The first error in
-/// morsel (row-range) order wins, matching the sequential path, and
-/// worker panics propagate to the caller.
-fn par_morsels<T, F>(ranges: &[(usize, usize)], f: F) -> Result<Vec<T>>
+/// One morsel's coordinates as seen by a node-local worker: `global` is
+/// its offset in the full input, `local` its offset in the node's local
+/// copy of the payload (they differ on the leader of a multi-node
+/// dispatch, whose "copy" is the full original columns), and `span` its
+/// offset within the node's span — the coordinate system of whatever
+/// per-node state `prep` built from its span argument.
+#[derive(Debug, Clone, Copy)]
+struct Morsel {
+    global: usize,
+    local: usize,
+    span: usize,
+    len: usize,
+}
+
+/// Dispatch `ranges` (contiguous ascending morsels over the payload
+/// columns' rows) across the context's warehouse nodes, then run each
+/// node's share on its work-stealing workers.
+///
+/// Node spans are contiguous in morsel order, so concatenating the node
+/// outputs reproduces the global morsel order; within a node, results
+/// are keyed by morsel index. The leader (node 0) computes over the
+/// caller's columns; every other node receives its span through
+/// [`super::exchange::ship_columns`] (encode once → transport charge →
+/// typed decode) and computes over the decoded copy — which round-trips
+/// exactly, so outputs are byte-identical at any shape. `prep` builds
+/// one per-node state (e.g. a probe-side key encoding) from the
+/// node-local columns and the node's `(offset, len)` span within them —
+/// the leader's local columns are the full originals, so its span is the
+/// sub-range it actually owns; `run` executes one morsel against it. The
+/// first error in global morsel order wins.
+fn dispatch_morsels<L, T, P, F>(
+    ctx: &ExecContext,
+    fields: &[Field],
+    cols: &[&Column],
+    ranges: &[(usize, usize)],
+    prep: P,
+    run: F,
+) -> Result<Vec<T>>
 where
+    // The per-node state is created and dropped on its node's thread but
+    // *shared* by reference across that node's workers, so it must be
+    // `Sync` (`Send` is never needed).
+    L: Sync,
     T: Send,
-    F: Fn(usize, usize, usize) -> Result<T> + Sync,
+    P: Fn(&[&Column], (usize, usize)) -> Result<L> + Sync,
+    F: Fn(&L, &[&Column], Morsel) -> Result<T> + Sync,
 {
-    std::thread::scope(|s| {
-        let f = &f;
-        let handles: Vec<_> = ranges
+    let n_morsels = ranges.len();
+    let nodes = ctx.nodes.clamp(1, n_morsels.max(1));
+    let workers = ctx.parallelism.max(1);
+    if nodes <= 1 {
+        let t0 = Instant::now();
+        let (last_off, last_len) = ranges[n_morsels - 1];
+        let local = prep(cols, (ranges[0].0, last_off + last_len - ranges[0].0))?;
+        let cfg = StealConfig::new(workers, ctx.steal);
+        let (out, tally) = run_stealing(n_morsels, &cfg, |_w, t| {
+            let (off, len) = ranges[t];
+            run(&local, cols, Morsel { global: off, local: off, span: off, len })
+        })?;
+        ctx.tally.record(
+            0,
+            NodeCounters {
+                morsels: n_morsels as u64,
+                steals: tally.steals,
+                stolen_tasks: tally.stolen_tasks,
+                wire_bytes: 0,
+                busy_ns: t0.elapsed().as_nanos() as u64,
+            },
+        );
+        return Ok(out);
+    }
+    // Contiguous node spans over the morsel list (node order == morsel
+    // order == row order).
+    let spans = morsel_ranges(n_morsels, nodes);
+    let node_results: Vec<Result<Vec<T>>> = std::thread::scope(|s| {
+        let (prep, run) = (&prep, &run);
+        let handles: Vec<_> = spans
             .iter()
             .enumerate()
-            .map(|(i, &(off, len))| s.spawn(move || f(i, off, len)))
+            .map(|(node, &(m0, mlen))| {
+                s.spawn(move || -> Result<Vec<T>> {
+                    let t0 = Instant::now();
+                    let row_lo = ranges[m0].0;
+                    let (last_off, last_len) = ranges[m0 + mlen - 1];
+                    let span_rows = last_off + last_len - row_lo;
+                    // The leader reads its own memory; every other node
+                    // receives its span through the columnar exchange.
+                    let (shipped, wire_bytes) = if node == 0 || cols.is_empty() {
+                        (None, 0)
+                    } else {
+                        let (rs, bytes) = super::exchange::ship_columns(
+                            fields,
+                            cols,
+                            row_lo,
+                            span_rows,
+                            ctx.transport,
+                        )?;
+                        (Some(rs), bytes)
+                    };
+                    let local_cols: Vec<&Column> = match &shipped {
+                        Some(rs) => rs.columns.iter().collect(),
+                        None => cols.to_vec(),
+                    };
+                    let base = if shipped.is_some() { row_lo } else { 0 };
+                    let local = prep(&local_cols, (row_lo - base, span_rows))?;
+                    let cfg = StealConfig::new(workers, ctx.steal);
+                    let (out, tally) = run_stealing(mlen, &cfg, |_w, t| {
+                        let (off, len) = ranges[m0 + t];
+                        let m = Morsel { global: off, local: off - base, span: off - row_lo, len };
+                        run(&local, &local_cols, m)
+                    })?;
+                    // Exclude the modeled transport charge from busy
+                    // time: it is uniform per wire byte, so leaving it
+                    // in would read as phantom data skew on remote
+                    // nodes relative to the charge-free leader.
+                    let charged = if wire_bytes > 0 {
+                        ctx.transport.cost(wire_bytes).as_nanos() as u64
+                    } else {
+                        0
+                    };
+                    ctx.tally.record(
+                        node,
+                        NodeCounters {
+                            morsels: mlen as u64,
+                            steals: tally.steals,
+                            stolen_tasks: tally.stolen_tasks,
+                            wire_bytes,
+                            busy_ns: (t0.elapsed().as_nanos() as u64).saturating_sub(charged),
+                        },
+                    );
+                    Ok(out)
+                })
+            })
             .collect();
         handles
             .into_iter()
             .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
             .collect()
-    })
+    });
+    let mut out = Vec::with_capacity(n_morsels);
+    for node_out in node_results {
+        out.extend(node_out?);
+    }
+    Ok(out)
 }
 
 /// Does the expression call a registered *vectorized* UDF anywhere?
@@ -207,33 +429,47 @@ fn has_vectorized_udf(e: &Expr, udfs: &UdfRegistry) -> bool {
     }
 }
 
+/// May `e` be split into morsels? The single source of truth for
+/// dispatch eligibility (shared by [`morsel_plan`] and the batched
+/// projection): pass-through markers and bare column references are
+/// clones (nothing to parallelize), batch-dependent *vectorized* UDFs
+/// must see the whole input, and column-free expressions are
+/// constant-foldable.
+fn morsel_splittable(e: &Expr, udfs: &UdfRegistry) -> bool {
+    if matches!(e, Expr::Star | Expr::Column(_))
+        || matches!(e, Expr::Func { name, .. } if name == "__drop_hidden")
+        || has_vectorized_udf(e, udfs)
+    {
+        return false;
+    }
+    let mut names = Vec::new();
+    e.referenced_columns(&mut names);
+    !names.is_empty()
+}
+
 /// The morsel plan for evaluating `e` over `rows`: the morsel ranges
-/// plus the narrow projection (schema + column indices) each morsel
-/// slices — only referenced columns are copied, so wide tables don't get
-/// duplicated for a predicate touching one column. `None` means evaluate
-/// whole-input: sequential context, too few rows, a batch-dependent
-/// vectorized UDF, or a column-free (constant-foldable) expression.
-/// Single source of truth for [`eval`], [`eval_pred`], and the
-/// `QueryStats` morsel counters. Names resolve against the *full*
-/// schema, so resolution (and its errors) match whole-input evaluation.
+/// plus the narrow projection (schema + column indices) each node ships
+/// and each morsel slices — only referenced columns travel, so wide
+/// tables don't get duplicated for a predicate touching one column.
+/// `None` means evaluate whole-input: sequential context, too few rows,
+/// or an expression [`morsel_splittable`] excludes. Names resolve
+/// against the *full* schema, so resolution (and its errors) match
+/// whole-input evaluation.
 #[allow(clippy::type_complexity)]
 fn morsel_plan(
     e: &Expr,
     rows: &RowSet,
     ctx: &ExecContext,
 ) -> Result<Option<(Vec<(usize, usize)>, Schema, Vec<usize>)>> {
-    if !ctx.vectorized {
+    if !morsel_splittable(e, &ctx.udfs) {
         return Ok(None);
     }
-    let threads = parallel_threads(rows.num_rows(), ctx);
-    if threads <= 1 || has_vectorized_udf(e, &ctx.udfs) {
-        return Ok(None);
-    }
+    let ranges = match parallel_ranges(rows.num_rows(), ctx) {
+        Some(r) => r,
+        None => return Ok(None),
+    };
     let mut names = Vec::new();
     e.referenced_columns(&mut names);
-    if names.is_empty() {
-        return Ok(None);
-    }
     let mut needed: Vec<usize> = names
         .iter()
         .map(|n| resolve_column(&rows.schema, n))
@@ -241,25 +477,14 @@ fn morsel_plan(
     needed.sort_unstable();
     needed.dedup();
     let fields = needed.iter().map(|&i| rows.schema.field(i).clone()).collect();
-    Ok(Some((morsel_ranges(rows.num_rows(), threads), Schema::new(fields), needed)))
-}
-
-/// One morsel's input: the needed columns sliced to `[off, off + len)`.
-fn narrow_morsel(
-    rows: &RowSet,
-    schema: &Schema,
-    needed: &[usize],
-    off: usize,
-    len: usize,
-) -> Result<RowSet> {
-    let cols: Vec<Column> = needed.iter().map(|&ci| rows.column(ci).slice(off, len)).collect();
-    RowSet::new(schema.clone(), cols)
+    Ok(Some((ranges, Schema::new(fields), needed)))
 }
 
 /// Evaluate an expression through the path selected by `ctx.vectorized`,
-/// splitting large inputs into morsels evaluated on worker threads. The
-/// per-morsel columns concatenate in row order, so the result (values
-/// and validity representation) is identical to whole-input evaluation.
+/// dispatching large inputs as morsels across nodes and stealing
+/// workers. The per-morsel columns concatenate in row order, so the
+/// result (values and validity representation) is identical to
+/// whole-input evaluation.
 fn eval(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Column> {
     if !ctx.vectorized {
         return eval_expr_rowwise(e, rows, &ctx.udfs);
@@ -268,10 +493,19 @@ fn eval(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Column> {
         Some(plan) => plan,
         None => return eval_expr(e, rows, &ctx.udfs),
     };
-    let parts = par_morsels(&ranges, |_, off, len| {
-        let morsel = narrow_morsel(rows, &schema, &needed, off, len)?;
-        eval_expr(e, &morsel, &ctx.udfs)
-    })?;
+    let cols: Vec<&Column> = needed.iter().map(|&ci| rows.column(ci)).collect();
+    let parts = dispatch_morsels(
+        ctx,
+        &schema.fields,
+        &cols,
+        &ranges,
+        |_, _| Ok(()),
+        |_, local, m| {
+            let mcols: Vec<Column> = local.iter().map(|c| c.slice(m.local, m.len)).collect();
+            let morsel = RowSet::new(schema.clone(), mcols)?;
+            eval_expr(e, &morsel, &ctx.udfs)
+        },
+    )?;
     let mut iter = parts.into_iter();
     let mut out = iter.next().expect("at least one morsel");
     for part in iter {
@@ -281,7 +515,7 @@ fn eval(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Column> {
 }
 
 /// Evaluate a predicate mask through the path selected by
-/// `ctx.vectorized`, morsel-parallel like [`eval`].
+/// `ctx.vectorized`, morsel-dispatched like [`eval`].
 fn eval_pred(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Vec<bool>> {
     if !ctx.vectorized {
         return eval_predicate_rowwise(e, rows, &ctx.udfs);
@@ -290,40 +524,24 @@ fn eval_pred(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> Result<Vec<bool>> {
         Some(plan) => plan,
         None => return eval_predicate(e, rows, &ctx.udfs),
     };
-    let parts = par_morsels(&ranges, |_, off, len| {
-        let morsel = narrow_morsel(rows, &schema, &needed, off, len)?;
-        eval_predicate(e, &morsel, &ctx.udfs)
-    })?;
+    let cols: Vec<&Column> = needed.iter().map(|&ci| rows.column(ci)).collect();
+    let parts = dispatch_morsels(
+        ctx,
+        &schema.fields,
+        &cols,
+        &ranges,
+        |_, _| Ok(()),
+        |_, local, m| {
+            let mcols: Vec<Column> = local.iter().map(|c| c.slice(m.local, m.len)).collect();
+            let morsel = RowSet::new(schema.clone(), mcols)?;
+            eval_predicate(e, &morsel, &ctx.udfs)
+        },
+    )?;
     let mut mask = Vec::with_capacity(rows.num_rows());
     for part in parts {
         mask.extend_from_slice(&part);
     }
     Ok(mask)
-}
-
-/// Morsel count [`eval`]/[`eval_pred`] will actually use for `e` over
-/// `rows` — 1 whenever [`morsel_plan`] forces whole-input evaluation.
-/// Keeps the `QueryStats` morsel columns honest.
-fn eval_threads(e: &Expr, rows: &RowSet, ctx: &ExecContext) -> u64 {
-    match morsel_plan(e, rows, ctx) {
-        Ok(Some((ranges, _, _))) => ranges.len() as u64,
-        _ => 1,
-    }
-}
-
-/// Worst-case (max) morsel count across a projection's expressions; the
-/// pass-through markers (`*`, `__drop_hidden`) copy columns without
-/// evaluation and count as 1.
-fn project_threads(exprs: &[(Expr, String)], rows: &RowSet, ctx: &ExecContext) -> u64 {
-    exprs
-        .iter()
-        .map(|(e, _)| match e {
-            Expr::Star => 1,
-            Expr::Func { name, .. } if name == "__drop_hidden" => 1,
-            _ => eval_threads(e, rows, ctx),
-        })
-        .max()
-        .unwrap_or(1)
 }
 
 /// Rows processed and wall time spent in one operator class.
@@ -335,18 +553,22 @@ pub struct OpStats {
     pub rows_in: u64,
     /// Total output rows across invocations.
     pub rows_out: u64,
-    /// Morsels across invocations — the worker-thread count of each
-    /// invocation's widest parallel stage (for a projection: the max
-    /// across its expressions). The static scheduler hands each worker
-    /// one contiguous morsel; a sequential invocation contributes 1.
+    /// Morsels actually dispatched during this operator's invocations
+    /// (including its embedded expression evaluations); a fully
+    /// sequential invocation contributes 1.
     pub morsels: u64,
-    /// Largest worker-thread count any single invocation used.
+    /// Steal events among morsel workers during this operator's
+    /// invocations.
+    pub steals: u64,
+    /// Largest planned worker width (`nodes × threads`, capped by the
+    /// morsel count) of any single invocation.
     pub max_threads: u64,
     /// Total wall time in nanoseconds.
     pub nanos: u64,
 }
 
 impl OpStats {
+    /// Record a sequential (non-dispatched) invocation.
     fn record(&mut self, rows_in: u64, rows_out: u64, morsels: u64, started: Instant) {
         self.invocations += 1;
         self.rows_in += rows_in;
@@ -355,9 +577,34 @@ impl OpStats {
         self.max_threads = self.max_threads.max(morsels);
         self.nanos += started.elapsed().as_nanos() as u64;
     }
+
+    /// Record an invocation whose dispatch activity is the delta of the
+    /// context tally since `before` (taken just before the operator
+    /// ran); `threads` is the planned worker width.
+    fn record_op(
+        &mut self,
+        rows_in: u64,
+        rows_out: u64,
+        threads: u64,
+        before: NodeCounters,
+        ctx: &ExecContext,
+        started: Instant,
+    ) {
+        let after = ctx.tally.totals();
+        self.invocations += 1;
+        self.rows_in += rows_in;
+        self.rows_out += rows_out;
+        // Saturating: a context shared across concurrent queries can see
+        // another query's reset between the snapshots.
+        self.morsels += after.morsels.saturating_sub(before.morsels).max(1);
+        self.steals += after.steals.saturating_sub(before.steals);
+        self.max_threads = self.max_threads.max(threads);
+        self.nanos += started.elapsed().as_nanos() as u64;
+    }
 }
 
-/// Per-query execution statistics: per-operator row counts and timings.
+/// Per-query execution statistics: per-operator row counts and timings,
+/// plus per-node morsel/steal/wire tallies.
 #[derive(Debug, Default, Clone)]
 pub struct QueryStats {
     /// Rows read by all table scans.
@@ -378,6 +625,13 @@ pub struct QueryStats {
     pub sort: OpStats,
     /// Limit operator stats.
     pub limit: OpStats,
+    /// Per-node dispatch counters (index = node id; node 0 is the
+    /// leader). Empty when every operator ran sequentially. This is the
+    /// §IV.C skew observability surface: a node whose workers finish
+    /// early shows up as steals, and a span that drew the expensive rows
+    /// shows up as a busy-time imbalance (morsel *counts* are
+    /// layout-determined and near-equal by construction).
+    pub node_stats: Vec<NodeCounters>,
 }
 
 impl QueryStats {
@@ -393,26 +647,63 @@ impl QueryStats {
         ]
     }
 
+    /// Per-node morsel counts (index = node id). Near-equal by
+    /// construction (layout-determined); use [`Self::per_node_busy_ns`]
+    /// to observe data skew.
+    pub fn per_node_morsels(&self) -> Vec<u64> {
+        self.node_stats.iter().map(|c| c.morsels).collect()
+    }
+
+    /// Per-node busy wall-nanoseconds (index = node id) — the load
+    /// observation `scheduler::StatsFramework::record_node_balance`
+    /// folds into its skew history.
+    pub fn per_node_busy_ns(&self) -> Vec<u64> {
+        self.node_stats.iter().map(|c| c.busy_ns).collect()
+    }
+
+    /// Total steal events across nodes and operators.
+    pub fn total_steals(&self) -> u64 {
+        self.node_stats.iter().map(|c| c.steals).sum()
+    }
+
     /// Aligned per-operator report (`snowparkd run-sql --stats` prints it).
     pub fn report(&self) -> String {
         let mut out = format!(
-            "{:<10} {:>6} {:>12} {:>12} {:>8} {:>8} {:>12}\n",
-            "operator", "calls", "rows_in", "rows_out", "morsels", "threads", "time"
+            "{:<10} {:>6} {:>12} {:>12} {:>8} {:>7} {:>8} {:>12}\n",
+            "operator", "calls", "rows_in", "rows_out", "morsels", "steals", "threads", "time"
         );
         for (name, op) in self.operators() {
             if op.invocations == 0 {
                 continue;
             }
             out.push_str(&format!(
-                "{:<10} {:>6} {:>12} {:>12} {:>8} {:>8} {:>9.3}ms\n",
+                "{:<10} {:>6} {:>12} {:>12} {:>8} {:>7} {:>8} {:>9.3}ms\n",
                 name,
                 op.invocations,
                 op.rows_in,
                 op.rows_out,
                 op.morsels,
+                op.steals,
                 op.max_threads,
                 op.nanos as f64 / 1e6
             ));
+        }
+        if !self.node_stats.is_empty() {
+            out.push_str(&format!(
+                "{:<10} {:>8} {:>7} {:>7} {:>12} {:>12}\n",
+                "node", "morsels", "steals", "stolen", "wire_bytes", "busy"
+            ));
+            for (node, c) in self.node_stats.iter().enumerate() {
+                out.push_str(&format!(
+                    "{:<10} {:>8} {:>7} {:>7} {:>12} {:>9.3}ms\n",
+                    node,
+                    c.morsels,
+                    c.steals,
+                    c.stolen_tasks,
+                    c.wire_bytes,
+                    c.busy_ns as f64 / 1e6
+                ));
+            }
         }
         out
     }
@@ -423,11 +714,14 @@ pub fn execute_plan(plan: &Plan, ctx: &ExecContext) -> Result<RowSet> {
     Ok(execute_plan_with_stats(plan, ctx)?.0)
 }
 
-/// Execute a plan, returning per-operator row counts and timings.
+/// Execute a plan, returning per-operator row counts and timings plus
+/// the per-node morsel/steal tallies.
 pub fn execute_plan_with_stats(plan: &Plan, ctx: &ExecContext) -> Result<(RowSet, QueryStats)> {
+    ctx.tally.reset();
     let mut stats = QueryStats::default();
     let out = exec(plan, ctx, &mut stats)?;
     stats.rows_output = out.num_rows() as u64;
+    stats.node_stats = ctx.tally.snapshot();
     Ok((out, stats))
 }
 
@@ -472,51 +766,72 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
         Plan::Filter { input, predicate } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
-            let morsels = eval_threads(predicate, &rows, ctx);
+            let before = ctx.tally.totals();
+            let threads = parallel_threads(rows.num_rows(), ctx) as u64;
             let mask = eval_pred(predicate, &rows, ctx)?;
             let out = rows.filter(&mask);
-            stats
-                .filter
-                .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
+            stats.filter.record_op(
+                rows.num_rows() as u64,
+                out.num_rows() as u64,
+                threads,
+                before,
+                ctx,
+                t0,
+            );
             Ok(out)
         }
         Plan::Project { input, exprs } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
-            let morsels = project_threads(exprs, &rows, ctx);
+            let before = ctx.tally.totals();
+            let threads = parallel_threads(rows.num_rows(), ctx) as u64;
             let out = project(&rows, exprs, ctx)?;
-            stats
-                .project
-                .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
+            stats.project.record_op(
+                rows.num_rows() as u64,
+                out.num_rows() as u64,
+                threads,
+                before,
+                ctx,
+                t0,
+            );
             Ok(out)
         }
         Plan::Aggregate { input, group, aggs } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
-            let morsels = parallel_threads(rows.num_rows(), ctx) as u64;
+            let before = ctx.tally.totals();
+            let threads = parallel_threads(rows.num_rows(), ctx) as u64;
             let out = aggregate(&rows, group, aggs, ctx)?;
-            stats
-                .aggregate
-                .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
+            stats.aggregate.record_op(
+                rows.num_rows() as u64,
+                out.num_rows() as u64,
+                threads,
+                before,
+                ctx,
+                t0,
+            );
             Ok(out)
         }
         Plan::Join { left, right, kind, equi, residual } => {
             let l = exec(left, ctx, stats)?;
             let r = exec(right, ctx, stats)?;
             let t0 = Instant::now();
-            // Probe-side morsels; the build side partitions separately.
-            // A cross join (no equi keys) runs its nested loop
-            // sequentially, so it reports 1.
-            let morsels = if equi.is_empty() {
+            let before = ctx.tally.totals();
+            // Probe-side width; the build side partitions separately. A
+            // cross join (no equi keys) runs its nested loop
+            // sequentially.
+            let threads = if equi.is_empty() {
                 1
             } else {
                 parallel_threads(l.num_rows(), ctx) as u64
             };
             let out = join(&l, &r, *kind, equi, residual.as_ref(), ctx, plan)?;
-            stats.join.record(
+            stats.join.record_op(
                 (l.num_rows() + r.num_rows()) as u64,
                 out.num_rows() as u64,
-                morsels,
+                threads,
+                before,
+                ctx,
                 t0,
             );
             Ok(out)
@@ -524,11 +839,17 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
         Plan::Sort { input, keys } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
-            let morsels = parallel_threads(rows.num_rows(), ctx) as u64;
+            let before = ctx.tally.totals();
+            let threads = parallel_threads(rows.num_rows(), ctx) as u64;
             let out = sort(&rows, keys, ctx, None)?;
-            stats
-                .sort
-                .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
+            stats.sort.record_op(
+                rows.num_rows() as u64,
+                out.num_rows() as u64,
+                threads,
+                before,
+                ctx,
+                t0,
+            );
             Ok(out)
         }
         Plan::Limit { input, n } => {
@@ -540,14 +861,20 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
                 Plan::Sort { input: sort_input, keys } => {
                     let rows = exec(sort_input, ctx, stats)?;
                     let t0 = Instant::now();
+                    let before = ctx.tally.totals();
                     // LIMIT 0 short-circuits to an empty result without
                     // sorting runs.
-                    let morsels =
+                    let threads =
                         if *n == 0 { 1 } else { parallel_threads(rows.num_rows(), ctx) as u64 };
                     let out = sort(&rows, keys, ctx, Some(*n))?;
-                    stats
-                        .sort
-                        .record(rows.num_rows() as u64, out.num_rows() as u64, morsels, t0);
+                    stats.sort.record_op(
+                        rows.num_rows() as u64,
+                        out.num_rows() as u64,
+                        threads,
+                        before,
+                        ctx,
+                        t0,
+                    );
                     Ok(out)
                 }
                 Plan::Project { input: proj_input, exprs }
@@ -556,18 +883,30 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
                     if let Plan::Sort { input: sort_input, keys } = proj_input.as_ref() {
                         let rows = exec(sort_input, ctx, stats)?;
                         let t0 = Instant::now();
-                        let morsels =
+                        let before = ctx.tally.totals();
+                        let threads =
                             if *n == 0 { 1 } else { parallel_threads(rows.num_rows(), ctx) as u64 };
                         let sorted = sort(&rows, keys, ctx, Some(*n))?;
-                        stats
-                            .sort
-                            .record(rows.num_rows() as u64, sorted.num_rows() as u64, morsels, t0);
+                        stats.sort.record_op(
+                            rows.num_rows() as u64,
+                            sorted.num_rows() as u64,
+                            threads,
+                            before,
+                            ctx,
+                            t0,
+                        );
                         let t0 = Instant::now();
-                        let morsels = project_threads(exprs, &sorted, ctx);
+                        let before = ctx.tally.totals();
+                        let threads = parallel_threads(sorted.num_rows(), ctx) as u64;
                         let out = project(&sorted, exprs, ctx)?;
-                        stats
-                            .project
-                            .record(sorted.num_rows() as u64, out.num_rows() as u64, morsels, t0);
+                        stats.project.record_op(
+                            sorted.num_rows() as u64,
+                            out.num_rows() as u64,
+                            threads,
+                            before,
+                            ctx,
+                            t0,
+                        );
                         Ok(out)
                     } else {
                         unreachable!("guarded by matches! above")
@@ -588,9 +927,73 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
 }
 
 fn project(rows: &RowSet, exprs: &[(Expr, String)], ctx: &ExecContext) -> Result<RowSet> {
+    // When two or more expressions would each dispatch morsels, batch
+    // them into ONE dispatch over the union of their referenced columns:
+    // a multi-expression projection then ships each remote node's span
+    // once per operator instead of once per expression (and charges the
+    // transport cost once). Evaluating against the union schema resolves
+    // identically to the per-expression narrow schema — the union is a
+    // full-schema subset that contains every referenced column, so a
+    // name's match (or its ambiguity error) is unchanged. One caveat:
+    // when several expressions fail at different rows, the surfaced
+    // error is the earliest morsel's (not the leftmost expression's).
+    let mut precomputed: Vec<Option<Column>> = vec![None; exprs.len()];
+    if ctx.vectorized {
+        if let Some(ranges) = parallel_ranges(rows.num_rows(), ctx) {
+            let batch: Vec<usize> = exprs
+                .iter()
+                .enumerate()
+                .filter(|(_, (e, _))| morsel_splittable(e, &ctx.udfs))
+                .map(|(i, _)| i)
+                .collect();
+            if batch.len() >= 2 {
+                let mut needed: Vec<usize> = Vec::new();
+                for &i in &batch {
+                    let mut names = Vec::new();
+                    exprs[i].0.referenced_columns(&mut names);
+                    for n in &names {
+                        needed.push(resolve_column(&rows.schema, n)?);
+                    }
+                }
+                needed.sort_unstable();
+                needed.dedup();
+                let schema = Schema::new(
+                    needed.iter().map(|&i| rows.schema.field(i).clone()).collect(),
+                );
+                let cols: Vec<&Column> = needed.iter().map(|&i| rows.column(i)).collect();
+                let parts: Vec<Vec<Column>> = dispatch_morsels(
+                    ctx,
+                    &schema.fields,
+                    &cols,
+                    &ranges,
+                    |_, _| Ok(()),
+                    |_, local, m| {
+                        let mcols: Vec<Column> =
+                            local.iter().map(|c| c.slice(m.local, m.len)).collect();
+                        let morsel = RowSet::new(schema.clone(), mcols)?;
+                        batch
+                            .iter()
+                            .map(|&i| eval_expr(&exprs[i].0, &morsel, &ctx.udfs))
+                            .collect::<Result<Vec<_>>>()
+                    },
+                )?;
+                let mut iter = parts.into_iter();
+                let mut acc: Vec<Column> = iter.next().expect("at least one morsel");
+                for part in iter {
+                    for (a, p) in acc.iter_mut().zip(&part) {
+                        a.append(p)?;
+                    }
+                }
+                for (&i, col) in batch.iter().zip(acc) {
+                    precomputed[i] = Some(col);
+                }
+            }
+        }
+    }
+
     let mut fields = Vec::new();
     let mut columns = Vec::new();
-    for (e, name) in exprs {
+    for (idx, (e, name)) in exprs.iter().enumerate() {
         // Marker from the planner: keep everything except hidden sort keys.
         if matches!(e, Expr::Func { name, .. } if name == "__drop_hidden") {
             for (f, c) in rows.schema.fields.iter().zip(&rows.columns) {
@@ -609,7 +1012,10 @@ fn project(rows: &RowSet, exprs: &[(Expr, String)], ctx: &ExecContext) -> Result
             }
             continue;
         }
-        let col = eval(e, rows, ctx)?;
+        let col = match precomputed[idx].take() {
+            Some(c) => c,
+            None => eval(e, rows, ctx)?,
+        };
         fields.push(Field::new(name.clone(), col.data_type()));
         columns.push(col);
     }
@@ -778,11 +1184,9 @@ fn aggregate(
     if !ctx.vectorized {
         return aggregate_rowwise(rows, group, aggs, &key_cols, &arg_cols, ctx);
     }
-    let threads = parallel_threads(rows.num_rows(), ctx);
-    if threads <= 1 {
-        aggregate_vectorized(rows, group, aggs, &key_cols, &arg_cols, ctx)
-    } else {
-        aggregate_parallel(rows, group, aggs, &key_cols, &arg_cols, ctx, threads)
+    match parallel_ranges(rows.num_rows(), ctx) {
+        None => aggregate_vectorized(rows, group, aggs, &key_cols, &arg_cols, ctx),
+        Some(ranges) => aggregate_parallel(group, aggs, &key_cols, &arg_cols, ctx, &ranges),
     }
 }
 
@@ -1165,14 +1569,14 @@ impl PartialAgg {
     /// Zeroed partial state for `call` over `n_groups` groups.
     fn empty(
         call: &AggCall,
-        args: &[Column],
+        args: &[&Column],
         n_groups: usize,
         ctx: &ExecContext,
     ) -> Result<PartialAgg> {
         Ok(match call.func {
             AggFunc::CountStar => PartialAgg::CountStar(vec![0; n_groups]),
             AggFunc::Count => PartialAgg::Count(vec![0; n_groups]),
-            AggFunc::Sum => match &args[0] {
+            AggFunc::Sum => match args[0] {
                 Column::Int64 { .. } => PartialAgg::IntSum {
                     isums: vec![0; n_groups],
                     fsums: vec![0.0; n_groups],
@@ -1184,7 +1588,7 @@ impl PartialAgg {
                 }
                 _ => PartialAgg::NullAgg,
             },
-            AggFunc::Avg => match &args[0] {
+            AggFunc::Avg => match args[0] {
                 Column::Int64 { .. } | Column::Float64 { .. } => {
                     PartialAgg::Avg { sums: vec![0.0; n_groups], counts: vec![0; n_groups] }
                 }
@@ -1204,10 +1608,12 @@ impl PartialAgg {
 
     /// Accumulate rows `offset..offset + gids.len()` (whose per-row local
     /// group ids are `gids`) into this partial state, in row order.
+    /// `args` are the node-local argument columns; `offset` is the
+    /// morsel's offset within them.
     fn update(
         &mut self,
         call: &AggCall,
-        args: &[Column],
+        args: &[&Column],
         offset: usize,
         gids: &[u32],
     ) -> Result<()> {
@@ -1232,7 +1638,7 @@ impl PartialAgg {
                 }
             },
             PartialAgg::IntSum { isums, fsums, overflowed, any } => {
-                let (data, valid) = match &args[0] {
+                let (data, valid) = match args[0] {
                     Column::Int64 { data, valid } => (data, valid.as_deref()),
                     other => bail!("SUM partial over {:?}", other.data_type()),
                 };
@@ -1256,7 +1662,7 @@ impl PartialAgg {
                 }
             }
             PartialAgg::FloatSum { sums, any } => {
-                let (data, valid) = match &args[0] {
+                let (data, valid) = match args[0] {
                     Column::Float64 { data, valid } => (data, valid.as_deref()),
                     other => bail!("SUM partial over {:?}", other.data_type()),
                 };
@@ -1270,7 +1676,7 @@ impl PartialAgg {
             }
             PartialAgg::NullAgg => {
                 let what = if matches!(call.func, AggFunc::Sum) { "SUM" } else { "AVG" };
-                let col = &args[0];
+                let col = args[0];
                 for k in 0..gids.len() {
                     let r = offset + k;
                     if col.is_valid(r) {
@@ -1278,7 +1684,7 @@ impl PartialAgg {
                     }
                 }
             }
-            PartialAgg::Avg { sums, counts } => match &args[0] {
+            PartialAgg::Avg { sums, counts } => match args[0] {
                 Column::Int64 { data, valid } => {
                     let valid = valid.as_deref();
                     for (k, &g) in gids.iter().enumerate() {
@@ -1302,7 +1708,7 @@ impl PartialAgg {
                 other => bail!("AVG partial over {:?}", other.data_type()),
             },
             PartialAgg::MinMax { best, is_min } => {
-                let col = &args[0];
+                let col = args[0];
                 let is_min = *is_min;
                 for (k, &g) in gids.iter().enumerate() {
                     let r = offset + k;
@@ -1339,7 +1745,7 @@ impl PartialAgg {
     /// absorbed span differs from the sequential scan's, so MIN/MAX over
     /// NaN-bearing floats can pick a different — equally NaN-shadowed —
     /// row.)
-    fn merge(&mut self, other: PartialAgg, map: &[u32], args: &[Column]) -> Result<()> {
+    fn merge(&mut self, other: PartialAgg, map: &[u32], args: &[&Column]) -> Result<()> {
         match (self, other) {
             (PartialAgg::CountStar(g), PartialAgg::CountStar(l))
             | (PartialAgg::Count(g), PartialAgg::Count(l)) => {
@@ -1398,7 +1804,7 @@ impl PartialAgg {
                 }
             }
             (PartialAgg::MinMax { best, is_min }, PartialAgg::MinMax { best: lb, .. }) => {
-                let col = &args[0];
+                let col = args[0];
                 for lg in 0..map.len() {
                     if lb[lg] < 0 {
                         continue;
@@ -1426,7 +1832,7 @@ impl PartialAgg {
     fn finish(
         self,
         call: &AggCall,
-        args: &[Column],
+        args: &[&Column],
         n_groups: usize,
         ctx: &ExecContext,
     ) -> Result<Column> {
@@ -1489,22 +1895,23 @@ impl PartialAgg {
     }
 }
 
-/// Morsel-parallel aggregation: every worker builds a thread-local
-/// key-codec table (dense local group ids in first-seen order) plus
-/// mergeable per-group partials for its contiguous row range; the merge
-/// pass then re-keys local representatives into global dense ids — the
-/// morsel-order walk reproduces the sequential first-seen group order —
-/// and folds the partials (UDAF states fold through
-/// [`UdafState::merge`]). Output matches `aggregate_vectorized` exactly,
-/// up to float-summation re-association across morsel boundaries.
+/// Morsel-dispatched aggregation: every morsel builds a local key-codec
+/// table (dense local group ids in first-seen order) plus mergeable
+/// per-group partials over the node-local copy of the key/argument
+/// columns; the leader's merge pass then re-keys local representatives
+/// into global dense ids — the morsel-order walk reproduces the
+/// sequential first-seen group order — and folds the partials (UDAF
+/// states fold through [`UdafState::merge`]). Output matches
+/// `aggregate_vectorized` exactly, up to float-summation re-association
+/// across morsel boundaries (and the morsel layout is shape-independent,
+/// so every parallel shape agrees bit-for-bit).
 fn aggregate_parallel(
-    rows: &RowSet,
     group: &[(Expr, String)],
     aggs: &[AggCall],
     key_cols: &[Column],
     arg_cols: &[Vec<Column>],
     ctx: &ExecContext,
-    threads: usize,
+    ranges: &[(usize, usize)],
 ) -> Result<RowSet> {
     struct MorselAgg {
         /// Global row index of each local group's first row.
@@ -1512,35 +1919,86 @@ fn aggregate_parallel(
         /// One partial per aggregate call.
         partials: Vec<PartialAgg>,
     }
-    let n = rows.num_rows();
-    let ranges = morsel_ranges(n, threads);
-    let morsels: Vec<MorselAgg> = par_morsels(&ranges, |_, off, len| {
-        let (gids, rep_rows, n_local) = if group.is_empty() {
-            // Global aggregation: one group per (non-empty) morsel.
-            (vec![0u32; len], Vec::new(), 1)
-        } else {
-            let mut dict = KeyDict::new();
-            let keys = EncodedKeys::encode_range(key_cols, off, len, KeyMode::Group, &mut dict);
-            let g = assign_group_ids(&keys);
-            let n_local = g.n_groups();
-            (g.ids, g.rep_rows.iter().map(|&r| r + off).collect(), n_local)
-        };
-        let partials = aggs
-            .iter()
-            .zip(arg_cols)
-            .map(|(call, cols)| {
-                let mut p = PartialAgg::empty(call, cols, n_local, ctx)?;
-                p.update(call, cols, off, &gids)?;
-                Ok(p)
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(MorselAgg { rep_rows, partials })
-    })?;
+    // Node payload: the group key columns, then every call's argument
+    // columns (names are synthetic — only positions matter).
+    let mut fields = Vec::new();
+    let mut cols: Vec<&Column> = Vec::new();
+    for (i, c) in key_cols.iter().enumerate() {
+        fields.push(Field::new(format!("__k{i}"), c.data_type()));
+        cols.push(c);
+    }
+    for (ai, call_args) in arg_cols.iter().enumerate() {
+        for (j, c) in call_args.iter().enumerate() {
+            fields.push(Field::new(format!("__a{ai}_{j}"), c.data_type()));
+            cols.push(c);
+        }
+    }
+    let n_keys = key_cols.len();
+    let arity: Vec<usize> = arg_cols.iter().map(Vec::len).collect();
+    let morsels: Vec<MorselAgg> = dispatch_morsels(
+        ctx,
+        &fields,
+        &cols,
+        ranges,
+        |_, _| Ok(()),
+        |_, local, m| {
+            let local_keys = &local[..n_keys];
+            let mut at = n_keys;
+            let local_args: Vec<&[&Column]> = arity
+                .iter()
+                .map(|&k| {
+                    let s = &local[at..at + k];
+                    at += k;
+                    s
+                })
+                .collect();
+            let (gids, rep_rows, n_local) = if group.is_empty() {
+                // Global aggregation: one group per (non-empty) morsel.
+                (vec![0u32; m.len], Vec::new(), 1)
+            } else {
+                let mut dict = KeyDict::new();
+                let keys = EncodedKeys::encode_range(
+                    local_keys,
+                    m.local,
+                    m.len,
+                    KeyMode::Group,
+                    &mut dict,
+                );
+                let g = assign_group_ids(&keys);
+                let n_local = g.n_groups();
+                (g.ids, g.rep_rows.iter().map(|&r| r + m.global).collect(), n_local)
+            };
+            let partials = aggs
+                .iter()
+                .zip(&local_args)
+                .map(|(call, call_args)| {
+                    let mut p = PartialAgg::empty(call, call_args, n_local, ctx)?;
+                    p.update(call, call_args, m.local, &gids)?;
+                    // MIN/MAX partials hold row indices into the
+                    // node-local copy; the leader's merge and finish
+                    // gather from the original full columns, so rebase
+                    // them to global row indices (decoded values equal
+                    // the originals, so comparisons are unaffected).
+                    if let PartialAgg::MinMax { best, .. } = &mut p {
+                        let delta = (m.global - m.local) as i64;
+                        for b in best.iter_mut() {
+                            if *b >= 0 {
+                                *b += delta;
+                            }
+                        }
+                    }
+                    Ok(p)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(MorselAgg { rep_rows, partials })
+        },
+    )?;
 
-    // Merge pass: assign global dense group ids over the morsels' local
-    // representatives, walked in morsel order — which is exactly the
-    // sequential first-seen order, because earlier morsels cover earlier
-    // rows and a key's first morsel holds its first row.
+    // Merge pass (on the leader, over the original columns): assign
+    // global dense group ids over the morsels' local representatives,
+    // walked in morsel order — which is exactly the sequential
+    // first-seen order, because earlier morsels cover earlier rows and a
+    // key's first morsel holds its first row.
     let (n_groups, group_maps, global_reps) = if group.is_empty() {
         (1usize, vec![vec![0u32]; morsels.len()], Vec::new())
     } else {
@@ -1560,14 +2018,18 @@ fn aggregate_parallel(
         (merged.n_groups(), maps, reps)
     };
 
+    let arg_refs: Vec<Vec<&Column>> =
+        arg_cols.iter().map(|call_args| call_args.iter().collect()).collect();
     let mut merged_partials: Vec<PartialAgg> = aggs
         .iter()
-        .zip(arg_cols)
-        .map(|(call, cols)| PartialAgg::empty(call, cols, n_groups, ctx))
+        .zip(&arg_refs)
+        .map(|(call, call_args)| PartialAgg::empty(call, call_args, n_groups, ctx))
         .collect::<Result<_>>()?;
     for (m, map) in morsels.into_iter().zip(&group_maps) {
-        for ((global, local), cols) in merged_partials.iter_mut().zip(m.partials).zip(arg_cols) {
-            global.merge(local, map, cols)?;
+        for ((global, local), call_args) in
+            merged_partials.iter_mut().zip(m.partials).zip(&arg_refs)
+        {
+            global.merge(local, map, call_args)?;
         }
     }
 
@@ -1578,8 +2040,8 @@ fn aggregate_parallel(
         fields.push(Field::new(name.clone(), out.data_type()));
         columns.push(out);
     }
-    for ((call, cols), partial) in aggs.iter().zip(arg_cols).zip(merged_partials) {
-        let out = partial.finish(call, cols, n_groups, ctx)?;
+    for ((call, call_args), partial) in aggs.iter().zip(&arg_refs).zip(merged_partials) {
+        let out = partial.finish(call, call_args, n_groups, ctx)?;
         fields.push(Field::new(call.out_name.clone(), out.data_type()));
         columns.push(out);
     }
@@ -1734,6 +2196,36 @@ fn plan_alias(p: &Plan, default: &str) -> String {
     }
 }
 
+/// Enumerate one probe row's matches into the output index vectors —
+/// the single source of truth for probe semantics on both the
+/// sequential and the morsel-dispatched path: NULL keys never match
+/// (SQL), matches emit in the table's ascending build-row order, and an
+/// unmatched left-join row emits one `-1` (NULL) pad. `key_row` indexes
+/// `keys`; `out_row` is the probe row's global index.
+#[allow(clippy::too_many_arguments)]
+fn probe_one(
+    keys: &EncodedKeys,
+    key_row: usize,
+    out_row: usize,
+    table: &PartitionedJoinTable,
+    kind: JoinKind,
+    l_idx: &mut Vec<i64>,
+    r_idx: &mut Vec<i64>,
+) {
+    let mut matched = false;
+    if !keys.has_null(key_row) {
+        for j in table.matches(keys.key(key_row), keys.hash(key_row)) {
+            l_idx.push(out_row as i64);
+            r_idx.push(j as i64);
+            matched = true;
+        }
+    }
+    if !matched && kind == JoinKind::Left {
+        l_idx.push(out_row as i64);
+        r_idx.push(-1);
+    }
+}
+
 /// Hash join (equi) with optional residual filter; falls back to a
 /// nested-loop cross product + filter when no equi keys exist. The
 /// vectorized path builds its table from codec-encoded keys and probes
@@ -1812,15 +2304,16 @@ fn join(
             // equal ids; one hash per row, zero key clones.
             let mut dict = KeyDict::new();
             let build_keys = EncodedKeys::encode(&rkey_cols, KeyMode::Join, &mut dict);
-            let probe_keys = EncodedKeys::encode(&lkey_cols, KeyMode::Join, &mut dict);
             // Build the shared table, hash-partitioned across workers
             // when the build side is large: one O(n) pass routes each
             // non-NULL build row to its partition, then the sub-tables
             // build concurrently from their (ascending) row lists. Equal
             // keys share a hash, so every partition owns all rows of its
             // keys and the combined table behaves exactly like a
-            // single-table build.
-            let n_parts = parallel_threads(r.num_rows(), ctx);
+            // single-table build. The build runs on the leader, so it
+            // gets the leader's per-node worker budget (the partitioned
+            // table is probe-identical at any partition count).
+            let n_parts = parallel_threads(r.num_rows(), ctx).min(ctx.parallelism.max(1));
             let parts: Vec<JoinTable> = if n_parts > 1 {
                 let mut part_rows: Vec<Vec<u32>> = vec![Vec::new(); n_parts];
                 for row in 0..build_keys.len() {
@@ -1847,39 +2340,62 @@ fn join(
             // Probe in row order; per-row match enumeration is what the
             // sequential loop does, so per-morsel output segments
             // concatenate to the identical (l_idx, r_idx) sequence.
-            let probe_row = |i: usize, li: &mut Vec<i64>, ri: &mut Vec<i64>| {
-                let mut matched = false;
-                if !probe_keys.has_null(i) {
-                    // SQL join: NULL keys never match.
-                    for j in table.matches(probe_keys.key(i), probe_keys.hash(i)) {
-                        li.push(i as i64);
-                        ri.push(j as i64);
-                        matched = true;
+            match parallel_ranges(l.num_rows(), ctx) {
+                Some(ranges) => {
+                    // Probe morsels dispatch across nodes: the build
+                    // table is shared (a broadcast build), each node
+                    // re-encodes its shipped probe-key span starting
+                    // from a clone of the build dict — build-side
+                    // strings keep their ids, probe-only strings get
+                    // fresh non-matching ids — so the match sets are
+                    // identical to the leader's single encoding.
+                    let fields: Vec<Field> = lkey_cols
+                        .iter()
+                        .enumerate()
+                        .map(|(i, c)| Field::new(format!("__j{i}"), c.data_type()))
+                        .collect();
+                    let cols: Vec<&Column> = lkey_cols.iter().collect();
+                    let dict = &dict;
+                    let table = &table;
+                    let segments = dispatch_morsels(
+                        ctx,
+                        &fields,
+                        &cols,
+                        &ranges,
+                        |local, (span_off, span_len)| {
+                            // Encode only the node's own span (the
+                            // leader's local columns are the full probe
+                            // side — encoding past its span would be
+                            // discarded work).
+                            let mut d = dict.clone();
+                            Ok(EncodedKeys::encode_range(
+                                local,
+                                span_off,
+                                span_len,
+                                KeyMode::Join,
+                                &mut d,
+                            ))
+                        },
+                        |keys, _, m| {
+                            let mut li = Vec::new();
+                            let mut ri = Vec::new();
+                            for k in 0..m.len {
+                                let (key_row, out_row) = (m.span + k, m.global + k);
+                                probe_one(keys, key_row, out_row, table, kind, &mut li, &mut ri);
+                            }
+                            Ok((li, ri))
+                        },
+                    )?;
+                    for (li, ri) in segments {
+                        l_idx.extend_from_slice(&li);
+                        r_idx.extend_from_slice(&ri);
                     }
                 }
-                if !matched && kind == JoinKind::Left {
-                    li.push(i as i64);
-                    ri.push(-1);
-                }
-            };
-            let probe_threads = parallel_threads(l.num_rows(), ctx);
-            if probe_threads > 1 {
-                let ranges = morsel_ranges(l.num_rows(), probe_threads);
-                let segments = par_morsels(&ranges, |_, off, len| {
-                    let mut li = Vec::new();
-                    let mut ri = Vec::new();
-                    for i in off..off + len {
-                        probe_row(i, &mut li, &mut ri);
+                None => {
+                    let probe_keys = EncodedKeys::encode(&lkey_cols, KeyMode::Join, &mut dict);
+                    for i in 0..l.num_rows() {
+                        probe_one(&probe_keys, i, i, &table, kind, &mut l_idx, &mut r_idx);
                     }
-                    Ok((li, ri))
-                })?;
-                for (li, ri) in segments {
-                    l_idx.extend_from_slice(&li);
-                    r_idx.extend_from_slice(&ri);
-                }
-            } else {
-                for i in 0..l.num_rows() {
-                    probe_row(i, &mut l_idx, &mut r_idx);
                 }
             }
         } else {
@@ -2005,11 +2521,17 @@ fn materialize_join(
 ) -> Result<RowSet> {
     let ln = l.num_columns();
     let n_cols = ln + r.num_columns();
-    let threads = parallel_threads(l_idx.len(), ctx).min(n_cols);
+    // Materialization happens on the leader, so it gets the leader's
+    // per-node worker budget (`parallelism`), not the warehouse-wide
+    // width.
+    let threads = parallel_threads(l_idx.len(), ctx)
+        .min(ctx.parallelism.max(1))
+        .min(n_cols);
     if threads > 1 && n_cols > 1 {
-        // Wide outputs gather concurrently: columns chunk across at most
-        // `ctx.parallelism` workers; each per-column gather is unchanged,
-        // so the rowset is identical.
+        // Wide outputs gather on the leader, one column per task on the
+        // stealing workers (wide string columns no longer gate narrow
+        // ones); each per-column gather is unchanged, so the rowset is
+        // identical.
         let gather_col = |ci: usize| {
             if ci < ln {
                 l.column(ci).gather_opt(l_idx)
@@ -2017,10 +2539,18 @@ fn materialize_join(
                 r.column(ci - ln).gather_opt(r_idx)
             }
         };
-        let chunks = par_morsels(&morsel_ranges(n_cols, threads), |_, off, len| {
-            Ok((off..off + len).map(|ci| gather_col(ci)).collect::<Vec<Column>>())
-        })?;
-        let columns: Vec<Column> = chunks.into_iter().flatten().collect();
+        let cfg = StealConfig::new(threads, ctx.steal);
+        let (columns, tally) = run_stealing(n_cols, &cfg, |_w, ci| Ok(gather_col(ci)))?;
+        // Column-gather tasks are not row morsels, but their steals are
+        // real scheduler activity — surface them on the leader's slot.
+        ctx.tally.record(
+            0,
+            NodeCounters {
+                steals: tally.steals,
+                stolen_tasks: tally.stolen_tasks,
+                ..Default::default()
+            },
+        );
         return RowSet::new(schema.clone(), columns);
     }
     let left = l.gather(l_idx, false);
@@ -2128,8 +2658,9 @@ fn apply_order<F: FnMut(&usize, &usize) -> Ordering>(
 /// Merge per-morsel sorted runs under the strict total order `cmp`,
 /// optionally stopping after `limit` outputs. Because the order is total
 /// (index tiebreak — no two rows compare equal), the merged sequence is
-/// the unique globally sorted order, and per-run top-k truncation cannot
-/// drop a global top-k row.
+/// the unique globally sorted order — independent of the run
+/// decomposition and of the merge strategy — and per-run top-k
+/// truncation cannot drop a global top-k row.
 fn kway_merge<F: Fn(usize, usize) -> Ordering>(
     runs: Vec<Vec<usize>>,
     limit: Option<usize>,
@@ -2139,22 +2670,69 @@ fn kway_merge<F: Fn(usize, usize) -> Ordering>(
     let want = limit.map_or(total, |k| k.min(total));
     let mut pos = vec![0usize; runs.len()];
     let mut out = Vec::with_capacity(want);
-    while out.len() < want {
-        // Linear scan over run heads: the run count is the worker-thread
-        // count, so a heap would not pay for itself.
-        let mut best: Option<usize> = None;
-        for (ri, run) in runs.iter().enumerate() {
-            if pos[ri] >= run.len() {
-                continue;
+    if runs.len() <= 8 {
+        // Few runs: a linear scan over run heads beats heap bookkeeping.
+        while out.len() < want {
+            let mut best: Option<usize> = None;
+            for (ri, run) in runs.iter().enumerate() {
+                if pos[ri] >= run.len() {
+                    continue;
+                }
+                best = match best {
+                    Some(b) if cmp(run[pos[ri]], runs[b][pos[b]]) != Ordering::Less => Some(b),
+                    _ => Some(ri),
+                };
             }
-            best = match best {
-                Some(b) if cmp(run[pos[ri]], runs[b][pos[b]]) != Ordering::Less => Some(b),
-                _ => Some(ri),
-            };
+            let b = best.expect("runs exhausted before limit");
+            out.push(runs[b][pos[b]]);
+            pos[b] += 1;
         }
-        let b = best.expect("runs exhausted before limit");
+        return out;
+    }
+    // Many runs (morsel-granular dispatch): a binary min-heap of run
+    // heads — O(log r) compares per output instead of O(r).
+    fn sift_down<F: Fn(usize, usize) -> Ordering>(
+        heap: &mut [usize],
+        runs: &[Vec<usize>],
+        pos: &[usize],
+        cmp: &F,
+        mut i: usize,
+    ) {
+        let less = |a: usize, b: usize| cmp(runs[a][pos[a]], runs[b][pos[b]]) == Ordering::Less;
+        loop {
+            let l = 2 * i + 1;
+            if l >= heap.len() {
+                break;
+            }
+            let mut c = l;
+            let r = l + 1;
+            if r < heap.len() && less(heap[r], heap[l]) {
+                c = r;
+            }
+            if less(heap[c], heap[i]) {
+                heap.swap(c, i);
+                i = c;
+            } else {
+                break;
+            }
+        }
+    }
+    let mut heap: Vec<usize> = (0..runs.len()).filter(|&ri| !runs[ri].is_empty()).collect();
+    for i in (0..heap.len() / 2).rev() {
+        sift_down(&mut heap, &runs, &pos, &cmp, i);
+    }
+    while out.len() < want {
+        let b = *heap.first().expect("runs exhausted before limit");
         out.push(runs[b][pos[b]]);
         pos[b] += 1;
+        if pos[b] == runs[b].len() {
+            let tail = heap.pop().expect("non-empty heap");
+            if heap.is_empty() {
+                continue;
+            }
+            heap[0] = tail;
+        }
+        sift_down(&mut heap, &runs, &pos, &cmp, 0);
     }
     out
 }
@@ -2163,10 +2741,11 @@ fn kway_merge<F: Fn(usize, usize) -> Ordering>(
 /// once — typed slices + validity — instead of materializing two `Value`s
 /// per comparison. The comparator is a strict total order (index
 /// tiebreak), so top-k output is identical to sort-then-limit. Large
-/// inputs sort as per-morsel runs on worker threads (each run top-k
-/// truncated when a limit is set) followed by a k-way merge; the total
-/// order makes the result identical to the sequential sort at any thread
-/// count.
+/// inputs sort as per-morsel runs dispatched across nodes and stealing
+/// workers (each run top-k truncated when a limit is set, each node
+/// sorting its shipped key-column span locally), followed by the
+/// leader's k-way merge; the total order makes the result identical to
+/// the sequential sort at any `(nodes × threads)` shape.
 fn sort(
     rows: &RowSet,
     keys: &[OrderKey],
@@ -2181,20 +2760,45 @@ fn sort(
     if ctx.vectorized {
         let dk = decorate(keys, &key_cols);
         let cmp = |a: usize, b: usize| cmp_decorated(&dk, a, b).then_with(|| a.cmp(&b));
-        let threads = parallel_threads(n, ctx);
-        let idx = if threads > 1 && limit != Some(0) {
-            let runs = par_morsels(&morsel_ranges(n, threads), |_, off, len| {
-                let mut run: Vec<usize> = (off..off + len).collect();
+        let ranges = if limit == Some(0) { None } else { parallel_ranges(n, ctx) };
+        let idx = match ranges {
+            Some(ranges) => {
+                let fields: Vec<Field> = key_cols
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| Field::new(format!("__s{i}"), c.data_type()))
+                    .collect();
+                let cols: Vec<&Column> = key_cols.iter().collect();
+                let runs = dispatch_morsels(
+                    ctx,
+                    &fields,
+                    &cols,
+                    &ranges,
+                    |_, _| Ok(()),
+                    |_, local, m| {
+                        // Sort the morsel over the node-local key slice;
+                        // local index order mirrors global order (the
+                        // offset shift is monotonic), so the local index
+                        // tiebreak is the global one.
+                        let mcols: Vec<Column> =
+                            local.iter().map(|c| c.slice(m.local, m.len)).collect();
+                        let mdk = decorate(keys, &mcols);
+                        let mut run: Vec<usize> = (0..m.len).collect();
+                        let mut c = |a: &usize, b: &usize| {
+                            cmp_decorated(&mdk, *a, *b).then_with(|| a.cmp(b))
+                        };
+                        apply_order(&mut run, limit, &mut c);
+                        Ok(run.into_iter().map(|i| i + m.global).collect::<Vec<usize>>())
+                    },
+                )?;
+                kway_merge(runs, limit, cmp)
+            }
+            None => {
+                let mut idx: Vec<usize> = (0..n).collect();
                 let mut c = |a: &usize, b: &usize| cmp(*a, *b);
-                apply_order(&mut run, limit, &mut c);
-                Ok(run)
-            })?;
-            kway_merge(runs, limit, cmp)
-        } else {
-            let mut idx: Vec<usize> = (0..n).collect();
-            let mut c = |a: &usize, b: &usize| cmp(*a, *b);
-            apply_order(&mut idx, limit, &mut c);
-            idx
+                apply_order(&mut idx, limit, &mut c);
+                idx
+            }
         };
         Ok(rows.take(&idx))
     } else {
@@ -2619,14 +3223,16 @@ mod tests {
             let seq = run_sql(
                 q,
                 &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
-                    .with_parallelism(1),
+                    .with_parallelism(1)
+                    .with_nodes(1),
             )
             .unwrap_or_else(|e| panic!("{q}: {e}"));
             for p in [2usize, 8] {
                 let par = run_sql(
                     q,
                     &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
-                        .with_parallelism(p),
+                        .with_parallelism(p)
+                        .with_nodes(1),
                 )
                 .unwrap_or_else(|e| panic!("{q} (parallelism {p}): {e}"));
                 assert_eq!(par, seq, "{q} at parallelism {p}");
@@ -2635,20 +3241,85 @@ mod tests {
     }
 
     #[test]
+    fn node_dispatch_matches_sequential_and_reports() {
+        let catalog = big_catalog();
+        let q = "SELECT k, COUNT(*) AS n, SUM(v) AS s, MIN(v) AS lo FROM facts GROUP BY k";
+        let seq = run_sql(
+            q,
+            &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(1)
+                .with_nodes(1),
+        )
+        .unwrap();
+        for (nodes, threads) in [(2usize, 4usize), (4, 2)] {
+            let ctx = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(threads)
+                .with_nodes(nodes);
+            let (out, stats) = run_sql_with_stats(q, &ctx).unwrap();
+            assert_eq!(out, seq, "({nodes} nodes, {threads} threads)");
+            assert_eq!(stats.node_stats.len(), nodes, "({nodes},{threads})");
+            // The leader reads its own memory; every remote node paid
+            // wire bytes for its span.
+            assert_eq!(stats.node_stats[0].wire_bytes, 0);
+            for (i, c) in stats.node_stats.iter().enumerate().skip(1) {
+                assert!(c.wire_bytes > 0, "node {i} shipped nothing: {c:?}");
+                assert!(c.morsels > 0, "node {i} ran nothing: {c:?}");
+            }
+            assert!(stats.per_node_morsels().iter().sum::<u64>() >= nodes as u64);
+            let report = stats.report();
+            assert!(report.contains("node"), "{report}");
+        }
+    }
+
+    #[test]
+    fn static_dispatch_matches_stealing() {
+        let catalog = big_catalog();
+        for q in [
+            "SELECT k, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY k",
+            "SELECT facts.k, label FROM facts JOIN dim ON facts.k = dim.k",
+            "SELECT k, v FROM facts ORDER BY v DESC, k LIMIT 50",
+        ] {
+            let steal = run_sql(
+                q,
+                &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                    .with_parallelism(4)
+                    .with_nodes(2),
+            )
+            .unwrap();
+            let fixed = run_sql(
+                q,
+                &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                    .with_parallelism(4)
+                    .with_nodes(2)
+                    .with_stealing(false),
+            )
+            .unwrap();
+            assert_eq!(steal, fixed, "{q}");
+        }
+    }
+
+    #[test]
     fn query_stats_count_morsels() {
         let catalog = big_catalog();
         let seq = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
-            .with_parallelism(1);
+            .with_parallelism(1)
+            .with_nodes(1);
         let (_, stats) =
             run_sql_with_stats("SELECT k, COUNT(*) AS n FROM facts GROUP BY k", &seq).unwrap();
         assert_eq!(stats.aggregate.morsels, 1);
         assert_eq!(stats.aggregate.max_threads, 1);
-        let par = ExecContext::new(catalog, Arc::new(UdfRegistry::new())).with_parallelism(4);
+        assert!(stats.node_stats.is_empty());
+        let par = ExecContext::new(catalog, Arc::new(UdfRegistry::new()))
+            .with_parallelism(4)
+            .with_nodes(1);
         let (_, stats) =
             run_sql_with_stats("SELECT k, COUNT(*) AS n FROM facts GROUP BY k", &par).unwrap();
-        assert_eq!(stats.aggregate.max_threads, 4); // 40 000 rows / 4096 ≥ 4
-        assert_eq!(stats.aggregate.morsels, 4);
+        // 40 000 rows / 4096 = 9 morsels (a function of n only), run by
+        // up to 4 workers.
+        assert_eq!(stats.aggregate.morsels, 9);
+        assert_eq!(stats.aggregate.max_threads, 4);
         let report = stats.report();
         assert!(report.contains("morsels"), "{report}");
+        assert!(report.contains("steals"), "{report}");
     }
 }

@@ -57,6 +57,7 @@
 //!   ints so `a.id = b.id_float` matches; rows with a NULL key are flagged
 //!   (`has_null`) so the operators can apply "NULL never matches".
 
+use std::borrow::Borrow;
 use std::collections::HashMap;
 
 use crate::types::Column;
@@ -84,8 +85,13 @@ pub enum KeyMode {
 }
 
 /// Per-batch string interner. Share one dict across the build and probe
-/// sides of a join so equal strings on both sides get equal ids.
-#[derive(Debug, Default)]
+/// sides of a join so equal strings on both sides get equal ids. Cloning
+/// is how a node-dispatched probe starts from the build side's
+/// assignments: build-side strings keep their ids in every clone (so
+/// matches compare equal), and strings first seen on a probe span get
+/// fresh ids ≥ the build count, which match no build row regardless of
+/// which clone assigned them.
+#[derive(Debug, Default, Clone)]
 pub struct KeyDict {
     ids: HashMap<String, u64>,
 }
@@ -130,9 +136,14 @@ pub struct EncodedKeys {
 
 impl EncodedKeys {
     /// Encode `cols` (all the same length) under `mode`, interning strings
-    /// into `dict`.
-    pub fn encode(cols: &[Column], mode: KeyMode, dict: &mut KeyDict) -> EncodedKeys {
-        let n = cols.first().map_or(0, Column::len);
+    /// into `dict`. Accepts owned or borrowed column slices
+    /// (`&[Column]` / `&[&Column]`).
+    pub fn encode<C: Borrow<Column>>(
+        cols: &[C],
+        mode: KeyMode,
+        dict: &mut KeyDict,
+    ) -> EncodedKeys {
+        let n = cols.first().map_or(0, |c| c.borrow().len());
         EncodedKeys::encode_range(cols, 0, n, mode, dict)
     }
 
@@ -141,8 +152,8 @@ impl EncodedKeys {
     /// source row `offset + r`; this is what lets morsel-parallel
     /// operators encode their row range without slicing (copying) the
     /// key columns first.
-    pub fn encode_range(
-        cols: &[Column],
+    pub fn encode_range<C: Borrow<Column>>(
+        cols: &[C],
         offset: usize,
         len: usize,
         mode: KeyMode,
@@ -152,6 +163,7 @@ impl EncodedKeys {
         let mut buf = vec![0u8; len * stride];
         let mut nulls = vec![false; len];
         for (j, col) in cols.iter().enumerate() {
+            let col = col.borrow();
             let off = j * KEY_WIDTH;
             let valid = col.validity();
             match col {

@@ -6,8 +6,11 @@
 //! scan, filter, project, hash aggregate, hash join, sort, limit, UDF/UDTF
 //! execution, and the exchange operator implementing row redistribution.
 //! The hot operators are morsel-driven parallel: large inputs split into
-//! contiguous row ranges executed on scoped worker threads, capped by
-//! [`ExecContext::parallelism`] (see `exec` module docs).
+//! contiguous row-range morsels dispatched across warehouse nodes
+//! ([`ExecContext::nodes`], spans shipped through the columnar exchange)
+//! and, within a node, run on the work-stealing scheduler in
+//! [`morsel`], capped by [`ExecContext::parallelism`] (see `exec`
+//! module docs).
 
 mod catalog;
 mod exec;
@@ -15,13 +18,15 @@ pub mod exchange;
 mod expr;
 pub mod hash;
 mod key;
+pub mod morsel;
 mod plan;
 
 pub use catalog::{parse_csv, Catalog};
 pub use exec::{
-    default_parallelism, execute_plan, execute_plan_with_stats, run_sql, run_sql_with_stats,
-    ExecContext, OpStats, QueryStats, MORSEL_MIN_ROWS,
+    default_nodes, default_parallelism, execute_plan, execute_plan_with_stats, run_sql,
+    run_sql_with_stats, ExecContext, OpStats, QueryStats, MORSEL_MIN_ROWS,
 };
+pub use morsel::{run_stealing, ExecTally, NodeCounters, StealConfig, StealTally};
 pub use expr::{
     eval_expr, eval_expr_rowwise, eval_predicate, eval_predicate_rowwise, eval_row,
     resolve_column,

@@ -1,0 +1,427 @@
+//! Work-stealing morsel scheduler (std-only).
+//!
+//! PR 3 parallelized the hot operators with *static* range assignment:
+//! one contiguous morsel per worker thread. That collapses under skew —
+//! a worker that draws the expensive rows (a hot join key under a Zipf
+//! distribution, a high-cardinality aggregation span, a noisy-neighbor
+//! core) becomes the straggler while its peers idle. This module replaces
+//! the static plan with the classic work-stealing design:
+//!
+//! - a **lock-free global queue** of morsel (task) descriptors — an
+//!   atomic cursor over the task index space; workers claim chunks with
+//!   one `fetch_add`;
+//! - a **per-worker deque** (`Mutex<VecDeque>`, locked only for O(1)
+//!   pushes/pops — lock-light, never held across task execution). The
+//!   owner pops LIFO (hot end); thieves **steal half** from the FIFO end,
+//!   so a victim keeps the work it is about to touch and a single steal
+//!   rebalances a large backlog;
+//! - workers fall back to stealing only when the global queue is drained,
+//!   and exit when no work is visible anywhere.
+//!
+//! Determinism: results are keyed by task index and returned in task
+//! order, so the caller's merge (column concatenation, dense-group-id
+//! re-keying, k-way run merging) sees exactly the sequential order no
+//! matter which worker ran which morsel. The first error in *task* order
+//! wins, matching sequential evaluation.
+//!
+//! [`StealConfig::steal`]` = false` degrades to the PR 3 static plan
+//! (contiguous pre-seeded blocks, no refill, no stealing) — kept as the
+//! ablation baseline (`distributed_morsels`, A10).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Sets the shared flag if its thread unwinds, so peers spin-waiting for
+/// work stop instead of hanging and the panic propagates at join.
+struct PanicFlag<'a>(&'a AtomicBool);
+
+impl Drop for PanicFlag<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Shape of one scheduler run.
+#[derive(Debug, Clone, Copy)]
+pub struct StealConfig {
+    /// Worker threads (clamped to the task count; `1` runs inline).
+    pub workers: usize,
+    /// Tasks claimed from the global queue per refill; `0` picks
+    /// `max(1, tasks / (workers * 4))` so each worker refills a few
+    /// times and deques stay deep enough to steal from.
+    pub chunk: usize,
+    /// `false` pre-seeds each worker with a contiguous block and turns
+    /// off refills and steals — the static-assignment baseline.
+    pub steal: bool,
+}
+
+impl StealConfig {
+    /// Config with the automatic chunk size.
+    pub fn new(workers: usize, steal: bool) -> Self {
+        Self { workers, chunk: 0, steal }
+    }
+
+    fn chunk_for(&self, n_tasks: usize) -> usize {
+        if self.chunk > 0 {
+            self.chunk
+        } else {
+            (n_tasks / (self.workers.max(1) * 4)).max(1)
+        }
+    }
+}
+
+/// What one scheduler run did (feeds `QueryStats` per-node counters).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StealTally {
+    /// Tasks executed (the full task count on success).
+    pub tasks: u64,
+    /// Successful steal events (one victim raid each).
+    pub steals: u64,
+    /// Tasks moved by those raids.
+    pub stolen_tasks: u64,
+    /// Worker threads used.
+    pub workers: u64,
+}
+
+/// Run `f(worker, task)` for every task in `0..n_tasks` on `cfg.workers`
+/// work-stealing workers, returning the results in task order plus the
+/// steal tally. With one worker (or ≤ 1 task) everything runs inline on
+/// the calling thread in ascending task order — the exact sequential
+/// path. Worker panics propagate; the first error in task order wins.
+pub fn run_stealing<T, F>(n_tasks: usize, cfg: &StealConfig, f: F) -> Result<(Vec<T>, StealTally)>
+where
+    T: Send,
+    F: Fn(usize, usize) -> Result<T> + Sync,
+{
+    let workers = cfg.workers.clamp(1, n_tasks.max(1));
+    let mut tally = StealTally {
+        tasks: n_tasks as u64,
+        workers: workers as u64,
+        ..Default::default()
+    };
+    if workers <= 1 || n_tasks <= 1 {
+        let mut out = Vec::with_capacity(n_tasks);
+        for t in 0..n_tasks {
+            out.push(f(0, t)?);
+        }
+        return Ok((out, tally));
+    }
+
+    let next = AtomicUsize::new(0);
+    let steals = AtomicU64::new(0);
+    let stolen = AtomicU64::new(0);
+    let deques: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    if !cfg.steal {
+        // Static assignment: contiguous blocks, nothing else ever moves.
+        let base = n_tasks / workers;
+        let rem = n_tasks % workers;
+        let mut off = 0;
+        for (w, dq) in deques.iter().enumerate() {
+            let len = base + usize::from(w < rem);
+            dq.lock().unwrap().extend(off..off + len);
+            off += len;
+        }
+    }
+    let chunk = cfg.chunk_for(n_tasks);
+    let completed = AtomicUsize::new(0);
+    let executing = AtomicUsize::new(0);
+    let panicked = AtomicBool::new(false);
+    // Lowest failing task index seen so far (`usize::MAX` = none).
+    // Tasks *above* it are skipped instead of executed: the run's result
+    // is decided by the minimum failing index, every task below the
+    // current minimum still runs (so a lower-index failure can still
+    // claim the result), and skipped results would be discarded anyway —
+    // identical outcome to running everything, without burning full
+    // evaluation (and cross-node transport) on a query that has already
+    // failed.
+    let first_err = AtomicUsize::new(usize::MAX);
+
+    let worker_loop = |w: usize| -> Vec<(usize, Result<T>)> {
+        let _guard = PanicFlag(&panicked);
+        let mut done = Vec::new();
+        loop {
+            // 1. Own deque, hot (LIFO) end.
+            let task = deques[w].lock().unwrap().pop_back();
+            if let Some(t) = task {
+                if t > first_err.load(Ordering::SeqCst) {
+                    // Already moot: a lower-index task failed.
+                    completed.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                executing.fetch_add(1, Ordering::SeqCst);
+                let r = f(w, t);
+                if r.is_err() {
+                    first_err.fetch_min(t, Ordering::SeqCst);
+                }
+                // Decrement `executing` before marking completion: the
+                // transient state counts the task as unfinished and not
+                // executing, so the step-4 predicate errs toward a
+                // rescan (a spurious retry) rather than a premature
+                // exit that strands stealable work in a peer's deque.
+                executing.fetch_sub(1, Ordering::SeqCst);
+                completed.fetch_add(1, Ordering::SeqCst);
+                done.push((t, r));
+                continue;
+            }
+            if !cfg.steal {
+                break; // static plan: own block exhausted
+            }
+            // 2. Refill a chunk from the global queue.
+            if next.load(Ordering::Relaxed) < n_tasks {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start < n_tasks {
+                    let end = (start + chunk).min(n_tasks);
+                    deques[w].lock().unwrap().extend(start..end);
+                    continue;
+                }
+            }
+            // 3. Steal half (FIFO end) from the first victim with work.
+            let mut raided = false;
+            for i in 1..workers {
+                let v = (w + i) % workers;
+                let grabbed: Vec<usize> = {
+                    let mut q = deques[v].lock().unwrap();
+                    let take = q.len().div_ceil(2);
+                    q.drain(..take).collect()
+                };
+                if grabbed.is_empty() {
+                    continue;
+                }
+                steals.fetch_add(1, Ordering::Relaxed);
+                stolen.fetch_add(grabbed.len() as u64, Ordering::Relaxed);
+                deques[w].lock().unwrap().extend(grabbed);
+                raided = true;
+                break;
+            }
+            if raided {
+                continue;
+            }
+            // 4. Nothing visible. If every unfinished task is actually
+            // executing on some worker, there is nothing left to steal —
+            // exit. Otherwise a task is in transit between the global
+            // queue and a deque (a claimant between `fetch_add` and its
+            // push); yield and rescan so the tail of the work still
+            // balances instead of defaulting to whoever claimed it.
+            if panicked.load(Ordering::SeqCst)
+                || n_tasks - completed.load(Ordering::SeqCst)
+                    <= executing.load(Ordering::SeqCst)
+            {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        done
+    };
+
+    let per_worker: Vec<Vec<(usize, Result<T>)>> = std::thread::scope(|s| {
+        let worker_loop = &worker_loop;
+        let handles: Vec<_> = (0..workers).map(|w| s.spawn(move || worker_loop(w))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
+    });
+    tally.steals = steals.load(Ordering::Relaxed);
+    tally.stolen_tasks = stolen.load(Ordering::Relaxed);
+
+    let mut slots: Vec<Option<Result<T>>> = (0..n_tasks).map(|_| None).collect();
+    for (t, r) in per_worker.into_iter().flatten() {
+        debug_assert!(slots[t].is_none(), "task {t} executed twice");
+        slots[t] = Some(r);
+    }
+    let fe = first_err.load(Ordering::SeqCst);
+    if fe != usize::MAX {
+        // The minimum failing index was never skipped (skipping only
+        // applies above the current minimum), so its slot holds the
+        // winning error.
+        match slots[fe].take() {
+            Some(Err(e)) => return Err(e),
+            _ => unreachable!("first-error slot must hold an error"),
+        }
+    }
+    let mut out = Vec::with_capacity(n_tasks);
+    for slot in slots {
+        match slot.expect("every task executed exactly once") {
+            Ok(v) => out.push(v),
+            Err(e) => return Err(e), // unreachable: errors set first_err
+        }
+    }
+    Ok((out, tally))
+}
+
+/// Per-node execution counters of one query (morsel/steal/wire tallies).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct NodeCounters {
+    /// Morsels executed on this node. Spans are dealt near-equally, so
+    /// this is a *layout* count — use [`NodeCounters::busy_ns`] to
+    /// observe data skew.
+    pub morsels: u64,
+    /// Steal events among this node's workers.
+    pub steals: u64,
+    /// Tasks those steals moved.
+    pub stolen_tasks: u64,
+    /// Wire bytes shipped to this node through the columnar exchange
+    /// (zero for the leader, which reads its own memory).
+    pub wire_bytes: u64,
+    /// Wall nanoseconds this node's dispatches took (encode/decode +
+    /// scheduler run, minus the modeled transport charge, which is
+    /// uniform per wire byte and would otherwise read as phantom skew
+    /// against the charge-free leader) — the §IV.C skew signal: a node
+    /// whose contiguous span drew the expensive rows shows up here even
+    /// though its morsel *count* equals its peers'.
+    pub busy_ns: u64,
+}
+
+/// Accumulates [`NodeCounters`] across the operators of one query.
+/// Shared by reference into node drivers; reset per query by
+/// `execute_plan_with_stats`.
+#[derive(Debug, Default)]
+pub struct ExecTally {
+    inner: Mutex<Vec<NodeCounters>>,
+}
+
+impl ExecTally {
+    /// Add one dispatch's counters to `node`'s slot (growing the vector).
+    pub fn record(&self, node: usize, delta: NodeCounters) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.len() <= node {
+            inner.resize(node + 1, NodeCounters::default());
+        }
+        let c = &mut inner[node];
+        c.morsels += delta.morsels;
+        c.steals += delta.steals;
+        c.stolen_tasks += delta.stolen_tasks;
+        c.wire_bytes += delta.wire_bytes;
+        c.busy_ns += delta.busy_ns;
+    }
+
+    /// Clear all counters (start of a query).
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+
+    /// Per-node counters recorded so far.
+    pub fn snapshot(&self) -> Vec<NodeCounters> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Sum over nodes (used for per-operator deltas).
+    pub fn totals(&self) -> NodeCounters {
+        let inner = self.inner.lock().unwrap();
+        let mut t = NodeCounters::default();
+        for c in inner.iter() {
+            t.morsels += c.morsels;
+            t.steals += c.steals;
+            t.stolen_tasks += c.stolen_tasks;
+            t.wire_bytes += c.wire_bytes;
+            t.busy_ns += c.busy_ns;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+    use std::time::Duration;
+
+    fn run_ids(n: usize, cfg: &StealConfig) -> (Vec<usize>, StealTally) {
+        run_stealing(n, cfg, |_w, t| Ok(t * 10)).unwrap()
+    }
+
+    #[test]
+    fn results_in_task_order_every_shape() {
+        for workers in [1usize, 2, 3, 8] {
+            for n in [0usize, 1, 2, 7, 64, 257] {
+                for steal in [true, false] {
+                    let (out, tally) = run_ids(n, &StealConfig::new(workers, steal));
+                    assert_eq!(
+                        out,
+                        (0..n).map(|t| t * 10).collect::<Vec<_>>(),
+                        "workers={workers} n={n} steal={steal}"
+                    );
+                    assert_eq!(tally.tasks, n as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let n = 200;
+        let counts: Vec<TestCounter> = (0..n).map(|_| TestCounter::new(0)).collect();
+        run_stealing(n, &StealConfig::new(4, true), |_w, t| {
+            counts[t].fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        })
+        .unwrap();
+        for (t, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {t}");
+        }
+    }
+
+    #[test]
+    fn first_error_in_task_order_wins() {
+        for workers in [1usize, 4] {
+            let err = run_stealing(16, &StealConfig::new(workers, true), |_w, t| {
+                if t == 11 || t == 3 {
+                    anyhow::bail!("task {t} failed")
+                }
+                Ok(t)
+            })
+            .unwrap_err();
+            assert_eq!(err.to_string(), "task 3 failed", "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn static_mode_never_steals() {
+        let (out, tally) = run_stealing(64, &StealConfig::new(4, false), |_w, t| Ok(t)).unwrap();
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+        assert_eq!(tally.steals, 0);
+        assert_eq!(tally.stolen_tasks, 0);
+    }
+
+    /// The ISSUE's skew contract: a deliberately skewed morsel set must
+    /// record nonzero steals while producing identical output. One worker
+    /// claims the whole task list in a single chunk and sits on a slow
+    /// task; the other worker's only path to work is a raid.
+    #[test]
+    fn skewed_morsels_record_steals_with_identical_output() {
+        let n = 4;
+        let cfg = StealConfig { workers: 2, chunk: n, steal: true };
+        let (out, tally) = run_stealing(n, &cfg, |_w, t| {
+            std::thread::sleep(Duration::from_millis(50));
+            Ok(t + 100)
+        })
+        .unwrap();
+        assert_eq!(out, vec![100, 101, 102, 103]);
+        assert!(tally.steals >= 1, "expected a steal, got {tally:?}");
+        assert!(tally.stolen_tasks >= 1, "{tally:?}");
+    }
+
+    #[test]
+    fn tally_accumulates_and_resets() {
+        let t = ExecTally::default();
+        t.record(0, NodeCounters { morsels: 3, steals: 1, stolen_tasks: 2, ..Default::default() });
+        t.record(2, NodeCounters { morsels: 5, wire_bytes: 64, ..Default::default() });
+        t.record(0, NodeCounters { morsels: 1, ..Default::default() });
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[0].morsels, 4);
+        assert_eq!(snap[1], NodeCounters::default());
+        assert_eq!(snap[2].wire_bytes, 64);
+        let totals = t.totals();
+        assert_eq!(totals.morsels, 9);
+        assert_eq!(totals.steals, 1);
+        t.reset();
+        assert!(t.snapshot().is_empty());
+    }
+}

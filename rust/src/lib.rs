@@ -28,12 +28,15 @@
 //! key codec (`engine::hash`), and the exchange operator ships batches as
 //! a compact column-major wire buffer ([`types::WireBatch`]) that
 //! receivers decode with typed appends. The hot operators are
-//! morsel-driven parallel: contiguous row ranges execute on scoped
-//! worker threads sized by the warehouse shape (see
-//! [`engine::ExecContext::parallelism`]), with outputs byte-identical to
-//! sequential execution. Row-at-a-time reference paths survive behind
-//! `ExecContext::vectorized = false` for differential tests and the
-//! `expr_kernels` / `groupby_kernels` ablations.
+//! morsel-driven parallel across the warehouse shape: morsel spans deal
+//! out to nodes (remote spans ship through the same wire codec, costed
+//! as real CPU) and run on a work-stealing scheduler within each node
+//! (see [`engine::ExecContext::parallelism`] /
+//! [`engine::ExecContext::nodes`] and `engine::morsel`), with outputs
+//! byte-identical to sequential execution at every shape. Row-at-a-time
+//! reference paths survive behind `ExecContext::vectorized = false` for
+//! differential tests and the `expr_kernels` / `groupby_kernels`
+//! ablations.
 //!
 //! See `README.md` for build/run instructions and `docs/ARCHITECTURE.md`
 //! for the paper-section → module map.

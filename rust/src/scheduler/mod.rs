@@ -15,4 +15,4 @@ mod stats;
 
 pub use admission::{AdmissionOutcome, NodeState, QueryRequest, WarehouseScheduler};
 pub use estimator::{DynamicEstimator, MemoryEstimator, StaticEstimator};
-pub use stats::{QueryKey, StatsFramework};
+pub use stats::{NodeBalance, QueryKey, StatsFramework};

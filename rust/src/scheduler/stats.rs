@@ -8,11 +8,30 @@ use std::sync::Mutex;
 /// job name).
 pub type QueryKey = String;
 
-/// Tracks a bounded history of per-execution max-memory observations.
+/// Tracks a bounded history of per-execution max-memory observations,
+/// plus per-query node-balance observations from distributed morsel
+/// dispatch (skew = busiest node's morsels over the mean — 1.0 means
+/// perfectly balanced; the §IV.C row-redistribution signal).
 pub struct StatsFramework {
     /// Max executions remembered per query (the paper's lookback K bound).
     pub max_history: usize,
     inner: Mutex<HashMap<QueryKey, Vec<u64>>>,
+    balance: Mutex<HashMap<QueryKey, Vec<NodeBalance>>>,
+}
+
+/// One execution's node-level balance observation (fed from
+/// `engine::QueryStats::per_node_busy_ns` / `total_steals`). The load
+/// unit is whatever the caller measures — busy nanoseconds for the
+/// engine's node dispatch (morsel *counts* are layout-determined and
+/// near-equal, so they cannot carry the skew signal), or rows for a
+/// caller that tracks throughput.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeBalance {
+    /// Busiest node's load divided by the mean (≥ 1.0; 1.0 is perfectly
+    /// balanced).
+    pub skew: f64,
+    /// Steal events the work-stealing morsel scheduler performed.
+    pub steals: u64,
 }
 
 /// In-flight tracker for one execution: folds periodic memory reports
@@ -36,7 +55,42 @@ impl ExecutionTracker {
 impl StatsFramework {
     pub fn new(max_history: usize) -> Self {
         assert!(max_history > 0);
-        Self { max_history, inner: Mutex::new(HashMap::new()) }
+        Self {
+            max_history,
+            inner: Mutex::new(HashMap::new()),
+            balance: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Record one execution's per-node load observations (busy
+    /// nanoseconds from the engine's node dispatch) and steal total.
+    /// Empty/zero observations (a fully sequential query) are ignored.
+    pub fn record_node_balance(&self, key: &str, per_node_load: &[u64], steals: u64) {
+        let total: u64 = per_node_load.iter().sum();
+        if per_node_load.is_empty() || total == 0 {
+            return;
+        }
+        let mean = total as f64 / per_node_load.len() as f64;
+        let max = *per_node_load.iter().max().expect("non-empty") as f64;
+        let mut balance = self.balance.lock().unwrap();
+        let h = balance.entry(key.to_string()).or_default();
+        h.push(NodeBalance { skew: max / mean, steals });
+        let len = h.len();
+        if len > self.max_history {
+            h.drain(0..len - self.max_history);
+        }
+    }
+
+    /// The last `k` node-balance observations (most recent last).
+    pub fn balance_lookback(&self, key: &str, k: usize) -> Vec<NodeBalance> {
+        let balance = self.balance.lock().unwrap();
+        match balance.get(key) {
+            None => Vec::new(),
+            Some(h) => {
+                let start = h.len().saturating_sub(k);
+                h[start..].to_vec()
+            }
+        }
     }
 
     /// Begin tracking one execution.
@@ -116,6 +170,31 @@ mod tests {
         }
         assert_eq!(f.executions_seen("q"), 5);
         assert_eq!(f.lookback("q", 5), vec![45, 46, 47, 48, 49]);
+    }
+
+    #[test]
+    fn node_balance_history_records_skew() {
+        let f = StatsFramework::new(3);
+        // Balanced: equal busy time on each of 4 nodes.
+        f.record_node_balance("q", &[10, 10, 10, 10], 0);
+        // Skewed: one node's span carried most of the work (busy time),
+        // steals rebalanced within it.
+        f.record_node_balance("q", &[30, 5, 3, 2], 7);
+        let h = f.balance_lookback("q", 10);
+        assert_eq!(h.len(), 2);
+        assert!((h[0].skew - 1.0).abs() < 1e-12, "{h:?}");
+        assert!(h[1].skew > 2.9, "{h:?}");
+        assert_eq!(h[1].steals, 7);
+        // Sequential executions (no morsels) are not observations.
+        f.record_node_balance("q", &[], 0);
+        f.record_node_balance("q", &[0, 0], 0);
+        assert_eq!(f.balance_lookback("q", 10).len(), 2);
+        // Bounded like the memory history.
+        for _ in 0..5 {
+            f.record_node_balance("q", &[1, 1], 0);
+        }
+        assert_eq!(f.balance_lookback("q", 10).len(), 3);
+        assert!(f.balance_lookback("other", 3).is_empty());
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub struct SessionBuilder {
     exchange: ExchangeConfig,
     artifacts_dir: Option<std::path::PathBuf>,
     parallelism: Option<usize>,
+    nodes: Option<usize>,
 }
 
 impl SessionBuilder {
@@ -35,12 +36,22 @@ impl SessionBuilder {
         self
     }
 
-    /// Pin the engine's intra-query (morsel) parallelism. Without this,
-    /// sessions with a pool use the warehouse shape (one worker per
-    /// interpreter process on a node, i.e. `procs_per_node`) and
-    /// pool-less sessions use [`crate::engine::default_parallelism`].
+    /// Pin the engine's intra-query (morsel) parallelism per node.
+    /// Without this, sessions with a pool use the warehouse shape (one
+    /// worker per interpreter process on a node, i.e. `procs_per_node`)
+    /// and pool-less sessions use
+    /// [`crate::engine::default_parallelism`].
     pub fn parallelism(mut self, threads: usize) -> Self {
         self.parallelism = Some(threads.max(1));
+        self
+    }
+
+    /// Pin the number of warehouse nodes query morsels spread across
+    /// (`snowparkd run-sql --nodes N`). Without this, sessions with a
+    /// pool use the pool's node count and pool-less sessions use
+    /// [`crate::engine::default_nodes`].
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = Some(nodes.max(1));
         self
     }
 
@@ -75,6 +86,7 @@ impl SessionBuilder {
             exchange: self.exchange,
             runtime,
             parallelism: self.parallelism,
+            nodes: self.nodes,
             partitioned: RwLock::new(HashMap::new()),
         });
         if let Some(rt) = &session.runtime {
@@ -98,6 +110,9 @@ pub struct Session {
     /// Explicit intra-query parallelism override (None = derive from the
     /// warehouse shape, else the engine default).
     parallelism: Option<usize>,
+    /// Explicit node-count override for query morsel dispatch (None =
+    /// derive from the pool shape, else the engine default).
+    nodes: Option<usize>,
     /// Partitioned tables: name → per-node rowsets (the source rowset
     /// operator's placement for §IV.C).
     partitioned: RwLock<HashMap<String, Vec<RowSet>>>,
@@ -110,6 +125,7 @@ impl Session {
             exchange: ExchangeConfig::default(),
             artifacts_dir: None,
             parallelism: None,
+            nodes: None,
         }
     }
 
@@ -194,8 +210,20 @@ impl Session {
     /// budget), else the engine default (env var / host cores).
     pub fn query_parallelism(&self) -> usize {
         self.parallelism
-            .or_else(|| self.pool_config.map(|c| c.procs_per_node))
+            .or_else(|| self.pool_config.map(|c| c.distributed_query_shape().1))
             .unwrap_or_else(crate::engine::default_parallelism)
+            .max(1)
+    }
+
+    /// The warehouse-node count query morsels spread across: the
+    /// explicit builder override (`snowparkd run-sql --nodes N`), else
+    /// the pool shape (`PoolConfig::distributed_query_shape` — the same
+    /// nodes the UDF exchange deals batches to), else the engine
+    /// default (`SNOWPARK_NODES`, else 1).
+    pub fn query_nodes(&self) -> usize {
+        self.nodes
+            .or_else(|| self.pool_config.map(|c| c.distributed_query_shape().0))
+            .unwrap_or_else(crate::engine::default_nodes)
             .max(1)
     }
 
@@ -206,6 +234,10 @@ impl Session {
             udf_stats: self.stats.clone(),
             vectorized: true,
             parallelism: self.query_parallelism(),
+            nodes: self.query_nodes(),
+            steal: true,
+            transport: self.pool_config.map(|c| c.transport).unwrap_or_default(),
+            tally: Arc::new(crate::engine::ExecTally::default()),
         }
     }
 
@@ -362,18 +394,49 @@ mod tests {
 
     #[test]
     fn parallelism_derived_from_warehouse_shape() {
-        // With a pool: one morsel worker per interpreter process on a node.
+        // With a pool: one morsel worker per interpreter process on a
+        // node, and morsels spread across the pool's nodes.
         let s = Session::builder()
             .pool(PoolConfig { nodes: 2, procs_per_node: 3, ..Default::default() })
             .build()
             .unwrap();
         assert_eq!(s.query_parallelism(), 3);
-        // Explicit override wins.
-        let s = Session::builder().parallelism(7).build().unwrap();
+        assert_eq!(s.query_nodes(), 2);
+        // Explicit overrides win.
+        let s = Session::builder().parallelism(7).nodes(3).build().unwrap();
         assert_eq!(s.query_parallelism(), 7);
-        // Pool-less sessions fall back to the engine default.
+        assert_eq!(s.query_nodes(), 3);
+        // Pool-less sessions fall back to the engine defaults.
         let s = Session::builder().build().unwrap();
         assert!(s.query_parallelism() >= 1);
+        assert!(s.query_nodes() >= 1);
+    }
+
+    #[test]
+    fn sql_runs_across_pool_nodes() {
+        // A session whose pool spans nodes runs its SQL through the node
+        // dispatch path; outputs must match a single-node session.
+        let rows = 20_000usize;
+        let xs: Vec<f64> = (0..rows).map(|i| (i % 997) as f64).collect();
+        let make = |nodes: usize| {
+            let s = Session::builder()
+                .pool(PoolConfig { nodes, procs_per_node: 2, ..Default::default() })
+                .build()
+                .unwrap();
+            s.catalog().register(
+                "t",
+                RowSet::new(
+                    Schema::new(vec![Field::new("x", DataType::Float64)]),
+                    vec![Column::from_f64(xs.clone())],
+                )
+                .unwrap(),
+            );
+            s
+        };
+        let q = "SELECT x, COUNT(*) AS n FROM t GROUP BY x ORDER BY n DESC, x LIMIT 7";
+        let single = make(1).sql(q).unwrap();
+        let multi = make(3).sql(q).unwrap();
+        assert_eq!(single, multi);
     }
 
     #[test]

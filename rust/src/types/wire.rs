@@ -120,11 +120,28 @@ impl WireBatch {
     /// Encode rows `[offset, offset + len)` of `rs` straight from its
     /// column buffers — one pass per column, no intermediate rowset.
     pub fn encode_range(rs: &RowSet, offset: usize, len: usize) -> WireBatch {
-        assert!(offset + len <= rs.num_rows(), "encode_range out of bounds");
-        let mut out: Vec<u8> = Vec::with_capacity(16 + len * rs.num_columns() * 8);
-        out.extend_from_slice(&(rs.num_columns() as u32).to_le_bytes());
+        let cols: Vec<&Column> = rs.columns.iter().collect();
+        Self::encode_columns(&rs.schema.fields, &cols, offset, len)
+    }
+
+    /// Encode a row range of loose columns (field metadata supplied
+    /// separately) — what the engine's node dispatch uses to ship an
+    /// operator's referenced columns without assembling a rowset first.
+    pub fn encode_columns(
+        fields: &[Field],
+        cols: &[&Column],
+        offset: usize,
+        len: usize,
+    ) -> WireBatch {
+        assert_eq!(fields.len(), cols.len(), "encode_columns arity");
+        assert!(
+            cols.iter().all(|c| offset + len <= c.len()),
+            "encode_columns out of bounds"
+        );
+        let mut out: Vec<u8> = Vec::with_capacity(16 + len * cols.len() * 8);
+        out.extend_from_slice(&(cols.len() as u32).to_le_bytes());
         out.extend_from_slice(&(len as u32).to_le_bytes());
-        for (field, col) in rs.schema.fields.iter().zip(&rs.columns) {
+        for (field, &col) in fields.iter().zip(cols) {
             let name = field.name.as_bytes();
             out.extend_from_slice(&(name.len() as u16).to_le_bytes());
             out.extend_from_slice(name);

@@ -43,6 +43,19 @@ impl TransportCost {
     pub fn cost(&self, bytes: u64) -> Duration {
         self.per_call + Duration::from_nanos((bytes as f64 * self.ns_per_byte) as u64)
     }
+
+    /// Consume the transport cost of delivering `bytes` as real CPU time
+    /// on the calling thread (a sleep would under-charge on busy hosts).
+    /// Used by the interpreter processes for cross-node UDF batches and
+    /// by the engine's node dispatch for cross-node operator morsels, so
+    /// wall-clock gains and losses from shipping rows are physically
+    /// measurable.
+    pub fn charge_cpu(&self, bytes: u64) {
+        let target = thread_cpu_ns() + self.cost(bytes).as_nanos() as u64;
+        while thread_cpu_ns() < target {
+            std::hint::spin_loop();
+        }
+    }
 }
 
 /// Pool shape.
@@ -65,6 +78,19 @@ impl Default for PoolConfig {
             queue_depth: 4,
             transport: TransportCost::default(),
         }
+    }
+}
+
+impl PoolConfig {
+    /// The `(nodes, workers_per_node)` shape a distributed query runs
+    /// with on this pool: operator morsels spread across every node,
+    /// and each node contributes its interpreter-process budget as
+    /// work-stealing morsel workers. `Session::{query_nodes,
+    /// query_parallelism}` consume this;
+    /// `WarehouseConfig::distributed_query_shape` states the same rule
+    /// at the warehouse level.
+    pub fn distributed_query_shape(&self) -> (usize, usize) {
+        (self.nodes.max(1), self.procs_per_node.max(1))
     }
 }
 
@@ -175,19 +201,11 @@ impl InterpreterPool {
                                     let t0 = Instant::now();
                                     let cpu0 = thread_cpu_ns();
                                     // Remote delivery pays the transport
-                                    // cost on the receiving side (spin to
-                                    // consume real CPU — a sleep would
-                                    // under-charge on busy hosts). The
-                                    // charge is the actual encoded wire
-                                    // size of the batch.
+                                    // cost on the receiving side, charged
+                                    // on the actual encoded wire size of
+                                    // the batch.
                                     if batch.origin_node != node {
-                                        let cost = transport
-                                            .cost(batch.payload.wire_len() as u64);
-                                        let target =
-                                            cpu0 + cost.as_nanos() as u64;
-                                        while thread_cpu_ns() < target {
-                                            std::hint::spin_loop();
-                                        }
+                                        transport.charge_cpu(batch.payload.wire_len() as u64);
                                     }
                                     let res = run_batch(&batch, &udfs);
                                     let elapsed = t0.elapsed();
@@ -418,6 +436,7 @@ mod tests {
         assert_eq!(p.procs_on_node(0), vec![0, 1]);
         assert_eq!(p.procs_on_node(1), vec![2, 3]);
         assert_eq!(p.node_of(3), 1);
+        assert_eq!(p.config().distributed_query_shape(), (2, 2));
     }
 
     #[test]

@@ -29,13 +29,23 @@ impl Default for WarehouseConfig {
 
 impl WarehouseConfig {
     /// Morsel-parallel worker threads one node's SQL operators should
-    /// use: the per-node interpreter-process budget. A query executes on
-    /// one node of the warehouse, so its intra-query parallelism rides
-    /// the same shape knob that sizes the UDF interpreter pool
+    /// use: the per-node interpreter-process budget
     /// (`Session::query_parallelism` applies the same rule to
     /// `PoolConfig`).
     pub fn intra_query_parallelism(&self) -> usize {
         self.procs_per_node.max(1)
+    }
+
+    /// The `(nodes, workers_per_node)` shape a distributed query runs
+    /// with on this warehouse: operator morsels spread across every
+    /// node (spans shipped through the columnar exchange), and each
+    /// node contributes its interpreter-process budget as work-stealing
+    /// morsel workers. `PoolConfig::distributed_query_shape` states the
+    /// same rule for the interpreter pool (that one feeds
+    /// `Session::{query_nodes, query_parallelism}` and from there
+    /// `ExecContext::{nodes, parallelism}`).
+    pub fn distributed_query_shape(&self) -> (usize, usize) {
+        (self.nodes.max(1), self.procs_per_node.max(1))
     }
 }
 
@@ -120,6 +130,14 @@ mod tests {
         assert_eq!(cfg.intra_query_parallelism(), 6);
         let cfg = WarehouseConfig { procs_per_node: 0, ..Default::default() };
         assert_eq!(cfg.intra_query_parallelism(), 1);
+    }
+
+    #[test]
+    fn distributed_query_shape_follows_warehouse() {
+        let cfg = WarehouseConfig { nodes: 4, procs_per_node: 6, ..Default::default() };
+        assert_eq!(cfg.distributed_query_shape(), (4, 6));
+        let cfg = WarehouseConfig { nodes: 0, procs_per_node: 0, ..Default::default() };
+        assert_eq!(cfg.distributed_query_shape(), (1, 1));
     }
 
     #[test]

@@ -1,12 +1,13 @@
-//! Differential tests: morsel-driven parallel execution vs the
+//! Differential tests: morsel-driven parallel execution — across worker
+//! threads and warehouse nodes, with and without work stealing — vs the
 //! sequential path, plus the exchange-report/makespan-model invariant.
 //!
-//! Every query must produce an *identical* rowset at `parallelism` 1, 2,
-//! and 8 — group order, sort order (index tiebreaks), dtypes, and
-//! validity representation included. Data is randomized (uniform and
-//! Zipf-skewed keys, NULLs in both keys and values), but float values
-//! are quarter-integers so summation is exact under any association and
-//! bitwise comparison is meaningful.
+//! Every query must produce an *identical* rowset at every
+//! `(nodes, parallelism)` shape — group order, sort order (index
+//! tiebreaks), dtypes, and validity representation included. Data is
+//! randomized (uniform and Zipf-skewed keys, NULLs in both keys and
+//! values), but float values are quarter-integers so summation is exact
+//! under any association and bitwise comparison is meaningful.
 
 use std::sync::Arc;
 
@@ -14,7 +15,8 @@ use anyhow::Result;
 use snowpark::engine::exchange::{
     run_udf_exchange, simulate_exchange, ExchangeConfig, ExchangeMode,
 };
-use snowpark::engine::{run_sql, Catalog, ExecContext};
+use snowpark::engine::{run_sql, run_sql_with_stats, Catalog, ExecContext};
+use snowpark::scheduler::StatsFramework;
 use snowpark::types::{Column, DataType, Field, RowSet, Schema, Value};
 use snowpark::udf::{UdafState, UdfRegistry, UdfStatsStore};
 use snowpark::util::rng::{Rng, Zipf};
@@ -153,7 +155,10 @@ fn parallel_matches_sequential_randomized() {
     for (seed, zipf) in [(1u64, None), (2, Some(1.2)), (3, Some(0.8))] {
         let cat = catalog(30_000, 600, zipf, seed);
         for q in QUERIES {
-            let seq = run_sql(q, &ctx(cat.clone(), 1))
+            // Pin the baseline to the exact sequential path even under
+            // the CI stress legs' SNOWPARK_NODES env (the candidates
+            // deliberately inherit it).
+            let seq = run_sql(q, &ctx(cat.clone(), 1).with_nodes(1))
                 .unwrap_or_else(|e| panic!("seed {seed}: {q}: {e}"));
             for p in [2usize, 8] {
                 let par = run_sql(q, &ctx(cat.clone(), p))
@@ -162,6 +167,60 @@ fn parallel_matches_sequential_randomized() {
             }
         }
     }
+}
+
+/// The ISSUE 4 acceptance matrix: byte-identical output at
+/// `(nodes, threads)` ∈ {(1,1), (1,8), (2,4), (4,2)} over uniform and
+/// Zipf-1.2 keys, on every differential query. The (1,1) shape is the
+/// exact sequential path; the multi-node shapes ship operator spans
+/// through the columnar exchange and work-steal within each node.
+#[test]
+fn node_shapes_match_sequential_randomized() {
+    for (seed, zipf) in [(11u64, None), (12, Some(1.2))] {
+        let cat = catalog(30_000, 600, zipf, seed);
+        for q in QUERIES {
+            let base = run_sql(q, &ctx(cat.clone(), 1).with_nodes(1))
+                .unwrap_or_else(|e| panic!("seed {seed}: {q}: {e}"));
+            for (nodes, threads) in [(1usize, 8usize), (2, 4), (4, 2)] {
+                let out = run_sql(q, &ctx(cat.clone(), threads).with_nodes(nodes))
+                    .unwrap_or_else(|e| panic!("seed {seed} ({nodes},{threads}): {q}: {e}"));
+                assert_eq!(out, base, "seed {seed} ({nodes},{threads}): {q}");
+            }
+        }
+    }
+}
+
+/// Static assignment (the PR 3 plan) and work stealing must agree
+/// bit-for-bit at every shape — the scheduler only moves *where* a
+/// morsel runs, never what it computes or how results merge.
+#[test]
+fn static_assignment_matches_stealing_randomized() {
+    let cat = catalog(30_000, 600, Some(1.2), 21);
+    for q in QUERIES {
+        let steal = run_sql(q, &ctx(cat.clone(), 4).with_nodes(2)).unwrap();
+        let fixed = run_sql(q, &ctx(cat.clone(), 4).with_nodes(2).with_stealing(false))
+            .unwrap_or_else(|e| panic!("static: {q}: {e}"));
+        assert_eq!(fixed, steal, "static vs stealing: {q}");
+    }
+}
+
+/// Node dispatch is observable: per-node morsel counts and wire bytes
+/// land in `QueryStats`, and the scheduler's stats framework can fold
+/// them into its balance history.
+#[test]
+fn node_stats_feed_balance_history() {
+    let cat = catalog(30_000, 600, Some(1.2), 31);
+    let q = "SELECT k, COUNT(*) AS n, SUM(v) AS s FROM facts GROUP BY k";
+    let (_, stats) = run_sql_with_stats(q, &ctx(cat, 4).with_nodes(2)).unwrap();
+    assert_eq!(stats.node_stats.len(), 2, "{stats:?}");
+    assert!(stats.node_stats[1].wire_bytes > 0, "remote node shipped nothing");
+    assert!(stats.per_node_morsels().iter().all(|&m| m > 0));
+    assert!(stats.per_node_busy_ns().iter().all(|&b| b > 0));
+    let framework = StatsFramework::new(8);
+    framework.record_node_balance(q, &stats.per_node_busy_ns(), stats.total_steals());
+    let h = framework.balance_lookback(q, 1);
+    assert_eq!(h.len(), 1);
+    assert!(h[0].skew >= 1.0);
 }
 
 #[test]
