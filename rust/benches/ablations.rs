@@ -8,7 +8,7 @@ use std::time::Duration;
 use snowpark::bench::{banner, bench_iters, best, fmt_duration, measure, quick_mode, Table};
 use snowpark::control::{InitPipeline, InitRequest};
 use snowpark::engine::exchange::{simulate_exchange, ExchangeConfig, ExchangeMode};
-use snowpark::engine::{default_parallelism, run_sql, Catalog, ExecContext};
+use snowpark::engine::{default_parallelism, run_sql, run_sql_with_stats, Catalog, ExecContext};
 use snowpark::types::{Column, DataType, Field, RowSet, RowSetBuilder, Schema, Value, WireBatch};
 use snowpark::udf::UdfRegistry;
 use snowpark::packages::{Installer, LatencyModel, PackageUniverse, Prefetcher, Solver, SolverCache};
@@ -482,6 +482,92 @@ fn ablate_distributed_morsels() -> Vec<String> {
     json
 }
 
+/// A11: per-node pipeline fragments vs the PR 4 operator-at-a-time
+/// dispatch, on 1 vs 4 warehouse nodes over uniform and Zipf-1.2 keys.
+/// Multi-operator queries (scan→filter→project→aggregate, fused
+/// filter+project chains, top-k over a computed projection) are where
+/// fragments ship each remote span once instead of once per operator —
+/// the wire-byte columns quantify it. Honors quick mode. Returns JSON
+/// rows for BENCH_engine.json.
+fn ablate_pipeline_fragments() -> Vec<String> {
+    let (n, keys) = engine_rows();
+    let (warmup, iters) = bench_iters();
+    println!("\n-- A11: pipeline fragments ({n} rows, fragment vs op-at-a-time, 1 vs 4 nodes) --");
+    let queries = [
+        (
+            "filter-project-agg",
+            "SELECT k2, COUNT(*) AS c, SUM(vv) AS s FROM \
+             (SELECT k + 1 AS k2, v * 2.0 AS vv FROM facts WHERE v < 80.0) t GROUP BY k2",
+        ),
+        (
+            "filter-project",
+            "SELECT k + 1 AS k1, v * 2.0 AS v2 FROM facts WHERE v < 80.0",
+        ),
+        (
+            "filter-project-topk",
+            "SELECT k + 1 AS k1, v * 2.0 AS vv FROM facts WHERE v < 80.0 \
+             ORDER BY vv DESC, k1 LIMIT 100",
+        ),
+    ];
+    let mut table = Table::new(&[
+        "query",
+        "distribution",
+        "nodes",
+        "op-at-a-time",
+        "fragments",
+        "gain",
+        "wire frag/op",
+    ]);
+    let mut json = Vec::new();
+    for (dist, zipf_s) in [("uniform", None), ("zipf-1.2", Some(1.2))] {
+        let catalog = engine_tables(n, keys, zipf_s, 46);
+        for (name, stmt) in queries {
+            for nodes in [1usize, 4] {
+                let ctx_op = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                    .with_parallelism(2)
+                    .with_nodes(nodes)
+                    .with_fragments(false);
+                let ctx_frag = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                    .with_parallelism(2)
+                    .with_nodes(nodes)
+                    .with_fragments(true);
+                let t_op = best(&measure(warmup, iters, || run_sql(stmt, &ctx_op).unwrap()));
+                let t_frag = best(&measure(warmup, iters, || run_sql(stmt, &ctx_frag).unwrap()));
+                let (_, op_stats) = run_sql_with_stats(stmt, &ctx_op).unwrap();
+                let (_, frag_stats) = run_sql_with_stats(stmt, &ctx_frag).unwrap();
+                let (op_wire, frag_wire) =
+                    (op_stats.total_wire_bytes(), frag_stats.total_wire_bytes());
+                let gain =
+                    (t_op.as_secs_f64() - t_frag.as_secs_f64()) / t_op.as_secs_f64().max(1e-12);
+                table.row(&[
+                    name.to_string(),
+                    dist.to_string(),
+                    format!("{nodes}"),
+                    fmt_duration(t_op),
+                    fmt_duration(t_frag),
+                    format!("{:+.1}%", gain * 100.0),
+                    format!("{:.0}k/{:.0}k", frag_wire as f64 / 1e3, op_wire as f64 / 1e3),
+                ]);
+                json.push(format!(
+                    "{{\"bench\":\"pipeline_fragments\",\"query\":\"{name}\",\"dist\":\"{dist}\",\
+                     \"rows\":{n},\"nodes\":{nodes},\"workers_per_node\":2,\
+                     \"op_ms\":{:.3},\"frag_ms\":{:.3},\"frag_gain\":{gain:.3},\
+                     \"op_wire_bytes\":{op_wire},\"frag_wire_bytes\":{frag_wire}}}",
+                    t_op.as_secs_f64() * 1e3,
+                    t_frag.as_secs_f64() * 1e3,
+                ));
+            }
+        }
+    }
+    table.print();
+    println!(
+        "(one shipment per fragment: fewer wire bytes than op-at-a-time at these \
+         moderate selectivities; a highly selective filter can invert the byte \
+         comparison — see engine/fragment.rs docs)"
+    );
+    json
+}
+
 /// Zipf-skewed multi-column partitions shaped like the Fig. 6
 /// redistribution bench input.
 fn codec_partitions(sizes: &[usize]) -> Vec<RowSet> {
@@ -607,7 +693,8 @@ fn main() {
         "Design-choice sweeps: buffer size B, threshold T, env-cache \
          capacity, prefetch, estimator (K,P,F), engine key codec, \
          expression kernels, exchange batch codec, morsel parallelism, \
-         distributed morsel dispatch (static vs stealing).",
+         distributed morsel dispatch (static vs stealing), pipeline \
+         fragments (fragment vs operator-at-a-time node dispatch).",
     );
     if quick_mode() {
         println!("(SNOWPARK_BENCH_QUICK set: reduced rows/iterations)");
@@ -622,5 +709,6 @@ fn main() {
     json.extend(ablate_exchange_codec());
     json.extend(ablate_parallel_pipeline());
     json.extend(ablate_distributed_morsels());
+    json.extend(ablate_pipeline_fragments());
     write_bench_json(&json);
 }

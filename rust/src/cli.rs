@@ -21,23 +21,33 @@ snowparkd — Snowpark reproduction launcher
 
 USAGE:
   snowparkd info
-  snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T] [--nodes N]
+  snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T] \
+[--nodes N] [--adaptive-shape]
   snowparkd demo
   snowparkd serve [--queries N] [--nodes N] [--procs N] [--rows N] [--mode auto|local|rr]
 
 --parallelism T caps the engine's morsel worker threads per node
 (default: the SNOWPARK_PARALLELISM env var, else the host's cores;
-1 = sequential). --nodes N spreads the morsels of each operator across
-N simulated warehouse nodes through the columnar exchange (default: the
-SNOWPARK_NODES env var, else 1); `--stats` then reports per-node morsel,
-steal, and wire-byte counts.
+1 = sequential). --nodes N spreads the morsels of each pipeline
+fragment across N simulated warehouse nodes through the columnar
+exchange (default: the SNOWPARK_NODES env var, else 1); `--stats` then
+reports per-node morsel, steal, and wire-byte counts plus per-fragment
+operator lists and the wire bytes saved vs. per-operator shipping.
+--adaptive-shape enables the §IV.C adaptive shape policy on the
+session: each statement's node fan-out comes from its recorded
+node-balance history (on by default for API sessions built with a
+warehouse pool; a one-shot run-sql invocation has an empty history, so
+the flag's effect here is recording + the cold-start default — the
+adaptation pays off across repeated statements on a long-lived
+session). SNOWPARK_FRAGMENTS=0 pins the operator-at-a-time dispatch
+baseline.
 
 Demo tables (generated): store_sales, product_reviews, web_clickstreams, items.
 Artifacts: set SNOWPARK_ARTIFACTS or run `make artifacts` for XLA UDFs.";
 
 pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let parsed = match ParsedArgs::parse(args, &["help", "stats"]) {
+    let parsed = match ParsedArgs::parse(args, &["help", "stats", "adaptive-shape"]) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -66,6 +76,7 @@ fn session_with_data(
     pool: Option<PoolConfig>,
     parallelism: Option<usize>,
     nodes: Option<usize>,
+    adaptive_shape: bool,
 ) -> anyhow::Result<Arc<Session>> {
     let mut b = Session::builder();
     if let Some(p) = pool {
@@ -76,6 +87,9 @@ fn session_with_data(
     }
     if let Some(n) = nodes {
         b = b.nodes(n);
+    }
+    if adaptive_shape {
+        b = b.adaptive_shape(true);
     }
     let artifacts = crate::runtime::XlaRuntime::default_dir();
     if crate::runtime::XlaRuntime::available(&artifacts) {
@@ -126,6 +140,7 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         None,
         (parallelism > 0).then_some(parallelism),
         (nodes > 0).then_some(nodes),
+        args.flag("adaptive-shape"),
     )?;
     if args.flag("stats") {
         let (out, stats) = s.sql_with_stats(sql)?;
@@ -141,7 +156,7 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
 }
 
 fn demo() -> anyhow::Result<()> {
-    let s = session_with_data(5_000, 42, None, None, None)?;
+    let s = session_with_data(5_000, 42, None, None, None, false)?;
     println!("-- DataFrame API: top categories by revenue --");
     let df = s
         .table("store_sales")
@@ -172,6 +187,7 @@ fn serve(args: &ParsedArgs) -> anyhow::Result<()> {
         Some(PoolConfig { nodes, procs_per_node: procs, ..Default::default() }),
         None,
         None,
+        false,
     )?;
     println!("serving {queries} UDF queries over {nodes} nodes × {procs} procs (mode {mode:?})");
     let t0 = std::time::Instant::now();

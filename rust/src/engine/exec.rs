@@ -47,6 +47,23 @@
 //! (one structural difference: the join probe goes through the same
 //! partitioned-table API with one partition).
 //!
+//! ## Per-node pipeline fragments
+//!
+//! Morsel-splittable operator chains fuse into **per-node pipeline
+//! fragments** ([`ExecContext::fragments`]; planner in
+//! `super::fragment`): a filter/project chain — optionally capped by
+//! aggregate pre-partials or sort run generation — dispatches as ONE
+//! shipment of its referenced input columns per remote node, runs
+//! node-locally morsel-at-a-time, and returns only the fragment
+//! outputs for the leader's pipeline-breaker step (partial merge,
+//! k-way run merge, or plain segment concatenation). This removes the
+//! per-operator leader-materialization round trips of the
+//! operator-at-a-time dispatch, which `ExecContext::fragments = false`
+//! pins as the `pipeline_fragments` (A11) ablation baseline.
+//! `QueryStats::fragments` records, per fragment, the fused operator
+//! list plus actual wire bytes against a per-operator shipping
+//! estimate.
+//!
 //! The legacy row-at-a-time paths (including row-wise expression
 //! evaluation) are kept behind `ExecContext::vectorized = false` for
 //! differential tests and the `groupby_kernels`/`expr_kernels` ablations
@@ -59,7 +76,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::sql::ast::{Expr, JoinKind, OrderKey};
-use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
+use crate::types::{Column, DataType, Field, RowSet, Schema, Value, WireBatch};
 use crate::udf::{UdafState, UdfRegistry, UdfStatsStore};
 use crate::warehouse::TransportCost;
 
@@ -68,6 +85,7 @@ use super::expr::{
     eval_expr, eval_expr_rowwise, eval_predicate, eval_predicate_rowwise, eval_row,
     resolve_column,
 };
+use super::fragment::{FragCap, FragStage, Fragment};
 use super::hash::{
     assign_group_ids, EncodedKeys, JoinTable, KeyDict, KeyMode, PartitionedJoinTable,
 };
@@ -108,6 +126,16 @@ pub fn default_nodes() -> usize {
     1
 }
 
+/// The default for per-node pipeline-fragment dispatch: enabled, unless
+/// the `SNOWPARK_FRAGMENTS` environment variable is set to `0`, `false`,
+/// or `off` (the operator-at-a-time dispatch baseline).
+pub fn default_fragments() -> bool {
+    match std::env::var("SNOWPARK_FRAGMENTS") {
+        Ok(v) => !matches!(v.trim(), "0" | "false" | "off"),
+        Err(_) => true,
+    }
+}
+
 /// Everything an operator needs at execution time.
 pub struct ExecContext {
     /// Table catalog queries scan from.
@@ -138,6 +166,16 @@ pub struct ExecContext {
     /// pins the PR 3 static contiguous assignment — kept for the
     /// `distributed_morsels` ablation baseline.
     pub steal: bool,
+    /// Fuse morsel-splittable operator chains into per-node pipeline
+    /// fragments (the default): each remote node receives its span of a
+    /// fragment's *input* columns exactly once and runs the whole chain
+    /// node-locally, returning only the fragment outputs (column
+    /// segments, aggregate partials, sorted runs) for the leader's
+    /// breaker step. `false` pins the PR 4 operator-at-a-time dispatch —
+    /// kept for differential tests and the `pipeline_fragments` (A11)
+    /// ablation baseline. Defaults to [`default_fragments`]
+    /// (`SNOWPARK_FRAGMENTS=0` disables).
+    pub fragments: bool,
     /// Cross-node shipping cost model for node-dispatched morsels.
     pub transport: TransportCost,
     /// Per-node morsel/steal/wire counters, reset per query and drained
@@ -156,6 +194,7 @@ impl ExecContext {
             parallelism: default_parallelism(),
             nodes: default_nodes(),
             steal: true,
+            fragments: default_fragments(),
             transport: TransportCost::default(),
             tally: Arc::new(ExecTally::default()),
         }
@@ -182,6 +221,14 @@ impl ExecContext {
     /// Toggle work stealing between a node's morsel workers.
     pub fn with_stealing(mut self, steal: bool) -> Self {
         self.steal = steal;
+        self
+    }
+
+    /// Toggle per-node pipeline-fragment dispatch. `false` pins the
+    /// PR 4 operator-at-a-time node dispatch (the `pipeline_fragments`
+    /// ablation baseline).
+    pub fn with_fragments(mut self, on: bool) -> Self {
+        self.fragments = on;
         self
     }
 
@@ -399,8 +446,9 @@ where
 /// XLA min-max scaler computes statistics over the batch it is handed),
 /// so expressions containing one keep whole-input evaluation instead of
 /// morsel-splitting — splitting would move the batch boundary and change
-/// their results.
-fn has_vectorized_udf(e: &Expr, udfs: &UdfRegistry) -> bool {
+/// their results. (Shared with the fragment planner, which declines any
+/// fragment containing one.)
+pub(crate) fn has_vectorized_udf(e: &Expr, udfs: &UdfRegistry) -> bool {
     match e {
         Expr::Func { name, args } => {
             udfs.has_vectorized(name) || args.iter().any(|a| has_vectorized_udf(a, udfs))
@@ -430,12 +478,12 @@ fn has_vectorized_udf(e: &Expr, udfs: &UdfRegistry) -> bool {
 }
 
 /// May `e` be split into morsels? The single source of truth for
-/// dispatch eligibility (shared by [`morsel_plan`] and the batched
-/// projection): pass-through markers and bare column references are
-/// clones (nothing to parallelize), batch-dependent *vectorized* UDFs
-/// must see the whole input, and column-free expressions are
-/// constant-foldable.
-fn morsel_splittable(e: &Expr, udfs: &UdfRegistry) -> bool {
+/// dispatch eligibility (shared by [`morsel_plan`], the batched
+/// projection, and the fragment planner's shipping-op counts):
+/// pass-through markers and bare column references are clones (nothing
+/// to parallelize), batch-dependent *vectorized* UDFs must see the
+/// whole input, and column-free expressions are constant-foldable.
+pub(crate) fn morsel_splittable(e: &Expr, udfs: &UdfRegistry) -> bool {
     if matches!(e, Expr::Star | Expr::Column(_))
         || matches!(e, Expr::Func { name, .. } if name == "__drop_hidden")
         || has_vectorized_udf(e, udfs)
@@ -603,6 +651,39 @@ impl OpStats {
     }
 }
 
+/// What one executed pipeline fragment did (`QueryStats::fragments`).
+#[derive(Debug, Default, Clone)]
+pub struct FragmentStats {
+    /// Operator names fused into the fragment, in execution order
+    /// (e.g. `["filter", "project", "aggregate"]`).
+    pub ops: Vec<&'static str>,
+    /// Rows entering the fragment (the dispatched input span total).
+    pub rows_in: u64,
+    /// Rows leaving the fragment, post-breaker (filtered segments,
+    /// groups, or merged top-k rows).
+    pub rows_out: u64,
+    /// Morsels the fragment's single dispatch executed.
+    pub morsels: u64,
+    /// Wire bytes actually shipped — each remote node received its span
+    /// of the fragment's input columns exactly once.
+    pub wire_bytes: u64,
+    /// ≈ wire bytes the operator-at-a-time dispatch would have shipped
+    /// for the same operators: exact ([`WireBatch::encoded_size`] over
+    /// the actual remote spans) for operators reading raw input
+    /// columns, a fixed-width 9-bytes-per-cell approximation for
+    /// operators above the first projection, whose intermediate columns
+    /// never materialize on the fragment path.
+    pub est_operator_wire_bytes: u64,
+}
+
+impl FragmentStats {
+    /// Wire bytes the fragment saved vs. per-operator shipping (by the
+    /// [`FragmentStats::est_operator_wire_bytes`] estimate).
+    pub fn wire_bytes_saved(&self) -> u64 {
+        self.est_operator_wire_bytes.saturating_sub(self.wire_bytes)
+    }
+}
+
 /// Per-query execution statistics: per-operator row counts and timings,
 /// plus per-node morsel/steal/wire tallies.
 #[derive(Debug, Default, Clone)]
@@ -632,6 +713,11 @@ pub struct QueryStats {
     /// shows up as a busy-time imbalance (morsel *counts* are
     /// layout-determined and near-equal by construction).
     pub node_stats: Vec<NodeCounters>,
+    /// One entry per executed pipeline fragment (in execution order):
+    /// the fused operator list plus actual-vs-per-operator wire bytes.
+    /// Empty under `ExecContext::fragments = false` or when no fragment
+    /// formed.
+    pub fragments: Vec<FragmentStats>,
 }
 
 impl QueryStats {
@@ -664,6 +750,13 @@ impl QueryStats {
     /// Total steal events across nodes and operators.
     pub fn total_steals(&self) -> u64 {
         self.node_stats.iter().map(|c| c.steals).sum()
+    }
+
+    /// Total wire bytes shipped to remote nodes across all operators —
+    /// the counter the fragment-vs-operator-at-a-time differential
+    /// compares.
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.node_stats.iter().map(|c| c.wire_bytes).sum()
     }
 
     /// Aligned per-operator report (`snowparkd run-sql --stats` prints it).
@@ -705,6 +798,32 @@ impl QueryStats {
                 ));
             }
         }
+        if !self.fragments.is_empty() {
+            out.push_str(&format!(
+                "{:<10} {:<28} {:>8} {:>10} {:>9} {:>11} {:>11} {:>10}\n",
+                "fragment",
+                "ops (shipped once)",
+                "morsels",
+                "rows_in",
+                "rows_out",
+                "wire_bytes",
+                "op_at_time",
+                "saved"
+            ));
+            for (i, f) in self.fragments.iter().enumerate() {
+                out.push_str(&format!(
+                    "{:<10} {:<28} {:>8} {:>10} {:>9} {:>11} {:>11} {:>9}~\n",
+                    i,
+                    f.ops.join("+"),
+                    f.morsels,
+                    f.rows_in,
+                    f.rows_out,
+                    f.wire_bytes,
+                    f.est_operator_wire_bytes,
+                    f.wire_bytes_saved(),
+                ));
+            }
+        }
         out
     }
 }
@@ -726,6 +845,15 @@ pub fn execute_plan_with_stats(plan: &Plan, ctx: &ExecContext) -> Result<(RowSet
 }
 
 fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet> {
+    // Per-node pipeline fragments: when the planner groups this
+    // operator (with the splittable chain below it) into a fragment,
+    // dispatch the whole chain in one shipment per node instead of
+    // materializing each operator's intermediates on the leader.
+    if ctx.fragments && ctx.vectorized {
+        if let Some(out) = exec_fragment(plan, ctx, stats)? {
+            return Ok(out);
+        }
+    }
     match plan {
         Plan::Scan { table, alias: _ } => {
             let t0 = Instant::now();
@@ -825,7 +953,7 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
             } else {
                 parallel_threads(l.num_rows(), ctx) as u64
             };
-            let out = join(&l, &r, *kind, equi, residual.as_ref(), ctx, plan)?;
+            let out = join(&l, &r, *kind, equi, residual.as_ref(), ctx, plan, stats)?;
             stats.join.record_op(
                 (l.num_rows() + r.num_rows()) as u64,
                 out.num_rows() as u64,
@@ -924,6 +1052,752 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
             }
         }
     }
+}
+
+// ------------------------------------------------- pipeline fragments
+
+/// The shipping plan of one fragment over a materialized input: which
+/// input columns travel (exactly once per remote node) and the shipped
+/// sub-schema the per-morsel stage chain starts from.
+struct FragShip {
+    /// Indices into the input rowset of the shipped columns (ascending).
+    needed: Vec<usize>,
+    /// Shipped sub-schema (input field names and types, shipped order).
+    schema: Schema,
+}
+
+/// Simulate the fragment's schema pipeline to (a) union every
+/// input-level column reference into the shipped set and (b) verify
+/// that post-projection references resolve. Simulated post-projection
+/// field types are placeholders — [`resolve_column`] matches names
+/// only; per-morsel evaluation works on real evaluated columns. `None`
+/// sends the caller to the legacy fallback, which surfaces the
+/// canonical resolution error (or runs the canonical whole-input
+/// markers) instead.
+fn frag_ship_plan(frag: &Fragment, input: &Schema) -> Option<FragShip> {
+    fn add(
+        input: &Schema,
+        projected: &Option<Schema>,
+        needed: &mut Vec<usize>,
+        e: &Expr,
+    ) -> Option<()> {
+        let mut names = Vec::new();
+        e.referenced_columns(&mut names);
+        for n in &names {
+            match projected {
+                None => {
+                    needed.push(resolve_column(input, n).ok()?);
+                }
+                Some(s) => {
+                    resolve_column(s, n).ok()?;
+                }
+            }
+        }
+        Some(())
+    }
+
+    let mut needed: Vec<usize> = Vec::new();
+    // `None` while the working schema is still the raw input.
+    let mut projected: Option<Schema> = None;
+    for stage in &frag.stages {
+        match stage {
+            FragStage::Filter(pred) => add(input, &projected, &mut needed, pred)?,
+            FragStage::Project(exprs) => {
+                let cur_fields: Vec<Field> = match &projected {
+                    None => input.fields.clone(),
+                    Some(s) => s.fields.clone(),
+                };
+                let mut out_fields = Vec::new();
+                for (e, name) in exprs.iter() {
+                    let is_drop_hidden =
+                        matches!(e, Expr::Func { name, .. } if name == "__drop_hidden");
+                    if matches!(e, Expr::Star) || is_drop_hidden {
+                        // Expansion markers keep (a subset of) the
+                        // working columns; at input level that means
+                        // every input column ships.
+                        if projected.is_none() {
+                            needed.extend(0..input.len());
+                        }
+                        for f in &cur_fields {
+                            if !(is_drop_hidden && f.name.starts_with("__sort_")) {
+                                out_fields.push(f.clone());
+                            }
+                        }
+                        continue;
+                    }
+                    add(input, &projected, &mut needed, e)?;
+                    out_fields.push(Field::new(name.clone(), DataType::Int64));
+                }
+                projected = Some(Schema::new(out_fields));
+            }
+        }
+    }
+    match &frag.cap {
+        FragCap::Chain => {}
+        FragCap::Aggregate { group, aggs } => {
+            for (e, _) in group.iter() {
+                add(input, &projected, &mut needed, e)?;
+            }
+            for a in aggs.iter() {
+                for e in &a.args {
+                    add(input, &projected, &mut needed, e)?;
+                }
+            }
+        }
+        FragCap::Sort { keys, .. } => {
+            for k in keys.iter() {
+                add(input, &projected, &mut needed, &k.expr)?;
+            }
+        }
+    }
+    needed.sort_unstable();
+    needed.dedup();
+    if needed.is_empty() {
+        // Nothing to ship (e.g. a bare COUNT(*)): fusing buys nothing,
+        // and zero-column morsels would lose their row count.
+        return None;
+    }
+    let fields = needed.iter().map(|&i| input.field(i).clone()).collect();
+    Some(FragShip { needed, schema: Schema::new(fields) })
+}
+
+/// Projection without morsel dispatch — the per-morsel stage body.
+/// Mirrors [`project`]'s semantics exactly (`*` expansion, hidden-sort
+/// dropping, per-expression evaluation) over one node-local morsel.
+fn project_seq(rows: &RowSet, exprs: &[(Expr, String)], udfs: &UdfRegistry) -> Result<RowSet> {
+    let mut fields = Vec::new();
+    let mut columns = Vec::new();
+    for (e, name) in exprs {
+        if matches!(e, Expr::Func { name, .. } if name == "__drop_hidden") {
+            for (f, c) in rows.schema.fields.iter().zip(&rows.columns) {
+                if !f.name.starts_with("__sort_") {
+                    fields.push(f.clone());
+                    columns.push(c.clone());
+                }
+            }
+            continue;
+        }
+        if matches!(e, Expr::Star) {
+            for (f, c) in rows.schema.fields.iter().zip(&rows.columns) {
+                fields.push(f.clone());
+                columns.push(c.clone());
+            }
+            continue;
+        }
+        let col = eval_expr(e, rows, udfs)?;
+        fields.push(Field::new(name.clone(), col.data_type()));
+        columns.push(col);
+    }
+    RowSet::new(Schema::new(fields), columns)
+}
+
+/// Apply a fragment's stage chain to one morsel of the shipped
+/// columns: filters drop rows (tracking the survivors' *global* input
+/// row indices, the sort tiebreak), projections rebuild the working
+/// rowset. Returns the working rowset, the global index list, and the
+/// row count after each stage.
+#[allow(clippy::type_complexity)]
+fn apply_stages(
+    stages: &[FragStage],
+    ship_schema: &Schema,
+    local: &[&Column],
+    m: Morsel,
+    udfs: &UdfRegistry,
+) -> Result<(RowSet, Vec<usize>, Vec<usize>)> {
+    let mcols: Vec<Column> = local.iter().map(|c| c.slice(m.local, m.len)).collect();
+    let mut w = RowSet::new(ship_schema.clone(), mcols)?;
+    let mut idx: Vec<usize> = (m.global..m.global + m.len).collect();
+    let mut stage_rows = Vec::with_capacity(stages.len());
+    for stage in stages {
+        match stage {
+            FragStage::Filter(pred) => {
+                let mask = eval_predicate(pred, &w, udfs)?;
+                w = w.filter(&mask);
+                idx = idx.iter().zip(&mask).filter(|(_, &keep)| keep).map(|(&i, _)| i).collect();
+            }
+            FragStage::Project(exprs) => {
+                w = project_seq(&w, exprs, udfs)?;
+            }
+        }
+        stage_rows.push(w.num_rows());
+    }
+    Ok((w, idx, stage_rows))
+}
+
+/// Record the fused stages' row flow into the per-operator stats (the
+/// fragment's dispatch itself is attributed to the cap operator).
+fn record_stage_stats(
+    stats: &mut QueryStats,
+    stages: &[FragStage],
+    rows_in: u64,
+    stage_totals: &[u64],
+) {
+    let mut prev = rows_in;
+    for (stage, &out) in stages.iter().zip(stage_totals) {
+        let op = match stage {
+            FragStage::Filter(_) => &mut stats.filter,
+            FragStage::Project(_) => &mut stats.project,
+        };
+        op.record(prev, out, 1, Instant::now());
+        prev = out;
+    }
+}
+
+/// Capless chain fragment: the filtered/projected segments themselves
+/// travel back and concatenate in morsel (row) order. Returns the
+/// output plus per-stage row totals.
+fn frag_chain(
+    frag: &Fragment,
+    ship: &FragShip,
+    cols: &[&Column],
+    ranges: &[(usize, usize)],
+    ctx: &ExecContext,
+) -> Result<(RowSet, Vec<u64>)> {
+    let parts: Vec<(RowSet, Vec<usize>)> = dispatch_morsels(
+        ctx,
+        &ship.schema.fields,
+        cols,
+        ranges,
+        |_, _| Ok(()),
+        |_, local, m| {
+            let (w, _idx, stage_rows) =
+                apply_stages(&frag.stages, &ship.schema, local, m, &ctx.udfs)?;
+            Ok((w, stage_rows))
+        },
+    )?;
+    let mut stage_totals = vec![0u64; frag.stages.len()];
+    let mut iter = parts.into_iter();
+    let (mut out, first_rows) = iter.next().expect("at least one morsel");
+    for (i, r) in first_rows.iter().enumerate() {
+        stage_totals[i] += *r as u64;
+    }
+    for (part, stage_rows) in iter {
+        out.append(&part)?;
+        for (i, r) in stage_rows.iter().enumerate() {
+            stage_totals[i] += *r as u64;
+        }
+    }
+    Ok((out, stage_totals))
+}
+
+/// One morsel's contribution to an aggregate-capped fragment.
+struct FragAggPart {
+    /// Representative key *values* per local group (one column per
+    /// group key), in local first-seen order.
+    reps: Vec<Column>,
+    /// One value-carrying partial per aggregate call.
+    partials: Vec<PartialAgg>,
+    /// Row count after each stage.
+    stage_rows: Vec<usize>,
+    /// Rows that entered the cap (post-stage survivors).
+    survivors: usize,
+}
+
+/// Aggregate-capped fragment: every morsel builds node-local partials
+/// over its post-stage survivors; the leader re-keys the concatenated
+/// representatives into global dense ids — the morsel-order walk
+/// reproduces the sequential first-seen group order — and folds the
+/// partials. Returns the output, per-stage row totals, and the rows
+/// that entered the aggregate.
+#[allow(clippy::too_many_arguments)]
+fn frag_aggregate(
+    frag: &Fragment,
+    ship: &FragShip,
+    cols: &[&Column],
+    ranges: &[(usize, usize)],
+    ctx: &ExecContext,
+    group: &[(Expr, String)],
+    aggs: &[AggCall],
+) -> Result<(RowSet, Vec<u64>, u64)> {
+    let parts: Vec<FragAggPart> = dispatch_morsels(
+        ctx,
+        &ship.schema.fields,
+        cols,
+        ranges,
+        |_, _| Ok(()),
+        |_, local, m| {
+            let (w, _idx, stage_rows) =
+                apply_stages(&frag.stages, &ship.schema, local, m, &ctx.udfs)?;
+            let key_cols: Vec<Column> = group
+                .iter()
+                .map(|(e, _)| eval_expr(e, &w, &ctx.udfs))
+                .collect::<Result<_>>()?;
+            let arg_cols: Vec<Vec<Column>> = aggs
+                .iter()
+                .map(|a| {
+                    a.args
+                        .iter()
+                        .map(|e| eval_expr(e, &w, &ctx.udfs))
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<_>>()?;
+            let survivors = w.num_rows();
+            let (gids, rep_rows, n_local) = if group.is_empty() {
+                // Global aggregation: one group per morsel.
+                (vec![0u32; survivors], Vec::new(), 1)
+            } else {
+                let mut dict = KeyDict::new();
+                let keys = EncodedKeys::encode(&key_cols, KeyMode::Group, &mut dict);
+                let g = assign_group_ids(&keys);
+                let n_local = g.n_groups();
+                (g.ids, g.rep_rows, n_local)
+            };
+            let reps: Vec<Column> = key_cols.iter().map(|c| c.take(&rep_rows)).collect();
+            let partials = aggs
+                .iter()
+                .zip(&arg_cols)
+                .map(|(call, call_args)| {
+                    let refs: Vec<&Column> = call_args.iter().collect();
+                    let mut p = PartialAgg::empty(call, &refs, n_local, ctx)?;
+                    p.update(call, &refs, 0, &gids)?;
+                    // Row indices cannot travel (the leader never sees
+                    // these columns): carry values instead.
+                    Ok(p.into_values(&refs))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(FragAggPart { reps, partials, stage_rows, survivors })
+        },
+    )?;
+
+    // Leader merge: global dense group ids over the concatenated morsel
+    // representatives. Decoded key values round-trip exactly, so a
+    // fresh encoding groups identically to the legacy whole-input pass.
+    let n_morsels = parts.len();
+    let (n_groups, maps, rep_out_cols): (usize, Vec<Vec<u32>>, Vec<Column>) =
+        if group.is_empty() {
+            (1, vec![vec![0u32]; n_morsels], Vec::new())
+        } else {
+            let mut all_reps: Vec<Column> = parts[0].reps.clone();
+            for p in &parts[1..] {
+                for (a, b) in all_reps.iter_mut().zip(&p.reps) {
+                    a.append(b)?;
+                }
+            }
+            let mut dict = KeyDict::new();
+            let keys = EncodedKeys::encode(&all_reps, KeyMode::Group, &mut dict);
+            let merged = assign_group_ids(&keys);
+            let mut maps = Vec::with_capacity(n_morsels);
+            let mut at = 0;
+            for p in &parts {
+                let n_local = p.reps.first().map_or(0, Column::len);
+                maps.push(merged.ids[at..at + n_local].to_vec());
+                at += n_local;
+            }
+            let out_cols: Vec<Column> = all_reps.iter().map(|c| c.take(&merged.rep_rows)).collect();
+            (merged.n_groups(), maps, out_cols)
+        };
+    let mut merged_partials: Vec<PartialAgg> = aggs
+        .iter()
+        .enumerate()
+        .map(|(ai, call)| PartialAgg::empty_like(&parts[0].partials[ai], call, n_groups, ctx))
+        .collect::<Result<_>>()?;
+    let mut stage_totals = vec![0u64; frag.stages.len()];
+    let mut survivors = 0u64;
+    for (p, map) in parts.into_iter().zip(&maps) {
+        for (i, r) in p.stage_rows.iter().enumerate() {
+            stage_totals[i] += *r as u64;
+        }
+        survivors += p.survivors as u64;
+        for (global, local) in merged_partials.iter_mut().zip(p.partials) {
+            global.merge(local, map, &[])?;
+        }
+    }
+    let mut fields = Vec::with_capacity(group.len() + aggs.len());
+    let mut columns = Vec::with_capacity(group.len() + aggs.len());
+    for ((_, name), col) in group.iter().zip(rep_out_cols) {
+        fields.push(Field::new(name.clone(), col.data_type()));
+        columns.push(col);
+    }
+    for (call, partial) in aggs.iter().zip(merged_partials) {
+        // Value-carrying partials only: `finish` never touches the
+        // (absent) argument columns here.
+        let out = partial.finish(call, &[], n_groups, ctx)?;
+        fields.push(Field::new(call.out_name.clone(), out.data_type()));
+        columns.push(out);
+    }
+    let out = RowSet::new(Schema::new(fields), columns)?;
+    Ok((out, stage_totals, survivors))
+}
+
+/// One morsel's contribution to a sort-capped fragment: its post-stage
+/// survivors in run (sorted, possibly top-k-truncated) order.
+struct FragSortSeg {
+    /// The working rowset's columns, gathered in run order.
+    out: RowSet,
+    /// The evaluated sort-key columns, gathered in run order.
+    keys: Vec<Column>,
+    /// Each run entry's *global input* row index (the strict tiebreak).
+    gidx: Vec<usize>,
+    /// Row count after each stage.
+    stage_rows: Vec<usize>,
+}
+
+/// Sort-capped fragment: per-morsel run generation over the post-stage
+/// survivors, then the leader's k-way merge under the same
+/// index-tiebroken total order (strict, so the merged order is the
+/// unique globally sorted order — identical to the legacy sort).
+/// Returns the output, per-stage row totals, and the rows that entered
+/// the sort.
+#[allow(clippy::too_many_arguments)]
+fn frag_sort(
+    frag: &Fragment,
+    ship: &FragShip,
+    cols: &[&Column],
+    ranges: &[(usize, usize)],
+    ctx: &ExecContext,
+    keys: &[OrderKey],
+    limit: Option<usize>,
+) -> Result<(RowSet, Vec<u64>, u64)> {
+    let segs: Vec<FragSortSeg> = dispatch_morsels(
+        ctx,
+        &ship.schema.fields,
+        cols,
+        ranges,
+        |_, _| Ok(()),
+        |_, local, m| {
+            let (w, idx, stage_rows) =
+                apply_stages(&frag.stages, &ship.schema, local, m, &ctx.udfs)?;
+            let key_cols: Vec<Column> = keys
+                .iter()
+                .map(|k| eval_expr(&k.expr, &w, &ctx.udfs))
+                .collect::<Result<_>>()?;
+            let dk = decorate(keys, &key_cols);
+            let mut run: Vec<usize> = (0..w.num_rows()).collect();
+            // The local-position tiebreak is order-isomorphic to the
+            // global one: filters preserve order, so `idx` ascends.
+            let mut c = |a: &usize, b: &usize| cmp_decorated(&dk, *a, *b).then_with(|| a.cmp(b));
+            apply_order(&mut run, limit, &mut c);
+            let out = w.take(&run);
+            let kcols: Vec<Column> = key_cols.iter().map(|c| c.take(&run)).collect();
+            let gidx: Vec<usize> = run.iter().map(|&i| idx[i]).collect();
+            Ok(FragSortSeg { out, keys: kcols, gidx, stage_rows })
+        },
+    )?;
+    let mut stage_totals = vec![0u64; frag.stages.len()];
+    let mut runs: Vec<Vec<usize>> = Vec::with_capacity(segs.len());
+    let mut iter = segs.into_iter();
+    let first = iter.next().expect("at least one morsel");
+    for (i, r) in first.stage_rows.iter().enumerate() {
+        stage_totals[i] += *r as u64;
+    }
+    let mut all_rows = first.out;
+    let mut all_keys = first.keys;
+    let mut gidx_all = first.gidx;
+    let mut base = all_rows.num_rows();
+    runs.push((0..base).collect());
+    for seg in iter {
+        for (i, r) in seg.stage_rows.iter().enumerate() {
+            stage_totals[i] += *r as u64;
+        }
+        let len = seg.out.num_rows();
+        runs.push((base..base + len).collect());
+        base += len;
+        all_rows.append(&seg.out)?;
+        for (a, b) in all_keys.iter_mut().zip(&seg.keys) {
+            a.append(b)?;
+        }
+        gidx_all.extend_from_slice(&seg.gidx);
+    }
+    let survivors = stage_totals.last().copied().unwrap_or(0);
+    let dk = decorate(keys, &all_keys);
+    let cmp = |a: usize, b: usize| {
+        cmp_decorated(&dk, a, b).then_with(|| gidx_all[a].cmp(&gidx_all[b]))
+    };
+    let order = kway_merge(runs, limit, cmp);
+    Ok((all_rows.take(&order), stage_totals, survivors))
+}
+
+/// ≈ wire bytes the operator-at-a-time dispatch would ship for this
+/// fragment's operators: exact ([`WireBatch::encoded_size`] over the
+/// actual remote spans) where an operator reads raw input columns; a
+/// 9-bytes-per-cell fixed-width approximation above the first
+/// projection, whose intermediate columns never materialize here.
+fn frag_op_ship_estimate(
+    frag: &Fragment,
+    rows: &RowSet,
+    ranges: &[(usize, usize)],
+    ctx: &ExecContext,
+    stage_totals: &[u64],
+) -> u64 {
+    let n_morsels = ranges.len();
+    let nodes = ctx.nodes.clamp(1, n_morsels);
+    if nodes <= 1 {
+        return 0;
+    }
+    let rows_in = rows.num_rows() as u64;
+    let spans = morsel_ranges(n_morsels, nodes);
+    let remote: Vec<(usize, usize)> = spans[1..]
+        .iter()
+        .map(|&(m0, mlen)| {
+            let lo = ranges[m0].0;
+            let (last_off, last_len) = ranges[m0 + mlen - 1];
+            (lo, last_off + last_len - lo)
+        })
+        .collect();
+    let remote_frac = remote.iter().map(|&(_, len)| len as u64).sum::<u64>() as f64
+        / rows_in.max(1) as f64;
+    let exact = |names: &[String]| -> u64 {
+        let mut needed: Vec<usize> = names
+            .iter()
+            .filter_map(|n| resolve_column(&rows.schema, n).ok())
+            .collect();
+        needed.sort_unstable();
+        needed.dedup();
+        if needed.is_empty() {
+            return 0;
+        }
+        let fields: Vec<Field> = needed.iter().map(|&i| rows.schema.field(i).clone()).collect();
+        let cols: Vec<&Column> = needed.iter().map(|&i| rows.column(i)).collect();
+        remote
+            .iter()
+            .map(|&(off, len)| WireBatch::encoded_size(&fields, &cols, off, len) as u64)
+            .sum()
+    };
+    let approx = |n_cols: usize, n_rows: u64| {
+        (9.0 * n_cols as f64 * n_rows as f64 * remote_frac) as u64
+    };
+    let dedup_refs = |exprs: &[&Expr]| -> Vec<String> {
+        let mut names = Vec::new();
+        for e in exprs {
+            e.referenced_columns(&mut names);
+        }
+        names.sort_unstable();
+        names.dedup();
+        names
+    };
+    let mut est = 0u64;
+    let mut at_input = true;
+    let mut prev_rows = rows_in;
+    for (stage, &out_rows) in frag.stages.iter().zip(stage_totals) {
+        let split: Vec<&Expr> = match stage {
+            FragStage::Filter(pred) => [*pred]
+                .into_iter()
+                .filter(|e| morsel_splittable(e, &ctx.udfs))
+                .collect(),
+            FragStage::Project(exprs) => exprs
+                .iter()
+                .map(|(e, _)| e)
+                .filter(|e| morsel_splittable(e, &ctx.udfs))
+                .collect(),
+        };
+        if !split.is_empty() {
+            let names = dedup_refs(&split);
+            est += if at_input { exact(&names) } else { approx(names.len(), prev_rows) };
+        }
+        if matches!(stage, FragStage::Project(_)) {
+            at_input = false;
+        }
+        prev_rows = out_rows;
+    }
+    match &frag.cap {
+        FragCap::Chain => {}
+        FragCap::Aggregate { group, aggs } => {
+            // Legacy: every splittable key/arg expression dispatches
+            // its own evaluation, then the partial pass ships the
+            // evaluated key+arg columns once more.
+            let mut n_cols = group.len();
+            let mut split: Vec<&Expr> = Vec::new();
+            for (e, _) in group.iter() {
+                if morsel_splittable(e, &ctx.udfs) {
+                    split.push(e);
+                }
+            }
+            for a in aggs.iter() {
+                n_cols += a.args.len();
+                for e in &a.args {
+                    if morsel_splittable(e, &ctx.udfs) {
+                        split.push(e);
+                    }
+                }
+            }
+            for e in split {
+                let names = dedup_refs(&[e]);
+                est += if at_input { exact(&names) } else { approx(names.len(), prev_rows) };
+            }
+            est += approx(n_cols, prev_rows);
+        }
+        FragCap::Sort { keys, .. } => {
+            // Legacy sort ships its evaluated key-column spans.
+            est += approx(keys.len(), prev_rows);
+        }
+    }
+    est
+}
+
+/// Run the fragment's operators over an already-materialized input via
+/// the legacy operator-at-a-time code paths — taken when the input is
+/// too small to dispatch or the ship plan declines, so error behavior
+/// and the exact sequential path stay canonical.
+fn exec_fragment_fallback(
+    frag: &Fragment,
+    rows: RowSet,
+    ctx: &ExecContext,
+    stats: &mut QueryStats,
+) -> Result<RowSet> {
+    let mut cur = rows;
+    for stage in &frag.stages {
+        let t0 = Instant::now();
+        let before = ctx.tally.totals();
+        let threads = parallel_threads(cur.num_rows(), ctx) as u64;
+        match stage {
+            FragStage::Filter(pred) => {
+                let mask = eval_pred(pred, &cur, ctx)?;
+                let out = cur.filter(&mask);
+                stats.filter.record_op(
+                    cur.num_rows() as u64,
+                    out.num_rows() as u64,
+                    threads,
+                    before,
+                    ctx,
+                    t0,
+                );
+                cur = out;
+            }
+            FragStage::Project(exprs) => {
+                let out = project(&cur, exprs, ctx)?;
+                stats.project.record_op(
+                    cur.num_rows() as u64,
+                    out.num_rows() as u64,
+                    threads,
+                    before,
+                    ctx,
+                    t0,
+                );
+                cur = out;
+            }
+        }
+    }
+    match &frag.cap {
+        FragCap::Chain => Ok(cur),
+        FragCap::Aggregate { group, aggs } => {
+            let t0 = Instant::now();
+            let before = ctx.tally.totals();
+            let threads = parallel_threads(cur.num_rows(), ctx) as u64;
+            let out = aggregate(&cur, group, aggs, ctx)?;
+            stats.aggregate.record_op(
+                cur.num_rows() as u64,
+                out.num_rows() as u64,
+                threads,
+                before,
+                ctx,
+                t0,
+            );
+            Ok(out)
+        }
+        FragCap::Sort { keys, limit, tail } => {
+            let t0 = Instant::now();
+            let before = ctx.tally.totals();
+            let threads = parallel_threads(cur.num_rows(), ctx) as u64;
+            let sorted = sort(&cur, keys, ctx, *limit)?;
+            stats.sort.record_op(
+                cur.num_rows() as u64,
+                sorted.num_rows() as u64,
+                threads,
+                before,
+                ctx,
+                t0,
+            );
+            match tail {
+                None => Ok(sorted),
+                Some(exprs) => {
+                    let t1 = Instant::now();
+                    let before2 = ctx.tally.totals();
+                    let threads2 = parallel_threads(sorted.num_rows(), ctx) as u64;
+                    let out = project(&sorted, exprs, ctx)?;
+                    stats.project.record_op(
+                        sorted.num_rows() as u64,
+                        out.num_rows() as u64,
+                        threads2,
+                        before2,
+                        ctx,
+                        t1,
+                    );
+                    Ok(out)
+                }
+            }
+        }
+    }
+}
+
+/// Execute `plan` as a per-node pipeline fragment if the planner forms
+/// one there: materialize the source, ship each remote node its span of
+/// the fragment's input columns exactly once, run the whole stage chain
+/// node-locally on the work-stealing scheduler, and perform only the
+/// breaker step (partial merge, k-way merge, or segment concatenation)
+/// on the leader. `Ok(None)` means no fragment forms at this node (the
+/// caller's legacy arm runs).
+fn exec_fragment(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<Option<RowSet>> {
+    let frag = match Fragment::extract(plan, &ctx.udfs) {
+        Some(f) => f,
+        None => return Ok(None),
+    };
+    let rows = exec(frag.source, ctx, stats)?;
+    let plan_parts = (frag_ship_plan(&frag, &rows.schema), parallel_ranges(rows.num_rows(), ctx));
+    let (ship, ranges) = match plan_parts {
+        (Some(s), Some(r)) => (s, r),
+        _ => return exec_fragment_fallback(&frag, rows, ctx, stats).map(Some),
+    };
+    let t0 = Instant::now();
+    let before = ctx.tally.totals();
+    let threads = parallel_threads(rows.num_rows(), ctx) as u64;
+    let rows_in = rows.num_rows() as u64;
+    let cols: Vec<&Column> = ship.needed.iter().map(|&i| rows.column(i)).collect();
+    let ops = frag.op_names();
+    let (out, stage_totals) = match &frag.cap {
+        FragCap::Chain => {
+            let (out, stage_totals) = frag_chain(&frag, &ship, &cols, &ranges, ctx)?;
+            // The chain's top stage is always a projection: attribute
+            // the dispatch to it, the earlier stages get plain records.
+            let last = frag.stages.len() - 1;
+            record_stage_stats(stats, &frag.stages[..last], rows_in, &stage_totals[..last]);
+            let in_last = if last == 0 { rows_in } else { stage_totals[last - 1] };
+            stats.project.record_op(in_last, stage_totals[last], threads, before, ctx, t0);
+            (out, stage_totals)
+        }
+        FragCap::Aggregate { group, aggs } => {
+            let (out, stage_totals, cap_in) =
+                frag_aggregate(&frag, &ship, &cols, &ranges, ctx, group, aggs)?;
+            record_stage_stats(stats, &frag.stages, rows_in, &stage_totals);
+            stats.aggregate.record_op(cap_in, out.num_rows() as u64, threads, before, ctx, t0);
+            (out, stage_totals)
+        }
+        FragCap::Sort { keys, limit, .. } => {
+            let (out, stage_totals, cap_in) =
+                frag_sort(&frag, &ship, &cols, &ranges, ctx, keys, *limit)?;
+            record_stage_stats(stats, &frag.stages, rows_in, &stage_totals);
+            stats.sort.record_op(cap_in, out.num_rows() as u64, threads, before, ctx, t0);
+            (out, stage_totals)
+        }
+    };
+    let after = ctx.tally.totals();
+    stats.fragments.push(FragmentStats {
+        ops,
+        rows_in,
+        rows_out: out.num_rows() as u64,
+        morsels: after.morsels.saturating_sub(before.morsels),
+        wire_bytes: after.wire_bytes.saturating_sub(before.wire_bytes),
+        est_operator_wire_bytes: frag_op_ship_estimate(&frag, &rows, &ranges, ctx, &stage_totals),
+    });
+    // The hidden-column-dropping projection above a top-k sort runs on
+    // the leader over the merged k rows, exactly like the legacy arm.
+    let out = if let FragCap::Sort { tail: Some(exprs), .. } = &frag.cap {
+        let t1 = Instant::now();
+        let before2 = ctx.tally.totals();
+        let threads2 = parallel_threads(out.num_rows(), ctx) as u64;
+        let projected = project(&out, exprs, ctx)?;
+        stats.project.record_op(
+            out.num_rows() as u64,
+            projected.num_rows() as u64,
+            threads2,
+            before2,
+            ctx,
+            t1,
+        );
+        projected
+    } else {
+        out
+    };
+    Ok(Some(out))
 }
 
 fn project(rows: &RowSet, exprs: &[(Expr, String)], ctx: &ExecContext) -> Result<RowSet> {
@@ -1561,6 +2435,12 @@ enum PartialAgg {
     Avg { sums: Vec<f64>, counts: Vec<i64> },
     /// MIN/MAX: best *global* row index per group (`-1` = none yet).
     MinMax { best: Vec<i64>, is_min: bool },
+    /// MIN/MAX carried as per-group *values* (`Value::Null` = no value
+    /// yet; `dt` is the argument column's type). Fragment dispatch
+    /// converts [`PartialAgg::MinMax`] into this before returning from
+    /// a node: the leader never materializes the argument columns
+    /// there, so row indices cannot travel.
+    MinMaxVals { vals: Vec<Value>, dt: DataType, is_min: bool },
     /// UDAF accumulator states per group, folded via [`UdafState::merge`].
     Udaf(Vec<Box<dyn UdafState>>),
 }
@@ -1720,6 +2600,9 @@ impl PartialAgg {
                     }
                 }
             }
+            PartialAgg::MinMaxVals { .. } => {
+                bail!("MinMaxVals is a merge-side state, never updated per row")
+            }
             PartialAgg::Udaf(states) => {
                 let mut argv: Vec<Value> = Vec::with_capacity(args.len());
                 for (k, &g) in gids.iter().enumerate() {
@@ -1817,6 +2700,38 @@ impl PartialAgg {
                     }
                 }
             }
+            (
+                PartialAgg::MinMaxVals { vals, dt, is_min },
+                PartialAgg::MinMaxVals { vals: lv, dt: ldt, .. },
+            ) => {
+                if *dt != ldt {
+                    bail!("mismatched MIN/MAX dtypes across morsel partials");
+                }
+                // Value comparison mirrors `min_max_better` (same
+                // dtype on both sides; Float NaN compares as unknown
+                // and never replaces the current best).
+                let is_min = *is_min;
+                for (lg, v) in lv.into_iter().enumerate() {
+                    if v.is_null() {
+                        continue;
+                    }
+                    let g = map[lg] as usize;
+                    let replace = match &vals[g] {
+                        Value::Null => true,
+                        cur => {
+                            let ord = v.sql_cmp(cur);
+                            if is_min {
+                                ord == Some(Ordering::Less)
+                            } else {
+                                ord == Some(Ordering::Greater)
+                            }
+                        }
+                    };
+                    if replace {
+                        vals[g] = v;
+                    }
+                }
+            }
             (PartialAgg::Udaf(states), PartialAgg::Udaf(ls)) => {
                 for (lg, s) in ls.into_iter().enumerate() {
                     states[map[lg] as usize].merge(s)?;
@@ -1876,6 +2791,16 @@ impl PartialAgg {
                     args[0].gather_opt(&best)
                 }
             }
+            PartialAgg::MinMaxVals { vals, dt, .. } => {
+                // Same derivation as the row-index variant: all-empty
+                // groups fall back to the legacy all-NULL Float64
+                // column, otherwise values keep the argument dtype.
+                if vals.iter().all(|v| v.is_null()) {
+                    null_f64_column(n_groups)
+                } else {
+                    Column::from_values(dt, &vals)?
+                }
+            }
             PartialAgg::Udaf(states) => {
                 let udaf = ctx
                     .udfs
@@ -1890,6 +2815,74 @@ impl PartialAgg {
                     dt = DataType::Float64;
                 }
                 Column::from_values(dt, &vals)?
+            }
+        })
+    }
+
+    /// Convert a morsel-local MIN/MAX partial from row indices into
+    /// carried values, so the fragment leader can merge and finish
+    /// without the argument columns (which only ever existed
+    /// node-locally). Every other variant already carries values.
+    fn into_values(self, args: &[&Column]) -> PartialAgg {
+        match self {
+            PartialAgg::MinMax { best, is_min } => {
+                let col = args[0];
+                let vals = best
+                    .iter()
+                    .map(|&b| if b < 0 { Value::Null } else { col.value(b as usize) })
+                    .collect();
+                PartialAgg::MinMaxVals { vals, dt: col.data_type(), is_min }
+            }
+            other => other,
+        }
+    }
+
+    /// Zeroed merge-side state matching `proto`'s variant — the
+    /// fragment path's analogue of [`PartialAgg::empty`], which needs
+    /// argument columns the leader never materializes there. MIN/MAX
+    /// protos map to the value-carrying variant.
+    fn empty_like(
+        proto: &PartialAgg,
+        call: &AggCall,
+        n_groups: usize,
+        ctx: &ExecContext,
+    ) -> Result<PartialAgg> {
+        Ok(match proto {
+            PartialAgg::CountStar(_) => PartialAgg::CountStar(vec![0; n_groups]),
+            PartialAgg::Count(_) => PartialAgg::Count(vec![0; n_groups]),
+            PartialAgg::IntSum { .. } => PartialAgg::IntSum {
+                isums: vec![0; n_groups],
+                fsums: vec![0.0; n_groups],
+                overflowed: vec![false; n_groups],
+                any: vec![false; n_groups],
+            },
+            PartialAgg::FloatSum { .. } => PartialAgg::FloatSum {
+                sums: vec![0.0; n_groups],
+                any: vec![false; n_groups],
+            },
+            PartialAgg::NullAgg => PartialAgg::NullAgg,
+            PartialAgg::Avg { .. } => PartialAgg::Avg {
+                sums: vec![0.0; n_groups],
+                counts: vec![0; n_groups],
+            },
+            PartialAgg::MinMax { .. } => {
+                // Fragment morsels convert MIN/MAX partials through
+                // `into_values` before they leave a node (a raw
+                // row-index partial carries no dtype to seed the
+                // merge state with).
+                bail!("MIN/MAX fragment partials must be value-converted before merging")
+            }
+            PartialAgg::MinMaxVals { dt, is_min, .. } => PartialAgg::MinMaxVals {
+                vals: vec![Value::Null; n_groups],
+                dt: *dt,
+                is_min: *is_min,
+            },
+            PartialAgg::Udaf(_) => {
+                let udaf = ctx
+                    .udfs
+                    .udaf(&call.name)
+                    .ok_or_else(|| anyhow!("no UDAF {:?}", call.name))?;
+                PartialAgg::Udaf((0..n_groups).map(|_| (udaf.factory)()).collect())
             }
         })
     }
@@ -2230,7 +3223,11 @@ fn probe_one(
 /// nested-loop cross product + filter when no equi keys exist. The
 /// vectorized path builds its table from codec-encoded keys and probes
 /// with `&[u8]` compares; both paths emit `l_idx`/`r_idx` gather vectors
-/// that materialize through typed column gathers.
+/// that materialize through typed column gathers. Under fragment
+/// dispatch the probe is its own single-shipment fragment (the
+/// leader-built broadcast build table is the breaker), recorded in
+/// `stats.fragments`.
+#[allow(clippy::too_many_arguments)]
 fn join(
     l: &RowSet,
     r: &RowSet,
@@ -2239,6 +3236,7 @@ fn join(
     residual: Option<&Expr>,
     ctx: &ExecContext,
     plan: &Plan,
+    stats: &mut QueryStats,
 ) -> Result<RowSet> {
     let (lalias, ralias) = match plan {
         Plan::Join { left, right, .. } => {
@@ -2349,6 +3347,7 @@ fn join(
                     // strings keep their ids, probe-only strings get
                     // fresh non-matching ids — so the match sets are
                     // identical to the leader's single encoding.
+                    let probe_before = ctx.tally.totals();
                     let fields: Vec<Field> = lkey_cols
                         .iter()
                         .enumerate()
@@ -2389,6 +3388,22 @@ fn join(
                     for (li, ri) in segments {
                         l_idx.extend_from_slice(&li);
                         r_idx.extend_from_slice(&ri);
+                    }
+                    if ctx.fragments {
+                        // The probe already ships its key span exactly
+                        // once per node — record it as a (single-op)
+                        // fragment so `--stats` shows the breaker
+                        // boundary at the leader-built build table.
+                        let after = ctx.tally.totals();
+                        let wire = after.wire_bytes.saturating_sub(probe_before.wire_bytes);
+                        stats.fragments.push(FragmentStats {
+                            ops: vec!["join-probe"],
+                            rows_in: l.num_rows() as u64,
+                            rows_out: l_idx.len() as u64,
+                            morsels: after.morsels.saturating_sub(probe_before.morsels),
+                            wire_bytes: wire,
+                            est_operator_wire_bytes: wire,
+                        });
                     }
                 }
                 None => {
@@ -3321,5 +4336,153 @@ mod tests {
         let report = stats.report();
         assert!(report.contains("morsels"), "{report}");
         assert!(report.contains("steals"), "{report}");
+    }
+
+    /// The ISSUE 5 flagship: a scan→filter→project→aggregate query over
+    /// ≥ 2 nodes ships each remote node's input span exactly once per
+    /// fragment — byte-identical to legacy dispatch and to sequential
+    /// execution, with strictly fewer wire bytes than operator-at-a-time
+    /// shipping.
+    #[test]
+    fn fragment_dispatch_matches_legacy_and_ships_less() {
+        let catalog = big_catalog();
+        let q = "SELECT k2, COUNT(*) AS n, SUM(vv) AS s, MIN(vv) AS lo, MAX(vv) AS hi \
+                 FROM (SELECT k + 1 AS k2, v * 2.0 AS vv FROM facts WHERE v < 400.0) t \
+                 GROUP BY k2";
+        let seq = run_sql(
+            q,
+            &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(1)
+                .with_nodes(1),
+        )
+        .unwrap();
+        for (nodes, threads) in [(1usize, 8usize), (2, 4), (4, 2)] {
+            let frag_ctx = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(threads)
+                .with_nodes(nodes)
+                .with_fragments(true);
+            let (frag_out, frag_stats) = run_sql_with_stats(q, &frag_ctx).unwrap();
+            let legacy_ctx = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(threads)
+                .with_nodes(nodes)
+                .with_fragments(false);
+            let (legacy_out, legacy_stats) = run_sql_with_stats(q, &legacy_ctx).unwrap();
+            assert_eq!(frag_out, seq, "fragments ({nodes},{threads})");
+            assert_eq!(legacy_out, seq, "legacy ({nodes},{threads})");
+            assert!(
+                !frag_stats.fragments.is_empty(),
+                "no fragment recorded at ({nodes},{threads})"
+            );
+            let f = &frag_stats.fragments[0];
+            assert_eq!(f.ops, vec!["filter", "project", "aggregate"]);
+            assert!(legacy_stats.fragments.is_empty());
+            if nodes > 1 {
+                let (fw, lw) = (frag_stats.total_wire_bytes(), legacy_stats.total_wire_bytes());
+                assert!(fw > 0, "({nodes},{threads}): fragment shipped nothing");
+                assert!(
+                    fw < lw,
+                    "({nodes},{threads}): fragment wire {fw} !< operator-at-a-time {lw}"
+                );
+                assert!(f.wire_bytes > 0);
+                assert!(
+                    f.est_operator_wire_bytes > f.wire_bytes,
+                    "estimate should exceed the single shipment: {f:?}"
+                );
+                let report = frag_stats.report();
+                assert!(report.contains("fragment"), "{report}");
+                assert!(report.contains("filter+project+aggregate"), "{report}");
+            }
+        }
+    }
+
+    #[test]
+    fn sort_fragment_matches_legacy() {
+        let catalog = big_catalog();
+        for q in [
+            // Top-k over a filtered computed projection (alias sort key).
+            "SELECT k + 1 AS k1, v * 2.0 AS vv FROM facts WHERE v < 450.0 \
+             ORDER BY vv DESC, k1 LIMIT 37",
+            // Hidden sort column: the dropping projection runs on the
+            // leader over the merged k rows.
+            "SELECT k + 1 AS k1 FROM facts WHERE v < 450.0 ORDER BY tag, v LIMIT 11",
+            // Full sort (no limit) over a fused filter+project chain.
+            "SELECT k + 1 AS k1, v * 2.0 AS vv FROM facts WHERE v < 100.0 ORDER BY vv, k1",
+        ] {
+            let seq = run_sql(
+                q,
+                &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                    .with_parallelism(1)
+                    .with_nodes(1),
+            )
+            .unwrap_or_else(|e| panic!("{q}: {e}"));
+            for fragments in [true, false] {
+                let out = run_sql(
+                    q,
+                    &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                        .with_parallelism(4)
+                        .with_nodes(2)
+                        .with_fragments(fragments),
+                )
+                .unwrap_or_else(|e| panic!("{q} (fragments={fragments}): {e}"));
+                assert_eq!(out, seq, "{q} (fragments={fragments})");
+            }
+        }
+    }
+
+    #[test]
+    fn fragment_empty_survivors_match_legacy() {
+        let catalog = big_catalog();
+        for q in [
+            // Every morsel filters to zero rows: global agg still yields
+            // its one row, grouped agg yields zero.
+            "SELECT COUNT(*) AS n, SUM(v) AS s, MIN(v) AS lo FROM facts WHERE v > 9999.0",
+            "SELECT tag, COUNT(*) AS n FROM facts WHERE v > 9999.0 GROUP BY tag",
+            "SELECT k + 1 AS k1, v * 2.0 AS vv FROM facts WHERE v > 9999.0 ORDER BY vv LIMIT 5",
+        ] {
+            let seq = run_sql(
+                q,
+                &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                    .with_parallelism(1)
+                    .with_nodes(1),
+            )
+            .unwrap_or_else(|e| panic!("{q}: {e}"));
+            let frag = run_sql(
+                q,
+                &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                    .with_parallelism(4)
+                    .with_nodes(2),
+            )
+            .unwrap_or_else(|e| panic!("{q} (fragment): {e}"));
+            assert_eq!(frag, seq, "{q}");
+        }
+    }
+
+    #[test]
+    fn chain_fragment_matches_legacy() {
+        let catalog = big_catalog();
+        let q = "SELECT k + 1 AS k1, v * 2.0 AS v2 FROM facts WHERE v < 300.0";
+        let seq = run_sql(
+            q,
+            &ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(1)
+                .with_nodes(1),
+        )
+        .unwrap();
+        let frag_ctx = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+            .with_parallelism(4)
+            .with_nodes(2);
+        let (out, stats) = run_sql_with_stats(q, &frag_ctx).unwrap();
+        assert_eq!(out, seq);
+        assert_eq!(stats.fragments.len(), 1, "{:?}", stats.fragments);
+        assert_eq!(stats.fragments[0].ops, vec!["filter", "project"]);
+        let legacy = run_sql(
+            q,
+            &ExecContext::new(catalog, Arc::new(UdfRegistry::new()))
+                .with_parallelism(4)
+                .with_nodes(2)
+                .with_fragments(false),
+        )
+        .unwrap();
+        assert_eq!(legacy, seq);
     }
 }

@@ -1,0 +1,401 @@
+//! Per-node pipeline fragments: the planner side.
+//!
+//! PR 4 distributed each *operator* across warehouse nodes but
+//! materialized every intermediate on the leader, so a
+//! scan→filter→project→aggregate query shipped the same remote spans
+//! back and forth once per operator — exactly the leader bottleneck the
+//! paper's elastic data-engineering path avoids, and the core lesson of
+//! pipelined distributed execution (Cylon, arXiv:2301.07896). This
+//! module walks the [`Plan`] tree and groups the morsel-splittable
+//! operators into **fragments**: a chain of `Filter`/`Project` stages
+//! over one materialized source, optionally capped by a pipeline
+//! breaker's node-local half —
+//!
+//! - **aggregate pre-partials** (breaker: the leader's partial merge),
+//! - **sort run generation** (breaker: the leader's k-way merge),
+//! - or no cap at all (breaker: the exchange back to the leader).
+//!
+//! The executor (`exec::exec_fragment`) ships each remote node its span
+//! of the fragment's *input* columns **once**, runs the whole stage
+//! chain node-locally on the work-stealing morsel scheduler, and
+//! returns only the fragment outputs (filtered/projected segments,
+//! aggregate partials, sorted runs) to the leader for the breaker step.
+//! The join probe — already dispatched as a single-shipment operator by
+//! PR 4 — is reported as its own fragment (breaker: the leader-built
+//! broadcast build table).
+//!
+//! Eligibility is conservative *in shipment counts*: a fragment only
+//! forms when fusing saves (or at worst matches) the number of
+//! per-operator shipments, and never when an expression calls a
+//! batch-dependent *vectorized* UDF (splitting would move its batch
+//! boundary). Shipment counts are not bytes, though: a fragment ships
+//! its whole input span at pre-filter cardinality, while the legacy
+//! path ships downstream operators' columns at *post-filter*
+//! cardinality — so under a highly selective filter a fused chain can
+//! ship more bytes than operator-at-a-time dispatch even while
+//! shipping fewer times (selectivity is unknown at plan time; feeding
+//! recorded per-query selectivity into this gate is future work, see
+//! ROADMAP). On the moderate selectivities typical of analytic scans
+//! the single shipment wins, which the A11 ablation and the
+//! wire-bytes differential test quantify. Everything that declines
+//! falls back to the PR 4 operator-at-a-time dispatch, which
+//! `ExecContext::fragments = false` (`SNOWPARK_FRAGMENTS=0`) also pins
+//! wholesale as the `pipeline_fragments` (A11) ablation baseline.
+//!
+//! Error-ordering caveat (extending the one the batched projection
+//! already carries): when *different* fused operators would fail at
+//! different rows, the surfaced error is the earliest *morsel's*, not
+//! the upstream-most operator's — a fragment evaluates its whole chain
+//! morsel-at-a-time instead of operator-at-a-time. The first error in
+//! morsel order still wins deterministically.
+
+use crate::sql::ast::{Expr, OrderKey};
+use crate::udf::UdfRegistry;
+
+use super::exec::morsel_splittable;
+use super::plan::{AggCall, Plan};
+
+/// One pipelined (non-breaking) operator inside a fragment, applied
+/// per morsel over the node-local span in row order.
+pub(crate) enum FragStage<'p> {
+    /// `WHERE`/`HAVING`-style row filter.
+    Filter(&'p Expr),
+    /// Projection (may contain `*` and the planner's `__drop_hidden`
+    /// marker, both of which expand against the working schema).
+    Project(&'p [(Expr, String)]),
+}
+
+/// The pipeline breaker a fragment feeds, i.e. what each morsel returns
+/// to the leader.
+pub(crate) enum FragCap<'p> {
+    /// No breaker: the filtered/projected column segments themselves
+    /// travel back and concatenate in morsel order.
+    Chain,
+    /// Aggregate pre-partials; the leader re-keys representatives into
+    /// global dense group ids and folds the partials.
+    Aggregate {
+        /// Group-key expressions (over the working schema).
+        group: &'p [(Expr, String)],
+        /// Aggregate calls.
+        aggs: &'p [AggCall],
+    },
+    /// Sorted (optionally top-k-truncated) run generation; the leader
+    /// k-way merges the runs under the index-tiebroken total order.
+    Sort {
+        /// ORDER BY keys (over the working schema).
+        keys: &'p [OrderKey],
+        /// Top-k bound when a `LIMIT` rides the sort.
+        limit: Option<usize>,
+        /// The hidden-column-dropping projection the planner inserts
+        /// above the sort, run on the leader over the merged k rows.
+        tail: Option<&'p [(Expr, String)]>,
+    },
+}
+
+/// A planned fragment: stages applied bottom-up over `source`'s rows,
+/// feeding `cap`.
+pub(crate) struct Fragment<'p> {
+    /// Pipelined stages in application order (deepest first).
+    pub stages: Vec<FragStage<'p>>,
+    /// The breaker the fragment feeds.
+    pub cap: FragCap<'p>,
+    /// The subtree that materializes the fragment's input rows.
+    pub source: &'p Plan,
+}
+
+/// Does this stage dispatch (and therefore ship remote spans) under the
+/// PR 4 operator-at-a-time path? Filters ship when their predicate is
+/// morsel-splittable; projections ship when at least one expression is.
+fn stage_ships(stage: &FragStage, udfs: &UdfRegistry) -> bool {
+    match stage {
+        FragStage::Filter(pred) => morsel_splittable(pred, udfs),
+        FragStage::Project(exprs) => {
+            exprs.iter().any(|(e, _)| morsel_splittable(e, udfs))
+        }
+    }
+}
+
+/// Does the expression (or any sub-expression) call a registered
+/// *vectorized* UDF? Those are batch-at-a-time and may be
+/// batch-dependent, so a fragment must not move their batch boundary.
+fn stage_has_vectorized(stage: &FragStage, udfs: &UdfRegistry) -> bool {
+    match stage {
+        FragStage::Filter(pred) => super::exec::has_vectorized_udf(pred, udfs),
+        FragStage::Project(exprs) => exprs
+            .iter()
+            .any(|(e, _)| super::exec::has_vectorized_udf(e, udfs)),
+    }
+}
+
+/// Collect the maximal `Filter`/`Project` chain under `plan`, returning
+/// the stages in application order plus the source subtree below them.
+fn collect_chain<'p>(mut plan: &'p Plan) -> (Vec<FragStage<'p>>, &'p Plan) {
+    let mut rev: Vec<FragStage<'p>> = Vec::new();
+    loop {
+        match plan {
+            Plan::Filter { input, predicate } => {
+                rev.push(FragStage::Filter(predicate));
+                plan = input;
+            }
+            Plan::Project { input, exprs } => {
+                rev.push(FragStage::Project(exprs));
+                plan = input;
+            }
+            other => {
+                rev.reverse();
+                return (rev, other);
+            }
+        }
+    }
+}
+
+impl<'p> Fragment<'p> {
+    /// Extract the fragment rooted at `plan`, if one should form there.
+    ///
+    /// Fragment roots and their rules:
+    /// - `Aggregate` → stages = the chain below it (possibly empty);
+    ///   always worth fusing (the aggregate alone ships its key/arg
+    ///   columns under operator-at-a-time dispatch).
+    /// - `Sort`, `Limit(Sort)`, `Limit(Project(Sort))` → sort cap (with
+    ///   the top-k bound and the hidden-column tail projection); needs
+    ///   at least one `Project` stage (so the output column set is an
+    ///   explicit projection, not the full input) and at least one
+    ///   shipping stage.
+    /// - `Project` → capless chain; needs ≥ 2 shipping ops to beat the
+    ///   per-operator dispatch on wire bytes.
+    ///
+    /// Any vectorized-UDF call in a stage or cap expression declines the
+    /// whole fragment (the legacy dispatch preserves whole-input
+    /// evaluation for those).
+    pub(crate) fn extract(plan: &'p Plan, udfs: &UdfRegistry) -> Option<Fragment<'p>> {
+        let (stages, cap, source) = match plan {
+            Plan::Aggregate { input, group, aggs } => {
+                let (stages, source) = collect_chain(input);
+                let cap_vectorized = group
+                    .iter()
+                    .any(|(e, _)| super::exec::has_vectorized_udf(e, udfs))
+                    || aggs.iter().any(|a| {
+                        a.args
+                            .iter()
+                            .any(|e| super::exec::has_vectorized_udf(e, udfs))
+                    });
+                if cap_vectorized {
+                    return None;
+                }
+                (stages, FragCap::Aggregate { group, aggs }, source)
+            }
+            Plan::Sort { input, keys } => {
+                Self::extract_sort(input, keys, None, None, udfs)?
+            }
+            Plan::Limit { input, n } => match input.as_ref() {
+                Plan::Sort { input: sort_input, keys } => {
+                    Self::extract_sort(sort_input, keys, Some(*n), None, udfs)?
+                }
+                Plan::Project { input: proj_input, exprs }
+                    if matches!(proj_input.as_ref(), Plan::Sort { .. }) =>
+                {
+                    let Plan::Sort { input: sort_input, keys } = proj_input.as_ref()
+                    else {
+                        unreachable!("guarded by matches! above");
+                    };
+                    Self::extract_sort(sort_input, keys, Some(*n), Some(exprs), udfs)?
+                }
+                _ => return None,
+            },
+            Plan::Project { input, exprs } => {
+                let (mut stages, source) = collect_chain(input);
+                stages.push(FragStage::Project(exprs));
+                let ships =
+                    stages.iter().filter(|s| stage_ships(s, udfs)).count();
+                if ships < 2 {
+                    return None;
+                }
+                (stages, FragCap::Chain, source)
+            }
+            _ => return None,
+        };
+        if stages.iter().any(|s| stage_has_vectorized(s, udfs)) {
+            return None;
+        }
+        Some(Fragment { stages, cap, source })
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn extract_sort(
+        input: &'p Plan,
+        keys: &'p [OrderKey],
+        limit: Option<usize>,
+        tail: Option<&'p [(Expr, String)]>,
+        udfs: &UdfRegistry,
+    ) -> Option<(Vec<FragStage<'p>>, FragCap<'p>, &'p Plan)> {
+        if limit == Some(0) {
+            // LIMIT 0 short-circuits on the legacy path without sorting.
+            return None;
+        }
+        if keys
+            .iter()
+            .any(|k| super::exec::has_vectorized_udf(&k.expr, udfs))
+        {
+            return None;
+        }
+        let (stages, source) = collect_chain(input);
+        let has_project = stages
+            .iter()
+            .any(|s| matches!(s, FragStage::Project(_)));
+        let ships = stages.iter().filter(|s| stage_ships(s, udfs)).count();
+        if !has_project || ships < 1 {
+            // Without an explicit projection the fragment would have to
+            // ship every input column to reproduce the output; the
+            // legacy sort ships only its key columns — cheaper.
+            return None;
+        }
+        Some((stages, FragCap::Sort { keys, limit, tail }, source))
+    }
+
+    /// Operator names fused into this fragment, in execution order
+    /// (for `QueryStats` fragment reporting).
+    pub(crate) fn op_names(&self) -> Vec<&'static str> {
+        let mut ops: Vec<&'static str> = self
+            .stages
+            .iter()
+            .map(|s| match s {
+                FragStage::Filter(_) => "filter",
+                FragStage::Project(_) => "project",
+            })
+            .collect();
+        match self.cap {
+            FragCap::Chain => {}
+            FragCap::Aggregate { .. } => ops.push("aggregate"),
+            FragCap::Sort { .. } => ops.push("sort"),
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sql::parse_query;
+    use crate::types::DataType;
+
+    fn plan(sql: &str) -> Plan {
+        super::super::plan::plan_query(&parse_query(sql).unwrap(), &UdfRegistry::new())
+            .unwrap()
+    }
+
+    fn extract_in(plan: &Plan, udfs: &UdfRegistry) -> Option<Fragment<'_>> {
+        Fragment::extract(plan, udfs)
+    }
+
+    /// Walk to the first node a fragment forms at (mirrors the
+    /// executor, which tries every operator it recurses through).
+    fn first_fragment_ops(plan: &Plan, udfs: &UdfRegistry) -> Option<Vec<&'static str>> {
+        if let Some(f) = extract_in(plan, udfs) {
+            return Some(f.op_names());
+        }
+        match plan {
+            Plan::Filter { input, .. }
+            | Plan::Project { input, .. }
+            | Plan::Aggregate { input, .. }
+            | Plan::Sort { input, .. }
+            | Plan::Limit { input, .. } => first_fragment_ops(input, udfs),
+            Plan::Join { left, right, .. } => first_fragment_ops(left, udfs)
+                .or_else(|| first_fragment_ops(right, udfs)),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn scan_filter_project_aggregate_forms_one_fragment() {
+        let p = plan(
+            "SELECT k2, COUNT(*) AS n, SUM(vv) AS s FROM \
+             (SELECT k + 1 AS k2, v * 2.0 AS vv FROM t WHERE v > 10.0) s \
+             GROUP BY k2",
+        );
+        let udfs = UdfRegistry::new();
+        let ops = first_fragment_ops(&p, &udfs).expect("fragment");
+        assert_eq!(ops, vec!["filter", "project", "aggregate"]);
+    }
+
+    #[test]
+    fn bare_aggregate_is_a_fragment() {
+        let p = plan("SELECT k, COUNT(*) AS n FROM t GROUP BY k");
+        let udfs = UdfRegistry::new();
+        let ops = first_fragment_ops(&p, &udfs).expect("fragment");
+        assert_eq!(ops, vec!["aggregate"]);
+    }
+
+    #[test]
+    fn chain_needs_two_shipping_stages() {
+        let udfs = UdfRegistry::new();
+        // Filter ships, projection of bare columns does not: no fragment
+        // at the Project root (the legacy dispatch ships less).
+        let p = plan("SELECT k, v FROM t WHERE v > 1.0");
+        assert!(extract_in(&p, &udfs).is_none());
+        // Both ship: fragment.
+        let p = plan("SELECT k + 1 AS k1 FROM t WHERE v > 1.0");
+        let f = extract_in(&p, &udfs).expect("fragment");
+        assert_eq!(f.op_names(), vec!["filter", "project"]);
+        assert!(matches!(f.cap, FragCap::Chain));
+    }
+
+    #[test]
+    fn sort_needs_projection_and_shipping_stage() {
+        let udfs = UdfRegistry::new();
+        // Star-only sort: no projection stage below the sort.
+        let p = plan("SELECT * FROM t ORDER BY v");
+        assert!(first_fragment_ops(&p, &udfs).is_none());
+        // Computed projection under ORDER BY ... LIMIT: sort fragment
+        // with a top-k cap.
+        let p = plan("SELECT k + 1 AS k1, v * 2.0 AS vv FROM t ORDER BY vv DESC LIMIT 5");
+        let ops = first_fragment_ops(&p, &udfs).expect("fragment");
+        assert_eq!(ops, vec!["project", "sort"]);
+    }
+
+    #[test]
+    fn limit_zero_declines() {
+        let udfs = UdfRegistry::new();
+        // The executor meets LIMIT 0 at the Limit root (its legacy arm
+        // short-circuits without touching the Sort below), so the
+        // planner must decline there.
+        let p = plan("SELECT k + 1 AS k1, v * 2.0 AS vv FROM t ORDER BY vv LIMIT 0");
+        assert!(matches!(p, Plan::Limit { .. }));
+        assert!(extract_in(&p, &udfs).is_none());
+    }
+
+    #[test]
+    fn vectorized_udf_declines_fragment() {
+        let mut udfs = UdfRegistry::new();
+        udfs.register_vectorized(
+            "vscale",
+            DataType::Float64,
+            std::sync::Arc::new(|rows| {
+                Ok(rows.column(0).f64_data().unwrap().to_vec())
+            }),
+        );
+        let p = plan(
+            "SELECT k2, COUNT(*) AS n FROM \
+             (SELECT vscale(v) AS k2 FROM t WHERE v > 1.0) s GROUP BY k2",
+        );
+        // The aggregate root's chain contains a vectorized UDF: no
+        // fragment anywhere in this plan.
+        assert!(first_fragment_ops(&p, &udfs).is_none());
+        // The same shape without the vectorized call fragments fine.
+        let p = plan(
+            "SELECT k2, COUNT(*) AS n FROM \
+             (SELECT v + 1.0 AS k2 FROM t WHERE v > 1.0) s GROUP BY k2",
+        );
+        assert!(first_fragment_ops(&p, &udfs).is_some());
+    }
+
+    #[test]
+    fn hidden_sort_projection_stays_on_the_leader() {
+        let udfs = UdfRegistry::new();
+        // ORDER BY a column outside the select list: the planner inserts
+        // a hidden sort column + a dropping projection above the sort.
+        // The fragment caps at the sort; the drop runs leader-side.
+        let p = plan("SELECT k + 1 AS k1 FROM t WHERE v > 1.0 ORDER BY tag LIMIT 3");
+        let ops = first_fragment_ops(&p, &udfs).expect("fragment");
+        assert_eq!(ops, vec!["filter", "project", "sort"]);
+    }
+}

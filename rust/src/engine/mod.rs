@@ -10,12 +10,18 @@
 //! ([`ExecContext::nodes`], spans shipped through the columnar exchange)
 //! and, within a node, run on the work-stealing scheduler in
 //! [`morsel`], capped by [`ExecContext::parallelism`] (see `exec`
-//! module docs).
+//! module docs). Morsel-splittable operator chains fuse into per-node
+//! **pipeline fragments** ([`ExecContext::fragments`], planner in
+//! `fragment`): each remote node receives its span of a fragment's
+//! input columns once and returns only the fragment outputs (column
+//! segments, aggregate partials, sorted runs) for the leader's
+//! pipeline-breaker step.
 
 mod catalog;
 mod exec;
 pub mod exchange;
 mod expr;
+mod fragment;
 pub mod hash;
 mod key;
 pub mod morsel;
@@ -23,8 +29,9 @@ mod plan;
 
 pub use catalog::{parse_csv, Catalog};
 pub use exec::{
-    default_nodes, default_parallelism, execute_plan, execute_plan_with_stats, run_sql,
-    run_sql_with_stats, ExecContext, OpStats, QueryStats, MORSEL_MIN_ROWS,
+    default_fragments, default_nodes, default_parallelism, execute_plan,
+    execute_plan_with_stats, run_sql, run_sql_with_stats, ExecContext, FragmentStats, OpStats,
+    QueryStats, MORSEL_MIN_ROWS,
 };
 pub use morsel::{run_stealing, ExecTally, NodeCounters, StealConfig, StealTally};
 pub use expr::{

@@ -11,8 +11,10 @@
 
 mod admission;
 mod estimator;
+mod shape;
 mod stats;
 
 pub use admission::{AdmissionOutcome, NodeState, QueryRequest, WarehouseScheduler};
 pub use estimator::{DynamicEstimator, MemoryEstimator, StaticEstimator};
+pub use shape::ShapePolicy;
 pub use stats::{NodeBalance, QueryKey, StatsFramework};

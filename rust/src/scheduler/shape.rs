@@ -1,0 +1,161 @@
+//! Adaptive query-shape selection (§IV.C applied to operator dispatch).
+//!
+//! The paper's redistribution policy consults historical per-row cost
+//! against a threshold T to decide whether shipping rows across nodes
+//! is worth it. This module applies the same idea to the engine's
+//! distributed morsel dispatch: the per-query [`NodeBalance`] history
+//! the stats framework records (§IV.B machinery, §IV.C signal) drives
+//! the `(nodes, parallelism)` shape the next execution of the same
+//! query runs with. Every *morsel-parallel* shape is bit-identical, so
+//! shape changes trade only wire bytes and balance; the one caveat is
+//! the engine's documented sequential-vs-parallel float-association
+//! difference — it applies only when a pick crosses the
+//! `nodes × parallelism = 1` boundary (a pool with a single
+//! interpreter process per node), and is exact whenever the sums
+//! themselves are.
+
+use super::stats::{NodeBalance, StatsFramework};
+
+/// Picks the `(nodes, parallelism)` shape a query should run with,
+/// from its recorded node-balance history.
+///
+/// The threshold rule, per §IV.C:
+/// - **no history** → the warehouse/pool default shape (cold start);
+/// - **total busy below [`ShapePolicy::min_total_load_ns`]** → one
+///   node: the query is too small for cross-node shipping to pay for
+///   itself (total load is shape-independent, so this comparison
+///   cannot oscillate as the picked shape changes);
+/// - **mean skew above [`ShapePolicy::skew_threshold`]** → halve the
+///   node fan-out: a persistently skewed span means shipping cost is
+///   not buying balanced work;
+/// - **balanced, heavy history** → scale out to the full pool shape.
+#[derive(Debug, Clone, Copy)]
+pub struct ShapePolicy {
+    /// Balance observations consulted (the paper's lookback K).
+    pub lookback: usize,
+    /// Busiest-node/mean-node load ratio above which the policy shrinks
+    /// the node fan-out.
+    pub skew_threshold: f64,
+    /// Total-busy floor (nanoseconds, summed over nodes) below which
+    /// the query runs on the leader only.
+    pub min_total_load_ns: u64,
+}
+
+impl Default for ShapePolicy {
+    fn default() -> Self {
+        Self { lookback: 5, skew_threshold: 1.5, min_total_load_ns: 2_000_000 }
+    }
+}
+
+impl ShapePolicy {
+    /// Pick a shape for `key` from its history in `stats`, defaulting
+    /// to `pool_shape` (`(nodes, workers_per_node)`) when no history
+    /// exists. Per-node parallelism always stays at the pool's
+    /// interpreter-process budget — nodes are the adaptive dimension.
+    pub fn pick(
+        &self,
+        key: &str,
+        stats: &StatsFramework,
+        pool_shape: (usize, usize),
+    ) -> (usize, usize) {
+        let (pool_nodes, parallelism) = (pool_shape.0.max(1), pool_shape.1.max(1));
+        let hist = stats.balance_lookback(key, self.lookback);
+        if hist.is_empty() {
+            return (pool_nodes, parallelism);
+        }
+        let n = hist.len() as f64;
+        let mean_skew: f64 = hist.iter().map(|b: &NodeBalance| b.skew).sum::<f64>() / n;
+        let mean_total = (hist.iter().map(|b| b.total_load).sum::<u64>() as f64 / n) as u64;
+        let nodes = if mean_total < self.min_total_load_ns {
+            1
+        } else if mean_skew > self.skew_threshold {
+            (pool_nodes / 2).max(1)
+        } else {
+            pool_nodes
+        };
+        (nodes, parallelism)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1_000_000; // 1 ms of busy time, in ns
+
+    #[test]
+    fn empty_history_defaults_to_pool_shape() {
+        let stats = StatsFramework::new(8);
+        let p = ShapePolicy::default();
+        assert_eq!(p.pick("q", &stats, (4, 2)), (4, 2));
+        assert_eq!(p.pick("q", &stats, (1, 8)), (1, 8));
+        // Degenerate pool shapes clamp.
+        assert_eq!(p.pick("q", &stats, (0, 0)), (1, 1));
+    }
+
+    #[test]
+    fn skewed_history_shrinks_node_fanout() {
+        let stats = StatsFramework::new(8);
+        let p = ShapePolicy::default();
+        for _ in 0..3 {
+            // One node's span drew most of the busy time: skew ≈ 3.5.
+            stats.record_node_balance("q", &[80 * MB, 5 * MB, 4 * MB, 3 * MB], 9);
+        }
+        let (nodes, par) = p.pick("q", &stats, (4, 2));
+        assert!(nodes < 4, "skewed history should scale in, got {nodes}");
+        assert_eq!(nodes, 2);
+        assert_eq!(par, 2);
+        // Never below one node.
+        assert_eq!(p.pick("q", &stats, (1, 2)).0, 1);
+    }
+
+    #[test]
+    fn balanced_history_scales_out() {
+        let stats = StatsFramework::new(8);
+        let p = ShapePolicy::default();
+        for _ in 0..3 {
+            stats.record_node_balance("q", &[50 * MB, 48 * MB, 52 * MB, 49 * MB], 2);
+        }
+        assert_eq!(p.pick("q", &stats, (4, 2)), (4, 2));
+    }
+
+    #[test]
+    fn tiny_queries_stay_on_the_leader() {
+        let stats = StatsFramework::new(8);
+        let p = ShapePolicy::default();
+        for _ in 0..3 {
+            // ~0.8 ms of total busy: the transport charge would
+            // dominate — keep it leader-local.
+            stats.record_node_balance("q", &[200_000, 180_000, 190_000, 210_000], 0);
+        }
+        assert_eq!(p.pick("q", &stats, (4, 2)), (1, 2));
+    }
+
+    #[test]
+    fn threshold_is_shape_independent() {
+        // The same query observed under different shapes must not flip
+        // the decision: total load (not a per-node mean) crosses the
+        // floor identically whether one node or four carried the work.
+        let stats = StatsFramework::new(8);
+        let p = ShapePolicy::default();
+        stats.record_node_balance("q", &[4 * MB], 0); // leader-only run
+        assert_eq!(p.pick("q", &stats, (4, 2)), (4, 2));
+        stats.record_node_balance("q", &[MB, MB, MB, MB], 0); // 4-node run
+        assert_eq!(p.pick("q", &stats, (4, 2)), (4, 2));
+    }
+
+    #[test]
+    fn lookback_window_forgets_old_behavior() {
+        let stats = StatsFramework::new(32);
+        let p = ShapePolicy { lookback: 3, ..Default::default() };
+        // Old skewed epoch...
+        for _ in 0..5 {
+            stats.record_node_balance("q", &[90 * MB, 2 * MB, 2 * MB, 2 * MB], 4);
+        }
+        // ...followed by a balanced one that fills the lookback.
+        for _ in 0..3 {
+            stats.record_node_balance("q", &[30 * MB, 29 * MB, 31 * MB, 30 * MB], 0);
+        }
+        assert_eq!(p.pick("q", &stats, (4, 2)), (4, 2));
+    }
+}

@@ -15,6 +15,12 @@ pub type QueryKey = String;
 pub struct StatsFramework {
     /// Max executions remembered per query (the paper's lookback K bound).
     pub max_history: usize,
+    /// Max *distinct* queries the balance history tracks. Once full,
+    /// never-seen keys are not admitted (known keys keep updating), so
+    /// a long-lived session issuing unbounded distinct statement texts
+    /// — e.g. inlined literal parameters — cannot grow memory without
+    /// limit through the adaptive-shape loop.
+    pub max_balance_keys: usize,
     inner: Mutex<HashMap<QueryKey, Vec<u64>>>,
     balance: Mutex<HashMap<QueryKey, Vec<NodeBalance>>>,
 }
@@ -32,6 +38,13 @@ pub struct NodeBalance {
     pub skew: f64,
     /// Steal events the work-stealing morsel scheduler performed.
     pub steals: u64,
+    /// Total load summed over nodes (same unit the caller recorded —
+    /// busy nanoseconds for the engine). Carries the query's absolute
+    /// size *independently of the shape that ran it* (a per-node mean
+    /// would shrink as nodes grow and make any threshold comparison
+    /// oscillate), so `ShapePolicy` can tell "too small to ship" apart
+    /// from "skewed".
+    pub total_load: u64,
 }
 
 /// In-flight tracker for one execution: folds periodic memory reports
@@ -57,6 +70,7 @@ impl StatsFramework {
         assert!(max_history > 0);
         Self {
             max_history,
+            max_balance_keys: 1024,
             inner: Mutex::new(HashMap::new()),
             balance: Mutex::new(HashMap::new()),
         }
@@ -73,8 +87,13 @@ impl StatsFramework {
         let mean = total as f64 / per_node_load.len() as f64;
         let max = *per_node_load.iter().max().expect("non-empty") as f64;
         let mut balance = self.balance.lock().unwrap();
+        if !balance.contains_key(key) && balance.len() >= self.max_balance_keys {
+            // At key capacity: never-seen statements are not admitted
+            // (they would also never get a lookback hit).
+            return;
+        }
         let h = balance.entry(key.to_string()).or_default();
-        h.push(NodeBalance { skew: max / mean, steals });
+        h.push(NodeBalance { skew: max / mean, steals, total_load: total });
         let len = h.len();
         if len > self.max_history {
             h.drain(0..len - self.max_history);
@@ -183,8 +202,10 @@ mod tests {
         let h = f.balance_lookback("q", 10);
         assert_eq!(h.len(), 2);
         assert!((h[0].skew - 1.0).abs() < 1e-12, "{h:?}");
+        assert_eq!(h[0].total_load, 40);
         assert!(h[1].skew > 2.9, "{h:?}");
         assert_eq!(h[1].steals, 7);
+        assert_eq!(h[1].total_load, 40);
         // Sequential executions (no morsels) are not observations.
         f.record_node_balance("q", &[], 0);
         f.record_node_balance("q", &[0, 0], 0);
@@ -195,6 +216,20 @@ mod tests {
         }
         assert_eq!(f.balance_lookback("q", 10).len(), 3);
         assert!(f.balance_lookback("other", 3).is_empty());
+    }
+
+    #[test]
+    fn balance_key_count_is_bounded() {
+        let mut f = StatsFramework::new(4);
+        f.max_balance_keys = 2;
+        f.record_node_balance("a", &[5, 5], 0);
+        f.record_node_balance("b", &[5, 5], 0);
+        // At capacity: a third distinct statement is not admitted...
+        f.record_node_balance("c", &[5, 5], 0);
+        assert!(f.balance_lookback("c", 4).is_empty());
+        // ...but known keys keep accumulating.
+        f.record_node_balance("a", &[9, 1], 3);
+        assert_eq!(f.balance_lookback("a", 4).len(), 2);
     }
 
     #[test]

@@ -12,9 +12,24 @@ use crate::dataframe::DataFrame;
 use crate::engine::exchange::{run_udf_exchange, ExchangeConfig, ExchangeMode, ExchangeReport};
 use crate::engine::{Catalog, ExecContext};
 use crate::runtime::XlaService;
+use crate::scheduler::{ShapePolicy, StatsFramework};
 use crate::types::{Column, DataType, Field, RowSet, Schema};
 use crate::udf::{ScalarFn, UdfRegistry, UdfStatsStore, VectorizedFn};
 use crate::warehouse::{InterpreterPool, PoolConfig};
+
+/// The `SNOWPARK_ADAPTIVE_SHAPE` environment override: `Some(true)` /
+/// `Some(false)` when set, `None` to use the session default (adaptive
+/// on for sessions with a pool, off otherwise).
+fn env_adaptive_shape() -> Option<bool> {
+    match std::env::var("SNOWPARK_ADAPTIVE_SHAPE") {
+        Ok(v) => match v.trim() {
+            "1" | "true" | "on" => Some(true),
+            "0" | "false" | "off" => Some(false),
+            _ => None,
+        },
+        Err(_) => None,
+    }
+}
 
 /// Builder for [`Session`].
 pub struct SessionBuilder {
@@ -23,6 +38,7 @@ pub struct SessionBuilder {
     artifacts_dir: Option<std::path::PathBuf>,
     parallelism: Option<usize>,
     nodes: Option<usize>,
+    adaptive_shape: Option<bool>,
 }
 
 impl SessionBuilder {
@@ -55,6 +71,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable or disable the §IV.C adaptive query-shape policy
+    /// (`snowparkd run-sql --adaptive-shape`). When on, each query's
+    /// shape comes from [`ShapePolicy`] consulting the session's
+    /// recorded per-query node-balance history (the node fan-out is
+    /// the adaptive dimension); explicit
+    /// [`SessionBuilder::nodes`] / [`SessionBuilder::parallelism`]
+    /// overrides pin their dimension. Default: on for sessions with a
+    /// pool (a real warehouse to adapt), off otherwise; the
+    /// `SNOWPARK_ADAPTIVE_SHAPE` env var (`1`/`0`) overrides the
+    /// default.
+    pub fn adaptive_shape(mut self, on: bool) -> Self {
+        self.adaptive_shape = Some(on);
+        self
+    }
+
     /// Attach AOT artifacts (enables the XLA-backed vectorized UDFs).
     pub fn artifacts(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
         self.artifacts_dir = Some(dir.into());
@@ -77,6 +108,10 @@ impl SessionBuilder {
             }
             None => None,
         };
+        let adaptive = self
+            .adaptive_shape
+            .or_else(env_adaptive_shape)
+            .unwrap_or(self.pool.is_some());
         let session = Arc::new(Session {
             catalog,
             registry,
@@ -87,6 +122,9 @@ impl SessionBuilder {
             runtime,
             parallelism: self.parallelism,
             nodes: self.nodes,
+            adaptive,
+            shape_policy: ShapePolicy::default(),
+            balance_stats: StatsFramework::new(32),
             partitioned: RwLock::new(HashMap::new()),
         });
         if let Some(rt) = &session.runtime {
@@ -113,6 +151,14 @@ pub struct Session {
     /// Explicit node-count override for query morsel dispatch (None =
     /// derive from the pool shape, else the engine default).
     nodes: Option<usize>,
+    /// Adapt each query's `(nodes, parallelism)` from its recorded
+    /// node-balance history (§IV.C threshold rule).
+    adaptive: bool,
+    /// The adaptive policy (lookback / skew threshold / busy floor).
+    shape_policy: ShapePolicy,
+    /// Per-query node-balance history (keyed by SQL text), fed from
+    /// `QueryStats::per_node_busy_ns` after every execution.
+    balance_stats: StatsFramework,
     /// Partitioned tables: name → per-node rowsets (the source rowset
     /// operator's placement for §IV.C).
     partitioned: RwLock<HashMap<String, Vec<RowSet>>>,
@@ -126,6 +172,7 @@ impl Session {
             artifacts_dir: None,
             parallelism: None,
             nodes: None,
+            adaptive_shape: None,
         }
     }
 
@@ -227,15 +274,48 @@ impl Session {
             .max(1)
     }
 
-    fn exec_context(&self) -> ExecContext {
+    /// Is the §IV.C adaptive query-shape policy active on this session?
+    pub fn adaptive_shape_enabled(&self) -> bool {
+        self.adaptive
+    }
+
+    /// The per-query node-balance history the adaptive shape policy
+    /// consults (fed automatically after every [`Session::sql`] /
+    /// [`Session::sql_with_stats`] execution, keyed by SQL text).
+    pub fn query_balance_stats(&self) -> &StatsFramework {
+        &self.balance_stats
+    }
+
+    /// The `(nodes, parallelism)` shape this session would run `text`
+    /// with right now: the static shape ([`Session::query_nodes`] ×
+    /// [`Session::query_parallelism`]), adapted per the recorded
+    /// balance history when [`Session::adaptive_shape_enabled`].
+    /// Explicit builder overrides pin their dimension.
+    pub fn planned_shape(&self, text: &str) -> (usize, usize) {
+        let mut shape = (self.query_nodes(), self.query_parallelism());
+        if self.adaptive {
+            let picked = self.shape_policy.pick(text, &self.balance_stats, shape);
+            if self.nodes.is_none() {
+                shape.0 = picked.0;
+            }
+            if self.parallelism.is_none() {
+                shape.1 = picked.1;
+            }
+        }
+        shape
+    }
+
+    fn exec_context_for(&self, text: &str) -> ExecContext {
+        let (nodes, parallelism) = self.planned_shape(text);
         ExecContext {
             catalog: self.catalog.clone(),
             udfs: Arc::new(self.udfs()),
             udf_stats: self.stats.clone(),
             vectorized: true,
-            parallelism: self.query_parallelism(),
-            nodes: self.query_nodes(),
+            parallelism,
+            nodes,
             steal: true,
+            fragments: crate::engine::default_fragments(),
             transport: self.pool_config.map(|c| c.transport).unwrap_or_default(),
             tally: Arc::new(crate::engine::ExecTally::default()),
         }
@@ -243,14 +323,26 @@ impl Session {
 
     /// Run a SQL statement on the leader.
     pub fn sql(&self, text: &str) -> Result<RowSet> {
-        let ctx = self.exec_context();
-        crate::engine::run_sql(text, &ctx)
+        Ok(self.sql_with_stats(text)?.0)
     }
 
-    /// Run a SQL statement, also returning per-operator rows and timings.
+    /// Run a SQL statement, also returning per-operator rows and
+    /// timings. On adaptive sessions, every execution's per-node busy
+    /// times feed the session's balance history, closing the §IV.C
+    /// adaptive-shape loop for the next run of the same statement.
+    /// (Non-adaptive sessions skip the recording — text-keyed history
+    /// nobody consults would only accumulate.)
     pub fn sql_with_stats(&self, text: &str) -> Result<(RowSet, crate::engine::QueryStats)> {
-        let ctx = self.exec_context();
-        crate::engine::run_sql_with_stats(text, &ctx)
+        let ctx = self.exec_context_for(text);
+        let (out, stats) = crate::engine::run_sql_with_stats(text, &ctx)?;
+        if self.adaptive {
+            self.balance_stats.record_node_balance(
+                text,
+                &stats.per_node_busy_ns(),
+                stats.total_steals(),
+            );
+        }
+        Ok((out, stats))
     }
 
     /// Open a DataFrame on a table.
@@ -410,6 +502,92 @@ mod tests {
         let s = Session::builder().build().unwrap();
         assert!(s.query_parallelism() >= 1);
         assert!(s.query_nodes() >= 1);
+    }
+
+    #[test]
+    fn adaptive_shape_consults_balance_history() {
+        const MS: u64 = 1_000_000;
+        let s = Session::builder()
+            .pool(PoolConfig { nodes: 4, procs_per_node: 2, ..Default::default() })
+            .adaptive_shape(true)
+            .build()
+            .unwrap();
+        assert!(s.adaptive_shape_enabled());
+        // Cold start: the pool shape.
+        assert_eq!(s.planned_shape("SELECT 1"), (4, 2));
+        // Skewed, heavy history → fewer nodes.
+        let q = "SELECT skewed";
+        for _ in 0..3 {
+            s.query_balance_stats().record_node_balance(q, &[80 * MS, 5 * MS, 4 * MS], 9);
+        }
+        assert_eq!(s.planned_shape(q), (2, 2));
+        // Tiny queries stay on the leader.
+        let q2 = "SELECT tiny";
+        for _ in 0..3 {
+            s.query_balance_stats().record_node_balance(q2, &[200_000, 190_000], 0);
+        }
+        assert_eq!(s.planned_shape(q2), (1, 2));
+        // Balanced heavy history → full scale-out.
+        let q3 = "SELECT balanced";
+        for _ in 0..3 {
+            s.query_balance_stats()
+                .record_node_balance(q3, &[50 * MS, 48 * MS, 52 * MS, 49 * MS], 2);
+        }
+        assert_eq!(s.planned_shape(q3), (4, 2));
+        // Explicit builder overrides pin their dimension.
+        let s = Session::builder()
+            .pool(PoolConfig { nodes: 4, procs_per_node: 2, ..Default::default() })
+            .nodes(3)
+            .adaptive_shape(true)
+            .build()
+            .unwrap();
+        for _ in 0..3 {
+            s.query_balance_stats().record_node_balance(q, &[80 * MS, 5 * MS, 4 * MS], 9);
+        }
+        assert_eq!(s.planned_shape(q).0, 3);
+        // adaptive_shape(false) freezes the static shape.
+        let s = Session::builder()
+            .pool(PoolConfig { nodes: 4, procs_per_node: 2, ..Default::default() })
+            .adaptive_shape(false)
+            .build()
+            .unwrap();
+        assert!(!s.adaptive_shape_enabled());
+        assert_eq!(s.planned_shape(q), (4, 2));
+        // Pool-less sessions default off (unless the env var forces it).
+        if std::env::var("SNOWPARK_ADAPTIVE_SHAPE").is_err() {
+            let s = Session::builder().build().unwrap();
+            assert!(!s.adaptive_shape_enabled());
+        }
+    }
+
+    #[test]
+    fn sql_feeds_balance_history() {
+        // A multi-node session's SQL executions record node-balance
+        // observations keyed by statement text, so the adaptive loop
+        // closes without any caller involvement.
+        let rows = 20_000usize;
+        let s = Session::builder()
+            .pool(PoolConfig { nodes: 2, procs_per_node: 2, ..Default::default() })
+            .adaptive_shape(true)
+            .build()
+            .unwrap();
+        s.catalog().register(
+            "t",
+            RowSet::new(
+                Schema::new(vec![Field::new("x", DataType::Float64)]),
+                vec![Column::from_f64((0..rows).map(|i| (i % 997) as f64).collect())],
+            )
+            .unwrap(),
+        );
+        let q = "SELECT x, COUNT(*) AS n FROM t GROUP BY x";
+        let first = s.sql(q).unwrap();
+        let h = s.query_balance_stats().balance_lookback(q, 8);
+        assert_eq!(h.len(), 1, "execution should record one observation");
+        assert!(h[0].skew >= 1.0);
+        // Re-running is shape-stable in output regardless of what the
+        // policy picks next (byte-identity at every shape).
+        let second = s.sql(q).unwrap();
+        assert_eq!(first, second);
     }
 
     #[test]

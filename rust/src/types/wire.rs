@@ -248,6 +248,30 @@ impl WireBatch {
         RowSet::new(Schema::new(fields), columns)
     }
 
+    /// The exact byte size [`WireBatch::encode_columns`] would produce
+    /// for this row range, computed without building the buffer — pure
+    /// arithmetic over the byte layout above. The engine's fragment
+    /// statistics use it to price what per-operator dispatch *would*
+    /// have shipped.
+    pub fn encoded_size(fields: &[Field], cols: &[&Column], offset: usize, len: usize) -> usize {
+        assert_eq!(fields.len(), cols.len(), "encoded_size arity");
+        let mut size = 8; // u32 n_cols + u32 n_rows
+        for (field, &col) in fields.iter().zip(cols) {
+            size += 2 + field.name.len() + 1 + 1; // name_len, name, tag, has_validity
+            if col.validity().is_some() {
+                size += len.div_ceil(8);
+            }
+            size += match col {
+                Column::Int64 { .. } | Column::Float64 { .. } => len * 8,
+                Column::Bool { .. } => len.div_ceil(8),
+                Column::Utf8 { data, .. } => {
+                    len * 4 + data[offset..offset + len].iter().map(String::len).sum::<usize>()
+                }
+            };
+        }
+        size
+    }
+
     /// Encoded size in bytes — what the transport-cost model charges.
     pub fn wire_len(&self) -> usize {
         self.bytes.len()
@@ -337,6 +361,17 @@ mod tests {
         for cut in [0, 4, 9, w.wire_len() / 2, w.wire_len() - 1] {
             let t = WireBatch { bytes: w.bytes[..cut].to_vec(), rows: w.rows };
             assert!(t.decode().is_err(), "cut at {cut} should fail");
+        }
+    }
+
+    #[test]
+    fn encoded_size_matches_encoder() {
+        let rs = sample();
+        let cols: Vec<&Column> = rs.columns.iter().collect();
+        for (off, len) in [(0, 9), (0, 8), (1, 8), (3, 3), (8, 1), (4, 0)] {
+            let predicted = WireBatch::encoded_size(&rs.schema.fields, &cols, off, len);
+            let actual = WireBatch::encode_columns(&rs.schema.fields, &cols, off, len);
+            assert_eq!(predicted, actual.wire_len(), "range ({off}, {len})");
         }
     }
 

@@ -158,8 +158,6 @@ fn thread_cpu_ns() -> u64 {
 }
 
 struct Proc {
-    #[allow(dead_code)]
-    id: ProcId,
     node: usize,
     tx: mpsc::SyncSender<Msg>,
     handle: Option<JoinHandle<()>>,
@@ -233,7 +231,10 @@ impl InterpreterPool {
                         }
                     })
                     .expect("spawn interpreter thread");
-                procs.push(Proc { id, node, tx, handle: Some(handle) });
+                // `id` moves into the worker closure above (it tags
+                // every BatchResult); the pool indexes procs by
+                // position, so the struct itself does not keep it.
+                procs.push(Proc { node, tx, handle: Some(handle) });
             }
         }
         Self { procs, config, busy_ns, busy_by_proc, stats }

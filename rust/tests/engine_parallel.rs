@@ -150,6 +150,35 @@ const QUERIES: &[&str] = &[
      WHERE n > 100",
 ];
 
+/// Multi-operator shapes that the ISSUE 5 fragment planner fuses into
+/// per-node pipeline fragments: scan→filter→project→aggregate,
+/// join+residual feeding a computed-projection top-k sort, fused
+/// filter+project chains, and empty-survivor edges.
+const FRAGMENT_QUERIES: &[&str] = &[
+    // The flagship: filter + projection + aggregate partials in ONE
+    // shipment per node (every aggregate kind incl. a UDAF).
+    "SELECT k2, COUNT(*) AS n, COUNT(vv) AS nv, SUM(vv) AS s, AVG(vv) AS a, \
+     MIN(vv) AS lo, MAX(vv) AS hi, sumsq(k2) AS q FROM \
+     (SELECT k + 1 AS k2, v * 2.0 AS vv FROM facts WHERE v < 800.0) t GROUP BY k2",
+    // Filter directly under the aggregate (no projection stage).
+    "SELECT tag, COUNT(*) AS n, MAX(k) AS hi FROM facts WHERE v > 100.0 GROUP BY tag",
+    // Global aggregation over a fused chain, including the all-filtered
+    // edge (one row out, NULL sums).
+    "SELECT COUNT(*) AS n, SUM(vv) AS s FROM \
+     (SELECT v * 2.0 AS vv FROM facts WHERE v > 250.0) t",
+    "SELECT COUNT(*) AS n, SUM(v) AS s, MIN(v) AS lo FROM facts WHERE v > 99999.0",
+    "SELECT tag, COUNT(*) AS n FROM facts WHERE v > 99999.0 GROUP BY tag",
+    // join + residual + sort + limit: the probe is its own fragment
+    // (breaker: the leader-built build table), the computed projection
+    // above it fuses with top-k run generation.
+    "SELECT facts.k + 0 AS k2, v * 2.0 AS vv, label FROM facts \
+     JOIN dim ON facts.k = dim.k AND v > w * 40.0 ORDER BY vv DESC, k2 LIMIT 60",
+    // Capless chain (filter+project, scalar UDF included).
+    "SELECT k + 1 AS k1, halve(v) AS h FROM facts WHERE v > 500.0 AND k < 200",
+    // Hidden sort column: drop projection runs on the leader.
+    "SELECT k + 1 AS k1 FROM facts WHERE v < 700.0 ORDER BY tag, v LIMIT 23",
+];
+
 #[test]
 fn parallel_matches_sequential_randomized() {
     for (seed, zipf) in [(1u64, None), (2, Some(1.2)), (3, Some(0.8))] {
@@ -187,6 +216,89 @@ fn node_shapes_match_sequential_randomized() {
                 assert_eq!(out, base, "seed {seed} ({nodes},{threads}): {q}");
             }
         }
+    }
+}
+
+/// The ISSUE 5 acceptance matrix: fragment dispatch must be
+/// byte-identical to the legacy operator-at-a-time dispatch AND to the
+/// sequential path on multi-operator queries, at every tested
+/// `(nodes, parallelism)` shape, over uniform and Zipf-1.2 keys. (Data
+/// uses quarter-integer floats so per-morsel partial sums are exact
+/// under any association.)
+#[test]
+fn fragment_dispatch_matches_legacy_randomized() {
+    for (seed, zipf) in [(41u64, None), (42, Some(1.2))] {
+        let cat = catalog(30_000, 600, zipf, seed);
+        for q in FRAGMENT_QUERIES.iter().chain(QUERIES) {
+            let base = run_sql(q, &ctx(cat.clone(), 1).with_nodes(1))
+                .unwrap_or_else(|e| panic!("seed {seed}: {q}: {e}"));
+            for (nodes, threads) in [(1usize, 8usize), (2, 4), (4, 2)] {
+                for fragments in [true, false] {
+                    let out = run_sql(
+                        q,
+                        &ctx(cat.clone(), threads).with_nodes(nodes).with_fragments(fragments),
+                    )
+                    .unwrap_or_else(|e| {
+                        panic!("seed {seed} ({nodes},{threads}) fragments={fragments}: {q}: {e}")
+                    });
+                    assert_eq!(
+                        out, base,
+                        "seed {seed} ({nodes},{threads}) fragments={fragments}: {q}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The ISSUE 5 wire-bytes criterion: on a scan→filter→project→aggregate
+/// query over ≥ 2 nodes, fragment dispatch ships each remote node's
+/// input span exactly once — strictly fewer wire bytes than
+/// operator-at-a-time dispatch — and reports the fused operator list.
+#[test]
+fn fragment_dispatch_ships_strictly_fewer_wire_bytes() {
+    let cat = catalog(30_000, 600, Some(1.2), 43);
+    let q = "SELECT k2, COUNT(*) AS n, SUM(vv) AS s FROM \
+             (SELECT k + 1 AS k2, v * 2.0 AS vv FROM facts WHERE v < 800.0) t GROUP BY k2";
+    for (nodes, threads) in [(2usize, 4usize), (4, 2)] {
+        let (frag_out, frag) = run_sql_with_stats(
+            q,
+            &ctx(cat.clone(), threads).with_nodes(nodes).with_fragments(true),
+        )
+        .unwrap();
+        let (op_out, op) = run_sql_with_stats(
+            q,
+            &ctx(cat.clone(), threads).with_nodes(nodes).with_fragments(false),
+        )
+        .unwrap();
+        assert_eq!(frag_out, op_out, "({nodes},{threads})");
+        let (fw, ow) = (frag.total_wire_bytes(), op.total_wire_bytes());
+        assert!(fw > 0, "({nodes},{threads}): fragment shipped nothing");
+        assert!(
+            fw < ow,
+            "({nodes},{threads}): fragment wire bytes {fw} !< operator-at-a-time {ow}"
+        );
+        assert_eq!(frag.fragments.len(), 1, "{:?}", frag.fragments);
+        let f = &frag.fragments[0];
+        assert_eq!(f.ops, vec!["filter", "project", "aggregate"]);
+        assert_eq!(f.wire_bytes, fw, "all shipping happened in the fragment");
+        assert!(f.est_operator_wire_bytes > f.wire_bytes, "{f:?}");
+        assert!(op.fragments.is_empty());
+        let report = frag.report();
+        assert!(report.contains("filter+project+aggregate"), "{report}");
+    }
+}
+
+/// Fragments obey stealing-vs-static equivalence too: the scheduler
+/// only moves where a morsel runs.
+#[test]
+fn fragment_static_matches_stealing() {
+    let cat = catalog(30_000, 600, Some(1.2), 44);
+    for q in FRAGMENT_QUERIES {
+        let steal = run_sql(q, &ctx(cat.clone(), 4).with_nodes(2)).unwrap();
+        let fixed = run_sql(q, &ctx(cat.clone(), 4).with_nodes(2).with_stealing(false))
+            .unwrap_or_else(|e| panic!("static: {q}: {e}"));
+        assert_eq!(fixed, steal, "static vs stealing: {q}");
     }
 }
 
