@@ -53,6 +53,7 @@ fn run(
                 actual_bytes: actual,
                 duration: Duration::from_millis(600 + (qid % 7) * 157),
                 arrival_nanos: clock.now_nanos(),
+                deadline_nanos: None,
             });
             qid += 1;
             clock.sleep(arrival_gap);

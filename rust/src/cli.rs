@@ -8,9 +8,11 @@
 //!   TPCx-BB-like workload and print throughput (the end-to-end loop).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::dataframe::{col, lit};
 use crate::engine::exchange::ExchangeMode;
+use crate::engine::FaultPlan;
 use crate::session::Session;
 use crate::sim::TpcxBbDataset;
 use crate::util::cli::ParsedArgs;
@@ -22,7 +24,7 @@ snowparkd — Snowpark reproduction launcher
 USAGE:
   snowparkd info
   snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T] \
-[--nodes N] [--adaptive-shape]
+[--nodes N] [--adaptive-shape] [--timeout MS] [--fault-plan SPEC]
   snowparkd demo
   snowparkd serve [--queries N] [--nodes N] [--procs N] [--rows N] [--mode auto|local|rr]
 
@@ -40,7 +42,15 @@ warehouse pool; a one-shot run-sql invocation has an empty history, so
 the flag's effect here is recording + the cold-start default — the
 adaptation pays off across repeated statements on a long-lived
 session). SNOWPARK_FRAGMENTS=0 pins the operator-at-a-time dispatch
-baseline.
+baseline. --timeout MS bounds the statement's wall time (0 = none;
+past it the query aborts with `query deadline exceeded` instead of
+hanging). --fault-plan SPEC injects deterministic node faults, e.g.
+\"seed=7;ship=1:2;eval=2:p0.5;slow=1:40\" — ship/eval/panic take
+NODE:K (first K attempts fail) or NODE:pF (probability F per attempt),
+slow takes NODE:MS; node 0 (the leader) cannot be injected. Failed
+spans retry with capped backoff and reroute off blacklisted nodes;
+`--stats` then shows per-node retry (`retries`) and blacklist (`blk`)
+counts. The SNOWPARK_FAULT_PLAN env var supplies a default plan.
 
 Demo tables (generated): store_sales, product_reviews, web_clickstreams, items.
 Artifacts: set SNOWPARK_ARTIFACTS or run `make artifacts` for XLA UDFs.";
@@ -77,6 +87,8 @@ fn session_with_data(
     parallelism: Option<usize>,
     nodes: Option<usize>,
     adaptive_shape: bool,
+    timeout: Option<Duration>,
+    fault_plan: Option<FaultPlan>,
 ) -> anyhow::Result<Arc<Session>> {
     let mut b = Session::builder();
     if let Some(p) = pool {
@@ -90,6 +102,12 @@ fn session_with_data(
     }
     if adaptive_shape {
         b = b.adaptive_shape(true);
+    }
+    if let Some(t) = timeout {
+        b = b.query_timeout(t);
+    }
+    if let Some(f) = fault_plan {
+        b = b.fault_plan(f);
     }
     let artifacts = crate::runtime::XlaRuntime::default_dir();
     if crate::runtime::XlaRuntime::available(&artifacts) {
@@ -134,6 +152,15 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
     // 0 = auto (engine defaults: SNOWPARK_PARALLELISM / SNOWPARK_NODES).
     let parallelism = args.get_usize("parallelism", 0).map_err(anyhow::Error::msg)?;
     let nodes = args.get_usize("nodes", 0).map_err(anyhow::Error::msg)?;
+    // 0 = no deadline.
+    let timeout_ms = args.get_u64("timeout", 0).map_err(anyhow::Error::msg)?;
+    let fault_spec = args.get_or("fault-plan", "");
+    let fault_plan = if fault_spec.trim().is_empty() {
+        None
+    } else {
+        let plan = FaultPlan::parse(fault_spec)?;
+        (!plan.is_empty()).then_some(plan)
+    };
     let s = session_with_data(
         rows,
         seed,
@@ -141,6 +168,8 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         (parallelism > 0).then_some(parallelism),
         (nodes > 0).then_some(nodes),
         args.flag("adaptive-shape"),
+        (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms)),
+        fault_plan,
     )?;
     if args.flag("stats") {
         let (out, stats) = s.sql_with_stats(sql)?;
@@ -156,7 +185,7 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
 }
 
 fn demo() -> anyhow::Result<()> {
-    let s = session_with_data(5_000, 42, None, None, None, false)?;
+    let s = session_with_data(5_000, 42, None, None, None, false, None, None)?;
     println!("-- DataFrame API: top categories by revenue --");
     let df = s
         .table("store_sales")
@@ -188,6 +217,8 @@ fn serve(args: &ParsedArgs) -> anyhow::Result<()> {
         None,
         None,
         false,
+        None,
+        None,
     )?;
     println!("serving {queries} UDF queries over {nodes} nodes × {procs} procs (mode {mode:?})");
     let t0 = std::time::Instant::now();

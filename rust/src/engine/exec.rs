@@ -47,6 +47,23 @@
 //! (one structural difference: the join probe goes through the same
 //! partitioned-table API with one partition).
 //!
+//! ## Fault tolerance
+//!
+//! Node-span dispatch recovers from remote failures (see
+//! [`super::fault`]): under an active [`FaultPlan`], a failed remote
+//! attempt — ship failure, remote-eval error, caught panic — retries
+//! with capped exponential backoff, a node is blacklisted after
+//! repeated failures, and its spans reroute to surviving nodes,
+//! degrading to leader-only execution when every remote is gone. The
+//! shape-independent morsel layout makes every re-dispatched span
+//! bit-exact, so recovered queries stay byte-identical to the
+//! fault-free run. With no plan active, dispatch takes the plain path —
+//! no catches, counters, or sleeps. A [`CancelToken`] on the context
+//! bounds the whole statement: it is checked at operator entry, at
+//! morsel boundaries, and inside injected stalls/backoffs, turning a
+//! deadline into a clean [`super::fault::DeadlineExceeded`] error with
+//! every scoped worker joined.
+//!
 //! ## Per-node pipeline fragments
 //!
 //! Morsel-splittable operator chains fuse into **per-node pipeline
@@ -85,12 +102,13 @@ use super::expr::{
     eval_expr, eval_expr_rowwise, eval_predicate, eval_predicate_rowwise, eval_row,
     resolve_column,
 };
+use super::fault::{is_retryable, CancelToken, FaultKind, FaultPlan, FaultScope, InjectedFault};
 use super::fragment::{FragCap, FragStage, Fragment};
 use super::hash::{
     assign_group_ids, EncodedKeys, JoinTable, KeyDict, KeyMode, PartitionedJoinTable,
 };
 use super::key::KeyValue;
-use super::morsel::{run_stealing, ExecTally, NodeCounters, StealConfig};
+use super::morsel::{run_stealing_cancellable, ExecTally, NodeCounters, StealConfig};
 use super::plan::{AggCall, AggFunc, Plan};
 
 /// Target rows per morsel: below two of these, scheduler + merge
@@ -181,6 +199,24 @@ pub struct ExecContext {
     /// Per-node morsel/steal/wire counters, reset per query and drained
     /// into [`QueryStats::node_stats`].
     pub tally: Arc<ExecTally>,
+    /// Active fault-injection scope, or `None` — the zero-overhead
+    /// default: no counters, no catches, no sleeps on the dispatch path.
+    /// Populated from `SNOWPARK_FAULT_PLAN` by [`ExecContext::new`], or
+    /// explicitly via [`ExecContext::with_fault_plan`] /
+    /// [`ExecContext::with_fault_scope`]. When set, a remote node-span
+    /// failure retries with capped backoff, repeat offenders are
+    /// blacklisted, and their spans reroute to surviving nodes
+    /// (degrading to the leader when none survive).
+    pub fault: Option<Arc<FaultScope>>,
+    /// Cooperative cancellation token checked at operator entry and
+    /// morsel boundaries (`None` = never cancelled). `Session` populates
+    /// it from `SessionBuilder::query_timeout`; firing turns the
+    /// statement into a clean [`super::fault::DeadlineExceeded`] error.
+    pub cancel: Option<CancelToken>,
+    /// Retry failed remote spans (the default). `false` turns any
+    /// injected fault into a whole-query failure — the fail-from-scratch
+    /// comparator of the A12 `fault_recovery` ablation.
+    pub fault_retry: bool,
 }
 
 impl ExecContext {
@@ -197,6 +233,9 @@ impl ExecContext {
             fragments: default_fragments(),
             transport: TransportCost::default(),
             tally: Arc::new(ExecTally::default()),
+            fault: super::fault::default_fault_scope(),
+            cancel: None,
+            fault_retry: true,
         }
     }
 
@@ -235,6 +274,33 @@ impl ExecContext {
     /// Set the cross-node transport cost model.
     pub fn with_transport(mut self, transport: TransportCost) -> Self {
         self.transport = transport;
+        self
+    }
+
+    /// Activate a fault-injection plan (fresh scope: attempt counters,
+    /// failure counts, and the blacklist start empty).
+    pub fn with_fault_plan(self, plan: FaultPlan) -> Self {
+        let scope = FaultScope::new(plan);
+        self.with_fault_scope(scope)
+    }
+
+    /// Share an existing fault scope (so triggers and the blacklist
+    /// persist across whole-query reruns — the A12 fail-from-scratch
+    /// comparator needs this to make Count triggers exhaust).
+    pub fn with_fault_scope(mut self, scope: Arc<FaultScope>) -> Self {
+        self.fault = Some(scope);
+        self
+    }
+
+    /// Attach a cancellation token (typically deadline-bearing).
+    pub fn with_cancel(mut self, cancel: CancelToken) -> Self {
+        self.cancel = Some(cancel);
+        self
+    }
+
+    /// Toggle remote-span retry. `false` = fail-from-scratch semantics.
+    pub fn with_fault_retry(mut self, on: bool) -> Self {
+        self.fault_retry = on;
         self
     }
 
@@ -345,12 +411,13 @@ where
     let n_morsels = ranges.len();
     let nodes = ctx.nodes.clamp(1, n_morsels.max(1));
     let workers = ctx.parallelism.max(1);
+    let cancel = ctx.cancel.as_ref();
     if nodes <= 1 {
         let t0 = Instant::now();
         let (last_off, last_len) = ranges[n_morsels - 1];
         let local = prep(cols, (ranges[0].0, last_off + last_len - ranges[0].0))?;
         let cfg = StealConfig::new(workers, ctx.steal);
-        let (out, tally) = run_stealing(n_morsels, &cfg, |_w, t| {
+        let (out, tally) = run_stealing_cancellable(n_morsels, &cfg, cancel, |_w, t| {
             let (off, len) = ranges[t];
             run(&local, cols, Morsel { global: off, local: off, span: off, len })
         })?;
@@ -362,6 +429,7 @@ where
                 stolen_tasks: tally.stolen_tasks,
                 wire_bytes: 0,
                 busy_ns: t0.elapsed().as_nanos() as u64,
+                ..Default::default()
             },
         );
         return Ok(out);
@@ -376,56 +444,144 @@ where
             .enumerate()
             .map(|(node, &(m0, mlen))| {
                 s.spawn(move || -> Result<Vec<T>> {
-                    let t0 = Instant::now();
                     let row_lo = ranges[m0].0;
                     let (last_off, last_len) = ranges[m0 + mlen - 1];
                     let span_rows = last_off + last_len - row_lo;
-                    // The leader reads its own memory; every other node
-                    // receives its span through the columnar exchange.
-                    let (shipped, wire_bytes) = if node == 0 || cols.is_empty() {
-                        (None, 0)
-                    } else {
-                        let (rs, bytes) = super::exchange::ship_columns(
-                            fields,
-                            cols,
-                            row_lo,
-                            span_rows,
-                            ctx.transport,
-                        )?;
-                        (Some(rs), bytes)
+                    let fault = ctx.fault.as_deref();
+                    // One attempt of this span on `target`. The leader
+                    // (target 0) reads its own memory; every other node
+                    // receives the span through the columnar exchange.
+                    // Fault hooks fire only for remote targets — the
+                    // leader is the coordinator and is never injected,
+                    // which is what makes leader-only degradation a
+                    // guaranteed-sound fallback.
+                    let attempt = |target: usize| -> Result<Vec<T>> {
+                        let t0 = Instant::now();
+                        if let Some(scope) = fault {
+                            // A ship fault strikes before encode: the
+                            // span never leaves the leader, no bytes
+                            // charged.
+                            scope.check_ship(target)?;
+                        }
+                        let (shipped, wire_bytes) = if target == 0 || cols.is_empty() {
+                            (None, 0)
+                        } else {
+                            let (rs, bytes) = super::exchange::ship_columns(
+                                fields,
+                                cols,
+                                row_lo,
+                                span_rows,
+                                ctx.transport,
+                            )?;
+                            (Some(rs), bytes)
+                        };
+                        if let Some(scope) = fault {
+                            if let Some(delay) = scope.slow_delay(target) {
+                                scope.sleep_cancellable(delay, cancel)?;
+                            }
+                            // Eval faults and injected panics strike
+                            // after the shipment round-tripped.
+                            scope.check_eval(target)?;
+                        }
+                        let local_cols: Vec<&Column> = match &shipped {
+                            Some(rs) => rs.columns.iter().collect(),
+                            None => cols.to_vec(),
+                        };
+                        let base = if shipped.is_some() { row_lo } else { 0 };
+                        let local = prep(&local_cols, (row_lo - base, span_rows))?;
+                        let cfg = StealConfig::new(workers, ctx.steal);
+                        let (out, tally) = run_stealing_cancellable(mlen, &cfg, cancel, |_w, t| {
+                            let (off, len) = ranges[m0 + t];
+                            let m =
+                                Morsel { global: off, local: off - base, span: off - row_lo, len };
+                            run(&local, &local_cols, m)
+                        })?;
+                        // Exclude the modeled transport charge from busy
+                        // time: it is uniform per wire byte, so leaving
+                        // it in would read as phantom data skew on
+                        // remote nodes relative to the charge-free
+                        // leader.
+                        let charged = if wire_bytes > 0 {
+                            ctx.transport.cost(wire_bytes).as_nanos() as u64
+                        } else {
+                            0
+                        };
+                        ctx.tally.record(
+                            target,
+                            NodeCounters {
+                                morsels: mlen as u64,
+                                steals: tally.steals,
+                                stolen_tasks: tally.stolen_tasks,
+                                wire_bytes,
+                                busy_ns: (t0.elapsed().as_nanos() as u64).saturating_sub(charged),
+                                ..Default::default()
+                            },
+                        );
+                        Ok(out)
                     };
-                    let local_cols: Vec<&Column> = match &shipped {
-                        Some(rs) => rs.columns.iter().collect(),
-                        None => cols.to_vec(),
-                    };
-                    let base = if shipped.is_some() { row_lo } else { 0 };
-                    let local = prep(&local_cols, (row_lo - base, span_rows))?;
-                    let cfg = StealConfig::new(workers, ctx.steal);
-                    let (out, tally) = run_stealing(mlen, &cfg, |_w, t| {
-                        let (off, len) = ranges[m0 + t];
-                        let m = Morsel { global: off, local: off - base, span: off - row_lo, len };
-                        run(&local, &local_cols, m)
-                    })?;
-                    // Exclude the modeled transport charge from busy
-                    // time: it is uniform per wire byte, so leaving it
-                    // in would read as phantom data skew on remote
-                    // nodes relative to the charge-free leader.
-                    let charged = if wire_bytes > 0 {
-                        ctx.transport.cost(wire_bytes).as_nanos() as u64
-                    } else {
-                        0
-                    };
-                    ctx.tally.record(
-                        node,
-                        NodeCounters {
-                            morsels: mlen as u64,
-                            steals: tally.steals,
-                            stolen_tasks: tally.stolen_tasks,
-                            wire_bytes,
-                            busy_ns: (t0.elapsed().as_nanos() as u64).saturating_sub(charged),
-                        },
-                    );
-                    Ok(out)
+                    // Recovery loop. Without a fault scope this is one
+                    // plain `attempt(node)` — no catch, no counters, no
+                    // extra branches on the morsel path. With one, a
+                    // failed remote attempt retries after capped
+                    // backoff, a node is blacklisted on its
+                    // `MAX_NODE_FAILURES`th failure, and the span
+                    // reroutes to survivors (ending at the leader).
+                    // Termination: each remote fails at most
+                    // `MAX_NODE_FAILURES` times before the blacklist
+                    // removes it, and the leader is never retryable.
+                    let mut target = node;
+                    let mut tries = 0u32;
+                    loop {
+                        if let Some(scope) = fault {
+                            if target != 0 && scope.is_blacklisted(target) {
+                                target = scope.reroute(nodes, target);
+                            }
+                        }
+                        // Catch unwinds only on fault-injected remote
+                        // attempts, converting them into that node's
+                        // failure. Leader attempts (and every attempt
+                        // with no plan active) unwind as before — a
+                        // real panic on the coordinator must never loop.
+                        let result = if fault.is_some() && target != 0 {
+                            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                attempt(target)
+                            })) {
+                                Ok(r) => r,
+                                Err(_) => {
+                                    Err(InjectedFault { node: target, kind: FaultKind::Panic }
+                                        .into())
+                                }
+                            }
+                        } else {
+                            attempt(target)
+                        };
+                        match result {
+                            Ok(out) => return Ok(out),
+                            Err(e)
+                                if target != 0
+                                    && ctx.fault_retry
+                                    && fault.is_some()
+                                    && is_retryable(&e) =>
+                            {
+                                let scope = fault.unwrap();
+                                tries += 1;
+                                ctx.tally.record(
+                                    target,
+                                    NodeCounters { retries: 1, ..Default::default() },
+                                );
+                                if scope.note_failure(target) {
+                                    ctx.tally.record(
+                                        target,
+                                        NodeCounters { blacklisted: 1, ..Default::default() },
+                                    );
+                                }
+                                // A deadline firing mid-backoff ends the
+                                // retry loop with DeadlineExceeded.
+                                scope.backoff(tries, cancel)?;
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
                 })
             })
             .collect();
@@ -759,6 +915,19 @@ impl QueryStats {
         self.node_stats.iter().map(|c| c.wire_bytes).sum()
     }
 
+    /// Total failed-and-retried dispatch attempts across nodes — exactly
+    /// zero unless a fault plan was active (the A12 zero-overhead
+    /// invariant).
+    pub fn total_retries(&self) -> u64 {
+        self.node_stats.iter().map(|c| c.retries).sum()
+    }
+
+    /// Nodes blacklisted during this query (their spans rerouted to
+    /// survivors, degrading to the leader when none remained).
+    pub fn total_blacklisted(&self) -> u64 {
+        self.node_stats.iter().map(|c| c.blacklisted).sum()
+    }
+
     /// Aligned per-operator report (`snowparkd run-sql --stats` prints it).
     pub fn report(&self) -> String {
         let mut out = format!(
@@ -783,18 +952,20 @@ impl QueryStats {
         }
         if !self.node_stats.is_empty() {
             out.push_str(&format!(
-                "{:<10} {:>8} {:>7} {:>7} {:>12} {:>12}\n",
-                "node", "morsels", "steals", "stolen", "wire_bytes", "busy"
+                "{:<10} {:>8} {:>7} {:>7} {:>12} {:>12} {:>8} {:>4}\n",
+                "node", "morsels", "steals", "stolen", "wire_bytes", "busy", "retries", "blk"
             ));
             for (node, c) in self.node_stats.iter().enumerate() {
                 out.push_str(&format!(
-                    "{:<10} {:>8} {:>7} {:>7} {:>12} {:>9.3}ms\n",
+                    "{:<10} {:>8} {:>7} {:>7} {:>12} {:>9.3}ms {:>8} {:>4}\n",
                     node,
                     c.morsels,
                     c.steals,
                     c.stolen_tasks,
                     c.wire_bytes,
-                    c.busy_ns as f64 / 1e6
+                    c.busy_ns as f64 / 1e6,
+                    c.retries,
+                    c.blacklisted
                 ));
             }
         }
@@ -845,6 +1016,13 @@ pub fn execute_plan_with_stats(plan: &Plan, ctx: &ExecContext) -> Result<(RowSet
 }
 
 fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet> {
+    // Deadline gate at operator entry: a cancelled statement stops
+    // descending the plan tree instead of starting new operators. The
+    // morsel-boundary checks inside dispatch handle mid-operator
+    // cancellation.
+    if let Some(c) = &ctx.cancel {
+        c.check()?;
+    }
     // Per-node pipeline fragments: when the planner groups this
     // operator (with the splittable chain below it) into a fragment,
     // dispatch the whole chain in one shipment per node instead of
@@ -3555,7 +3733,10 @@ fn materialize_join(
             }
         };
         let cfg = StealConfig::new(threads, ctx.steal);
-        let (columns, tally) = run_stealing(n_cols, &cfg, |_w, ci| Ok(gather_col(ci)))?;
+        let (columns, tally) =
+            run_stealing_cancellable(n_cols, &cfg, ctx.cancel.as_ref(), |_w, ci| {
+                Ok(gather_col(ci))
+            })?;
         // Column-gather tasks are not row morsels, but their steals are
         // real scheduler activity — surface them on the leader's slot.
         ctx.tally.record(

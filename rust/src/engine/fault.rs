@@ -1,0 +1,647 @@
+//! Deterministic fault injection, retry bookkeeping, and cooperative
+//! cancellation for the distributed execution path.
+//!
+//! The paper's CTC case study (§V.A) is a reliability story: the
+//! remote-Spark baseline suffered "frequent job failures, impacting
+//! critical SLAs," and moving compute in-situ "resolved the reliability
+//! issues." `sim/remote.rs` models that only for the *competitor*; this
+//! module gives our own warehouse dispatch the managed-service failure
+//! semantics — so `engine/exec.rs::dispatch_morsels` can retry a failed
+//! node span with capped backoff, blacklist repeat offenders, degrade to
+//! the leader, and honor per-query deadlines.
+//!
+//! Everything is deterministic: a [`FaultPlan`] is parsed from a seeded
+//! spec string (`SNOWPARK_FAULT_PLAN` / `run-sql --fault-plan`) and fires
+//! either on the first *K* attempts of a (kind, node) pair or on a seeded
+//! hash of the attempt number — the same plan produces the same fault
+//! sequence on every platform, which is what lets the differential suite
+//! assert byte-identical output under chaos.
+//!
+//! Design invariant: **node 0 (the leader) is never fault-injected** and
+//! its failures are never treated as retryable. The leader is the
+//! coordinator — it holds the source columns and runs the merge steps —
+//! so leader-only execution is always a sound degraded mode, and every
+//! retry loop terminates because each remote is blacklisted after
+//! [`MAX_NODE_FAILURES`] failures.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::clock::{Clock, WallClock};
+use crate::util::rng::Rng;
+
+/// Remote-node failures tolerated before the node is blacklisted: the
+/// first failure earns one same-node retry (transient blip), the second
+/// reroutes the span to a surviving node (persistent fault).
+pub const MAX_NODE_FAILURES: u32 = 2;
+
+/// Maximum capped-exponential backoff exponent (1ms << 3 = 8ms cap).
+const MAX_BACKOFF_SHIFT: u32 = 3;
+
+/// Granularity of interruptible sleeps: slow-node delays and backoffs
+/// sleep in chunks this size, checking the cancellation token between
+/// chunks so a deadline cuts even a long injected stall short.
+const SLEEP_CHUNK: Duration = Duration::from_millis(5);
+
+/// Which dispatch step a fault strikes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// The span shipment to the remote fails before any bytes move.
+    Ship,
+    /// The remote evaluation fails after the span was shipped.
+    Eval,
+    /// The remote evaluation panics (worker unwinds mid-task).
+    Panic,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::Ship => write!(f, "ship"),
+            FaultKind::Eval => write!(f, "eval"),
+            FaultKind::Panic => write!(f, "panic"),
+        }
+    }
+}
+
+/// When a configured fault point fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Fire on the first `K` attempts of this (kind, node) pair, then
+    /// heal — models a transient outage of known length.
+    Count(u64),
+    /// Fire with probability `p` on every attempt, decided by a seeded
+    /// hash of (seed, kind, node, attempt) — models a flaky node.
+    /// Deterministic for a given plan seed.
+    Prob(f64),
+}
+
+/// A seeded, declarative set of fault points for one execution scope.
+///
+/// Spec grammar (entries separated by `;` or `,`):
+///
+/// ```text
+/// seed=S          plan seed for probabilistic triggers
+/// ship=NODE:TRIG  span shipment to NODE fails
+/// eval=NODE:TRIG  remote evaluation on NODE fails
+/// panic=NODE:TRIG remote evaluation on NODE panics
+/// slow=NODE:MS    every dispatch to NODE stalls MS milliseconds
+/// ```
+///
+/// `TRIG` is either an integer `K` (first K attempts fail) or `pF`
+/// (each attempt fails with probability F, e.g. `p0.3`). Node 0 is the
+/// leader and is rejected at parse time. Example:
+/// `seed=7;ship=1:2;slow=1:1`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for probabilistic triggers.
+    pub seed: u64,
+    /// Ship-failure points, keyed by node.
+    pub ship: BTreeMap<usize, Trigger>,
+    /// Remote-eval failure points, keyed by node.
+    pub eval: BTreeMap<usize, Trigger>,
+    /// Remote-eval panic points, keyed by node.
+    pub panic: BTreeMap<usize, Trigger>,
+    /// Slow-node delays in milliseconds, keyed by node.
+    pub slow: BTreeMap<usize, u64>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see the type-level grammar). Empty entries
+    /// are skipped, so `""` parses to an empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split([';', ',']) {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (key, val) = entry
+                .split_once('=')
+                .ok_or_else(|| anyhow!("fault entry {entry:?}: expected key=value"))?;
+            match key.trim() {
+                "seed" => {
+                    plan.seed = val
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow!("fault entry {entry:?}: seed must be an integer"))?;
+                }
+                "ship" => {
+                    let (node, trig) = parse_node_trigger(entry, val)?;
+                    plan.ship.insert(node, trig);
+                }
+                "eval" => {
+                    let (node, trig) = parse_node_trigger(entry, val)?;
+                    plan.eval.insert(node, trig);
+                }
+                "panic" => {
+                    let (node, trig) = parse_node_trigger(entry, val)?;
+                    plan.panic.insert(node, trig);
+                }
+                "slow" => {
+                    let (node, ms) = val
+                        .split_once(':')
+                        .ok_or_else(|| anyhow!("fault entry {entry:?}: expected slow=NODE:MS"))?;
+                    let node = parse_remote_node(entry, node)?;
+                    let ms: u64 = ms
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow!("fault entry {entry:?}: MS must be an integer"))?;
+                    plan.slow.insert(node, ms);
+                }
+                other => bail!(
+                    "fault entry {entry:?}: unknown kind {other:?} \
+                     (expected seed/ship/eval/panic/slow)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan has no fault points (a bare `seed=S` spec).
+    pub fn is_empty(&self) -> bool {
+        self.ship.is_empty()
+            && self.eval.is_empty()
+            && self.panic.is_empty()
+            && self.slow.is_empty()
+    }
+}
+
+fn parse_remote_node(entry: &str, s: &str) -> Result<usize> {
+    let node: usize = s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("fault entry {entry:?}: NODE must be an integer"))?;
+    if node == 0 {
+        bail!("fault entry {entry:?}: node 0 is the leader and cannot be fault-injected");
+    }
+    Ok(node)
+}
+
+fn parse_node_trigger(entry: &str, v: &str) -> Result<(usize, Trigger)> {
+    let (node, t) = v
+        .split_once(':')
+        .ok_or_else(|| anyhow!("fault entry {entry:?}: expected KIND=NODE:TRIGGER"))?;
+    let node = parse_remote_node(entry, node)?;
+    let t = t.trim();
+    let trig = if let Some(p) = t.strip_prefix('p') {
+        let p: f64 = p
+            .parse()
+            .map_err(|_| anyhow!("fault entry {entry:?}: probability must be a number"))?;
+        if !(0.0..=1.0).contains(&p) {
+            bail!("fault entry {entry:?}: probability must be in [0, 1]");
+        }
+        Trigger::Prob(p)
+    } else {
+        Trigger::Count(
+            t.parse()
+                .map_err(|_| anyhow!("fault entry {entry:?}: trigger must be an integer or pF"))?,
+        )
+    };
+    Ok((node, trig))
+}
+
+/// Seeded uniform [0,1) hash of a (seed, kind, node, attempt) tuple —
+/// one SplitMix64 draw from a well-mixed state, stable across platforms.
+fn hash_unit(seed: u64, kind: FaultKind, node: usize, attempt: u64) -> f64 {
+    let mut rng = Rng::new(
+        seed ^ (kind as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (node as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ attempt.wrapping_mul(0x94D0_49BB_1331_11EB),
+    );
+    rng.f64()
+}
+
+/// The error produced when a configured fault point fires (or an injected
+/// panic is caught). [`is_retryable`] recognizes it, so dispatch retries
+/// the span; every other error is terminal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    /// Node the fault struck.
+    pub node: usize,
+    /// Which dispatch step it struck.
+    pub kind: FaultKind,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected {} fault on node {}", self.kind, self.node)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// The error a deadline-bound query returns when its cancellation token
+/// fires: terminal, never retried.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadlineExceeded;
+
+impl fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "query deadline exceeded")
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+/// True when `e` is an [`InjectedFault`] — the only error class the
+/// dispatch retry loop is allowed to retry.
+pub fn is_retryable(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<InjectedFault>().is_some()
+}
+
+/// True when `e` is a [`DeadlineExceeded`].
+pub fn is_deadline_exceeded(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<DeadlineExceeded>().is_some()
+}
+
+/// Cooperative cancellation token, checked at morsel boundaries
+/// (`morsel.rs::run_stealing_cancellable`), operator entry, and inside
+/// fault-injected sleeps. Cloning shares the flag; a deadline latches
+/// into the flag the first time it is observed expired.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that only fires on an explicit [`CancelToken::cancel`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A token that fires `timeout` from now (or on explicit cancel).
+    pub fn with_deadline(timeout: Duration) -> Self {
+        Self { flag: Arc::default(), deadline: Some(Instant::now() + timeout) }
+    }
+
+    /// Cancel explicitly; every clone observes it.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// True once cancelled or past the deadline (latching).
+    pub fn cancelled(&self) -> bool {
+        if self.flag.load(Ordering::Relaxed) {
+            return true;
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                self.flag.store(true, Ordering::SeqCst);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// `Err(DeadlineExceeded)` once cancelled, `Ok(())` otherwise.
+    pub fn check(&self) -> Result<()> {
+        if self.cancelled() {
+            Err(DeadlineExceeded.into())
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct ScopeState {
+    /// Attempt counters per (kind, node) — drive Count/Prob triggers.
+    attempts: HashMap<(FaultKind, usize), u64>,
+    /// Failures observed per node (injected or caught), across retries.
+    failures: HashMap<usize, u32>,
+    /// Nodes excluded from further dispatch this scope.
+    blacklist: HashSet<usize>,
+}
+
+/// Live fault-injection state for one execution scope (one
+/// [`crate::engine::ExecContext`]): the plan plus attempt counters,
+/// per-node failure counts, and the blacklist that dispatch consults
+/// when rerouting failed spans. Shared across the node-span threads of
+/// every dispatch in the scope.
+pub struct FaultScope {
+    plan: FaultPlan,
+    clock: Arc<dyn Clock>,
+    state: Mutex<ScopeState>,
+}
+
+impl fmt::Debug for FaultScope {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("FaultScope").field("plan", &self.plan).finish_non_exhaustive()
+    }
+}
+
+impl FaultScope {
+    /// A scope over `plan` on the wall clock (the execution default).
+    pub fn new(plan: FaultPlan) -> Arc<Self> {
+        Self::with_clock(plan, Arc::new(WallClock::new()))
+    }
+
+    /// A scope whose injected delays and backoffs run on `clock` —
+    /// tests pass a [`crate::util::clock::SimClock`] so slow-node stalls
+    /// cost no real time.
+    pub fn with_clock(plan: FaultPlan, clock: Arc<dyn Clock>) -> Arc<Self> {
+        Arc::new(Self { plan, clock, state: Mutex::new(ScopeState::default()) })
+    }
+
+    /// The plan this scope executes.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Decide whether the next attempt of (kind, node) faults; consumes
+    /// one attempt number either way. Node 0 never faults.
+    fn fire(&self, kind: FaultKind, node: usize) -> bool {
+        if node == 0 {
+            return false;
+        }
+        let map = match kind {
+            FaultKind::Ship => &self.plan.ship,
+            FaultKind::Eval => &self.plan.eval,
+            FaultKind::Panic => &self.plan.panic,
+        };
+        let Some(&trig) = map.get(&node) else {
+            return false;
+        };
+        let attempt = {
+            let mut st = self.state.lock().unwrap();
+            let c = st.attempts.entry((kind, node)).or_insert(0);
+            let cur = *c;
+            *c += 1;
+            cur
+        };
+        match trig {
+            Trigger::Count(k) => attempt < k,
+            Trigger::Prob(p) => hash_unit(self.plan.seed, kind, node, attempt) < p,
+        }
+    }
+
+    /// Ship-failure hook: call before encoding a span for `node`.
+    pub fn check_ship(&self, node: usize) -> Result<()> {
+        if self.fire(FaultKind::Ship, node) {
+            return Err(InjectedFault { node, kind: FaultKind::Ship }.into());
+        }
+        Ok(())
+    }
+
+    /// Remote-eval hook: call after shipping, before evaluating. A
+    /// configured panic point unwinds here (the dispatch retry loop
+    /// catches it); an eval point returns an [`InjectedFault`].
+    pub fn check_eval(&self, node: usize) -> Result<()> {
+        if self.fire(FaultKind::Panic, node) {
+            panic!("injected panic on node {node}");
+        }
+        if self.fire(FaultKind::Eval, node) {
+            return Err(InjectedFault { node, kind: FaultKind::Eval }.into());
+        }
+        Ok(())
+    }
+
+    /// The configured slow-node stall for `node`, if any.
+    pub fn slow_delay(&self, node: usize) -> Option<Duration> {
+        if node == 0 {
+            return None;
+        }
+        self.plan.slow.get(&node).map(|&ms| Duration::from_millis(ms))
+    }
+
+    /// Sleep `d` on the scope clock in [`SLEEP_CHUNK`] steps, bailing
+    /// with [`DeadlineExceeded`] as soon as `cancel` fires — a 60s
+    /// injected stall costs a deadline-bound query at most one chunk.
+    pub fn sleep_cancellable(&self, d: Duration, cancel: Option<&CancelToken>) -> Result<()> {
+        let mut left = d;
+        loop {
+            if let Some(c) = cancel {
+                c.check()?;
+            }
+            if left.is_zero() {
+                return Ok(());
+            }
+            let step = left.min(SLEEP_CHUNK);
+            self.clock.sleep(step);
+            left -= step;
+        }
+    }
+
+    /// Capped exponential backoff before retry number `tries` (1-based):
+    /// 1ms, 2ms, 4ms, then 8ms forever. Interruptible by `cancel`.
+    pub fn backoff(&self, tries: u32, cancel: Option<&CancelToken>) -> Result<()> {
+        let ms = 1u64 << tries.saturating_sub(1).min(MAX_BACKOFF_SHIFT);
+        self.sleep_cancellable(Duration::from_millis(ms), cancel)
+    }
+
+    /// Record a failure on `node`; blacklist it at [`MAX_NODE_FAILURES`].
+    /// Returns true exactly once per node: on the call that transitioned
+    /// it into the blacklist. Node 0 is never counted or blacklisted.
+    pub fn note_failure(&self, node: usize) -> bool {
+        if node == 0 {
+            return false;
+        }
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let c = st.failures.entry(node).or_insert(0);
+        *c += 1;
+        *c >= MAX_NODE_FAILURES && st.blacklist.insert(node)
+    }
+
+    /// True when `node` has been blacklisted this scope.
+    pub fn is_blacklisted(&self, node: usize) -> bool {
+        self.state.lock().unwrap().blacklist.contains(&node)
+    }
+
+    /// Number of nodes blacklisted so far.
+    pub fn blacklisted_count(&self) -> usize {
+        self.state.lock().unwrap().blacklist.len()
+    }
+
+    /// Pick a replacement target for a span whose node `failed`: the
+    /// next surviving remote in cyclic order, or the leader (node 0)
+    /// when every remote is blacklisted. `nodes` is the dispatch
+    /// fan-out; `failed` must be a remote (>= 1).
+    pub fn reroute(&self, nodes: usize, failed: usize) -> usize {
+        if nodes <= 1 || failed == 0 {
+            return 0;
+        }
+        let st = self.state.lock().unwrap();
+        for step in 1..nodes {
+            let cand = (failed - 1 + step) % (nodes - 1) + 1;
+            if cand != failed && !st.blacklist.contains(&cand) {
+                return cand;
+            }
+        }
+        0
+    }
+}
+
+/// The ambient fault scope from `SNOWPARK_FAULT_PLAN`, if set and
+/// non-empty. Malformed specs warn to stderr and are ignored rather than
+/// failing every query — chaos tooling should never take down a correct
+/// run. `None` is the zero-overhead default: dispatch takes the plain
+/// path with no counters, catches, or sleeps.
+pub fn default_fault_scope() -> Option<Arc<FaultScope>> {
+    let spec = std::env::var("SNOWPARK_FAULT_PLAN").ok()?;
+    if spec.trim().is_empty() {
+        return None;
+    }
+    match FaultPlan::parse(&spec) {
+        Ok(plan) if !plan.is_empty() => Some(FaultScope::new(plan)),
+        Ok(_) => None,
+        Err(e) => {
+            eprintln!("warning: ignoring malformed SNOWPARK_FAULT_PLAN: {e}");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::SimClock;
+
+    #[test]
+    fn parse_grammar_round_trips() {
+        let p = FaultPlan::parse("seed=7; ship=1:2, eval=2:p0.25; panic=3:1; slow=1:40").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.ship.get(&1), Some(&Trigger::Count(2)));
+        assert_eq!(p.eval.get(&2), Some(&Trigger::Prob(0.25)));
+        assert_eq!(p.panic.get(&3), Some(&Trigger::Count(1)));
+        assert_eq!(p.slow.get(&1), Some(&40));
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("seed=9").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_leader_unknown_kinds_and_bad_numbers() {
+        assert!(FaultPlan::parse("ship=0:1").unwrap_err().to_string().contains("leader"));
+        assert!(FaultPlan::parse("slow=0:10").is_err());
+        assert!(FaultPlan::parse("frob=1:1").is_err());
+        assert!(FaultPlan::parse("ship=1").is_err());
+        assert!(FaultPlan::parse("ship=1:p1.5").is_err());
+        assert!(FaultPlan::parse("ship=x:1").is_err());
+        assert!(FaultPlan::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn count_trigger_fires_first_k_then_heals() {
+        let scope = FaultScope::new(FaultPlan::parse("ship=1:2").unwrap());
+        assert!(scope.check_ship(1).is_err());
+        assert!(scope.check_ship(1).is_err());
+        assert!(scope.check_ship(1).is_ok());
+        assert!(scope.check_ship(1).is_ok());
+        // Other nodes and kinds are untouched.
+        assert!(scope.check_ship(2).is_ok());
+        assert!(scope.check_eval(1).is_ok());
+    }
+
+    #[test]
+    fn prob_trigger_is_deterministic_per_seed() {
+        let decide = |seed: u64| -> Vec<bool> {
+            let scope =
+                FaultScope::new(FaultPlan::parse(&format!("seed={seed};eval=1:p0.5")).unwrap());
+            (0..32).map(|_| scope.check_eval(1).is_err()).collect()
+        };
+        assert_eq!(decide(3), decide(3));
+        assert_ne!(decide(3), decide(4));
+        let fired = decide(3).iter().filter(|&&b| b).count();
+        assert!(fired > 4 && fired < 28, "p0.5 fired {fired}/32");
+    }
+
+    #[test]
+    #[should_panic(expected = "injected panic on node 2")]
+    fn panic_trigger_unwinds() {
+        let scope = FaultScope::new(FaultPlan::parse("panic=2:1").unwrap());
+        let _ = scope.check_eval(2);
+    }
+
+    #[test]
+    fn repeated_failures_blacklist_and_reroute_skips_them() {
+        let scope = FaultScope::new(FaultPlan::default());
+        assert!(!scope.note_failure(1));
+        assert!(!scope.is_blacklisted(1));
+        assert!(scope.note_failure(1)); // second failure: blacklisted now
+        assert!(!scope.note_failure(1)); // transition reported only once
+        assert!(scope.is_blacklisted(1));
+        assert_eq!(scope.blacklisted_count(), 1);
+        // Rerouting node 1's span at fan-out 4 lands on the next remote.
+        assert_eq!(scope.reroute(4, 1), 2);
+        scope.note_failure(2);
+        scope.note_failure(2);
+        assert_eq!(scope.reroute(4, 2), 3);
+        scope.note_failure(3);
+        scope.note_failure(3);
+        // All remotes dead: degrade to the leader.
+        assert_eq!(scope.reroute(4, 3), 0);
+        assert_eq!(scope.reroute(2, 1), 0);
+    }
+
+    #[test]
+    fn leader_is_immune() {
+        let scope = FaultScope::new(FaultPlan::parse("ship=1:9").unwrap());
+        assert!(scope.check_ship(0).is_ok());
+        assert!(scope.check_eval(0).is_ok());
+        assert_eq!(scope.slow_delay(0), None);
+        assert!(!scope.note_failure(0));
+        assert!(!scope.is_blacklisted(0));
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential_on_the_scope_clock() {
+        let clock = SimClock::new();
+        let scope = FaultScope::with_clock(FaultPlan::default(), Arc::new(clock.clone()));
+        let mut slept = Vec::new();
+        for tries in 1..=5 {
+            let before = clock.now();
+            scope.backoff(tries, None).unwrap();
+            slept.push((clock.now() - before).as_millis());
+        }
+        assert_eq!(slept, vec![1, 2, 4, 8, 8]);
+    }
+
+    #[test]
+    fn cancel_cuts_injected_stall_short() {
+        let clock = SimClock::new();
+        let scope = FaultScope::with_clock(FaultPlan::default(), Arc::new(clock.clone()));
+        let token = CancelToken::new();
+        token.cancel();
+        let err = scope.sleep_cancellable(Duration::from_secs(60), Some(&token)).unwrap_err();
+        assert!(is_deadline_exceeded(&err));
+        assert_eq!(clock.now(), Duration::ZERO);
+        // Without a token the stall runs to completion (on the sim clock).
+        scope.sleep_cancellable(Duration::from_millis(12), None).unwrap();
+        assert_eq!(clock.now(), Duration::from_millis(12));
+    }
+
+    #[test]
+    fn deadline_token_latches() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        assert!(t.cancelled());
+        assert!(t.cancelled());
+        assert!(is_deadline_exceeded(&t.check().unwrap_err()));
+        let open = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(!open.cancelled());
+        assert!(open.check().is_ok());
+        let shared = open.clone();
+        shared.cancel();
+        assert!(open.cancelled());
+    }
+
+    #[test]
+    fn error_classification() {
+        let inj: anyhow::Error = InjectedFault { node: 1, kind: FaultKind::Eval }.into();
+        assert!(is_retryable(&inj));
+        assert!(!is_deadline_exceeded(&inj));
+        assert_eq!(inj.to_string(), "injected eval fault on node 1");
+        let dl: anyhow::Error = DeadlineExceeded.into();
+        assert!(is_deadline_exceeded(&dl));
+        assert!(!is_retryable(&dl));
+        let other = anyhow!("real failure");
+        assert!(!is_retryable(&other) && !is_deadline_exceeded(&other));
+    }
+}

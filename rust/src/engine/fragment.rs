@@ -48,6 +48,15 @@
 //! the upstream-most operator's — a fragment evaluates its whole chain
 //! morsel-at-a-time instead of operator-at-a-time. The first error in
 //! morsel order still wins deterministically.
+//!
+//! Retry safety: fragments are dispatched through the same
+//! `exec::dispatch_morsels` funnel as operator-at-a-time spans, so the
+//! fault-recovery layer (`fault::FaultScope` — span retry, node
+//! blacklisting, reroute to survivors) applies to them unchanged. A
+//! fragment attempt is a pure function of `(target, span)` — it
+//! re-encodes its input columns from the leader's materialized source
+//! and recomputes every stage — so a retried or rerouted span is
+//! bit-identical to the first attempt at any shape.
 
 use crate::sql::ast::{Expr, OrderKey};
 use crate::udf::UdfRegistry;

@@ -15,12 +15,18 @@
 //! `fragment`): each remote node receives its span of a fragment's
 //! input columns once and returns only the fragment outputs (column
 //! segments, aggregate partials, sorted runs) for the leader's
-//! pipeline-breaker step.
+//! pipeline-breaker step. Node-span dispatch is fault-tolerant: under a
+//! [`fault::FaultPlan`] a failed span retries with capped backoff,
+//! repeat offenders are blacklisted and their spans reroute to
+//! survivors (degrading to the leader), and a [`fault::CancelToken`]
+//! bounds the whole statement with a deadline — outputs stay
+//! byte-identical to the fault-free run (see [`fault`]).
 
 mod catalog;
 mod exec;
 pub mod exchange;
 mod expr;
+pub mod fault;
 mod fragment;
 pub mod hash;
 mod key;
@@ -33,7 +39,10 @@ pub use exec::{
     execute_plan_with_stats, run_sql, run_sql_with_stats, ExecContext, FragmentStats, OpStats,
     QueryStats, MORSEL_MIN_ROWS,
 };
-pub use morsel::{run_stealing, ExecTally, NodeCounters, StealConfig, StealTally};
+pub use fault::{CancelToken, DeadlineExceeded, FaultPlan, FaultScope, InjectedFault};
+pub use morsel::{
+    run_stealing, run_stealing_cancellable, ExecTally, NodeCounters, StealConfig, StealTally,
+};
 pub use expr::{
     eval_expr, eval_expr_rowwise, eval_predicate, eval_predicate_rowwise, eval_row,
     resolve_column,

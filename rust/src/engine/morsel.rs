@@ -34,6 +34,8 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use super::fault::{CancelToken, DeadlineExceeded};
+
 /// Sets the shared flag if its thread unwinds, so peers spin-waiting for
 /// work stop instead of hanging and the panic propagates at join.
 struct PanicFlag<'a>(&'a AtomicBool);
@@ -98,6 +100,27 @@ where
     T: Send,
     F: Fn(usize, usize) -> Result<T> + Sync,
 {
+    run_stealing_cancellable(n_tasks, cfg, None, f)
+}
+
+/// [`run_stealing`] with a cooperative cancellation token checked at
+/// morsel boundaries — the mechanism behind per-query deadlines
+/// (generalizing the panic flag, which releases peers the same way).
+/// When `cancel` fires mid-run, workers stop claiming tasks, drain, and
+/// the run returns `Err(DeadlineExceeded)` (unless every task had
+/// already finished, in which case the complete result stands). All
+/// workers are scoped threads and always join: cancellation never leaks
+/// a worker.
+pub fn run_stealing_cancellable<T, F>(
+    n_tasks: usize,
+    cfg: &StealConfig,
+    cancel: Option<&CancelToken>,
+    f: F,
+) -> Result<(Vec<T>, StealTally)>
+where
+    T: Send,
+    F: Fn(usize, usize) -> Result<T> + Sync,
+{
     let workers = cfg.workers.clamp(1, n_tasks.max(1));
     let mut tally = StealTally {
         tasks: n_tasks as u64,
@@ -107,6 +130,9 @@ where
     if workers <= 1 || n_tasks <= 1 {
         let mut out = Vec::with_capacity(n_tasks);
         for t in 0..n_tasks {
+            if let Some(c) = cancel {
+                c.check()?;
+            }
             out.push(f(0, t)?);
         }
         return Ok((out, tally));
@@ -146,6 +172,15 @@ where
         let _guard = PanicFlag(&panicked);
         let mut done = Vec::new();
         loop {
+            // 0. Deadline/cancel gate: stop claiming work the moment the
+            // token fires. Already-claimed tasks in peer deques are
+            // simply never executed; the incomplete slots after the join
+            // turn into `DeadlineExceeded`.
+            if let Some(c) = cancel {
+                if c.cancelled() {
+                    break;
+                }
+            }
             // 1. Own deque, hot (LIFO) end.
             let task = deques[w].lock().unwrap().pop_back();
             if let Some(t) = task {
@@ -235,6 +270,14 @@ where
         debug_assert!(slots[t].is_none(), "task {t} executed twice");
         slots[t] = Some(r);
     }
+    if let Some(c) = cancel {
+        // A cancelled run only fails if it actually left work undone —
+        // a deadline that fires after the last task completes changes
+        // nothing.
+        if c.cancelled() && slots.iter().any(|s| s.is_none()) {
+            return Err(DeadlineExceeded.into());
+        }
+    }
     let fe = first_err.load(Ordering::SeqCst);
     if fe != usize::MAX {
         // The minimum failing index was never skipped (skipping only
@@ -276,6 +319,14 @@ pub struct NodeCounters {
     /// whose contiguous span drew the expensive rows shows up here even
     /// though its morsel *count* equals its peers'.
     pub busy_ns: u64,
+    /// Dispatch attempts on this node that failed and were retried
+    /// (injected or caught faults; exactly zero when no fault plan is
+    /// active). Failed attempts contribute only here — their partial
+    /// wire/busy work is not tallied.
+    pub retries: u64,
+    /// 1 on the dispatch that blacklisted this node (then its spans
+    /// reroute to survivors, degrading to the leader).
+    pub blacklisted: u64,
 }
 
 /// Accumulates [`NodeCounters`] across the operators of one query.
@@ -299,6 +350,8 @@ impl ExecTally {
         c.stolen_tasks += delta.stolen_tasks;
         c.wire_bytes += delta.wire_bytes;
         c.busy_ns += delta.busy_ns;
+        c.retries += delta.retries;
+        c.blacklisted += delta.blacklisted;
     }
 
     /// Clear all counters (start of a query).
@@ -321,6 +374,8 @@ impl ExecTally {
             t.stolen_tasks += c.stolen_tasks;
             t.wire_bytes += c.wire_bytes;
             t.busy_ns += c.busy_ns;
+            t.retries += c.retries;
+            t.blacklisted += c.blacklisted;
         }
         t
     }
@@ -407,20 +462,117 @@ mod tests {
         assert!(tally.stolen_tasks >= 1, "{tally:?}");
     }
 
+    /// A real panic mid-run must release every peer worker (no hang)
+    /// and propagate at the join — the `PanicFlag` drop-guard contract,
+    /// previously untested under an actual unwind.
+    #[test]
+    fn panicking_worker_releases_peers_and_propagates() {
+        let started = std::time::Instant::now();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_stealing(64, &StealConfig::new(4, true), |_w, t| {
+                if t == 13 {
+                    panic!("injected panic at task 13");
+                }
+                std::thread::sleep(Duration::from_millis(2));
+                Ok(t)
+            })
+        }));
+        let payload = result.expect_err("panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "injected panic at task 13");
+        // 64 tasks × 2ms on 4 workers is ~32ms fault-free; a stuck peer
+        // would blow far past this generous bound.
+        assert!(
+            started.elapsed() < Duration::from_secs(30),
+            "peers hung after worker panic: {:?}",
+            started.elapsed()
+        );
+    }
+
+    /// An error at task 0 is published before any worker can reach the
+    /// high-index panic task (every other task sleeps first, and claims
+    /// are sequential), so the panic task is skipped via `first_err` and
+    /// the run surfaces the error in task order instead of unwinding.
+    #[test]
+    fn early_error_skips_later_panic_task() {
+        let cfg = StealConfig { workers: 2, chunk: 1, steal: true };
+        let err = run_stealing(64, &cfg, |_w, t| {
+            if t == 0 {
+                anyhow::bail!("task 0 failed");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            if t == 63 {
+                panic!("task 63 must have been skipped");
+            }
+            Ok(t)
+        })
+        .unwrap_err();
+        assert_eq!(err.to_string(), "task 0 failed");
+    }
+
+    #[test]
+    fn cancelled_run_returns_deadline_exceeded() {
+        let token = CancelToken::new();
+        token.cancel();
+        for workers in [1usize, 4] {
+            let err = run_stealing_cancellable(
+                64,
+                &StealConfig::new(workers, true),
+                Some(&token),
+                |_w, t| Ok(t),
+            )
+            .unwrap_err();
+            assert!(err.downcast_ref::<DeadlineExceeded>().is_some(), "workers={workers}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn deadline_cuts_run_short_without_leaking_workers() {
+        let token = CancelToken::with_deadline(Duration::from_millis(20));
+        let started = std::time::Instant::now();
+        // 1000 × 2ms on 2 workers ≈ 1s fault-free; the deadline stops it
+        // at a fraction of that. Scoped threads join before return.
+        let res = run_stealing_cancellable(
+            1000,
+            &StealConfig::new(2, true),
+            Some(&token),
+            |_w, _t| {
+                std::thread::sleep(Duration::from_millis(2));
+                Ok(())
+            },
+        );
+        let err = res.unwrap_err();
+        assert!(err.downcast_ref::<DeadlineExceeded>().is_some(), "{err:#}");
+        assert!(started.elapsed() < Duration::from_millis(900), "{:?}", started.elapsed());
+    }
+
+    #[test]
+    fn unexpired_token_changes_nothing() {
+        let token = CancelToken::with_deadline(Duration::from_secs(3600));
+        let (out, _) =
+            run_stealing_cancellable(64, &StealConfig::new(4, true), Some(&token), |_w, t| Ok(t))
+                .unwrap();
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
     #[test]
     fn tally_accumulates_and_resets() {
         let t = ExecTally::default();
         t.record(0, NodeCounters { morsels: 3, steals: 1, stolen_tasks: 2, ..Default::default() });
         t.record(2, NodeCounters { morsels: 5, wire_bytes: 64, ..Default::default() });
         t.record(0, NodeCounters { morsels: 1, ..Default::default() });
+        t.record(2, NodeCounters { retries: 2, blacklisted: 1, ..Default::default() });
         let snap = t.snapshot();
         assert_eq!(snap.len(), 3);
         assert_eq!(snap[0].morsels, 4);
         assert_eq!(snap[1], NodeCounters::default());
         assert_eq!(snap[2].wire_bytes, 64);
+        assert_eq!(snap[2].retries, 2);
         let totals = t.totals();
         assert_eq!(totals.morsels, 9);
         assert_eq!(totals.steals, 1);
+        assert_eq!(totals.retries, 2);
+        assert_eq!(totals.blacklisted, 1);
         t.reset();
         assert!(t.snapshot().is_empty());
     }

@@ -27,6 +27,11 @@ pub struct QueryRequest {
     pub duration: Duration,
     /// Arrival time (clock nanos).
     pub arrival_nanos: u64,
+    /// Absolute clock instant (nanos) by which the query must be
+    /// admitted. A query still queued past it is dropped with
+    /// [`AdmissionOutcome::TimedOut`] instead of waiting forever
+    /// (None = no deadline).
+    pub deadline_nanos: Option<u64>,
 }
 
 /// A node's bookkeeping: reserved (estimated) and actual usage.
@@ -47,6 +52,12 @@ pub enum AdmissionOutcome {
     /// Admitted but crashed: actual usage blew past node capacity.
     OomKilled {
         node: NodeId,
+        queue_wait: Duration,
+    },
+    /// Deadline expired while the query was still queued — it never
+    /// reached a node. `queue_wait` is the time it spent waiting
+    /// (arrival to deadline).
+    TimedOut {
         queue_wait: Duration,
     },
 }
@@ -92,7 +103,28 @@ impl<'c> WarehouseScheduler<'c> {
     /// blocking is intentional: an over-sized estimate at the head delays
     /// everyone — the queueing-time cost Fig. 5 charges to the static
     /// estimator.
+    /// Drop queued queries whose deadline has passed, recording
+    /// [`AdmissionOutcome::TimedOut`]. Runs before every placement
+    /// sweep so an expired head cannot block the line.
+    fn expire_timed_out(&mut self) {
+        let now = self.clock.now_nanos();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let expired = self.queue[i].deadline_nanos.map_or(false, |d| d <= now);
+            if expired {
+                let q = self.queue.remove(i).expect("index in bounds");
+                let deadline = q.deadline_nanos.expect("expired implies deadline");
+                let queue_wait =
+                    Duration::from_nanos(deadline.saturating_sub(q.arrival_nanos));
+                self.outcomes.push((q.id, AdmissionOutcome::TimedOut { queue_wait }));
+            } else {
+                i += 1;
+            }
+        }
+    }
+
     fn place(&mut self) {
+        self.expire_timed_out();
         while let Some(q) = self.queue.front() {
             // First node with enough estimated headroom.
             let slot = self
@@ -182,12 +214,20 @@ impl<'c> WarehouseScheduler<'c> {
             .count()
     }
 
+    pub fn timed_out_count(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|(_, o)| matches!(o, AdmissionOutcome::TimedOut { .. }))
+            .count()
+    }
+
     pub fn queue_waits(&self) -> Vec<Duration> {
         self.outcomes
             .iter()
             .map(|(_, o)| match o {
                 AdmissionOutcome::Completed { queue_wait, .. }
-                | AdmissionOutcome::OomKilled { queue_wait, .. } => *queue_wait,
+                | AdmissionOutcome::OomKilled { queue_wait, .. }
+                | AdmissionOutcome::TimedOut { queue_wait } => *queue_wait,
             })
             .collect()
     }
@@ -206,6 +246,14 @@ mod tests {
             actual_bytes: actual,
             duration: Duration::from_millis(ms),
             arrival_nanos: arrival,
+            deadline_nanos: None,
+        }
+    }
+
+    fn q_deadline(id: u64, est: u64, ms: u64, deadline_ms: u64) -> QueryRequest {
+        QueryRequest {
+            deadline_nanos: Some(Duration::from_millis(deadline_ms).as_nanos() as u64),
+            ..q(id, est, est, ms, 0)
         }
     }
 
@@ -251,6 +299,90 @@ mod tests {
         s.submit(q(1, 5000, 100, 10, 0));
         s.run_to_completion();
         assert_eq!(s.oom_count(), 1);
+    }
+
+    #[test]
+    fn deadline_expires_while_queued() {
+        let clock = SimClock::new();
+        let mut s = WarehouseScheduler::new(&clock, 1, 1000);
+        // q1 holds the only node for 20 ms; q2's 5 ms deadline expires
+        // while it waits and it never reaches the node.
+        s.submit(q(1, 1000, 900, 20, 0));
+        s.submit(q_deadline(2, 100, 10, 5));
+        s.run_to_completion();
+        assert_eq!(s.timed_out_count(), 1);
+        assert_eq!(s.oom_count(), 0);
+        assert_eq!(s.outcomes().len(), 2);
+        let timed_out = s
+            .outcomes()
+            .iter()
+            .find(|(id, _)| *id == QueryId(2))
+            .map(|(_, o)| o.clone())
+            .unwrap();
+        // It waited exactly arrival → deadline, not arrival → discovery.
+        assert_eq!(
+            timed_out,
+            AdmissionOutcome::TimedOut { queue_wait: Duration::from_millis(5) }
+        );
+    }
+
+    #[test]
+    fn deadline_met_is_not_timed_out() {
+        let clock = SimClock::new();
+        let mut s = WarehouseScheduler::new(&clock, 1, 1000);
+        s.submit(q(1, 1000, 900, 20, 0));
+        // Deadline comfortably after q1's 20 ms: q2 is admitted late
+        // but completes normally.
+        s.submit(q_deadline(2, 100, 10, 50));
+        s.run_to_completion();
+        assert_eq!(s.timed_out_count(), 0);
+        assert_eq!(s.oom_count(), 0);
+        let waits = s.queue_waits();
+        assert!(waits.contains(&Duration::from_millis(20)), "{waits:?}");
+    }
+
+    #[test]
+    fn full_warehouse_queue_wait_accounting() {
+        let clock = SimClock::new();
+        let mut s = WarehouseScheduler::new(&clock, 2, 1000);
+        // Four node-sized queries on two nodes: two admitted at once,
+        // two wait exactly one 10 ms service interval.
+        for i in 0..4 {
+            s.submit(q(i, 1000, 900, 10, 0));
+        }
+        s.run_to_completion();
+        assert_eq!(s.oom_count(), 0);
+        let mut waits = s.queue_waits();
+        waits.sort();
+        assert_eq!(
+            waits,
+            vec![
+                Duration::ZERO,
+                Duration::ZERO,
+                Duration::from_millis(10),
+                Duration::from_millis(10),
+            ]
+        );
+    }
+
+    #[test]
+    fn oom_kill_reports_node_and_wait() {
+        let clock = SimClock::new();
+        let mut s = WarehouseScheduler::new(&clock, 1, 1000);
+        s.submit(q(1, 100, 700, 10, 0));
+        s.submit(q(2, 100, 700, 10, 0));
+        s.run_to_completion();
+        let oom = s
+            .outcomes()
+            .iter()
+            .find(|(_, o)| matches!(o, AdmissionOutcome::OomKilled { .. }))
+            .map(|(id, o)| (*id, o.clone()))
+            .unwrap();
+        assert_eq!(oom.0, QueryId(2));
+        assert_eq!(
+            oom.1,
+            AdmissionOutcome::OomKilled { node: NodeId(0), queue_wait: Duration::ZERO }
+        );
     }
 
     #[test]

@@ -39,11 +39,24 @@ pub struct ShapePolicy {
     /// Total-busy floor (nanoseconds, summed over nodes) below which
     /// the query runs on the leader only.
     pub min_total_load_ns: u64,
+    /// Health observations a node needs before it can be judged flaky
+    /// (below this, benefit of the doubt — keep fanning out to it).
+    pub flaky_min_observations: usize,
+    /// Failing fraction of a node's health window at or above which the
+    /// node is excluded from fan-out (see
+    /// [`StatsFramework::node_flaky`]).
+    pub flaky_failure_rate: f64,
 }
 
 impl Default for ShapePolicy {
     fn default() -> Self {
-        Self { lookback: 5, skew_threshold: 1.5, min_total_load_ns: 2_000_000 }
+        Self {
+            lookback: 5,
+            skew_threshold: 1.5,
+            min_total_load_ns: 2_000_000,
+            flaky_min_observations: 2,
+            flaky_failure_rate: 0.5,
+        }
     }
 }
 
@@ -59,9 +72,18 @@ impl ShapePolicy {
         pool_shape: (usize, usize),
     ) -> (usize, usize) {
         let (pool_nodes, parallelism) = (pool_shape.0.max(1), pool_shape.1.max(1));
+        // Flaky-node clamp (applied to every path, cold start included):
+        // the node-health history is global across statements, so a
+        // fan-out that would include a node whose spans keep failing is
+        // capped below that node's id — its work reroutes to survivors
+        // *before* dispatch instead of through retry/blacklist at
+        // runtime.
+        let clamp = |nodes: usize| {
+            stats.healthy_fanout(nodes, self.flaky_min_observations, self.flaky_failure_rate)
+        };
         let hist = stats.balance_lookback(key, self.lookback);
         if hist.is_empty() {
-            return (pool_nodes, parallelism);
+            return (clamp(pool_nodes), parallelism);
         }
         let n = hist.len() as f64;
         let mean_skew: f64 = hist.iter().map(|b: &NodeBalance| b.skew).sum::<f64>() / n;
@@ -73,7 +95,7 @@ impl ShapePolicy {
         } else {
             pool_nodes
         };
-        (nodes, parallelism)
+        (clamp(nodes), parallelism)
     }
 }
 
@@ -141,6 +163,28 @@ mod tests {
         stats.record_node_balance("q", &[4 * MB], 0); // leader-only run
         assert_eq!(p.pick("q", &stats, (4, 2)), (4, 2));
         stats.record_node_balance("q", &[MB, MB, MB, MB], 0); // 4-node run
+        assert_eq!(p.pick("q", &stats, (4, 2)), (4, 2));
+    }
+
+    #[test]
+    fn flaky_node_caps_fanout() {
+        let stats = StatsFramework::new(8);
+        let p = ShapePolicy::default();
+        // Heavy, balanced history: the policy wants the full pool.
+        for _ in 0..3 {
+            stats.record_node_balance("q", &[50 * MB, 48 * MB, 52 * MB, 49 * MB], 2);
+        }
+        assert_eq!(p.pick("q", &stats, (4, 2)), (4, 2));
+        // Node 2 needed retries in two statements: fan caps at 2.
+        stats.record_node_health(&[0, 0, 4, 0]);
+        stats.record_node_health(&[0, 0, 4, 0]);
+        assert_eq!(p.pick("q", &stats, (4, 2)), (2, 2));
+        // Cold-start picks clamp too.
+        assert_eq!(p.pick("never-seen", &stats, (4, 2)), (2, 2));
+        // Clean statements age the failures out and the fan recovers.
+        for _ in 0..8 {
+            stats.record_node_health(&[0, 0, 0, 0]);
+        }
         assert_eq!(p.pick("q", &stats, (4, 2)), (4, 2));
     }
 

@@ -1,6 +1,6 @@
 //! The historical workload execution stats tracking framework (§IV.B).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;
 
 /// Identifies "the same query" across executions — in production this is
@@ -23,6 +23,11 @@ pub struct StatsFramework {
     pub max_balance_keys: usize,
     inner: Mutex<HashMap<QueryKey, Vec<u64>>>,
     balance: Mutex<HashMap<QueryKey, Vec<NodeBalance>>>,
+    /// Per-node health window, *global* across statements (a flaky node
+    /// is a property of the warehouse, not of one query text). Each
+    /// entry is a bounded ring of pass/fail observations: `true` means
+    /// the node needed at least one span retry during a statement.
+    health: Mutex<Vec<VecDeque<bool>>>,
 }
 
 /// One execution's node-level balance observation (fed from
@@ -73,7 +78,59 @@ impl StatsFramework {
             max_balance_keys: 1024,
             inner: Mutex::new(HashMap::new()),
             balance: Mutex::new(HashMap::new()),
+            health: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Record one statement's per-node failure observation: index `i`
+    /// of `per_node_failures` is node `i`'s span-retry count during the
+    /// statement (the engine's `NodeCounters::retries`). A node with
+    /// any retry is marked unhealthy for this observation. Windows are
+    /// bounded by `max_history` like the memory history.
+    pub fn record_node_health(&self, per_node_failures: &[u64]) {
+        if per_node_failures.is_empty() {
+            return;
+        }
+        let mut health = self.health.lock().unwrap();
+        if health.len() < per_node_failures.len() {
+            health.resize_with(per_node_failures.len(), VecDeque::new);
+        }
+        for (node, &fails) in per_node_failures.iter().enumerate() {
+            let w = &mut health[node];
+            w.push_back(fails > 0);
+            while w.len() > self.max_history {
+                w.pop_front();
+            }
+        }
+    }
+
+    /// Whether `node` looks flaky: at least `min_obs` health
+    /// observations exist and the failing fraction is ≥ `rate`.
+    /// Unknown nodes (no observations) are healthy.
+    pub fn node_flaky(&self, node: usize, min_obs: usize, rate: f64) -> bool {
+        let health = self.health.lock().unwrap();
+        let Some(w) = health.get(node) else { return false };
+        let obs = w.len();
+        if obs < min_obs.max(1) {
+            return false;
+        }
+        let fails = w.iter().filter(|&&f| f).count();
+        fails as f64 >= rate * obs as f64
+    }
+
+    /// The largest fan-out ≤ `want` whose remote nodes (1..fan) all
+    /// look healthy: the first flaky node id caps the fan, so a fleet
+    /// with node 2 flaky runs `(2, P)` instead of `(4, P)`. The leader
+    /// (node 0) never caps the fan — it is never fault-injected and
+    /// always participates.
+    pub fn healthy_fanout(&self, want: usize, min_obs: usize, rate: f64) -> usize {
+        let fan = want.max(1);
+        for node in 1..fan {
+            if self.node_flaky(node, min_obs, rate) {
+                return node;
+            }
+        }
+        fan
     }
 
     /// Record one execution's per-node load observations (busy
@@ -230,6 +287,45 @@ mod tests {
         // ...but known keys keep accumulating.
         f.record_node_balance("a", &[9, 1], 3);
         assert_eq!(f.balance_lookback("a", 4).len(), 2);
+    }
+
+    #[test]
+    fn node_health_window_flags_flaky_nodes() {
+        let f = StatsFramework::new(10);
+        // No observations: everyone is healthy, fan-out unclamped.
+        assert!(!f.node_flaky(1, 2, 0.5));
+        assert_eq!(f.healthy_fanout(4, 2, 0.5), 4);
+        // Node 1 fails in both of two statements, node 2 in neither.
+        f.record_node_health(&[0, 3, 0, 0]);
+        f.record_node_health(&[0, 1, 0, 0]);
+        assert!(f.node_flaky(1, 2, 0.5));
+        assert!(!f.node_flaky(2, 2, 0.5));
+        // One observation is below the min_obs floor.
+        assert!(!f.node_flaky(1, 3, 0.5));
+        // The first flaky node id caps the fan; the leader never does.
+        assert_eq!(f.healthy_fanout(4, 2, 0.5), 1);
+        assert_eq!(f.healthy_fanout(1, 2, 0.5), 1);
+        // Empty observations are ignored.
+        f.record_node_health(&[]);
+        assert!(!f.node_flaky(0, 1, 0.5));
+    }
+
+    #[test]
+    fn node_health_window_is_bounded_and_heals() {
+        let f = StatsFramework::new(4);
+        f.record_node_health(&[0, 5]);
+        f.record_node_health(&[0, 5]);
+        assert!(f.node_flaky(1, 2, 0.5));
+        // Four clean statements push the failures out of the window.
+        for _ in 0..4 {
+            f.record_node_health(&[0, 0]);
+        }
+        assert!(!f.node_flaky(1, 2, 0.5));
+        assert_eq!(f.healthy_fanout(2, 2, 0.5), 2);
+        // A later statement can widen the fleet view.
+        f.record_node_health(&[0, 0, 7]);
+        f.record_node_health(&[0, 0, 7]);
+        assert_eq!(f.healthy_fanout(4, 2, 0.5), 2);
     }
 
     #[test]

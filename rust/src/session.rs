@@ -4,12 +4,15 @@
 //! the Python client.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::dataframe::DataFrame;
 use crate::engine::exchange::{run_udf_exchange, ExchangeConfig, ExchangeMode, ExchangeReport};
+use crate::engine::fault::{default_fault_scope, CancelToken, FaultPlan, FaultScope};
 use crate::engine::{Catalog, ExecContext};
 use crate::runtime::XlaService;
 use crate::scheduler::{ShapePolicy, StatsFramework};
@@ -39,6 +42,8 @@ pub struct SessionBuilder {
     parallelism: Option<usize>,
     nodes: Option<usize>,
     adaptive_shape: Option<bool>,
+    query_timeout: Option<Duration>,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl SessionBuilder {
@@ -86,6 +91,26 @@ impl SessionBuilder {
         self
     }
 
+    /// Bound every statement's wall time (`snowparkd run-sql --timeout
+    /// MS`): a query that outlives the deadline returns a clean
+    /// [`crate::engine::fault::DeadlineExceeded`] error instead of
+    /// hanging — cooperative cancellation checked at operator entry and
+    /// morsel boundaries, with every worker joined on the way out.
+    pub fn query_timeout(mut self, timeout: Duration) -> Self {
+        self.query_timeout = Some(timeout);
+        self
+    }
+
+    /// Inject deterministic faults into every statement's node dispatch
+    /// (`snowparkd run-sql --fault-plan SPEC`; see
+    /// [`FaultPlan::parse`] for the spec grammar). Each statement gets a
+    /// fresh [`FaultScope`], so count-based triggers re-arm per query.
+    /// Without this, the `SNOWPARK_FAULT_PLAN` env var applies.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     /// Attach AOT artifacts (enables the XLA-backed vectorized UDFs).
     pub fn artifacts(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
         self.artifacts_dir = Some(dir.into());
@@ -126,6 +151,9 @@ impl SessionBuilder {
             shape_policy: ShapePolicy::default(),
             balance_stats: StatsFramework::new(32),
             partitioned: RwLock::new(HashMap::new()),
+            query_timeout: self.query_timeout,
+            fault_plan: self.fault_plan,
+            deadline_exceeded: AtomicU64::new(0),
         });
         if let Some(rt) = &session.runtime {
             crate::runtime::kernels::register_xla_udfs(&session, rt.clone())?;
@@ -162,6 +190,13 @@ pub struct Session {
     /// Partitioned tables: name → per-node rowsets (the source rowset
     /// operator's placement for §IV.C).
     partitioned: RwLock<HashMap<String, Vec<RowSet>>>,
+    /// Per-statement wall-time bound (None = unbounded).
+    query_timeout: Option<Duration>,
+    /// Fault-injection plan applied to every statement (None = the
+    /// `SNOWPARK_FAULT_PLAN` env var, else no injection).
+    fault_plan: Option<FaultPlan>,
+    /// Statements this session aborted with `DeadlineExceeded`.
+    deadline_exceeded: AtomicU64,
 }
 
 impl Session {
@@ -173,6 +208,8 @@ impl Session {
             parallelism: None,
             nodes: None,
             adaptive_shape: None,
+            query_timeout: None,
+            fault_plan: None,
         }
     }
 
@@ -318,7 +355,24 @@ impl Session {
             fragments: crate::engine::default_fragments(),
             transport: self.pool_config.map(|c| c.transport).unwrap_or_default(),
             tally: Arc::new(crate::engine::ExecTally::default()),
+            // A fresh scope per statement: count-based triggers and the
+            // blacklist re-arm on every query, like a real transient
+            // outage would look to consecutive statements.
+            fault: self
+                .fault_plan
+                .clone()
+                .map(FaultScope::new)
+                .or_else(default_fault_scope),
+            cancel: self.query_timeout.map(CancelToken::with_deadline),
+            fault_retry: true,
         }
+    }
+
+    /// Statements this session aborted with
+    /// [`crate::engine::fault::DeadlineExceeded`] (the per-session
+    /// deadline counter behind `--stats`).
+    pub fn deadline_exceeded_count(&self) -> u64 {
+        self.deadline_exceeded.load(Ordering::Relaxed)
     }
 
     /// Run a SQL statement on the leader.
@@ -334,15 +388,36 @@ impl Session {
     /// nobody consults would only accumulate.)
     pub fn sql_with_stats(&self, text: &str) -> Result<(RowSet, crate::engine::QueryStats)> {
         let ctx = self.exec_context_for(text);
-        let (out, stats) = crate::engine::run_sql_with_stats(text, &ctx)?;
-        if self.adaptive {
-            self.balance_stats.record_node_balance(
-                text,
-                &stats.per_node_busy_ns(),
-                stats.total_steals(),
-            );
+        let res = crate::engine::run_sql_with_stats(text, &ctx);
+        // Node-health observations feed the shape policy on success AND
+        // failure (the tally survives an aborted statement): a node that
+        // kept failing this statement should stop being picked for the
+        // next one. Recorded only for multi-node dispatches — a
+        // leader-only run observes nothing about remote health.
+        let node_snapshot = ctx.tally.snapshot();
+        if self.adaptive && node_snapshot.len() > 1 {
+            let per_node_failures: Vec<u64> =
+                node_snapshot.iter().map(|c| c.retries).collect();
+            self.balance_stats.record_node_health(&per_node_failures);
         }
-        Ok((out, stats))
+        match res {
+            Ok((out, stats)) => {
+                if self.adaptive {
+                    self.balance_stats.record_node_balance(
+                        text,
+                        &stats.per_node_busy_ns(),
+                        stats.total_steals(),
+                    );
+                }
+                Ok((out, stats))
+            }
+            Err(e) => {
+                if crate::engine::fault::is_deadline_exceeded(&e) {
+                    self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Open a DataFrame on a table.
@@ -615,6 +690,88 @@ mod tests {
         let single = make(1).sql(q).unwrap();
         let multi = make(3).sql(q).unwrap();
         assert_eq!(single, multi);
+    }
+
+    fn register_big_table(s: &Session) {
+        let rows = 20_000usize;
+        s.catalog().register(
+            "t",
+            RowSet::new(
+                Schema::new(vec![Field::new("x", DataType::Float64)]),
+                vec![Column::from_f64((0..rows).map(|i| (i % 997) as f64).collect())],
+            )
+            .unwrap(),
+        );
+    }
+
+    #[test]
+    fn query_timeout_surfaces_deadline_exceeded() {
+        // A 2-node session with a 120s injected stall on node 1 and a
+        // 200ms deadline: the statement must return DeadlineExceeded
+        // promptly instead of hanging, and the session counts it.
+        let s = Session::builder()
+            .nodes(2)
+            .parallelism(2)
+            .adaptive_shape(false)
+            .query_timeout(Duration::from_millis(200))
+            .fault_plan(FaultPlan::parse("seed=1;slow=1:120000").unwrap())
+            .build()
+            .unwrap();
+        register_big_table(&s);
+        let started = std::time::Instant::now();
+        let err = s.sql("SELECT x, COUNT(*) AS n FROM t GROUP BY x").unwrap_err();
+        assert!(crate::engine::fault::is_deadline_exceeded(&err), "{err:#}");
+        assert!(started.elapsed() < Duration::from_secs(30), "{:?}", started.elapsed());
+        assert_eq!(s.deadline_exceeded_count(), 1);
+        // An untimed statement on a fresh session still works.
+        let s2 = Session::builder().nodes(1).parallelism(2).build().unwrap();
+        register_big_table(&s2);
+        assert!(s2.sql("SELECT COUNT(*) AS n FROM t").is_ok());
+        assert_eq!(s2.deadline_exceeded_count(), 0);
+    }
+
+    #[test]
+    fn flaky_node_health_caps_adaptive_fanout() {
+        let s = Session::builder()
+            .pool(PoolConfig { nodes: 4, procs_per_node: 2, ..Default::default() })
+            .adaptive_shape(true)
+            .build()
+            .unwrap();
+        assert_eq!(s.planned_shape("SELECT 1"), (4, 2));
+        // Two observations of node 1 failing: flaky → fan-out capped
+        // below it.
+        s.query_balance_stats().record_node_health(&[0, 3, 0, 0]);
+        s.query_balance_stats().record_node_health(&[0, 2, 0, 0]);
+        assert_eq!(s.planned_shape("SELECT 1"), (1, 2));
+        // Clean statements age the failures out and the shape recovers.
+        for _ in 0..16 {
+            s.query_balance_stats().record_node_health(&[0, 0, 0, 0]);
+        }
+        assert_eq!(s.planned_shape("SELECT 1"), (4, 2));
+    }
+
+    #[test]
+    fn sql_failures_feed_node_health() {
+        // An adaptive session whose fault plan makes node 1 fail every
+        // shipment: after two statements' worth of observed retries, the
+        // shape policy stops fanning out past the flaky node.
+        let s = Session::builder()
+            .pool(PoolConfig { nodes: 2, procs_per_node: 2, ..Default::default() })
+            .adaptive_shape(true)
+            .fault_plan(FaultPlan::parse("seed=2;ship=1:99").unwrap())
+            .build()
+            .unwrap();
+        register_big_table(&s);
+        // Two *distinct* statements (balance history is keyed by text,
+        // so each starts cold at the pool shape and actually fans out),
+        // giving two global health observations of node 1 failing.
+        // Recovery keeps both statements correct while node 1 burns.
+        assert!(s.sql("SELECT x, COUNT(*) AS n FROM t GROUP BY x").is_ok());
+        assert!(s.sql("SELECT x, SUM(x) AS sx FROM t GROUP BY x").is_ok());
+        assert!(s.query_balance_stats().node_flaky(1, 2, 0.5));
+        // A brand-new statement (no balance history of its own) now
+        // plans leader-only: the health clamp, not the balance rule.
+        assert_eq!(s.planned_shape("SELECT COUNT(*) AS n FROM t").0, 1);
     }
 
     #[test]

@@ -57,6 +57,17 @@ pub struct RemoteJobOutcome {
     pub bytes_moved: u64,
 }
 
+/// Bytes of a `total`-byte transfer completed by `elapsed`, for a
+/// transfer phase occupying `[phase_start, phase_start + phase_len)`
+/// of the attempt timeline.
+fn partial_bytes(total: u64, elapsed: Duration, phase_start: Duration, phase_len: Duration) -> u64 {
+    if elapsed <= phase_start || phase_len.is_zero() {
+        return 0;
+    }
+    let done = (elapsed - phase_start).min(phase_len);
+    (total as f64 * (done.as_secs_f64() / phase_len.as_secs_f64())) as u64
+}
+
 /// A simulated remote cluster.
 pub struct RemoteCluster {
     pub model: RemoteCostModel,
@@ -79,6 +90,7 @@ impl RemoteCluster {
         rng: &mut Rng,
     ) -> RemoteJobOutcome {
         let m = &self.model;
+        let start = clock.now();
         let mut attempts = 0u32;
         let mut bytes_moved = 0u64;
         loop {
@@ -87,24 +99,38 @@ impl RemoteCluster {
             let wire_out = Duration::from_secs_f64(input_bytes as f64 / m.wire_bytes_per_sec);
             let remote_compute =
                 Duration::from_secs_f64(compute.as_secs_f64() / m.compute_speedup);
-            let attempt_time = m.job_startup + export + wire_out + remote_compute;
-            // Failures strike mid-run: charge a uniformly-random fraction
-            // of the attempt, then retry.
-            if rng.bool(m.failure_rate) {
-                let frac = rng.f64();
-                clock.sleep(Duration::from_secs_f64(attempt_time.as_secs_f64() * frac));
-                bytes_moved += (input_bytes as f64 * frac) as u64;
-                continue;
-            }
             let wire_back =
                 Duration::from_secs_f64(output_bytes as f64 / m.wire_bytes_per_sec);
             let import =
                 Duration::from_secs_f64(output_bytes as f64 / m.import_bytes_per_sec);
-            clock.sleep(attempt_time + wire_back + import);
+            let full = m.job_startup + export + wire_out + remote_compute + wire_back + import;
+            // Failures strike uniformly at random through the *whole*
+            // pipeline (a job can die while writing results back, not
+            // just on the way out). A failed attempt still paid for
+            // whatever crossed the wire before it died: the input
+            // prefix shipped during its wire-out window and any
+            // partially-written output during its wire-back window.
+            if rng.bool(m.failure_rate) {
+                let elapsed = full.mul_f64(rng.f64());
+                clock.sleep(elapsed);
+                let wire_out_start = m.job_startup + export;
+                let wire_back_start = wire_out_start + wire_out + remote_compute;
+                bytes_moved += partial_bytes(input_bytes, elapsed, wire_out_start, wire_out);
+                bytes_moved += partial_bytes(output_bytes, elapsed, wire_back_start, wire_back);
+                continue;
+            }
+            clock.sleep(full);
             bytes_moved += input_bytes + output_bytes;
             let egress_dollars =
                 bytes_moved as f64 / (1u64 << 30) as f64 * m.egress_cost_per_gib;
-            return RemoteJobOutcome { wall: clock.now(), attempts, egress_dollars, bytes_moved };
+            // On a reused clock `now()` includes every prior job: the
+            // outcome reports *this* job's wall, not the absolute time.
+            return RemoteJobOutcome {
+                wall: clock.now() - start,
+                attempts,
+                egress_dollars,
+                bytes_moved,
+            };
         }
     }
 
@@ -175,6 +201,49 @@ mod tests {
         }
         assert!(attempts > 25, "attempts={attempts}");
         assert!(clock_flaky.now() > clock_stable.now());
+    }
+
+    #[test]
+    fn reused_clock_reports_per_job_wall() {
+        let clock = SimClock::new();
+        let mut rng = Rng::new(3);
+        let c = RemoteCluster::new(RemoteCostModel { failure_rate: 0.0, ..Default::default() });
+        let first = c.run_job(1 << 28, 1 << 20, Duration::from_secs(10), &clock, &mut rng);
+        let second = c.run_job(1 << 28, 1 << 20, Duration::from_secs(10), &clock, &mut rng);
+        // Identical jobs on a shared clock report identical per-job
+        // walls while the clock itself accumulates both.
+        assert!(first.wall > Duration::ZERO);
+        assert_eq!(second.wall, first.wall);
+        assert_eq!(clock.now(), first.wall + second.wall);
+    }
+
+    #[test]
+    fn failed_attempts_charge_partial_transfer_bytes() {
+        // Collapse the timeline to pure wire time (no startup, instant
+        // export/import, zero compute) so a failed attempt's byte
+        // charge is exactly the transferred prefix — including output
+        // bytes when the failure lands in the wire-back window.
+        let cluster = RemoteCluster::new(RemoteCostModel {
+            export_bytes_per_sec: f64::INFINITY,
+            import_bytes_per_sec: f64::INFINITY,
+            wire_bytes_per_sec: 1.0e6,
+            job_startup: Duration::ZERO,
+            failure_rate: 0.5,
+            ..Default::default()
+        });
+        let mut saw_failed_attempt_charge = false;
+        for seed in 0..32 {
+            let clock = SimClock::new();
+            let mut rng = Rng::new(seed);
+            let o = cluster.run_job(1_000_000, 1_000_000, Duration::ZERO, &clock, &mut rng);
+            // The successful attempt always moves the full payload;
+            // failed attempts can only add to it.
+            assert!(o.bytes_moved >= 2_000_000, "seed {seed}: {}", o.bytes_moved);
+            if o.attempts > 1 && o.bytes_moved > 2_000_000 {
+                saw_failed_attempt_charge = true;
+            }
+        }
+        assert!(saw_failed_attempt_charge);
     }
 
     #[test]
