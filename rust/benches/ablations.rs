@@ -13,9 +13,14 @@ use snowpark::types::{Column, DataType, Field, RowSet, RowSetBuilder, Schema, Va
 use snowpark::udf::UdfRegistry;
 use snowpark::packages::{Installer, LatencyModel, PackageUniverse, Prefetcher, Solver, SolverCache};
 use snowpark::scheduler::{
-    DynamicEstimator, MemoryEstimator, QueryRequest, StatsFramework, WarehouseScheduler,
+    AdmissionConfig, AdmissionPolicy, DynamicEstimator, MemoryEstimator, QueryRequest,
+    StatsFramework, WarehouseScheduler,
 };
-use snowpark::sim::{memory_workloads, InitTrace};
+use snowpark::server::{Server, ServerConfig, SessionFactory};
+use snowpark::session::Session;
+use snowpark::sim::{
+    memory_workloads, run_load, Arrival, InitTrace, LoadConfig, TpcxBbDataset, SERVING_CATALOG,
+};
 use snowpark::util::clock::{Clock, SimClock};
 use snowpark::util::histogram::Sampled;
 use snowpark::util::ids::{QueryId, WarehouseId};
@@ -782,6 +787,81 @@ fn ablate_exchange_codec() -> Vec<String> {
     json
 }
 
+/// A13: serving tail latency under concurrent mixed traffic — FIFO
+/// admit-all vs the paper-style admission gate (per-statement memory
+/// estimates from execution history + backfill placement). A real server
+/// loop: TCP, frames, session pool, closed-loop clients.
+fn ablate_serving_latency() -> Vec<String> {
+    println!("\n-- A13: serving latency (admit-all vs estimated backfill, mixed small/heavy) --");
+    let (rows, clients, requests) = if quick_mode() { (20_000, 12, 3) } else { (60_000, 32, 6) };
+    // One shared dataset for both policies — identical tables, identical
+    // statement plans; only the admission policy differs.
+    let catalog = Arc::new(Catalog::new());
+    TpcxBbDataset::generate(rows, 4, 1.4, 7).register_merged(&catalog).unwrap();
+    let mut table = Table::new(&[
+        "policy", "p50 (ms)", "p95 (ms)", "p99 (ms)", "qps", "queue wait (ms)", "rejected",
+    ]);
+    let mut json = Vec::new();
+    for (label, policy) in
+        [("admit-all", AdmissionPolicy::AdmitAll), ("backfill", AdmissionPolicy::Backfill)]
+    {
+        let cat = Arc::clone(&catalog);
+        let factory: SessionFactory = Box::new(move |_tenant| {
+            Session::builder().shared_catalog(Arc::clone(&cat)).build().map(Arc::new)
+        });
+        let server = Server::start(
+            ServerConfig {
+                admission: AdmissionConfig { slots: 4, capacity_bytes: 8 << 20, policy },
+                cold_estimate_bytes: 1 << 20,
+                ..ServerConfig::default()
+            },
+            factory,
+        )
+        .unwrap();
+        let cfg = LoadConfig {
+            tenants: 2,
+            clients,
+            requests_per_client: requests,
+            arrival: Arrival::Closed { think_ms: 0 },
+            zipf_s: 1.1,
+            seed: 7,
+            timeout_ms: 0,
+        };
+        let report = run_load(server.addr(), SERVING_CATALOG, &cfg).unwrap();
+        let snap = server.shutdown();
+        assert_eq!(snap.lost(), 0, "{label}: server lost statements");
+        assert_eq!(snap.worker_panics, 0, "{label}: server worker panicked");
+        assert!(report.accounted(), "{label}: client ledger does not balance");
+        let rejected = report.admission_timeouts();
+        table.row(&[
+            label.to_string(),
+            format!("{:.1}", report.p50_ms),
+            format!("{:.1}", report.p95_ms),
+            format!("{:.1}", report.p99_ms),
+            format!("{:.0}", report.qps()),
+            format!("{:.2}", report.mean_queue_wait_ms),
+            format!("{rejected}"),
+        ]);
+        json.push(format!(
+            "{{\"bench\":\"serving_latency\",\"policy\":\"{label}\",\"clients\":{clients},\
+             \"statements\":{},\"p50_ms\":{:.2},\"p95_ms\":{:.2},\"p99_ms\":{:.2},\
+             \"qps\":{:.1},\"mean_queue_wait_ms\":{:.3},\"admission_timeouts\":{rejected},\
+             \"deadline_exceeded\":{},\"exec_errors\":{}}}",
+            report.sent(),
+            report.p50_ms,
+            report.p95_ms,
+            report.p99_ms,
+            report.qps(),
+            report.mean_queue_wait_ms,
+            report.deadline_exceeded(),
+            report.exec_errors(),
+        ));
+    }
+    table.print();
+    println!("(target: estimated backfill beats admit-all on p95 for the small-statement bulk)");
+    json
+}
+
 /// Record the engine microbench trajectory where the driver (and
 /// EXPERIMENTS.md) can quote it.
 fn write_bench_json(rows: &[String]) {
@@ -805,7 +885,8 @@ fn main() {
          expression kernels, exchange batch codec, morsel parallelism, \
          distributed morsel dispatch (static vs stealing), pipeline \
          fragments (fragment vs operator-at-a-time node dispatch), \
-         fault recovery (armed-dispatch overhead, retry vs rerun).",
+         fault recovery (armed-dispatch overhead, retry vs rerun), \
+         serving latency (admit-all vs estimated-backfill admission).",
     );
     if quick_mode() {
         println!("(SNOWPARK_BENCH_QUICK set: reduced rows/iterations)");
@@ -822,5 +903,6 @@ fn main() {
     json.extend(ablate_distributed_morsels());
     json.extend(ablate_pipeline_fragments());
     json.extend(ablate_fault_recovery());
+    json.extend(ablate_serving_latency());
     write_bench_json(&json);
 }

@@ -4,7 +4,12 @@
 //! - `info` — environment + artifact status;
 //! - `run-sql "<sql>"` — execute a statement against demo tables;
 //! - `repl`-less batch `demo` — run the quickstart pipeline;
-//! - `serve --queries N` — drive the cluster path on a generated
+//! - `serve` — long-running multi-tenant TCP server: length-prefixed
+//!   binary frames, per-statement admission control, shared catalog;
+//! - `loadtest` — closed/open-loop load harness against a serve
+//!   endpoint (or an in-process one with `--self`), failing on any
+//!   lost or unaccounted statement — the CI smoke entry point;
+//! - `udf-drive --queries N` — drive the cluster path on a generated
 //!   TPCx-BB-like workload and print throughput (the end-to-end loop).
 
 use std::sync::Arc;
@@ -12,9 +17,11 @@ use std::time::Duration;
 
 use crate::dataframe::{col, lit};
 use crate::engine::exchange::ExchangeMode;
-use crate::engine::FaultPlan;
+use crate::engine::{Catalog, FaultPlan};
+use crate::scheduler::{AdmissionConfig, AdmissionPolicy};
+use crate::server::{Server, ServerConfig, SessionFactory};
 use crate::session::Session;
-use crate::sim::TpcxBbDataset;
+use crate::sim::{Arrival, LoadConfig, TpcxBbDataset, SERVING_CATALOG};
 use crate::util::cli::ParsedArgs;
 use crate::warehouse::PoolConfig;
 
@@ -26,7 +33,30 @@ USAGE:
   snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T] \
 [--nodes N] [--adaptive-shape] [--timeout MS] [--fault-plan SPEC]
   snowparkd demo
-  snowparkd serve [--queries N] [--nodes N] [--procs N] [--rows N] [--mode auto|local|rr]
+  snowparkd serve [--host H] [--port P] [--rows N] [--seed S] [--slots K] \
+[--capacity-mb M] [--policy backfill|fifo|admit-all] [--max-tenants N] [--duration-s S]
+  snowparkd loadtest [--addr H:P | --self] [--clients N] [--tenants N] [--requests N] \
+[--seed S] [--timeout-ms MS] [--think-ms MS | --rate R] [--zipf S] \
+[--rows N] [--slots K] [--capacity-mb M] [--policy P]
+  snowparkd udf-drive [--queries N] [--nodes N] [--procs N] [--rows N] [--mode auto|local|rr]
+
+serve binds a TCP endpoint speaking the length-prefixed frame protocol
+(Hello, Query, Result, Error — see docs/ARCHITECTURE.md for the
+grammar). Every tenant shares one generated TPCx-BB-style catalog;
+each statement is memory-estimated from its own execution history
+(K=5, P=100, F=1.2 over per-key stats) and waits at the admission
+gate for a reservation before running — `--policy backfill` (default)
+lets small statements jump a queued large scan, `fifo` makes the
+queue strict, `admit-all` disables control. `--duration-s 0`
+(default) serves until killed. Port 0 picks a free port.
+
+loadtest expands a seeded plan (tenant mix, Zipf statement popularity
+over a fixed catalog, think/inter-arrival gaps) into one thread per
+client and drives every statement through a real server loop —
+`--self` boots an in-process server first. Prints per-tenant outcome
+counts, latency percentiles, and QPS; exits nonzero if any statement
+is lost or unaccounted, any reply violates the protocol, or a server
+worker panics. Same seed, same schedule.
 
 --parallelism T caps the engine's morsel worker threads per node
 (default: the SNOWPARK_PARALLELISM env var, else the host's cores;
@@ -57,7 +87,7 @@ Artifacts: set SNOWPARK_ARTIFACTS or run `make artifacts` for XLA UDFs.";
 
 pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let parsed = match ParsedArgs::parse(args, &["help", "stats", "adaptive-shape"]) {
+    let parsed = match ParsedArgs::parse(args, &["help", "stats", "adaptive-shape", "self"]) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -69,6 +99,8 @@ pub fn main() {
         Some("run-sql") => run_sql(&parsed),
         Some("demo") => demo(),
         Some("serve") => serve(&parsed),
+        Some("loadtest") => loadtest(&parsed),
+        Some("udf-drive") => udf_drive(&parsed),
         _ => {
             println!("{USAGE}");
             Ok(())
@@ -80,7 +112,8 @@ pub fn main() {
     }
 }
 
-fn session_with_data(
+/// Knobs for [`session_with_data`] — the demo/bench session shape.
+struct SessionOpts {
     rows: usize,
     seed: u64,
     pool: Option<PoolConfig>,
@@ -89,24 +122,41 @@ fn session_with_data(
     adaptive_shape: bool,
     timeout: Option<Duration>,
     fault_plan: Option<FaultPlan>,
-) -> anyhow::Result<Arc<Session>> {
+}
+
+impl Default for SessionOpts {
+    fn default() -> Self {
+        SessionOpts {
+            rows: 5_000,
+            seed: 42,
+            pool: None,
+            parallelism: None,
+            nodes: None,
+            adaptive_shape: false,
+            timeout: None,
+            fault_plan: None,
+        }
+    }
+}
+
+fn session_with_data(opts: SessionOpts) -> anyhow::Result<Arc<Session>> {
     let mut b = Session::builder();
-    if let Some(p) = pool {
+    if let Some(p) = opts.pool {
         b = b.pool(p);
     }
-    if let Some(t) = parallelism {
+    if let Some(t) = opts.parallelism {
         b = b.parallelism(t);
     }
-    if let Some(n) = nodes {
+    if let Some(n) = opts.nodes {
         b = b.nodes(n);
     }
-    if adaptive_shape {
+    if opts.adaptive_shape {
         b = b.adaptive_shape(true);
     }
-    if let Some(t) = timeout {
+    if let Some(t) = opts.timeout {
         b = b.query_timeout(t);
     }
-    if let Some(f) = fault_plan {
+    if let Some(f) = opts.fault_plan {
         b = b.fault_plan(f);
     }
     let artifacts = crate::runtime::XlaRuntime::default_dir();
@@ -114,8 +164,15 @@ fn session_with_data(
         b = b.artifacts(artifacts);
     }
     let s = b.build()?;
-    let ds = TpcxBbDataset::generate(rows, 4, 1.4, seed);
+    let ds = TpcxBbDataset::generate(opts.rows, 4, 1.4, opts.seed);
     ds.register(&s)?;
+    attach_sim_udfs(&s);
+    Ok(s)
+}
+
+/// Copy the 12 TPCx-BB UDFs onto a session so served/driven SQL can call
+/// them.
+fn attach_sim_udfs(s: &Session) {
     let mut reg = s.udfs();
     crate::sim::register_udfs(&mut reg);
     for q in crate::sim::TPCXBB_QUERIES {
@@ -123,7 +180,6 @@ fn session_with_data(
         s.register_scalar_udf(&u.name, u.return_type, u.body.clone());
         s.set_udf_row_cost(&u.name, u.est_row_cost_ns);
     }
-    Ok(s)
 }
 
 fn info() -> anyhow::Result<()> {
@@ -161,16 +217,16 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         let plan = FaultPlan::parse(fault_spec)?;
         (!plan.is_empty()).then_some(plan)
     };
-    let s = session_with_data(
+    let s = session_with_data(SessionOpts {
         rows,
         seed,
-        None,
-        (parallelism > 0).then_some(parallelism),
-        (nodes > 0).then_some(nodes),
-        args.flag("adaptive-shape"),
-        (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms)),
+        parallelism: (parallelism > 0).then_some(parallelism),
+        nodes: (nodes > 0).then_some(nodes),
+        adaptive_shape: args.flag("adaptive-shape"),
+        timeout: (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms)),
         fault_plan,
-    )?;
+        ..SessionOpts::default()
+    })?;
     if args.flag("stats") {
         let (out, stats) = s.sql_with_stats(sql)?;
         println!("{out}");
@@ -185,7 +241,7 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
 }
 
 fn demo() -> anyhow::Result<()> {
-    let s = session_with_data(5_000, 42, None, None, None, false, None, None)?;
+    let s = session_with_data(SessionOpts::default())?;
     println!("-- DataFrame API: top categories by revenue --");
     let df = s
         .table("store_sales")
@@ -200,7 +256,187 @@ fn demo() -> anyhow::Result<()> {
     Ok(())
 }
 
+fn parse_policy(name: &str) -> AdmissionPolicy {
+    match name {
+        "fifo" => AdmissionPolicy::Fifo,
+        "admit-all" => AdmissionPolicy::AdmitAll,
+        _ => AdmissionPolicy::Backfill,
+    }
+}
+
+/// Shared-catalog session factory for the serving layer: every tenant
+/// sees the same merged TPCx-BB-style tables + sim UDFs, with private
+/// per-tenant engine state.
+fn serving_factory(rows: usize, seed: u64) -> anyhow::Result<SessionFactory> {
+    let catalog = Arc::new(Catalog::new());
+    TpcxBbDataset::generate(rows, 4, 1.4, seed).register_merged(&catalog)?;
+    Ok(Box::new(move |_tenant| {
+        let s = Session::builder().shared_catalog(Arc::clone(&catalog)).build().map(Arc::new)?;
+        attach_sim_udfs(&s);
+        Ok(s)
+    }))
+}
+
+fn server_config_from(args: &ParsedArgs, addr: String) -> anyhow::Result<ServerConfig> {
+    let slots = args.get_usize("slots", 4).map_err(anyhow::Error::msg)?;
+    let capacity_mb = args.get_u64("capacity-mb", 8).map_err(anyhow::Error::msg)?;
+    let max_tenants = args.get_usize("max-tenants", 16).map_err(anyhow::Error::msg)?;
+    Ok(ServerConfig {
+        addr,
+        admission: AdmissionConfig {
+            slots,
+            capacity_bytes: capacity_mb << 20,
+            policy: parse_policy(args.get_or("policy", "backfill")),
+        },
+        max_tenants,
+        ..ServerConfig::default()
+    })
+}
+
 fn serve(args: &ParsedArgs) -> anyhow::Result<()> {
+    let host = args.get_or("host", "127.0.0.1");
+    let port = args.get_u64("port", 8744).map_err(anyhow::Error::msg)?;
+    let rows = args.get_usize("rows", 20_000).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    let duration_s = args.get_u64("duration-s", 0).map_err(anyhow::Error::msg)?;
+    let cfg = server_config_from(args, format!("{host}:{port}"))?;
+    let policy = cfg.admission.policy;
+    let (slots, cap) = (cfg.admission.slots, cfg.admission.capacity_bytes);
+    let server = Server::start(cfg, serving_factory(rows, seed)?)?;
+    println!("snowparkd serving on {}", server.addr());
+    println!(
+        "  admission: {slots} slots × {} MiB, policy {policy:?}; catalog rows/table ≈ {rows}",
+        cap >> 20
+    );
+    if duration_s == 0 {
+        // Until killed.
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration_s));
+    let per_tenant = server.tenant_stats();
+    let snap = server.shutdown();
+    println!(
+        "served {} statements ({} ok, {} admission-timeout, {} deadline, {} exec-err, {} protocol-err) over {} connections",
+        snap.queries,
+        snap.completed,
+        snap.admission_timeouts,
+        snap.deadline_exceeded,
+        snap.exec_errors,
+        snap.protocol_errors,
+        snap.connections
+    );
+    for (tenant, t) in per_tenant {
+        println!("  {tenant}: {} submitted, {} ok, {} rows", t.submitted, t.completed, t.rows_returned);
+    }
+    if snap.lost() > 0 || snap.worker_panics > 0 {
+        anyhow::bail!("{} lost statements, {} worker panics", snap.lost(), snap.worker_panics);
+    }
+    Ok(())
+}
+
+fn loadtest(args: &ParsedArgs) -> anyhow::Result<()> {
+    let clients = args.get_usize("clients", 32).map_err(anyhow::Error::msg)?;
+    let tenants = args.get_usize("tenants", 2).map_err(anyhow::Error::msg)?;
+    let requests = args.get_usize("requests", 6).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    let timeout_ms = args.get_u64("timeout-ms", 0).map_err(anyhow::Error::msg)?;
+    let zipf_s = args.get_f64("zipf", 1.1).map_err(anyhow::Error::msg)?;
+    let rate = args.get_f64("rate", 0.0).map_err(anyhow::Error::msg)?;
+    let think_ms = args.get_u64("think-ms", 0).map_err(anyhow::Error::msg)?;
+    let rows = args.get_usize("rows", 8_000).map_err(anyhow::Error::msg)?;
+    let arrival = if rate > 0.0 {
+        Arrival::Open { rate_per_s: rate }
+    } else {
+        Arrival::Closed { think_ms }
+    };
+    let cfg = LoadConfig {
+        tenants,
+        clients,
+        requests_per_client: requests,
+        arrival,
+        zipf_s,
+        seed,
+        timeout_ms,
+    };
+
+    // --self (or no --addr): boot an in-process server on a free port.
+    let own_server = if args.flag("self") || args.get("addr").is_none() {
+        let server_cfg = server_config_from(args, "127.0.0.1:0".to_string())?;
+        Some(Server::start(server_cfg, serving_factory(rows, seed)?)?)
+    } else {
+        None
+    };
+    let addr = match &own_server {
+        Some(s) => s.addr(),
+        None => args.get_or("addr", "").parse()?,
+    };
+
+    println!(
+        "loadtest: {clients} clients × {requests} requests over {tenants} tenants → {addr} (seed {seed})"
+    );
+    let report = crate::sim::run_load(addr, SERVING_CATALOG, &cfg)?;
+    for (tenant, t) in &report.per_tenant {
+        println!(
+            "  {tenant}: sent={} ok={} admission-timeout={} deadline={} exec-err={} protocol-err={}",
+            t.sent, t.ok, t.admission_timeout, t.deadline_exceeded, t.exec_error, t.protocol_error
+        );
+    }
+    println!(
+        "  {} sent, {} ok in {:.2?}  p50={:.1}ms p95={:.1}ms p99={:.1}ms  qps={:.0}  mean queue wait={:.2}ms  rows={}",
+        report.sent(),
+        report.ok(),
+        report.wall,
+        report.p50_ms,
+        report.p95_ms,
+        report.p99_ms,
+        report.qps(),
+        report.mean_queue_wait_ms,
+        report.total_rows
+    );
+
+    let mut failures: Vec<String> = Vec::new();
+    if !report.accounted() {
+        failures.push("client-side outcome ledger does not balance".to_string());
+    }
+    if report.protocol_errors() > 0 {
+        failures.push(format!("{} protocol errors", report.protocol_errors()));
+    }
+    if report.sent() != (clients * requests) as u64 {
+        failures.push(format!(
+            "sent {} statements, planned {}",
+            report.sent(),
+            clients * requests
+        ));
+    }
+    if let Some(server) = own_server {
+        let snap = server.shutdown();
+        if snap.lost() > 0 {
+            failures.push(format!("server lost {} statements", snap.lost()));
+        }
+        if snap.worker_panics > 0 {
+            failures.push(format!("{} server worker panics", snap.worker_panics));
+        }
+        if snap.protocol_errors > 0 {
+            failures.push(format!("server saw {} protocol errors", snap.protocol_errors));
+        }
+        if snap.queries != (clients * requests) as u64 {
+            failures.push(format!(
+                "server counted {} statements, planned {}",
+                snap.queries,
+                clients * requests
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        anyhow::bail!("loadtest failed: {}", failures.join("; "));
+    }
+    println!("loadtest OK: every statement accounted for");
+    Ok(())
+}
+
+fn udf_drive(args: &ParsedArgs) -> anyhow::Result<()> {
     let queries = args.get_usize("queries", 24).map_err(anyhow::Error::msg)?;
     let nodes = args.get_usize("nodes", 4).map_err(anyhow::Error::msg)?;
     let procs = args.get_usize("procs", 2).map_err(anyhow::Error::msg)?;
@@ -210,17 +446,13 @@ fn serve(args: &ParsedArgs) -> anyhow::Result<()> {
         "rr" => ExchangeMode::RoundRobin,
         _ => ExchangeMode::Auto,
     };
-    let s = session_with_data(
+    let s = session_with_data(SessionOpts {
         rows,
-        7,
-        Some(PoolConfig { nodes, procs_per_node: procs, ..Default::default() }),
-        None,
-        None,
-        false,
-        None,
-        None,
-    )?;
-    println!("serving {queries} UDF queries over {nodes} nodes × {procs} procs (mode {mode:?})");
+        seed: 7,
+        pool: Some(PoolConfig { nodes, procs_per_node: procs, ..Default::default() }),
+        ..SessionOpts::default()
+    })?;
+    println!("driving {queries} UDF queries over {nodes} nodes × {procs} procs (mode {mode:?})");
     let t0 = std::time::Instant::now();
     let mut total_rows = 0usize;
     for i in 0..queries {

@@ -72,6 +72,8 @@ pub mod engine;
 pub mod packages;
 pub mod sandbox;
 pub mod scheduler;
+#[warn(missing_docs)]
+pub mod server;
 pub mod session;
 pub mod sim;
 pub mod warehouse;

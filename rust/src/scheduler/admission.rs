@@ -7,9 +7,19 @@
 //! OOM-crashes — the failure mode under-estimation causes. Over-
 //! estimation instead wastes headroom and inflates queueing time. Fig. 5
 //! contrasts the two estimators on exactly this trade-off.
+//!
+//! Two consumers share this module:
+//! - [`WarehouseScheduler`]: the event-driven *simulation* over a
+//!   virtual clock (Fig. 5's estimator comparison).
+//! - [`AdmissionGate`]: the *online* gate the serving layer
+//!   (`snowparkd serve`) pushes every live statement through — same
+//!   reservation accounting, but blocking real threads on a condvar
+//!   instead of advancing a sim clock.
 
 use std::collections::VecDeque;
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::util::clock::Clock;
 use crate::util::ids::{NodeId, QueryId};
@@ -233,6 +243,258 @@ impl<'c> WarehouseScheduler<'c> {
     }
 }
 
+/// Placement discipline of the online [`AdmissionGate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// No gate at all: every statement runs immediately (the FIFO
+    /// admit-all baseline A13 compares against).
+    AdmitAll,
+    /// Strict FIFO: only the queue head may take a slot, so an
+    /// over-sized estimate at the head delays everyone behind it —
+    /// the head-of-line cost the simulation charges to Fig. 5's
+    /// static estimator.
+    Fifo,
+    /// FIFO with backfill: any waiter whose estimate fits a slot may
+    /// take it, so a small query is admitted *past* a queued multi-node
+    /// scan instead of behind it. Large queries can in principle starve
+    /// under a sustained small-query flood; the serving workloads are
+    /// finite, and production would add aging.
+    Backfill,
+}
+
+/// Configuration of the online admission gate: `slots` warehouse nodes,
+/// each with `capacity_bytes` of reservable memory.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Number of independently-reservable slots (warehouse nodes).
+    pub slots: usize,
+    /// Reservable bytes per slot. Estimates above this are clamped to
+    /// one whole slot (the query runs alone on a node) rather than
+    /// being rejected outright.
+    pub capacity_bytes: u64,
+    /// Placement discipline.
+    pub policy: AdmissionPolicy,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self { slots: 4, capacity_bytes: 8 << 20, policy: AdmissionPolicy::Backfill }
+    }
+}
+
+/// Why an admission attempt was denied.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionDenied {
+    /// The deadline expired while the request was still queued — the
+    /// online analogue of [`AdmissionOutcome::TimedOut`].
+    TimedOut {
+        /// Arrival → give-up wait.
+        queue_wait: Duration,
+    },
+}
+
+impl std::fmt::Display for AdmissionDenied {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionDenied::TimedOut { queue_wait } => {
+                write!(f, "admission deadline expired after {queue_wait:?} queued")
+            }
+        }
+    }
+}
+
+struct Waiter {
+    id: u64,
+    estimate: u64,
+}
+
+struct GateState {
+    /// Reserved (estimated) bytes per slot.
+    reserved: Vec<u64>,
+    /// Arrival-ordered waiters.
+    queue: VecDeque<Waiter>,
+    next_id: u64,
+}
+
+/// Counter snapshot of an [`AdmissionGate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GateCounters {
+    /// Requests admitted (including admit-all pass-throughs).
+    pub admitted: u64,
+    /// Requests that gave up waiting (deadline expired while queued).
+    pub timed_out: u64,
+    /// Backfill admissions that jumped at least one older waiter.
+    pub bypassed: u64,
+}
+
+/// Online admission control for the serving layer: the same
+/// estimate-reservation accounting as [`WarehouseScheduler`], but
+/// blocking real threads. `admit` parks the caller until a slot has
+/// headroom for its estimate (or the deadline passes); the returned
+/// [`AdmissionTicket`] holds the reservation and releases it on drop.
+pub struct AdmissionGate {
+    cfg: AdmissionConfig,
+    state: Mutex<GateState>,
+    cv: Condvar,
+    admitted: AtomicU64,
+    timed_out: AtomicU64,
+    bypassed: AtomicU64,
+}
+
+impl AdmissionGate {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        let slots = cfg.slots.max(1);
+        let capacity_bytes = cfg.capacity_bytes.max(1);
+        Self {
+            cfg: AdmissionConfig { slots, capacity_bytes, ..cfg },
+            state: Mutex::new(GateState {
+                reserved: vec![0; slots],
+                queue: VecDeque::new(),
+                next_id: 0,
+            }),
+            cv: Condvar::new(),
+            admitted: AtomicU64::new(0),
+            timed_out: AtomicU64::new(0),
+            bypassed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.cfg.policy
+    }
+
+    /// Block until `estimate_bytes` fit a slot under the configured
+    /// policy, or `deadline` passes. Estimates larger than one slot are
+    /// clamped to a whole slot (run alone) instead of waiting forever.
+    pub fn admit(
+        &self,
+        estimate_bytes: u64,
+        deadline: Option<Instant>,
+    ) -> Result<AdmissionTicket<'_>, AdmissionDenied> {
+        let t0 = Instant::now();
+        if self.cfg.policy == AdmissionPolicy::AdmitAll {
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+            return Ok(AdmissionTicket {
+                gate: self,
+                slot: 0,
+                estimate: 0,
+                queue_wait: Duration::ZERO,
+            });
+        }
+        let est = estimate_bytes.clamp(1, self.cfg.capacity_bytes);
+        let mut st = self.state.lock().unwrap();
+        let id = st.next_id;
+        st.next_id += 1;
+        st.queue.push_back(Waiter { id, estimate: est });
+        loop {
+            let pos = st
+                .queue
+                .iter()
+                .position(|w| w.id == id)
+                .expect("waiter stays queued until placed or expired");
+            let may_place = match self.cfg.policy {
+                AdmissionPolicy::Fifo => pos == 0,
+                AdmissionPolicy::Backfill => true,
+                AdmissionPolicy::AdmitAll => unreachable!("handled above"),
+            };
+            if may_place {
+                if let Some(slot) =
+                    st.reserved.iter().position(|&r| r + est <= self.cfg.capacity_bytes)
+                {
+                    st.queue.remove(pos);
+                    st.reserved[slot] += est;
+                    drop(st);
+                    self.admitted.fetch_add(1, Ordering::Relaxed);
+                    if pos > 0 {
+                        self.bypassed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Under FIFO the new head may now be placeable.
+                    self.cv.notify_all();
+                    return Ok(AdmissionTicket {
+                        gate: self,
+                        slot,
+                        estimate: est,
+                        queue_wait: t0.elapsed(),
+                    });
+                }
+            }
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    let Some(remaining) = d.checked_duration_since(now) else {
+                        let pos = st
+                            .queue
+                            .iter()
+                            .position(|w| w.id == id)
+                            .expect("waiter still queued");
+                        st.queue.remove(pos);
+                        drop(st);
+                        self.timed_out.fetch_add(1, Ordering::Relaxed);
+                        // The head may have changed: wake FIFO waiters.
+                        self.cv.notify_all();
+                        return Err(AdmissionDenied::TimedOut { queue_wait: t0.elapsed() });
+                    };
+                    st = self.cv.wait_timeout(st, remaining).unwrap().0;
+                }
+                None => st = self.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    fn release(&self, slot: usize, estimate: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.reserved[slot] = st.reserved[slot].saturating_sub(estimate);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Waiters currently queued.
+    pub fn queued(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Total bytes currently reserved across all slots.
+    pub fn reserved_total(&self) -> u64 {
+        self.state.lock().unwrap().reserved.iter().sum()
+    }
+
+    /// Snapshot of the lifetime counters.
+    pub fn counters(&self) -> GateCounters {
+        GateCounters {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            timed_out: self.timed_out.load(Ordering::Relaxed),
+            bypassed: self.bypassed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A granted admission: holds `estimate` bytes of one slot's capacity
+/// until dropped.
+pub struct AdmissionTicket<'g> {
+    gate: &'g AdmissionGate,
+    slot: usize,
+    estimate: u64,
+    queue_wait: Duration,
+}
+
+impl AdmissionTicket<'_> {
+    /// Time the request spent queued before the slot was granted.
+    pub fn queue_wait(&self) -> Duration {
+        self.queue_wait
+    }
+
+    /// The slot (warehouse node) the reservation landed on.
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+}
+
+impl Drop for AdmissionTicket<'_> {
+    fn drop(&mut self) {
+        self.gate.release(self.slot, self.estimate);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -397,5 +659,120 @@ mod tests {
         assert_eq!(s.outcomes().len(), 5);
         // Serialized: total sim time ≥ 50 ms.
         assert!(clock.now() >= Duration::from_millis(50));
+    }
+
+    // ---- online AdmissionGate ----
+
+    fn gate(slots: usize, cap: u64, policy: AdmissionPolicy) -> AdmissionGate {
+        AdmissionGate::new(AdmissionConfig { slots, capacity_bytes: cap, policy })
+    }
+
+    #[test]
+    fn gate_admits_within_capacity_without_waiting() {
+        let g = gate(2, 1000, AdmissionPolicy::Fifo);
+        let a = g.admit(400, None).unwrap();
+        let b = g.admit(400, None).unwrap();
+        let c = g.admit(900, None).unwrap();
+        assert_eq!(g.reserved_total(), 1700);
+        assert_eq!(g.counters().admitted, 3);
+        drop((a, b, c));
+        assert_eq!(g.reserved_total(), 0);
+    }
+
+    #[test]
+    fn gate_release_unblocks_waiter() {
+        let g = std::sync::Arc::new(gate(1, 1000, AdmissionPolicy::Fifo));
+        let t0 = g.admit(1000, None).unwrap();
+        let g2 = g.clone();
+        let h = std::thread::spawn(move || {
+            let t = g2.admit(500, None).unwrap();
+            t.queue_wait()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(t0);
+        let wait = h.join().unwrap();
+        assert!(wait >= Duration::from_millis(20), "{wait:?}");
+        assert_eq!(g.reserved_total(), 0);
+        assert_eq!(g.queued(), 0);
+    }
+
+    #[test]
+    fn gate_deadline_times_out_while_queued() {
+        let g = gate(1, 1000, AdmissionPolicy::Fifo);
+        let held = g.admit(1000, None).unwrap();
+        let denied = g
+            .admit(500, Some(Instant::now() + Duration::from_millis(25)))
+            .unwrap_err();
+        let AdmissionDenied::TimedOut { queue_wait } = denied;
+        assert!(queue_wait >= Duration::from_millis(25), "{queue_wait:?}");
+        assert_eq!(g.counters().timed_out, 1);
+        assert_eq!(g.queued(), 0, "expired waiter must leave the queue");
+        drop(held);
+        // Fresh requests still flow.
+        assert!(g.admit(500, None).is_ok());
+    }
+
+    #[test]
+    fn backfill_admits_small_past_queued_large() {
+        // Slot fully held; a large query queues at the head; a small one
+        // arriving later must be admitted past it under Backfill.
+        let g = std::sync::Arc::new(gate(2, 1000, AdmissionPolicy::Backfill));
+        let hold_a = g.admit(1000, None).unwrap();
+        let hold_b = g.admit(700, None).unwrap();
+        let g2 = g.clone();
+        let big = std::thread::spawn(move || g2.admit(900, None).map(|t| t.queue_wait()));
+        // Let the big query reach the queue head.
+        while g.queued() < 1 {
+            std::thread::yield_now();
+        }
+        // Small query fits slot 1's 300-byte headroom: bypasses the big.
+        let small = g.admit(200, None).unwrap();
+        assert_eq!(small.slot(), 1);
+        assert_eq!(g.counters().bypassed, 1);
+        assert_eq!(g.queued(), 1, "big query still waiting");
+        drop(small);
+        drop(hold_a);
+        assert!(big.join().unwrap().is_ok());
+        drop(hold_b);
+        assert_eq!(g.reserved_total(), 0);
+    }
+
+    #[test]
+    fn fifo_blocks_small_behind_queued_large() {
+        // Same shape as above, but strict FIFO: the small query must NOT
+        // jump the queued large one even though it would fit.
+        let g = std::sync::Arc::new(gate(2, 1000, AdmissionPolicy::Fifo));
+        let _hold_a = g.admit(1000, None).unwrap();
+        let _hold_b = g.admit(700, None).unwrap();
+        let g2 = g.clone();
+        let _big = std::thread::spawn(move || {
+            let _ = g2.admit(900, Some(Instant::now() + Duration::from_millis(200)));
+        });
+        while g.queued() < 1 {
+            std::thread::yield_now();
+        }
+        let denied = g.admit(200, Some(Instant::now() + Duration::from_millis(50)));
+        assert!(denied.is_err(), "head-of-line blocking under Fifo");
+        assert_eq!(g.counters().bypassed, 0);
+    }
+
+    #[test]
+    fn admit_all_never_reserves_or_queues() {
+        let g = gate(1, 10, AdmissionPolicy::AdmitAll);
+        let tickets: Vec<_> = (0..50).map(|_| g.admit(1 << 30, None).unwrap()).collect();
+        assert_eq!(g.reserved_total(), 0);
+        assert_eq!(g.counters().admitted, 50);
+        drop(tickets);
+        assert_eq!(g.reserved_total(), 0);
+    }
+
+    #[test]
+    fn oversized_estimate_clamped_to_whole_slot() {
+        let g = gate(2, 1000, AdmissionPolicy::Backfill);
+        // 10x the slot: clamped, runs alone on one slot.
+        let t = g.admit(10_000, None).unwrap();
+        assert_eq!(g.reserved_total(), 1000);
+        drop(t);
+        assert_eq!(g.reserved_total(), 0);
     }
 }

@@ -46,6 +46,16 @@ impl DynamicEstimator {
     pub fn paper_defaults() -> Self {
         Self { k: 5, percentile: 100.0, multiplier: 1.2, default_bytes: 2 << 30 }
     }
+
+    /// Serving-layer defaults: same (K, P, F) as
+    /// [`DynamicEstimator::paper_defaults`], but with a caller-chosen
+    /// cold-start default — the in-process engine's working sets are
+    /// far below the paper's 2 GiB warehouse queries, and the cold
+    /// default decides how much a never-seen statement reserves at the
+    /// admission gate.
+    pub fn serving(default_bytes: u64) -> Self {
+        Self { default_bytes, ..Self::paper_defaults() }
+    }
 }
 
 impl MemoryEstimator for DynamicEstimator {

@@ -14,7 +14,10 @@ mod estimator;
 mod shape;
 mod stats;
 
-pub use admission::{AdmissionOutcome, NodeState, QueryRequest, WarehouseScheduler};
+pub use admission::{
+    AdmissionConfig, AdmissionDenied, AdmissionGate, AdmissionOutcome, AdmissionPolicy,
+    AdmissionTicket, GateCounters, NodeState, QueryRequest, WarehouseScheduler,
+};
 pub use estimator::{DynamicEstimator, MemoryEstimator, StaticEstimator};
 pub use shape::ShapePolicy;
 pub use stats::{NodeBalance, QueryKey, StatsFramework};

@@ -1,0 +1,540 @@
+//! `snowparkd serve`: a long-running TCP server that routes every
+//! statement through admission control before the engine (paper §IV.B).
+//!
+//! Each connection handshakes with a tenant name, then alternates
+//! `Query` → (`Result` | `Error`) frames (grammar in [`protocol`]). All
+//! tenants share one [`Catalog`](crate::engine::Catalog) through a
+//! [`SessionPool`]; per-statement flow is:
+//!
+//! 1. estimate memory via the paper's (K, P, F) [`DynamicEstimator`],
+//!    keyed `"{tenant}:{sql}"` over a [`StatsFramework`] fed by observed
+//!    usage — so repeat statements reserve what they actually needed;
+//! 2. wait at the [`AdmissionGate`] for a memory slot, bounded by the
+//!    client's deadline (Backfill policy lets small statements jump a
+//!    queued large scan);
+//! 3. run with the *remaining* deadline budget as the engine's
+//!    [`CancelToken`](crate::engine::CancelToken) deadline;
+//! 4. record actual usage back into the stats framework.
+//!
+//! Every statement gets exactly one outcome — completed, admission
+//! timeout, deadline exceeded, or exec error — and the counters prove it:
+//! [`CountersSnapshot::lost`] is zero whenever the server is healthy.
+
+mod pool;
+pub mod protocol;
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::scheduler::{
+    AdmissionConfig, AdmissionDenied, AdmissionGate, DynamicEstimator, MemoryEstimator,
+    StatsFramework,
+};
+
+pub use pool::{SessionFactory, SessionPool, TenantSlot, TenantSnapshot, TenantStats};
+pub use protocol::{ErrorKind, Frame, FrameError, ServeClient, ServeReply, MAX_FRAME_LEN};
+
+/// Rough bytes-per-row overhead added to a result's payload size when
+/// charging a statement's memory use: scanned rows cost working memory
+/// even when they are filtered out of the result.
+const SCAN_BYTES_PER_ROW: u64 = 64;
+
+/// Tuning for a [`Server`].
+pub struct ServerConfig {
+    /// Bind address; port 0 picks a free port (see [`Server::addr`]).
+    pub addr: String,
+    /// Admission gate shape: slots, per-slot capacity, policy.
+    pub admission: AdmissionConfig,
+    /// Reservation for a never-seen statement (the cold-start default of
+    /// the dynamic estimator).
+    pub cold_estimate_bytes: u64,
+    /// Server-side execution deadline applied when the client sends
+    /// `timeout_ms = 0`.
+    pub default_timeout: Option<Duration>,
+    /// Max distinct tenants before new `Hello`s are refused.
+    pub max_tenants: usize,
+    /// Executions remembered per statement key for estimation.
+    pub stats_history: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            admission: AdmissionConfig::default(),
+            cold_estimate_bytes: 1 << 20,
+            default_timeout: None,
+            max_tenants: 16,
+            stats_history: 64,
+        }
+    }
+}
+
+/// Whole-server counters (tenant breakdowns live in [`TenantSnapshot`]).
+#[derive(Default)]
+struct ServerCounters {
+    connections: AtomicU64,
+    hellos: AtomicU64,
+    queries: AtomicU64,
+    completed: AtomicU64,
+    admission_timeouts: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    exec_errors: AtomicU64,
+    protocol_errors: AtomicU64,
+    in_flight: AtomicU64,
+    peak_in_flight: AtomicU64,
+}
+
+/// Point-in-time copy of the server counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CountersSnapshot {
+    /// TCP connections accepted.
+    pub connections: u64,
+    /// Successful `Hello` handshakes.
+    pub hellos: u64,
+    /// `Query` frames received.
+    pub queries: u64,
+    /// Statements that returned a `Result` frame.
+    pub completed: u64,
+    /// Statements rejected at the admission gate.
+    pub admission_timeouts: u64,
+    /// Statements cut by their execution deadline.
+    pub deadline_exceeded: u64,
+    /// Statements that failed in planning/execution.
+    pub exec_errors: u64,
+    /// Connections that violated the frame grammar or state machine.
+    pub protocol_errors: u64,
+    /// Statements currently between receipt and reply.
+    pub in_flight: u64,
+    /// High-water mark of `in_flight`.
+    pub peak_in_flight: u64,
+    /// Connection threads that panicked (counted at shutdown).
+    pub worker_panics: u64,
+}
+
+impl CountersSnapshot {
+    /// Statements with no recorded outcome. Non-zero means the server
+    /// dropped work on the floor (or statements are still in flight).
+    pub fn lost(&self) -> u64 {
+        self.queries.saturating_sub(
+            self.completed + self.admission_timeouts + self.deadline_exceeded + self.exec_errors,
+        )
+    }
+
+    /// Schedule-determined view for determinism tests: concurrency
+    /// high-water marks zeroed (they depend on thread interleaving).
+    pub fn deterministic(mut self) -> CountersSnapshot {
+        self.in_flight = 0;
+        self.peak_in_flight = 0;
+        self
+    }
+}
+
+/// State shared between the accept loop and every connection thread.
+struct Shared {
+    pool: SessionPool,
+    gate: AdmissionGate,
+    estimator: DynamicEstimator,
+    mem_stats: StatsFramework,
+    counters: ServerCounters,
+    default_timeout: Option<Duration>,
+    shutdown: AtomicBool,
+}
+
+/// A running `snowparkd serve` instance. Dropping it leaks the listener
+/// thread; call [`Server::shutdown`] for an orderly stop.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: std::net::SocketAddr,
+    accept_handle: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<(JoinHandle<()>, TcpStream)>>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and start serving. `factory` builds the engine
+    /// session for each tenant on first `Hello` — give every session the
+    /// same shared catalog or tenants will not see common tables.
+    pub fn start(cfg: ServerConfig, factory: SessionFactory) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            pool: SessionPool::new(factory, cfg.max_tenants),
+            gate: AdmissionGate::new(cfg.admission),
+            estimator: DynamicEstimator::serving(cfg.cold_estimate_bytes),
+            mem_stats: StatsFramework::new(cfg.stats_history.max(1)),
+            counters: ServerCounters::default(),
+            default_timeout: cfg.default_timeout,
+            shutdown: AtomicBool::new(false),
+        });
+        let conns: Arc<Mutex<Vec<(JoinHandle<()>, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept_shared = Arc::clone(&shared);
+        let accept_conns = Arc::clone(&conns);
+        let accept_handle = std::thread::Builder::new()
+            .name("snowparkd-accept".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_shared.shutdown.load(Ordering::SeqCst) {
+                        break; // the shutdown waker connection lands here
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    accept_shared.counters.connections.fetch_add(1, Ordering::Relaxed);
+                    stream.set_nodelay(true).ok();
+                    let Ok(track) = stream.try_clone() else { continue };
+                    let conn_shared = Arc::clone(&accept_shared);
+                    let handle = std::thread::Builder::new()
+                        .name("snowparkd-conn".to_string())
+                        .spawn(move || handle_conn(&conn_shared, stream))
+                        .expect("spawn connection thread");
+                    accept_conns.lock().expect("conns lock").push((handle, track));
+                }
+            })?;
+        Ok(Server { shared, addr, accept_handle: Some(accept_handle), conns })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Current whole-server counters (worker_panics is only known after
+    /// [`Server::shutdown`], so it reads 0 here).
+    pub fn counters(&self) -> CountersSnapshot {
+        let c = &self.shared.counters;
+        CountersSnapshot {
+            connections: c.connections.load(Ordering::Relaxed),
+            hellos: c.hellos.load(Ordering::Relaxed),
+            queries: c.queries.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            admission_timeouts: c.admission_timeouts.load(Ordering::Relaxed),
+            deadline_exceeded: c.deadline_exceeded.load(Ordering::Relaxed),
+            exec_errors: c.exec_errors.load(Ordering::Relaxed),
+            protocol_errors: c.protocol_errors.load(Ordering::Relaxed),
+            in_flight: c.in_flight.load(Ordering::Relaxed),
+            peak_in_flight: c.peak_in_flight.load(Ordering::Relaxed),
+            worker_panics: 0,
+        }
+    }
+
+    /// Per-tenant counter snapshots, sorted by tenant name.
+    pub fn tenant_stats(&self) -> Vec<(String, TenantSnapshot)> {
+        self.shared.pool.snapshots()
+    }
+
+    /// Stop accepting, sever every live connection, join all threads, and
+    /// return the final counters (including panicked workers).
+    pub fn shutdown(mut self) -> CountersSnapshot {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Wake the accept loop: it only observes the flag on its next
+        // accepted connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().expect("conns lock"));
+        let mut panics = 0u64;
+        for (handle, stream) in conns {
+            let _ = stream.shutdown(Shutdown::Both);
+            if handle.join().is_err() {
+                panics += 1;
+            }
+        }
+        let mut snap = self.counters();
+        snap.worker_panics = panics;
+        snap
+    }
+}
+
+/// Decrements `in_flight` even if the statement path unwinds.
+struct InFlightGuard<'a>(&'a ServerCounters);
+
+impl<'a> InFlightGuard<'a> {
+    fn enter(c: &'a ServerCounters) -> InFlightGuard<'a> {
+        let now = c.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+        c.peak_in_flight.fetch_max(now, Ordering::SeqCst);
+        InFlightGuard(c)
+    }
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn send(w: &mut impl Write, frame: &Frame) -> bool {
+    frame.write_to(w).is_ok()
+}
+
+/// One connection's lifetime: `Hello`, then a query/reply loop until the
+/// peer closes, errors, or the server shuts down.
+fn handle_conn(shared: &Shared, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    let slot = match Frame::read_from(&mut reader) {
+        Ok(Some(Frame::Hello { tenant })) => match shared.pool.get_or_create(&tenant) {
+            Ok(slot) => {
+                shared.counters.hellos.fetch_add(1, Ordering::Relaxed);
+                (tenant, slot)
+            }
+            Err(e) => {
+                send(&mut writer, &Frame::Error { kind: ErrorKind::Exec, message: e.to_string() });
+                return;
+            }
+        },
+        Ok(Some(_)) | Err(_) => {
+            shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            send(
+                &mut writer,
+                &Frame::Error {
+                    kind: ErrorKind::Protocol,
+                    message: "expected Hello as first frame".to_string(),
+                },
+            );
+            return;
+        }
+        Ok(None) => return, // connected and left without a word
+    };
+    let (tenant, slot) = slot;
+    loop {
+        match Frame::read_from(&mut reader) {
+            Ok(Some(Frame::Query { sql, timeout_ms })) => {
+                let reply = serve_query(shared, &tenant, &slot, &sql, timeout_ms);
+                if !send(&mut writer, &reply) {
+                    break; // peer gone; outcome is already counted
+                }
+            }
+            Ok(None) => break,
+            Ok(Some(_)) => {
+                shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                send(
+                    &mut writer,
+                    &Frame::Error {
+                        kind: ErrorKind::Protocol,
+                        message: "expected Query frame".to_string(),
+                    },
+                );
+                break;
+            }
+            Err(e) => {
+                shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                send(
+                    &mut writer,
+                    &Frame::Error { kind: ErrorKind::Protocol, message: e.to_string() },
+                );
+                break;
+            }
+        }
+    }
+}
+
+/// Execute one statement through estimate → admit → run → record, always
+/// producing exactly one reply frame and one counted outcome.
+fn serve_query(
+    shared: &Shared,
+    tenant: &str,
+    slot: &TenantSlot,
+    sql: &str,
+    timeout_ms: u64,
+) -> Frame {
+    shared.counters.queries.fetch_add(1, Ordering::Relaxed);
+    slot.stats.record_submitted();
+    let _guard = InFlightGuard::enter(&shared.counters);
+
+    let deadline = (timeout_ms > 0).then(|| Instant::now() + Duration::from_millis(timeout_ms));
+    let key = format!("{tenant}:{sql}");
+    let estimate = shared.estimator.estimate(&key, &shared.mem_stats);
+
+    let ticket = match shared.gate.admit(estimate, deadline) {
+        Ok(t) => t,
+        Err(AdmissionDenied::TimedOut { queue_wait }) => {
+            shared.counters.admission_timeouts.fetch_add(1, Ordering::Relaxed);
+            slot.stats.record_admission_timeout();
+            return Frame::Error {
+                kind: ErrorKind::AdmissionTimeout,
+                message: format!(
+                    "admission timed out after {:.1} ms waiting for {estimate} bytes",
+                    queue_wait.as_secs_f64() * 1e3
+                ),
+            };
+        }
+    };
+
+    // Whatever deadline budget the queue wait left over bounds execution.
+    let remaining = match deadline {
+        Some(d) => Some(d.saturating_duration_since(Instant::now())),
+        None => shared.default_timeout,
+    };
+    let result = slot.session.sql_with_stats_timeout(sql, remaining);
+    let queue_wait = ticket.queue_wait();
+    drop(ticket); // release the memory slot before encoding the reply
+
+    match result {
+        Ok((out, stats)) => {
+            let actual = out.byte_size() + SCAN_BYTES_PER_ROW * stats.rows_scanned;
+            shared.mem_stats.record(&key, actual.max(1));
+            let batch = crate::types::WireBatch::encode(&out);
+            shared.counters.completed.fetch_add(1, Ordering::Relaxed);
+            slot.stats.record_completed(
+                out.num_rows() as u64,
+                batch.as_bytes().len() as u64,
+                queue_wait.as_nanos() as u64,
+            );
+            Frame::Result { queue_wait_ns: queue_wait.as_nanos() as u64, batch }
+        }
+        Err(e) if crate::engine::fault::is_deadline_exceeded(&e) => {
+            shared.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            slot.stats.record_deadline_exceeded();
+            Frame::Error { kind: ErrorKind::DeadlineExceeded, message: e.to_string() }
+        }
+        Err(e) => {
+            shared.counters.exec_errors.fetch_add(1, Ordering::Relaxed);
+            slot.stats.record_exec_error();
+            Frame::Error { kind: ErrorKind::Exec, message: format!("{e:#}") }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Catalog;
+    use crate::scheduler::AdmissionPolicy;
+    use crate::session::Session;
+    use crate::types::{Column, DataType, Field, RowSet, Schema};
+
+    fn demo_catalog() -> Arc<Catalog> {
+        let catalog = Arc::new(Catalog::new());
+        let n = 512i64;
+        let table = RowSet::new(
+            Schema::new(vec![
+                Field::new("id", DataType::Int64),
+                Field::new("v", DataType::Float64),
+            ]),
+            vec![
+                Column::from_i64((0..n).collect()),
+                Column::from_f64((0..n).map(|i| (i % 97) as f64).collect()),
+            ],
+        )
+        .unwrap();
+        catalog.register("demo", table);
+        catalog
+    }
+
+    fn start_server(cfg: ServerConfig) -> Server {
+        let catalog = demo_catalog();
+        Server::start(
+            cfg,
+            Box::new(move |_tenant| {
+                Session::builder().shared_catalog(Arc::clone(&catalog)).build().map(Arc::new)
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_a_statement_end_to_end() {
+        let server = start_server(ServerConfig::default());
+        let mut client = ServeClient::connect(server.addr(), "tenant-a").unwrap();
+        let reply = client.query("SELECT COUNT(*) AS n FROM demo", 0).unwrap();
+        match reply {
+            ServeReply::Rows { rows, .. } => {
+                assert_eq!(rows.row(0)[0].as_i64(), Some(512));
+            }
+            other => panic!("expected rows, got {other:?}"),
+        }
+        drop(client);
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.lost(), 0);
+        assert_eq!(snap.worker_panics, 0);
+    }
+
+    #[test]
+    fn exec_errors_are_replies_not_disconnects() {
+        let server = start_server(ServerConfig::default());
+        let mut client = ServeClient::connect(server.addr(), "t").unwrap();
+        let reply = client.query("SELECT * FROM no_such_table", 0).unwrap();
+        assert!(matches!(reply, ServeReply::Denied { kind: ErrorKind::Exec, .. }));
+        // The connection survives an exec error.
+        let reply = client.query("SELECT id FROM demo WHERE id < 3", 0).unwrap();
+        match reply {
+            ServeReply::Rows { rows, .. } => assert_eq!(rows.num_rows(), 3),
+            other => panic!("expected rows, got {other:?}"),
+        }
+        drop(client);
+        let snap = server.shutdown();
+        assert_eq!(snap.exec_errors, 1);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.lost(), 0);
+    }
+
+    #[test]
+    fn non_hello_first_frame_is_a_protocol_error() {
+        let server = start_server(ServerConfig::default());
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        Frame::Query { sql: "SELECT 1".to_string(), timeout_ms: 0 }.write_to(&mut w).unwrap();
+        let mut r = BufReader::new(stream);
+        match Frame::read_from(&mut r).unwrap() {
+            Some(Frame::Error { kind, .. }) => assert_eq!(kind, ErrorKind::Protocol),
+            other => panic!("expected Error frame, got {other:?}"),
+        }
+        // Server closes after the protocol error.
+        assert!(matches!(Frame::read_from(&mut r), Ok(None)));
+        let snap = server.shutdown();
+        assert_eq!(snap.protocol_errors, 1);
+    }
+
+    #[test]
+    fn statement_stats_feed_the_estimator() {
+        // After one execution the reservation for the same (tenant, sql)
+        // key comes from observed usage, not the cold default.
+        let server = start_server(ServerConfig {
+            cold_estimate_bytes: 123_456,
+            ..ServerConfig::default()
+        });
+        let mut client = ServeClient::connect(server.addr(), "t").unwrap();
+        client.query("SELECT COUNT(*) AS n FROM demo", 0).unwrap();
+        let key = "t:SELECT COUNT(*) AS n FROM demo";
+        let est = server.shared.estimator.estimate(key, &server.shared.mem_stats);
+        assert_ne!(est, 123_456, "estimate should come from recorded history");
+        assert!(est > 0);
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn tight_deadline_times_out_at_admission_when_gate_is_held() {
+        // One slot, and a first connection holding it with a long-running
+        // statement is hard to stage deterministically; instead hold the
+        // slot directly via the gate, then watch a deadlined query bounce.
+        let server = start_server(ServerConfig {
+            admission: AdmissionConfig {
+                slots: 1,
+                capacity_bytes: 1 << 20,
+                policy: AdmissionPolicy::Fifo,
+            },
+            ..ServerConfig::default()
+        });
+        let _held = server.shared.gate.admit(1 << 20, None).unwrap();
+        let mut client = ServeClient::connect(server.addr(), "t").unwrap();
+        let reply = client.query("SELECT COUNT(*) AS n FROM demo", 50).unwrap();
+        assert!(
+            matches!(reply, ServeReply::Denied { kind: ErrorKind::AdmissionTimeout, .. }),
+            "expected admission timeout, got {reply:?}"
+        );
+        drop(client);
+        drop(_held);
+        let snap = server.shutdown();
+        assert_eq!(snap.admission_timeouts, 1);
+        assert_eq!(snap.lost(), 0);
+    }
+}

@@ -1,0 +1,243 @@
+//! Multi-tenant session pool: one lazily-created [`Session`] per tenant,
+//! all sharing one [`Catalog`] so every tenant sees the same tables while
+//! keeping per-tenant engine state (UDF registries, balance history,
+//! health trackers) isolated.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::session::Session;
+
+/// Builds a fresh tenant session on first use. Receives the tenant name
+/// so the factory can vary configuration per tenant if it wants to.
+pub type SessionFactory = Box<dyn Fn(&str) -> anyhow::Result<Arc<Session>> + Send + Sync>;
+
+/// Per-tenant serving counters. All monotone, updated lock-free by the
+/// connection threads.
+#[derive(Default)]
+pub struct TenantStats {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    admission_timeouts: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    exec_errors: AtomicU64,
+    rows_returned: AtomicU64,
+    result_bytes: AtomicU64,
+    queue_wait_ns: AtomicU64,
+}
+
+/// Point-in-time copy of a tenant's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TenantSnapshot {
+    /// Statements received for this tenant.
+    pub submitted: u64,
+    /// Statements that returned rows.
+    pub completed: u64,
+    /// Statements rejected at the admission gate.
+    pub admission_timeouts: u64,
+    /// Statements admitted but killed by their deadline.
+    pub deadline_exceeded: u64,
+    /// Statements that failed in planning or execution.
+    pub exec_errors: u64,
+    /// Total rows shipped back.
+    pub rows_returned: u64,
+    /// Total result payload bytes shipped back.
+    pub result_bytes: u64,
+    /// Cumulative admission queue wait.
+    pub queue_wait_ns: u64,
+}
+
+impl TenantSnapshot {
+    /// Every submitted statement got exactly one outcome.
+    pub fn accounted(&self) -> bool {
+        self.submitted
+            == self.completed + self.admission_timeouts + self.deadline_exceeded + self.exec_errors
+    }
+
+    /// The schedule-determined view: timing-dependent fields zeroed, so
+    /// two runs of the same seeded workload compare equal even though
+    /// wall-clock waits differ.
+    pub fn deterministic(mut self) -> TenantSnapshot {
+        self.queue_wait_ns = 0;
+        self
+    }
+}
+
+impl TenantStats {
+    pub(crate) fn record_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_completed(&self, rows: u64, bytes: u64, queue_wait_ns: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.rows_returned.fetch_add(rows, Ordering::Relaxed);
+        self.result_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.queue_wait_ns.fetch_add(queue_wait_ns, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_admission_timeout(&self) {
+        self.admission_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_exec_error(&self) {
+        self.exec_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy the counters.
+    pub fn snapshot(&self) -> TenantSnapshot {
+        TenantSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            admission_timeouts: self.admission_timeouts.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            exec_errors: self.exec_errors.load(Ordering::Relaxed),
+            rows_returned: self.rows_returned.load(Ordering::Relaxed),
+            result_bytes: self.result_bytes.load(Ordering::Relaxed),
+            queue_wait_ns: self.queue_wait_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One tenant's slice of the server: its session plus its counters.
+pub struct TenantSlot {
+    /// The tenant's engine session (shared-catalog, private everything else).
+    pub session: Arc<Session>,
+    /// Serving counters for this tenant.
+    pub stats: TenantStats,
+}
+
+/// Lazily-populated map from tenant name to [`TenantSlot`], bounded by
+/// `max_tenants` so a hostile client cannot grow server state without
+/// limit by inventing tenant names.
+pub struct SessionPool {
+    factory: SessionFactory,
+    tenants: RwLock<HashMap<String, Arc<TenantSlot>>>,
+    max_tenants: usize,
+}
+
+impl SessionPool {
+    /// New pool; `factory` runs once per distinct tenant name.
+    pub fn new(factory: SessionFactory, max_tenants: usize) -> SessionPool {
+        SessionPool {
+            factory,
+            tenants: RwLock::new(HashMap::new()),
+            max_tenants: max_tenants.max(1),
+        }
+    }
+
+    /// Fetch the tenant's slot, creating it on first sight. Errors if the
+    /// pool is full or the factory fails.
+    pub fn get_or_create(&self, tenant: &str) -> anyhow::Result<Arc<TenantSlot>> {
+        if let Some(slot) = self.tenants.read().expect("pool lock").get(tenant) {
+            return Ok(Arc::clone(slot));
+        }
+        // Build outside the write lock; racing creators are resolved by
+        // whoever inserts first (the loser's session is dropped).
+        let session = (self.factory)(tenant)?;
+        let mut map = self.tenants.write().expect("pool lock");
+        if let Some(slot) = map.get(tenant) {
+            return Ok(Arc::clone(slot));
+        }
+        if map.len() >= self.max_tenants {
+            anyhow::bail!("session pool full: {} tenants (max {})", map.len(), self.max_tenants);
+        }
+        let slot = Arc::new(TenantSlot { session, stats: TenantStats::default() });
+        map.insert(tenant.to_string(), Arc::clone(&slot));
+        Ok(slot)
+    }
+
+    /// Sorted (tenant, snapshot) pairs for every tenant seen so far.
+    pub fn snapshots(&self) -> Vec<(String, TenantSnapshot)> {
+        let map = self.tenants.read().expect("pool lock");
+        let mut out: Vec<(String, TenantSnapshot)> =
+            map.iter().map(|(k, v)| (k.clone(), v.stats.snapshot())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Number of distinct tenants created.
+    pub fn len(&self) -> usize {
+        self.tenants.read().expect("pool lock").len()
+    }
+
+    /// True when no tenant has connected yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Catalog;
+
+    fn pool(max: usize) -> SessionPool {
+        let catalog = Arc::new(Catalog::default());
+        SessionPool::new(
+            Box::new(move |_tenant| {
+                Session::builder().shared_catalog(Arc::clone(&catalog)).build().map(Arc::new)
+            }),
+            max,
+        )
+    }
+
+    #[test]
+    fn same_tenant_reuses_session() {
+        let p = pool(4);
+        let a = p.get_or_create("alpha").unwrap();
+        let b = p.get_or_create("alpha").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn tenants_share_one_catalog() {
+        use crate::types::{Column, DataType, Field, RowSet, Schema};
+        let p = pool(4);
+        let a = p.get_or_create("alpha").unwrap();
+        let b = p.get_or_create("beta").unwrap();
+        let table = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Int64)]),
+            vec![Column::from_i64(vec![1, 2, 3])],
+        )
+        .unwrap();
+        a.session.catalog().register("shared", table);
+        let out = b.session.sql("SELECT x FROM shared").unwrap();
+        assert_eq!(out.num_rows(), 3);
+    }
+
+    #[test]
+    fn pool_capacity_is_enforced() {
+        let p = pool(2);
+        p.get_or_create("a").unwrap();
+        p.get_or_create("b").unwrap();
+        assert!(p.get_or_create("c").is_err());
+        // Existing tenants still resolve at capacity.
+        assert!(p.get_or_create("a").is_ok());
+    }
+
+    #[test]
+    fn snapshots_account_and_sort() {
+        let p = pool(4);
+        let b = p.get_or_create("beta").unwrap();
+        let a = p.get_or_create("alpha").unwrap();
+        a.stats.record_submitted();
+        a.stats.record_completed(10, 800, 5_000);
+        b.stats.record_submitted();
+        b.stats.record_admission_timeout();
+        let snaps = p.snapshots();
+        assert_eq!(snaps[0].0, "alpha");
+        assert_eq!(snaps[1].0, "beta");
+        assert!(snaps[0].1.accounted() && snaps[1].1.accounted());
+        assert_eq!(snaps[0].1.rows_returned, 10);
+        assert_eq!(snaps[1].1.admission_timeouts, 1);
+        // The deterministic view zeroes only the timing field.
+        assert_eq!(snaps[0].1.deterministic().queue_wait_ns, 0);
+        assert_eq!(snaps[0].1.deterministic().completed, 1);
+    }
+}

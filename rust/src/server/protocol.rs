@@ -1,0 +1,490 @@
+//! The serving wire protocol: length-prefixed tagged frames.
+//!
+//! ## Frame grammar (all integers little-endian)
+//!
+//! ```text
+//! frame    := u32 len, payload              len = |payload|, ≤ 64 MiB
+//! payload  := u8 tag, body
+//! body(1)  := Hello    u16 tenant_len, tenant UTF-8 (non-empty, ≤ 256 B)
+//! body(2)  := Query    u64 timeout_ms (0 = none), u32 sql_len, sql UTF-8
+//! body(3)  := Result   u64 queue_wait_ns, WireBatch bytes (rest of frame)
+//! body(4)  := Error    u8 kind, message UTF-8 (rest of frame)
+//! ```
+//!
+//! A connection speaks exactly one `Hello`, then alternates
+//! `Query` → (`Result` | `Error`) until either side closes. Results
+//! reuse [`WireBatch`] — the same column-major codec the engine's node
+//! exchange ships, so a served result is byte-identical to the in-process
+//! encoding of the same rowset.
+//!
+//! Malformed input (truncation, oversize, unknown tags, bad UTF-8) is a
+//! typed [`FrameError`], never a panic: the server answers with a clean
+//! `Error` frame where it still can, and closes the connection.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::types::{RowSet, WireBatch};
+
+/// Hard cap on a frame's payload size (64 MiB) — a garbage length
+/// prefix must not make the receiver allocate unbounded memory.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Longest accepted tenant name in a `Hello` frame.
+pub const MAX_TENANT_LEN: usize = 256;
+
+const TAG_HELLO: u8 = 1;
+const TAG_QUERY: u8 = 2;
+const TAG_RESULT: u8 = 3;
+const TAG_ERROR: u8 = 4;
+
+/// Classified server-side failure shipped in an `Error` frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The peer violated the frame grammar or connection state machine.
+    Protocol,
+    /// The admission deadline expired while the statement was queued.
+    AdmissionTimeout,
+    /// The statement was admitted but ran past its deadline.
+    DeadlineExceeded,
+    /// The statement failed during planning or execution.
+    Exec,
+}
+
+impl ErrorKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrorKind::Protocol => 0,
+            ErrorKind::AdmissionTimeout => 1,
+            ErrorKind::DeadlineExceeded => 2,
+            ErrorKind::Exec => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<ErrorKind> {
+        match v {
+            0 => Some(ErrorKind::Protocol),
+            1 => Some(ErrorKind::AdmissionTimeout),
+            2 => Some(ErrorKind::DeadlineExceeded),
+            3 => Some(ErrorKind::Exec),
+            _ => None,
+        }
+    }
+}
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Transport failure (including read timeouts).
+    Io(io::Error),
+    /// The bytes violate the frame grammar (truncation, bad tag, bad
+    /// UTF-8, trailing garbage, …).
+    Malformed(String),
+    /// The length prefix exceeds [`MAX_FRAME_LEN`].
+    Oversized(u32),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame i/o: {e}"),
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            FrameError::Oversized(n) => {
+                write!(f, "oversized frame: {n} bytes > {MAX_FRAME_LEN} max")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl FrameError {
+    fn malformed(m: impl Into<String>) -> FrameError {
+        FrameError::Malformed(m.into())
+    }
+}
+
+/// One protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Session handshake: which tenant this connection serves.
+    Hello {
+        /// Tenant name (non-empty UTF-8, ≤ [`MAX_TENANT_LEN`] bytes).
+        tenant: String,
+    },
+    /// One statement to execute.
+    Query {
+        /// SQL text.
+        sql: String,
+        /// Wall-time budget in milliseconds covering admission queueing
+        /// *plus* execution; 0 = no deadline.
+        timeout_ms: u64,
+    },
+    /// Successful statement result.
+    Result {
+        /// Time the statement waited at the admission gate.
+        queue_wait_ns: u64,
+        /// The result rows, in the engine's exchange codec.
+        batch: WireBatch,
+    },
+    /// Failed statement (or connection-level fault).
+    Error {
+        /// Failure classification.
+        kind: ErrorKind,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+/// Bounds-checked cursor over a frame payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.pos + n > self.buf.len() {
+            return Err(FrameError::malformed(format!(
+                "need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    fn finish(&self) -> Result<(), FrameError> {
+        if self.pos != self.buf.len() {
+            return Err(FrameError::malformed(format!(
+                "{} trailing bytes after body",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn utf8(bytes: &[u8], what: &str) -> Result<String, FrameError> {
+    String::from_utf8(bytes.to_vec())
+        .map_err(|e| FrameError::malformed(format!("bad UTF-8 in {what}: {e}")))
+}
+
+impl Frame {
+    /// Serialize to a complete length-prefixed frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        match self {
+            Frame::Hello { tenant } => {
+                payload.push(TAG_HELLO);
+                payload.extend_from_slice(&(tenant.len() as u16).to_le_bytes());
+                payload.extend_from_slice(tenant.as_bytes());
+            }
+            Frame::Query { sql, timeout_ms } => {
+                payload.push(TAG_QUERY);
+                payload.extend_from_slice(&timeout_ms.to_le_bytes());
+                payload.extend_from_slice(&(sql.len() as u32).to_le_bytes());
+                payload.extend_from_slice(sql.as_bytes());
+            }
+            Frame::Result { queue_wait_ns, batch } => {
+                payload.push(TAG_RESULT);
+                payload.extend_from_slice(&queue_wait_ns.to_le_bytes());
+                payload.extend_from_slice(batch.as_bytes());
+            }
+            Frame::Error { kind, message } => {
+                payload.push(TAG_ERROR);
+                payload.push(kind.to_u8());
+                payload.extend_from_slice(message.as_bytes());
+            }
+        }
+        let mut out = Vec::with_capacity(4 + payload.len());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Write a complete frame to `w`.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        w.write_all(&self.encode())?;
+        w.flush()
+    }
+
+    /// Read one frame. `Ok(None)` means the peer closed cleanly at a
+    /// frame boundary; EOF mid-frame is [`FrameError::Malformed`].
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Option<Frame>, FrameError> {
+        // Length prefix, detecting clean EOF before the first byte.
+        let mut len_buf = [0u8; 4];
+        let mut got = 0;
+        while got < 4 {
+            match r.read(&mut len_buf[got..]) {
+                Ok(0) if got == 0 => return Ok(None),
+                Ok(0) => return Err(FrameError::malformed("EOF inside length prefix")),
+                Ok(n) => got += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(FrameError::Io(e)),
+            }
+        }
+        let len = u32::from_le_bytes(len_buf);
+        if len == 0 {
+            return Err(FrameError::malformed("empty frame"));
+        }
+        if len as usize > MAX_FRAME_LEN {
+            return Err(FrameError::Oversized(len));
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload).map_err(|e| {
+            if e.kind() == io::ErrorKind::UnexpectedEof {
+                FrameError::malformed("EOF inside frame payload")
+            } else {
+                FrameError::Io(e)
+            }
+        })?;
+        Frame::parse_payload(&payload).map(Some)
+    }
+
+    fn parse_payload(payload: &[u8]) -> Result<Frame, FrameError> {
+        let mut c = Cursor { buf: payload, pos: 0 };
+        let frame = match c.u8()? {
+            TAG_HELLO => {
+                let n = c.u16()? as usize;
+                if n == 0 || n > MAX_TENANT_LEN {
+                    return Err(FrameError::malformed(format!("tenant length {n}")));
+                }
+                let tenant = utf8(c.take(n)?, "tenant")?;
+                Frame::Hello { tenant }
+            }
+            TAG_QUERY => {
+                let timeout_ms = c.u64()?;
+                let n = c.u32()? as usize;
+                let sql = utf8(c.take(n)?, "sql")?;
+                Frame::Query { sql, timeout_ms }
+            }
+            TAG_RESULT => {
+                let queue_wait_ns = c.u64()?;
+                let batch = WireBatch::from_bytes(c.rest().to_vec())
+                    .map_err(|e| FrameError::malformed(e.to_string()))?;
+                Frame::Result { queue_wait_ns, batch }
+            }
+            TAG_ERROR => {
+                let kind = ErrorKind::from_u8(c.u8()?)
+                    .ok_or_else(|| FrameError::malformed("unknown error kind"))?;
+                let message = utf8(c.rest(), "error message")?;
+                Frame::Error { kind, message }
+            }
+            other => return Err(FrameError::malformed(format!("unknown frame tag {other}"))),
+        };
+        c.finish()?;
+        Ok(frame)
+    }
+}
+
+/// What one served statement came back as.
+#[derive(Debug)]
+pub enum ServeReply {
+    /// The statement succeeded.
+    Rows {
+        /// Decoded result rows.
+        rows: RowSet,
+        /// Time the statement waited at the admission gate.
+        queue_wait: Duration,
+    },
+    /// The server answered with an `Error` frame.
+    Denied {
+        /// Failure classification.
+        kind: ErrorKind,
+        /// Server-provided detail.
+        message: String,
+    },
+}
+
+/// Minimal blocking client for the serving protocol — what the load
+/// harness and the differential tests drive, and a reference for any
+/// external implementation.
+pub struct ServeClient {
+    stream: TcpStream,
+    reader: io::BufReader<TcpStream>,
+}
+
+impl ServeClient {
+    /// Connect and send the `Hello` handshake for `tenant`.
+    pub fn connect(addr: impl ToSocketAddrs, tenant: &str) -> anyhow::Result<ServeClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let reader = io::BufReader::new(stream.try_clone()?);
+        let mut c = ServeClient { stream, reader };
+        Frame::Hello { tenant: to_tenant(tenant)? }.write_to(&mut c.stream)?;
+        Ok(c)
+    }
+
+    /// Bound how long [`ServeClient::query`] may block on a response
+    /// (None = forever).
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.stream.set_read_timeout(timeout)
+    }
+
+    /// Run one statement; `timeout_ms` = 0 means no deadline. Returns
+    /// `Err` only on transport/protocol failure — server-side statement
+    /// failures come back as [`ServeReply::Denied`].
+    pub fn query(&mut self, sql: &str, timeout_ms: u64) -> anyhow::Result<ServeReply> {
+        Frame::Query { sql: sql.to_string(), timeout_ms }.write_to(&mut self.stream)?;
+        match Frame::read_from(&mut self.reader) {
+            Ok(Some(Frame::Result { queue_wait_ns, batch })) => Ok(ServeReply::Rows {
+                rows: batch.decode()?,
+                queue_wait: Duration::from_nanos(queue_wait_ns),
+            }),
+            Ok(Some(Frame::Error { kind, message })) => {
+                Ok(ServeReply::Denied { kind, message })
+            }
+            Ok(Some(other)) => anyhow::bail!("unexpected reply frame {other:?}"),
+            Ok(None) => anyhow::bail!("server closed the connection mid-statement"),
+            Err(e) => Err(anyhow::anyhow!(e)),
+        }
+    }
+}
+
+fn to_tenant(tenant: &str) -> anyhow::Result<String> {
+    if tenant.is_empty() || tenant.len() > MAX_TENANT_LEN {
+        anyhow::bail!("tenant name must be 1..={MAX_TENANT_LEN} bytes");
+    }
+    Ok(tenant.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Column, DataType, Field, Schema};
+
+    fn sample_batch() -> WireBatch {
+        WireBatch::encode(
+            &RowSet::new(
+                Schema::new(vec![
+                    Field::new("k", DataType::Int64),
+                    Field::new("s", DataType::Utf8),
+                ]),
+                vec![
+                    Column::from_i64(vec![1, 2, 3]),
+                    Column::from_strings(vec!["a".into(), "bb".into(), "".into()]),
+                ],
+            )
+            .unwrap(),
+        )
+    }
+
+    fn round_trip(f: &Frame) -> Frame {
+        let bytes = f.encode();
+        let mut r = io::Cursor::new(bytes);
+        Frame::read_from(&mut r).unwrap().unwrap()
+    }
+
+    #[test]
+    fn every_frame_kind_round_trips() {
+        for f in [
+            Frame::Hello { tenant: "tenant-a".into() },
+            Frame::Query { sql: "SELECT 1".into(), timeout_ms: 0 },
+            Frame::Query { sql: "SELECT * FROM items WHERE cost > 1.5".into(), timeout_ms: 2_500 },
+            Frame::Result { queue_wait_ns: 123_456, batch: sample_batch() },
+            Frame::Error { kind: ErrorKind::Exec, message: "no such table".into() },
+            Frame::Error { kind: ErrorKind::AdmissionTimeout, message: String::new() },
+        ] {
+            assert_eq!(round_trip(&f), f, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn result_frame_preserves_batch_bytes() {
+        let batch = sample_batch();
+        let f = Frame::Result { queue_wait_ns: 7, batch: batch.clone() };
+        let Frame::Result { batch: out, .. } = round_trip(&f) else { panic!() };
+        assert_eq!(out.as_bytes(), batch.as_bytes());
+        assert_eq!(out.decode().unwrap(), batch.decode().unwrap());
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_mid_frame_eof_is_malformed() {
+        let mut empty = io::Cursor::new(Vec::<u8>::new());
+        assert!(Frame::read_from(&mut empty).unwrap().is_none());
+        let full = Frame::Hello { tenant: "t".into() }.encode();
+        for cut in 1..full.len() {
+            let mut r = io::Cursor::new(full[..cut].to_vec());
+            let err = Frame::read_from(&mut r).unwrap_err();
+            assert!(
+                matches!(err, FrameError::Malformed(_)),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_prefixes_rejected() {
+        // Zero-length frame.
+        let mut r = io::Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(matches!(
+            Frame::read_from(&mut r).unwrap_err(),
+            FrameError::Malformed(_)
+        ));
+        // Oversized declared length — rejected before any allocation.
+        let mut r = io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(matches!(
+            Frame::read_from(&mut r).unwrap_err(),
+            FrameError::Oversized(_)
+        ));
+    }
+
+    #[test]
+    fn bad_bodies_rejected() {
+        // Unknown tag.
+        let mut bad = vec![1, 0, 0, 0, 99];
+        let mut r = io::Cursor::new(bad.clone());
+        assert!(Frame::read_from(&mut r).is_err());
+        // Hello with invalid UTF-8.
+        bad = Vec::new();
+        bad.extend_from_slice(&4u32.to_le_bytes());
+        bad.push(TAG_HELLO);
+        bad.extend_from_slice(&1u16.to_le_bytes());
+        bad.push(0xFF);
+        let mut r = io::Cursor::new(bad);
+        assert!(Frame::read_from(&mut r).is_err());
+        // Empty tenant.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&3u32.to_le_bytes());
+        bad.push(TAG_HELLO);
+        bad.extend_from_slice(&0u16.to_le_bytes());
+        let mut r = io::Cursor::new(bad);
+        assert!(Frame::read_from(&mut r).is_err());
+        // Query with trailing garbage after the SQL body.
+        let mut bad = Frame::Query { sql: "SELECT 1".into(), timeout_ms: 0 }.encode();
+        bad.push(0xAB);
+        let len = (bad.len() - 4) as u32;
+        bad[..4].copy_from_slice(&len.to_le_bytes());
+        let mut r = io::Cursor::new(bad);
+        assert!(Frame::read_from(&mut r).is_err());
+    }
+}

@@ -44,6 +44,7 @@ pub struct SessionBuilder {
     adaptive_shape: Option<bool>,
     query_timeout: Option<Duration>,
     fault_plan: Option<FaultPlan>,
+    catalog: Option<Arc<Catalog>>,
 }
 
 impl SessionBuilder {
@@ -117,8 +118,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Share an existing catalog instead of creating a fresh one — how
+    /// the serving layer's per-tenant sessions all see one registered
+    /// dataset without cloning it per tenant. Tables registered through
+    /// any sharing session are visible to all of them.
+    pub fn shared_catalog(mut self, catalog: Arc<Catalog>) -> Self {
+        self.catalog = Some(catalog);
+        self
+    }
+
     pub fn build(self) -> Result<Arc<Session>> {
-        let catalog = Arc::new(Catalog::new());
+        let catalog = self.catalog.unwrap_or_default();
         let registry = Arc::new(RwLock::new(UdfRegistry::new()));
         let stats = Arc::new(UdfStatsStore::new());
         let runtime = match &self.artifacts_dir {
@@ -210,6 +220,7 @@ impl Session {
             adaptive_shape: None,
             query_timeout: None,
             fault_plan: None,
+            catalog: None,
         }
     }
 
@@ -387,7 +398,22 @@ impl Session {
     /// (Non-adaptive sessions skip the recording — text-keyed history
     /// nobody consults would only accumulate.)
     pub fn sql_with_stats(&self, text: &str) -> Result<(RowSet, crate::engine::QueryStats)> {
-        let ctx = self.exec_context_for(text);
+        self.sql_with_stats_timeout(text, self.query_timeout)
+    }
+
+    /// Like [`Session::sql_with_stats`], but with a per-statement
+    /// wall-time bound overriding the session-level
+    /// [`SessionBuilder::query_timeout`] (None = unbounded even if the
+    /// session has a default). The serving layer uses this to hand each
+    /// statement whatever deadline budget remains after admission
+    /// queueing.
+    pub fn sql_with_stats_timeout(
+        &self,
+        text: &str,
+        timeout: Option<Duration>,
+    ) -> Result<(RowSet, crate::engine::QueryStats)> {
+        let mut ctx = self.exec_context_for(text);
+        ctx.cancel = timeout.map(CancelToken::with_deadline);
         let res = crate::engine::run_sql_with_stats(text, &ctx);
         // Node-health observations feed the shape policy on success AND
         // failure (the tally survives an aborted statement): a node that
@@ -728,6 +754,52 @@ mod tests {
         register_big_table(&s2);
         assert!(s2.sql("SELECT COUNT(*) AS n FROM t").is_ok());
         assert_eq!(s2.deadline_exceeded_count(), 0);
+    }
+
+    #[test]
+    fn shared_catalog_spans_sessions() {
+        // Two sessions over one catalog: a table registered through one
+        // is queryable from the other, with zero data cloning.
+        let catalog = Arc::new(crate::engine::Catalog::new());
+        let a = Session::builder().shared_catalog(catalog.clone()).build().unwrap();
+        let b = Session::builder().shared_catalog(catalog).build().unwrap();
+        register_big_table(&a);
+        let n = b.sql("SELECT COUNT(*) AS n FROM t").unwrap().row(0)[0]
+            .as_i64()
+            .unwrap();
+        assert_eq!(n, 20_000);
+        // An unshared session stays isolated.
+        let c = Session::builder().build().unwrap();
+        assert!(c.sql("SELECT COUNT(*) AS n FROM t").is_err());
+    }
+
+    #[test]
+    fn per_statement_timeout_overrides_session_default() {
+        // Session has no default timeout; a tight per-statement deadline
+        // against an injected stall must still cut the query, and a
+        // subsequent unbounded statement on the same session must run.
+        let s = Session::builder()
+            .nodes(2)
+            .parallelism(2)
+            .adaptive_shape(false)
+            .fault_plan(FaultPlan::parse("seed=1;slow=1:120000").unwrap())
+            .build()
+            .unwrap();
+        register_big_table(&s);
+        let err = s
+            .sql_with_stats_timeout(
+                "SELECT x, COUNT(*) AS n FROM t GROUP BY x",
+                Some(Duration::from_millis(200)),
+            )
+            .unwrap_err();
+        assert!(crate::engine::fault::is_deadline_exceeded(&err), "{err:#}");
+        assert_eq!(s.deadline_exceeded_count(), 1);
+        // None = unbounded; a fresh fault-free session runs normally.
+        let s2 = Session::builder().nodes(1).parallelism(2).build().unwrap();
+        register_big_table(&s2);
+        assert!(s2
+            .sql_with_stats_timeout("SELECT COUNT(*) AS n FROM t", None)
+            .is_ok());
     }
 
     #[test]

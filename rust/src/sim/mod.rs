@@ -1,7 +1,8 @@
 //! Workload simulation: the TPCx-BB-inspired retail dataset + UDF query
 //! set (Fig. 6), the remote-cluster (Spark-like) baseline with data
-//! movement and failure injection (§V case studies), and the calibrated
-//! production trace generators (Fig. 4 / Fig. 5).
+//! movement and failure injection (§V case studies), the calibrated
+//! production trace generators (Fig. 4 / Fig. 5), and the serving-layer
+//! load harness (statement catalog + closed/open-loop driver).
 
 mod remote;
 mod tpcxbb;
@@ -9,4 +10,8 @@ mod workload;
 
 pub use remote::{RemoteCluster, RemoteCostModel, RemoteJobOutcome};
 pub use tpcxbb::{register_udfs, TpcxBbDataset, TpcxBbQuery, TPCXBB_QUERIES};
-pub use workload::{memory_workloads, InitTrace, MemoryWorkload, TraceQuery};
+pub use workload::{
+    memory_workloads, plan_load, run_load, Arrival, ClientPlan, InitTrace, LoadConfig, LoadReport,
+    MemoryWorkload, PlannedRequest, ServingStatement, TenantOutcomes, TraceQuery,
+    SERVING_CATALOG,
+};

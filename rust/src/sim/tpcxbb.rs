@@ -73,6 +73,28 @@ impl TpcxBbDataset {
         Ok(())
     }
 
+    /// Merge each partitioned table into one plain table on a bare
+    /// catalog — for the serving layer, whose shared catalog carries no
+    /// per-session partition map (every tenant session layered on top
+    /// sees the same merged tables).
+    pub fn register_merged(&self, catalog: &crate::engine::Catalog) -> Result<()> {
+        for (name, parts) in [
+            ("store_sales", &self.store_sales),
+            ("product_reviews", &self.product_reviews),
+            ("web_clickstreams", &self.web_clickstreams),
+        ] {
+            let mut iter = parts.iter();
+            let Some(first) = iter.next() else { continue };
+            let mut merged = first.clone();
+            for p in iter {
+                merged.append(p)?;
+            }
+            catalog.register(name, merged);
+        }
+        catalog.register("items", self.items.clone());
+        Ok(())
+    }
+
     pub fn total_rows(&self) -> usize {
         self.store_sales.iter().map(RowSet::num_rows).sum::<usize>()
             + self.product_reviews.iter().map(RowSet::num_rows).sum::<usize>()
@@ -345,6 +367,19 @@ mod tests {
         assert!(costs.iter().any(|&c| c < 1_000));
         assert!(costs.iter().any(|&c| c > 20_000));
         assert_eq!(TPCXBB_QUERIES.len(), 12);
+    }
+
+    #[test]
+    fn merged_registration_matches_partitioned_totals() {
+        let ds = TpcxBbDataset::generate(600, 3, 1.3, 11);
+        let catalog = crate::engine::Catalog::new();
+        ds.register_merged(&catalog).unwrap();
+        let merged = catalog.get("store_sales").unwrap();
+        let partitioned: usize = ds.store_sales.iter().map(RowSet::num_rows).sum();
+        assert_eq!(merged.num_rows(), partitioned);
+        assert_eq!(catalog.get("items").unwrap().num_rows(), 512);
+        assert!(catalog.contains("web_clickstreams"));
+        assert!(catalog.contains("product_reviews"));
     }
 
     #[test]

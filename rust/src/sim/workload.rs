@@ -8,8 +8,18 @@
 //! - [`memory_workloads`]: the Fig. 5 sample — 50 workloads spanning the
 //!   paper's memory-consumption bands, each with a stable-but-noisy true
 //!   demand trajectory.
+//! - [`SERVING_CATALOG`] + [`run_load`]: the serving-layer load harness —
+//!   a fixed statement catalog with a small/heavy split, a deterministic
+//!   per-client arrival plan ([`plan_load`]), and a closed/open-loop
+//!   driver that pushes hundreds of concurrent statements through a live
+//!   `snowparkd serve` endpoint and accounts for every one of them.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
 
 use crate::packages::{PackageSpec, PackageUniverse};
+use crate::server::{ErrorKind, ServeClient, ServeReply};
+use crate::util::histogram::Sampled;
 use crate::util::rng::{Rng, Zipf};
 
 /// One query in the Fig. 4 init-latency trace.
@@ -118,6 +128,385 @@ pub fn memory_workloads(rng: &mut Rng) -> Vec<MemoryWorkload> {
     out
 }
 
+/// One statement in the fixed serving catalog.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingStatement {
+    /// Short label for reports.
+    pub name: &'static str,
+    /// The SQL text sent over the wire.
+    pub sql: &'static str,
+    /// Heavy statements scan/aggregate whole tables; small ones touch a
+    /// sliver. The mix is what admission control exists to arbitrate.
+    pub heavy: bool,
+}
+
+/// The serving workload: a fixed catalog over the TPCx-BB-style retail
+/// schema (as registered by `TpcxBbDataset::register_merged`). Fixed so
+/// that Zipf rank k always means the same statement — the popularity
+/// skew plus the small/heavy split is the interesting structure.
+pub const SERVING_CATALOG: &[ServingStatement] = &[
+    ServingStatement {
+        name: "count_sales",
+        sql: "SELECT COUNT(*) AS n FROM store_sales",
+        heavy: false,
+    },
+    ServingStatement {
+        name: "top_cost_items",
+        sql: "SELECT item_id, cost FROM items ORDER BY cost DESC LIMIT 10",
+        heavy: false,
+    },
+    ServingStatement {
+        name: "pricey_sales",
+        sql: "SELECT sale_id, price FROM store_sales WHERE price > 80 LIMIT 20",
+        heavy: false,
+    },
+    ServingStatement {
+        name: "category_counts",
+        sql: "SELECT category, COUNT(*) AS n FROM items GROUP BY category ORDER BY n DESC, category",
+        heavy: false,
+    },
+    ServingStatement {
+        name: "five_star_reviews",
+        sql: "SELECT COUNT(*) AS n FROM product_reviews WHERE stars = 5",
+        heavy: false,
+    },
+    ServingStatement {
+        name: "revenue_by_item",
+        sql: "SELECT item_id, SUM(price * quantity) AS revenue FROM store_sales \
+              GROUP BY item_id ORDER BY revenue DESC LIMIT 25",
+        heavy: true,
+    },
+    ServingStatement {
+        name: "margin_by_category",
+        sql: "SELECT i.category, COUNT(*) AS n, SUM(s.price - i.cost) AS margin \
+              FROM store_sales s JOIN items i ON s.item_id = i.item_id \
+              GROUP BY i.category ORDER BY margin DESC",
+        heavy: true,
+    },
+    ServingStatement {
+        name: "clicks_by_user",
+        sql: "SELECT user_id, COUNT(*) AS clicks FROM web_clickstreams \
+              GROUP BY user_id ORDER BY clicks DESC, user_id LIMIT 50",
+        heavy: true,
+    },
+    ServingStatement {
+        name: "stars_by_item",
+        sql: "SELECT item_id, AVG(stars) AS avg_stars, COUNT(*) AS n FROM product_reviews \
+              GROUP BY item_id ORDER BY n DESC, item_id LIMIT 25",
+        heavy: true,
+    },
+];
+
+/// How clients pace their requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Closed loop: each client waits for its reply, thinks for a fixed
+    /// pause, then sends the next statement.
+    Closed {
+        /// Think time between a reply and the next request.
+        think_ms: u64,
+    },
+    /// Open loop: each client sends on an exponential inter-arrival
+    /// schedule at `rate_per_s` requests/second, regardless of replies.
+    /// (Each client still waits for its own reply — open-loop pressure
+    /// comes from running many clients.)
+    Open {
+        /// Per-client mean arrival rate.
+        rate_per_s: f64,
+    },
+}
+
+/// Parameters for one load run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadConfig {
+    /// Distinct tenants; client c serves tenant `c % tenants`.
+    pub tenants: usize,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Statements each client sends.
+    pub requests_per_client: usize,
+    /// Pacing model.
+    pub arrival: Arrival,
+    /// Zipf skew over the statement catalog (rank 0 most popular).
+    pub zipf_s: f64,
+    /// Seed for the whole plan — same seed, same schedule.
+    pub seed: u64,
+    /// Per-statement deadline shipped in the `Query` frame (0 = none).
+    pub timeout_ms: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            tenants: 2,
+            clients: 8,
+            requests_per_client: 8,
+            arrival: Arrival::Closed { think_ms: 0 },
+            zipf_s: 1.1,
+            seed: 7,
+            timeout_ms: 0,
+        }
+    }
+}
+
+/// One pre-planned request: which catalog statement, and how long to
+/// pause before sending it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedRequest {
+    /// Index into the statement catalog.
+    pub statement: usize,
+    /// Pause before this request (think time or inter-arrival gap).
+    pub delay_us: u64,
+}
+
+/// One client's full schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClientPlan {
+    /// Client index (thread identity).
+    pub client: usize,
+    /// Tenant this client's connection handshakes as.
+    pub tenant: String,
+    /// Statements in send order.
+    pub requests: Vec<PlannedRequest>,
+}
+
+/// Expand a [`LoadConfig`] into the exact per-client schedule. Pure: the
+/// same config always yields the same plan, independent of wall clock,
+/// thread timing, or how the run later unfolds — this is what makes the
+/// harness replayable.
+pub fn plan_load(catalog_len: usize, cfg: &LoadConfig) -> Vec<ClientPlan> {
+    assert!(catalog_len > 0, "empty statement catalog");
+    let mut root = Rng::new(cfg.seed);
+    let zipf = Zipf::new(catalog_len, cfg.zipf_s);
+    (0..cfg.clients)
+        .map(|c| {
+            let mut rng = root.fork(c as u64 + 1);
+            let requests = (0..cfg.requests_per_client)
+                .map(|_| {
+                    let statement = zipf.sample(&mut rng);
+                    let delay_us = match cfg.arrival {
+                        Arrival::Closed { think_ms } => think_ms * 1_000,
+                        Arrival::Open { rate_per_s } => {
+                            let mean_us = 1e6 / rate_per_s.max(1e-6);
+                            rng.exponential(mean_us) as u64
+                        }
+                    };
+                    PlannedRequest { statement, delay_us }
+                })
+                .collect();
+            ClientPlan {
+                client: c,
+                tenant: format!("tenant-{}", c % cfg.tenants.max(1)),
+                requests,
+            }
+        })
+        .collect()
+}
+
+/// Per-tenant outcome tally, as observed from the client side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TenantOutcomes {
+    /// Statements sent.
+    pub sent: u64,
+    /// `Result` frames received.
+    pub ok: u64,
+    /// `Error{AdmissionTimeout}` replies.
+    pub admission_timeout: u64,
+    /// `Error{DeadlineExceeded}` replies.
+    pub deadline_exceeded: u64,
+    /// `Error{Exec}` replies.
+    pub exec_error: u64,
+    /// Transport/grammar failures (no well-formed reply).
+    pub protocol_error: u64,
+}
+
+impl TenantOutcomes {
+    /// Every sent statement got exactly one classified outcome.
+    pub fn accounted(&self) -> bool {
+        self.sent
+            == self.ok
+                + self.admission_timeout
+                + self.deadline_exceeded
+                + self.exec_error
+                + self.protocol_error
+    }
+}
+
+/// What a load run measured.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Wall time from first send to last reply.
+    pub wall: Duration,
+    /// End-to-end latency percentiles (milliseconds).
+    pub p50_ms: f64,
+    /// 95th percentile latency (milliseconds).
+    pub p95_ms: f64,
+    /// 99th percentile latency (milliseconds).
+    pub p99_ms: f64,
+    /// Mean end-to-end latency (milliseconds).
+    pub mean_ms: f64,
+    /// Mean server-reported admission queue wait (milliseconds).
+    pub mean_queue_wait_ms: f64,
+    /// Total result rows received.
+    pub total_rows: u64,
+    /// Outcomes keyed by tenant (BTreeMap: iteration order is stable).
+    pub per_tenant: BTreeMap<String, TenantOutcomes>,
+}
+
+impl LoadReport {
+    fn fold(&self, f: impl Fn(&TenantOutcomes) -> u64) -> u64 {
+        self.per_tenant.values().map(f).sum()
+    }
+
+    /// Statements sent across all tenants.
+    pub fn sent(&self) -> u64 {
+        self.fold(|t| t.sent)
+    }
+
+    /// Statements that returned rows.
+    pub fn ok(&self) -> u64 {
+        self.fold(|t| t.ok)
+    }
+
+    /// Statements rejected at the admission gate.
+    pub fn admission_timeouts(&self) -> u64 {
+        self.fold(|t| t.admission_timeout)
+    }
+
+    /// Statements cut by their execution deadline.
+    pub fn deadline_exceeded(&self) -> u64 {
+        self.fold(|t| t.deadline_exceeded)
+    }
+
+    /// Statements that failed in execution.
+    pub fn exec_errors(&self) -> u64 {
+        self.fold(|t| t.exec_error)
+    }
+
+    /// Statements with no well-formed reply.
+    pub fn protocol_errors(&self) -> u64 {
+        self.fold(|t| t.protocol_error)
+    }
+
+    /// Completed statements per wall-clock second.
+    pub fn qps(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.ok() as f64 / s
+        }
+    }
+
+    /// True when every tenant's ledger balances.
+    pub fn accounted(&self) -> bool {
+        self.per_tenant.values().all(TenantOutcomes::accounted)
+    }
+
+    /// The schedule-determined slice of the report — outcome counts only,
+    /// no timings — for determinism assertions.
+    pub fn deterministic(&self) -> BTreeMap<String, TenantOutcomes> {
+        self.per_tenant.clone()
+    }
+}
+
+/// Drive `catalog` statements at the server on `addr` per `cfg`: one OS
+/// thread + one connection per client, each following its [`ClientPlan`].
+/// Returns only when every client has finished its schedule; every sent
+/// statement lands in exactly one [`TenantOutcomes`] bucket.
+pub fn run_load(
+    addr: std::net::SocketAddr,
+    catalog: &'static [ServingStatement],
+    cfg: &LoadConfig,
+) -> anyhow::Result<LoadReport> {
+    let plans = plan_load(catalog.len(), cfg);
+    let timeout_ms = cfg.timeout_ms;
+    let start = Instant::now();
+    let handles: Vec<_> = plans
+        .into_iter()
+        .map(|plan| {
+            std::thread::spawn(move || {
+                let mut out = TenantOutcomes::default();
+                let mut latencies_us: Vec<f64> = Vec::with_capacity(plan.requests.len());
+                let mut queue_waits_us: Vec<f64> = Vec::with_capacity(plan.requests.len());
+                let mut rows = 0u64;
+                let mut client = match ServeClient::connect(addr, &plan.tenant) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        // Connection refused: every planned statement is a
+                        // protocol failure, not silence.
+                        out.sent = plan.requests.len() as u64;
+                        out.protocol_error = out.sent;
+                        return (plan.tenant, out, latencies_us, queue_waits_us, rows);
+                    }
+                };
+                // A reply taking over a minute means a hung server — fail
+                // loudly instead of wedging the harness.
+                client.set_read_timeout(Some(Duration::from_secs(60))).ok();
+                for req in &plan.requests {
+                    if req.delay_us > 0 {
+                        std::thread::sleep(Duration::from_micros(req.delay_us));
+                    }
+                    out.sent += 1;
+                    let sent_at = Instant::now();
+                    match client.query(catalog[req.statement].sql, timeout_ms) {
+                        Ok(ServeReply::Rows { rows: rs, queue_wait }) => {
+                            out.ok += 1;
+                            rows += rs.num_rows() as u64;
+                            latencies_us.push(sent_at.elapsed().as_secs_f64() * 1e6);
+                            queue_waits_us.push(queue_wait.as_secs_f64() * 1e6);
+                        }
+                        Ok(ServeReply::Denied { kind, .. }) => match kind {
+                            ErrorKind::AdmissionTimeout => out.admission_timeout += 1,
+                            ErrorKind::DeadlineExceeded => out.deadline_exceeded += 1,
+                            ErrorKind::Exec => out.exec_error += 1,
+                            ErrorKind::Protocol => out.protocol_error += 1,
+                        },
+                        Err(_) => out.protocol_error += 1,
+                    }
+                }
+                (plan.tenant, out, latencies_us, queue_waits_us, rows)
+            })
+        })
+        .collect();
+
+    let mut per_tenant: BTreeMap<String, TenantOutcomes> = BTreeMap::new();
+    let mut latencies = Sampled::new();
+    let mut queue_waits = Sampled::new();
+    let mut total_rows = 0u64;
+    for h in handles {
+        let (tenant, out, lat, qw, rows) =
+            h.join().map_err(|_| anyhow::anyhow!("load client thread panicked"))?;
+        let t = per_tenant.entry(tenant).or_default();
+        t.sent += out.sent;
+        t.ok += out.ok;
+        t.admission_timeout += out.admission_timeout;
+        t.deadline_exceeded += out.deadline_exceeded;
+        t.exec_error += out.exec_error;
+        t.protocol_error += out.protocol_error;
+        for v in lat {
+            latencies.record(v);
+        }
+        for v in qw {
+            queue_waits.record(v);
+        }
+        total_rows += rows;
+    }
+    let wall = start.elapsed();
+    // `Sampled::percentile` panics on zero samples (all statements failed).
+    let pct = |s: &mut Sampled, p: f64| if s.is_empty() { 0.0 } else { s.percentile(p) };
+    Ok(LoadReport {
+        wall,
+        p50_ms: pct(&mut latencies, 50.0) / 1e3,
+        p95_ms: pct(&mut latencies, 95.0) / 1e3,
+        p99_ms: pct(&mut latencies, 99.0) / 1e3,
+        mean_ms: latencies.mean() / 1e3,
+        mean_queue_wait_ms: queue_waits.mean() / 1e3,
+        total_rows,
+        per_tenant,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +535,89 @@ mod tests {
         assert_eq!(ws.len(), 50);
         assert!(ws.iter().any(|w| w.center_bytes < 1 << 30));
         assert!(ws.iter().any(|w| w.center_bytes > 16u64 << 30));
+    }
+
+    #[test]
+    fn serving_catalog_mixes_small_and_heavy() {
+        assert!(SERVING_CATALOG.len() >= 8);
+        assert!(SERVING_CATALOG.iter().any(|s| s.heavy));
+        assert!(SERVING_CATALOG.iter().any(|s| !s.heavy));
+        // Names are distinct (they key report rows).
+        let mut names: Vec<_> = SERVING_CATALOG.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), SERVING_CATALOG.len());
+    }
+
+    #[test]
+    fn load_plan_is_deterministic_and_replayable() {
+        let cfg = LoadConfig {
+            clients: 12,
+            tenants: 3,
+            requests_per_client: 20,
+            arrival: Arrival::Open { rate_per_s: 50.0 },
+            ..LoadConfig::default()
+        };
+        let a = plan_load(SERVING_CATALOG.len(), &cfg);
+        let b = plan_load(SERVING_CATALOG.len(), &cfg);
+        assert_eq!(a, b, "same config must yield an identical schedule");
+        let c = plan_load(SERVING_CATALOG.len(), &LoadConfig { seed: 99, ..cfg });
+        assert_ne!(a, c, "a different seed must reshuffle the schedule");
+        // Tenants round-robin over clients.
+        assert_eq!(a[0].tenant, "tenant-0");
+        assert_eq!(a[1].tenant, "tenant-1");
+        assert_eq!(a[3].tenant, "tenant-0");
+        // Every planned statement indexes into the catalog.
+        for plan in &a {
+            assert_eq!(plan.requests.len(), 20);
+            for r in &plan.requests {
+                assert!(r.statement < SERVING_CATALOG.len());
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_plan_is_head_heavy() {
+        let cfg = LoadConfig {
+            clients: 16,
+            requests_per_client: 50,
+            zipf_s: 1.2,
+            ..LoadConfig::default()
+        };
+        let plans = plan_load(SERVING_CATALOG.len(), &cfg);
+        let mut counts = vec![0usize; SERVING_CATALOG.len()];
+        for p in &plans {
+            for r in &p.requests {
+                counts[r.statement] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        assert_eq!(total, 16 * 50);
+        // Rank 0 dominates any tail statement under Zipf skew.
+        assert!(counts[0] > counts[SERVING_CATALOG.len() - 1] * 2, "{counts:?}");
+    }
+
+    #[test]
+    fn closed_arrival_uses_fixed_think_time() {
+        let cfg = LoadConfig {
+            clients: 2,
+            requests_per_client: 5,
+            arrival: Arrival::Closed { think_ms: 3 },
+            ..LoadConfig::default()
+        };
+        for plan in plan_load(SERVING_CATALOG.len(), &cfg) {
+            for r in &plan.requests {
+                assert_eq!(r.delay_us, 3_000);
+            }
+        }
+    }
+
+    #[test]
+    fn outcome_accounting_balances() {
+        let mut t = TenantOutcomes { sent: 5, ok: 3, exec_error: 2, ..Default::default() };
+        assert!(t.accounted());
+        t.sent = 6;
+        assert!(!t.accounted());
     }
 
     #[test]

@@ -44,7 +44,7 @@ use super::value::{DataType, Field, Schema};
 /// let wire = WireBatch::encode(&rs);
 /// assert_eq!(wire.decode().unwrap(), rs);
 /// ```
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireBatch {
     bytes: Vec<u8>,
     rows: usize,
@@ -277,6 +277,25 @@ impl WireBatch {
         self.bytes.len()
     }
 
+    /// The raw encoded bytes, for embedding a batch in an outer envelope
+    /// (the serving protocol's `Result` frame ships these verbatim).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Reconstruct a batch from raw encoded bytes (the receive side of
+    /// [`WireBatch::as_bytes`]). Only the 8-byte header is validated
+    /// here — enough to recover the row count; [`WireBatch::decode`]
+    /// bounds-checks the full payload, so a corrupted body surfaces as a
+    /// clean decode error, never a panic.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<WireBatch> {
+        if bytes.len() < 8 {
+            bail!("wire batch too short: {} bytes, need at least 8", bytes.len());
+        }
+        let rows = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        Ok(WireBatch { bytes, rows })
+    }
+
     /// Number of rows in the batch (without decoding).
     pub fn num_rows(&self) -> usize {
         self.rows
@@ -373,6 +392,22 @@ mod tests {
             let actual = WireBatch::encode_columns(&rs.schema.fields, &cols, off, len);
             assert_eq!(predicted, actual.wire_len(), "range ({off}, {len})");
         }
+    }
+
+    #[test]
+    fn raw_bytes_round_trip() {
+        let rs = sample();
+        let w = WireBatch::encode(&rs);
+        let rebuilt = WireBatch::from_bytes(w.as_bytes().to_vec()).unwrap();
+        assert_eq!(rebuilt, w);
+        assert_eq!(rebuilt.num_rows(), w.num_rows());
+        assert_eq!(rebuilt.decode().unwrap(), rs);
+        // Headerless fragments are rejected up front.
+        assert!(WireBatch::from_bytes(vec![1, 2, 3]).is_err());
+        // A corrupted body defers to decode's bounds checks.
+        let mut bad = w.as_bytes().to_vec();
+        bad.truncate(bad.len() - 1);
+        assert!(WireBatch::from_bytes(bad).unwrap().decode().is_err());
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Property tests for admission control (via the from-scratch
+//! `util::quick` framework — proptest is unavailable offline).
+//!
+//! Simulation ([`WarehouseScheduler`]): over randomized seeded request
+//! streams, every submission gets exactly one outcome (never both
+//! admitted and timed out), timed-out waits equal arrival → deadline
+//! exactly, and deadlined requests that do run were admitted before
+//! their deadline. Online ([`AdmissionGate`]): under a thread fuzz,
+//! admitted + timed_out equals submissions and all reservations drain.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use snowpark::scheduler::{
+    AdmissionConfig, AdmissionGate, AdmissionOutcome, AdmissionPolicy, QueryRequest,
+    WarehouseScheduler,
+};
+use snowpark::util::clock::{Clock, SimClock};
+use snowpark::util::ids::QueryId;
+use snowpark::util::quick::{forall, prop_assert, prop_eq, Config};
+
+const CAPACITY: u64 = 1_000;
+
+/// A randomized request stream: arrivals sorted ascending, estimates and
+/// actuals spanning [tiny, 1.5 × capacity] so placement, queueing, OOM,
+/// and the oversized-estimate path all get exercised; ~30 % of requests
+/// carry a deadline.
+fn random_stream(g: &mut snowpark::util::quick::Gen, n: usize) -> Vec<QueryRequest> {
+    let mut arrivals: Vec<u64> = (0..n)
+        .map(|_| Duration::from_micros(g.usize_in(0..40_000) as u64).as_nanos() as u64)
+        .collect();
+    arrivals.sort_unstable();
+    arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, &arrival_nanos)| {
+            let estimate_bytes = 1 + g.usize_in(0..(CAPACITY as usize * 3 / 2)) as u64;
+            let actual_bytes = 1 + g.usize_in(0..(CAPACITY as usize * 3 / 2)) as u64;
+            let deadline_nanos = (g.usize_in(0..10) < 3).then(|| {
+                arrival_nanos + Duration::from_micros(1 + g.usize_in(0..20_000) as u64).as_nanos() as u64
+            });
+            QueryRequest {
+                id: QueryId(i as u64),
+                key: format!("q{i}"),
+                estimate_bytes,
+                actual_bytes,
+                duration: Duration::from_micros(1 + g.usize_in(0..5_000) as u64),
+                arrival_nanos,
+                deadline_nanos,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_every_submission_gets_exactly_one_outcome() {
+    forall(Config::cases(20), |g| {
+        let n = 5 + g.usize_in(0..40);
+        let requests = random_stream(g, n);
+        let clock = SimClock::new();
+        let mut s = WarehouseScheduler::new(&clock, 1 + g.usize_in(0..4), CAPACITY);
+        for q in &requests {
+            // Drive the virtual clock to each arrival instant.
+            let now = clock.now_nanos();
+            if q.arrival_nanos > now {
+                clock.sleep(Duration::from_nanos(q.arrival_nanos - now));
+            }
+            s.submit(q.clone());
+        }
+        s.run_to_completion();
+
+        prop_eq(s.outcomes().len(), n, "one outcome per submission")?;
+        // No request is both admitted and timed out (or double-counted):
+        // every id appears exactly once across all outcome kinds.
+        let ids: HashSet<u64> = s.outcomes().iter().map(|(id, _)| id.0).collect();
+        prop_eq(ids.len(), n, "distinct outcome ids")?;
+        let submitted: HashSet<u64> = requests.iter().map(|q| q.id.0).collect();
+        prop_assert(ids == submitted, "outcome ids == submitted ids")
+    });
+}
+
+#[test]
+fn prop_deadlines_bound_queue_waits() {
+    forall(Config::cases(20), |g| {
+        let n = 5 + g.usize_in(0..40);
+        let requests = random_stream(g, n);
+        let clock = SimClock::new();
+        let mut s = WarehouseScheduler::new(&clock, 1 + g.usize_in(0..3), CAPACITY);
+        for q in &requests {
+            let now = clock.now_nanos();
+            if q.arrival_nanos > now {
+                clock.sleep(Duration::from_nanos(q.arrival_nanos - now));
+            }
+            s.submit(q.clone());
+        }
+        s.run_to_completion();
+
+        let horizon = Duration::from_nanos(clock.now_nanos());
+        for (id, outcome) in s.outcomes() {
+            let req = &requests[id.0 as usize];
+            let budget = req
+                .deadline_nanos
+                .map(|d| Duration::from_nanos(d.saturating_sub(req.arrival_nanos)));
+            match outcome {
+                AdmissionOutcome::TimedOut { queue_wait } => {
+                    // Timed-out wait is charged arrival → deadline exactly.
+                    prop_eq(
+                        Some(*queue_wait),
+                        budget,
+                        &format!("q{} timed-out wait equals its budget", id.0),
+                    )?;
+                }
+                AdmissionOutcome::Completed { queue_wait, .. }
+                | AdmissionOutcome::OomKilled { queue_wait, .. } => {
+                    // Placed requests were admitted before their deadline…
+                    if let Some(b) = budget {
+                        prop_assert(
+                            *queue_wait <= b,
+                            format!("q{}: wait {queue_wait:?} within budget {b:?}", id.0),
+                        )?;
+                    }
+                    // …and no wait can exceed the whole simulated span.
+                    prop_assert(
+                        *queue_wait <= horizon,
+                        format!("q{}: wait {queue_wait:?} within horizon {horizon:?}", id.0),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_undeadlined_streams_never_time_out() {
+    forall(Config::cases(10), |g| {
+        let n = 5 + g.usize_in(0..30);
+        let mut requests = random_stream(g, n);
+        for q in &mut requests {
+            q.deadline_nanos = None;
+        }
+        let clock = SimClock::new();
+        let mut s = WarehouseScheduler::new(&clock, 2, CAPACITY);
+        for q in &requests {
+            let now = clock.now_nanos();
+            if q.arrival_nanos > now {
+                clock.sleep(Duration::from_nanos(q.arrival_nanos - now));
+            }
+            s.submit(q.clone());
+        }
+        s.run_to_completion();
+        prop_eq(s.timed_out_count(), 0, "no deadline, no timeout")?;
+        prop_eq(s.outcomes().len(), n, "everything resolves")
+    });
+}
+
+/// Thread-fuzz the online gate: every admit() resolves to exactly one of
+/// admitted/timed-out, and when all tickets drop the gate drains to zero
+/// reservations and an empty queue.
+#[test]
+fn gate_fuzz_accounts_for_every_request() {
+    for (seed, policy) in [(1u64, AdmissionPolicy::Fifo), (2, AdmissionPolicy::Backfill)] {
+        let gate = Arc::new(AdmissionGate::new(AdmissionConfig {
+            slots: 2,
+            capacity_bytes: CAPACITY,
+            policy,
+        }));
+        let threads = 8;
+        let per_thread = 25;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let gate = Arc::clone(&gate);
+                std::thread::spawn(move || {
+                    let mut rng = snowpark::util::rng::Rng::new(seed * 1000 + t);
+                    let mut admitted = 0u64;
+                    let mut timed_out = 0u64;
+                    for _ in 0..per_thread {
+                        let est = 1 + rng.below(CAPACITY * 3 / 2);
+                        // Short random deadlines force the timeout path
+                        // to interleave with releases.
+                        let deadline = rng
+                            .bool(0.5)
+                            .then(|| Instant::now() + Duration::from_millis(rng.below(8)));
+                        match gate.admit(est, deadline) {
+                            Ok(ticket) => {
+                                admitted += 1;
+                                // Hold the slot briefly to create contention.
+                                std::thread::sleep(Duration::from_micros(rng.below(300)));
+                                drop(ticket);
+                            }
+                            Err(_) => timed_out += 1,
+                        }
+                    }
+                    (admitted, timed_out)
+                })
+            })
+            .collect();
+        let mut admitted = 0u64;
+        let mut timed_out = 0u64;
+        for h in handles {
+            let (a, t) = h.join().expect("fuzz thread panicked");
+            admitted += a;
+            timed_out += t;
+        }
+        let total = (threads * per_thread) as u64;
+        assert_eq!(admitted + timed_out, total, "{policy:?}: every admit resolves once");
+        let counters = gate.counters();
+        assert_eq!(counters.admitted, admitted, "{policy:?}: gate agrees on admissions");
+        assert_eq!(counters.timed_out, timed_out, "{policy:?}: gate agrees on timeouts");
+        assert_eq!(gate.reserved_total(), 0, "{policy:?}: all reservations released");
+        assert_eq!(gate.queued(), 0, "{policy:?}: queue drained");
+    }
+}

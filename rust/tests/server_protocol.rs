@@ -1,0 +1,267 @@
+//! Wire-protocol robustness: every frame kind round-trips through the
+//! public codec, and a seeded fuzz loop throws truncated / oversized /
+//! garbage byte streams at a *live* server — every hostile input must
+//! yield a clean `Error` frame or a closed connection, never a panic or
+//! a hang, and the server must keep serving clean traffic afterwards.
+
+use std::io::{self, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use snowpark::engine::Catalog;
+use snowpark::server::{
+    ErrorKind, Frame, FrameError, ServeClient, ServeReply, Server, ServerConfig, MAX_FRAME_LEN,
+};
+use snowpark::session::Session;
+use snowpark::types::{Column, DataType, Field, RowSet, Schema, WireBatch};
+use snowpark::util::rng::Rng;
+
+/// How long a fuzz case may block on a server reply before we call it a
+/// hang. Generous for CI; real replies arrive in microseconds.
+const HANG_TIMEOUT: Duration = Duration::from_secs(5);
+
+fn sample_rows(n: i64) -> RowSet {
+    RowSet::new(
+        Schema::new(vec![
+            Field::new("id", DataType::Int64),
+            Field::new("name", DataType::Utf8),
+        ]),
+        vec![
+            Column::from_i64((0..n).collect()),
+            Column::from_strings((0..n).map(|i| format!("row-{i}")).collect()),
+        ],
+    )
+    .unwrap()
+}
+
+fn start_server() -> Server {
+    let catalog = Arc::new(Catalog::new());
+    catalog.register("demo", sample_rows(256));
+    Server::start(
+        ServerConfig::default(),
+        Box::new(move |_tenant| {
+            Session::builder().shared_catalog(Arc::clone(&catalog)).build().map(Arc::new)
+        }),
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------------- codec
+
+#[test]
+fn every_frame_kind_round_trips_through_public_codec() {
+    let frames = [
+        Frame::Hello { tenant: "tenant-a".into() },
+        Frame::Hello { tenant: "τenant-ünïcode".into() },
+        Frame::Query { sql: "SELECT 1".into(), timeout_ms: 0 },
+        Frame::Query { sql: "SELECT * FROM demo WHERE id > 10".into(), timeout_ms: 30_000 },
+        Frame::Result { queue_wait_ns: 0, batch: WireBatch::encode(&sample_rows(5)) },
+        // Empty result set — zero rows must survive the codec too.
+        Frame::Result { queue_wait_ns: u64::MAX, batch: WireBatch::encode(&sample_rows(0)) },
+        Frame::Error { kind: ErrorKind::Protocol, message: "bad frame".into() },
+        Frame::Error { kind: ErrorKind::AdmissionTimeout, message: String::new() },
+        Frame::Error { kind: ErrorKind::DeadlineExceeded, message: "took too long".into() },
+        Frame::Error { kind: ErrorKind::Exec, message: "no such table".into() },
+    ];
+    for frame in &frames {
+        let bytes = frame.encode();
+        let mut r = io::Cursor::new(bytes.clone());
+        let back = Frame::read_from(&mut r).unwrap().unwrap();
+        assert_eq!(&back, frame);
+        // Re-encoding is byte-stable (the codec is canonical).
+        assert_eq!(back.encode(), bytes, "{frame:?}");
+    }
+    // Frames concatenated on one stream parse back in order.
+    let mut wire = Vec::new();
+    for frame in &frames {
+        wire.extend_from_slice(&frame.encode());
+    }
+    let mut r = io::Cursor::new(wire);
+    for frame in &frames {
+        assert_eq!(&Frame::read_from(&mut r).unwrap().unwrap(), frame);
+    }
+    assert!(Frame::read_from(&mut r).unwrap().is_none(), "clean EOF after last frame");
+}
+
+#[test]
+fn truncation_at_every_byte_is_malformed_not_panic() {
+    let frames = [
+        Frame::Hello { tenant: "t".into() },
+        Frame::Query { sql: "SELECT id FROM demo".into(), timeout_ms: 9 },
+        Frame::Result { queue_wait_ns: 3, batch: WireBatch::encode(&sample_rows(2)) },
+        Frame::Error { kind: ErrorKind::Exec, message: "x".into() },
+    ];
+    for frame in &frames {
+        let full = frame.encode();
+        for cut in 1..full.len() {
+            let mut r = io::Cursor::new(full[..cut].to_vec());
+            let err = Frame::read_from(&mut r).unwrap_err();
+            assert!(
+                matches!(err, FrameError::Malformed(_)),
+                "{frame:?} cut at {cut}: {err}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------ live fuzz
+
+/// Read replies until the server closes the connection, asserting every
+/// frame we do get back is a well-formed reply and nothing blocks past
+/// [`HANG_TIMEOUT`]. Returns the number of `Error` frames seen.
+fn drain_replies(stream: &TcpStream, ctx: &str) -> usize {
+    stream.set_read_timeout(Some(HANG_TIMEOUT)).unwrap();
+    let mut reader = io::BufReader::new(stream.try_clone().unwrap());
+    let mut errors = 0;
+    loop {
+        match Frame::read_from(&mut reader) {
+            Ok(Some(Frame::Error { .. })) => errors += 1,
+            Ok(Some(Frame::Result { .. })) => {}
+            Ok(Some(other)) => panic!("{ctx}: server sent a client-side frame {other:?}"),
+            Ok(None) => return errors, // clean close
+            Err(FrameError::Io(e))
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                panic!("{ctx}: server hung — no reply within {HANG_TIMEOUT:?}")
+            }
+            // A hard reset after the server already gave up on us is an
+            // acceptable way to learn the connection is gone.
+            Err(FrameError::Io(_)) => return errors,
+            Err(e) => panic!("{ctx}: server sent unparseable bytes: {e}"),
+        }
+    }
+}
+
+/// Send raw bytes, half-close the write side (so a server blocked on a
+/// partial frame sees EOF instead of waiting forever), then drain.
+fn poke(addr: std::net::SocketAddr, bytes: &[u8], ctx: &str) -> usize {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).ok();
+    // The peer may close before consuming everything; a broken-pipe write
+    // is part of the scenario, not a test failure.
+    let _ = stream.write_all(bytes);
+    let _ = stream.shutdown(Shutdown::Write);
+    drain_replies(&stream, ctx)
+}
+
+#[test]
+fn fuzzed_garbage_yields_error_or_close_never_hang() {
+    let server = start_server();
+    let addr = server.addr();
+    let hello = Frame::Hello { tenant: "fuzz".to_string() }.encode();
+    let query = Frame::Query { sql: "SELECT COUNT(*) AS n FROM demo".into(), timeout_ms: 0 }
+        .encode();
+    let mut rng = Rng::new(0xF0220);
+
+    for case in 0..120u64 {
+        let ctx = format!("fuzz case {case}");
+        let mut bytes = Vec::new();
+        match case % 6 {
+            // Pure random bytes as the first frame.
+            0 => {
+                let n = 1 + rng.below(64) as usize;
+                bytes.extend((0..n).map(|_| rng.below(256) as u8));
+            }
+            // Valid Hello, then random bytes where a Query should be.
+            1 => {
+                bytes.extend_from_slice(&hello);
+                let n = 1 + rng.below(64) as usize;
+                bytes.extend((0..n).map(|_| rng.below(256) as u8));
+            }
+            // Valid Hello, then a truncated (but well-headed) Query.
+            2 => {
+                bytes.extend_from_slice(&hello);
+                let cut = 5 + rng.below((query.len() - 5) as u64) as usize;
+                bytes.extend_from_slice(&query[..cut]);
+            }
+            // Oversized length prefix straight away.
+            3 => {
+                let huge = (MAX_FRAME_LEN as u32).saturating_add(1 + rng.below(1 << 20) as u32);
+                bytes.extend_from_slice(&huge.to_le_bytes());
+                bytes.push(rng.below(256) as u8);
+            }
+            // Zero-length frame after a valid Hello.
+            4 => {
+                bytes.extend_from_slice(&hello);
+                bytes.extend_from_slice(&0u32.to_le_bytes());
+            }
+            // Valid non-Hello first frame (state-machine violation).
+            _ => bytes.extend_from_slice(&query),
+        }
+        poke(addr, &bytes, &ctx);
+    }
+
+    // The server must still serve clean traffic after all that abuse.
+    let mut client = ServeClient::connect(addr, "clean").unwrap();
+    client.set_read_timeout(Some(HANG_TIMEOUT)).unwrap();
+    match client.query("SELECT COUNT(*) AS n FROM demo", 0).unwrap() {
+        ServeReply::Rows { rows, .. } => assert_eq!(rows.row(0)[0].as_i64(), Some(256)),
+        other => panic!("post-fuzz query failed: {other:?}"),
+    }
+    drop(client);
+
+    let snap = server.shutdown();
+    assert_eq!(snap.worker_panics, 0, "a fuzz input panicked a connection thread");
+    assert_eq!(snap.lost(), 0, "unaccounted statements after fuzzing");
+    assert!(snap.protocol_errors > 0, "fuzz inputs should register as protocol errors");
+    assert_eq!(snap.completed, 1, "exactly the one clean query completes");
+}
+
+#[test]
+fn hostile_inputs_each_get_a_typed_protocol_error() {
+    let server = start_server();
+    let addr = server.addr();
+    let hello = Frame::Hello { tenant: "t".to_string() }.encode();
+
+    // Each scenario should produce exactly one Error frame, then close.
+    let oversized = {
+        let mut b = Vec::new();
+        b.extend_from_slice(&(MAX_FRAME_LEN as u32 + 1).to_le_bytes());
+        b
+    };
+    let truncated_hello = hello[..hello.len() - 1].to_vec();
+    let unknown_tag = {
+        let mut b = Vec::new();
+        b.extend_from_slice(&hello);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(200); // no such tag
+        b
+    };
+    for (bytes, ctx) in [
+        (oversized, "oversized prefix"),
+        (truncated_hello, "truncated hello"),
+        (unknown_tag, "unknown tag after hello"),
+    ] {
+        let errors = poke(addr, &bytes, ctx);
+        assert_eq!(errors, 1, "{ctx}: expected exactly one Error frame");
+    }
+
+    let snap = server.shutdown();
+    assert_eq!(snap.worker_panics, 0);
+    assert_eq!(snap.protocol_errors, 3);
+}
+
+#[test]
+fn read_timeout_reports_io_not_false_reply() {
+    // A silent peer (server accepts, we never send Hello, it never sends
+    // anything) must surface as a timeout on our side — this pins down
+    // the client behavior the load harness relies on to detect hangs.
+    let server = start_server();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let mut reader = io::BufReader::new(stream.try_clone().unwrap());
+    let err = Frame::read_from(&mut reader).unwrap_err();
+    match err {
+        FrameError::Io(e) => assert!(
+            e.kind() == io::ErrorKind::WouldBlock || e.kind() == io::ErrorKind::TimedOut,
+            "unexpected io error kind {:?}",
+            e.kind()
+        ),
+        other => panic!("expected Io timeout, got {other}"),
+    }
+    drop(reader);
+    drop(stream);
+    server.shutdown();
+}
