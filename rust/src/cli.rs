@@ -2,7 +2,12 @@
 //!
 //! Subcommands:
 //! - `info` — environment + artifact status;
-//! - `run-sql "<sql>"` — execute a statement against demo tables;
+//! - `run-sql "<sql>"` — execute a statement against demo tables
+//!   (`--check` validates without executing, `--explain` prints the
+//!   analyzer's resolved schema / estimate / fragment report);
+//! - `check-sql "<sql>"` — plan-time semantic analysis only: typed
+//!   diagnostics, exit 1 on any error; `--corpus` sweeps the serving
+//!   catalog and the TPCx-BB UDF statements instead (the CI gate);
 //! - `repl`-less batch `demo` — run the quickstart pipeline;
 //! - `serve` — long-running multi-tenant TCP server: length-prefixed
 //!   binary frames, per-statement admission control, shared catalog;
@@ -31,7 +36,9 @@ snowparkd — Snowpark reproduction launcher
 USAGE:
   snowparkd info
   snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T] \
-[--nodes N] [--adaptive-shape] [--timeout MS] [--fault-plan SPEC]
+[--nodes N] [--adaptive-shape] [--timeout MS] [--fault-plan SPEC] [--check] [--explain]
+  snowparkd check-sql \"SELECT ...\" [--rows N] [--seed S]
+  snowparkd check-sql --corpus [--rows N] [--seed S]
   snowparkd demo
   snowparkd serve [--host H] [--port P] [--rows N] [--seed S] [--slots K] \
 [--capacity-mb M] [--policy backfill|fifo|admit-all] [--max-tenants N] [--duration-s S]
@@ -82,12 +89,27 @@ spans retry with capped backoff and reroute off blacklisted nodes;
 `--stats` then shows per-node retry (`retries`) and blacklist (`blk`)
 counts. The SNOWPARK_FAULT_PLAN env var supplies a default plan.
 
+check-sql runs the plan-time semantic analyzer (docs/ARCHITECTURE.md
+lists the diagnostic codes) and never executes a row: references are
+resolved, every expression is typed, the output schema and the
+admission-gate cold estimate are computed, and lints flag degenerate
+predicates. Exit status 1 on any error-severity diagnostic. run-sql
+--check does the same against the run-sql session; --explain prints
+the full analysis report (diagnostics, schema, estimates, fragment
+fusion) instead of executing. check-sql --corpus analyzes the serving
+workload catalog plus the TPCx-BB UDF statements — the CI gate that
+the analyzer accepts everything the repo actually runs.
+SNOWPARK_ANALYZE=0 disables the pre-execution analysis gate.
+
 Demo tables (generated): store_sales, product_reviews, web_clickstreams, items.
 Artifacts: set SNOWPARK_ARTIFACTS or run `make artifacts` for XLA UDFs.";
 
 pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let parsed = match ParsedArgs::parse(args, &["help", "stats", "adaptive-shape", "self"]) {
+    let parsed = match ParsedArgs::parse(
+        args,
+        &["help", "stats", "adaptive-shape", "self", "check", "explain", "corpus"],
+    ) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -97,6 +119,7 @@ pub fn main() {
     let result = match parsed.subcommand.as_deref() {
         Some("info") => info(),
         Some("run-sql") => run_sql(&parsed),
+        Some("check-sql") => check_sql(&parsed),
         Some("demo") => demo(),
         Some("serve") => serve(&parsed),
         Some("loadtest") => loadtest(&parsed),
@@ -227,6 +250,10 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         fault_plan,
         ..SessionOpts::default()
     })?;
+    // --check / --explain: plan-time analysis only, never execute a row.
+    if args.flag("check") || args.flag("explain") {
+        return report_analysis(&s.check_sql(sql), args.flag("explain"));
+    }
     if args.flag("stats") {
         let (out, stats) = s.sql_with_stats(sql)?;
         println!("{out}");
@@ -236,6 +263,80 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         let out = s.sql(sql)?;
         println!("{out}");
         println!("({} rows)", out.num_rows());
+    }
+    Ok(())
+}
+
+/// Print one statement's analysis (`--explain` = the full report,
+/// otherwise just the diagnostics) and fail on any error diagnostic.
+fn report_analysis(analysis: &crate::engine::Analysis, explain: bool) -> anyhow::Result<()> {
+    if explain {
+        print!("{}", analysis.render());
+    } else {
+        for d in &analysis.diagnostics {
+            println!("{d}");
+        }
+    }
+    if !analysis.is_ok() {
+        anyhow::bail!("semantic analysis rejected the statement");
+    }
+    if !explain {
+        println!("OK: statement resolves, types, and is executable");
+    }
+    Ok(())
+}
+
+fn check_sql(args: &ParsedArgs) -> anyhow::Result<()> {
+    let rows = args.get_usize("rows", 1_000).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    if args.flag("corpus") {
+        return check_corpus(rows, seed);
+    }
+    let sql = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("check-sql expects a SQL string (or --corpus)"))?;
+    let s = session_with_data(SessionOpts { rows, seed, ..SessionOpts::default() })?;
+    report_analysis(&s.check_sql(sql), false)
+}
+
+/// The CI corpus gate: the analyzer must accept every statement the
+/// repo actually serves — the serving workload catalog and a
+/// `SELECT udf(...)` statement per TPCx-BB UDF query — over the same
+/// merged catalog + UDF registry the serving layer uses.
+fn check_corpus(rows: usize, seed: u64) -> anyhow::Result<()> {
+    let catalog = Arc::new(Catalog::new());
+    TpcxBbDataset::generate(rows, 4, 1.4, seed).register_merged(&catalog)?;
+    let s = Session::builder().shared_catalog(catalog).build()?;
+    attach_sim_udfs(&s);
+
+    let mut statements: Vec<(String, String)> = SERVING_CATALOG
+        .iter()
+        .map(|stmt| (stmt.name.to_string(), stmt.sql.to_string()))
+        .collect();
+    for q in crate::sim::TPCXBB_QUERIES {
+        statements.push((
+            q.name.to_string(),
+            format!("SELECT {}({}) AS v FROM {}", q.udf, q.input_cols.join(", "), q.table),
+        ));
+    }
+
+    let mut rejected = 0usize;
+    for (name, sql) in &statements {
+        let analysis = s.check_sql(sql);
+        if analysis.is_ok() {
+            println!("  ok   {name}");
+        } else {
+            rejected += 1;
+            println!("  FAIL {name}: {sql}");
+            for d in analysis.errors() {
+                println!("       {d}");
+            }
+        }
+    }
+    println!("{} statements analyzed, {rejected} rejected", statements.len());
+    if rejected > 0 {
+        anyhow::bail!("{rejected} corpus statements rejected by the analyzer");
     }
     Ok(())
 }

@@ -1,0 +1,1686 @@
+//! Plan-time semantic analysis: resolve, type-check, estimate — never
+//! execute a row.
+//!
+//! The paper's Snowpark client validates lazily-built DataFrame plans
+//! *before* the server runs them (§III): unknown columns, type
+//! mismatches, and malformed calls surface at `collect()`-build time,
+//! not halfway through a warehouse scan. This module gives the engine
+//! the same front door. [`analyze_plan`] walks a [`Plan`] bottom-up,
+//! mirroring the executor's resolution and kernel-typing rules
+//! *exactly* (same `resolve_column` candidate logic, same
+//! `Value`-coercion table the kernels use), and produces an
+//! [`Analysis`]: the statement's inferred output schema, cardinality
+//! and byte estimates for the admission estimator's cold path, a
+//! fragment-eligibility report, and structured [`Diagnostic`]s carrying
+//! a stable [`DiagCode`] plus the operator path
+//! (`Scan(store_sales) → Filter → Aggregate`) where the problem lives.
+//!
+//! The contract, pinned by `tests/analyze_differential.rs`:
+//!
+//! - **accept ⇒ runnable**: a statement with no error-severity
+//!   diagnostics can never fail execution with a resolution or type
+//!   error;
+//! - **reject ⇒ broken**: a statement rejected with an `E1xx` type code
+//!   fails execution with the *same* code (the kernels raise their
+//!   errors through the shared constructors below), and a statement
+//!   rejected with `E130` (non-boolean predicate) silently misresolves
+//!   at runtime — the kernel masks a non-boolean predicate to all-false
+//!   and returns zero rows.
+//!
+//! The analyzer is deliberately conservative: any type it cannot pin
+//! statically (NULL literals, UDF outputs it has no metadata for,
+//! columns of unknown tables) becomes [`Ty::Unknown`], which never
+//! participates in a rejection. Only a provable runtime failure is an
+//! error; everything data-dependent (mixed CASE branches, IN-list items
+//! that can never match) is a `W`-coded lint.
+
+use std::fmt;
+
+use anyhow::Error;
+
+use crate::sql::{parse_query, BinaryOp, Expr, UnaryOp};
+use crate::types::{DataType, Value};
+use crate::udf::UdfRegistry;
+
+use super::catalog::Catalog;
+use super::fragment::{fuse_report, FuseNote};
+use super::plan::{plan_query, AggCall, AggFunc, Plan};
+
+// ------------------------------------------------------------------ codes
+
+/// Stable diagnostic codes. `E…` codes are errors (the analyzer rejects
+/// the statement); `W…` codes are lints (the statement runs, but
+/// probably not the way the author meant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // each code is documented by `describe()`
+pub enum DiagCode {
+    E000,
+    E001,
+    E002,
+    E003,
+    E004,
+    E010,
+    E101,
+    E102,
+    E103,
+    E104,
+    E105,
+    E106,
+    E110,
+    E111,
+    E113,
+    E120,
+    E121,
+    E130,
+    W001,
+    W002,
+    W003,
+    W004,
+    W005,
+    W006,
+    W007,
+    W008,
+}
+
+impl DiagCode {
+    /// The stable code string (`"E001"`, `"W003"`, …).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DiagCode::E000 => "E000",
+            DiagCode::E001 => "E001",
+            DiagCode::E002 => "E002",
+            DiagCode::E003 => "E003",
+            DiagCode::E004 => "E004",
+            DiagCode::E010 => "E010",
+            DiagCode::E101 => "E101",
+            DiagCode::E102 => "E102",
+            DiagCode::E103 => "E103",
+            DiagCode::E104 => "E104",
+            DiagCode::E105 => "E105",
+            DiagCode::E106 => "E106",
+            DiagCode::E110 => "E110",
+            DiagCode::E111 => "E111",
+            DiagCode::E113 => "E113",
+            DiagCode::E120 => "E120",
+            DiagCode::E121 => "E121",
+            DiagCode::E130 => "E130",
+            DiagCode::W001 => "W001",
+            DiagCode::W002 => "W002",
+            DiagCode::W003 => "W003",
+            DiagCode::W004 => "W004",
+            DiagCode::W005 => "W005",
+            DiagCode::W006 => "W006",
+            DiagCode::W007 => "W007",
+            DiagCode::W008 => "W008",
+        }
+    }
+
+    /// One-line description of what the code means (the ARCHITECTURE
+    /// diagnostic table is generated from the same wording).
+    pub fn describe(&self) -> &'static str {
+        match self {
+            DiagCode::E000 => "syntax error",
+            DiagCode::E001 => "unknown column",
+            DiagCode::E002 => "ambiguous column reference",
+            DiagCode::E003 => "unknown table or table function",
+            DiagCode::E004 => "unknown function",
+            DiagCode::E010 => "statement cannot be planned",
+            DiagCode::E101 => "arithmetic on a non-numeric operand",
+            DiagCode::E102 => "incomparable comparison operands",
+            DiagCode::E103 => "AND/OR over a non-boolean operand",
+            DiagCode::E104 => "NOT over a non-boolean operand",
+            DiagCode::E105 => "negation of a non-numeric operand",
+            DiagCode::E106 => "BETWEEN operand type mismatch",
+            DiagCode::E110 => "wrong number of arguments to a builtin",
+            DiagCode::E111 => "wrong argument type for a builtin",
+            DiagCode::E113 => "aggregate call in a scalar-only position",
+            DiagCode::E120 => "SUM/AVG over a non-numeric argument",
+            DiagCode::E121 => "aggregate call missing its argument",
+            DiagCode::E130 => "non-boolean predicate (would drop every row)",
+            DiagCode::W001 => "predicate is constant true",
+            DiagCode::W002 => "predicate is constant false/NULL — drops every row",
+            DiagCode::W003 => "comparison with a NULL literal is never true",
+            DiagCode::W004 => "projected column is never referenced",
+            DiagCode::W005 => "IN list item of mismatched type can never match",
+            DiagCode::W006 => "non-boolean CASE condition never matches",
+            DiagCode::W007 => "join key types are incomparable — keys never match",
+            DiagCode::W008 => "CASE/COALESCE branches mix incompatible types",
+        }
+    }
+
+    /// Is this a rejecting (error) code, as opposed to a lint?
+    pub fn is_error(&self) -> bool {
+        self.as_str().starts_with('E')
+    }
+}
+
+impl fmt::Display for DiagCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Diagnostic severity, derived from the code class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// The statement is rejected.
+    Error,
+    /// The statement runs, but the plan looks wrong.
+    Warning,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        })
+    }
+}
+
+/// One analyzer finding: a coded message anchored to the operator path
+/// where it was detected.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable code (`E001`, `W003`, …).
+    pub code: DiagCode,
+    /// Error (rejecting) or warning (lint).
+    pub severity: Severity,
+    /// Human-readable message.
+    pub message: String,
+    /// Operator path, e.g. `Scan(store_sales) → Filter → Aggregate`.
+    pub path: String,
+}
+
+impl Diagnostic {
+    fn new(code: DiagCode, path: &str, message: String) -> Self {
+        let severity = if code.is_error() {
+            Severity::Error
+        } else {
+            Severity::Warning
+        };
+        Diagnostic { code, severity, message, path: path.to_string() }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] at {}: {}",
+            self.severity, self.code, self.path, self.message
+        )
+    }
+}
+
+// --------------------------------------------- shared error constructors
+//
+// The kernels (columnar *and* row-wise, which used to duplicate these
+// strings independently) raise their type errors through these
+// constructors, so a runtime failure carries the same code the analyzer
+// predicts — differential tests compare error identity, not prose.
+
+/// `E101`: arithmetic kernel met a non-numeric operand.
+pub(crate) fn err_arith(v: impl fmt::Display) -> Error {
+    anyhow::anyhow!("E101: arith on {v}")
+}
+
+/// `E102`: comparison kernel met incomparable operands.
+pub(crate) fn err_compare(l: impl fmt::Display, r: impl fmt::Display) -> Error {
+    anyhow::anyhow!("E102: cannot compare {l} with {r}")
+}
+
+/// `E103`: logic kernel met a non-boolean operand.
+pub(crate) fn err_logic() -> Error {
+    anyhow::anyhow!("E103: AND/OR expects booleans")
+}
+
+/// `E104`: NOT over a non-boolean.
+pub(crate) fn err_not(v: impl fmt::Display) -> Error {
+    anyhow::anyhow!("E104: NOT expects a boolean, got {v}")
+}
+
+/// `E105`: negation of a non-numeric.
+pub(crate) fn err_negate(v: impl fmt::Display) -> Error {
+    anyhow::anyhow!("E105: cannot negate {v}")
+}
+
+/// `E106`: BETWEEN operand types are incomparable.
+pub(crate) fn err_between() -> Error {
+    anyhow::anyhow!("E106: BETWEEN type mismatch")
+}
+
+/// `E110`: builtin called with the wrong number of arguments
+/// (`detail` is the builtin's own arity phrasing).
+pub(crate) fn err_builtin_arity(detail: impl fmt::Display) -> Error {
+    anyhow::anyhow!("E110: {detail}")
+}
+
+/// `E111`: builtin called with a wrongly-typed argument.
+pub(crate) fn err_builtin_arg(detail: impl fmt::Display) -> Error {
+    anyhow::anyhow!("E111: {detail}")
+}
+
+/// `E120`: SUM/AVG folded a non-numeric value.
+pub(crate) fn err_agg_non_numeric(what: impl fmt::Display, v: impl fmt::Display) -> Error {
+    anyhow::anyhow!("E120: {what} over non-numeric {v}")
+}
+
+/// `E001`: column not found.
+pub(crate) fn err_unknown_column(name: &str, available: Vec<&str>) -> Error {
+    anyhow::anyhow!("E001: column {name:?} not found (available: {available:?})")
+}
+
+/// `E002`: column reference matches several fields.
+pub(crate) fn err_ambiguous_column(name: &str) -> Error {
+    anyhow::anyhow!("E002: column {name:?} is ambiguous")
+}
+
+/// `E004`: no builtin or registered function under this name.
+pub(crate) fn err_unknown_function(name: &str) -> Error {
+    anyhow::anyhow!("E004: unknown function {name:?}")
+}
+
+// ---------------------------------------------------------------- types
+
+/// Analyzer-side type lattice: either a concrete engine [`DataType`] or
+/// `Unknown` (NULL literals, unresolvable columns, UDFs without
+/// metadata). `Unknown` never participates in a rejection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ty {
+    /// A concrete, statically-known column type.
+    Known(DataType),
+    /// Statically undetermined; compatible with everything.
+    Unknown,
+}
+
+impl Ty {
+    fn known(self) -> Option<DataType> {
+        match self {
+            Ty::Known(dt) => Some(dt),
+            Ty::Unknown => None,
+        }
+    }
+
+    /// Definitely numeric / definitely not numeric / unknown.
+    fn non_numeric(self) -> bool {
+        matches!(self, Ty::Known(DataType::Utf8) | Ty::Known(DataType::Bool))
+    }
+
+    fn is_known(self, dt: DataType) -> bool {
+        self == Ty::Known(dt)
+    }
+
+    /// Estimated bytes per row for a column of this type (mirrors
+    /// `Column::byte_size`: fixed 8-byte numerics, 1-byte bools, and a
+    /// 40-byte average for strings).
+    fn width(&self) -> u64 {
+        match self {
+            Ty::Known(DataType::Bool) => 1,
+            Ty::Known(DataType::Utf8) => 40,
+            _ => 8,
+        }
+    }
+}
+
+impl fmt::Display for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Ty::Known(dt) => write!(f, "{dt}"),
+            Ty::Unknown => f.write_str("?"),
+        }
+    }
+}
+
+/// Can the comparison kernel order these two types? Mirrors `cell_cmp`:
+/// numeric×numeric, string×string, bool×bool.
+fn comparable(a: DataType, b: DataType) -> bool {
+    let num = |d: DataType| matches!(d, DataType::Int64 | DataType::Float64);
+    (num(a) && num(b)) || a == b
+}
+
+// ------------------------------------------------------------- analysis
+
+/// The result of analyzing one statement: diagnostics, the inferred
+/// output schema, cardinality/byte estimates, and the
+/// fragment-eligibility report.
+#[derive(Debug, Default)]
+pub struct Analysis {
+    /// All findings, in discovery order (bottom-up over the plan).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Inferred output schema: `(column name, type)` in output order.
+    pub schema: Vec<(String, Ty)>,
+    /// Estimated output rows.
+    pub est_rows: u64,
+    /// Estimated total rows read by every scan in the plan.
+    pub est_scan_rows: u64,
+    /// Estimated output bytes (`schema width × est_rows`).
+    pub est_output_bytes: u64,
+    /// Fragment-eligibility report: one note per fusion candidate.
+    pub fragments: Vec<FuseNote>,
+}
+
+impl Analysis {
+    /// No error-severity diagnostics — the statement may execute.
+    pub fn is_ok(&self) -> bool {
+        self.diagnostics
+            .iter()
+            .all(|d| d.severity != Severity::Error)
+    }
+
+    /// Only the rejecting diagnostics.
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+    }
+
+    /// Memory-footprint hint for the admission estimator's cold path:
+    /// predicted result bytes plus the per-scanned-row surcharge the
+    /// server's actual-usage recorder applies (`SCAN_BYTES_PER_ROW`).
+    pub fn cold_bytes_hint(&self) -> u64 {
+        (self.est_output_bytes + 64 * self.est_scan_rows).max(1)
+    }
+
+    /// Render every error diagnostic as one line each (the message a
+    /// rejected statement surfaces to the session / wire client).
+    pub fn render_errors(&self) -> String {
+        self.errors()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Full human-readable report: diagnostics, schema, estimates, and
+    /// the fragment-eligibility notes (what `run-sql --explain` prints).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.to_string());
+            out.push('\n');
+        }
+        out.push_str("schema:");
+        if self.schema.is_empty() {
+            out.push_str(" (none)");
+        }
+        out.push('\n');
+        for (name, ty) in &self.schema {
+            out.push_str(&format!("  {name}: {ty}\n"));
+        }
+        out.push_str(&format!(
+            "estimate: ~{} rows out, ~{} rows scanned, ~{} bytes (admission hint {})\n",
+            self.est_rows,
+            self.est_scan_rows,
+            self.est_output_bytes,
+            self.cold_bytes_hint()
+        ));
+        if self.fragments.is_empty() {
+            out.push_str("fragments: no fusion candidates\n");
+        } else {
+            out.push_str("fragments:\n");
+            for n in &self.fragments {
+                if n.fused {
+                    out.push_str(&format!("  fused [{}]\n", n.ops.join("+")));
+                } else {
+                    out.push_str(&format!(
+                        "  declined [{}]: {}\n",
+                        n.ops.join("+"),
+                        n.reason
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Is the pre-execution analyzer gate enabled? On by default; set
+/// `SNOWPARK_ANALYZE=0` to run statements unchecked (escape hatch for
+/// comparing against raw-engine behavior).
+pub fn analysis_enabled() -> bool {
+    std::env::var("SNOWPARK_ANALYZE").map_or(true, |v| v != "0")
+}
+
+/// Parse, plan, and analyze one SQL statement. Parse failures become a
+/// single `E000` diagnostic; planner rejections become `E010`.
+pub fn analyze_sql(sql: &str, catalog: &Catalog, udfs: &UdfRegistry) -> Analysis {
+    let q = match parse_query(sql) {
+        Ok(q) => q,
+        Err(e) => {
+            let mut a = Analysis::default();
+            a.diagnostics
+                .push(Diagnostic::new(DiagCode::E000, "(parse)", format!("{e:#}")));
+            return a;
+        }
+    };
+    let plan = match plan_query(&q, udfs) {
+        Ok(p) => p,
+        Err(e) => {
+            let mut a = Analysis::default();
+            a.diagnostics
+                .push(Diagnostic::new(DiagCode::E010, "(plan)", format!("{e:#}")));
+            return a;
+        }
+    };
+    analyze_plan(&plan, catalog, udfs)
+}
+
+/// Analyze an already-planned statement.
+pub fn analyze_plan(plan: &Plan, catalog: &Catalog, udfs: &UdfRegistry) -> Analysis {
+    let mut az = Analyzer {
+        catalog,
+        udfs,
+        diags: Vec::new(),
+        scan_rows: 0,
+    };
+    let root = az.walk(plan, None);
+    let est_output_bytes = root
+        .cols
+        .iter()
+        .map(|(_, t)| t.width())
+        .sum::<u64>()
+        .saturating_mul(root.est_rows);
+    Analysis {
+        diagnostics: az.diags,
+        schema: root.cols,
+        est_rows: root.est_rows,
+        est_scan_rows: az.scan_rows,
+        est_output_bytes,
+        fragments: fuse_report(plan, udfs),
+    }
+}
+
+// ------------------------------------------------------------- the walk
+
+/// What the walk knows about one operator's output.
+struct NodeInfo {
+    /// Output columns, in order, with their analyzer types.
+    cols: Vec<(String, Ty)>,
+    /// Estimated output rows.
+    est_rows: u64,
+    /// Operator path from the deepest source to this node.
+    path: String,
+    /// The source schema is unknown (unknown table): suppress
+    /// resolution errors above, they would only cascade.
+    poisoned: bool,
+}
+
+/// Outcome of mirroring `resolve_column` against an analyzer scope.
+enum Resolution {
+    Hit(usize),
+    NotFound,
+    Ambiguous,
+}
+
+/// Exact mirror of `expr::resolve_column` over `(name, ty)` scopes:
+/// case-insensitive whole-name match first, then the qualified/bare
+/// suffix candidate rules.
+fn resolve(cols: &[(String, Ty)], name: &str) -> Resolution {
+    if let Some(i) = cols
+        .iter()
+        .position(|(n, _)| n.eq_ignore_ascii_case(name))
+    {
+        return Resolution::Hit(i);
+    }
+    let candidates: Vec<usize> = if let Some((_, bare)) = name.split_once('.') {
+        cols.iter()
+            .enumerate()
+            .filter(|(_, (n, _))| n.eq_ignore_ascii_case(bare))
+            .map(|(i, _)| i)
+            .collect()
+    } else {
+        cols.iter()
+            .enumerate()
+            .filter(|(_, (n, _))| {
+                n.rsplit_once('.')
+                    .map_or(false, |(_, suffix)| suffix.eq_ignore_ascii_case(name))
+            })
+            .map(|(i, _)| i)
+            .collect()
+    };
+    match candidates.len() {
+        0 => Resolution::NotFound,
+        1 => Resolution::Hit(candidates[0]),
+        _ => Resolution::Ambiguous,
+    }
+}
+
+struct Analyzer<'a> {
+    catalog: &'a Catalog,
+    udfs: &'a UdfRegistry,
+    diags: Vec<Diagnostic>,
+    scan_rows: u64,
+}
+
+impl<'a> Analyzer<'a> {
+    fn diag(&mut self, code: DiagCode, path: &str, message: String) {
+        self.diags.push(Diagnostic::new(code, path, message));
+    }
+
+    /// Bottom-up walk. `needed` is the set of output names the parent
+    /// will reference (`None` = everything may be referenced), used only
+    /// for the W004 unused-projection lint.
+    fn walk(&mut self, plan: &Plan, needed: Option<&[String]>) -> NodeInfo {
+        match plan {
+            Plan::Scan { table, alias } => {
+                let label = alias.as_deref().unwrap_or(table);
+                let path = format!("Scan({label})");
+                match self.catalog.schema_of(table) {
+                    Some((schema, rows)) => {
+                        self.scan_rows += rows as u64;
+                        NodeInfo {
+                            cols: schema
+                                .fields
+                                .iter()
+                                .map(|f| (f.name.clone(), Ty::Known(f.data_type)))
+                                .collect(),
+                            est_rows: rows as u64,
+                            path,
+                            poisoned: false,
+                        }
+                    }
+                    None => {
+                        self.diag(
+                            DiagCode::E003,
+                            &path,
+                            format!(
+                                "table {table:?} not found (available: {:?})",
+                                self.catalog.table_names()
+                            ),
+                        );
+                        NodeInfo { cols: Vec::new(), est_rows: 0, path, poisoned: true }
+                    }
+                }
+            }
+            Plan::TableFunc { name, args, alias } => {
+                // UDTF arguments are evaluated against the executor's
+                // one-row dummy schema, so plain column references in
+                // them cannot resolve.
+                let dummy = vec![("__dummy".to_string(), Ty::Known(DataType::Int64))];
+                let arg_scope = NodeInfo {
+                    cols: dummy.clone(),
+                    est_rows: 1,
+                    path: format!("TableFunc({name})"),
+                    poisoned: false,
+                };
+                for a in args {
+                    self.type_expr(a, &arg_scope);
+                }
+                if name == "__dual" {
+                    return NodeInfo {
+                        cols: dummy,
+                        est_rows: 1,
+                        path: "Dual".to_string(),
+                        poisoned: false,
+                    };
+                }
+                let label = alias.as_deref().unwrap_or(name);
+                let path = format!("TableFunc({label})");
+                // The executor resolves a table-function name against the
+                // catalog first, then the UDTF registry — mirror that.
+                if let Some((schema, rows)) = self.catalog.schema_of(name) {
+                    self.scan_rows += rows as u64;
+                    return NodeInfo {
+                        cols: schema
+                            .fields
+                            .iter()
+                            .map(|f| (f.name.clone(), Ty::Known(f.data_type)))
+                            .collect(),
+                        est_rows: rows as u64,
+                        path,
+                        poisoned: false,
+                    };
+                }
+                if let Some(udtf) = self.udfs.udtf(name) {
+                    self.scan_rows += 64;
+                    return NodeInfo {
+                        cols: udtf
+                            .schema
+                            .fields
+                            .iter()
+                            .map(|f| (f.name.clone(), Ty::Known(f.data_type)))
+                            .collect(),
+                        est_rows: 64,
+                        path,
+                        poisoned: false,
+                    };
+                }
+                self.diag(
+                    DiagCode::E003,
+                    &path,
+                    format!("no table or table function named {name:?}"),
+                );
+                NodeInfo { cols: Vec::new(), est_rows: 0, path, poisoned: true }
+            }
+            Plan::Filter { input, predicate } => {
+                let child_needed = extend_needed(needed, std::slice::from_ref(predicate));
+                let mut node = self.walk(input, child_needed.as_deref());
+                node.path.push_str(" → Filter");
+                let ty = self.type_expr(predicate, &node);
+                if ty.known().is_some() && !ty.is_known(DataType::Bool) {
+                    // Known non-boolean predicate: the kernel masks it to
+                    // all-false and silently returns zero rows.
+                    self.diag(
+                        DiagCode::E130,
+                        &node.path,
+                        format!("predicate has type {ty}, expected BOOLEAN — every row would be dropped"),
+                    );
+                }
+                self.lint_predicate(predicate, &node);
+                node.est_rows = match const_truth(predicate) {
+                    Some(false) => 0,
+                    Some(true) => node.est_rows,
+                    None => (node.est_rows / 3).max(1).min(node.est_rows),
+                };
+                node
+            }
+            Plan::Project { input, exprs } => {
+                let star = exprs.iter().any(|(e, _)| {
+                    matches!(e, Expr::Star)
+                        || matches!(e, Expr::Func { name, .. } if name == "__drop_hidden")
+                });
+                let child_needed = if star {
+                    None
+                } else {
+                    extend_needed(Some(&[]), exprs.iter().map(|(e, _)| e))
+                };
+                let mut node = self.walk(input, child_needed.as_deref());
+                node.path.push_str(" → Project");
+                let mut cols: Vec<(String, Ty)> = Vec::new();
+                for (e, out_name) in exprs {
+                    match e {
+                        Expr::Star => {
+                            cols.extend(node.cols.iter().cloned());
+                        }
+                        Expr::Func { name, .. } if name == "__drop_hidden" => {
+                            cols.extend(
+                                node.cols
+                                    .iter()
+                                    .filter(|(n, _)| !n.starts_with("__sort_"))
+                                    .cloned(),
+                            );
+                        }
+                        _ => {
+                            let ty = self.type_expr(e, &node);
+                            cols.push((out_name.clone(), ty));
+                        }
+                    }
+                }
+                // W004: a projected name the parent provably never reads.
+                if let Some(need) = needed {
+                    for (_, out_name) in exprs {
+                        if out_name == "*" || out_name.starts_with("__sort_") {
+                            continue;
+                        }
+                        let used = need.iter().any(|n| name_matches(n, out_name));
+                        if !used {
+                            self.diag(
+                                DiagCode::W004,
+                                &node.path,
+                                format!("column {out_name:?} is projected but never referenced"),
+                            );
+                        }
+                    }
+                }
+                node.cols = cols;
+                node
+            }
+            Plan::Aggregate { input, group, aggs } => {
+                let needed_exprs: Vec<&Expr> = group
+                    .iter()
+                    .map(|(e, _)| e)
+                    .chain(aggs.iter().flat_map(|a| a.args.iter()))
+                    .collect();
+                let child_needed =
+                    extend_needed(Some(&[]), needed_exprs.iter().copied());
+                let mut node = self.walk(input, child_needed.as_deref());
+                node.path.push_str(" → Aggregate");
+                let mut cols: Vec<(String, Ty)> = Vec::new();
+                for (e, name) in group {
+                    let ty = self.type_expr(e, &node);
+                    cols.push((name.clone(), ty));
+                }
+                for call in aggs {
+                    let ty = self.type_agg(call, &node);
+                    cols.push((call.out_name.clone(), ty));
+                }
+                node.est_rows = if group.is_empty() {
+                    1
+                } else {
+                    ((node.est_rows as f64).sqrt().ceil() as u64)
+                        .clamp(1, node.est_rows.max(1))
+                };
+                node.cols = cols;
+                node
+            }
+            Plan::Join { left, right, equi, residual, .. } => {
+                let l = self.walk(left, None);
+                let r = self.walk(right, None);
+                let lalias = plan_label(left, "l");
+                let ralias = plan_label(right, "r");
+                // Mirror `exec::join_schema`: colliding names get
+                // `{alias}.{name}` on both sides, the rest stay bare.
+                let collides = |name: &str| {
+                    l.cols.iter().any(|(n, _)| n.eq_ignore_ascii_case(name))
+                        && r.cols.iter().any(|(n, _)| n.eq_ignore_ascii_case(name))
+                };
+                let mut cols: Vec<(String, Ty)> = Vec::new();
+                for (n, t) in &l.cols {
+                    let name = if collides(n) { format!("{lalias}.{n}") } else { n.clone() };
+                    cols.push((name, *t));
+                }
+                for (n, t) in &r.cols {
+                    let name = if collides(n) { format!("{ralias}.{n}") } else { n.clone() };
+                    cols.push((name, *t));
+                }
+                let path = format!("{} → Join({})", l.path, ralias);
+                let node = NodeInfo {
+                    cols,
+                    est_rows: if equi.is_empty() {
+                        l.est_rows.saturating_mul(r.est_rows.max(1))
+                    } else {
+                        l.est_rows.max(r.est_rows)
+                    },
+                    path,
+                    poisoned: l.poisoned || r.poisoned,
+                };
+                for (le, re) in equi {
+                    // Equi keys are resolved side-by-side at execution
+                    // time; accept a reference that resolves against the
+                    // combined schema or either side alone.
+                    let lt = self.type_equi_key(le, &node, &l, &r);
+                    let rt = self.type_equi_key(re, &node, &l, &r);
+                    if let (Some(a), Some(b)) = (lt.known(), rt.known()) {
+                        if !comparable(a, b) {
+                            self.diag(
+                                DiagCode::W007,
+                                &node.path,
+                                format!(
+                                    "equi-join key types {a} and {b} are incomparable — keys never match"
+                                ),
+                            );
+                        }
+                    }
+                }
+                if let Some(res) = residual {
+                    let ty = self.type_expr(res, &node);
+                    if ty.known().is_some() && !ty.is_known(DataType::Bool) {
+                        self.diag(
+                            DiagCode::E130,
+                            &node.path,
+                            format!("join residual predicate has type {ty}, expected BOOLEAN"),
+                        );
+                    }
+                }
+                node
+            }
+            Plan::Sort { input, keys } => {
+                let key_exprs: Vec<&Expr> = keys.iter().map(|k| &k.expr).collect();
+                let child_needed = extend_needed(needed, key_exprs.iter().copied());
+                let mut node = self.walk(input, child_needed.as_deref());
+                node.path.push_str(" → Sort");
+                for k in keys {
+                    self.type_expr(&k.expr, &node);
+                }
+                node
+            }
+            Plan::Limit { input, n } => {
+                let mut node = self.walk(input, needed);
+                node.path.push_str(" → Limit");
+                node.est_rows = node.est_rows.min(*n as u64);
+                node
+            }
+        }
+    }
+
+    /// Equi-join key: try the combined schema, then each side (the
+    /// executor assigns sides schema-dependently at run time).
+    fn type_equi_key(
+        &mut self,
+        e: &Expr,
+        combined: &NodeInfo,
+        l: &NodeInfo,
+        r: &NodeInfo,
+    ) -> Ty {
+        if let Expr::Column(name) = e {
+            for scope in [&combined.cols, &l.cols, &r.cols] {
+                if let Resolution::Hit(i) = resolve(scope, name) {
+                    return scope[i].1;
+                }
+            }
+            if combined.poisoned {
+                return Ty::Unknown;
+            }
+            // Distinguish ambiguous-everywhere from absent-everywhere.
+            if matches!(resolve(&combined.cols, name), Resolution::Ambiguous) {
+                self.diag(
+                    DiagCode::E002,
+                    &combined.path,
+                    format!("column {name:?} is ambiguous"),
+                );
+            } else {
+                self.diag(
+                    DiagCode::E001,
+                    &combined.path,
+                    format!(
+                        "column {name:?} not found (available: {:?})",
+                        combined.cols.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+                    ),
+                );
+            }
+            Ty::Unknown
+        } else {
+            self.type_expr(e, combined)
+        }
+    }
+
+    /// Type one aggregate call against the aggregate's input scope.
+    fn type_agg(&mut self, call: &AggCall, node: &NodeInfo) -> Ty {
+        if call.func != AggFunc::CountStar && call.args.is_empty() {
+            // The kernel indexes args[0] unconditionally — this would
+            // not even be a clean runtime error.
+            self.diag(
+                DiagCode::E121,
+                &node.path,
+                format!("{}() needs an argument (or use count(*))", call.name),
+            );
+            return Ty::Unknown;
+        }
+        let arg_ty = call.args.first().map(|e| self.type_expr(e, node));
+        for extra in call.args.iter().skip(1) {
+            self.type_expr(extra, node);
+        }
+        match call.func {
+            AggFunc::Count | AggFunc::CountStar => Ty::Known(DataType::Int64),
+            AggFunc::Avg | AggFunc::Sum => {
+                let ty = arg_ty.unwrap_or(Ty::Unknown);
+                if ty.non_numeric() {
+                    self.diag(
+                        DiagCode::E120,
+                        &node.path,
+                        format!(
+                            "{} over non-numeric argument of type {ty}",
+                            call.name.to_uppercase()
+                        ),
+                    );
+                    return Ty::Unknown;
+                }
+                if call.func == AggFunc::Avg {
+                    Ty::Known(DataType::Float64)
+                } else {
+                    ty
+                }
+            }
+            AggFunc::Min | AggFunc::Max => arg_ty.unwrap_or(Ty::Unknown),
+            AggFunc::Udaf => self
+                .udfs
+                .udaf(&call.name)
+                .map(|u| Ty::Known(u.return_type))
+                .unwrap_or(Ty::Unknown),
+        }
+    }
+
+    /// Infer the type of `e` against `node`'s scope, emitting diagnostics
+    /// for every mismatch the kernels would raise at run time.
+    fn type_expr(&mut self, e: &Expr, node: &NodeInfo) -> Ty {
+        match e {
+            Expr::Literal(v) => v.data_type().map(Ty::Known).unwrap_or(Ty::Unknown),
+            Expr::Star => Ty::Unknown,
+            Expr::Column(name) => {
+                if node.poisoned {
+                    return Ty::Unknown;
+                }
+                match resolve(&node.cols, name) {
+                    Resolution::Hit(i) => node.cols[i].1,
+                    Resolution::NotFound => {
+                        self.diag(
+                            DiagCode::E001,
+                            &node.path,
+                            format!(
+                                "column {name:?} not found (available: {:?})",
+                                node.cols.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+                            ),
+                        );
+                        Ty::Unknown
+                    }
+                    Resolution::Ambiguous => {
+                        self.diag(
+                            DiagCode::E002,
+                            &node.path,
+                            format!("column {name:?} is ambiguous"),
+                        );
+                        Ty::Unknown
+                    }
+                }
+            }
+            Expr::Unary { op, expr } => {
+                let t = self.type_expr(expr, node);
+                match op {
+                    UnaryOp::Neg => {
+                        if t.non_numeric() {
+                            self.diag(
+                                DiagCode::E105,
+                                &node.path,
+                                format!("cannot negate a value of type {t}"),
+                            );
+                            Ty::Unknown
+                        } else {
+                            t
+                        }
+                    }
+                    UnaryOp::Not => {
+                        if t.known().is_some() && !t.is_known(DataType::Bool) {
+                            self.diag(
+                                DiagCode::E104,
+                                &node.path,
+                                format!("NOT expects a BOOLEAN, got {t}"),
+                            );
+                        }
+                        Ty::Known(DataType::Bool)
+                    }
+                }
+            }
+            Expr::Binary { op, left, right } => {
+                let lt = self.type_expr(left, node);
+                let rt = self.type_expr(right, node);
+                match op {
+                    BinaryOp::And | BinaryOp::Or => {
+                        for t in [lt, rt] {
+                            if t.known().is_some() && !t.is_known(DataType::Bool) {
+                                self.diag(
+                                    DiagCode::E103,
+                                    &node.path,
+                                    format!("AND/OR expects BOOLEAN operands, got {t}"),
+                                );
+                            }
+                        }
+                        Ty::Known(DataType::Bool)
+                    }
+                    BinaryOp::Eq
+                    | BinaryOp::NotEq
+                    | BinaryOp::Lt
+                    | BinaryOp::LtEq
+                    | BinaryOp::Gt
+                    | BinaryOp::GtEq => {
+                        if let (Some(a), Some(b)) = (lt.known(), rt.known()) {
+                            if !comparable(a, b) {
+                                self.diag(
+                                    DiagCode::E102,
+                                    &node.path,
+                                    format!("cannot compare {a} with {b}"),
+                                );
+                            }
+                        }
+                        Ty::Known(DataType::Bool)
+                    }
+                    BinaryOp::Concat => Ty::Known(DataType::Utf8),
+                    BinaryOp::Div => {
+                        for t in [lt, rt] {
+                            if t.non_numeric() {
+                                self.diag(
+                                    DiagCode::E101,
+                                    &node.path,
+                                    format!("arithmetic on a value of type {t}"),
+                                );
+                            }
+                        }
+                        Ty::Known(DataType::Float64)
+                    }
+                    BinaryOp::Add | BinaryOp::Sub | BinaryOp::Mul | BinaryOp::Mod => {
+                        for t in [lt, rt] {
+                            if t.non_numeric() {
+                                self.diag(
+                                    DiagCode::E101,
+                                    &node.path,
+                                    format!("arithmetic on a value of type {t}"),
+                                );
+                            }
+                        }
+                        if lt.is_known(DataType::Float64) || rt.is_known(DataType::Float64) {
+                            Ty::Known(DataType::Float64)
+                        } else if lt.is_known(DataType::Int64) && rt.is_known(DataType::Int64) {
+                            Ty::Known(DataType::Int64)
+                        } else {
+                            Ty::Unknown
+                        }
+                    }
+                }
+            }
+            Expr::Func { name, args } => self.type_func(name, args, node),
+            Expr::IsNull { expr, .. } => {
+                self.type_expr(expr, node);
+                Ty::Known(DataType::Bool)
+            }
+            Expr::InList { expr, list, .. } => {
+                let t = self.type_expr(expr, node);
+                for item in list {
+                    let it = self.type_expr(item, node);
+                    if let (Some(a), Some(b)) = (t.known(), it.known()) {
+                        if !comparable(a, b) {
+                            // The kernel silently skips incomparable
+                            // items — never a runtime error, but the item
+                            // can never match either.
+                            self.diag(
+                                DiagCode::W005,
+                                &node.path,
+                                format!("IN list item of type {b} can never match a {a} value"),
+                            );
+                        }
+                    }
+                }
+                Ty::Known(DataType::Bool)
+            }
+            Expr::Between { expr, low, high, .. } => {
+                let t = self.type_expr(expr, node);
+                let lo = self.type_expr(low, node);
+                let hi = self.type_expr(high, node);
+                for bound in [lo, hi] {
+                    if let (Some(a), Some(b)) = (t.known(), bound.known()) {
+                        if !comparable(a, b) {
+                            self.diag(
+                                DiagCode::E106,
+                                &node.path,
+                                format!("BETWEEN mixes {a} with {b}"),
+                            );
+                        }
+                    }
+                }
+                Ty::Known(DataType::Bool)
+            }
+            Expr::Case { branches, else_value } => {
+                let mut out: Option<Ty> = None;
+                let mut mixed = false;
+                let mut unify = |t: Ty, out: &mut Option<Ty>, mixed: &mut bool| {
+                    *out = Some(match (*out, t) {
+                        (None, t) => t,
+                        (Some(a), b) if a == b => a,
+                        (Some(a), b) => {
+                            let num = |x: Ty| {
+                                matches!(
+                                    x,
+                                    Ty::Known(DataType::Int64) | Ty::Known(DataType::Float64)
+                                )
+                            };
+                            if num(a) && num(b) {
+                                Ty::Known(DataType::Float64)
+                            } else {
+                                if a != Ty::Unknown && b != Ty::Unknown {
+                                    *mixed = true;
+                                }
+                                Ty::Unknown
+                            }
+                        }
+                    });
+                };
+                for (cond, value) in branches {
+                    let ct = self.type_expr(cond, node);
+                    if ct.known().is_some() && !ct.is_known(DataType::Bool) {
+                        // The row path's `matches!(…, Bool(true))` just
+                        // never matches a non-boolean condition.
+                        self.diag(
+                            DiagCode::W006,
+                            &node.path,
+                            format!("CASE condition has type {ct} — this branch never matches"),
+                        );
+                    }
+                    let vt = self.type_expr(value, node);
+                    unify(vt, &mut out, &mut mixed);
+                }
+                if let Some(ev) = else_value {
+                    let et = self.type_expr(ev, node);
+                    unify(et, &mut out, &mut mixed);
+                }
+                if mixed {
+                    // Whether this errors at run time depends on which
+                    // branch materializes first — lint, don't reject.
+                    self.diag(
+                        DiagCode::W008,
+                        &node.path,
+                        "CASE branches mix incompatible types".to_string(),
+                    );
+                }
+                out.unwrap_or(Ty::Unknown)
+            }
+        }
+    }
+
+    /// Type a scalar function call, mirroring the builtin dispatch order
+    /// (builtins shadow UDFs) and every arity/argument-type check the
+    /// runtime builtins enforce.
+    fn type_func(&mut self, name: &str, args: &[Expr], node: &NodeInfo) -> Ty {
+        let tys: Vec<Ty> = args.iter().map(|a| self.type_expr(a, node)).collect();
+        match name {
+            "coalesce" => {
+                let mut out: Option<Ty> = None;
+                for t in &tys {
+                    out = Some(match (out, *t) {
+                        (None, t) => t,
+                        (Some(a), b) if a == b => a,
+                        (Some(a), b) => {
+                            let num = |x: Ty| {
+                                matches!(
+                                    x,
+                                    Ty::Known(DataType::Int64) | Ty::Known(DataType::Float64)
+                                )
+                            };
+                            if num(a) && num(b) {
+                                Ty::Known(DataType::Float64)
+                            } else {
+                                Ty::Unknown
+                            }
+                        }
+                    });
+                }
+                out.unwrap_or(Ty::Unknown)
+            }
+            "abs" => {
+                if self.arity(tys.len() == 1, node, "abs expects 1 argument") {
+                    self.check_numeric_arg(name, tys[0], node);
+                    if tys[0].is_known(DataType::Int64) {
+                        return Ty::Known(DataType::Int64);
+                    }
+                }
+                Ty::Known(DataType::Float64)
+            }
+            "sqrt" | "exp" | "ln" | "log10" | "floor" | "ceil" => {
+                if self.arity(tys.len() == 1, node, &format!("{name} expects 1 argument")) {
+                    self.check_numeric_arg(name, tys[0], node);
+                }
+                Ty::Known(DataType::Float64)
+            }
+            "round" => {
+                if self.arity(
+                    tys.len() == 1 || tys.len() == 2,
+                    node,
+                    "round expects 1 or 2 arguments",
+                ) {
+                    self.check_numeric_arg(name, tys[0], node);
+                    if tys.len() == 2 {
+                        // The digits argument coerces floats; only
+                        // strings/booleans fail.
+                        if tys[1].non_numeric() {
+                            self.diag(
+                                DiagCode::E111,
+                                &node.path,
+                                format!("round digits argument has type {}", tys[1]),
+                            );
+                        }
+                    }
+                }
+                Ty::Known(DataType::Float64)
+            }
+            "power" | "pow" => {
+                if self.arity(tys.len() == 2, node, &format!("{name} expects 2 arguments")) {
+                    self.check_numeric_arg(name, tys[0], node);
+                    self.check_numeric_arg(name, tys[1], node);
+                }
+                Ty::Known(DataType::Float64)
+            }
+            "upper" | "lower" | "length" => {
+                if self.arity(tys.len() == 1, node, &format!("{name} expects 1 argument")) {
+                    // Strict: the runtime `str1` helper rejects every
+                    // non-string, including numbers.
+                    if tys[0].known().is_some() && !tys[0].is_known(DataType::Utf8) {
+                        self.diag(
+                            DiagCode::E111,
+                            &node.path,
+                            format!("{name} expects a VARCHAR, got {}", tys[0]),
+                        );
+                    }
+                }
+                if name == "length" {
+                    Ty::Known(DataType::Int64)
+                } else {
+                    Ty::Known(DataType::Utf8)
+                }
+            }
+            "substr" | "substring" => {
+                if self.arity(tys.len() == 3, node, "substr expects (str, start, len)") {
+                    if tys[0].known().is_some() && !tys[0].is_known(DataType::Utf8) {
+                        self.diag(
+                            DiagCode::E111,
+                            &node.path,
+                            format!("substr expects a VARCHAR, got {}", tys[0]),
+                        );
+                    }
+                    // start/len go through `as_i64().unwrap_or(…)` at run
+                    // time — wrong types never error, so no check here.
+                }
+                Ty::Known(DataType::Utf8)
+            }
+            "concat" => Ty::Known(DataType::Utf8),
+            _ => {
+                if AggFunc::from_name(name, self.udfs).is_some() {
+                    // An aggregate call the planner did not lift into an
+                    // Aggregate operator (e.g. inside JOIN ON) reaches
+                    // the scalar dispatcher at run time and fails as
+                    // unknown. (Checked after the builtin arms: a
+                    // builtin shadows a same-named UDAF at run time.)
+                    self.diag(
+                        DiagCode::E113,
+                        &node.path,
+                        format!("aggregate {name}(…) is not allowed in a scalar position"),
+                    );
+                    Ty::Unknown
+                } else if self.udfs.has_scalar(name) || self.udfs.has_vectorized(name) {
+                    // No arity metadata is registered for UDFs; trust the
+                    // declared return type.
+                    self.udfs
+                        .scalar_return_type(name)
+                        .map(Ty::Known)
+                        .unwrap_or(Ty::Unknown)
+                } else {
+                    self.diag(
+                        DiagCode::E004,
+                        &node.path,
+                        format!("unknown function {name:?}"),
+                    );
+                    Ty::Unknown
+                }
+            }
+        }
+    }
+
+    /// Record an `E110` arity diagnostic when `ok` is false; returns `ok`
+    /// so callers can guard their argument-type checks on it.
+    fn arity(&mut self, ok: bool, node: &NodeInfo, detail: &str) -> bool {
+        if !ok {
+            self.diag(DiagCode::E110, &node.path, detail.to_string());
+        }
+        ok
+    }
+
+    fn check_numeric_arg(&mut self, name: &str, t: Ty, node: &NodeInfo) {
+        if t.non_numeric() {
+            self.diag(
+                DiagCode::E111,
+                &node.path,
+                format!("{name} expects a number, got {t}"),
+            );
+        }
+    }
+
+    /// Predicate lints: constant truth values (W001/W002) and
+    /// comparisons against NULL literals (W003).
+    fn lint_predicate(&mut self, predicate: &Expr, node: &NodeInfo) {
+        match const_truth(predicate) {
+            Some(true) => self.diag(
+                DiagCode::W001,
+                &node.path,
+                "predicate is constant TRUE — the filter is a no-op".to_string(),
+            ),
+            Some(false) => self.diag(
+                DiagCode::W002,
+                &node.path,
+                "predicate is constant FALSE/NULL — every row is dropped".to_string(),
+            ),
+            None => {}
+        }
+        let mut null_cmp = false;
+        walk_expr(predicate, &mut |e| {
+            if let Expr::Binary { op, left, right } = e {
+                let is_cmp = matches!(
+                    op,
+                    BinaryOp::Eq
+                        | BinaryOp::NotEq
+                        | BinaryOp::Lt
+                        | BinaryOp::LtEq
+                        | BinaryOp::Gt
+                        | BinaryOp::GtEq
+                );
+                if is_cmp
+                    && (matches!(**left, Expr::Literal(Value::Null))
+                        || matches!(**right, Expr::Literal(Value::Null)))
+                {
+                    null_cmp = true;
+                }
+            }
+        });
+        if null_cmp {
+            self.diag(
+                DiagCode::W003,
+                &node.path,
+                "comparison with NULL always yields NULL — use IS NULL".to_string(),
+            );
+        }
+    }
+}
+
+/// Static truth value of a predicate, when decidable without data:
+/// literal TRUE / FALSE / NULL (NULL drops like FALSE under WHERE).
+fn const_truth(e: &Expr) -> Option<bool> {
+    match e {
+        Expr::Literal(Value::Bool(b)) => Some(*b),
+        Expr::Literal(Value::Null) => Some(false),
+        _ => None,
+    }
+}
+
+fn walk_expr(e: &Expr, f: &mut impl FnMut(&Expr)) {
+    fn inner(e: &Expr, f: &mut dyn FnMut(&Expr)) {
+        f(e);
+        match e {
+            Expr::Unary { expr, .. } => inner(expr, f),
+            Expr::Binary { left, right, .. } => {
+                inner(left, f);
+                inner(right, f);
+            }
+            Expr::Func { args, .. } => args.iter().for_each(|a| inner(a, f)),
+            Expr::IsNull { expr, .. } => inner(expr, f),
+            Expr::InList { expr, list, .. } => {
+                inner(expr, f);
+                list.iter().for_each(|a| inner(a, f));
+            }
+            Expr::Between { expr, low, high, .. } => {
+                inner(expr, f);
+                inner(low, f);
+                inner(high, f);
+            }
+            Expr::Case { branches, else_value } => {
+                for (c, v) in branches {
+                    inner(c, f);
+                    inner(v, f);
+                }
+                if let Some(e) = else_value {
+                    inner(e, f);
+                }
+            }
+            _ => {}
+        }
+    }
+    inner(e, f)
+}
+
+/// Does a referenced name plausibly refer to this output column?
+/// Case-insensitive on the whole name and on the bare suffix in either
+/// direction (mirrors the resolver's qualified/bare matching).
+fn name_matches(referenced: &str, out_name: &str) -> bool {
+    if referenced.eq_ignore_ascii_case(out_name) {
+        return true;
+    }
+    let bare = |s: &str| s.rsplit_once('.').map(|(_, b)| b.to_string());
+    if let Some(b) = bare(referenced) {
+        if b.eq_ignore_ascii_case(out_name) {
+            return true;
+        }
+    }
+    if let Some(b) = bare(out_name) {
+        if b.eq_ignore_ascii_case(referenced) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Union the parent's needed-name set with the columns referenced by
+/// `exprs`; `None` (everything needed) is absorbing. A `Star` or
+/// `__drop_hidden` marker also degrades to `None`.
+fn extend_needed<'e>(
+    needed: Option<&[String]>,
+    exprs: impl IntoIterator<Item = &'e Expr>,
+) -> Option<Vec<String>> {
+    let mut out: Vec<String> = needed?.to_vec();
+    for e in exprs {
+        let mut star = false;
+        walk_expr(e, &mut |x| {
+            if matches!(x, Expr::Star) {
+                star = true;
+            }
+            if let Expr::Func { name, .. } = x {
+                if name == "__drop_hidden" {
+                    star = true;
+                }
+            }
+        });
+        if star {
+            return None;
+        }
+        let mut cols = Vec::new();
+        e.referenced_columns(&mut cols);
+        out.extend(cols);
+    }
+    Some(out)
+}
+
+/// Mirror of `exec::plan_alias`: the FROM-clause label a join side
+/// qualifies colliding columns with.
+fn plan_label(p: &Plan, default: &str) -> String {
+    match p {
+        Plan::Scan { table, alias } => alias.clone().unwrap_or_else(|| table.clone()),
+        Plan::TableFunc { name, alias, .. } => alias.clone().unwrap_or_else(|| name.clone()),
+        Plan::Filter { input, .. } | Plan::Limit { input, .. } | Plan::Sort { input, .. } => {
+            plan_label(input, default)
+        }
+        _ => default.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Column, Field, RowSet, Schema};
+
+    fn catalog() -> Catalog {
+        let cat = Catalog::new();
+        cat.register(
+            "t",
+            RowSet::new(
+                Schema::new(vec![
+                    Field::new("a", DataType::Int64),
+                    Field::new("b", DataType::Float64),
+                    Field::new("s", DataType::Utf8),
+                    Field::new("c", DataType::Bool),
+                ]),
+                vec![
+                    Column::from_i64(vec![1, 2, 3]),
+                    Column::from_f64(vec![1.5, 2.5, 3.5]),
+                    Column::from_strings(vec!["x".into(), "y".into(), "z".into()]),
+                    Column::from_bools(vec![true, false, true]),
+                ],
+            )
+            .unwrap(),
+        );
+        cat
+    }
+
+    fn analyze(sql: &str) -> Analysis {
+        analyze_sql(sql, &catalog(), &UdfRegistry::new())
+    }
+
+    fn codes(a: &Analysis) -> Vec<&'static str> {
+        a.diagnostics.iter().map(|d| d.code.as_str()).collect()
+    }
+
+    #[test]
+    fn clean_query_analyzes_clean() {
+        let a = analyze("SELECT a + 1 AS a1, upper(s) AS u FROM t WHERE b > 1.0");
+        assert!(a.is_ok(), "{}", a.render());
+        assert_eq!(
+            a.schema,
+            vec![
+                ("a1".to_string(), Ty::Known(DataType::Int64)),
+                ("u".to_string(), Ty::Known(DataType::Utf8)),
+            ]
+        );
+        assert!(a.est_rows >= 1);
+        assert_eq!(a.est_scan_rows, 3);
+    }
+
+    #[test]
+    fn unknown_column_carries_path() {
+        let a = analyze("SELECT nope FROM t WHERE a > 0");
+        assert!(!a.is_ok());
+        let d = a.errors().next().unwrap();
+        assert_eq!(d.code, DiagCode::E001);
+        assert_eq!(d.path, "Scan(t) → Filter → Project");
+    }
+
+    #[test]
+    fn unknown_table_does_not_cascade() {
+        let a = analyze("SELECT x, y FROM missing WHERE z > 0");
+        let c = codes(&a);
+        assert_eq!(c, vec!["E003"], "{}", a.render());
+    }
+
+    #[test]
+    fn type_errors_reject() {
+        for (sql, code) in [
+            ("SELECT a + s FROM t", "E101"),
+            ("SELECT s < a FROM t", "E102"),
+            ("SELECT a FROM t WHERE c AND s = 'x' AND a AND c", "E103"),
+            ("SELECT NOT s FROM t", "E104"),
+            ("SELECT -s FROM t", "E105"),
+            ("SELECT a FROM t WHERE s BETWEEN 1 AND 2", "E106"),
+            ("SELECT substr(s) FROM t", "E110"),
+            ("SELECT upper(a) FROM t", "E111"),
+            ("SELECT nosuchfn(a) FROM t", "E004"),
+            ("SELECT sum(s) FROM t", "E120"),
+            ("SELECT sum() FROM t", "E121"),
+            ("SELECT a FROM t WHERE a + 1", "E130"),
+        ] {
+            let a = analyze(sql);
+            assert!(
+                a.errors().any(|d| d.code.as_str() == code),
+                "{sql}: expected {code}, got {:?}",
+                codes(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn lints_do_not_reject() {
+        for (sql, code) in [
+            ("SELECT a FROM t WHERE true", "W001"),
+            ("SELECT a FROM t WHERE false", "W002"),
+            ("SELECT a FROM t WHERE a = NULL", "W003"),
+            ("SELECT a FROM t WHERE a IN (1, 'x')", "W005"),
+            ("SELECT CASE WHEN a THEN 1 ELSE 2 END FROM t", "W006"),
+            ("SELECT CASE WHEN c THEN 1 ELSE s END FROM t", "W008"),
+        ] {
+            let a = analyze(sql);
+            assert!(a.is_ok(), "{sql}: rejected: {}", a.render_errors());
+            assert!(
+                a.diagnostics.iter().any(|d| d.code.as_str() == code),
+                "{sql}: expected {code}, got {:?}",
+                codes(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn unused_subquery_column_lints_w004() {
+        let a = analyze("SELECT a1 FROM (SELECT a + 1 AS a1, b + 1.0 AS b1 FROM t) q");
+        assert!(a.is_ok());
+        assert!(
+            a.diagnostics
+                .iter()
+                .any(|d| d.code == DiagCode::W004 && d.message.contains("b1")),
+            "{}",
+            a.render()
+        );
+    }
+
+    #[test]
+    fn aggregate_schema_and_estimates() {
+        let a = analyze("SELECT s, count(*) AS n, avg(a) AS m FROM t GROUP BY s");
+        assert!(a.is_ok(), "{}", a.render());
+        assert_eq!(
+            a.schema,
+            vec![
+                ("s".to_string(), Ty::Known(DataType::Utf8)),
+                ("n".to_string(), Ty::Known(DataType::Int64)),
+                ("m".to_string(), Ty::Known(DataType::Float64)),
+            ]
+        );
+        assert!(a.est_rows <= 3);
+        assert!(a.cold_bytes_hint() > 0);
+    }
+
+    #[test]
+    fn join_collision_qualifies_and_resolves() {
+        let cat = catalog();
+        cat.register(
+            "u",
+            RowSet::new(
+                Schema::new(vec![
+                    Field::new("a", DataType::Int64),
+                    Field::new("v", DataType::Float64),
+                ]),
+                vec![
+                    Column::from_i64(vec![1, 2]),
+                    Column::from_f64(vec![0.5, 0.25]),
+                ],
+            )
+            .unwrap(),
+        );
+        let a = analyze_sql(
+            "SELECT t.a, v FROM t JOIN u ON t.a = u.a",
+            &cat,
+            &UdfRegistry::new(),
+        );
+        assert!(a.is_ok(), "{}", a.render());
+        // Bare `a` over the collided join schema is ambiguous.
+        let a = analyze_sql(
+            "SELECT a FROM t JOIN u ON t.a = u.a",
+            &cat,
+            &UdfRegistry::new(),
+        );
+        assert!(a.errors().any(|d| d.code == DiagCode::E002), "{}", a.render());
+    }
+
+    #[test]
+    fn parse_and_plan_failures_are_coded() {
+        let a = analyze("SELEC nope");
+        assert_eq!(codes(&a), vec!["E000"]);
+        let a = analyze("SELECT a FROM t WHERE sum(a) > 1");
+        assert_eq!(codes(&a), vec!["E010"]);
+    }
+
+    #[test]
+    fn fragment_report_present() {
+        let a = analyze(
+            "SELECT k2, count(*) AS n FROM \
+             (SELECT a + 1 AS k2 FROM t WHERE b > 1.0) q GROUP BY k2",
+        );
+        assert!(a.is_ok(), "{}", a.render());
+        assert!(
+            a.fragments.iter().any(|f| f.fused),
+            "{:?}",
+            a.fragments
+        );
+        // Bare scan-filter chain: candidate declined with a reason.
+        let a = analyze("SELECT a, b FROM t WHERE b > 1.0");
+        assert!(a.fragments.iter().any(|f| !f.fused && !f.reason.is_empty()));
+    }
+
+    #[test]
+    fn estimator_hint_scales_with_schema_width() {
+        let narrow = analyze("SELECT a FROM t");
+        let wide = analyze("SELECT a, b, s, s || s AS s2 FROM t");
+        assert!(wide.cold_bytes_hint() > narrow.cold_bytes_hint());
+    }
+
+    #[test]
+    fn order_by_hidden_column_still_resolves() {
+        let a = analyze("SELECT a + 1 AS a1 FROM t ORDER BY s LIMIT 2");
+        assert!(a.is_ok(), "{}", a.render());
+        assert_eq!(a.schema.len(), 1);
+        assert_eq!(a.est_rows, 2);
+    }
+
+    #[test]
+    fn select_star_passthrough() {
+        let a = analyze("SELECT * FROM t");
+        assert!(a.is_ok());
+        assert_eq!(a.schema.len(), 4);
+        assert_eq!(a.est_rows, 3);
+    }
+
+    #[test]
+    fn from_less_select_uses_dual() {
+        let a = analyze("SELECT 1 + 2 AS three");
+        assert!(a.is_ok(), "{}", a.render());
+        assert_eq!(a.est_rows, 1);
+        assert!(a.schema[0].0 == "three");
+    }
+}

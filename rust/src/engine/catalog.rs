@@ -39,6 +39,16 @@ impl Catalog {
             .ok_or_else(|| anyhow!("table {name:?} not found"))
     }
 
+    /// Schema and row count of the named table, without cloning its
+    /// column data (the analyzer's plan-time lookup).
+    pub fn schema_of(&self, name: &str) -> Option<(Schema, usize)> {
+        self.tables
+            .read()
+            .unwrap()
+            .get(&name.to_ascii_lowercase())
+            .map(|t| (t.schema.clone(), t.num_rows()))
+    }
+
     /// Remove a table; returns whether it existed.
     pub fn drop_table(&self, name: &str) -> bool {
         self.tables

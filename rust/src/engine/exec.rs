@@ -2139,7 +2139,7 @@ impl AggAcc {
                 v => {
                     let x = v
                         .as_f64()
-                        .ok_or_else(|| anyhow!("SUM over non-numeric {v}"))?;
+                        .ok_or_else(|| super::analyze::err_agg_non_numeric("SUM", v))?;
                     *any = true;
                     if !*float_mode {
                         *float_mode = true;
@@ -2152,7 +2152,9 @@ impl AggAcc {
                 if !args[0].is_null() {
                     *sum += args[0]
                         .as_f64()
-                        .ok_or_else(|| anyhow!("AVG over non-numeric {}", args[0]))?;
+                        .ok_or_else(|| {
+                            super::analyze::err_agg_non_numeric("AVG", &args[0])
+                        })?;
                     *n += 1;
                 }
             }
@@ -2332,7 +2334,7 @@ fn mask_from_any(any: &[bool]) -> Option<Vec<bool>> {
 fn non_numeric_agg(what: &str, col: &Column, n_groups: usize) -> Result<Column> {
     for r in 0..col.len() {
         if col.is_valid(r) {
-            bail!("{what} over non-numeric {}", col.value(r));
+            return Err(super::analyze::err_agg_non_numeric(what, col.value(r)));
         }
     }
     Ok(null_f64_column(n_groups))
@@ -2738,7 +2740,7 @@ impl PartialAgg {
                 for k in 0..gids.len() {
                     let r = offset + k;
                     if col.is_valid(r) {
-                        bail!("{what} over non-numeric {}", col.value(r));
+                        return Err(super::analyze::err_agg_non_numeric(what, col.value(r)));
                     }
                 }
             }

@@ -63,12 +63,9 @@ pub fn resolve_column(schema: &Schema, name: &str) -> Result<usize> {
             .collect()
     };
     match candidates.len() {
-        0 => bail!(
-            "column {name:?} not found (available: {:?})",
-            schema.names()
-        ),
+        0 => Err(super::analyze::err_unknown_column(name, schema.names())),
         1 => Ok(candidates[0]),
-        _ => bail!("column {name:?} is ambiguous"),
+        _ => Err(super::analyze::err_ambiguous_column(name)),
     }
 }
 
@@ -545,7 +542,7 @@ fn neg_kernel(c: &Column, n: usize) -> Result<Column> {
         other => {
             for i in 0..n {
                 if other.is_valid(i) {
-                    bail!("cannot negate {}", other.value(i));
+                    return Err(super::analyze::err_negate(other.value(i)));
                 }
             }
             Ok(all_null_column(other.data_type(), n))
@@ -572,7 +569,7 @@ fn not_kernel(c: &Column, n: usize) -> Result<Column> {
         other => {
             for i in 0..n {
                 if other.is_valid(i) {
-                    bail!("NOT expects a boolean, got {}", other.value(i));
+                    return Err(super::analyze::err_not(other.value(i)));
                 }
             }
             Ok(all_null_column(DataType::Bool, n))
@@ -592,7 +589,7 @@ fn arith_kernel(op: BinaryOp, l: &Column, r: &Column, n: usize) -> Result<Column
         for i in 0..n {
             if both_valid(i) {
                 let bad = if !is_numeric(l) { l.value(i) } else { r.value(i) };
-                bail!("arith on {bad}");
+                return Err(super::analyze::err_arith(bad));
             }
         }
         let dt = if matches!(op, Div)
@@ -714,9 +711,8 @@ fn cmp_kernel(op: BinaryOp, l: &Column, r: &Column, n: usize) -> Result<Column> 
             any_null = true;
             continue;
         }
-        let ord = cell_cmp(l, r, i).ok_or_else(|| {
-            anyhow!("cannot compare {} with {}", l.value(i), r.value(i))
-        })?;
+        let ord = cell_cmp(l, r, i)
+            .ok_or_else(|| super::analyze::err_compare(l.value(i), r.value(i)))?;
         data[i] = match op {
             BinaryOp::Eq => ord == Equal,
             BinaryOp::NotEq => ord != Equal,
@@ -746,7 +742,7 @@ fn bool_cells(c: &Column, n: usize) -> Result<Vec<Option<bool>>> {
         other => {
             for i in 0..n {
                 if other.is_valid(i) {
-                    bail!("AND/OR expects booleans");
+                    return Err(super::analyze::err_logic());
                 }
             }
             Ok(vec![None; n])
@@ -887,7 +883,7 @@ fn between_kernel(
         let le = cell_cmp(v, hi, i).map(|o| o != Ordering::Greater);
         match (ge, le) {
             (Some(a), Some(b)) => data[i] = (a && b) != negated,
-            _ => bail!("BETWEEN type mismatch"),
+            _ => return Err(super::analyze::err_between()),
         }
     }
     Ok(Column::Bool { data, valid: any_null.then_some(valid) })
@@ -1059,7 +1055,7 @@ fn eval_func_vec(
         }
         return Ok(Column::from_f64(out));
     }
-    bail!("unknown function {name:?}")
+    Err(super::analyze::err_unknown_function(name))
 }
 
 /// Bulk scalar view of a column: one `Value` conversion per cell, done
@@ -1075,13 +1071,18 @@ fn builtin_kernel(name: &str, cols: &[Cow<'_, Column>], n: usize) -> Result<Opti
     match name {
         "sqrt" | "exp" | "ln" | "log10" | "floor" | "ceil" => {
             if cols.len() != 1 {
-                bail!("{name} expects 1 argument");
+                return Err(super::analyze::err_builtin_arity(format!(
+                    "{name} expects 1 argument"
+                )));
             }
             let c = cols[0].as_ref();
             if !is_numeric(c) {
                 for i in 0..n {
                     if c.is_valid(i) {
-                        bail!("{name} expects a number, got {}", c.value(i));
+                        return Err(super::analyze::err_builtin_arg(format!(
+                            "{name} expects a number, got {}",
+                            c.value(i)
+                        )));
                     }
                 }
                 return Ok(Some(all_null_column(DataType::Float64, n)));
@@ -1111,7 +1112,7 @@ fn builtin_kernel(name: &str, cols: &[Cow<'_, Column>], n: usize) -> Result<Opti
         }
         "abs" => {
             if cols.len() != 1 {
-                bail!("abs expects 1 argument");
+                return Err(super::analyze::err_builtin_arity("abs expects 1 argument"));
             }
             let c = cols[0].as_ref();
             match c {
@@ -1151,7 +1152,10 @@ fn builtin_kernel(name: &str, cols: &[Cow<'_, Column>], n: usize) -> Result<Opti
                 other => {
                     for i in 0..n {
                         if other.is_valid(i) {
-                            bail!("abs expects a number, got {}", other.value(i));
+                            return Err(super::analyze::err_builtin_arg(format!(
+                                "abs expects a number, got {}",
+                                other.value(i)
+                            )));
                         }
                     }
                     Ok(Some(all_null_column(DataType::Float64, n)))
@@ -1163,7 +1167,10 @@ fn builtin_kernel(name: &str, cols: &[Cow<'_, Column>], n: usize) -> Result<Opti
             if !is_numeric(c) {
                 for i in 0..n {
                     if c.is_valid(i) {
-                        bail!("round expects a number, got {}", c.value(i));
+                        return Err(super::analyze::err_builtin_arg(format!(
+                            "round expects a number, got {}",
+                            c.value(i)
+                        )));
                     }
                 }
                 return Ok(Some(all_null_column(DataType::Float64, n)));
@@ -1183,13 +1190,18 @@ fn builtin_kernel(name: &str, cols: &[Cow<'_, Column>], n: usize) -> Result<Opti
         }
         "upper" | "lower" | "length" => {
             if cols.len() != 1 {
-                bail!("{name} expects 1 argument");
+                return Err(super::analyze::err_builtin_arity(format!(
+                    "{name} expects 1 argument"
+                )));
             }
             let c = cols[0].as_ref();
             let Column::Utf8 { data, .. } = c else {
                 for i in 0..n {
                     if c.is_valid(i) {
-                        bail!("{name} expects a string, got {}", c.value(i));
+                        return Err(super::analyze::err_builtin_arg(format!(
+                            "{name} expects a string, got {}",
+                            c.value(i)
+                        )));
                     }
                 }
                 let dt = if name == "length" { DataType::Int64 } else { DataType::Utf8 };
@@ -1248,12 +1260,12 @@ pub fn eval_row(expr: &Expr, rows: &RowSet, r: usize, udfs: &UdfRegistry) -> Res
                     Value::Null => Ok(Value::Null),
                     Value::Int(i) => Ok(Value::Int(-i)),
                     Value::Float(f) => Ok(Value::Float(-f)),
-                    other => bail!("cannot negate {other}"),
+                    other => Err(super::analyze::err_negate(other)),
                 },
                 UnaryOp::Not => match v {
                     Value::Null => Ok(Value::Null),
                     Value::Bool(b) => Ok(Value::Bool(!b)),
-                    other => bail!("NOT expects a boolean, got {other}"),
+                    other => Err(super::analyze::err_not(other)),
                 },
             }
         }
@@ -1304,7 +1316,7 @@ pub fn eval_row(expr: &Expr, rows: &RowSet, r: usize, udfs: &UdfRegistry) -> Res
             let le = v.sql_cmp(&hi).map(|o| o != std::cmp::Ordering::Greater);
             match (ge, le) {
                 (Some(a), Some(b)) => Ok(Value::Bool((a && b) != *negated)),
-                _ => bail!("BETWEEN type mismatch"),
+                _ => Err(super::analyze::err_between()),
             }
         }
         Expr::Case { branches, else_value } => {
@@ -1334,13 +1346,13 @@ fn eval_logic(
     match (op, lb, l.is_null()) {
         (BinaryOp::And, Some(false), _) => return Ok(Value::Bool(false)),
         (BinaryOp::Or, Some(true), _) => return Ok(Value::Bool(true)),
-        (_, None, false) => bail!("AND/OR expects booleans"),
+        (_, None, false) => return Err(super::analyze::err_logic()),
         _ => {}
     }
     let rv = eval_row(right, rows, r, udfs)?;
     let rb = rv.as_bool();
     if !rv.is_null() && rb.is_none() {
-        bail!("AND/OR expects booleans");
+        return Err(super::analyze::err_logic());
     }
     Ok(match op {
         BinaryOp::And => match (lb, rb) {
@@ -1378,8 +1390,8 @@ fn eval_binary(op: BinaryOp, l: &Value, r: &Value) -> Result<Value> {
                     _ => unreachable!(),
                 }));
             }
-            let a = l.as_f64().ok_or_else(|| anyhow!("arith on {l}"))?;
-            let b = r.as_f64().ok_or_else(|| anyhow!("arith on {r}"))?;
+            let a = l.as_f64().ok_or_else(|| super::analyze::err_arith(l))?;
+            let b = r.as_f64().ok_or_else(|| super::analyze::err_arith(r))?;
             Ok(Value::Float(match op {
                 Add => a + b,
                 Sub => a - b,
@@ -1389,8 +1401,8 @@ fn eval_binary(op: BinaryOp, l: &Value, r: &Value) -> Result<Value> {
             }))
         }
         Div => {
-            let a = l.as_f64().ok_or_else(|| anyhow!("arith on {l}"))?;
-            let b = r.as_f64().ok_or_else(|| anyhow!("arith on {r}"))?;
+            let a = l.as_f64().ok_or_else(|| super::analyze::err_arith(l))?;
+            let b = r.as_f64().ok_or_else(|| super::analyze::err_arith(r))?;
             if b == 0.0 {
                 Ok(Value::Null) // SQL: division by zero yields NULL here
             } else {
@@ -1401,7 +1413,7 @@ fn eval_binary(op: BinaryOp, l: &Value, r: &Value) -> Result<Value> {
             use std::cmp::Ordering::*;
             let ord = l
                 .sql_cmp(r)
-                .ok_or_else(|| anyhow!("cannot compare {l} with {r}"))?;
+                .ok_or_else(|| super::analyze::err_compare(l, r))?;
             Ok(Value::Bool(match op {
                 Eq => ord == Equal,
                 NotEq => ord != Equal,
@@ -1448,7 +1460,7 @@ fn eval_func(
     if udfs.has_vectorized(name) {
         return call_vectorized_once(name, &vals, udfs);
     }
-    bail!("unknown function {name:?}")
+    Err(super::analyze::err_unknown_function(name))
 }
 
 /// Invoke a vectorized UDF on a single row (row-path parity for UDFs that
@@ -1492,15 +1504,19 @@ fn apply_builtin(name: &str, vals: &[Value]) -> Result<Value> {
     }
     let num1 = |vals: &[Value]| -> Result<Option<f64>> {
         if vals.len() != 1 {
-            bail!("{name} expects 1 argument");
+            return Err(super::analyze::err_builtin_arity(format!(
+                "{name} expects 1 argument"
+            )));
         }
         if vals[0].is_null() {
             return Ok(None);
         }
-        vals[0]
-            .as_f64()
-            .map(Some)
-            .ok_or_else(|| anyhow!("{name} expects a number, got {}", vals[0]))
+        vals[0].as_f64().map(Some).ok_or_else(|| {
+            super::analyze::err_builtin_arg(format!(
+                "{name} expects a number, got {}",
+                vals[0]
+            ))
+        })
     };
     match name {
         "abs" => Ok(match &vals[..] {
@@ -1519,22 +1535,34 @@ fn apply_builtin(name: &str, vals: &[Value]) -> Result<Value> {
                 if vals[0].is_null() || vals[1].is_null() {
                     return Ok(Value::Null);
                 }
-                let x = vals[0].as_f64().ok_or_else(|| anyhow!("round arg"))?;
-                let d = vals[1].as_i64().ok_or_else(|| anyhow!("round digits"))?;
+                let x = vals[0]
+                    .as_f64()
+                    .ok_or_else(|| super::analyze::err_builtin_arg("round arg"))?;
+                let d = vals[1]
+                    .as_i64()
+                    .ok_or_else(|| super::analyze::err_builtin_arg("round digits"))?;
                 let m = 10f64.powi(d as i32);
                 Ok(Value::Float((x * m).round() / m))
             }
-            _ => bail!("round expects 1 or 2 arguments"),
+            _ => Err(super::analyze::err_builtin_arity(
+                "round expects 1 or 2 arguments",
+            )),
         },
         "power" | "pow" => {
             if vals.len() != 2 {
-                bail!("{name} expects 2 arguments");
+                return Err(super::analyze::err_builtin_arity(format!(
+                    "{name} expects 2 arguments"
+                )));
             }
             if vals[0].is_null() || vals[1].is_null() {
                 return Ok(Value::Null);
             }
-            let a = vals[0].as_f64().ok_or_else(|| anyhow!("power base"))?;
-            let b = vals[1].as_f64().ok_or_else(|| anyhow!("power exp"))?;
+            let a = vals[0]
+                .as_f64()
+                .ok_or_else(|| super::analyze::err_builtin_arg("power base"))?;
+            let b = vals[1]
+                .as_f64()
+                .ok_or_else(|| super::analyze::err_builtin_arg("power exp"))?;
             Ok(Value::Float(a.powf(b)))
         }
         "upper" => str1(name, vals, |s| Value::Str(s.to_uppercase())),
@@ -1542,12 +1570,16 @@ fn apply_builtin(name: &str, vals: &[Value]) -> Result<Value> {
         "length" => str1(name, vals, |s| Value::Int(s.len() as i64)),
         "substr" | "substring" => {
             if vals.len() != 3 {
-                bail!("substr expects (str, start, len)");
+                return Err(super::analyze::err_builtin_arity(
+                    "substr expects (str, start, len)",
+                ));
             }
             if vals.iter().any(Value::is_null) {
                 return Ok(Value::Null);
             }
-            let s = vals[0].as_str().ok_or_else(|| anyhow!("substr arg"))?;
+            let s = vals[0]
+                .as_str()
+                .ok_or_else(|| super::analyze::err_builtin_arg("substr arg"))?;
             let start = (vals[1].as_i64().unwrap_or(1).max(1) - 1) as usize;
             let len = vals[2].as_i64().unwrap_or(0).max(0) as usize;
             Ok(Value::Str(s.chars().skip(start).take(len).collect()))
@@ -1562,20 +1594,24 @@ fn apply_builtin(name: &str, vals: &[Value]) -> Result<Value> {
             }
             Ok(Value::Str(s))
         }
-        other => bail!("unknown function {other:?}"),
+        other => Err(super::analyze::err_unknown_function(other)),
     }
 }
 
 fn str1(name: &str, vals: &[Value], f: impl Fn(&str) -> Value) -> Result<Value> {
     if vals.len() != 1 {
-        bail!("{name} expects 1 argument");
+        return Err(super::analyze::err_builtin_arity(format!(
+            "{name} expects 1 argument"
+        )));
     }
     if vals[0].is_null() {
         return Ok(Value::Null);
     }
     match &vals[0] {
         Value::Str(s) => Ok(f(s)),
-        other => bail!("{name} expects a string, got {other}"),
+        other => Err(super::analyze::err_builtin_arg(format!(
+            "{name} expects a string, got {other}"
+        ))),
     }
 }
 

@@ -281,6 +281,153 @@ impl<'p> Fragment<'p> {
     }
 }
 
+/// One entry in the analyzer's fragment-eligibility report: a fusion
+/// candidate root and whether — or why not — a fragment formed there.
+#[derive(Debug, Clone)]
+pub struct FuseNote {
+    /// Operator names in the (actual or would-be) fused chain, in
+    /// execution order, e.g. `["filter", "project", "aggregate"]`.
+    pub ops: Vec<String>,
+    /// Did a fragment form at this candidate?
+    pub fused: bool,
+    /// Why the candidate declined (empty when `fused`), mirroring the
+    /// eligibility rules in [`Fragment::extract`].
+    pub reason: String,
+}
+
+/// Walk the plan exactly as the executor does — try to form a fragment
+/// at every node, recursing through whatever doesn't fuse — and return
+/// one [`FuseNote`] per fusion candidate met along the way.
+pub(crate) fn fuse_report(plan: &Plan, udfs: &UdfRegistry) -> Vec<FuseNote> {
+    let mut notes = Vec::new();
+    walk_report(plan, udfs, &mut notes);
+    notes
+}
+
+fn chain_ops(stages: &[FragStage], cap: Option<&str>) -> Vec<String> {
+    let mut ops: Vec<String> = stages
+        .iter()
+        .map(|s| match s {
+            FragStage::Filter(_) => "filter".to_string(),
+            FragStage::Project(_) => "project".to_string(),
+        })
+        .collect();
+    if let Some(c) = cap {
+        ops.push(c.to_string());
+    }
+    ops
+}
+
+fn walk_report(plan: &Plan, udfs: &UdfRegistry, notes: &mut Vec<FuseNote>) {
+    if let Some(f) = Fragment::extract(plan, udfs) {
+        notes.push(FuseNote {
+            ops: f.op_names().iter().map(|s| s.to_string()).collect(),
+            fused: true,
+            reason: String::new(),
+        });
+        walk_report(f.source, udfs, notes);
+        return;
+    }
+    match plan {
+        Plan::Aggregate { input, group, aggs } => {
+            // `extract` only declines an aggregate root over vectorized
+            // UDF calls — in the cap expressions or in a fused stage.
+            let (stages, source) = collect_chain(input);
+            let cap_vectorized = group
+                .iter()
+                .any(|(e, _)| super::exec::has_vectorized_udf(e, udfs))
+                || aggs.iter().any(|a| {
+                    a.args
+                        .iter()
+                        .any(|e| super::exec::has_vectorized_udf(e, udfs))
+                });
+            let reason = if cap_vectorized {
+                "vectorized UDF in a group/aggregate expression"
+            } else {
+                "vectorized UDF in a fused stage"
+            };
+            notes.push(FuseNote {
+                ops: chain_ops(&stages, Some("aggregate")),
+                fused: false,
+                reason: reason.to_string(),
+            });
+            walk_report(source, udfs, notes);
+        }
+        Plan::Sort { input, keys } => decline_sort(input, keys, None, udfs, notes),
+        Plan::Limit { input, n } => match input.as_ref() {
+            Plan::Sort { input: sort_input, keys } => {
+                decline_sort(sort_input, keys, Some(*n), udfs, notes)
+            }
+            Plan::Project { input: proj_input, .. }
+                if matches!(proj_input.as_ref(), Plan::Sort { .. }) =>
+            {
+                let Plan::Sort { input: sort_input, keys } = proj_input.as_ref()
+                else {
+                    unreachable!("guarded by matches! above");
+                };
+                decline_sort(sort_input, keys, Some(*n), udfs, notes)
+            }
+            other => walk_report(other, udfs, notes),
+        },
+        Plan::Project { input, exprs } => {
+            let (mut stages, source) = collect_chain(input);
+            stages.push(FragStage::Project(exprs));
+            let ships = stages.iter().filter(|s| stage_ships(s, udfs)).count();
+            let reason = if ships < 2 {
+                "fewer than 2 shipping stages — per-operator dispatch ships no more"
+            } else {
+                "vectorized UDF in a fused stage"
+            };
+            notes.push(FuseNote {
+                ops: chain_ops(&stages, None),
+                fused: false,
+                reason: reason.to_string(),
+            });
+            walk_report(source, udfs, notes);
+        }
+        Plan::Filter { input, .. } => walk_report(input, udfs, notes),
+        Plan::Join { left, right, .. } => {
+            walk_report(left, udfs, notes);
+            walk_report(right, udfs, notes);
+        }
+        Plan::Scan { .. } | Plan::TableFunc { .. } => {}
+    }
+}
+
+fn decline_sort(
+    input: &Plan,
+    keys: &[OrderKey],
+    limit: Option<usize>,
+    udfs: &UdfRegistry,
+    notes: &mut Vec<FuseNote>,
+) {
+    let (stages, source) = collect_chain(input);
+    let has_project = stages.iter().any(|s| matches!(s, FragStage::Project(_)));
+    let ships = stages.iter().filter(|s| stage_ships(s, udfs)).count();
+    let reason = if limit == Some(0) {
+        "LIMIT 0 short-circuits on the legacy path without sorting"
+    } else if keys
+        .iter()
+        .any(|k| super::exec::has_vectorized_udf(&k.expr, udfs))
+    {
+        "vectorized UDF in a sort key"
+    } else if !has_project {
+        "no explicit projection below the sort — the legacy sort ships only its key columns"
+    } else if ships < 1 {
+        "no stage ships under operator-at-a-time dispatch"
+    } else {
+        "vectorized UDF in a fused stage"
+    };
+    notes.push(FuseNote {
+        ops: chain_ops(&stages, Some("sort")),
+        fused: false,
+        reason: reason.to_string(),
+    });
+    if limit != Some(0) {
+        walk_report(source, udfs, notes);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -395,6 +542,33 @@ mod tests {
              (SELECT v + 1.0 AS k2 FROM t WHERE v > 1.0) s GROUP BY k2",
         );
         assert!(first_fragment_ops(&p, &udfs).is_some());
+    }
+
+    #[test]
+    fn fuse_report_mirrors_extract() {
+        let udfs = UdfRegistry::new();
+        // Fused aggregate chain: one fused note over the scan.
+        let p = plan(
+            "SELECT k2, COUNT(*) AS n FROM \
+             (SELECT k + 1 AS k2 FROM t WHERE v > 10.0) s GROUP BY k2",
+        );
+        let notes = fuse_report(&p, &udfs);
+        assert_eq!(notes.len(), 1, "{notes:?}");
+        assert!(notes[0].fused);
+        assert_eq!(notes[0].ops, vec!["filter", "project", "aggregate"]);
+        // Declined chain: reason mirrors the ships<2 rule.
+        let p = plan("SELECT k, v FROM t WHERE v > 1.0");
+        let notes = fuse_report(&p, &udfs);
+        assert_eq!(notes.len(), 1, "{notes:?}");
+        assert!(!notes[0].fused);
+        assert!(notes[0].reason.contains("shipping stages"), "{notes:?}");
+        // Star-only sort declines with the no-projection reason.
+        let p = plan("SELECT * FROM t ORDER BY v");
+        let notes = fuse_report(&p, &udfs);
+        assert!(
+            notes.iter().any(|n| !n.fused && n.reason.contains("projection")),
+            "{notes:?}"
+        );
     }
 
     #[test]

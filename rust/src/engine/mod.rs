@@ -22,6 +22,7 @@
 //! bounds the whole statement with a deadline — outputs stay
 //! byte-identical to the fault-free run (see [`fault`]).
 
+mod analyze;
 mod catalog;
 mod exec;
 pub mod exchange;
@@ -33,7 +34,11 @@ mod key;
 pub mod morsel;
 mod plan;
 
+pub use analyze::{
+    analysis_enabled, analyze_plan, analyze_sql, Analysis, DiagCode, Diagnostic, Severity, Ty,
+};
 pub use catalog::{parse_csv, Catalog};
+pub use fragment::FuseNote;
 pub use exec::{
     default_fragments, default_nodes, default_parallelism, execute_plan,
     execute_plan_with_stats, run_sql, run_sql_with_stats, ExecContext, FragmentStats, OpStats,

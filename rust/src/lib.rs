@@ -71,6 +71,7 @@ pub mod dataframe;
 pub mod engine;
 pub mod packages;
 pub mod sandbox;
+#[warn(missing_docs)]
 pub mod scheduler;
 #[warn(missing_docs)]
 pub mod server;

@@ -27,7 +27,9 @@ use crate::util::ids::{NodeId, QueryId};
 /// One query awaiting placement.
 #[derive(Debug, Clone)]
 pub struct QueryRequest {
+    /// Unique id for outcome bookkeeping.
     pub id: QueryId,
+    /// Statement key (see [`crate::scheduler::QueryKey`]).
     pub key: String,
     /// Estimated demand (from the estimator under test).
     pub estimate_bytes: u64,
@@ -47,7 +49,9 @@ pub struct QueryRequest {
 /// A node's bookkeeping: reserved (estimated) and actual usage.
 #[derive(Debug, Clone, Default)]
 pub struct NodeState {
+    /// Sum of admitted estimates currently charged to the node.
     pub reserved_bytes: u64,
+    /// Sum of true peak demands currently running on the node.
     pub actual_bytes: u64,
 }
 
@@ -91,6 +95,7 @@ pub struct WarehouseScheduler<'c> {
 }
 
 impl<'c> WarehouseScheduler<'c> {
+    /// Scheduler over `n_nodes` nodes of `capacity_bytes` each.
     pub fn new(clock: &'c dyn Clock, n_nodes: usize, capacity_bytes: u64) -> Self {
         Self {
             clock,
@@ -213,10 +218,12 @@ impl<'c> WarehouseScheduler<'c> {
         }
     }
 
+    /// Every finished query's outcome, in completion order.
     pub fn outcomes(&self) -> &[(QueryId, AdmissionOutcome)] {
         &self.outcomes
     }
 
+    /// How many admitted queries blew past node capacity.
     pub fn oom_count(&self) -> usize {
         self.outcomes
             .iter()
@@ -224,6 +231,7 @@ impl<'c> WarehouseScheduler<'c> {
             .count()
     }
 
+    /// How many queries expired in the queue before placement.
     pub fn timed_out_count(&self) -> usize {
         self.outcomes
             .iter()
@@ -231,6 +239,7 @@ impl<'c> WarehouseScheduler<'c> {
             .count()
     }
 
+    /// Queue wait of every finished query, in completion order.
     pub fn queue_waits(&self) -> Vec<Duration> {
         self.outcomes
             .iter()
@@ -342,6 +351,7 @@ pub struct AdmissionGate {
 }
 
 impl AdmissionGate {
+    /// Gate with `cfg.slots` slots over `cfg.capacity_bytes` of memory.
     pub fn new(cfg: AdmissionConfig) -> Self {
         let slots = cfg.slots.max(1);
         let capacity_bytes = cfg.capacity_bytes.max(1);
@@ -359,6 +369,7 @@ impl AdmissionGate {
         }
     }
 
+    /// The placement discipline this gate was configured with.
     pub fn policy(&self) -> AdmissionPolicy {
         self.cfg.policy
     }

@@ -5,16 +5,20 @@ use super::stats::StatsFramework;
 
 /// Anything that can estimate a query's memory demand before it runs.
 pub trait MemoryEstimator: Send + Sync {
+    /// Estimated peak memory (bytes) for the statement keyed `key`.
     fn estimate(&self, key: &str, stats: &StatsFramework) -> u64;
+    /// Short estimator name for reports and ablation labels.
     fn name(&self) -> &'static str;
 }
 
 /// Fig. 5 baseline: every query gets the same fixed allocation.
 pub struct StaticEstimator {
+    /// The fixed per-query allocation.
     pub bytes: u64,
 }
 
 impl StaticEstimator {
+    /// Estimator that answers `bytes` for every statement.
     pub fn new(bytes: u64) -> Self {
         Self { bytes }
     }
@@ -34,10 +38,13 @@ impl MemoryEstimator for StaticEstimator {
 /// stats, take the P percentile, multiply by F. Falls back to `default`
 /// for never-seen queries (the cold-start case).
 pub struct DynamicEstimator {
+    /// Look-back window: how many recent executions to consider.
     pub k: usize,
     /// Percentile in [0, 100].
     pub percentile: f64,
+    /// Safety factor applied to the percentile observation.
     pub multiplier: f64,
+    /// Cold-start reservation for never-seen statements.
     pub default_bytes: u64,
 }
 
@@ -55,6 +62,24 @@ impl DynamicEstimator {
     /// admission gate.
     pub fn serving(default_bytes: u64) -> Self {
         Self { default_bytes, ..Self::paper_defaults() }
+    }
+
+    /// Like [`MemoryEstimator::estimate`], but with a plan-derived
+    /// cold-start hint: when the statement has no recorded history and
+    /// the semantic analyzer supplied a schema-width × estimated-rows
+    /// prediction, reserve that instead of the flat
+    /// [`DynamicEstimator::default_bytes`]. Warm statements ignore the
+    /// hint — observed usage beats any static prediction.
+    pub fn estimate_with_hint(
+        &self,
+        key: &str,
+        stats: &StatsFramework,
+        cold_hint: Option<u64>,
+    ) -> u64 {
+        if stats.lookback(key, self.k).is_empty() {
+            return cold_hint.unwrap_or(self.default_bytes).max(1);
+        }
+        self.estimate(key, stats)
     }
 }
 
@@ -95,6 +120,20 @@ mod tests {
         let e = DynamicEstimator::paper_defaults();
         let s = StatsFramework::new(10);
         assert_eq!(e.estimate("never-seen", &s), 2 << 30);
+    }
+
+    #[test]
+    fn cold_hint_overrides_default_until_history_exists() {
+        let e = DynamicEstimator { k: 5, percentile: 100.0, multiplier: 1.0, default_bytes: 1 << 20 };
+        let s = StatsFramework::new(10);
+        // Cold + hint: the analyzer's prediction wins over the flat default.
+        assert_eq!(e.estimate_with_hint("q", &s, Some(4096)), 4096);
+        // Cold + no hint: flat default, clamped to at least 1.
+        assert_eq!(e.estimate_with_hint("q", &s, None), 1 << 20);
+        assert_eq!(e.estimate_with_hint("q", &s, Some(0)), 1);
+        // Warm: observed history beats any hint.
+        s.record("q", 777);
+        assert_eq!(e.estimate_with_hint("q", &s, Some(4096)), 777);
     }
 
     #[test]

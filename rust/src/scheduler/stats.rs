@@ -61,16 +61,19 @@ pub struct ExecutionTracker {
 }
 
 impl ExecutionTracker {
+    /// Fold one periodic memory report into the lifecycle max.
     pub fn report(&mut self, current_bytes: u64) {
         self.max_seen = self.max_seen.max(current_bytes);
     }
 
+    /// The largest memory observation reported so far.
     pub fn max_bytes(&self) -> u64 {
         self.max_seen
     }
 }
 
 impl StatsFramework {
+    /// Framework remembering at most `max_history` executions per query.
     pub fn new(max_history: usize) -> Self {
         assert!(max_history > 0);
         Self {
@@ -202,10 +205,12 @@ impl StatsFramework {
         }
     }
 
+    /// How many remembered executions exist for `key` (≤ `max_history`).
     pub fn executions_seen(&self, key: &str) -> usize {
         self.inner.lock().unwrap().get(key).map_or(0, Vec::len)
     }
 
+    /// Number of distinct query keys with memory history.
     pub fn tracked_queries(&self) -> usize {
         self.inner.lock().unwrap().len()
     }

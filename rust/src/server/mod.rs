@@ -84,6 +84,7 @@ struct ServerCounters {
     admission_timeouts: AtomicU64,
     deadline_exceeded: AtomicU64,
     exec_errors: AtomicU64,
+    semantic_rejects: AtomicU64,
     protocol_errors: AtomicU64,
     in_flight: AtomicU64,
     peak_in_flight: AtomicU64,
@@ -106,6 +107,9 @@ pub struct CountersSnapshot {
     pub deadline_exceeded: u64,
     /// Statements that failed in planning/execution.
     pub exec_errors: u64,
+    /// Statements rejected by plan-time semantic analysis before taking
+    /// an admission slot.
+    pub semantic_rejects: u64,
     /// Connections that violated the frame grammar or state machine.
     pub protocol_errors: u64,
     /// Statements currently between receipt and reply.
@@ -121,7 +125,11 @@ impl CountersSnapshot {
     /// dropped work on the floor (or statements are still in flight).
     pub fn lost(&self) -> u64 {
         self.queries.saturating_sub(
-            self.completed + self.admission_timeouts + self.deadline_exceeded + self.exec_errors,
+            self.completed
+                + self.admission_timeouts
+                + self.deadline_exceeded
+                + self.exec_errors
+                + self.semantic_rejects,
         )
     }
 
@@ -215,6 +223,7 @@ impl Server {
             admission_timeouts: c.admission_timeouts.load(Ordering::Relaxed),
             deadline_exceeded: c.deadline_exceeded.load(Ordering::Relaxed),
             exec_errors: c.exec_errors.load(Ordering::Relaxed),
+            semantic_rejects: c.semantic_rejects.load(Ordering::Relaxed),
             protocol_errors: c.protocol_errors.load(Ordering::Relaxed),
             in_flight: c.in_flight.load(Ordering::Relaxed),
             peak_in_flight: c.peak_in_flight.load(Ordering::Relaxed),
@@ -350,7 +359,27 @@ fn serve_query(
 
     let deadline = (timeout_ms > 0).then(|| Instant::now() + Duration::from_millis(timeout_ms));
     let key = format!("{tenant}:{sql}");
-    let estimate = shared.estimator.estimate(&key, &shared.mem_stats);
+
+    // Plan-time semantic analysis (the paper's §III client-side
+    // validation, moved to the server's front door): a statement that
+    // cannot execute is refused with a typed `Semantic` error *before*
+    // it takes an admission slot, and a well-formed one contributes a
+    // schema-width × estimated-rows cold estimate instead of the flat
+    // `cold_estimate_bytes` default.
+    let analysis = slot.session.check_sql(sql);
+    if crate::engine::analysis_enabled() && !analysis.is_ok() {
+        shared.counters.semantic_rejects.fetch_add(1, Ordering::Relaxed);
+        slot.stats.record_exec_error();
+        return Frame::Error {
+            kind: ErrorKind::Semantic,
+            message: analysis.render_errors(),
+        };
+    }
+    let estimate = shared.estimator.estimate_with_hint(
+        &key,
+        &shared.mem_stats,
+        Some(analysis.cold_bytes_hint()),
+    );
 
     let ticket = match shared.gate.admit(estimate, deadline) {
         Ok(t) => t,
@@ -461,8 +490,16 @@ mod tests {
     fn exec_errors_are_replies_not_disconnects() {
         let server = start_server(ServerConfig::default());
         let mut client = ServeClient::connect(server.addr(), "t").unwrap();
-        let reply = client.query("SELECT * FROM no_such_table", 0).unwrap();
-        assert!(matches!(reply, ServeReply::Denied { kind: ErrorKind::Exec, .. }));
+        // Mixed CASE branches type as unknown at plan time, so the
+        // analyzer admits the statement — the failure only exists at
+        // runtime, when abs() meets the string branch.
+        let reply = client
+            .query("SELECT abs(CASE WHEN id < 0 THEN id ELSE 'x' END) AS a FROM demo", 0)
+            .unwrap();
+        assert!(
+            matches!(reply, ServeReply::Denied { kind: ErrorKind::Exec, .. }),
+            "expected exec error, got {reply:?}"
+        );
         // The connection survives an exec error.
         let reply = client.query("SELECT id FROM demo WHERE id < 3", 0).unwrap();
         match reply {
@@ -473,6 +510,39 @@ mod tests {
         let snap = server.shutdown();
         assert_eq!(snap.exec_errors, 1);
         assert_eq!(snap.completed, 1);
+        assert_eq!(snap.lost(), 0);
+    }
+
+    #[test]
+    fn semantic_rejects_answer_before_admission_without_a_slot() {
+        // Hold the gate's only slot; a broken statement must still be
+        // refused immediately with a typed `Semantic` error instead of
+        // queueing for admission — proof the reject happens before the
+        // gate and consumes no slot.
+        let server = start_server(ServerConfig {
+            admission: AdmissionConfig {
+                slots: 1,
+                capacity_bytes: 1 << 20,
+                policy: AdmissionPolicy::Fifo,
+            },
+            ..ServerConfig::default()
+        });
+        let _held = server.shared.gate.admit(1 << 20, None).unwrap();
+        let mut client = ServeClient::connect(server.addr(), "t").unwrap();
+        let reply = client.query("SELECT * FROM no_such_table", 50).unwrap();
+        match reply {
+            ServeReply::Denied { kind, message } => {
+                assert_eq!(kind, ErrorKind::Semantic, "got {kind:?}: {message}");
+                assert!(message.contains("E003"), "message carries the code: {message}");
+            }
+            other => panic!("expected semantic denial, got {other:?}"),
+        }
+        drop(client);
+        drop(_held);
+        let snap = server.shutdown();
+        assert_eq!(snap.semantic_rejects, 1);
+        assert_eq!(snap.admission_timeouts, 0);
+        assert_eq!(snap.exec_errors, 0);
         assert_eq!(snap.lost(), 0);
     }
 

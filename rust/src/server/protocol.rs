@@ -50,6 +50,9 @@ pub enum ErrorKind {
     DeadlineExceeded,
     /// The statement failed during planning or execution.
     Exec,
+    /// The statement was rejected by plan-time semantic analysis before
+    /// admission — no gate slot was consumed, no row was executed.
+    Semantic,
 }
 
 impl ErrorKind {
@@ -59,6 +62,7 @@ impl ErrorKind {
             ErrorKind::AdmissionTimeout => 1,
             ErrorKind::DeadlineExceeded => 2,
             ErrorKind::Exec => 3,
+            ErrorKind::Semantic => 4,
         }
     }
 
@@ -68,6 +72,7 @@ impl ErrorKind {
             1 => Some(ErrorKind::AdmissionTimeout),
             2 => Some(ErrorKind::DeadlineExceeded),
             3 => Some(ErrorKind::Exec),
+            4 => Some(ErrorKind::Semantic),
             _ => None,
         }
     }
@@ -413,6 +418,10 @@ mod tests {
             Frame::Result { queue_wait_ns: 123_456, batch: sample_batch() },
             Frame::Error { kind: ErrorKind::Exec, message: "no such table".into() },
             Frame::Error { kind: ErrorKind::AdmissionTimeout, message: String::new() },
+            Frame::Error {
+                kind: ErrorKind::Semantic,
+                message: "error[E001] Scan(t): column \"x\" not found".into(),
+            },
         ] {
             assert_eq!(round_trip(&f), f, "{f:?}");
         }

@@ -412,6 +412,19 @@ impl Session {
         text: &str,
         timeout: Option<Duration>,
     ) -> Result<(RowSet, crate::engine::QueryStats)> {
+        // Static semantic front door (the paper's §III client-side
+        // validation): statements that cannot execute are rejected with
+        // coded diagnostics before an execution context is even built.
+        // `SNOWPARK_ANALYZE=0` bypasses the gate.
+        if crate::engine::analysis_enabled() {
+            let analysis = self.check_sql(text);
+            if !analysis.is_ok() {
+                return Err(anyhow!(
+                    "semantic analysis rejected the statement:\n{}",
+                    analysis.render_errors()
+                ));
+            }
+        }
         let mut ctx = self.exec_context_for(text);
         ctx.cancel = timeout.map(CancelToken::with_deadline);
         let res = crate::engine::run_sql_with_stats(text, &ctx);
@@ -444,6 +457,14 @@ impl Session {
                 Err(e)
             }
         }
+    }
+
+    /// Statically analyze a statement against this session's catalog and
+    /// UDF registry — resolution, type checking, schema/row estimates,
+    /// lints, and the fragment-eligibility report — without executing a
+    /// row (the `snowparkd check-sql` / `run-sql --explain` entry point).
+    pub fn check_sql(&self, text: &str) -> crate::engine::Analysis {
+        crate::engine::analyze_sql(text, self.catalog(), &self.udfs())
     }
 
     /// Open a DataFrame on a table.

@@ -459,7 +459,10 @@ pub fn run_load(
                         Ok(ServeReply::Denied { kind, .. }) => match kind {
                             ErrorKind::AdmissionTimeout => out.admission_timeout += 1,
                             ErrorKind::DeadlineExceeded => out.deadline_exceeded += 1,
-                            ErrorKind::Exec => out.exec_error += 1,
+                            // Semantic rejects count as exec errors in the
+                            // harness: the catalog statements are all valid,
+                            // so any appearance here is a server-side bug.
+                            ErrorKind::Exec | ErrorKind::Semantic => out.exec_error += 1,
                             ErrorKind::Protocol => out.protocol_error += 1,
                         },
                         Err(_) => out.protocol_error += 1,

@@ -1,0 +1,353 @@
+//! Golden corpus for the plan-time semantic analyzer.
+//!
+//! Three layers of pinning:
+//! 1. broken statements keep their stable diagnostic **codes and
+//!    operator paths** (the codes are API — docs and clients match on
+//!    them);
+//! 2. the analyzer **accepts everything the repo actually runs**: the
+//!    serving workload catalog, a statement per TPCx-BB UDF, and the
+//!    integration SQL suite's statements (a false reject here would
+//!    brick the serving layer's pre-admission gate);
+//! 3. a seeded fuzz feeds random plan/expression trees straight into
+//!    [`analyze_plan`] — analysis must never panic, whatever the shape.
+
+use snowpark::engine::{analyze_plan, analyze_sql, AggCall, AggFunc, Catalog, Plan};
+use snowpark::session::Session;
+use snowpark::sim::{register_udfs, TpcxBbDataset, SERVING_CATALOG, TPCXBB_QUERIES};
+use snowpark::sql::{BinaryOp, Expr, JoinKind, OrderKey, UnaryOp};
+use snowpark::types::{Column, DataType, Field, RowSet, Schema, Value};
+use snowpark::udf::UdfRegistry;
+use snowpark::util::rng::Rng;
+
+/// Two small tables with every engine type, plus a colliding column
+/// name (`a`) for ambiguity cases.
+fn demo_catalog() -> Catalog {
+    let cat = Catalog::new();
+    cat.register(
+        "t",
+        RowSet::new(
+            Schema::new(vec![
+                Field::new("a", DataType::Int64),
+                Field::new("b", DataType::Float64),
+                Field::new("s", DataType::Utf8),
+                Field::new("c", DataType::Bool),
+            ]),
+            vec![
+                Column::from_i64(vec![1, 2, 3]),
+                Column::from_f64(vec![1.5, 2.5, 3.5]),
+                Column::from_strings(vec!["x".into(), "y".into(), "z".into()]),
+                Column::from_bools(vec![true, false, true]),
+            ],
+        )
+        .unwrap(),
+    );
+    cat.register(
+        "u",
+        RowSet::new(
+            Schema::new(vec![
+                Field::new("a", DataType::Int64),
+                Field::new("x", DataType::Int64),
+            ]),
+            vec![Column::from_i64(vec![1, 2]), Column::from_i64(vec![10, 20])],
+        )
+        .unwrap(),
+    );
+    cat
+}
+
+#[test]
+fn golden_corpus_codes_and_paths_are_stable() {
+    let cat = demo_catalog();
+    let udfs = UdfRegistry::new();
+    // (sql, expected code, expected operator path of the first error).
+    let corpus: &[(&str, &str, &str)] = &[
+        ("SELEC nope FROM t", "E000", "(parse)"),
+        ("SELECT a FROM t WHERE sum(a) > 1", "E010", "(plan)"),
+        ("SELECT nope FROM t WHERE a > 1", "E001", "Scan(t) → Filter → Project"),
+        ("SELECT a FROM t WHERE nope > 1", "E001", "Scan(t) → Filter"),
+        (
+            "SELECT t.a FROM t JOIN u ON t.a = u.a WHERE a > 1",
+            "E002",
+            "Scan(t) → Join(u) → Filter",
+        ),
+        ("SELECT * FROM missing", "E003", "Scan(missing)"),
+        ("SELECT wat(a) AS w FROM t", "E004", "Scan(t) → Project"),
+        ("SELECT a + s AS v FROM t", "E101", "Scan(t) → Project"),
+        ("SELECT a FROM t WHERE a = s", "E102", "Scan(t) → Filter"),
+        ("SELECT a FROM t WHERE (a > 1) AND s", "E103", "Scan(t) → Filter"),
+        ("SELECT NOT s AS v FROM t", "E104", "Scan(t) → Project"),
+        ("SELECT -s AS v FROM t", "E105", "Scan(t) → Project"),
+        ("SELECT a FROM t WHERE a BETWEEN 1 AND 'z'", "E106", "Scan(t) → Filter"),
+        ("SELECT substr(s) AS v FROM t", "E110", "Scan(t) → Project"),
+        ("SELECT upper(a) AS v FROM t", "E111", "Scan(t) → Project"),
+        ("SELECT sum(s) AS v FROM t", "E120", "Scan(t) → Aggregate"),
+        ("SELECT count() AS v FROM t", "E121", "Scan(t) → Aggregate"),
+        ("SELECT a FROM t WHERE a + 1", "E130", "Scan(t) → Filter"),
+    ];
+    for (sql, code, path) in corpus {
+        let a = analyze_sql(sql, &cat, &udfs);
+        let errs: Vec<_> = a.errors().collect();
+        assert!(
+            !errs.is_empty(),
+            "{sql}: expected a {code} rejection, analysis accepted\n{}",
+            a.render()
+        );
+        assert_eq!(errs[0].code.as_str(), *code, "{sql}: got {}", errs[0]);
+        assert_eq!(errs[0].path, *path, "{sql}: got {}", errs[0]);
+    }
+}
+
+#[test]
+fn lints_warn_with_stable_codes_but_accept() {
+    let cat = demo_catalog();
+    let udfs = UdfRegistry::new();
+    let corpus: &[(&str, &str)] = &[
+        ("SELECT a FROM t WHERE true", "W001"),
+        ("SELECT a FROM t WHERE false", "W002"),
+        ("SELECT a FROM t WHERE b = NULL", "W003"),
+        ("SELECT a FROM (SELECT a, b FROM t) q", "W004"),
+        ("SELECT a FROM t WHERE s IN (1, 2)", "W005"),
+        ("SELECT CASE WHEN a THEN 1 ELSE 2 END AS v FROM t", "W006"),
+        ("SELECT t.a FROM t JOIN u ON t.s = u.x", "W007"),
+        ("SELECT CASE WHEN c THEN 1 ELSE 'x' END AS v FROM t", "W008"),
+    ];
+    for (sql, code) in corpus {
+        let a = analyze_sql(sql, &cat, &udfs);
+        assert!(a.is_ok(), "{sql}: lints must not reject\n{}", a.render_errors());
+        assert!(
+            a.diagnostics.iter().any(|d| d.code.as_str() == *code),
+            "{sql}: expected {code}, got {:?}",
+            a.diagnostics.iter().map(|d| d.code.as_str()).collect::<Vec<_>>()
+        );
+    }
+}
+
+// ------------------------------------------------------ corpus acceptance
+
+#[test]
+fn serving_catalog_and_udf_statements_all_analyze_clean() {
+    // Exactly the serving layer's world: the merged TPCx-BB catalog and
+    // the sim UDF registry. Every catalog statement must pass — the
+    // server rejects failures before admission, so a false positive
+    // here means the serving workload cannot run at all.
+    let catalog = Catalog::new();
+    TpcxBbDataset::generate(500, 4, 1.4, 7).register_merged(&catalog).unwrap();
+    let mut udfs = UdfRegistry::new();
+    register_udfs(&mut udfs);
+    for stmt in SERVING_CATALOG {
+        let a = analyze_sql(stmt.sql, &catalog, &udfs);
+        assert!(a.is_ok(), "{}: {}", stmt.name, a.render_errors());
+        assert!(!a.schema.is_empty(), "{}: no output schema inferred", stmt.name);
+        assert!(a.cold_bytes_hint() >= 1, "{}", stmt.name);
+    }
+    // One scalar-UDF statement per TPCx-BB query.
+    for q in TPCXBB_QUERIES {
+        let sql =
+            format!("SELECT {}({}) AS v FROM {}", q.udf, q.input_cols.join(", "), q.table);
+        let a = analyze_sql(&sql, &catalog, &udfs);
+        assert!(a.is_ok(), "{}: {}", q.name, a.render_errors());
+    }
+}
+
+#[test]
+fn integration_sql_suite_statements_all_analyze_clean() {
+    // The statements the integration suite executes, checked through
+    // the session front door (`Session::check_sql`) over the same
+    // dataset shape the suite registers.
+    let s = Session::builder().build().unwrap();
+    TpcxBbDataset::generate(1_000, 2, 1.2, 11).register(&s).unwrap();
+    let suite = [
+        "SELECT COUNT(*) AS n FROM store_sales",
+        "SELECT SUM(quantity) AS q, MIN(price) AS lo, MAX(price) AS hi FROM store_sales",
+        "SELECT category, COUNT(*) AS n, SUM(price * quantity) AS rev \
+         FROM store_sales JOIN items ON store_sales.item_id = items.item_id \
+         GROUP BY category HAVING COUNT(*) > 5 ORDER BY rev DESC LIMIT 4",
+        "SELECT band, COUNT(*) AS n FROM \
+         (SELECT CASE WHEN stars >= 4 THEN 'good' WHEN stars >= 2 THEN 'mid' \
+          ELSE 'bad' END AS band FROM product_reviews) t \
+         GROUP BY band ORDER BY band",
+        "SELECT upper(category) AS cat FROM items \
+         WHERE category IN ('toys', 'books') AND item_id BETWEEN 0 AND 100 LIMIT 5",
+    ];
+    for sql in suite {
+        let a = s.check_sql(sql);
+        assert!(a.is_ok(), "{sql}: {}", a.render_errors());
+    }
+}
+
+// ------------------------------------------------------------- AST fuzz
+
+fn rand_expr(rng: &mut Rng, depth: usize) -> Expr {
+    if depth == 0 || rng.below(3) == 0 {
+        return match rng.below(6) {
+            0 => Expr::Literal(Value::Int(rng.below(100) as i64)),
+            1 => Expr::Literal(Value::Float(rng.f64())),
+            2 => Expr::Literal(Value::Str("s".into())),
+            3 => Expr::Literal(Value::Null),
+            4 => Expr::Literal(Value::Bool(rng.below(2) == 0)),
+            _ => {
+                let names = ["a", "b", "s", "c", "t.a", "nope", "x", "__dummy"];
+                Expr::Column(names[rng.below(names.len() as u64) as usize].to_string())
+            }
+        };
+    }
+    let d = depth - 1;
+    match rng.below(8) {
+        0 => Expr::Unary {
+            op: if rng.below(2) == 0 { UnaryOp::Neg } else { UnaryOp::Not },
+            expr: Box::new(rand_expr(rng, d)),
+        },
+        1 => {
+            let ops = [
+                BinaryOp::Add,
+                BinaryOp::Sub,
+                BinaryOp::Mul,
+                BinaryOp::Div,
+                BinaryOp::Mod,
+                BinaryOp::Eq,
+                BinaryOp::NotEq,
+                BinaryOp::Lt,
+                BinaryOp::LtEq,
+                BinaryOp::Gt,
+                BinaryOp::GtEq,
+                BinaryOp::And,
+                BinaryOp::Or,
+                BinaryOp::Concat,
+            ];
+            Expr::Binary {
+                op: ops[rng.below(ops.len() as u64) as usize],
+                left: Box::new(rand_expr(rng, d)),
+                right: Box::new(rand_expr(rng, d)),
+            }
+        }
+        2 => {
+            let names =
+                ["abs", "sqrt", "round", "substr", "upper", "length", "coalesce", "wat", "sum"];
+            let n_args = rng.below(4) as usize;
+            Expr::Func {
+                name: names[rng.below(names.len() as u64) as usize].to_string(),
+                args: (0..n_args).map(|_| rand_expr(rng, d)).collect(),
+            }
+        }
+        3 => Expr::IsNull { expr: Box::new(rand_expr(rng, d)), negated: rng.below(2) == 0 },
+        4 => Expr::InList {
+            expr: Box::new(rand_expr(rng, d)),
+            list: (0..rng.below(3) as usize + 1).map(|_| rand_expr(rng, d)).collect(),
+            negated: rng.below(2) == 0,
+        },
+        5 => Expr::Between {
+            expr: Box::new(rand_expr(rng, d)),
+            low: Box::new(rand_expr(rng, d)),
+            high: Box::new(rand_expr(rng, d)),
+            negated: rng.below(2) == 0,
+        },
+        6 => Expr::Case {
+            branches: (0..rng.below(2) as usize + 1)
+                .map(|_| (rand_expr(rng, d), rand_expr(rng, d)))
+                .collect(),
+            else_value: if rng.below(2) == 0 {
+                Some(Box::new(rand_expr(rng, d)))
+            } else {
+                None
+            },
+        },
+        _ => Expr::Star,
+    }
+}
+
+fn rand_plan(rng: &mut Rng, depth: usize) -> Plan {
+    if depth == 0 || rng.below(4) == 0 {
+        return match rng.below(3) {
+            0 => Plan::Scan { table: "t".to_string(), alias: None },
+            1 => Plan::Scan {
+                table: "missing".to_string(),
+                alias: Some("m".to_string()),
+            },
+            _ => Plan::TableFunc {
+                name: if rng.below(2) == 0 { "__dual".to_string() } else { "gen".to_string() },
+                args: vec![rand_expr(rng, 1)],
+                alias: None,
+            },
+        };
+    }
+    let d = depth - 1;
+    match rng.below(6) {
+        0 => Plan::Filter {
+            input: Box::new(rand_plan(rng, d)),
+            predicate: rand_expr(rng, 2),
+        },
+        1 => Plan::Project {
+            input: Box::new(rand_plan(rng, d)),
+            exprs: (0..rng.below(3) as usize + 1)
+                .map(|i| (rand_expr(rng, 2), format!("o{i}")))
+                .collect(),
+        },
+        2 => {
+            let funcs = [
+                AggFunc::Count,
+                AggFunc::CountStar,
+                AggFunc::Sum,
+                AggFunc::Avg,
+                AggFunc::Min,
+                AggFunc::Max,
+                AggFunc::Udaf,
+            ];
+            let func = funcs[rng.below(funcs.len() as u64) as usize];
+            let args = if func == AggFunc::CountStar || rng.below(4) == 0 {
+                Vec::new()
+            } else {
+                vec![rand_expr(rng, 2)]
+            };
+            Plan::Aggregate {
+                input: Box::new(rand_plan(rng, d)),
+                group: if rng.below(2) == 0 {
+                    vec![(rand_expr(rng, 1), "g".to_string())]
+                } else {
+                    Vec::new()
+                },
+                aggs: vec![AggCall {
+                    func,
+                    name: "agg".to_string(),
+                    args,
+                    out_name: "v".to_string(),
+                }],
+            }
+        }
+        3 => Plan::Join {
+            left: Box::new(rand_plan(rng, d)),
+            right: Box::new(rand_plan(rng, d)),
+            kind: if rng.below(2) == 0 { JoinKind::Inner } else { JoinKind::Left },
+            equi: if rng.below(2) == 0 {
+                vec![(rand_expr(rng, 1), rand_expr(rng, 1))]
+            } else {
+                Vec::new()
+            },
+            residual: if rng.below(2) == 0 { Some(rand_expr(rng, 2)) } else { None },
+        },
+        4 => Plan::Sort {
+            input: Box::new(rand_plan(rng, d)),
+            keys: vec![OrderKey { expr: rand_expr(rng, 2), descending: rng.below(2) == 0 }],
+        },
+        _ => Plan::Limit {
+            input: Box::new(rand_plan(rng, d)),
+            n: rng.below(10) as usize,
+        },
+    }
+}
+
+#[test]
+fn analysis_never_panics_on_random_plan_trees() {
+    let cat = demo_catalog();
+    let udfs = UdfRegistry::new();
+    let mut rng = Rng::new(0xA1A1);
+    for case in 0..600u64 {
+        let mut r = rng.fork(case);
+        let plan = rand_plan(&mut r, 4);
+        // Whatever tree comes out — unknown tables, aggregates over
+        // Star, UDAFs with no registration, nonsense predicates — the
+        // analyzer must return diagnostics, never panic.
+        let a = analyze_plan(&plan, &cat, &udfs);
+        let _ = a.render();
+        let _ = a.cold_bytes_hint();
+    }
+}

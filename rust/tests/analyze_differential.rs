@@ -1,0 +1,295 @@
+//! Randomized differential test pinning the analyzer's contract against
+//! the real engine, both directions:
+//!
+//! - **accept ⇒ runnable**: every generated *valid* statement passes
+//!   analysis AND executes without error, and the executed output
+//!   schema matches the analyzer's inferred schema;
+//! - **reject ⇒ broken**: every generated *invalid* statement (exactly
+//!   one flaw, planted in an always-evaluated position) is rejected
+//!   with the expected code, and execution fails with an error carrying
+//!   the **same code** (the kernels raise through the shared
+//!   code-carrying constructors) — except `E130`, where the runtime's
+//!   documented behavior is to silently mask a non-boolean predicate to
+//!   all-false and return zero rows.
+//!
+//! The flaws live in projections over non-empty input with no
+//! row-filtering WHERE, or in the WHERE itself, so the kernels are
+//! guaranteed to actually meet the bad operands (per-row type errors
+//! only fire on rows that exist). `E121` (zero-argument aggregate) is
+//! analyzer-only: the runtime panics on it, which is exactly why the
+//! analyzer must catch it first — covered by tests/analyze_diag.rs.
+
+use std::sync::Arc;
+
+use snowpark::engine::{analyze_sql, run_sql, Catalog, ExecContext, Ty};
+use snowpark::types::{Column, DataType, Field, RowSet, Schema};
+use snowpark::udf::UdfRegistry;
+use snowpark::util::rng::Rng;
+
+const ROWS: i64 = 64;
+
+/// 64 fully non-NULL rows of every engine type, so per-row kernels are
+/// guaranteed to evaluate every operand.
+fn table() -> RowSet {
+    RowSet::new(
+        Schema::new(vec![
+            Field::new("a", DataType::Int64),
+            Field::new("b", DataType::Float64),
+            Field::new("s", DataType::Utf8),
+            Field::new("c", DataType::Bool),
+        ]),
+        vec![
+            Column::from_i64((0..ROWS).collect()),
+            Column::from_f64((0..ROWS).map(|i| i as f64 * 0.5).collect()),
+            Column::from_strings((0..ROWS).map(|i| format!("s{}", i % 8)).collect()),
+            Column::from_bools((0..ROWS).map(|i| i % 2 == 0).collect()),
+        ],
+    )
+    .unwrap()
+}
+
+fn context() -> ExecContext {
+    let catalog = Arc::new(Catalog::new());
+    catalog.register("t", table());
+    let mut ctx = ExecContext::new(catalog, Arc::new(UdfRegistry::new()));
+    // Sequential single-node: the differential is about semantics, not
+    // shapes (shapes are pinned byte-identical elsewhere).
+    ctx.parallelism = 1;
+    ctx.nodes = 1;
+    ctx
+}
+
+// ----------------------------------------------------- valid generator
+
+fn pick<'x>(rng: &mut Rng, options: &[&'x str]) -> &'x str {
+    options[rng.below(options.len() as u64) as usize]
+}
+
+/// A numeric expression (Int64 or Float64) that can never raise.
+fn num_expr(rng: &mut Rng, depth: usize) -> String {
+    if depth == 0 || rng.below(2) == 0 {
+        return pick(rng, &["a", "b", "2", "7", "3.5", "0.25"]).to_string();
+    }
+    let d = depth - 1;
+    match rng.below(7) {
+        0 => format!("({} + {})", num_expr(rng, d), num_expr(rng, d)),
+        1 => format!("({} - {})", num_expr(rng, d), num_expr(rng, d)),
+        2 => format!("({} * {})", num_expr(rng, d), num_expr(rng, d)),
+        // Division by zero yields NULL, never an error.
+        3 => format!("({} / {})", num_expr(rng, d), num_expr(rng, d)),
+        4 => format!("abs({})", num_expr(rng, d)),
+        5 => format!("round({}, 1)", num_expr(rng, d)),
+        _ => format!("(-{})", num_expr(rng, d)),
+    }
+}
+
+/// A string expression that can never raise (substr is total on any
+/// start/len; concat coerces).
+fn str_expr(rng: &mut Rng, depth: usize) -> String {
+    if depth == 0 || rng.below(2) == 0 {
+        return pick(rng, &["s", "'k'"]).to_string();
+    }
+    let d = depth - 1;
+    match rng.below(5) {
+        0 => format!("upper({})", str_expr(rng, d)),
+        1 => format!("lower({})", str_expr(rng, d)),
+        2 => format!("substr({}, 1, 2)", str_expr(rng, d)),
+        3 => format!("({} || 'x')", str_expr(rng, d)),
+        _ => format!("concat({}, 'y')", str_expr(rng, d)),
+    }
+}
+
+/// A boolean expression that can never raise.
+fn bool_expr(rng: &mut Rng, depth: usize) -> String {
+    if depth == 0 || rng.below(3) == 0 {
+        return pick(rng, &["c", "(NOT c)", "(a < 10)", "(b >= 1.5)"]).to_string();
+    }
+    let d = depth - 1;
+    match rng.below(7) {
+        0 => format!("({} < {})", num_expr(rng, d), num_expr(rng, d)),
+        1 => format!("({} >= {})", num_expr(rng, d), num_expr(rng, d)),
+        2 => format!("({} = {})", str_expr(rng, d), str_expr(rng, d)),
+        3 => format!("({} AND {})", bool_expr(rng, d), bool_expr(rng, d)),
+        4 => format!("({} OR {})", bool_expr(rng, d), bool_expr(rng, d)),
+        5 => format!("({} BETWEEN 0 AND 100)", num_expr(rng, d)),
+        _ => "(s IN ('s0', 's1', 'k'))".to_string(),
+    }
+}
+
+/// One random valid query. Shapes: plain projection (optionally
+/// filtered/limited), aggregation, order-by, self-join, subquery.
+fn valid_query(rng: &mut Rng) -> String {
+    match rng.below(5) {
+        0 => {
+            let mut sql = format!(
+                "SELECT {} AS v0, {} AS v1, {} AS v2 FROM t",
+                num_expr(rng, 2),
+                str_expr(rng, 2),
+                bool_expr(rng, 2)
+            );
+            if rng.below(2) == 0 {
+                sql.push_str(&format!(" WHERE {}", bool_expr(rng, 2)));
+            }
+            if rng.below(2) == 0 {
+                sql.push_str(&format!(" LIMIT {}", rng.below(80)));
+            }
+            sql
+        }
+        1 => format!(
+            "SELECT s, count(*) AS n, sum(a) AS t1, avg({}) AS t2 FROM t GROUP BY s",
+            num_expr(rng, 1)
+        ),
+        // `OR a = 0` keeps row 0 alive: a global aggregate over an
+        // empty input yields one all-NULL row whose column type the
+        // engine defaults (no values to derive from), which would be a
+        // false schema-divergence signal, not a real contract break.
+        2 => format!(
+            "SELECT min(a) AS lo, max(b) AS hi FROM t WHERE ({}) OR a = 0",
+            bool_expr(rng, 2)
+        ),
+        3 => format!(
+            "SELECT a AS x, {} AS y FROM t ORDER BY {} {} LIMIT {}",
+            num_expr(rng, 2),
+            pick(rng, &["a", "b", "s"]),
+            pick(rng, &["ASC", "DESC"]),
+            1 + rng.below(16)
+        ),
+        _ => format!(
+            "SELECT k AS out FROM (SELECT {} AS k, b AS unused FROM t) q WHERE k IS NOT NULL",
+            num_expr(rng, 2)
+        ),
+    }
+}
+
+// --------------------------------------------------- invalid generator
+
+/// How execution must behave for a planted flaw.
+enum Runtime {
+    /// `run_sql` errors and the message contains the code string.
+    ErrWithCode,
+    /// `run_sql` errors (the legacy scan error carries no code).
+    ErrAny,
+    /// `run_sql` succeeds with zero rows (the E130 misresolve class).
+    OkZeroRows,
+}
+
+/// One random invalid query: exactly one flaw, always evaluated.
+/// Returns (sql, expected analyzer code, runtime expectation).
+fn invalid_query(rng: &mut Rng) -> (String, &'static str, Runtime) {
+    // A valid padding projection keeps the statements varied without
+    // adding a second flaw or filtering any row.
+    let pad = num_expr(rng, 1);
+    match rng.below(13) {
+        0 => (format!("SELECT {pad} AS p, nope AS bad FROM t"), "E001", Runtime::ErrWithCode),
+        1 => (
+            // Every column name collides with itself across the
+            // self-join, so the bare reference is ambiguous.
+            "SELECT b FROM t JOIN t AS t2 ON t.a = t2.a".to_string(),
+            "E002",
+            Runtime::ErrWithCode,
+        ),
+        2 => (format!("SELECT {pad} AS p FROM no_such_table"), "E003", Runtime::ErrAny),
+        3 => (format!("SELECT {pad} AS p, wat({pad}) AS bad FROM t"), "E004", Runtime::ErrWithCode),
+        4 => (format!("SELECT {pad} AS p, ({pad} + s) AS bad FROM t"), "E101", Runtime::ErrWithCode),
+        5 => (format!("SELECT a FROM t WHERE {pad} = s"), "E102", Runtime::ErrWithCode),
+        6 => ("SELECT a FROM t WHERE c AND s".to_string(), "E103", Runtime::ErrWithCode),
+        7 => (format!("SELECT {pad} AS p, (NOT s) AS bad FROM t"), "E104", Runtime::ErrWithCode),
+        8 => (format!("SELECT {pad} AS p, (-s) AS bad FROM t"), "E105", Runtime::ErrWithCode),
+        9 => (
+            format!("SELECT a FROM t WHERE {pad} BETWEEN 1 AND 'z'"),
+            "E106",
+            Runtime::ErrWithCode,
+        ),
+        10 => match rng.below(2) {
+            0 => (format!("SELECT {pad} AS p, substr(s) AS bad FROM t"), "E110", Runtime::ErrWithCode),
+            _ => (format!("SELECT {pad} AS p, upper({pad}) AS bad FROM t"), "E111", Runtime::ErrWithCode),
+        },
+        11 => (format!("SELECT {pad} AS p, sum(s) AS bad FROM t"), "E120", Runtime::ErrWithCode),
+        _ => match rng.below(2) {
+            0 => (format!("SELECT a FROM t WHERE {pad} + 1"), "E130", Runtime::OkZeroRows),
+            _ => ("SELECT a FROM t WHERE s".to_string(), "E130", Runtime::OkZeroRows),
+        },
+    }
+}
+
+// ------------------------------------------------------------- the test
+
+#[test]
+fn accepted_statements_execute_and_match_the_inferred_schema() {
+    let ctx = context();
+    let udfs = UdfRegistry::new();
+    let mut rng = Rng::new(0xD1FF);
+    for case in 0..600u64 {
+        let mut r = rng.fork(case);
+        let sql = valid_query(&mut r);
+        let analysis = analyze_sql(&sql, &ctx.catalog, &udfs);
+        assert!(
+            analysis.is_ok(),
+            "case {case}: analyzer rejected a valid statement\n{sql}\n{}",
+            analysis.render_errors()
+        );
+        let out = match run_sql(&sql, &ctx) {
+            Ok(out) => out,
+            Err(e) => panic!(
+                "case {case}: analyzer accepted, engine failed — contract broken\n{sql}\n{e:#}"
+            ),
+        };
+        // Schema differential: the inferred output schema must match
+        // what actually executed, name for name and (where the analyzer
+        // pinned a type) type for type.
+        let names: Vec<&str> = analysis.schema.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, out.schema.names(), "case {case}: schema names diverge\n{sql}");
+        if out.num_rows() > 0 {
+            for (i, (name, ty)) in analysis.schema.iter().enumerate() {
+                if let Ty::Known(dt) = ty {
+                    assert_eq!(
+                        *dt, out.schema.fields[i].data_type,
+                        "case {case}: column {name:?} type diverges\n{sql}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rejected_statements_fail_execution_with_the_same_code() {
+    let ctx = context();
+    let udfs = UdfRegistry::new();
+    let mut rng = Rng::new(0xBAD);
+    for case in 0..600u64 {
+        let mut r = rng.fork(case);
+        let (sql, code, runtime) = invalid_query(&mut r);
+        let analysis = analyze_sql(&sql, &ctx.catalog, &udfs);
+        assert!(
+            analysis.errors().any(|d| d.code.as_str() == code),
+            "case {case}: expected {code}\n{sql}\ngot: {}",
+            analysis.render()
+        );
+        match runtime {
+            Runtime::ErrWithCode => {
+                let err = run_sql(&sql, &ctx)
+                    .expect_err(&format!("case {case}: engine accepted a {code} statement\n{sql}"));
+                let msg = format!("{err:#}");
+                assert!(
+                    msg.contains(code),
+                    "case {case}: runtime error lost its code\n{sql}\nexpected {code} in: {msg}"
+                );
+            }
+            Runtime::ErrAny => {
+                run_sql(&sql, &ctx)
+                    .expect_err(&format!("case {case}: engine accepted a {code} statement\n{sql}"));
+            }
+            Runtime::OkZeroRows => {
+                let out = run_sql(&sql, &ctx).unwrap_or_else(|e| {
+                    panic!("case {case}: E130 must run (misresolve class)\n{sql}\n{e:#}")
+                });
+                assert_eq!(
+                    out.num_rows(),
+                    0,
+                    "case {case}: non-boolean predicate should mask every row\n{sql}"
+                );
+            }
+        }
+    }
+}

@@ -63,6 +63,10 @@ fn every_frame_kind_round_trips_through_public_codec() {
         Frame::Error { kind: ErrorKind::AdmissionTimeout, message: String::new() },
         Frame::Error { kind: ErrorKind::DeadlineExceeded, message: "took too long".into() },
         Frame::Error { kind: ErrorKind::Exec, message: "no such table".into() },
+        Frame::Error {
+            kind: ErrorKind::Semantic,
+            message: "error[E001] at Scan(demo): column \"nope\" not found".into(),
+        },
     ];
     for frame in &frames {
         let bytes = frame.encode();
