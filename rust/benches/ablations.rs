@@ -862,6 +862,88 @@ fn ablate_serving_latency() -> Vec<String> {
     json
 }
 
+/// A14: the cost-based plan rewriter vs the plain lowering, on 1 vs 4
+/// warehouse nodes. The selective-filter fragment query is the headline
+/// case — the statistics store estimates its selectivity inside the
+/// embedding gate, so the optimized plan filters on the leader before
+/// any span ships and the wire-byte column must strictly shrink at ≥2
+/// nodes. The other queries pin the rewrite overhead (plan-time only)
+/// on shapes where pushdown cannot pay. Byte-identity of the results is
+/// asserted inline; the seeded differential suite covers it at scale.
+/// Honors quick mode. Returns JSON rows for BENCH_engine.json.
+fn ablate_planner_rewrites() -> Vec<String> {
+    let (n, keys) = engine_rows();
+    let (warmup, iters) = bench_iters();
+    println!("\n-- A14: planner rewrites ({n} rows, rewrite vs plain lowering, 1 vs 4 nodes) --");
+    let catalog = engine_tables(n, keys, None, 47);
+    let queries = [
+        ("selective-filter", "SELECT k + 1 AS k1, v * 2.0 AS vv FROM facts WHERE v < 2.0"),
+        (
+            "filter-agg",
+            "SELECT k, COUNT(*) AS c, SUM(v) AS s FROM facts WHERE v < 2.0 GROUP BY k",
+        ),
+        (
+            "prune-join",
+            "SELECT facts.v AS v FROM dim JOIN facts ON dim.k = facts.k \
+             WHERE facts.v < 2.0 ORDER BY v LIMIT 100",
+        ),
+    ];
+    let mut table =
+        Table::new(&["query", "nodes", "plain", "rewritten", "gain", "wire rw/plain"]);
+    let mut json = Vec::new();
+    for (name, stmt) in queries {
+        for nodes in [1usize, 4] {
+            let ctx_plain = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(2)
+                .with_nodes(nodes)
+                .with_rewrite(false);
+            let ctx_rw = ExecContext::new(catalog.clone(), Arc::new(UdfRegistry::new()))
+                .with_parallelism(2)
+                .with_nodes(nodes)
+                .with_rewrite(true);
+            let t_plain = best(&measure(warmup, iters, || run_sql(stmt, &ctx_plain).unwrap()));
+            let t_rw = best(&measure(warmup, iters, || run_sql(stmt, &ctx_rw).unwrap()));
+            let (rows_plain, plain_stats) = run_sql_with_stats(stmt, &ctx_plain).unwrap();
+            let (rows_rw, rw_stats) = run_sql_with_stats(stmt, &ctx_rw).unwrap();
+            assert_eq!(rows_plain, rows_rw, "{name}: rewrite changed the result bytes");
+            let (plain_wire, rw_wire) =
+                (plain_stats.total_wire_bytes(), rw_stats.total_wire_bytes());
+            if nodes > 1 {
+                assert!(
+                    rw_wire < plain_wire,
+                    "{name}: pushdown must strictly reduce wire bytes at {nodes} nodes \
+                     ({rw_wire} !< {plain_wire})"
+                );
+            }
+            let gain =
+                (t_plain.as_secs_f64() - t_rw.as_secs_f64()) / t_plain.as_secs_f64().max(1e-12);
+            table.row(&[
+                name.to_string(),
+                format!("{nodes}"),
+                fmt_duration(t_plain),
+                fmt_duration(t_rw),
+                format!("{:+.1}%", gain * 100.0),
+                format!("{:.0}k/{:.0}k", rw_wire as f64 / 1e3, plain_wire as f64 / 1e3),
+            ]);
+            json.push(format!(
+                "{{\"bench\":\"planner_rewrites\",\"query\":\"{name}\",\"dist\":\"uniform\",\
+                 \"rows\":{n},\"nodes\":{nodes},\"workers_per_node\":2,\
+                 \"plain_ms\":{:.3},\"rewrite_ms\":{:.3},\"rewrite_gain\":{gain:.3},\
+                 \"plain_wire_bytes\":{plain_wire},\"rewrite_wire_bytes\":{rw_wire}}}",
+                t_plain.as_secs_f64() * 1e3,
+                t_rw.as_secs_f64() * 1e3,
+            ));
+        }
+    }
+    table.print();
+    println!(
+        "(the stats store prices the filter's selectivity inside the embedding gate: \
+         the optimized plan filters before shipping, so remote spans carry ~2% of the \
+         bytes; results are asserted byte-identical either way)"
+    );
+    json
+}
+
 /// Record the engine microbench trajectory where the driver (and
 /// EXPERIMENTS.md) can quote it.
 fn write_bench_json(rows: &[String]) {
@@ -886,7 +968,8 @@ fn main() {
          distributed morsel dispatch (static vs stealing), pipeline \
          fragments (fragment vs operator-at-a-time node dispatch), \
          fault recovery (armed-dispatch overhead, retry vs rerun), \
-         serving latency (admit-all vs estimated-backfill admission).",
+         serving latency (admit-all vs estimated-backfill admission), \
+         planner rewrites (cost-based rewriter vs plain lowering).",
     );
     if quick_mode() {
         println!("(SNOWPARK_BENCH_QUICK set: reduced rows/iterations)");
@@ -904,5 +987,6 @@ fn main() {
     json.extend(ablate_pipeline_fragments());
     json.extend(ablate_fault_recovery());
     json.extend(ablate_serving_latency());
+    json.extend(ablate_planner_rewrites());
     write_bench_json(&json);
 }

@@ -36,7 +36,8 @@ snowparkd — Snowpark reproduction launcher
 USAGE:
   snowparkd info
   snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T] \
-[--nodes N] [--adaptive-shape] [--timeout MS] [--fault-plan SPEC] [--check] [--explain]
+[--nodes N] [--adaptive-shape] [--no-rewrite] [--timeout MS] [--fault-plan SPEC] \
+[--check] [--explain]
   snowparkd check-sql \"SELECT ...\" [--rows N] [--seed S]
   snowparkd check-sql --corpus [--rows N] [--seed S]
   snowparkd demo
@@ -79,7 +80,12 @@ warehouse pool; a one-shot run-sql invocation has an empty history, so
 the flag's effect here is recording + the cold-start default — the
 adaptation pays off across repeated statements on a long-lived
 session). SNOWPARK_FRAGMENTS=0 pins the operator-at-a-time dispatch
-baseline. --timeout MS bounds the statement's wall time (0 = none;
+baseline. --no-rewrite (or SNOWPARK_REWRITE=0) disables the cost-based
+plan rewriter — the unoptimized-lowering baseline of the A14 ablation;
+results are byte-identical either way. All of these toggles resolve
+into one typed EngineConfig at session build (env < builder < CLI);
+`--stats` prints the resolved config header. --timeout MS bounds the
+statement's wall time (0 = none;
 past it the query aborts with `query deadline exceeded` instead of
 hanging). --fault-plan SPEC injects deterministic node faults, e.g.
 \"seed=7;ship=1:2;eval=2:p0.5;slow=1:40\" — ship/eval/panic take
@@ -96,7 +102,9 @@ admission-gate cold estimate are computed, and lints flag degenerate
 predicates. Exit status 1 on any error-severity diagnostic. run-sql
 --check does the same against the run-sql session; --explain prints
 the full analysis report (diagnostics, schema, estimates, fragment
-fusion) instead of executing. check-sql --corpus analyzes the serving
+fusion, and the optimized physical plan tree with per-node estimated
+rows/bytes, the rewrite rules that fired, and the chosen join order)
+instead of executing. check-sql --corpus analyzes the serving
 workload catalog plus the TPCx-BB UDF statements — the CI gate that
 the analyzer accepts everything the repo actually runs.
 SNOWPARK_ANALYZE=0 disables the pre-execution analysis gate.
@@ -108,7 +116,7 @@ pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let parsed = match ParsedArgs::parse(
         args,
-        &["help", "stats", "adaptive-shape", "self", "check", "explain", "corpus"],
+        &["help", "stats", "adaptive-shape", "self", "check", "explain", "corpus", "no-rewrite"],
     ) {
         Ok(p) => p,
         Err(e) => {
@@ -143,6 +151,7 @@ struct SessionOpts {
     parallelism: Option<usize>,
     nodes: Option<usize>,
     adaptive_shape: bool,
+    no_rewrite: bool,
     timeout: Option<Duration>,
     fault_plan: Option<FaultPlan>,
 }
@@ -156,6 +165,7 @@ impl Default for SessionOpts {
             parallelism: None,
             nodes: None,
             adaptive_shape: false,
+            no_rewrite: false,
             timeout: None,
             fault_plan: None,
         }
@@ -167,20 +177,27 @@ fn session_with_data(opts: SessionOpts) -> anyhow::Result<Arc<Session>> {
     if let Some(p) = opts.pool {
         b = b.pool(p);
     }
+    // The typed engine configuration, resolved once: environment base,
+    // CLI flags layered on top, handed to the builder as one value.
+    let mut engine = crate::engine::EngineConfig::from_env();
     if let Some(t) = opts.parallelism {
-        b = b.parallelism(t);
+        engine = engine.with_parallelism(t);
     }
     if let Some(n) = opts.nodes {
-        b = b.nodes(n);
+        engine = engine.with_nodes(n);
     }
     if opts.adaptive_shape {
-        b = b.adaptive_shape(true);
+        engine = engine.with_adaptive_shape(true);
     }
-    if let Some(t) = opts.timeout {
-        b = b.query_timeout(t);
+    if opts.no_rewrite {
+        engine = engine.with_rewrite(false);
     }
     if let Some(f) = opts.fault_plan {
-        b = b.fault_plan(f);
+        engine = engine.with_fault_plan(f);
+    }
+    b = b.engine_config(engine);
+    if let Some(t) = opts.timeout {
+        b = b.query_timeout(t);
     }
     let artifacts = crate::runtime::XlaRuntime::default_dir();
     if crate::runtime::XlaRuntime::available(&artifacts) {
@@ -246,6 +263,7 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         parallelism: (parallelism > 0).then_some(parallelism),
         nodes: (nodes > 0).then_some(nodes),
         adaptive_shape: args.flag("adaptive-shape"),
+        no_rewrite: args.flag("no-rewrite"),
         timeout: (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms)),
         fault_plan,
         ..SessionOpts::default()
@@ -258,6 +276,7 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         let (out, stats) = s.sql_with_stats(sql)?;
         println!("{out}");
         println!("({} rows)", out.num_rows());
+        println!("\n-- engine config --\n{}", s.engine_config());
         println!("\n-- operator stats --\n{}", stats.report());
     } else {
         let out = s.sql(sql)?;

@@ -356,8 +356,14 @@ pub struct Analysis {
     pub est_scan_rows: u64,
     /// Estimated output bytes (`schema width × est_rows`).
     pub est_output_bytes: u64,
-    /// Fragment-eligibility report: one note per fusion candidate.
+    /// Fragment-eligibility report: one note per fusion candidate (over
+    /// the *optimized* physical plan — what the executor actually runs).
     pub fragments: Vec<FuseNote>,
+    /// The optimized physical plan: the rendered tree (with per-node
+    /// cardinality/byte estimates) plus the rewrite rules that fired, in
+    /// the stable text format of [`super::rewrite::explain_plan`].
+    /// Empty when the statement failed to parse or plan.
+    pub optimized: String,
 }
 
 impl Analysis {
@@ -430,15 +436,24 @@ impl Analysis {
                 }
             }
         }
+        if !self.optimized.is_empty() {
+            out.push_str("optimized plan:\n");
+            for line in self.optimized.lines() {
+                out.push_str("  ");
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
         out
     }
 }
 
 /// Is the pre-execution analyzer gate enabled? On by default; set
 /// `SNOWPARK_ANALYZE=0` to run statements unchecked (escape hatch for
-/// comparing against raw-engine behavior).
+/// comparing against raw-engine behavior). Deprecation shim over
+/// [`super::config::EngineConfig::from_env`].
 pub fn analysis_enabled() -> bool {
-    std::env::var("SNOWPARK_ANALYZE").map_or(true, |v| v != "0")
+    super::config::EngineConfig::from_env().analyze
 }
 
 /// Parse, plan, and analyze one SQL statement. Parse failures become a
@@ -480,13 +495,17 @@ pub fn analyze_plan(plan: &Plan, catalog: &Catalog, udfs: &UdfRegistry) -> Analy
         .map(|(_, t)| t.width())
         .sum::<u64>()
         .saturating_mul(root.est_rows);
+    // The eligibility report and the explain tree both describe the
+    // *optimized* physical plan — exactly what the executor runs.
+    let (phys, _) = super::rewrite::rewrite_plan(plan, Some(catalog), udfs);
     Analysis {
         diagnostics: az.diags,
         schema: root.cols,
         est_rows: root.est_rows,
         est_scan_rows: az.scan_rows,
         est_output_bytes,
-        fragments: fuse_report(plan, udfs),
+        fragments: fuse_report(&phys, udfs),
+        optimized: super::rewrite::explain_plan(plan, Some(catalog), udfs),
     }
 }
 

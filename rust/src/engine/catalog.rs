@@ -6,13 +6,17 @@ use std::sync::RwLock;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::stats::StatsStore;
 use crate::types::{Column, DataType, Field, RowSet, Schema, Value};
 
 /// Named tables. Read-mostly: queries take snapshots (Arc'd rowsets would
 /// be an optimization; tables are cloned per scan for isolation).
+/// Registration also populates the attached [`StatsStore`] the cost-based
+/// rewriter consults.
 #[derive(Default)]
 pub struct Catalog {
     tables: RwLock<HashMap<String, RowSet>>,
+    stats: StatsStore,
 }
 
 impl Catalog {
@@ -22,11 +26,20 @@ impl Catalog {
     }
 
     /// Register (or replace) a table under `name` (case-insensitive).
+    /// Gathers per-column statistics (row count, NDV, min/max, equi-width
+    /// histogram) into the catalog's [`StatsStore`] as it goes.
     pub fn register(&self, name: &str, table: RowSet) {
+        self.stats.record_table(name, &table);
         self.tables
             .write()
             .unwrap()
             .insert(name.to_ascii_lowercase(), table);
+    }
+
+    /// The per-table statistics store populated at registration and
+    /// refined by observed per-query selectivities.
+    pub fn stats(&self) -> &StatsStore {
+        &self.stats
     }
 
     /// Snapshot of the named table (cloned for isolation).
@@ -51,6 +64,7 @@ impl Catalog {
 
     /// Remove a table; returns whether it existed.
     pub fn drop_table(&self, name: &str) -> bool {
+        self.stats.remove_table(name);
         self.tables
             .write()
             .unwrap()

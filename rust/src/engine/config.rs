@@ -1,0 +1,231 @@
+//! One typed engine configuration replacing the env-var sprawl.
+//!
+//! Every engine toggle that used to be read ad hoc from its own
+//! environment variable — `SNOWPARK_PARALLELISM`, `SNOWPARK_NODES`,
+//! `SNOWPARK_FRAGMENTS`, `SNOWPARK_REWRITE`, `SNOWPARK_ADAPTIVE_SHAPE`,
+//! `SNOWPARK_ANALYZE`, `SNOWPARK_FAULT_PLAN` — now resolves **once**
+//! into an [`EngineConfig`]: [`EngineConfig::from_env`] reads the
+//! environment, `SessionBuilder` setters override that, and CLI flags
+//! override the builder (env < builder < CLI). The legacy free
+//! functions (`default_parallelism`, `default_nodes`,
+//! `default_fragments`, `default_rewrite`, `analysis_enabled`,
+//! `default_fault_scope`) remain as deprecation shims that delegate
+//! here, so existing call sites and scripts keep working unchanged.
+//!
+//! [`EngineConfig`] implements [`std::fmt::Display`] as the one-line
+//! header `run-sql --stats` prints, so a benchmark log always records
+//! the exact configuration it ran under.
+
+use std::fmt;
+
+use super::fault::FaultPlan;
+
+/// The engine's resolved execution configuration.
+///
+/// `None` fields mean "derive": parallelism from the warehouse shape
+/// (else host cores), nodes from the pool shape (else 1), adaptive
+/// shape from whether the session has a pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Morsel worker threads per node (`SNOWPARK_PARALLELISM`,
+    /// `SessionBuilder::parallelism`, `run-sql --parallelism`).
+    pub parallelism: Option<usize>,
+    /// Warehouse nodes query morsels spread across (`SNOWPARK_NODES`,
+    /// `SessionBuilder::nodes`, `run-sql --nodes`).
+    pub nodes: Option<usize>,
+    /// Per-node pipeline-fragment dispatch (`SNOWPARK_FRAGMENTS`,
+    /// `run-sql --no-fragments` disables).
+    pub fragments: bool,
+    /// The cost-based logical plan rewriter (`SNOWPARK_REWRITE`,
+    /// `run-sql --no-rewrite` disables).
+    pub rewrite: bool,
+    /// The §IV.C adaptive query-shape policy
+    /// (`SNOWPARK_ADAPTIVE_SHAPE`, `SessionBuilder::adaptive_shape`,
+    /// `run-sql --adaptive-shape`). `None` = on for sessions with a
+    /// pool, off otherwise.
+    pub adaptive_shape: Option<bool>,
+    /// The pre-execution semantic-analysis gate (`SNOWPARK_ANALYZE=0`
+    /// disables).
+    pub analyze: bool,
+    /// Deterministic fault injection applied to every statement
+    /// (`SNOWPARK_FAULT_PLAN`, `SessionBuilder::fault_plan`,
+    /// `run-sql --fault-plan`).
+    pub fault_plan: Option<FaultPlan>,
+}
+
+impl Default for EngineConfig {
+    /// The all-defaults configuration, ignoring the environment.
+    fn default() -> Self {
+        Self {
+            parallelism: None,
+            nodes: None,
+            fragments: true,
+            rewrite: true,
+            adaptive_shape: None,
+            analyze: true,
+            fault_plan: None,
+        }
+    }
+}
+
+/// `1`/`true`/`on` → `Some(true)`, `0`/`false`/`off` → `Some(false)`,
+/// anything else (including unset) → `None`.
+fn env_bool(var: &str) -> Option<bool> {
+    match std::env::var(var) {
+        Ok(v) => match v.trim() {
+            "1" | "true" | "on" => Some(true),
+            "0" | "false" | "off" => Some(false),
+            _ => None,
+        },
+        Err(_) => None,
+    }
+}
+
+/// Positive integer from the environment, else `None`.
+fn env_usize(var: &str) -> Option<usize> {
+    std::env::var(var).ok()?.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+impl EngineConfig {
+    /// Resolve the configuration from the environment — the base layer
+    /// of the env < builder < CLI precedence chain. Malformed values are
+    /// ignored (a malformed `SNOWPARK_FAULT_PLAN` warns to stderr, like
+    /// the legacy path: chaos tooling must never take down a correct
+    /// run).
+    pub fn from_env() -> Self {
+        let fault_plan = match std::env::var("SNOWPARK_FAULT_PLAN") {
+            Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+                Ok(plan) if !plan.is_empty() => Some(plan),
+                Ok(_) => None,
+                Err(e) => {
+                    eprintln!("warning: ignoring malformed SNOWPARK_FAULT_PLAN: {e}");
+                    None
+                }
+            },
+            _ => None,
+        };
+        Self {
+            parallelism: env_usize("SNOWPARK_PARALLELISM"),
+            nodes: env_usize("SNOWPARK_NODES"),
+            fragments: env_bool("SNOWPARK_FRAGMENTS").unwrap_or(true),
+            rewrite: env_bool("SNOWPARK_REWRITE").unwrap_or(true),
+            adaptive_shape: env_bool("SNOWPARK_ADAPTIVE_SHAPE"),
+            analyze: std::env::var("SNOWPARK_ANALYZE").map_or(true, |v| v.trim() != "0"),
+            fault_plan,
+        }
+    }
+
+    /// Override the per-node morsel parallelism (clamped ≥ 1).
+    pub fn with_parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = Some(threads.max(1));
+        self
+    }
+
+    /// Override the warehouse-node count (clamped ≥ 1).
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = Some(nodes.max(1));
+        self
+    }
+
+    /// Override pipeline-fragment dispatch.
+    pub fn with_fragments(mut self, on: bool) -> Self {
+        self.fragments = on;
+        self
+    }
+
+    /// Override the cost-based plan rewriter.
+    pub fn with_rewrite(mut self, on: bool) -> Self {
+        self.rewrite = on;
+        self
+    }
+
+    /// Override the adaptive query-shape policy.
+    pub fn with_adaptive_shape(mut self, on: bool) -> Self {
+        self.adaptive_shape = Some(on);
+        self
+    }
+
+    /// Override the semantic-analysis gate.
+    pub fn with_analyze(mut self, on: bool) -> Self {
+        self.analyze = on;
+        self
+    }
+
+    /// Override the fault-injection plan.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+}
+
+impl fmt::Display for EngineConfig {
+    /// The one-line `--stats` header, e.g.
+    /// `parallelism=auto nodes=4 fragments=on rewrite=on adaptive=auto
+    /// analyze=on fault-plan=none`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let opt = |v: Option<usize>| v.map_or("auto".to_string(), |n| n.to_string());
+        let tog = |b: bool| if b { "on" } else { "off" };
+        write!(
+            f,
+            "parallelism={} nodes={} fragments={} rewrite={} adaptive={} analyze={} fault-plan={}",
+            opt(self.parallelism),
+            opt(self.nodes),
+            tog(self.fragments),
+            tog(self.rewrite),
+            self.adaptive_shape.map_or("auto", tog),
+            tog(self.analyze),
+            if self.fault_plan.is_some() { "set" } else { "none" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_all_on_and_derived() {
+        let c = EngineConfig::default();
+        assert_eq!(c.parallelism, None);
+        assert_eq!(c.nodes, None);
+        assert!(c.fragments && c.rewrite && c.analyze);
+        assert_eq!(c.adaptive_shape, None);
+        assert!(c.fault_plan.is_none());
+    }
+
+    #[test]
+    fn builder_overrides_layer_over_base() {
+        let c = EngineConfig::default()
+            .with_nodes(4)
+            .with_parallelism(2)
+            .with_fragments(false)
+            .with_rewrite(false)
+            .with_adaptive_shape(true)
+            .with_analyze(false);
+        assert_eq!(c.nodes, Some(4));
+        assert_eq!(c.parallelism, Some(2));
+        assert!(!c.fragments && !c.rewrite && !c.analyze);
+        assert_eq!(c.adaptive_shape, Some(true));
+        // A later layer (the CLI) wins over the earlier one.
+        let c = c.with_nodes(8).with_rewrite(true);
+        assert_eq!(c.nodes, Some(8));
+        assert!(c.rewrite);
+    }
+
+    #[test]
+    fn display_is_the_stats_header() {
+        let c = EngineConfig::default().with_nodes(4);
+        assert_eq!(
+            c.to_string(),
+            "parallelism=auto nodes=4 fragments=on rewrite=on adaptive=auto \
+             analyze=on fault-plan=none"
+        );
+    }
+
+    #[test]
+    fn zero_clamps_to_one() {
+        let c = EngineConfig::default().with_parallelism(0).with_nodes(0);
+        assert_eq!(c.parallelism, Some(1));
+        assert_eq!(c.nodes, Some(1));
+    }
+}

@@ -110,6 +110,7 @@ use super::hash::{
 use super::key::KeyValue;
 use super::morsel::{run_stealing_cancellable, ExecTally, NodeCounters, StealConfig};
 use super::plan::{AggCall, AggFunc, Plan};
+use super::rewrite::{lower, rewrite_plan, PhysicalPlan};
 
 /// Target rows per morsel: below two of these, scheduler + merge
 /// overhead dominates and operators stay sequential.
@@ -117,44 +118,43 @@ pub const MORSEL_MIN_ROWS: usize = 4096;
 
 /// The default intra-query parallelism: the `SNOWPARK_PARALLELISM`
 /// environment variable when set to a positive integer, otherwise the
-/// host's available cores.
+/// host's available cores. Deprecation shim over
+/// [`super::config::EngineConfig::from_env`].
 pub fn default_parallelism() -> usize {
-    if let Ok(s) = std::env::var("SNOWPARK_PARALLELISM") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    super::config::EngineConfig::from_env()
+        .parallelism
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// The default warehouse-node count for query dispatch: the
 /// `SNOWPARK_NODES` environment variable when set to a positive integer,
 /// otherwise 1 (single-node). `Session` overrides this from the pool
-/// shape.
+/// shape. Deprecation shim over
+/// [`super::config::EngineConfig::from_env`].
 pub fn default_nodes() -> usize {
-    if let Ok(s) = std::env::var("SNOWPARK_NODES") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
-    }
-    1
+    super::config::EngineConfig::from_env().nodes.unwrap_or(1)
 }
 
 /// The default for per-node pipeline-fragment dispatch: enabled, unless
 /// the `SNOWPARK_FRAGMENTS` environment variable is set to `0`, `false`,
-/// or `off` (the operator-at-a-time dispatch baseline).
+/// or `off` (the operator-at-a-time dispatch baseline). Deprecation
+/// shim over [`super::config::EngineConfig::from_env`].
 pub fn default_fragments() -> bool {
-    match std::env::var("SNOWPARK_FRAGMENTS") {
-        Ok(v) => !matches!(v.trim(), "0" | "false" | "off"),
-        Err(_) => true,
-    }
+    super::config::EngineConfig::from_env().fragments
+}
+
+/// The default for the cost-based plan rewriter: enabled, unless the
+/// `SNOWPARK_REWRITE` environment variable is set to `0`, `false`, or
+/// `off` (the straight [`lower`]-only baseline — every rewrite is
+/// byte-identical, so disabling only changes plan shape, never
+/// results). Deprecation shim over
+/// [`super::config::EngineConfig::from_env`].
+pub fn default_rewrite() -> bool {
+    super::config::EngineConfig::from_env().rewrite
 }
 
 /// Everything an operator needs at execution time.
+#[derive(Clone)]
 pub struct ExecContext {
     /// Table catalog queries scan from.
     pub catalog: Arc<Catalog>,
@@ -217,6 +217,13 @@ pub struct ExecContext {
     /// injected fault into a whole-query failure — the fail-from-scratch
     /// comparator of the A12 `fault_recovery` ablation.
     pub fault_retry: bool,
+    /// Run the cost-based logical rewriter (predicate/projection
+    /// pushdown, constant elimination, join-order selection) before
+    /// lowering to the physical plan (the default). `false` pins the
+    /// straight structural lowering — the `planner_rewrites` (A14)
+    /// ablation baseline. Defaults to [`default_rewrite`]
+    /// (`SNOWPARK_REWRITE=0` disables).
+    pub rewrite: bool,
 }
 
 impl ExecContext {
@@ -236,6 +243,7 @@ impl ExecContext {
             fault: super::fault::default_fault_scope(),
             cancel: None,
             fault_retry: true,
+            rewrite: default_rewrite(),
         }
     }
 
@@ -301,6 +309,13 @@ impl ExecContext {
     /// Toggle remote-span retry. `false` = fail-from-scratch semantics.
     pub fn with_fault_retry(mut self, on: bool) -> Self {
         self.fault_retry = on;
+        self
+    }
+
+    /// Toggle the cost-based plan rewriter. `false` pins the straight
+    /// structural lowering (the `planner_rewrites` ablation baseline).
+    pub fn with_rewrite(mut self, on: bool) -> Self {
+        self.rewrite = on;
         self
     }
 
@@ -1008,14 +1023,22 @@ pub fn execute_plan(plan: &Plan, ctx: &ExecContext) -> Result<RowSet> {
 /// the per-node morsel/steal tallies.
 pub fn execute_plan_with_stats(plan: &Plan, ctx: &ExecContext) -> Result<(RowSet, QueryStats)> {
     ctx.tally.reset();
+    // Logical → physical: the cost-based rewriter when enabled (every
+    // rule is byte-identity-preserving), else the straight structural
+    // lowering.
+    let phys = if ctx.rewrite {
+        rewrite_plan(plan, Some(ctx.catalog.as_ref()), &ctx.udfs).0
+    } else {
+        lower(plan)
+    };
     let mut stats = QueryStats::default();
-    let out = exec(plan, ctx, &mut stats)?;
+    let out = exec(&phys, ctx, &mut stats)?;
     stats.rows_output = out.num_rows() as u64;
     stats.node_stats = ctx.tally.snapshot();
     Ok((out, stats))
 }
 
-fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet> {
+fn exec(plan: &PhysicalPlan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet> {
     // Deadline gate at operator entry: a cancelled statement stops
     // descending the plan tree instead of starting new operators. The
     // morsel-boundary checks inside dispatch handle mid-operator
@@ -1033,15 +1056,49 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
         }
     }
     match plan {
-        Plan::Scan { table, alias: _ } => {
+        PhysicalPlan::Scan { table, alias: _, predicate, live } => {
             let t0 = Instant::now();
-            let rs = ctx.catalog.get(table)?;
+            let mut rs = ctx.catalog.get(table)?;
+            // Projection pushdown: keep only the live columns the rest
+            // of the plan references. Indices were computed against the
+            // registered schema at rewrite time; skip if the table was
+            // concurrently replaced with a narrower one.
+            if let Some(cols) = live {
+                if cols.iter().all(|&i| i < rs.num_columns()) {
+                    let fields = cols.iter().map(|&i| rs.schema.field(i).clone()).collect();
+                    let columns = cols.iter().map(|&i| rs.column(i).clone()).collect();
+                    rs = RowSet::new(Schema::new(fields), columns)?;
+                }
+            }
             let n = rs.num_rows() as u64;
             stats.rows_scanned += n;
-            stats.scan.record(n, n, 1, t0);
-            Ok(rs)
+            let out = match predicate {
+                Some(pred) => {
+                    // Embedded selective predicate: evaluate on the
+                    // leader before any cross-node shipping decision, so
+                    // downstream operators (and the exchange) see only
+                    // surviving rows. Morsel layout is a function of row
+                    // count alone, so leader-local evaluation is
+                    // byte-identical to any shape.
+                    let local = ExecContext {
+                        nodes: 1,
+                        fragments: false,
+                        fault: None,
+                        ..ctx.clone()
+                    };
+                    let mask = eval_pred(pred, &rs, &local)?;
+                    let out = rs.filter(&mask);
+                    ctx.catalog
+                        .stats()
+                        .observe(table, pred, n, out.num_rows() as u64);
+                    out
+                }
+                None => rs,
+            };
+            stats.scan.record(n, out.num_rows() as u64, 1, t0);
+            Ok(out)
         }
-        Plan::TableFunc { name, args, alias: _ } => {
+        PhysicalPlan::TableFunc { name, args, alias: _ } => {
             let t0 = Instant::now();
             let rs = if name == "__dual" {
                 // SELECT without FROM: one row, zero columns.
@@ -1069,13 +1126,25 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
             stats.scan.record(n, n, 1, t0);
             Ok(rs)
         }
-        Plan::Filter { input, predicate } => {
+        PhysicalPlan::Filter { input, predicate } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
             let before = ctx.tally.totals();
             let threads = parallel_threads(rows.num_rows(), ctx) as u64;
             let mask = eval_pred(predicate, &rows, ctx)?;
             let out = rows.filter(&mask);
+            // A filter sitting directly on a bare scan measures the
+            // predicate's true selectivity over the whole table — feed
+            // it back to the stats store so future rewrites of the same
+            // predicate use the observed value instead of the estimate.
+            if let PhysicalPlan::Scan { table, predicate: None, live: None, .. } = input.as_ref() {
+                ctx.catalog.stats().observe(
+                    table,
+                    predicate,
+                    rows.num_rows() as u64,
+                    out.num_rows() as u64,
+                );
+            }
             stats.filter.record_op(
                 rows.num_rows() as u64,
                 out.num_rows() as u64,
@@ -1086,7 +1155,7 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
             );
             Ok(out)
         }
-        Plan::Project { input, exprs } => {
+        PhysicalPlan::Project { input, exprs } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
             let before = ctx.tally.totals();
@@ -1102,7 +1171,7 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
             );
             Ok(out)
         }
-        Plan::Aggregate { input, group, aggs } => {
+        PhysicalPlan::Aggregate { input, group, aggs } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
             let before = ctx.tally.totals();
@@ -1118,7 +1187,7 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
             );
             Ok(out)
         }
-        Plan::Join { left, right, kind, equi, residual } => {
+        PhysicalPlan::Join { left, right, kind, equi, residual, swap_build: _ } => {
             let l = exec(left, ctx, stats)?;
             let r = exec(right, ctx, stats)?;
             let t0 = Instant::now();
@@ -1142,7 +1211,7 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
             );
             Ok(out)
         }
-        Plan::Sort { input, keys } => {
+        PhysicalPlan::Sort { input, keys } => {
             let rows = exec(input, ctx, stats)?;
             let t0 = Instant::now();
             let before = ctx.tally.totals();
@@ -1158,13 +1227,13 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
             );
             Ok(out)
         }
-        Plan::Limit { input, n } => {
+        PhysicalPlan::Limit { input, n } => {
             // `ORDER BY ... LIMIT k` short-circuits into a top-k partial
             // sort instead of sorting the full input. The sort may sit
             // directly below, or below the hidden-column-dropping
             // projection the planner inserts.
             match input.as_ref() {
-                Plan::Sort { input: sort_input, keys } => {
+                PhysicalPlan::Sort { input: sort_input, keys } => {
                     let rows = exec(sort_input, ctx, stats)?;
                     let t0 = Instant::now();
                     let before = ctx.tally.totals();
@@ -1183,10 +1252,10 @@ fn exec(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<RowSet
                     );
                     Ok(out)
                 }
-                Plan::Project { input: proj_input, exprs }
-                    if matches!(proj_input.as_ref(), Plan::Sort { .. }) =>
+                PhysicalPlan::Project { input: proj_input, exprs }
+                    if matches!(proj_input.as_ref(), PhysicalPlan::Sort { .. }) =>
                 {
-                    if let Plan::Sort { input: sort_input, keys } = proj_input.as_ref() {
+                    if let PhysicalPlan::Sort { input: sort_input, keys } = proj_input.as_ref() {
                         let rows = exec(sort_input, ctx, stats)?;
                         let t0 = Instant::now();
                         let before = ctx.tally.totals();
@@ -1904,7 +1973,11 @@ fn exec_fragment_fallback(
 /// breaker step (partial merge, k-way merge, or segment concatenation)
 /// on the leader. `Ok(None)` means no fragment forms at this node (the
 /// caller's legacy arm runs).
-fn exec_fragment(plan: &Plan, ctx: &ExecContext, stats: &mut QueryStats) -> Result<Option<RowSet>> {
+fn exec_fragment(
+    plan: &PhysicalPlan,
+    ctx: &ExecContext,
+    stats: &mut QueryStats,
+) -> Result<Option<RowSet>> {
     let frag = match Fragment::extract(plan, &ctx.udfs) {
         Some(f) => f,
         None => return Ok(None),
@@ -3358,13 +3431,17 @@ fn join_schema(l: &RowSet, lalias: &str, r: &RowSet, ralias: &str) -> Schema {
     Schema::new(fields)
 }
 
-fn plan_alias(p: &Plan, default: &str) -> String {
+fn plan_alias(p: &PhysicalPlan, default: &str) -> String {
     match p {
-        Plan::Scan { table, alias } => alias.clone().unwrap_or_else(|| table.clone()),
-        Plan::TableFunc { name, alias, .. } => alias.clone().unwrap_or_else(|| name.clone()),
-        Plan::Filter { input, .. } | Plan::Limit { input, .. } | Plan::Sort { input, .. } => {
-            plan_alias(input, default)
+        PhysicalPlan::Scan { table, alias, .. } => {
+            alias.clone().unwrap_or_else(|| table.clone())
         }
+        PhysicalPlan::TableFunc { name, alias, .. } => {
+            alias.clone().unwrap_or_else(|| name.clone())
+        }
+        PhysicalPlan::Filter { input, .. }
+        | PhysicalPlan::Limit { input, .. }
+        | PhysicalPlan::Sort { input, .. } => plan_alias(input, default),
         _ => default.to_string(),
     }
 }
@@ -3415,14 +3492,14 @@ fn join(
     equi: &[(Expr, Expr)],
     residual: Option<&Expr>,
     ctx: &ExecContext,
-    plan: &Plan,
+    plan: &PhysicalPlan,
     stats: &mut QueryStats,
 ) -> Result<RowSet> {
-    let (lalias, ralias) = match plan {
-        Plan::Join { left, right, .. } => {
-            (plan_alias(left, "l"), plan_alias(right, "r"))
+    let (lalias, ralias, swap_build) = match plan {
+        PhysicalPlan::Join { left, right, swap_build, .. } => {
+            (plan_alias(left, "l"), plan_alias(right, "r"), *swap_build)
         }
-        _ => ("l".to_string(), "r".to_string()),
+        _ => ("l".to_string(), "r".to_string(), false),
     };
     let out_schema = join_schema(l, &lalias, r, &ralias);
 
@@ -3451,6 +3528,61 @@ fn join(
         }
     }
 
+    let (l_idx, r_idx) = if swap_build && kind == JoinKind::Inner && !lkeys.is_empty() {
+        // Cost-chosen build side: the rewriter marked the left input as
+        // the smaller one, so build the hash table over it by running
+        // the join with the sides swapped, then transpose the emitted
+        // pairs and restore the canonical ascending (left, right) order
+        // — the exact sequence the unswapped join emits, so residual
+        // evaluation and the output gathers are byte-identical.
+        let (ri, li) = join_pairs(r, l, kind, &rkeys, &lkeys, ctx, stats)?;
+        let mut pairs: Vec<(i64, i64)> = li.into_iter().zip(ri).collect();
+        pairs.sort_unstable();
+        pairs.into_iter().unzip()
+    } else {
+        join_pairs(l, r, kind, &lkeys, &rkeys, ctx, stats)?
+    };
+
+    // Residual predicate, evaluated BEFORE materialization: only the
+    // columns the predicate references are gathered through the
+    // `l_idx`/`r_idx` vectors, the mask compacts the index vectors, and
+    // rows the residual drops are never gathered into the wide output.
+    // (Left-join NULL-row preservation caveat as before: a left row whose
+    // every match fails the residual is dropped, not re-NULL-padded.)
+    let (l_idx, r_idx) = match residual {
+        Some(pred) => {
+            let mask = residual_mask(pred, l, r, &out_schema, &l_idx, &r_idx, ctx)?;
+            let mut fl = Vec::with_capacity(l_idx.len());
+            let mut fr = Vec::with_capacity(r_idx.len());
+            for (k, keep) in mask.iter().enumerate() {
+                if *keep {
+                    fl.push(l_idx[k]);
+                    fr.push(r_idx[k]);
+                }
+            }
+            (fl, fr)
+        }
+        None => (l_idx, r_idx),
+    };
+
+    // Materialize the combined rowset through typed gathers.
+    materialize_join(l, r, &out_schema, &l_idx, &r_idx, ctx)
+}
+
+/// Emit a hash join's match-index pairs: build a table over `r`'s keys
+/// (`rkeys`), probe with `l`'s (`lkeys`) in ascending row order.
+/// Extracted from [`join`] so a cost-chosen build side can run it with
+/// the sides swapped and transpose the result.
+#[allow(clippy::too_many_arguments)]
+fn join_pairs(
+    l: &RowSet,
+    r: &RowSet,
+    kind: JoinKind,
+    lkeys: &[&Expr],
+    rkeys: &[&Expr],
+    ctx: &ExecContext,
+    stats: &mut QueryStats,
+) -> Result<(Vec<i64>, Vec<i64>)> {
     let mut l_idx: Vec<i64> = Vec::new();
     let mut r_idx: Vec<i64> = Vec::new(); // -1 = NULL row (left join)
 
@@ -3635,31 +3767,7 @@ fn join(
             }
         }
     }
-
-    // Residual predicate, evaluated BEFORE materialization: only the
-    // columns the predicate references are gathered through the
-    // `l_idx`/`r_idx` vectors, the mask compacts the index vectors, and
-    // rows the residual drops are never gathered into the wide output.
-    // (Left-join NULL-row preservation caveat as before: a left row whose
-    // every match fails the residual is dropped, not re-NULL-padded.)
-    let (l_idx, r_idx) = match residual {
-        Some(pred) => {
-            let mask = residual_mask(pred, l, r, &out_schema, &l_idx, &r_idx, ctx)?;
-            let mut fl = Vec::with_capacity(l_idx.len());
-            let mut fr = Vec::with_capacity(r_idx.len());
-            for (k, keep) in mask.iter().enumerate() {
-                if *keep {
-                    fl.push(l_idx[k]);
-                    fr.push(r_idx[k]);
-                }
-            }
-            (fl, fr)
-        }
-        None => (l_idx, r_idx),
-    };
-
-    // Materialize the combined rowset through typed gathers.
-    materialize_join(l, r, &out_schema, &l_idx, &r_idx, ctx)
+    Ok((l_idx, r_idx))
 }
 
 /// Evaluate a residual join predicate over the gather vectors without

@@ -484,19 +484,9 @@ impl FaultScope {
 /// failing every query — chaos tooling should never take down a correct
 /// run. `None` is the zero-overhead default: dispatch takes the plain
 /// path with no counters, catches, or sleeps.
+/// Deprecation shim over [`super::config::EngineConfig::from_env`].
 pub fn default_fault_scope() -> Option<Arc<FaultScope>> {
-    let spec = std::env::var("SNOWPARK_FAULT_PLAN").ok()?;
-    if spec.trim().is_empty() {
-        return None;
-    }
-    match FaultPlan::parse(&spec) {
-        Ok(plan) if !plan.is_empty() => Some(FaultScope::new(plan)),
-        Ok(_) => None,
-        Err(e) => {
-            eprintln!("warning: ignoring malformed SNOWPARK_FAULT_PLAN: {e}");
-            None
-        }
-    }
+    super::config::EngineConfig::from_env().fault_plan.map(FaultScope::new)
 }
 
 #[cfg(test)]

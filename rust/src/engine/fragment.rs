@@ -62,7 +62,8 @@ use crate::sql::ast::{Expr, OrderKey};
 use crate::udf::UdfRegistry;
 
 use super::exec::morsel_splittable;
-use super::plan::{AggCall, Plan};
+use super::plan::AggCall;
+use super::rewrite::PhysicalPlan as Plan;
 
 /// One pipelined (non-breaking) operator inside a fragment, applied
 /// per morsel over the node-local span in row order.
@@ -435,8 +436,12 @@ mod tests {
     use crate::types::DataType;
 
     fn plan(sql: &str) -> Plan {
-        super::super::plan::plan_query(&parse_query(sql).unwrap(), &UdfRegistry::new())
-            .unwrap()
+        let logical =
+            super::super::plan::plan_query(&parse_query(sql).unwrap(), &UdfRegistry::new())
+                .unwrap();
+        // Fragments form over the *physical* plan; these tests exercise
+        // the structural lowering (no rewrite rules applied).
+        super::super::rewrite::lower(&logical)
     }
 
     fn extract_in(plan: &Plan, udfs: &UdfRegistry) -> Option<Fragment<'_>> {

@@ -24,6 +24,7 @@
 
 mod analyze;
 mod catalog;
+mod config;
 mod exec;
 pub mod exchange;
 mod expr;
@@ -33,14 +34,17 @@ pub mod hash;
 mod key;
 pub mod morsel;
 mod plan;
+mod rewrite;
+mod stats;
 
 pub use analyze::{
     analysis_enabled, analyze_plan, analyze_sql, Analysis, DiagCode, Diagnostic, Severity, Ty,
 };
 pub use catalog::{parse_csv, Catalog};
+pub use config::EngineConfig;
 pub use fragment::FuseNote;
 pub use exec::{
-    default_fragments, default_nodes, default_parallelism, execute_plan,
+    default_fragments, default_nodes, default_parallelism, default_rewrite, execute_plan,
     execute_plan_with_stats, run_sql, run_sql_with_stats, ExecContext, FragmentStats, OpStats,
     QueryStats, MORSEL_MIN_ROWS,
 };
@@ -53,4 +57,8 @@ pub use expr::{
     resolve_column,
 };
 pub use key::KeyValue;
-pub use plan::{output_name, plan_query, AggCall, AggFunc, Plan};
+pub use plan::{output_name, plan_query, AggCall, AggFunc, LogicalPlan, Plan};
+pub use rewrite::{
+    explain_plan, lower, rewrite_plan, PhysicalPlan, RewriteReport, RuleFire,
+};
+pub use stats::{ColumnStats, StatsStore, TableStats};

@@ -53,9 +53,15 @@ pub struct AggCall {
     pub out_name: String,
 }
 
-/// Logical/physical plan (this engine executes the logical tree directly).
+/// Logical plan: what the query *means*, straight off the AST.
+///
+/// `plan_query` produces this tree; the cost-based rewriter in
+/// `engine::rewrite` lowers it to the `PhysicalPlan` the executor
+/// consumes. The historical name `Plan` remains as an alias — enum
+/// variants are constructible and matchable through it, so existing
+/// call sites (and tests) keep compiling unchanged.
 #[derive(Debug, Clone)]
-pub enum Plan {
+pub enum LogicalPlan {
     /// Read a named table from the catalog.
     Scan {
         /// Catalog table name.
@@ -124,7 +130,12 @@ pub enum Plan {
     },
 }
 
-impl Plan {
+/// Historical alias: the engine's original single plan type. New code
+/// should say [`LogicalPlan`] (planner output) or
+/// [`crate::engine::PhysicalPlan`] (executor input).
+pub type Plan = LogicalPlan;
+
+impl LogicalPlan {
     /// Names of every function referenced anywhere in the plan — used to
     /// compute the package set a query needs (§IV.A).
     pub fn referenced_functions(&self) -> Vec<String> {

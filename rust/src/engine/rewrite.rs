@@ -1,0 +1,1542 @@
+//! Cost-based plan rewriting: [`LogicalPlan`] → [`PhysicalPlan`].
+//!
+//! `plan_query` produces a purely logical tree; this module lowers it to
+//! the physical tree the executor consumes, applying rule-based rewrites
+//! costed against the catalog's per-table [`super::stats::StatsStore`]:
+//!
+//! - **constant-elim** — always-true literal conjuncts are dropped from
+//!   filters (and an all-true filter is removed entirely).
+//! - **predicate-pushdown** — a filter above a pure rename/literal
+//!   projection moves below it, with output names substituted back to
+//!   the underlying expressions.
+//! - **join-pushdown** — single-side conjuncts of a filter above a join
+//!   move below the join onto their side (left side under INNER and
+//!   LEFT joins, right side under INNER only).
+//! - **scan-embed** — a selective filter directly above a large scan is
+//!   embedded into the scan so downstream exchange/fragment shipping
+//!   sees post-filter cardinality.
+//! - **projection-prune** — scans materialize only the columns the rest
+//!   of the plan can observe (`PhysicalPlan::Scan::live`).
+//! - **join-swap** — for INNER hash joins the smaller estimated side
+//!   becomes the build side (`swap_build`).
+//!
+//! Every rule preserves byte-identical results *and* the query's
+//! Ok/Err status. Because this engine's kernels raise type errors
+//! per-row (a bad value that never reaches evaluation raises nothing),
+//! any rule that changes which rows an expression sees first proves the
+//! expression *total* — incapable of a value-dependent error — from the
+//! schema and column statistics (see [`proven`]). Rules that cannot
+//! complete a proof simply decline; declining is always correct.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::sql::ast::{BinaryOp, Expr, JoinKind, OrderKey, UnaryOp};
+use crate::types::{DataType, Field, Schema, Value};
+use crate::udf::UdfRegistry;
+
+use super::catalog::Catalog;
+use super::exec::MORSEL_MIN_ROWS;
+use super::expr::resolve_column;
+use super::plan::{AggCall, LogicalPlan};
+use super::stats::{TableStats, DEFAULT_SELECTIVITY};
+
+/// A scan-embedded filter must be at least this selective (estimated)
+/// before it is worth evaluating on the leader ahead of shipping.
+const EMBED_MAX_SELECTIVITY: f64 = 0.05;
+
+/// Physical plan: the operator tree the executor consumes.
+///
+/// Mirrors [`LogicalPlan`] shape-for-shape, plus the physical decisions
+/// the rewriter makes: scans carry an optional embedded predicate and a
+/// live-column set, joins carry the chosen build side.
+#[derive(Debug, Clone)]
+pub enum PhysicalPlan {
+    /// Read a named table from the catalog.
+    Scan {
+        /// Catalog table name.
+        table: String,
+        /// FROM-clause alias, if any.
+        alias: Option<String>,
+        /// Pushed-down predicate evaluated on the leader right after the
+        /// table snapshot, before any exchange/fragment shipping.
+        predicate: Option<Expr>,
+        /// Columns (ascending schema indices) the rest of the plan can
+        /// observe; `None` keeps every column.
+        live: Option<Vec<usize>>,
+    },
+    /// Invoke a table function (UDTF) with constant arguments.
+    TableFunc {
+        /// UDTF name (`__dual` is the hidden one-row table).
+        name: String,
+        /// Constant argument expressions.
+        args: Vec<Expr>,
+        /// FROM-clause alias, if any.
+        alias: Option<String>,
+    },
+    /// Keep rows where the predicate is true (WHERE / HAVING).
+    Filter {
+        /// Input operator.
+        input: Box<PhysicalPlan>,
+        /// Boolean predicate (NULL ⇒ drop).
+        predicate: Expr,
+    },
+    /// Compute output expressions (SELECT list).
+    Project {
+        /// Input operator.
+        input: Box<PhysicalPlan>,
+        /// (expression, output name) pairs.
+        exprs: Vec<(Expr, String)>,
+    },
+    /// Hash aggregation.
+    Aggregate {
+        /// Input operator.
+        input: Box<PhysicalPlan>,
+        /// Group-key expressions with output names.
+        group: Vec<(Expr, String)>,
+        /// Aggregate calls.
+        aggs: Vec<AggCall>,
+    },
+    /// Hash join (nested-loop when no equi keys).
+    Join {
+        /// Probe-side input.
+        left: Box<PhysicalPlan>,
+        /// Build-side input.
+        right: Box<PhysicalPlan>,
+        /// Inner or left outer.
+        kind: JoinKind,
+        /// Equi-key pairs (left expr, right expr).
+        equi: Vec<(Expr, Expr)>,
+        /// Residual predicate over the combined schema.
+        residual: Option<Expr>,
+        /// Build the hash table from the (smaller) left side instead of
+        /// the right; pair order is restored so output bytes match the
+        /// unswapped join exactly.
+        swap_build: bool,
+    },
+    /// Sort by keys (top-k when directly under a Limit).
+    Sort {
+        /// Input operator.
+        input: Box<PhysicalPlan>,
+        /// ORDER BY keys.
+        keys: Vec<OrderKey>,
+    },
+    /// Keep the first `n` rows.
+    Limit {
+        /// Input operator.
+        input: Box<PhysicalPlan>,
+        /// Row cap.
+        n: usize,
+    },
+}
+
+/// One rewrite-rule application.
+#[derive(Debug, Clone)]
+pub struct RuleFire {
+    /// Rule name (`constant-elim`, `predicate-pushdown`, `join-pushdown`,
+    /// `scan-embed`, `projection-prune`, `join-swap`).
+    pub rule: &'static str,
+    /// Human-readable description of what the rule did.
+    pub detail: String,
+}
+
+/// Which rules fired while rewriting a plan, in application order.
+#[derive(Debug, Clone, Default)]
+pub struct RewriteReport {
+    /// Rule applications, in the order they happened.
+    pub fired: Vec<RuleFire>,
+}
+
+impl RewriteReport {
+    fn fire(&mut self, rule: &'static str, detail: String) {
+        self.fired.push(RuleFire { rule, detail });
+    }
+}
+
+/// Structurally lower a logical plan to a physical plan with no rewrites:
+/// no embedded predicates, all columns live, build side unchanged.
+pub fn lower(plan: &LogicalPlan) -> PhysicalPlan {
+    match plan {
+        LogicalPlan::Scan { table, alias } => PhysicalPlan::Scan {
+            table: table.clone(),
+            alias: alias.clone(),
+            predicate: None,
+            live: None,
+        },
+        LogicalPlan::TableFunc { name, args, alias } => PhysicalPlan::TableFunc {
+            name: name.clone(),
+            args: args.clone(),
+            alias: alias.clone(),
+        },
+        LogicalPlan::Filter { input, predicate } => PhysicalPlan::Filter {
+            input: Box::new(lower(input)),
+            predicate: predicate.clone(),
+        },
+        LogicalPlan::Project { input, exprs } => PhysicalPlan::Project {
+            input: Box::new(lower(input)),
+            exprs: exprs.clone(),
+        },
+        LogicalPlan::Aggregate { input, group, aggs } => PhysicalPlan::Aggregate {
+            input: Box::new(lower(input)),
+            group: group.clone(),
+            aggs: aggs.clone(),
+        },
+        LogicalPlan::Join { left, right, kind, equi, residual } => PhysicalPlan::Join {
+            left: Box::new(lower(left)),
+            right: Box::new(lower(right)),
+            kind: *kind,
+            equi: equi.clone(),
+            residual: residual.clone(),
+            swap_build: false,
+        },
+        LogicalPlan::Sort { input, keys } => PhysicalPlan::Sort {
+            input: Box::new(lower(input)),
+            keys: keys.clone(),
+        },
+        LogicalPlan::Limit { input, n } => PhysicalPlan::Limit {
+            input: Box::new(lower(input)),
+            n: *n,
+        },
+    }
+}
+
+/// Lower `plan` and apply the cost-based rewrite pipeline against
+/// `catalog`'s statistics. With no catalog only the purely structural
+/// rules (constant elimination, projection pushdown) run.
+///
+/// The returned plan is guaranteed to produce byte-identical results —
+/// including the query's Ok/Err status — to `lower(plan)` under every
+/// execution shape.
+pub fn rewrite_plan(
+    plan: &LogicalPlan,
+    catalog: Option<&Catalog>,
+    _udfs: &UdfRegistry,
+) -> (PhysicalPlan, RewriteReport) {
+    let mut report = RewriteReport::default();
+    let mut p = lower(plan);
+    p = const_eliminate(p, &mut report);
+    p = push_predicates(p, catalog, &mut report);
+    if let Some(cat) = catalog {
+        p = embed_scan_filters(p, cat, &mut report);
+        p = prune_scans(p, None, cat, &mut report);
+        p = choose_join_order(p, cat, &mut report);
+    }
+    (p, report)
+}
+
+/// Apply `f` to every direct child of `p`, rebuilding the node.
+fn map_children<F: FnMut(PhysicalPlan) -> PhysicalPlan>(p: PhysicalPlan, f: &mut F) -> PhysicalPlan {
+    match p {
+        PhysicalPlan::Scan { .. } | PhysicalPlan::TableFunc { .. } => p,
+        PhysicalPlan::Filter { input, predicate } => PhysicalPlan::Filter {
+            input: Box::new(f(*input)),
+            predicate,
+        },
+        PhysicalPlan::Project { input, exprs } => PhysicalPlan::Project {
+            input: Box::new(f(*input)),
+            exprs,
+        },
+        PhysicalPlan::Aggregate { input, group, aggs } => PhysicalPlan::Aggregate {
+            input: Box::new(f(*input)),
+            group,
+            aggs,
+        },
+        PhysicalPlan::Join { left, right, kind, equi, residual, swap_build } => {
+            PhysicalPlan::Join {
+                left: Box::new(f(*left)),
+                right: Box::new(f(*right)),
+                kind,
+                equi,
+                residual,
+                swap_build,
+            }
+        }
+        PhysicalPlan::Sort { input, keys } => PhysicalPlan::Sort {
+            input: Box::new(f(*input)),
+            keys,
+        },
+        PhysicalPlan::Limit { input, n } => PhysicalPlan::Limit {
+            input: Box::new(f(*input)),
+            n,
+        },
+    }
+}
+
+// ------------------------------------------------------- conjunct utils
+
+/// Split a predicate into its top-level AND conjuncts, in written order.
+fn split_conjuncts(e: &Expr, out: &mut Vec<Expr>) {
+    if let Expr::Binary { op: BinaryOp::And, left, right } = e {
+        split_conjuncts(left, out);
+        split_conjuncts(right, out);
+    } else {
+        out.push(e.clone());
+    }
+}
+
+/// Re-AND a non-empty conjunct list (left-deep, preserving order).
+fn rebuild_conjuncts(mut cs: Vec<Expr>) -> Expr {
+    let mut e = cs.remove(0);
+    for c in cs {
+        e = Expr::Binary { op: BinaryOp::And, left: Box::new(e), right: Box::new(c) };
+    }
+    e
+}
+
+// ------------------------------------------------------- constant-elim
+
+/// Evaluate a pure-literal boolean expression at plan time. Returns
+/// `Some` only when the expression contains no columns or functions,
+/// every sub-expression is well-typed (so the columnar kernels cannot
+/// error on it either), and the value is known. Mirrors kernel
+/// semantics exactly: numerics compare as f64, AND/OR are Kleene.
+fn const_bool_safe(e: &Expr) -> Option<bool> {
+    match e {
+        Expr::Literal(Value::Bool(b)) => Some(*b),
+        Expr::Unary { op: UnaryOp::Not, expr } => const_bool_safe(expr).map(|b| !b),
+        Expr::Binary { op: BinaryOp::And, left, right } => {
+            match (const_bool_safe(left)?, const_bool_safe(right)?) {
+                (true, true) => Some(true),
+                _ => Some(false),
+            }
+        }
+        Expr::Binary { op: BinaryOp::Or, left, right } => {
+            match (const_bool_safe(left)?, const_bool_safe(right)?) {
+                (false, false) => Some(false),
+                _ => Some(true),
+            }
+        }
+        Expr::Binary { op, left, right } if is_cmp(*op) => {
+            let ord = lit_f64(left)?.partial_cmp(&lit_f64(right)?)?;
+            use std::cmp::Ordering::*;
+            Some(match op {
+                BinaryOp::Eq => ord == Equal,
+                BinaryOp::NotEq => ord != Equal,
+                BinaryOp::Lt => ord == Less,
+                BinaryOp::LtEq => ord != Greater,
+                BinaryOp::Gt => ord == Greater,
+                BinaryOp::GtEq => ord != Less,
+                _ => unreachable!(),
+            })
+        }
+        _ => None,
+    }
+}
+
+fn is_cmp(op: BinaryOp) -> bool {
+    matches!(
+        op,
+        BinaryOp::Eq | BinaryOp::NotEq | BinaryOp::Lt | BinaryOp::LtEq | BinaryOp::Gt | BinaryOp::GtEq
+    )
+}
+
+fn lit_f64(e: &Expr) -> Option<f64> {
+    match e {
+        Expr::Literal(Value::Int(i)) => Some(*i as f64),
+        Expr::Literal(Value::Float(f)) => Some(*f),
+        _ => None,
+    }
+}
+
+/// Drop always-true literal conjuncts; remove filters that become empty.
+fn const_eliminate(p: PhysicalPlan, report: &mut RewriteReport) -> PhysicalPlan {
+    match p {
+        PhysicalPlan::Filter { input, predicate } => {
+            let input = const_eliminate(*input, report);
+            let mut conjuncts = Vec::new();
+            split_conjuncts(&predicate, &mut conjuncts);
+            let total = conjuncts.len();
+            let kept: Vec<Expr> = conjuncts
+                .into_iter()
+                .filter(|c| const_bool_safe(c) != Some(true))
+                .collect();
+            if kept.len() == total {
+                return PhysicalPlan::Filter { input: Box::new(input), predicate };
+            }
+            report.fire(
+                "constant-elim",
+                format!(
+                    "dropped {} always-true conjunct(s) of {}",
+                    total - kept.len(),
+                    predicate.to_sql()
+                ),
+            );
+            if kept.is_empty() {
+                input
+            } else {
+                PhysicalPlan::Filter { input: Box::new(input), predicate: rebuild_conjuncts(kept) }
+            }
+        }
+        other => map_children(other, &mut |c| const_eliminate(c, report)),
+    }
+}
+
+// --------------------------------------------------- predicate pushdown
+
+/// Push filters below rename-only projections and join inputs.
+fn push_predicates(
+    p: PhysicalPlan,
+    cat: Option<&Catalog>,
+    report: &mut RewriteReport,
+) -> PhysicalPlan {
+    match p {
+        PhysicalPlan::Filter { input, predicate } => {
+            let input = push_predicates(*input, cat, report);
+            match input {
+                PhysicalPlan::Project { input: pin, exprs } => {
+                    match try_project_pushdown(&predicate, &exprs) {
+                        Some(subst) => {
+                            report.fire(
+                                "predicate-pushdown",
+                                format!("{} moved below projection", predicate.to_sql()),
+                            );
+                            let pushed = push_predicates(
+                                PhysicalPlan::Filter { input: pin, predicate: subst },
+                                cat,
+                                report,
+                            );
+                            PhysicalPlan::Project { input: Box::new(pushed), exprs }
+                        }
+                        None => PhysicalPlan::Filter {
+                            input: Box::new(PhysicalPlan::Project { input: pin, exprs }),
+                            predicate,
+                        },
+                    }
+                }
+                j @ PhysicalPlan::Join { .. } => match cat {
+                    Some(cat) => try_join_pushdown(j, predicate, cat, report),
+                    None => PhysicalPlan::Filter { input: Box::new(j), predicate },
+                },
+                other => PhysicalPlan::Filter { input: Box::new(other), predicate },
+            }
+        }
+        other => map_children(other, &mut |c| push_predicates(c, cat, report)),
+    }
+}
+
+/// If the projection only renames columns / broadcasts literals, rewrite
+/// `pred` in terms of the projection's *input* and return it.
+fn try_project_pushdown(pred: &Expr, exprs: &[(Expr, String)]) -> Option<Expr> {
+    if exprs.iter().any(|(e, name)| {
+        !matches!(e, Expr::Column(_) | Expr::Literal(_)) || name.starts_with("__")
+    }) {
+        return None;
+    }
+    let mut refs = Vec::new();
+    pred.referenced_columns(&mut refs);
+    let mut map: HashMap<String, Expr> = HashMap::new();
+    for name in &refs {
+        let hits: Vec<&(Expr, String)> = exprs
+            .iter()
+            .filter(|(_, out)| out.eq_ignore_ascii_case(name))
+            .collect();
+        // Exactly one exact (case-insensitive) output-name match keeps
+        // the original resolution outcome; anything else declines.
+        if hits.len() != 1 {
+            return None;
+        }
+        map.insert(name.to_ascii_lowercase(), hits[0].0.clone());
+    }
+    Some(substitute(pred, &map))
+}
+
+/// Clone `e`, replacing column references found in `map` (keys are
+/// lowercase) with their mapped expressions.
+fn substitute(e: &Expr, map: &HashMap<String, Expr>) -> Expr {
+    match e {
+        Expr::Column(name) => map
+            .get(&name.to_ascii_lowercase())
+            .cloned()
+            .unwrap_or_else(|| e.clone()),
+        Expr::Literal(_) | Expr::Star => e.clone(),
+        Expr::Unary { op, expr } => Expr::Unary {
+            op: *op,
+            expr: Box::new(substitute(expr, map)),
+        },
+        Expr::Binary { op, left, right } => Expr::Binary {
+            op: *op,
+            left: Box::new(substitute(left, map)),
+            right: Box::new(substitute(right, map)),
+        },
+        Expr::Func { name, args } => Expr::Func {
+            name: name.clone(),
+            args: args.iter().map(|a| substitute(a, map)).collect(),
+        },
+        Expr::IsNull { expr, negated } => Expr::IsNull {
+            expr: Box::new(substitute(expr, map)),
+            negated: *negated,
+        },
+        Expr::InList { expr, list, negated } => Expr::InList {
+            expr: Box::new(substitute(expr, map)),
+            list: list.iter().map(|x| substitute(x, map)).collect(),
+            negated: *negated,
+        },
+        Expr::Between { expr, low, high, negated } => Expr::Between {
+            expr: Box::new(substitute(expr, map)),
+            low: Box::new(substitute(low, map)),
+            high: Box::new(substitute(high, map)),
+            negated: *negated,
+        },
+        Expr::Case { branches, else_value } => Expr::Case {
+            branches: branches
+                .iter()
+                .map(|(c, v)| (substitute(c, map), substitute(v, map)))
+                .collect(),
+            else_value: else_value
+                .as_ref()
+                .map(|e| Box::new(substitute(e, map))),
+        },
+    }
+}
+
+// ----------------------------------------------- join predicate pushdown
+
+/// Which join input a conjunct's columns all land on.
+#[derive(PartialEq, Clone, Copy)]
+enum Side {
+    Left,
+    Right,
+}
+
+/// Try to move single-side conjuncts of `predicate` below `join`.
+/// Declines (returning the unmodified filter-over-join) unless every
+/// moved *and* every remaining expression is proven total, so the
+/// rewrite cannot change the query's error behavior.
+fn try_join_pushdown(
+    join: PhysicalPlan,
+    predicate: Expr,
+    cat: &Catalog,
+    report: &mut RewriteReport,
+) -> PhysicalPlan {
+    let keep = |join: PhysicalPlan, predicate: Expr| PhysicalPlan::Filter {
+        input: Box::new(join),
+        predicate,
+    };
+    let PhysicalPlan::Join { left, right, kind, equi, residual, swap_build } = join else {
+        unreachable!("try_join_pushdown called on non-join");
+    };
+    let repack = |left: Box<PhysicalPlan>, right: Box<PhysicalPlan>| PhysicalPlan::Join {
+        left,
+        right,
+        kind,
+        equi: equi.clone(),
+        residual: residual.clone(),
+        swap_build,
+    };
+
+    // Both sides must bottom out at a scan through filters only, so the
+    // runtime side schemas are statically known.
+    let (Some((ltable, lschema)), Some((rtable, rschema))) =
+        (scan_schema(&left, cat), scan_schema(&right, cat))
+    else {
+        return keep(repack(left, right), predicate);
+    };
+    let lstats = cat.stats().table(&ltable);
+    let rstats = cat.stats().table(&rtable);
+
+    // Equi-key expressions re-evaluate over post-push (smaller) side
+    // inputs; bare columns/literals are the only shapes whose errors are
+    // provably row-independent.
+    if !equi
+        .iter()
+        .all(|(a, b)| matches!(a, Expr::Column(_) | Expr::Literal(_)) && matches!(b, Expr::Column(_) | Expr::Literal(_)))
+    {
+        return keep(repack(left, right), predicate);
+    }
+
+    // Static mirror of the executor's combined join schema.
+    let lalias = phys_alias(&left, "l");
+    let ralias = phys_alias(&right, "r");
+    let combined = combined_schema(&lschema, &lalias, &rschema, &ralias);
+    let llen = lschema.fields.len();
+    let nan_free_combined = |idx: usize| {
+        if idx < llen {
+            nan_free(lstats.as_ref(), &lschema.fields[idx].name)
+        } else {
+            nan_free(rstats.as_ref(), &rschema.fields[idx - llen].name)
+        }
+    };
+
+    let mut conjuncts = Vec::new();
+    split_conjuncts(&predicate, &mut conjuncts);
+    let mut lpush = Vec::new();
+    let mut rpush = Vec::new();
+    let mut remaining = Vec::new();
+    for c in conjuncts {
+        match conjunct_side(&c, &combined, llen, &lschema, &rschema) {
+            Some(Side::Left)
+                if proven(&c, &lschema, &|i| nan_free(lstats.as_ref(), &lschema.fields[i].name))
+                    .map(|(dt, _)| dt)
+                    == Some(DataType::Bool) =>
+            {
+                lpush.push(c)
+            }
+            Some(Side::Right)
+                if kind == JoinKind::Inner
+                    && proven(&c, &rschema, &|i| {
+                        nan_free(rstats.as_ref(), &rschema.fields[i].name)
+                    })
+                    .map(|(dt, _)| dt)
+                        == Some(DataType::Bool) =>
+            {
+                rpush.push(c)
+            }
+            _ => remaining.push(c),
+        }
+    }
+    if lpush.is_empty() && rpush.is_empty() {
+        return keep(repack(left, right), predicate);
+    }
+    // Remaining conjuncts and the residual now see fewer rows — they too
+    // must be proven total over the combined schema, else decline all.
+    let safe_above = |e: &Expr| {
+        proven(e, &combined, &nan_free_combined).map(|(dt, _)| dt) == Some(DataType::Bool)
+    };
+    if !remaining.iter().all(safe_above)
+        || !residual.as_ref().map_or(true, safe_above)
+    {
+        return keep(repack(left, right), predicate);
+    }
+
+    for c in &lpush {
+        report.fire("join-pushdown", format!("{} → left side ({ltable})", c.to_sql()));
+    }
+    for c in &rpush {
+        report.fire("join-pushdown", format!("{} → right side ({rtable})", c.to_sql()));
+    }
+    let wrap = |side: Box<PhysicalPlan>, push: Vec<Expr>| {
+        if push.is_empty() {
+            side
+        } else {
+            Box::new(PhysicalPlan::Filter { input: side, predicate: rebuild_conjuncts(push) })
+        }
+    };
+    let new_join = repack(wrap(left, lpush), wrap(right, rpush));
+    if remaining.is_empty() {
+        new_join
+    } else {
+        PhysicalPlan::Filter { input: Box::new(new_join), predicate: rebuild_conjuncts(remaining) }
+    }
+}
+
+/// Table name + schema of a side that is a scan under zero or more
+/// filters (schema flows through filters unchanged).
+fn scan_schema(p: &PhysicalPlan, cat: &Catalog) -> Option<(String, Schema)> {
+    match p {
+        PhysicalPlan::Scan { table, .. } => {
+            let (schema, _) = cat.schema_of(table)?;
+            Some((table.clone(), schema))
+        }
+        PhysicalPlan::Filter { input, .. } => scan_schema(input, cat),
+        _ => None,
+    }
+}
+
+/// Mirror of the executor's `plan_alias` over physical plans.
+fn phys_alias(p: &PhysicalPlan, default: &str) -> String {
+    match p {
+        PhysicalPlan::Scan { table, alias, .. } => {
+            alias.clone().unwrap_or_else(|| table.clone())
+        }
+        PhysicalPlan::TableFunc { name, alias, .. } => {
+            alias.clone().unwrap_or_else(|| name.clone())
+        }
+        PhysicalPlan::Filter { input, .. }
+        | PhysicalPlan::Limit { input, .. }
+        | PhysicalPlan::Sort { input, .. } => phys_alias(input, default),
+        _ => default.to_string(),
+    }
+}
+
+/// Static mirror of the executor's `join_schema`: colliding names are
+/// qualified `alias.name`, all fields kept left-then-right.
+fn combined_schema(l: &Schema, lalias: &str, r: &Schema, ralias: &str) -> Schema {
+    let collides =
+        |name: &str| l.index_of(name).is_some() && r.index_of(name).is_some();
+    let mut fields = Vec::new();
+    for f in &l.fields {
+        let name = if collides(&f.name) {
+            format!("{lalias}.{}", f.name)
+        } else {
+            f.name.clone()
+        };
+        fields.push(Field::new(name, f.data_type));
+    }
+    for f in &r.fields {
+        let name = if collides(&f.name) {
+            format!("{ralias}.{}", f.name)
+        } else {
+            f.name.clone()
+        };
+        fields.push(Field::new(name, f.data_type));
+    }
+    Schema::new(fields)
+}
+
+/// Classify which side every column of `c` lands on, requiring that each
+/// name resolves in the combined schema *and* resolves to the very same
+/// physical column in the side schema. `None` ⇒ mixed/unresolvable.
+fn conjunct_side(
+    c: &Expr,
+    combined: &Schema,
+    llen: usize,
+    lschema: &Schema,
+    rschema: &Schema,
+) -> Option<Side> {
+    let mut refs = Vec::new();
+    c.referenced_columns(&mut refs);
+    if refs.is_empty() {
+        return None;
+    }
+    let mut side: Option<Side> = None;
+    for name in &refs {
+        let ci = resolve_column(combined, name).ok()?;
+        let (this, schema, si_expect) = if ci < llen {
+            (Side::Left, lschema, ci)
+        } else {
+            (Side::Right, rschema, ci - llen)
+        };
+        if resolve_column(schema, name).ok()? != si_expect {
+            return None;
+        }
+        match side {
+            None => side = Some(this),
+            Some(s) if s == this => {}
+            _ => return None,
+        }
+    }
+    side
+}
+
+/// Is the named column provably NaN-free? Integer columns always are;
+/// float columns qualify when every non-NULL value landed in the
+/// histogram (i.e. was finite) at registration.
+fn nan_free(stats: Option<&TableStats>, col: &str) -> bool {
+    let Some(ts) = stats else { return false };
+    let Some(cs) = ts.column(col) else { return false };
+    match &cs.histogram {
+        Some(h) => ts.rows.saturating_sub(cs.null_count) == h.count(),
+        // No histogram ⇒ no finite numeric values; a column that is all
+        // NULL/strings/bools never reaches a numeric comparison anyway,
+        // but stay conservative.
+        None => false,
+    }
+}
+
+/// Prove an expression *total* over `schema`: evaluation can never
+/// return an error, for any row values. Returns the proven output type
+/// and whether the value is NaN-safe (relevant because comparing NaN is
+/// a runtime error in this engine). `None` ⇒ no proof; caller declines.
+fn proven(
+    e: &Expr,
+    schema: &Schema,
+    nan_free_col: &dyn Fn(usize) -> bool,
+) -> Option<(DataType, bool)> {
+    let numeric = |dt: DataType| matches!(dt, DataType::Int64 | DataType::Float64);
+    match e {
+        Expr::Literal(Value::Int(_)) => Some((DataType::Int64, true)),
+        Expr::Literal(Value::Float(f)) => Some((DataType::Float64, f.is_finite())),
+        Expr::Literal(Value::Str(_)) => Some((DataType::Utf8, true)),
+        Expr::Literal(Value::Bool(_)) => Some((DataType::Bool, true)),
+        Expr::Literal(Value::Null) => None,
+        Expr::Column(name) => {
+            let i = resolve_column(schema, name).ok()?;
+            let dt = schema.fields[i].data_type;
+            Some((dt, dt != DataType::Float64 || nan_free_col(i)))
+        }
+        Expr::Unary { op: UnaryOp::Neg, expr } => {
+            let (dt, ns) = proven(expr, schema, nan_free_col)?;
+            numeric(dt).then_some((dt, ns))
+        }
+        Expr::Unary { op: UnaryOp::Not, expr } => {
+            let (dt, _) = proven(expr, schema, nan_free_col)?;
+            (dt == DataType::Bool).then_some((DataType::Bool, true))
+        }
+        Expr::Binary { op, left, right } => {
+            let (ldt, lns) = proven(left, schema, nan_free_col)?;
+            let (rdt, rns) = proven(right, schema, nan_free_col)?;
+            match op {
+                BinaryOp::Add | BinaryOp::Sub | BinaryOp::Mul | BinaryOp::Div | BinaryOp::Mod => {
+                    if !(numeric(ldt) && numeric(rdt)) {
+                        return None;
+                    }
+                    let dt = if matches!(op, BinaryOp::Div)
+                        || ldt == DataType::Float64
+                        || rdt == DataType::Float64
+                    {
+                        DataType::Float64
+                    } else {
+                        DataType::Int64
+                    };
+                    // Float arithmetic can overflow to ±∞ and combine
+                    // into NaN; only all-integer results stay NaN-safe.
+                    Some((dt, dt == DataType::Int64))
+                }
+                BinaryOp::Eq
+                | BinaryOp::NotEq
+                | BinaryOp::Lt
+                | BinaryOp::LtEq
+                | BinaryOp::Gt
+                | BinaryOp::GtEq => {
+                    comparable(ldt, lns, rdt, rns).then_some((DataType::Bool, true))
+                }
+                BinaryOp::And | BinaryOp::Or => (ldt == DataType::Bool
+                    && rdt == DataType::Bool)
+                    .then_some((DataType::Bool, true)),
+                BinaryOp::Concat => None,
+            }
+        }
+        Expr::IsNull { expr, .. } => {
+            proven(expr, schema, nan_free_col).map(|_| (DataType::Bool, true))
+        }
+        Expr::Between { expr, low, high, .. } => {
+            let (vdt, vns) = proven(expr, schema, nan_free_col)?;
+            let (ldt, lns) = proven(low, schema, nan_free_col)?;
+            let (hdt, hns) = proven(high, schema, nan_free_col)?;
+            (comparable(vdt, vns, ldt, lns) && comparable(vdt, vns, hdt, hns))
+                .then_some((DataType::Bool, true))
+        }
+        Expr::InList { expr, list, .. } => {
+            let (edt, ens) = proven(expr, schema, nan_free_col)?;
+            list.iter()
+                .try_fold((), |(), item| {
+                    let (idt, ins) = proven(item, schema, nan_free_col)?;
+                    comparable(edt, ens, idt, ins).then_some(())
+                })
+                .map(|()| (DataType::Bool, true))
+        }
+        Expr::Func { .. } | Expr::Case { .. } | Expr::Star => None,
+    }
+}
+
+/// Can two proven operand types always be compared without error?
+/// Numerics need NaN-safety on both sides (NaN comparisons error).
+fn comparable(ldt: DataType, lns: bool, rdt: DataType, rns: bool) -> bool {
+    let numeric = |dt: DataType| matches!(dt, DataType::Int64 | DataType::Float64);
+    match (ldt, rdt) {
+        (DataType::Utf8, DataType::Utf8) | (DataType::Bool, DataType::Bool) => true,
+        _ => numeric(ldt) && numeric(rdt) && lns && rns,
+    }
+}
+
+// ------------------------------------------------------------ scan-embed
+
+/// Embed a selective filter directly above a large scan into the scan
+/// itself, so shipping decisions see post-filter cardinality. The
+/// predicate is evaluated over exactly the same rows either way, so no
+/// totality proof is needed.
+fn embed_scan_filters(p: PhysicalPlan, cat: &Catalog, report: &mut RewriteReport) -> PhysicalPlan {
+    match p {
+        PhysicalPlan::Filter { input, predicate } => {
+            let input = embed_scan_filters(*input, cat, report);
+            if let PhysicalPlan::Scan { table, alias, predicate: None, live } = input {
+                let rows = cat.stats().table_rows(&table).unwrap_or(0);
+                let sel = cat.stats().estimate_selectivity(&table, &predicate);
+                if rows as usize >= MORSEL_MIN_ROWS && sel <= EMBED_MAX_SELECTIVITY {
+                    report.fire(
+                        "scan-embed",
+                        format!(
+                            "scan {table}: embedded {} (est sel {sel:.3})",
+                            predicate.to_sql()
+                        ),
+                    );
+                    return PhysicalPlan::Scan { table, alias, predicate: Some(predicate), live };
+                }
+                return PhysicalPlan::Filter {
+                    input: Box::new(PhysicalPlan::Scan { table, alias, predicate: None, live }),
+                    predicate,
+                };
+            }
+            PhysicalPlan::Filter { input: Box::new(input), predicate }
+        }
+        other => map_children(other, &mut |c| embed_scan_filters(c, cat, report)),
+    }
+}
+
+// ------------------------------------------------------ projection-prune
+
+/// Top-down live-column analysis: `needed` is the set of column names
+/// the operators above can observe, or `None` for "everything".
+fn prune_scans(
+    p: PhysicalPlan,
+    needed: Option<&BTreeSet<String>>,
+    cat: &Catalog,
+    report: &mut RewriteReport,
+) -> PhysicalPlan {
+    match p {
+        PhysicalPlan::Scan { table, alias, predicate, live } => {
+            let Some(names) = needed else {
+                return PhysicalPlan::Scan { table, alias, predicate, live };
+            };
+            let mut names = names.clone();
+            if let Some(pr) = &predicate {
+                add_refs(&mut names, pr);
+            }
+            let Some((schema, _)) = cat.schema_of(&table) else {
+                return PhysicalPlan::Scan { table, alias, predicate, live };
+            };
+            let mut keep: BTreeSet<usize> = BTreeSet::new();
+            for name in &names {
+                let cands = candidate_indices(&schema, name);
+                if cands.is_empty() {
+                    // Unknown column: decline so the runtime error (which
+                    // lists the schema's names) is reproduced verbatim.
+                    return PhysicalPlan::Scan { table, alias, predicate, live };
+                }
+                keep.extend(cands);
+            }
+            if keep.is_empty() {
+                keep.insert(0); // keep one column so the row count survives
+            }
+            if keep.len() == schema.fields.len() {
+                return PhysicalPlan::Scan { table, alias, predicate, live };
+            }
+            report.fire(
+                "projection-prune",
+                format!("scan {table}: {}/{} columns live", keep.len(), schema.fields.len()),
+            );
+            PhysicalPlan::Scan {
+                table,
+                alias,
+                predicate,
+                live: Some(keep.into_iter().collect()),
+            }
+        }
+        PhysicalPlan::TableFunc { .. } => p,
+        PhysicalPlan::Filter { input, predicate } => {
+            let child = needed.map(|n| {
+                let mut n = n.clone();
+                add_refs(&mut n, &predicate);
+                n
+            });
+            PhysicalPlan::Filter {
+                input: Box::new(prune_scans(*input, child.as_ref(), cat, report)),
+                predicate,
+            }
+        }
+        PhysicalPlan::Sort { input, keys } => {
+            let child = needed.map(|n| {
+                let mut n = n.clone();
+                for k in &keys {
+                    add_refs(&mut n, &k.expr);
+                }
+                n
+            });
+            PhysicalPlan::Sort {
+                input: Box::new(prune_scans(*input, child.as_ref(), cat, report)),
+                keys,
+            }
+        }
+        PhysicalPlan::Limit { input, n } => PhysicalPlan::Limit {
+            input: Box::new(prune_scans(*input, needed, cat, report)),
+            n,
+        },
+        PhysicalPlan::Project { input, exprs } => {
+            let child = project_needs(&exprs);
+            PhysicalPlan::Project {
+                input: Box::new(prune_scans(*input, child.as_ref(), cat, report)),
+                exprs,
+            }
+        }
+        PhysicalPlan::Aggregate { input, group, aggs } => {
+            let mut n = BTreeSet::new();
+            let mut star = false;
+            for (e, _) in &group {
+                star |= contains_star(e);
+                add_refs(&mut n, e);
+            }
+            for a in &aggs {
+                for e in &a.args {
+                    star |= contains_star(e);
+                    add_refs(&mut n, e);
+                }
+            }
+            let child = if star { None } else { Some(n) };
+            PhysicalPlan::Aggregate {
+                input: Box::new(prune_scans(*input, child.as_ref(), cat, report)),
+                group,
+                aggs,
+            }
+        }
+        PhysicalPlan::Join { left, right, kind, equi, residual, swap_build } => {
+            // Join sides feed the combined schema (collision detection,
+            // residual resolution); keep them whole.
+            PhysicalPlan::Join {
+                left: Box::new(prune_scans(*left, None, cat, report)),
+                right: Box::new(prune_scans(*right, None, cat, report)),
+                kind,
+                equi,
+                residual,
+                swap_build,
+            }
+        }
+    }
+}
+
+/// The columns a projection needs from its input, or `None` when the
+/// projection passes through unknown columns (`*` / hidden markers).
+fn project_needs(exprs: &[(Expr, String)]) -> Option<BTreeSet<String>> {
+    let mut n = BTreeSet::new();
+    for (e, name) in exprs {
+        if name.starts_with("__") || contains_star(e) {
+            return None;
+        }
+        add_refs(&mut n, e);
+    }
+    Some(n)
+}
+
+fn add_refs(set: &mut BTreeSet<String>, e: &Expr) {
+    let mut refs = Vec::new();
+    e.referenced_columns(&mut refs);
+    set.extend(refs);
+}
+
+fn contains_star(e: &Expr) -> bool {
+    match e {
+        Expr::Star => true,
+        Expr::Literal(_) | Expr::Column(_) => false,
+        Expr::Unary { expr, .. } => contains_star(expr),
+        Expr::Binary { left, right, .. } => contains_star(left) || contains_star(right),
+        Expr::Func { args, .. } => args.iter().any(contains_star),
+        Expr::IsNull { expr, .. } => contains_star(expr),
+        Expr::InList { expr, list, .. } => {
+            contains_star(expr) || list.iter().any(contains_star)
+        }
+        Expr::Between { expr, low, high, .. } => {
+            contains_star(expr) || contains_star(low) || contains_star(high)
+        }
+        Expr::Case { branches, else_value } => {
+            branches.iter().any(|(c, v)| contains_star(c) || contains_star(v))
+                || else_value.as_deref().map_or(false, contains_star)
+        }
+    }
+}
+
+/// Every schema index the given (possibly qualified) name could resolve
+/// to under any of `resolve_column`'s tiers. Keeping the whole candidate
+/// set preserves both the resolution outcome and ambiguity errors.
+fn candidate_indices(schema: &Schema, name: &str) -> Vec<usize> {
+    let mut out: BTreeSet<usize> = BTreeSet::new();
+    for (i, f) in schema.fields.iter().enumerate() {
+        if f.name.eq_ignore_ascii_case(name) {
+            out.insert(i);
+        }
+    }
+    if let Some((_, bare)) = name.split_once('.') {
+        for (i, f) in schema.fields.iter().enumerate() {
+            if f.name.eq_ignore_ascii_case(bare) {
+                out.insert(i);
+            }
+        }
+    } else {
+        for (i, f) in schema.fields.iter().enumerate() {
+            if f.name
+                .rsplit_once('.')
+                .map_or(false, |(_, suffix)| suffix.eq_ignore_ascii_case(name))
+            {
+                out.insert(i);
+            }
+        }
+    }
+    out.into_iter().collect()
+}
+
+// --------------------------------------------------------- join ordering
+
+/// Pick the smaller estimated side as the hash-join build side.
+fn choose_join_order(p: PhysicalPlan, cat: &Catalog, report: &mut RewriteReport) -> PhysicalPlan {
+    match p {
+        PhysicalPlan::Join { left, right, kind, equi, residual, swap_build } => {
+            let left = Box::new(choose_join_order(*left, cat, report));
+            let right = Box::new(choose_join_order(*right, cat, report));
+            let mut swap = swap_build;
+            if kind == JoinKind::Inner && !equi.is_empty() {
+                if let (Some(le), Some(re)) = (est_rows(&left, cat), est_rows(&right, cat)) {
+                    if re > le {
+                        swap = true;
+                        report.fire(
+                            "join-swap",
+                            format!(
+                                "build on left (~{} rows) instead of right (~{} rows)",
+                                le.round() as u64,
+                                re.round() as u64
+                            ),
+                        );
+                    }
+                }
+            }
+            PhysicalPlan::Join { left, right, kind, equi, residual, swap_build: swap }
+        }
+        other => map_children(other, &mut |c| choose_join_order(c, cat, report)),
+    }
+}
+
+/// Nearest scan's table name below filter chains.
+fn scan_table_below(p: &PhysicalPlan) -> Option<&str> {
+    match p {
+        PhysicalPlan::Scan { table, .. } => Some(table),
+        PhysicalPlan::Filter { input, .. } => scan_table_below(input),
+        _ => None,
+    }
+}
+
+/// Estimated output cardinality from table statistics; `None` when the
+/// plan reads something the stats store has never seen.
+fn est_rows(p: &PhysicalPlan, cat: &Catalog) -> Option<f64> {
+    match p {
+        PhysicalPlan::Scan { table, predicate, .. } => {
+            let rows = cat.stats().table_rows(table)? as f64;
+            Some(match predicate {
+                Some(pr) => rows * cat.stats().estimate_selectivity(table, pr),
+                None => rows,
+            })
+        }
+        PhysicalPlan::TableFunc { .. } => None,
+        PhysicalPlan::Filter { input, predicate } => {
+            let r = est_rows(input, cat)?;
+            let sel = match scan_table_below(input) {
+                Some(t) => cat.stats().estimate_selectivity(t, predicate),
+                None => DEFAULT_SELECTIVITY,
+            };
+            Some(r * sel)
+        }
+        PhysicalPlan::Project { input, .. } | PhysicalPlan::Sort { input, .. } => {
+            est_rows(input, cat)
+        }
+        PhysicalPlan::Limit { input, n } => Some(match est_rows(input, cat) {
+            Some(r) => r.min(*n as f64),
+            None => *n as f64,
+        }),
+        PhysicalPlan::Aggregate { input, group, .. } => {
+            let r = est_rows(input, cat)?;
+            Some(if group.is_empty() { 1.0 } else { r.sqrt().ceil() })
+        }
+        PhysicalPlan::Join { left, right, equi, .. } => {
+            let l = est_rows(left, cat)?;
+            let r = est_rows(right, cat)?;
+            Some(if equi.is_empty() { l * r } else { l.max(r) })
+        }
+    }
+}
+
+// --------------------------------------------------------------- explain
+
+/// Render the optimized plan for `plan` with per-node estimated
+/// rows/bytes plus the rules that fired — the one stable text format
+/// shared by `run-sql --explain`, `check-sql`, and the golden tests.
+/// The output depends only on the plan and catalog statistics, never on
+/// the execution shape.
+pub fn explain_plan(plan: &LogicalPlan, catalog: Option<&Catalog>, udfs: &UdfRegistry) -> String {
+    let (phys, report) = rewrite_plan(plan, catalog, udfs);
+    let mut out = String::new();
+    render_node(&phys, catalog, 0, &mut out);
+    out.push_str("rules fired:\n");
+    if report.fired.is_empty() {
+        out.push_str("  (none)\n");
+    } else {
+        for f in &report.fired {
+            out.push_str("  - ");
+            out.push_str(f.rule);
+            out.push_str(": ");
+            out.push_str(&f.detail);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+fn render_node(p: &PhysicalPlan, cat: Option<&Catalog>, depth: usize, out: &mut String) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+    out.push_str(&node_label(p, cat));
+    let rows = cat.and_then(|c| est_rows(p, c));
+    match rows {
+        Some(r) => {
+            out.push_str(&format!("  ~{} rows", r.round() as u64));
+            if let Some(cols) = out_cols(p, cat) {
+                out.push_str(&format!(", ~{} B", (r.round() as u64) * cols as u64 * 8));
+            }
+        }
+        None => out.push_str("  ~? rows"),
+    }
+    out.push('\n');
+    match p {
+        PhysicalPlan::Scan { .. } | PhysicalPlan::TableFunc { .. } => {}
+        PhysicalPlan::Filter { input, .. }
+        | PhysicalPlan::Project { input, .. }
+        | PhysicalPlan::Aggregate { input, .. }
+        | PhysicalPlan::Sort { input, .. }
+        | PhysicalPlan::Limit { input, .. } => render_node(input, cat, depth + 1, out),
+        PhysicalPlan::Join { left, right, .. } => {
+            render_node(left, cat, depth + 1, out);
+            render_node(right, cat, depth + 1, out);
+        }
+    }
+}
+
+fn node_label(p: &PhysicalPlan, cat: Option<&Catalog>) -> String {
+    match p {
+        PhysicalPlan::Scan { table, alias, predicate, live } => {
+            let mut s = format!("scan {table}");
+            if let Some(a) = alias {
+                s.push_str(&format!(" as {a}"));
+            }
+            if let Some(pr) = predicate {
+                s.push_str(&format!(" where {}", pr.to_sql()));
+            }
+            if let Some(l) = live {
+                match cat.and_then(|c| c.schema_of(table)) {
+                    Some((schema, _)) => {
+                        s.push_str(&format!(" [cols {}/{}]", l.len(), schema.fields.len()))
+                    }
+                    None => s.push_str(&format!(" [cols {}]", l.len())),
+                }
+            }
+            s
+        }
+        PhysicalPlan::TableFunc { name, .. } => format!("table-func {name}"),
+        PhysicalPlan::Filter { predicate, .. } => {
+            format!("filter {}", predicate.to_sql())
+        }
+        PhysicalPlan::Project { exprs, .. } => {
+            let names: Vec<&str> = exprs.iter().map(|(_, n)| n.as_str()).collect();
+            format!("project [{}]", names.join(", "))
+        }
+        PhysicalPlan::Aggregate { group, aggs, .. } => {
+            let g: Vec<&str> = group.iter().map(|(_, n)| n.as_str()).collect();
+            let a: Vec<&str> = aggs.iter().map(|c| c.out_name.as_str()).collect();
+            format!("aggregate group=[{}] aggs=[{}]", g.join(", "), a.join(", "))
+        }
+        PhysicalPlan::Join { kind, equi, residual, swap_build, .. } => {
+            let mut s = format!(
+                "join {}",
+                match kind {
+                    JoinKind::Inner => "inner",
+                    JoinKind::Left => "left",
+                }
+            );
+            if !equi.is_empty() {
+                let keys: Vec<String> = equi
+                    .iter()
+                    .map(|(a, b)| format!("{} = {}", a.to_sql(), b.to_sql()))
+                    .collect();
+                s.push_str(&format!(" on {}", keys.join(", ")));
+            }
+            if let Some(r) = residual {
+                s.push_str(&format!(" filter {}", r.to_sql()));
+            }
+            if *swap_build {
+                s.push_str(" [build=left]");
+            }
+            s
+        }
+        PhysicalPlan::Sort { keys, .. } => {
+            let ks: Vec<String> = keys
+                .iter()
+                .map(|k| {
+                    format!("{}{}", k.expr.to_sql(), if k.descending { " desc" } else { "" })
+                })
+                .collect();
+            format!("sort [{}]", ks.join(", "))
+        }
+        PhysicalPlan::Limit { n, .. } => format!("limit {n}"),
+    }
+}
+
+/// Output column count, when statically known.
+fn out_cols(p: &PhysicalPlan, cat: Option<&Catalog>) -> Option<usize> {
+    match p {
+        PhysicalPlan::Scan { table, live, .. } => match live {
+            Some(l) => Some(l.len()),
+            None => Some(cat?.schema_of(table)?.0.fields.len()),
+        },
+        PhysicalPlan::TableFunc { .. } => None,
+        PhysicalPlan::Filter { input, .. }
+        | PhysicalPlan::Sort { input, .. }
+        | PhysicalPlan::Limit { input, .. } => out_cols(input, cat),
+        PhysicalPlan::Project { exprs, .. } => {
+            if exprs
+                .iter()
+                .any(|(e, n)| n.starts_with("__") || contains_star(e))
+            {
+                None
+            } else {
+                Some(exprs.len())
+            }
+        }
+        PhysicalPlan::Aggregate { group, aggs, .. } => Some(group.len() + aggs.len()),
+        PhysicalPlan::Join { left, right, .. } => {
+            Some(out_cols(left, cat)? + out_cols(right, cat)?)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sql::parse_query;
+    use crate::types::{Column, RowSet};
+
+    fn plan(sql: &str) -> LogicalPlan {
+        super::super::plan::plan_query(&parse_query(sql).unwrap(), &UdfRegistry::new()).unwrap()
+    }
+
+    fn table(n: usize) -> RowSet {
+        let k: Vec<i64> = (0..n as i64).collect();
+        let v: Vec<f64> = (0..n).map(|i| i as f64 % 100.0).collect();
+        let name: Vec<String> = (0..n).map(|i| format!("n{}", i % 10)).collect();
+        RowSet::new(
+            Schema::new(vec![
+                Field::new("k", DataType::Int64),
+                Field::new("v", DataType::Float64),
+                Field::new("name", DataType::Utf8),
+            ]),
+            vec![
+                Column::from_i64(k),
+                Column::from_f64(v),
+                Column::from_strings(name),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn catalog() -> Catalog {
+        let cat = Catalog::new();
+        cat.register("t", table(8192));
+        cat.register("small", table(64));
+        cat.register("big", table(8192));
+        cat
+    }
+
+    fn fired(report: &RewriteReport, rule: &str) -> bool {
+        report.fired.iter().any(|f| f.rule == rule)
+    }
+
+    #[test]
+    fn lower_is_purely_structural() {
+        let p = lower(&plan("SELECT v FROM t WHERE v < 1.0"));
+        let PhysicalPlan::Project { input, .. } = p else { panic!("want project") };
+        let PhysicalPlan::Filter { input, .. } = *input else { panic!("want filter") };
+        let PhysicalPlan::Scan { predicate, live, .. } = *input else { panic!("want scan") };
+        assert!(predicate.is_none());
+        assert!(live.is_none());
+    }
+
+    #[test]
+    fn constant_elim_drops_true_conjuncts() {
+        let udfs = UdfRegistry::new();
+        let (p, report) = rewrite_plan(&plan("SELECT v FROM t WHERE 1 < 2 AND v < 5.0"), None, &udfs);
+        assert!(fired(&report, "constant-elim"), "{report:?}");
+        let PhysicalPlan::Project { input, .. } = p else { panic!() };
+        let PhysicalPlan::Filter { predicate, .. } = *input else { panic!("filter kept") };
+        assert_eq!(predicate.to_sql(), "(v < 5.0)");
+
+        let (p, report) = rewrite_plan(&plan("SELECT v FROM t WHERE 2 > 1"), None, &udfs);
+        assert!(fired(&report, "constant-elim"));
+        let PhysicalPlan::Project { input, .. } = p else { panic!() };
+        assert!(matches!(*input, PhysicalPlan::Scan { .. }), "filter removed entirely");
+    }
+
+    #[test]
+    fn constant_elim_keeps_false_and_column_conjuncts() {
+        let udfs = UdfRegistry::new();
+        let (p, report) = rewrite_plan(&plan("SELECT v FROM t WHERE 1 > 2"), None, &udfs);
+        assert!(!fired(&report, "constant-elim"));
+        let PhysicalPlan::Project { input, .. } = p else { panic!() };
+        assert!(matches!(*input, PhysicalPlan::Filter { .. }));
+    }
+
+    #[test]
+    fn scan_embed_fires_only_when_selective_and_large() {
+        let cat = catalog();
+        let udfs = UdfRegistry::new();
+        let (p, report) = rewrite_plan(&plan("SELECT v FROM t WHERE v < 2.0"), Some(&cat), &udfs);
+        assert!(fired(&report, "scan-embed"), "{report:?}");
+        let PhysicalPlan::Project { input, .. } = p else { panic!() };
+        let PhysicalPlan::Scan { predicate, .. } = *input else { panic!("expected embedded scan") };
+        assert_eq!(predicate.unwrap().to_sql(), "(v < 2.0)");
+
+        // Not selective enough: filter stays a separate operator.
+        let (_, report) = rewrite_plan(&plan("SELECT v FROM t WHERE v < 50.0"), Some(&cat), &udfs);
+        assert!(!fired(&report, "scan-embed"));
+
+        // Table too small for shipping to matter.
+        let (_, report) =
+            rewrite_plan(&plan("SELECT v FROM small WHERE v < 2.0"), Some(&cat), &udfs);
+        assert!(!fired(&report, "scan-embed"));
+    }
+
+    #[test]
+    fn projection_prune_keeps_only_live_columns() {
+        let cat = catalog();
+        let udfs = UdfRegistry::new();
+        let (p, report) =
+            rewrite_plan(&plan("SELECT k FROM t WHERE v < 50.0"), Some(&cat), &udfs);
+        assert!(fired(&report, "projection-prune"), "{report:?}");
+        fn find_scan(p: &PhysicalPlan) -> &PhysicalPlan {
+            match p {
+                PhysicalPlan::Scan { .. } => p,
+                PhysicalPlan::Filter { input, .. }
+                | PhysicalPlan::Project { input, .. }
+                | PhysicalPlan::Sort { input, .. }
+                | PhysicalPlan::Limit { input, .. }
+                | PhysicalPlan::Aggregate { input, .. } => find_scan(input),
+                PhysicalPlan::Join { left, .. } => find_scan(left),
+                PhysicalPlan::TableFunc { .. } => panic!("no scan"),
+            }
+        }
+        let PhysicalPlan::Scan { live, .. } = find_scan(&p) else { panic!() };
+        assert_eq!(live.as_deref(), Some(&[0usize, 1][..]), "k + v live, name pruned");
+
+        // SELECT * keeps everything.
+        let (p, report) = rewrite_plan(&plan("SELECT * FROM t"), Some(&cat), &udfs);
+        assert!(!fired(&report, "projection-prune"));
+        let PhysicalPlan::Scan { live, .. } = find_scan(&p) else { panic!() };
+        assert!(live.is_none());
+    }
+
+    #[test]
+    fn predicate_pushdown_through_rename_projection() {
+        let udfs = UdfRegistry::new();
+        let logical = LogicalPlan::Filter {
+            input: Box::new(LogicalPlan::Project {
+                input: Box::new(LogicalPlan::Scan { table: "t".into(), alias: None }),
+                exprs: vec![(Expr::col("v"), "x".into())],
+            }),
+            predicate: Expr::Binary {
+                op: BinaryOp::Lt,
+                left: Box::new(Expr::col("x")),
+                right: Box::new(Expr::lit(Value::Float(1.0))),
+            },
+        };
+        let (p, report) = rewrite_plan(&logical, None, &udfs);
+        assert!(fired(&report, "predicate-pushdown"), "{report:?}");
+        let PhysicalPlan::Project { input, .. } = p else { panic!("project hoisted to root") };
+        let PhysicalPlan::Filter { predicate, input } = *input else { panic!("filter below") };
+        assert_eq!(predicate.to_sql(), "(v < 1.0)");
+        assert!(matches!(*input, PhysicalPlan::Scan { .. }));
+    }
+
+    #[test]
+    fn computed_projection_declines_pushdown() {
+        let udfs = UdfRegistry::new();
+        let logical = LogicalPlan::Filter {
+            input: Box::new(LogicalPlan::Project {
+                input: Box::new(LogicalPlan::Scan { table: "t".into(), alias: None }),
+                exprs: vec![(
+                    Expr::Binary {
+                        op: BinaryOp::Add,
+                        left: Box::new(Expr::col("v")),
+                        right: Box::new(Expr::lit(Value::Int(1))),
+                    },
+                    "x".into(),
+                )],
+            }),
+            predicate: Expr::Binary {
+                op: BinaryOp::Lt,
+                left: Box::new(Expr::col("x")),
+                right: Box::new(Expr::lit(Value::Float(1.0))),
+            },
+        };
+        let (p, report) = rewrite_plan(&logical, None, &udfs);
+        assert!(!fired(&report, "predicate-pushdown"));
+        assert!(matches!(p, PhysicalPlan::Filter { .. }));
+    }
+
+    #[test]
+    fn join_pushdown_and_swap() {
+        let cat = catalog();
+        let udfs = UdfRegistry::new();
+        let (p, report) = rewrite_plan(
+            &plan(
+                "SELECT small.k, big.v FROM small JOIN big ON small.k = big.k \
+                 WHERE small.v < 10.0",
+            ),
+            Some(&cat),
+            &udfs,
+        );
+        assert!(fired(&report, "join-pushdown"), "{report:?}");
+        assert!(fired(&report, "join-swap"), "{report:?}");
+        fn find_join(p: &PhysicalPlan) -> &PhysicalPlan {
+            match p {
+                PhysicalPlan::Join { .. } => p,
+                PhysicalPlan::Filter { input, .. }
+                | PhysicalPlan::Project { input, .. }
+                | PhysicalPlan::Sort { input, .. }
+                | PhysicalPlan::Limit { input, .. }
+                | PhysicalPlan::Aggregate { input, .. } => find_join(input),
+                _ => panic!("no join in plan"),
+            }
+        }
+        let PhysicalPlan::Join { left, swap_build, .. } = find_join(&p) else { panic!() };
+        assert!(*swap_build, "small probe side should become the build side");
+        let PhysicalPlan::Filter { predicate, .. } = left.as_ref() else {
+            panic!("pushed filter on left side, got {left:?}")
+        };
+        assert_eq!(predicate.to_sql(), "(small.v < 10.0)");
+    }
+
+    #[test]
+    fn join_pushdown_declines_right_side_of_left_join() {
+        let cat = catalog();
+        let udfs = UdfRegistry::new();
+        let (p, report) = rewrite_plan(
+            &plan(
+                "SELECT small.k FROM small LEFT JOIN big ON small.k = big.k \
+                 WHERE big.v < 10.0",
+            ),
+            Some(&cat),
+            &udfs,
+        );
+        assert!(!fired(&report, "join-pushdown"), "{report:?}");
+        assert!(matches!(
+            p,
+            PhysicalPlan::Project { .. } | PhysicalPlan::Filter { .. }
+        ));
+    }
+
+    #[test]
+    fn rewrite_without_catalog_only_structural_rules() {
+        let udfs = UdfRegistry::new();
+        let (_, report) = rewrite_plan(
+            &plan("SELECT small.k FROM small JOIN big ON small.k = big.k WHERE small.v < 1.0"),
+            None,
+            &udfs,
+        );
+        for f in &report.fired {
+            assert!(
+                matches!(f.rule, "constant-elim" | "predicate-pushdown"),
+                "stats-dependent rule fired without a catalog: {f:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn explain_format_is_stable() {
+        let cat = catalog();
+        let udfs = UdfRegistry::new();
+        let text = explain_plan(&plan("SELECT k FROM t WHERE v < 2.0"), Some(&cat), &udfs);
+        assert!(text.contains("project [k]"), "{text}");
+        assert!(text.contains("scan t where (v < 2.0)"), "{text}");
+        assert!(text.contains("rows"), "{text}");
+        assert!(text.contains("rules fired:"), "{text}");
+        assert!(text.contains("scan-embed"), "{text}");
+        // Shape-independence: nothing about nodes/parallelism appears.
+        assert!(!text.contains("nodes"), "{text}");
+    }
+
+    #[test]
+    fn est_rows_tracks_selectivity_and_limits() {
+        let cat = catalog();
+        let scan = PhysicalPlan::Scan {
+            table: "t".into(),
+            alias: None,
+            predicate: None,
+            live: None,
+        };
+        assert_eq!(est_rows(&scan, &cat), Some(8192.0));
+        let lim = PhysicalPlan::Limit { input: Box::new(scan), n: 10 };
+        assert_eq!(est_rows(&lim, &cat), Some(10.0));
+    }
+}

@@ -1,0 +1,468 @@
+//! Per-table statistics for the cost-based rewriter (§IV optimizer
+//! groundwork).
+//!
+//! A [`StatsStore`] hangs off the [`super::Catalog`]: every
+//! `Catalog::register` records the table's row count and, per column,
+//! NDV, null count, min/max, and an equi-width histogram
+//! ([`crate::util::histogram::EquiWidth`]) for numeric columns. The
+//! rewriter (`engine::rewrite`) asks it for predicate selectivities and
+//! cardinalities when deciding pushdown, scan embedding, and join
+//! build/probe order. Executed queries refine the store: observed
+//! per-predicate selectivities (recorded by the scan-embedded filter
+//! path) take precedence over histogram estimates on the next plan.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::RwLock;
+
+use crate::sql::ast::Expr;
+use crate::sql::BinaryOp;
+use crate::types::{RowSet, Value};
+use crate::util::histogram::EquiWidth;
+
+/// Per-column statistics gathered at registration.
+#[derive(Debug, Clone)]
+pub struct ColumnStats {
+    /// Number of distinct non-NULL values.
+    pub ndv: u64,
+    /// Number of NULL entries.
+    pub null_count: u64,
+    /// Minimum numeric value (numeric columns with ≥1 valid row).
+    pub min: Option<f64>,
+    /// Maximum numeric value (numeric columns with ≥1 valid row).
+    pub max: Option<f64>,
+    /// Equi-width histogram over `[min, max]` (numeric columns only).
+    pub histogram: Option<EquiWidth>,
+}
+
+/// Statistics for one registered table.
+#[derive(Debug, Clone, Default)]
+pub struct TableStats {
+    /// Total row count at registration.
+    pub rows: u64,
+    /// Per-column stats keyed by lowercase column name.
+    pub columns: HashMap<String, ColumnStats>,
+}
+
+impl TableStats {
+    /// Gather stats from a rowset in one pass per column.
+    pub fn from_rowset(rs: &RowSet) -> Self {
+        let mut columns = HashMap::new();
+        for (i, field) in rs.schema.fields.iter().enumerate() {
+            let col = rs.column(i);
+            let n = col.len();
+            let mut distinct: HashSet<u64> = HashSet::new();
+            let mut null_count = 0u64;
+            let mut min = f64::INFINITY;
+            let mut max = f64::NEG_INFINITY;
+            let mut numeric_vals: Vec<f64> = Vec::new();
+            for idx in 0..n {
+                if !col.is_valid(idx) {
+                    null_count += 1;
+                    continue;
+                }
+                match col.value(idx) {
+                    Value::Int(v) => {
+                        distinct.insert(v as u64);
+                        let f = v as f64;
+                        min = min.min(f);
+                        max = max.max(f);
+                        numeric_vals.push(f);
+                    }
+                    Value::Float(v) => {
+                        distinct.insert(v.to_bits());
+                        if v.is_finite() {
+                            min = min.min(v);
+                            max = max.max(v);
+                            numeric_vals.push(v);
+                        }
+                    }
+                    Value::Str(s) => {
+                        let mut h = DefaultHasher::new();
+                        s.hash(&mut h);
+                        distinct.insert(h.finish());
+                    }
+                    Value::Bool(b) => {
+                        distinct.insert(b as u64);
+                    }
+                    Value::Null => null_count += 1,
+                }
+            }
+            let (min, max, histogram) = if numeric_vals.is_empty() {
+                (None, None, None)
+            } else {
+                let mut h = EquiWidth::new(min, max, EquiWidth::BUCKETS);
+                for &v in &numeric_vals {
+                    h.record(v);
+                }
+                (Some(min), Some(max), Some(h))
+            };
+            columns.insert(
+                field.name.to_ascii_lowercase(),
+                ColumnStats { ndv: distinct.len() as u64, null_count, min, max, histogram },
+            );
+        }
+        Self { rows: rs.num_rows() as u64, columns }
+    }
+
+    /// Look up a column's stats, accepting alias-qualified names
+    /// (`t.v` resolves to column `v`).
+    pub fn column(&self, name: &str) -> Option<&ColumnStats> {
+        let lower = name.to_ascii_lowercase();
+        self.columns
+            .get(&lower)
+            .or_else(|| lower.rsplit_once('.').and_then(|(_, bare)| self.columns.get(bare)))
+    }
+}
+
+/// Bound on the observed-selectivity map (per store).
+const OBSERVED_CAP: usize = 4096;
+
+/// Default selectivity when nothing is known — matches the analyzer's
+/// `est / 3` filter estimate so EXPLAIN and admission hints agree.
+pub const DEFAULT_SELECTIVITY: f64 = 1.0 / 3.0;
+
+/// Thread-safe per-table statistics store.
+#[derive(Debug, Default)]
+pub struct StatsStore {
+    tables: RwLock<HashMap<String, TableStats>>,
+    /// Observed selectivities keyed `"{table}\u{1}{predicate_sql}"`.
+    observed: RwLock<HashMap<String, f64>>,
+}
+
+fn observed_key(table: &str, pred: &Expr) -> String {
+    format!("{}\u{1}{}", table.to_ascii_lowercase(), pred.to_sql())
+}
+
+impl StatsStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (Re)compute stats for a table — called by `Catalog::register`.
+    pub fn record_table(&self, name: &str, rs: &RowSet) {
+        let stats = TableStats::from_rowset(rs);
+        self.tables
+            .write()
+            .unwrap()
+            .insert(name.to_ascii_lowercase(), stats);
+    }
+
+    /// Drop a table's stats — called by `Catalog::drop_table`.
+    pub fn remove_table(&self, name: &str) {
+        self.tables.write().unwrap().remove(&name.to_ascii_lowercase());
+        let prefix = format!("{}\u{1}", name.to_ascii_lowercase());
+        self.observed
+            .write()
+            .unwrap()
+            .retain(|k, _| !k.starts_with(&prefix));
+    }
+
+    /// Clone of a table's stats, if registered.
+    pub fn table(&self, name: &str) -> Option<TableStats> {
+        self.tables
+            .read()
+            .unwrap()
+            .get(&name.to_ascii_lowercase())
+            .cloned()
+    }
+
+    /// Registered row count for a table.
+    pub fn table_rows(&self, name: &str) -> Option<u64> {
+        self.tables
+            .read()
+            .unwrap()
+            .get(&name.to_ascii_lowercase())
+            .map(|t| t.rows)
+    }
+
+    /// Record an executed predicate's actual selectivity; refines future
+    /// estimates for the same (table, predicate) pair. Bounded map:
+    /// existing keys always update, new keys are dropped once full.
+    pub fn observe(&self, table: &str, pred: &Expr, rows_in: u64, rows_out: u64) {
+        if rows_in == 0 {
+            return;
+        }
+        let key = observed_key(table, pred);
+        let sel = rows_out as f64 / rows_in as f64;
+        let mut map = self.observed.write().unwrap();
+        if map.len() >= OBSERVED_CAP && !map.contains_key(&key) {
+            return;
+        }
+        map.insert(key, sel);
+    }
+
+    /// Previously observed selectivity for this exact (table, predicate).
+    pub fn observed_selectivity(&self, table: &str, pred: &Expr) -> Option<f64> {
+        self.observed
+            .read()
+            .unwrap()
+            .get(&observed_key(table, pred))
+            .copied()
+    }
+
+    /// Estimated selectivity of `pred` over `table`, in `[0, 1]`.
+    /// Observed history wins; otherwise histograms/NDV estimate
+    /// comparisons, BETWEEN, IN, IS NULL, and boolean combinators;
+    /// anything opaque falls back to [`DEFAULT_SELECTIVITY`].
+    pub fn estimate_selectivity(&self, table: &str, pred: &Expr) -> f64 {
+        if let Some(sel) = self.observed_selectivity(table, pred) {
+            return sel;
+        }
+        let tables = self.tables.read().unwrap();
+        let stats = tables.get(&table.to_ascii_lowercase());
+        estimate_pred(stats, pred).clamp(0.0, 1.0)
+    }
+}
+
+/// Numeric value of a literal expression, if it is one.
+fn literal_num(e: &Expr) -> Option<f64> {
+    match e {
+        Expr::Literal(Value::Int(v)) => Some(*v as f64),
+        Expr::Literal(Value::Float(v)) => Some(*v),
+        _ => None,
+    }
+}
+
+fn column_name(e: &Expr) -> Option<&str> {
+    match e {
+        Expr::Column(c) => Some(c.as_str()),
+        _ => None,
+    }
+}
+
+fn col_stats<'a>(stats: Option<&'a TableStats>, e: &Expr) -> Option<&'a ColumnStats> {
+    stats?.column(column_name(e)?)
+}
+
+/// Fraction of rows where the column is non-NULL.
+fn valid_frac(stats: Option<&TableStats>, cs: &ColumnStats) -> f64 {
+    let rows = stats.map(|t| t.rows).unwrap_or(0);
+    if rows == 0 {
+        return 1.0;
+    }
+    1.0 - cs.null_count as f64 / rows as f64
+}
+
+fn estimate_cmp(
+    stats: Option<&TableStats>,
+    op: BinaryOp,
+    col: &Expr,
+    lit: f64,
+    flipped: bool,
+) -> Option<f64> {
+    let cs = col_stats(stats, col)?;
+    let h = cs.histogram.as_ref()?;
+    // `lit < col` is `col > lit`, etc.
+    let op = if flipped {
+        match op {
+            BinaryOp::Lt => BinaryOp::Gt,
+            BinaryOp::LtEq => BinaryOp::GtEq,
+            BinaryOp::Gt => BinaryOp::Lt,
+            BinaryOp::GtEq => BinaryOp::LtEq,
+            other => other,
+        }
+    } else {
+        op
+    };
+    let eq_frac = if cs.ndv == 0 { 0.0 } else { 1.0 / cs.ndv as f64 };
+    let frac = match op {
+        BinaryOp::Lt => h.fraction_below(lit),
+        BinaryOp::LtEq => (h.fraction_below(lit) + eq_frac).min(1.0),
+        BinaryOp::Gt => 1.0 - (h.fraction_below(lit) + eq_frac).min(1.0),
+        BinaryOp::GtEq => 1.0 - h.fraction_below(lit),
+        BinaryOp::Eq => eq_frac,
+        BinaryOp::NotEq => 1.0 - eq_frac,
+        _ => return None,
+    };
+    Some(frac * valid_frac(stats, cs))
+}
+
+fn estimate_pred(stats: Option<&TableStats>, pred: &Expr) -> f64 {
+    match pred {
+        Expr::Literal(Value::Bool(true)) => 1.0,
+        Expr::Literal(Value::Bool(false)) | Expr::Literal(Value::Null) => 0.0,
+        Expr::Unary { op: crate::sql::ast::UnaryOp::Not, expr } => {
+            1.0 - estimate_pred(stats, expr)
+        }
+        Expr::Binary { op: BinaryOp::And, left, right } => {
+            estimate_pred(stats, left) * estimate_pred(stats, right)
+        }
+        Expr::Binary { op: BinaryOp::Or, left, right } => {
+            let l = estimate_pred(stats, left);
+            let r = estimate_pred(stats, right);
+            (l + r - l * r).clamp(0.0, 1.0)
+        }
+        Expr::Binary { op, left, right }
+            if matches!(
+                op,
+                BinaryOp::Lt
+                    | BinaryOp::LtEq
+                    | BinaryOp::Gt
+                    | BinaryOp::GtEq
+                    | BinaryOp::Eq
+                    | BinaryOp::NotEq
+            ) =>
+        {
+            if let Some(lit) = literal_num(right) {
+                if let Some(f) = estimate_cmp(stats, *op, left, lit, false) {
+                    return f;
+                }
+            }
+            if let Some(lit) = literal_num(left) {
+                if let Some(f) = estimate_cmp(stats, *op, right, lit, true) {
+                    return f;
+                }
+            }
+            DEFAULT_SELECTIVITY
+        }
+        Expr::Between { expr, low, high, negated } => {
+            let est = match (col_stats(stats, expr), literal_num(low), literal_num(high)) {
+                (Some(cs), Some(lo), Some(hi)) => match &cs.histogram {
+                    Some(h) => h.fraction_between(lo, hi) * valid_frac(stats, cs),
+                    None => DEFAULT_SELECTIVITY,
+                },
+                _ => DEFAULT_SELECTIVITY,
+            };
+            if *negated {
+                1.0 - est
+            } else {
+                est
+            }
+        }
+        Expr::IsNull { expr, negated } => {
+            let est = match col_stats(stats, expr) {
+                Some(cs) => {
+                    let rows = stats.map(|t| t.rows).unwrap_or(0).max(1);
+                    cs.null_count as f64 / rows as f64
+                }
+                None => DEFAULT_SELECTIVITY,
+            };
+            if *negated {
+                1.0 - est
+            } else {
+                est
+            }
+        }
+        Expr::InList { expr, list, negated } => {
+            let est = match col_stats(stats, expr) {
+                Some(cs) if cs.ndv > 0 => {
+                    ((list.len() as f64 / cs.ndv as f64) * valid_frac(stats, cs)).min(1.0)
+                }
+                _ => DEFAULT_SELECTIVITY,
+            };
+            if *negated {
+                1.0 - est
+            } else {
+                est
+            }
+        }
+        _ => DEFAULT_SELECTIVITY,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Column, DataType, Field, Schema};
+
+    fn table() -> RowSet {
+        let n = 10_000usize;
+        let v: Vec<f64> = (0..n).map(|i| (i % 100) as f64).collect();
+        let k: Vec<i64> = (0..n).map(|i| (i % 50) as i64).collect();
+        RowSet::new(
+            Schema::new(vec![
+                Field::new("v", DataType::Float64),
+                Field::new("k", DataType::Int64),
+            ]),
+            vec![Column::from_f64(v), Column::from_i64(k)],
+        )
+        .unwrap()
+    }
+
+    fn lt(col: &str, x: f64) -> Expr {
+        Expr::Binary {
+            op: BinaryOp::Lt,
+            left: Box::new(Expr::col(col)),
+            right: Box::new(Expr::lit(Value::Float(x))),
+        }
+    }
+
+    #[test]
+    fn registration_gathers_column_stats() {
+        let store = StatsStore::new();
+        store.record_table("t", &table());
+        assert_eq!(store.table_rows("t"), Some(10_000));
+        let ts = store.table("t").unwrap();
+        let v = ts.column("v").unwrap();
+        assert_eq!(v.ndv, 100);
+        assert_eq!(v.null_count, 0);
+        assert_eq!(v.min, Some(0.0));
+        assert_eq!(v.max, Some(99.0));
+        // Alias-qualified lookup resolves to the bare column.
+        assert!(ts.column("t.v").is_some());
+        assert_eq!(ts.column("k").unwrap().ndv, 50);
+    }
+
+    #[test]
+    fn histogram_estimates_range_selectivity() {
+        let store = StatsStore::new();
+        store.record_table("t", &table());
+        let sel = store.estimate_selectivity("t", &lt("v", 2.0));
+        assert!(sel < 0.08, "sel={sel}");
+        let sel = store.estimate_selectivity("t", &lt("v", 80.0));
+        assert!((sel - 0.8).abs() < 0.05, "sel={sel}");
+        // Flipped literal side: 80.0 > v ≡ v < 80.0.
+        let flipped = Expr::Binary {
+            op: BinaryOp::Gt,
+            left: Box::new(Expr::lit(Value::Float(80.0))),
+            right: Box::new(Expr::col("v")),
+        };
+        let sel = store.estimate_selectivity("t", &flipped);
+        assert!((sel - 0.8).abs() < 0.05, "sel={sel}");
+    }
+
+    #[test]
+    fn observed_selectivity_overrides_estimate() {
+        let store = StatsStore::new();
+        store.record_table("t", &table());
+        let pred = lt("v", 80.0);
+        store.observe("t", &pred, 10_000, 123);
+        let sel = store.estimate_selectivity("t", &pred);
+        assert!((sel - 0.0123).abs() < 1e-9, "sel={sel}");
+        // A different predicate still estimates from the histogram.
+        assert!(store.estimate_selectivity("t", &lt("v", 2.0)) < 0.08);
+    }
+
+    #[test]
+    fn unknown_tables_fall_back_to_default() {
+        let store = StatsStore::new();
+        let sel = store.estimate_selectivity("missing", &lt("v", 2.0));
+        assert!((sel - DEFAULT_SELECTIVITY).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conjunction_multiplies() {
+        let store = StatsStore::new();
+        store.record_table("t", &table());
+        let and = Expr::Binary {
+            op: BinaryOp::And,
+            left: Box::new(lt("v", 50.0)),
+            right: Box::new(lt("k", 25.0)),
+        };
+        let sel = store.estimate_selectivity("t", &and);
+        assert!((sel - 0.25).abs() < 0.05, "sel={sel}");
+    }
+
+    #[test]
+    fn drop_table_clears_stats_and_observations() {
+        let store = StatsStore::new();
+        store.record_table("t", &table());
+        store.observe("t", &lt("v", 1.0), 100, 1);
+        store.remove_table("t");
+        assert!(store.table("t").is_none());
+        assert!(store.observed_selectivity("t", &lt("v", 1.0)).is_none());
+    }
+}

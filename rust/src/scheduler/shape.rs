@@ -29,6 +29,16 @@ use super::stats::{NodeBalance, StatsFramework};
 ///   node fan-out: a persistently skewed span means shipping cost is
 ///   not buying balanced work;
 /// - **balanced, heavy history** → scale out to the full pool shape.
+///
+/// With any history at all, per-node parallelism also adapts: the mean
+/// recorded busy time is divided across the picked nodes, and the
+/// worker count is however many workers that load can keep busy for at
+/// least [`ShapePolicy::min_worker_load_ns`] each — clamped to the
+/// pool's interpreter-process budget, never below one. A query whose
+/// whole history is microseconds of busy time stops paying
+/// thread-spawn and steal-queue overhead for workers with nothing to
+/// do; shapes stay byte-identical throughout (morsel layout depends
+/// only on row count).
 #[derive(Debug, Clone, Copy)]
 pub struct ShapePolicy {
     /// Balance observations consulted (the paper's lookback K).
@@ -39,6 +49,10 @@ pub struct ShapePolicy {
     /// Total-busy floor (nanoseconds, summed over nodes) below which
     /// the query runs on the leader only.
     pub min_total_load_ns: u64,
+    /// Busy time (nanoseconds) a worker thread must be able to claim
+    /// before the policy keeps it: per-node parallelism adapts to
+    /// `mean_total / nodes / min_worker_load_ns` once history exists.
+    pub min_worker_load_ns: u64,
     /// Health observations a node needs before it can be judged flaky
     /// (below this, benefit of the doubt — keep fanning out to it).
     pub flaky_min_observations: usize,
@@ -54,6 +68,7 @@ impl Default for ShapePolicy {
             lookback: 5,
             skew_threshold: 1.5,
             min_total_load_ns: 2_000_000,
+            min_worker_load_ns: 500_000,
             flaky_min_observations: 2,
             flaky_failure_rate: 0.5,
         }
@@ -63,8 +78,9 @@ impl Default for ShapePolicy {
 impl ShapePolicy {
     /// Pick a shape for `key` from its history in `stats`, defaulting
     /// to `pool_shape` (`(nodes, workers_per_node)`) when no history
-    /// exists. Per-node parallelism always stays at the pool's
-    /// interpreter-process budget — nodes are the adaptive dimension.
+    /// exists. Nodes are the primary adaptive dimension; once history
+    /// exists, per-node parallelism adapts too (capped at the pool's
+    /// interpreter-process budget).
     pub fn pick(
         &self,
         key: &str,
@@ -95,7 +111,14 @@ impl ShapePolicy {
         } else {
             pool_nodes
         };
-        (clamp(nodes), parallelism)
+        let nodes = clamp(nodes);
+        // Workers the per-node share of the load can keep busy for at
+        // least `min_worker_load_ns` each (the division is in integer
+        // ns, so a sub-threshold load rounds to zero and clamps to one
+        // sequential worker).
+        let per_node = mean_total / nodes.max(1) as u64;
+        let par = (per_node / self.min_worker_load_ns.max(1)) as usize;
+        (nodes, par.clamp(1, parallelism))
     }
 }
 
@@ -150,7 +173,27 @@ mod tests {
             // dominate — keep it leader-local.
             stats.record_node_balance("q", &[200_000, 180_000, 190_000, 210_000], 0);
         }
-        assert_eq!(p.pick("q", &stats, (4, 2)), (1, 2));
+        // ~0.78 ms on one node also funds only a single worker at the
+        // 0.5 ms/worker floor: parallelism adapts down with the fan-out.
+        assert_eq!(p.pick("q", &stats, (4, 2)), (1, 1));
+    }
+
+    #[test]
+    fn parallelism_adapts_to_per_worker_load() {
+        let stats = StatsFramework::new(8);
+        let p = ShapePolicy::default();
+        // ~3 ms total across 4 nodes: heavy enough to fan out, but each
+        // node's ~0.75 ms share funds one worker, not eight.
+        for _ in 0..3 {
+            stats.record_node_balance("q", &[800_000, 700_000, 750_000, 760_000], 0);
+        }
+        assert_eq!(p.pick("q", &stats, (4, 8)), (4, 1));
+        // A heavy history keeps the full budget.
+        let stats = StatsFramework::new(8);
+        for _ in 0..3 {
+            stats.record_node_balance("q", &[50 * MB, 48 * MB, 52 * MB, 49 * MB], 0);
+        }
+        assert_eq!(p.pick("q", &stats, (4, 8)), (4, 8));
     }
 
     #[test]

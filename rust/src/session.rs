@@ -12,33 +12,20 @@ use anyhow::{anyhow, Result};
 
 use crate::dataframe::DataFrame;
 use crate::engine::exchange::{run_udf_exchange, ExchangeConfig, ExchangeMode, ExchangeReport};
-use crate::engine::fault::{default_fault_scope, CancelToken, FaultPlan, FaultScope};
-use crate::engine::{Catalog, ExecContext};
+use crate::engine::fault::{CancelToken, FaultPlan, FaultScope};
+use crate::engine::{Catalog, EngineConfig, ExecContext};
 use crate::runtime::XlaService;
 use crate::scheduler::{ShapePolicy, StatsFramework};
 use crate::types::{Column, DataType, Field, RowSet, Schema};
 use crate::udf::{ScalarFn, UdfRegistry, UdfStatsStore, VectorizedFn};
 use crate::warehouse::{InterpreterPool, PoolConfig};
 
-/// The `SNOWPARK_ADAPTIVE_SHAPE` environment override: `Some(true)` /
-/// `Some(false)` when set, `None` to use the session default (adaptive
-/// on for sessions with a pool, off otherwise).
-fn env_adaptive_shape() -> Option<bool> {
-    match std::env::var("SNOWPARK_ADAPTIVE_SHAPE") {
-        Ok(v) => match v.trim() {
-            "1" | "true" | "on" => Some(true),
-            "0" | "false" | "off" => Some(false),
-            _ => None,
-        },
-        Err(_) => None,
-    }
-}
-
 /// Builder for [`Session`].
 pub struct SessionBuilder {
     pool: Option<PoolConfig>,
     exchange: ExchangeConfig,
     artifacts_dir: Option<std::path::PathBuf>,
+    engine: Option<EngineConfig>,
     parallelism: Option<usize>,
     nodes: Option<usize>,
     adaptive_shape: Option<bool>,
@@ -55,6 +42,20 @@ impl SessionBuilder {
 
     pub fn exchange(mut self, config: ExchangeConfig) -> Self {
         self.exchange = config;
+        self
+    }
+
+    /// Supply a pre-resolved [`EngineConfig`] as the base layer (the CLI
+    /// resolves `EngineConfig::from_env()` once, applies its flags on
+    /// top, and hands the result here). Without this the builder
+    /// resolves the environment itself. The individual setters below
+    /// ([`SessionBuilder::parallelism`], [`SessionBuilder::nodes`],
+    /// [`SessionBuilder::adaptive_shape`],
+    /// [`SessionBuilder::fault_plan`]) layer over whichever base is in
+    /// effect — env < builder < CLI, resolved exactly once at
+    /// [`SessionBuilder::build`].
+    pub fn engine_config(mut self, config: EngineConfig) -> Self {
+        self.engine = Some(config);
         self
     }
 
@@ -143,10 +144,23 @@ impl SessionBuilder {
             }
             None => None,
         };
-        let adaptive = self
-            .adaptive_shape
-            .or_else(env_adaptive_shape)
-            .unwrap_or(self.pool.is_some());
+        // Resolve the engine configuration exactly once: the supplied
+        // base (or the environment), then the builder's explicit
+        // setters on top.
+        let mut engine = self.engine.unwrap_or_else(EngineConfig::from_env);
+        if let Some(p) = self.parallelism {
+            engine.parallelism = Some(p);
+        }
+        if let Some(n) = self.nodes {
+            engine.nodes = Some(n);
+        }
+        if let Some(a) = self.adaptive_shape {
+            engine.adaptive_shape = Some(a);
+        }
+        if let Some(fp) = self.fault_plan {
+            engine.fault_plan = Some(fp);
+        }
+        let adaptive = engine.adaptive_shape.unwrap_or(self.pool.is_some());
         let session = Arc::new(Session {
             catalog,
             registry,
@@ -155,14 +169,12 @@ impl SessionBuilder {
             pool: Mutex::new(None),
             exchange: self.exchange,
             runtime,
-            parallelism: self.parallelism,
-            nodes: self.nodes,
+            engine,
             adaptive,
             shape_policy: ShapePolicy::default(),
             balance_stats: StatsFramework::new(32),
             partitioned: RwLock::new(HashMap::new()),
             query_timeout: self.query_timeout,
-            fault_plan: self.fault_plan,
             deadline_exceeded: AtomicU64::new(0),
         });
         if let Some(rt) = &session.runtime {
@@ -183,14 +195,12 @@ pub struct Session {
     pool: Mutex<Option<Arc<InterpreterPool>>>,
     exchange: ExchangeConfig,
     runtime: Option<Arc<XlaService>>,
-    /// Explicit intra-query parallelism override (None = derive from the
-    /// warehouse shape, else the engine default).
-    parallelism: Option<usize>,
-    /// Explicit node-count override for query morsel dispatch (None =
-    /// derive from the pool shape, else the engine default).
-    nodes: Option<usize>,
+    /// The resolved engine configuration (env < builder < CLI, resolved
+    /// once at build time).
+    engine: EngineConfig,
     /// Adapt each query's `(nodes, parallelism)` from its recorded
-    /// node-balance history (§IV.C threshold rule).
+    /// node-balance history (§IV.C threshold rule). Resolved from
+    /// [`EngineConfig::adaptive_shape`] (default: on with a pool).
     adaptive: bool,
     /// The adaptive policy (lookback / skew threshold / busy floor).
     shape_policy: ShapePolicy,
@@ -202,9 +212,6 @@ pub struct Session {
     partitioned: RwLock<HashMap<String, Vec<RowSet>>>,
     /// Per-statement wall-time bound (None = unbounded).
     query_timeout: Option<Duration>,
-    /// Fault-injection plan applied to every statement (None = the
-    /// `SNOWPARK_FAULT_PLAN` env var, else no injection).
-    fault_plan: Option<FaultPlan>,
     /// Statements this session aborted with `DeadlineExceeded`.
     deadline_exceeded: AtomicU64,
 }
@@ -215,6 +222,7 @@ impl Session {
             pool: None,
             exchange: ExchangeConfig::default(),
             artifacts_dir: None,
+            engine: None,
             parallelism: None,
             nodes: None,
             adaptive_shape: None,
@@ -299,24 +307,34 @@ impl Session {
             .cloned()
     }
 
-    /// The morsel parallelism queries run with: the explicit builder
-    /// override, else the warehouse shape (`procs_per_node` — the SQL
-    /// operators of one query run on one node's interpreter-process
-    /// budget), else the engine default (env var / host cores).
+    /// The session's resolved [`EngineConfig`] (env < builder < CLI,
+    /// resolved once at build; its `Display` backs the `--stats`
+    /// header).
+    pub fn engine_config(&self) -> &EngineConfig {
+        &self.engine
+    }
+
+    /// The morsel parallelism queries run with: the resolved
+    /// [`EngineConfig::parallelism`] (builder/CLI override or the
+    /// `SNOWPARK_PARALLELISM` env var), else the warehouse shape
+    /// (`procs_per_node` — the SQL operators of one query run on one
+    /// node's interpreter-process budget), else the host core count.
     pub fn query_parallelism(&self) -> usize {
-        self.parallelism
+        self.engine
+            .parallelism
             .or_else(|| self.pool_config.map(|c| c.distributed_query_shape().1))
             .unwrap_or_else(crate::engine::default_parallelism)
             .max(1)
     }
 
     /// The warehouse-node count query morsels spread across: the
-    /// explicit builder override (`snowparkd run-sql --nodes N`), else
-    /// the pool shape (`PoolConfig::distributed_query_shape` — the same
-    /// nodes the UDF exchange deals batches to), else the engine
-    /// default (`SNOWPARK_NODES`, else 1).
+    /// resolved [`EngineConfig::nodes`] (`snowparkd run-sql --nodes N`
+    /// or the `SNOWPARK_NODES` env var), else the pool shape
+    /// (`PoolConfig::distributed_query_shape` — the same nodes the UDF
+    /// exchange deals batches to), else 1.
     pub fn query_nodes(&self) -> usize {
-        self.nodes
+        self.engine
+            .nodes
             .or_else(|| self.pool_config.map(|c| c.distributed_query_shape().0))
             .unwrap_or_else(crate::engine::default_nodes)
             .max(1)
@@ -343,10 +361,10 @@ impl Session {
         let mut shape = (self.query_nodes(), self.query_parallelism());
         if self.adaptive {
             let picked = self.shape_policy.pick(text, &self.balance_stats, shape);
-            if self.nodes.is_none() {
+            if self.engine.nodes.is_none() {
                 shape.0 = picked.0;
             }
-            if self.parallelism.is_none() {
+            if self.engine.parallelism.is_none() {
                 shape.1 = picked.1;
             }
         }
@@ -363,19 +381,16 @@ impl Session {
             parallelism,
             nodes,
             steal: true,
-            fragments: crate::engine::default_fragments(),
+            fragments: self.engine.fragments,
             transport: self.pool_config.map(|c| c.transport).unwrap_or_default(),
             tally: Arc::new(crate::engine::ExecTally::default()),
             // A fresh scope per statement: count-based triggers and the
             // blacklist re-arm on every query, like a real transient
             // outage would look to consecutive statements.
-            fault: self
-                .fault_plan
-                .clone()
-                .map(FaultScope::new)
-                .or_else(default_fault_scope),
+            fault: self.engine.fault_plan.clone().map(FaultScope::new),
             cancel: self.query_timeout.map(CancelToken::with_deadline),
             fault_retry: true,
+            rewrite: self.engine.rewrite,
         }
     }
 
@@ -415,8 +430,9 @@ impl Session {
         // Static semantic front door (the paper's §III client-side
         // validation): statements that cannot execute are rejected with
         // coded diagnostics before an execution context is even built.
-        // `SNOWPARK_ANALYZE=0` bypasses the gate.
-        if crate::engine::analysis_enabled() {
+        // `SNOWPARK_ANALYZE=0` (resolved into the session's
+        // [`EngineConfig`] at build time) bypasses the gate.
+        if self.engine.analyze {
             let analysis = self.check_sql(text);
             if !analysis.is_ok() {
                 return Err(anyhow!(
@@ -648,7 +664,9 @@ mod tests {
         for _ in 0..3 {
             s.query_balance_stats().record_node_balance(q2, &[200_000, 190_000], 0);
         }
-        assert_eq!(s.planned_shape(q2), (1, 2));
+        // (Parallelism adapts down with it: ~0.4 ms of busy time funds
+        // a single worker at the policy's 0.5 ms/worker floor.)
+        assert_eq!(s.planned_shape(q2), (1, 1));
         // Balanced heavy history → full scale-out.
         let q3 = "SELECT balanced";
         for _ in 0..3 {

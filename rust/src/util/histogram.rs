@@ -158,6 +158,99 @@ impl LogHistogram {
     }
 }
 
+/// Equi-width histogram over a fixed `[min, max]` value domain.
+///
+/// The planner's `StatsStore` builds one per numeric column at table
+/// registration and asks it for range selectivities (`P(v < x)`,
+/// `P(a ≤ v ≤ b)`) when costing predicates. Buckets assume a uniform
+/// distribution *within* a bucket (the classic equi-width estimate), so
+/// the answer is exact at bucket boundaries and linearly interpolated
+/// inside them.
+#[derive(Debug, Clone)]
+pub struct EquiWidth {
+    min: f64,
+    max: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl EquiWidth {
+    /// Default bucket count used by the stats store.
+    pub const BUCKETS: usize = 32;
+
+    /// Build a histogram over `[min, max]` with `buckets` equal-width
+    /// bins. A degenerate domain (`min == max`, or non-finite bounds)
+    /// collapses to a single bucket.
+    pub fn new(min: f64, max: f64, buckets: usize) -> Self {
+        let buckets = buckets.max(1);
+        if !(min.is_finite() && max.is_finite()) || min >= max {
+            return Self { min, max: min, counts: vec![0; 1], total: 0 };
+        }
+        Self { min, max, counts: vec![0; buckets], total: 0 }
+    }
+
+    #[inline]
+    fn bucket_of(&self, v: f64) -> usize {
+        if self.max <= self.min {
+            return 0;
+        }
+        let width = (self.max - self.min) / self.counts.len() as f64;
+        let idx = ((v - self.min) / width) as usize;
+        idx.min(self.counts.len() - 1)
+    }
+
+    /// Record one observation. Values outside `[min, max]` clamp to the
+    /// boundary buckets.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let idx = self.bucket_of(v.clamp(self.min, self.max));
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Estimated fraction of recorded values strictly below `x`
+    /// (uniform-within-bucket interpolation), in `[0, 1]`.
+    pub fn fraction_below(&self, x: f64) -> f64 {
+        if self.total == 0 {
+            return 0.5;
+        }
+        if x <= self.min {
+            return 0.0;
+        }
+        if x >= self.max {
+            return 1.0;
+        }
+        if self.max <= self.min {
+            // Degenerate single-valued domain: all mass at `min`.
+            return if x > self.min { 1.0 } else { 0.0 };
+        }
+        let width = (self.max - self.min) / self.counts.len() as f64;
+        let idx = self.bucket_of(x);
+        let mut below = 0u64;
+        for &c in &self.counts[..idx] {
+            below += c;
+        }
+        let lo = self.min + idx as f64 * width;
+        let frac_in = ((x - lo) / width).clamp(0.0, 1.0);
+        (below as f64 + frac_in * self.counts[idx] as f64) / self.total as f64
+    }
+
+    /// Estimated fraction of recorded values in `[lo, hi]`, in `[0, 1]`.
+    pub fn fraction_between(&self, lo: f64, hi: f64) -> f64 {
+        if hi < lo {
+            return 0.0;
+        }
+        (self.fraction_below(hi) - self.fraction_below(lo)).clamp(0.0, 1.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +325,36 @@ mod tests {
         assert_eq!(a.count(), 2000);
         let p50 = a.percentile(50.0);
         assert!((900..1100).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn equi_width_uniform_fractions() {
+        let mut h = EquiWidth::new(0.0, 100.0, EquiWidth::BUCKETS);
+        for i in 0..10_000 {
+            h.record(i as f64 % 100.0);
+        }
+        assert_eq!(h.count(), 10_000);
+        assert!((h.fraction_below(50.0) - 0.5).abs() < 0.02);
+        assert!((h.fraction_below(2.0) - 0.02).abs() < 0.02);
+        assert_eq!(h.fraction_below(-1.0), 0.0);
+        assert_eq!(h.fraction_below(1000.0), 1.0);
+        assert!((h.fraction_between(25.0, 75.0) - 0.5).abs() < 0.03);
+    }
+
+    #[test]
+    fn equi_width_degenerate_domain() {
+        let mut h = EquiWidth::new(7.0, 7.0, 32);
+        h.record(7.0);
+        h.record(7.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.fraction_below(7.0), 0.0);
+        assert_eq!(h.fraction_below(8.0), 1.0);
+    }
+
+    #[test]
+    fn equi_width_empty_is_noncommittal() {
+        let h = EquiWidth::new(0.0, 1.0, 8);
+        assert_eq!(h.fraction_below(0.5), 0.5);
     }
 
     #[test]

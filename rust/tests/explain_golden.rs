@@ -1,0 +1,112 @@
+//! EXPLAIN golden snapshots: the optimized physical plan the rewriter
+//! produces for every statement the repo actually serves — the serving
+//! workload catalog plus one `SELECT udf(...)` statement per TPCx-BB
+//! UDF query — rendered in the stable `explain_plan` text format and
+//! pinned under `tests/golden/explain/`.
+//!
+//! A snapshot that drifts means the planner changed its mind about a
+//! real workload statement: a new rule fired, an estimate moved across
+//! a gate, or a join order flipped. That can be intentional — rerun
+//! with the files deleted (the test bootstraps missing snapshots) and
+//! commit the diff — but it must never be invisible. The `explain-golden`
+//! CI job fails on any uncommitted drift.
+//!
+//! Everything feeding the text is seeded and deterministic: the dataset
+//! generator, the per-table statistics built at registration, and the
+//! cost estimates derived from them. No query executes, so the
+//! selectivity-feedback loop never perturbs the stats.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use snowpark::engine::Catalog;
+use snowpark::session::Session;
+use snowpark::sim::{register_udfs, TpcxBbDataset, SERVING_CATALOG, TPCXBB_QUERIES};
+
+/// Same dataset shape as the `check-sql --corpus` CI gate.
+const ROWS: usize = 1_000;
+const SEED: u64 = 7;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/explain")
+}
+
+/// The corpus session: merged TPCx-BB catalog plus the simulated UDFs,
+/// exactly what the serving layer analyzes against.
+fn corpus_session() -> Arc<Session> {
+    let catalog = Arc::new(Catalog::new());
+    TpcxBbDataset::generate(ROWS, 4, 1.4, SEED).register_merged(&catalog).unwrap();
+    let s = Session::builder().shared_catalog(catalog).build().unwrap();
+    let mut reg = s.udfs();
+    register_udfs(&mut reg);
+    for q in TPCXBB_QUERIES {
+        let u = reg.scalar(q.udf).unwrap().clone();
+        s.register_scalar_udf(&u.name, u.return_type, u.body.clone());
+    }
+    s
+}
+
+/// Every corpus statement as `(snapshot name, sql)`.
+fn corpus_statements() -> Vec<(String, String)> {
+    let mut statements: Vec<(String, String)> = SERVING_CATALOG
+        .iter()
+        .map(|stmt| (format!("serving_{}", stmt.name), stmt.sql.to_string()))
+        .collect();
+    for q in TPCXBB_QUERIES {
+        statements.push((
+            format!("tpcxbb_{}", q.name),
+            format!("SELECT {}({}) AS v FROM {}", q.udf, q.input_cols.join(", "), q.table),
+        ));
+    }
+    statements
+}
+
+#[test]
+fn corpus_explain_matches_the_golden_snapshots() {
+    let s = corpus_session();
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut bootstrapped = Vec::new();
+    let mut drifted = Vec::new();
+    for (name, sql) in corpus_statements() {
+        let analysis = s.check_sql(&sql);
+        assert!(
+            analysis.is_ok(),
+            "{name}: corpus statement no longer analyzes\n{sql}\n{}",
+            analysis.render_errors()
+        );
+        assert!(
+            !analysis.optimized.is_empty(),
+            "{name}: analysis carries no optimized plan\n{sql}"
+        );
+        // `-- <sql>` header so a snapshot is reviewable on its own.
+        let rendered = format!("-- {sql}\n{}", analysis.optimized);
+        let path = dir.join(format!("{name}.txt"));
+        match std::fs::read_to_string(&path) {
+            Ok(want) if want == rendered => {}
+            Ok(want) => {
+                eprintln!(
+                    "=== {name}: optimized plan drifted ===\n--- golden\n{want}\n--- current\n{rendered}"
+                );
+                drifted.push(name);
+            }
+            Err(_) => {
+                std::fs::write(&path, &rendered).unwrap();
+                bootstrapped.push(name);
+            }
+        }
+    }
+    if !bootstrapped.is_empty() {
+        eprintln!(
+            "bootstrapped {} snapshot(s): {} — commit tests/golden/explain/",
+            bootstrapped.len(),
+            bootstrapped.join(", ")
+        );
+    }
+    assert!(
+        drifted.is_empty(),
+        "optimized plans drifted from their golden snapshots: {} \
+         (intentional? delete the files, rerun to bootstrap, commit the diff)",
+        drifted.join(", ")
+    );
+}
