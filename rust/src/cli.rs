@@ -36,8 +36,8 @@ snowparkd — Snowpark reproduction launcher
 USAGE:
   snowparkd info
   snowparkd run-sql \"SELECT ...\" [--rows N] [--seed S] [--stats] [--parallelism T] \
-[--nodes N] [--adaptive-shape] [--no-rewrite] [--timeout MS] [--fault-plan SPEC] \
-[--check] [--explain]
+[--nodes N] [--adaptive-shape] [--no-rewrite] [--no-shuffle] [--timeout MS] \
+[--fault-plan SPEC] [--check] [--explain]
   snowparkd check-sql \"SELECT ...\" [--rows N] [--seed S]
   snowparkd check-sql --corpus [--rows N] [--seed S]
   snowparkd demo
@@ -82,7 +82,12 @@ adaptation pays off across repeated statements on a long-lived
 session). SNOWPARK_FRAGMENTS=0 pins the operator-at-a-time dispatch
 baseline. --no-rewrite (or SNOWPARK_REWRITE=0) disables the cost-based
 plan rewriter — the unoptimized-lowering baseline of the A14 ablation;
-results are byte-identical either way. All of these toggles resolve
+results are byte-identical either way. --no-shuffle (or
+SNOWPARK_SHUFFLE=0) pins the leader-merge breaker path — aggregate
+partials fold and sorted runs k-way-merge on node 0 instead of
+finalizing per hash partition on owning nodes — the baseline of the
+A15 partitioned_shuffle ablation; results are byte-identical either
+way. All of these toggles resolve
 into one typed EngineConfig at session build (env < builder < CLI);
 `--stats` prints the resolved config header. --timeout MS bounds the
 statement's wall time (0 = none;
@@ -116,7 +121,17 @@ pub fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let parsed = match ParsedArgs::parse(
         args,
-        &["help", "stats", "adaptive-shape", "self", "check", "explain", "corpus", "no-rewrite"],
+        &[
+            "help",
+            "stats",
+            "adaptive-shape",
+            "self",
+            "check",
+            "explain",
+            "corpus",
+            "no-rewrite",
+            "no-shuffle",
+        ],
     ) {
         Ok(p) => p,
         Err(e) => {
@@ -152,6 +167,7 @@ struct SessionOpts {
     nodes: Option<usize>,
     adaptive_shape: bool,
     no_rewrite: bool,
+    no_shuffle: bool,
     timeout: Option<Duration>,
     fault_plan: Option<FaultPlan>,
 }
@@ -166,6 +182,7 @@ impl Default for SessionOpts {
             nodes: None,
             adaptive_shape: false,
             no_rewrite: false,
+            no_shuffle: false,
             timeout: None,
             fault_plan: None,
         }
@@ -191,6 +208,9 @@ fn session_with_data(opts: SessionOpts) -> anyhow::Result<Arc<Session>> {
     }
     if opts.no_rewrite {
         engine = engine.with_rewrite(false);
+    }
+    if opts.no_shuffle {
+        engine = engine.with_shuffle(false);
     }
     if let Some(f) = opts.fault_plan {
         engine = engine.with_fault_plan(f);
@@ -264,6 +284,7 @@ fn run_sql(args: &ParsedArgs) -> anyhow::Result<()> {
         nodes: (nodes > 0).then_some(nodes),
         adaptive_shape: args.flag("adaptive-shape"),
         no_rewrite: args.flag("no-rewrite"),
+        no_shuffle: args.flag("no-shuffle"),
         timeout: (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms)),
         fault_plan,
         ..SessionOpts::default()

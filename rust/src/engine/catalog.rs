@@ -36,6 +36,42 @@ impl Catalog {
             .insert(name.to_ascii_lowercase(), table);
     }
 
+    /// Append `rows` to an existing table (case-insensitive), then
+    /// recompute the table's statistics over the combined data — row
+    /// counts, NDV sketches, and histograms all refresh, so planner
+    /// estimates and shuffle partition sizing never run against stale
+    /// registration-time stats. The appended schema must match the
+    /// registered one field-for-field (name, case-insensitively, and
+    /// type). Returns the table's new total row count.
+    pub fn append(&self, name: &str, rows: RowSet) -> Result<usize> {
+        let mut tables = self.tables.write().unwrap();
+        let table = tables
+            .get_mut(&name.to_ascii_lowercase())
+            .ok_or_else(|| anyhow!("table {name:?} not found"))?;
+        if table.schema.fields.len() != rows.schema.fields.len() {
+            bail!(
+                "append to {name:?}: schema has {} columns, batch has {}",
+                table.schema.fields.len(),
+                rows.schema.fields.len()
+            );
+        }
+        for (have, got) in table.schema.fields.iter().zip(&rows.schema.fields) {
+            if !have.name.eq_ignore_ascii_case(&got.name) || have.data_type != got.data_type {
+                bail!(
+                    "append to {name:?}: column {:?} {:?} does not match registered {:?} {:?}",
+                    got.name,
+                    got.data_type,
+                    have.name,
+                    have.data_type
+                );
+            }
+        }
+        table.append(&rows)?;
+        let total = table.num_rows();
+        self.stats.record_table(name, table);
+        Ok(total)
+    }
+
     /// The per-table statistics store populated at registration and
     /// refined by observed per-query selectivities.
     pub fn stats(&self) -> &StatsStore {
@@ -224,6 +260,62 @@ mod tests {
         assert!(cat.get("missing").is_err());
         assert!(cat.drop_table("t1"));
         assert!(!cat.contains("t1"));
+    }
+
+    #[test]
+    fn append_extends_rows_and_refreshes_stats() {
+        let cat = Catalog::new();
+        let make = |vals: Vec<i64>| {
+            RowSet::new(
+                Schema::new(vec![Field::new("x", DataType::Int64)]),
+                vec![Column::from_i64(vals)],
+            )
+            .unwrap()
+        };
+        cat.register("t", make(vec![1, 2, 3]));
+        assert_eq!(cat.stats().table_rows("t"), Some(3));
+        assert_eq!(cat.stats().table("t").unwrap().column("x").unwrap().ndv, 3);
+        // Append refreshes row count, NDV, and min/max over ALL rows.
+        assert_eq!(cat.append("T", make(vec![3, 4, 5, 6])).unwrap(), 7);
+        assert_eq!(cat.get("t").unwrap().num_rows(), 7);
+        assert_eq!(cat.stats().table_rows("t"), Some(7));
+        let ts = cat.stats().table("t").unwrap();
+        assert_eq!(ts.column("x").unwrap().ndv, 6);
+        assert_eq!(ts.column("x").unwrap().max, Some(6.0));
+    }
+
+    #[test]
+    fn append_rejects_schema_mismatch_and_missing_table() {
+        let cat = Catalog::new();
+        let rs = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Int64)]),
+            vec![Column::from_i64(vec![1])],
+        )
+        .unwrap();
+        assert!(cat.append("nope", rs.clone()).is_err());
+        cat.register("t", rs);
+        let wrong_type = RowSet::new(
+            Schema::new(vec![Field::new("x", DataType::Float64)]),
+            vec![Column::from_f64(vec![1.0])],
+        )
+        .unwrap();
+        assert!(cat.append("t", wrong_type).is_err());
+        let wrong_width = RowSet::new(
+            Schema::new(vec![
+                Field::new("x", DataType::Int64),
+                Field::new("y", DataType::Int64),
+            ]),
+            vec![Column::from_i64(vec![1]), Column::from_i64(vec![2])],
+        )
+        .unwrap();
+        assert!(cat.append("t", wrong_width).is_err());
+        // Case-insensitive name match on columns is accepted.
+        let upper = RowSet::new(
+            Schema::new(vec![Field::new("X", DataType::Int64)]),
+            vec![Column::from_i64(vec![9])],
+        )
+        .unwrap();
+        assert_eq!(cat.append("t", upper).unwrap(), 2);
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //!
 //! Every engine toggle that used to be read ad hoc from its own
 //! environment variable — `SNOWPARK_PARALLELISM`, `SNOWPARK_NODES`,
-//! `SNOWPARK_FRAGMENTS`, `SNOWPARK_REWRITE`, `SNOWPARK_ADAPTIVE_SHAPE`,
-//! `SNOWPARK_ANALYZE`, `SNOWPARK_FAULT_PLAN` — now resolves **once**
+//! `SNOWPARK_FRAGMENTS`, `SNOWPARK_REWRITE`, `SNOWPARK_SHUFFLE`,
+//! `SNOWPARK_ADAPTIVE_SHAPE`, `SNOWPARK_ANALYZE`,
+//! `SNOWPARK_FAULT_PLAN` — now resolves **once**
 //! into an [`EngineConfig`]: [`EngineConfig::from_env`] reads the
 //! environment, `SessionBuilder` setters override that, and CLI flags
 //! override the builder (env < builder < CLI). The legacy free
@@ -39,6 +40,11 @@ pub struct EngineConfig {
     /// The cost-based logical plan rewriter (`SNOWPARK_REWRITE`,
     /// `run-sql --no-rewrite` disables).
     pub rewrite: bool,
+    /// Hash-partitioned shuffle finalize: pipeline breakers finalize
+    /// per-partition on owning nodes instead of on the leader
+    /// (`SNOWPARK_SHUFFLE`, `run-sql --no-shuffle` disables). Off pins
+    /// the leader-merge path, the differential baseline.
+    pub shuffle: bool,
     /// The §IV.C adaptive query-shape policy
     /// (`SNOWPARK_ADAPTIVE_SHAPE`, `SessionBuilder::adaptive_shape`,
     /// `run-sql --adaptive-shape`). `None` = on for sessions with a
@@ -61,6 +67,7 @@ impl Default for EngineConfig {
             nodes: None,
             fragments: true,
             rewrite: true,
+            shuffle: true,
             adaptive_shape: None,
             analyze: true,
             fault_plan: None,
@@ -109,6 +116,7 @@ impl EngineConfig {
             nodes: env_usize("SNOWPARK_NODES"),
             fragments: env_bool("SNOWPARK_FRAGMENTS").unwrap_or(true),
             rewrite: env_bool("SNOWPARK_REWRITE").unwrap_or(true),
+            shuffle: env_bool("SNOWPARK_SHUFFLE").unwrap_or(true),
             adaptive_shape: env_bool("SNOWPARK_ADAPTIVE_SHAPE"),
             analyze: std::env::var("SNOWPARK_ANALYZE").map_or(true, |v| v.trim() != "0"),
             fault_plan,
@@ -139,6 +147,12 @@ impl EngineConfig {
         self
     }
 
+    /// Override the hash-partitioned shuffle finalize.
+    pub fn with_shuffle(mut self, on: bool) -> Self {
+        self.shuffle = on;
+        self
+    }
+
     /// Override the adaptive query-shape policy.
     pub fn with_adaptive_shape(mut self, on: bool) -> Self {
         self.adaptive_shape = Some(on);
@@ -160,18 +174,20 @@ impl EngineConfig {
 
 impl fmt::Display for EngineConfig {
     /// The one-line `--stats` header, e.g.
-    /// `parallelism=auto nodes=4 fragments=on rewrite=on adaptive=auto
-    /// analyze=on fault-plan=none`.
+    /// `parallelism=auto nodes=4 fragments=on rewrite=on shuffle=on
+    /// adaptive=auto analyze=on fault-plan=none`.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         let opt = |v: Option<usize>| v.map_or("auto".to_string(), |n| n.to_string());
         let tog = |b: bool| if b { "on" } else { "off" };
         write!(
             f,
-            "parallelism={} nodes={} fragments={} rewrite={} adaptive={} analyze={} fault-plan={}",
+            "parallelism={} nodes={} fragments={} rewrite={} shuffle={} adaptive={} analyze={} \
+             fault-plan={}",
             opt(self.parallelism),
             opt(self.nodes),
             tog(self.fragments),
             tog(self.rewrite),
+            tog(self.shuffle),
             self.adaptive_shape.map_or("auto", tog),
             tog(self.analyze),
             if self.fault_plan.is_some() { "set" } else { "none" },
@@ -188,7 +204,7 @@ mod tests {
         let c = EngineConfig::default();
         assert_eq!(c.parallelism, None);
         assert_eq!(c.nodes, None);
-        assert!(c.fragments && c.rewrite && c.analyze);
+        assert!(c.fragments && c.rewrite && c.shuffle && c.analyze);
         assert_eq!(c.adaptive_shape, None);
         assert!(c.fault_plan.is_none());
     }
@@ -200,11 +216,12 @@ mod tests {
             .with_parallelism(2)
             .with_fragments(false)
             .with_rewrite(false)
+            .with_shuffle(false)
             .with_adaptive_shape(true)
             .with_analyze(false);
         assert_eq!(c.nodes, Some(4));
         assert_eq!(c.parallelism, Some(2));
-        assert!(!c.fragments && !c.rewrite && !c.analyze);
+        assert!(!c.fragments && !c.rewrite && !c.shuffle && !c.analyze);
         assert_eq!(c.adaptive_shape, Some(true));
         // A later layer (the CLI) wins over the earlier one.
         let c = c.with_nodes(8).with_rewrite(true);
@@ -217,7 +234,7 @@ mod tests {
         let c = EngineConfig::default().with_nodes(4);
         assert_eq!(
             c.to_string(),
-            "parallelism=auto nodes=4 fragments=on rewrite=on adaptive=auto \
+            "parallelism=auto nodes=4 fragments=on rewrite=on shuffle=on adaptive=auto \
              analyze=on fault-plan=none"
         );
     }

@@ -21,6 +21,14 @@
 //! - Asynchrony + receiver pacing come from the pool's bounded queues: a
 //!   sender never gets more than `queue_depth` batches ahead of a slow
 //!   process.
+//!
+//! The engine's *internal* exchange rides the same codec:
+//! [`ship_columns`] round-trips a node span (or, since PR 10, a shuffle
+//! partition's representative key rows — see
+//! `exec::dispatch_partitions`) through [`WireBatch`] and charges the
+//! transport with the **actual encoded byte count**, so every wire-byte
+//! statistic and A8/A15 ablation row reflects what a real network hop
+//! would carry.
 
 use std::sync::mpsc;
 

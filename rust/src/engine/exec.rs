@@ -153,6 +153,16 @@ pub fn default_rewrite() -> bool {
     super::config::EngineConfig::from_env().rewrite
 }
 
+/// The default for the hash-partitioned shuffle finalize: enabled,
+/// unless the `SNOWPARK_SHUFFLE` environment variable is set to `0`,
+/// `false`, or `off` (the leader-merge baseline — the shuffle is
+/// byte-identical, so disabling only changes where breaker work
+/// happens, never results). Deprecation shim over
+/// [`super::config::EngineConfig::from_env`].
+pub fn default_shuffle() -> bool {
+    super::config::EngineConfig::from_env().shuffle
+}
+
 /// Everything an operator needs at execution time.
 #[derive(Clone)]
 pub struct ExecContext {
@@ -224,6 +234,15 @@ pub struct ExecContext {
     /// ablation baseline. Defaults to [`default_rewrite`]
     /// (`SNOWPARK_REWRITE=0` disables).
     pub rewrite: bool,
+    /// Finalize pipeline breakers per hash partition on owning nodes
+    /// (the default): grouped-aggregate states redistribute by key hash
+    /// and merge on their partition owners, large join build sides
+    /// build partitioned across nodes instead of leader-built
+    /// broadcast, and the remaining global merges climb a binary node
+    /// tree. `false` pins the leader-merge finalize — the differential
+    /// baseline and the `partitioned_shuffle` (A15) ablation baseline.
+    /// Defaults to [`default_shuffle`] (`SNOWPARK_SHUFFLE=0` disables).
+    pub shuffle: bool,
 }
 
 impl ExecContext {
@@ -244,6 +263,7 @@ impl ExecContext {
             cancel: None,
             fault_retry: true,
             rewrite: default_rewrite(),
+            shuffle: default_shuffle(),
         }
     }
 
@@ -316,6 +336,14 @@ impl ExecContext {
     /// structural lowering (the `planner_rewrites` ablation baseline).
     pub fn with_rewrite(mut self, on: bool) -> Self {
         self.rewrite = on;
+        self
+    }
+
+    /// Toggle the hash-partitioned shuffle finalize. `false` pins the
+    /// leader-merge breaker finalize (the `partitioned_shuffle`
+    /// ablation baseline and the shuffle differential baseline).
+    pub fn with_shuffle(mut self, on: bool) -> Self {
+        self.shuffle = on;
         self
     }
 
@@ -608,6 +636,178 @@ where
     let mut out = Vec::with_capacity(n_morsels);
     for node_out in node_results {
         out.extend(node_out?);
+    }
+    Ok(out)
+}
+
+/// One hash partition's shipment under the shuffled finalize: a real
+/// wire payload (the partition's representative key columns, encoded
+/// through the columnar exchange when the owner is remote), a modeled
+/// byte count for the partial states that travel alongside (the same
+/// fixed-width 9-bytes-per-cell model [`frag_op_ship_estimate`] uses
+/// for never-materialized intermediates), and the opaque state the
+/// owner's finalize consumes.
+struct PartitionShipment<L> {
+    /// Field metadata of the wire payload columns.
+    fields: Vec<Field>,
+    /// The wire payload: per-partition key columns, encoded for real.
+    cols: Vec<Column>,
+    /// Modeled native-state bytes charged to the transport alongside.
+    extra_bytes: u64,
+    /// What the owner's `work` consumes (merge inputs, accumulators).
+    state: L,
+}
+
+/// Dispatch hash partitions across the warehouse: partition `p` is
+/// owned by node `p` (the partition count never exceeds `nodes`, so the
+/// leader always owns partition 0 and ships nothing for it), each
+/// remote owner's shipment is charged through the exchange, and
+/// `work(p, state)` finalizes the partition.
+///
+/// Fault discipline mirrors [`dispatch_morsels`]: injected faults
+/// (ship/slow/eval/panic) strike inside the per-attempt gauntlet —
+/// *before* the partition's state is consumed — so a failed attempt
+/// retries with capped backoff, blacklists the owner on its
+/// `MAX_NODE_FAILURES`th failure, and reroutes the partition to a
+/// surviving node (degrading to the leader). `work` is a pure function
+/// of the partition (never of the target node), so a rerouted
+/// partition finalizes bit-identically wherever it lands, and it runs
+/// exactly once per partition — consuming state is safe.
+fn dispatch_partitions<L, T, F>(
+    ctx: &ExecContext,
+    nodes: usize,
+    shipments: Vec<PartitionShipment<L>>,
+    work: F,
+) -> Result<Vec<T>>
+where
+    L: Send,
+    T: Send,
+    F: Fn(usize, L) -> Result<T> + Sync,
+{
+    let cancel = ctx.cancel.as_ref();
+    let results: Vec<Result<T>> = std::thread::scope(|s| {
+        let work = &work;
+        let handles: Vec<_> = shipments
+            .into_iter()
+            .enumerate()
+            .map(|(part, shipment)| {
+                s.spawn(move || -> Result<T> {
+                    let fault = ctx.fault.as_deref();
+                    let mut target = part.min(nodes.saturating_sub(1));
+                    let mut tries = 0u32;
+                    // The retry loop wraps only the shipment gauntlet;
+                    // every injected fault fires here, never inside
+                    // `work`, so the consumable state survives retries.
+                    let (target, wire_bytes, gauntlet_ns) = loop {
+                        if let Some(scope) = fault {
+                            if target != 0 && scope.is_blacklisted(target) {
+                                target = scope.reroute(nodes, target);
+                            }
+                        }
+                        let attempt = |target: usize| -> Result<u64> {
+                            if let Some(scope) = fault {
+                                // A ship fault strikes before encode: the
+                                // partition never leaves the leader, no
+                                // bytes charged.
+                                scope.check_ship(target)?;
+                            }
+                            let wire = if target == 0 || shipment.cols.is_empty() {
+                                0
+                            } else {
+                                let refs: Vec<&Column> = shipment.cols.iter().collect();
+                                let n = refs.first().map_or(0, |c| c.len());
+                                // Encode → charge → decode, like a span
+                                // shipment; the decode is discarded (the
+                                // keys round-trip exactly and the leader
+                                // already holds them), keeping the wire
+                                // charge honest without duplicating rows.
+                                let (_rs, bytes) = super::exchange::ship_columns(
+                                    &shipment.fields,
+                                    &refs,
+                                    0,
+                                    n,
+                                    ctx.transport,
+                                )?;
+                                ctx.transport.charge_cpu(shipment.extra_bytes);
+                                bytes + shipment.extra_bytes
+                            };
+                            if let Some(scope) = fault {
+                                if let Some(delay) = scope.slow_delay(target) {
+                                    scope.sleep_cancellable(delay, cancel)?;
+                                }
+                                scope.check_eval(target)?;
+                            }
+                            Ok(wire)
+                        };
+                        let t0 = Instant::now();
+                        let result = if fault.is_some() && target != 0 {
+                            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                attempt(target)
+                            })) {
+                                Ok(r) => r,
+                                Err(_) => {
+                                    Err(InjectedFault { node: target, kind: FaultKind::Panic }
+                                        .into())
+                                }
+                            }
+                        } else {
+                            attempt(target)
+                        };
+                        match result {
+                            Ok(wire) => break (target, wire, t0.elapsed().as_nanos() as u64),
+                            Err(e)
+                                if target != 0
+                                    && ctx.fault_retry
+                                    && fault.is_some()
+                                    && is_retryable(&e) =>
+                            {
+                                let scope = fault.unwrap();
+                                tries += 1;
+                                ctx.tally.record(
+                                    target,
+                                    NodeCounters { retries: 1, ..Default::default() },
+                                );
+                                if scope.note_failure(target) {
+                                    ctx.tally.record(
+                                        target,
+                                        NodeCounters { blacklisted: 1, ..Default::default() },
+                                    );
+                                }
+                                scope.backoff(tries, cancel)?;
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    };
+                    let t1 = Instant::now();
+                    let out = work(part, shipment.state)?;
+                    // Exclude the modeled transport charge from busy
+                    // time, mirroring the span dispatch.
+                    let charged = if wire_bytes > 0 {
+                        ctx.transport.cost(wire_bytes).as_nanos() as u64
+                    } else {
+                        0
+                    };
+                    ctx.tally.record(
+                        target,
+                        NodeCounters {
+                            wire_bytes,
+                            busy_ns: (gauntlet_ns + t1.elapsed().as_nanos() as u64)
+                                .saturating_sub(charged),
+                            ..Default::default()
+                        },
+                    );
+                    Ok(out)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
+    });
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        out.push(r?);
     }
     Ok(out)
 }
@@ -1540,12 +1740,147 @@ struct FragAggPart {
     survivors: usize,
 }
 
+/// Fold the per-morsel partials of a *global* (no GROUP BY) aggregate.
+/// When the shuffle is on and every call's partial merge is exactly
+/// associative ([`PartialAgg::tree_mergeable`]), the fold climbs a
+/// binary node tree: each node first folds its own contiguous morsels
+/// (busy charged to that node), then pairs of node accumulators merge
+/// level by level, the sender's fixed-width state bytes charged as
+/// wire. Order-sensitive partials (float sums, averages, UDAF states)
+/// keep the leader's strict morsel-order fold — re-associating those is
+/// only bit-stable for exactly representable data, and byte-identity to
+/// the leader-merge baseline is non-negotiable. Returns the one-group
+/// merged partials plus whether the tree engaged.
+fn merge_scalar_partials(
+    parts: Vec<FragAggPart>,
+    protos: &[PartialAgg],
+    aggs: &[AggCall],
+    nodes: usize,
+    ctx: &ExecContext,
+) -> Result<(Vec<PartialAgg>, bool)> {
+    let n_morsels = parts.len();
+    let tree = ctx.shuffle
+        && nodes > 1
+        && n_morsels >= 2
+        && (0..aggs.len()).all(|ai| {
+            let call_partials: Vec<&PartialAgg> =
+                parts.iter().map(|p| &p.partials[ai]).collect();
+            PartialAgg::tree_mergeable(&call_partials)
+        });
+    if !tree {
+        let t0 = Instant::now();
+        let mut merged: Vec<PartialAgg> = aggs
+            .iter()
+            .enumerate()
+            .map(|(ai, call)| PartialAgg::empty_like(&protos[ai], call, 1, ctx))
+            .collect::<Result<_>>()?;
+        for p in parts {
+            for (global, local) in merged.iter_mut().zip(p.partials) {
+                global.merge(local, &[0], &[])?;
+            }
+        }
+        ctx.tally.record(
+            0,
+            NodeCounters { busy_ns: t0.elapsed().as_nanos() as u64, ..Default::default() },
+        );
+        return Ok((merged, false));
+    }
+    // Level 0: each node folds its own span's morsel partials in morsel
+    // order on its own thread (same node↔morsel assignment as the span
+    // dispatch that produced them).
+    let spans = morsel_ranges(n_morsels, nodes);
+    let mut parts_iter = parts.into_iter();
+    let node_chunks: Vec<Vec<FragAggPart>> =
+        spans.iter().map(|&(_, mlen)| parts_iter.by_ref().take(mlen).collect()).collect();
+    let node_accs: Vec<Result<Vec<PartialAgg>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = node_chunks
+            .into_iter()
+            .enumerate()
+            .map(|(node, chunk)| {
+                s.spawn(move || -> Result<Vec<PartialAgg>> {
+                    let t0 = Instant::now();
+                    let mut acc: Vec<PartialAgg> = aggs
+                        .iter()
+                        .enumerate()
+                        .map(|(ai, call)| PartialAgg::empty_like(&protos[ai], call, 1, ctx))
+                        .collect::<Result<_>>()?;
+                    for p in chunk {
+                        for (a, l) in acc.iter_mut().zip(p.partials) {
+                            a.merge(l, &[0], &[])?;
+                        }
+                    }
+                    ctx.tally.record(
+                        node,
+                        NodeCounters {
+                            busy_ns: t0.elapsed().as_nanos() as u64,
+                            ..Default::default()
+                        },
+                    );
+                    Ok(acc)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
+    });
+    let mut rung: Vec<Option<Vec<PartialAgg>>> = Vec::with_capacity(nodes);
+    for a in node_accs {
+        rung.push(Some(a?));
+    }
+    // Climb: node i absorbs node i+step's accumulator (associativity is
+    // proven above, so any grouping folds to the same bits); the sender
+    // ships one fixed-width state row per call.
+    let mut step = 1;
+    while step < nodes {
+        let mut i = 0;
+        while i + step < nodes {
+            let other = rung[i + step].take().expect("tree operand");
+            let into = rung[i].as_mut().expect("tree accumulator");
+            let t0 = Instant::now();
+            for (a, l) in into.iter_mut().zip(other) {
+                a.merge(l, &[0], &[])?;
+            }
+            let bytes = 9 * aggs.len() as u64;
+            ctx.transport.charge_cpu(bytes);
+            ctx.tally
+                .record(i + step, NodeCounters { wire_bytes: bytes, ..Default::default() });
+            ctx.tally.record(
+                i,
+                NodeCounters { busy_ns: t0.elapsed().as_nanos() as u64, ..Default::default() },
+            );
+            i += 2 * step;
+        }
+        step *= 2;
+    }
+    Ok((rung[0].take().expect("tree root"), true))
+}
+
 /// Aggregate-capped fragment: every morsel builds node-local partials
 /// over its post-stage survivors; the leader re-keys the concatenated
 /// representatives into global dense ids — the morsel-order walk
-/// reproduces the sequential first-seen group order — and folds the
-/// partials. Returns the output, per-stage row totals, and the rows
-/// that entered the aggregate.
+/// reproduces the sequential first-seen group order. The fold of the
+/// partials then goes one of three ways:
+///
+/// - **Shuffled finalize** (the default at `nodes > 1` with
+///   `ExecContext::shuffle` on): each global group is routed to an
+///   owning partition by its key hash, every morsel's partials are
+///   *split* by owner (states move, never clone), and each owner node
+///   folds its partitions' states in morsel order via
+///   [`dispatch_partitions`] — the per-group fold sequence is exactly
+///   the leader's, so the result is bit-identical, but the merge work
+///   and the group states distribute across the warehouse. The leader
+///   only routes, stitches the disjoint per-partition states back, and
+///   runs the global `finish` (whose column-wide dtype decisions must
+///   see every group).
+/// - **Tree merge** for global (no GROUP BY) aggregates with exactly
+///   associative partials ([`merge_scalar_partials`]).
+/// - **Leader merge** otherwise — and always when `shuffle` is off:
+///   the differential baseline, byte-identical by construction.
+///
+/// Returns the output, per-stage row totals, the rows that entered the
+/// aggregate, and whether a shuffled/tree finalize engaged.
 #[allow(clippy::too_many_arguments)]
 fn frag_aggregate(
     frag: &Fragment,
@@ -1555,7 +1890,7 @@ fn frag_aggregate(
     ctx: &ExecContext,
     group: &[(Expr, String)],
     aggs: &[AggCall],
-) -> Result<(RowSet, Vec<u64>, u64)> {
+) -> Result<(RowSet, Vec<u64>, u64, bool)> {
     let parts: Vec<FragAggPart> = dispatch_morsels(
         ctx,
         &ship.schema.fields,
@@ -1606,49 +1941,207 @@ fn frag_aggregate(
         },
     )?;
 
-    // Leader merge: global dense group ids over the concatenated morsel
-    // representatives. Decoded key values round-trip exactly, so a
-    // fresh encoding groups identically to the legacy whole-input pass.
     let n_morsels = parts.len();
-    let (n_groups, maps, rep_out_cols): (usize, Vec<Vec<u32>>, Vec<Column>) =
-        if group.is_empty() {
-            (1, vec![vec![0u32]; n_morsels], Vec::new())
-        } else {
-            let mut all_reps: Vec<Column> = parts[0].reps.clone();
-            for p in &parts[1..] {
-                for (a, b) in all_reps.iter_mut().zip(&p.reps) {
-                    a.append(b)?;
-                }
-            }
-            let mut dict = KeyDict::new();
-            let keys = EncodedKeys::encode(&all_reps, KeyMode::Group, &mut dict);
-            let merged = assign_group_ids(&keys);
-            let mut maps = Vec::with_capacity(n_morsels);
-            let mut at = 0;
-            for p in &parts {
-                let n_local = p.reps.first().map_or(0, Column::len);
-                maps.push(merged.ids[at..at + n_local].to_vec());
-                at += n_local;
-            }
-            let out_cols: Vec<Column> = all_reps.iter().map(|c| c.take(&merged.rep_rows)).collect();
-            (merged.n_groups(), maps, out_cols)
-        };
-    let mut merged_partials: Vec<PartialAgg> = aggs
-        .iter()
-        .enumerate()
-        .map(|(ai, call)| PartialAgg::empty_like(&parts[0].partials[ai], call, n_groups, ctx))
-        .collect::<Result<_>>()?;
+    let nodes = ctx.nodes.clamp(1, n_morsels.max(1));
     let mut stage_totals = vec![0u64; frag.stages.len()];
     let mut survivors = 0u64;
-    for (p, map) in parts.into_iter().zip(&maps) {
+    for p in &parts {
         for (i, r) in p.stage_rows.iter().enumerate() {
             stage_totals[i] += *r as u64;
         }
         survivors += p.survivors as u64;
-        for (global, local) in merged_partials.iter_mut().zip(p.partials) {
-            global.merge(local, map, &[])?;
+    }
+    // Zero-group prototypes pin each call's partial *variant* through
+    // the consuming split/merge passes below — the raw morsel partials
+    // are moved away before the final accumulators are built.
+    let protos: Vec<PartialAgg> = aggs
+        .iter()
+        .enumerate()
+        .map(|(ai, call)| PartialAgg::empty_like(&parts[0].partials[ai], call, 0, ctx))
+        .collect::<Result<_>>()?;
+
+    if group.is_empty() {
+        // Global aggregation: one group; merge maps are all `[0]`.
+        let (merged_partials, engaged) =
+            merge_scalar_partials(parts, &protos, aggs, nodes, ctx)?;
+        let mut fields = Vec::with_capacity(aggs.len());
+        let mut columns = Vec::with_capacity(aggs.len());
+        for (call, partial) in aggs.iter().zip(merged_partials) {
+            // Value-carrying partials only: `finish` never touches the
+            // (absent) argument columns here.
+            let out = partial.finish(call, &[], 1, ctx)?;
+            fields.push(Field::new(call.out_name.clone(), out.data_type()));
+            columns.push(out);
+        }
+        let out = RowSet::new(Schema::new(fields), columns)?;
+        return Ok((out, stage_totals, survivors, engaged));
+    }
+
+    // Grouped: the leader re-keys the concatenated morsel
+    // representatives into global dense ids — the morsel-order walk
+    // reproduces the sequential first-seen group order, and decoded key
+    // values round-trip exactly, so a fresh encoding groups identically
+    // to the legacy whole-input pass.
+    let t_keying = Instant::now();
+    let mut all_reps: Vec<Column> = parts[0].reps.clone();
+    for p in &parts[1..] {
+        for (a, b) in all_reps.iter_mut().zip(&p.reps) {
+            a.append(b)?;
         }
     }
+    let mut dict = KeyDict::new();
+    let keys = EncodedKeys::encode(&all_reps, KeyMode::Group, &mut dict);
+    let merged = assign_group_ids(&keys);
+    let n_groups = merged.n_groups();
+    let mut maps = Vec::with_capacity(n_morsels);
+    let mut at = 0;
+    for p in &parts {
+        let n_local = p.reps.first().map_or(0, Column::len);
+        maps.push(merged.ids[at..at + n_local].to_vec());
+        at += n_local;
+    }
+    let rep_out_cols: Vec<Column> = all_reps.iter().map(|c| c.take(&merged.rep_rows)).collect();
+
+    let shuffled = ctx.shuffle && nodes > 1 && n_groups >= 2;
+    let merged_partials: Vec<PartialAgg> = if shuffled {
+        // --- Hash-partitioned shuffle finalize ---
+        // Route every global group to its owning partition by key hash
+        // (partition p lives on node p), reusing the codec's
+        // precomputed hashes — the same routing the partitioned join
+        // build uses. Group order *within* a partition stays ascending
+        // global id, so first-seen order survives repartitioning.
+        let part_of: Vec<u32> = (0..n_groups)
+            .map(|g| super::hash::join_partition(keys.hash(merged.rep_rows[g]), nodes) as u32)
+            .collect();
+        let mut owned: Vec<Vec<u32>> = vec![Vec::new(); nodes];
+        let mut slot_of: Vec<u32> = vec![0; n_groups];
+        for (g, &p) in part_of.iter().enumerate() {
+            slot_of[g] = owned[p as usize].len() as u32;
+            owned[p as usize].push(g as u32);
+        }
+        // Split every morsel's partials by owning partition (states
+        // move, never clone — UDAF boxes included) and translate each
+        // morsel's merge map into per-partition slot maps. Each owner
+        // folds its sub-partials in the same ascending morsel order the
+        // leader would, so every group sees the exact same fold
+        // sequence and the result is bit-identical.
+        let mut sub: Vec<Vec<(Vec<PartialAgg>, Vec<u32>)>> =
+            (0..nodes).map(|_| Vec::with_capacity(n_morsels)).collect();
+        let mut routed: Vec<u64> = vec![0; nodes];
+        for (p, map) in parts.into_iter().zip(&maps) {
+            let assign: Vec<u32> = map.iter().map(|&g| part_of[g as usize]).collect();
+            let mut submaps: Vec<Vec<u32>> = vec![Vec::new(); nodes];
+            for &g in map {
+                submaps[part_of[g as usize] as usize].push(slot_of[g as usize]);
+            }
+            let mut by_part: Vec<Vec<PartialAgg>> =
+                (0..nodes).map(|_| Vec::with_capacity(aggs.len())).collect();
+            for pa in p.partials {
+                for (part, piece) in pa.split(&assign, nodes)?.into_iter().enumerate() {
+                    by_part[part].push(piece);
+                }
+            }
+            for (part, (pieces, submap)) in by_part.into_iter().zip(submaps).enumerate() {
+                routed[part] += submap.len() as u64;
+                sub[part].push((pieces, submap));
+            }
+        }
+        // One shipment per partition: the owned groups' representative
+        // key rows travel for real through the exchange codec; the
+        // split states ride at the fixed-width 9-bytes-per-cell model
+        // (same model `frag_op_ship_estimate` uses).
+        let shipments: Vec<PartitionShipment<Vec<(Vec<PartialAgg>, Vec<u32>)>>> = sub
+            .into_iter()
+            .enumerate()
+            .map(|(part, state)| {
+                let rows: Vec<usize> =
+                    owned[part].iter().map(|&g| merged.rep_rows[g as usize]).collect();
+                let (fields, cols) = if rows.is_empty() {
+                    (Vec::new(), Vec::new())
+                } else {
+                    let cols: Vec<Column> =
+                        all_reps.iter().map(|c| c.take(&rows)).collect();
+                    let fields: Vec<Field> = cols
+                        .iter()
+                        .enumerate()
+                        .map(|(i, c)| Field::new(format!("__g{i}"), c.data_type()))
+                        .collect();
+                    (fields, cols)
+                };
+                PartitionShipment {
+                    fields,
+                    cols,
+                    extra_bytes: 9 * aggs.len() as u64 * routed[part],
+                    state,
+                }
+            })
+            .collect();
+        // Leader-side keying/routing/splitting is leader work.
+        ctx.tally.record(
+            0,
+            NodeCounters { busy_ns: t_keying.elapsed().as_nanos() as u64, ..Default::default() },
+        );
+        let owned_ref = &owned;
+        let protos_ref = &protos;
+        let accs: Vec<Vec<PartialAgg>> =
+            dispatch_partitions(ctx, nodes, shipments, |part, state| {
+                let n_owned = owned_ref[part].len();
+                let mut accs: Vec<PartialAgg> = aggs
+                    .iter()
+                    .enumerate()
+                    .map(|(ai, call)| {
+                        PartialAgg::empty_like(&protos_ref[ai], call, n_owned, ctx)
+                    })
+                    .collect::<Result<_>>()?;
+                for (pieces, submap) in state {
+                    for (acc, piece) in accs.iter_mut().zip(pieces) {
+                        acc.merge(piece, &submap, &[])?;
+                    }
+                }
+                Ok(accs)
+            })?;
+        // Stitch: every group lives in exactly one partition, so the
+        // scatter back into global slots never re-associates any fold —
+        // it only relabels. The global `finish` still runs once on the
+        // leader: its column-wide dtype decisions (sum overflow
+        // widening, all-empty typing) must see every group.
+        let t_stitch = Instant::now();
+        let mut merged_partials: Vec<PartialAgg> = aggs
+            .iter()
+            .enumerate()
+            .map(|(ai, call)| PartialAgg::empty_like(&protos[ai], call, n_groups, ctx))
+            .collect::<Result<_>>()?;
+        for (part, acc) in accs.into_iter().enumerate() {
+            for (global, a) in merged_partials.iter_mut().zip(acc) {
+                global.merge(a, &owned[part], &[])?;
+            }
+        }
+        ctx.tally.record(
+            0,
+            NodeCounters { busy_ns: t_stitch.elapsed().as_nanos() as u64, ..Default::default() },
+        );
+        merged_partials
+    } else {
+        // Leader merge — the `SNOWPARK_SHUFFLE=0` differential
+        // baseline: fold every morsel's partials in morsel order on
+        // node 0 (busy charged there so A15 can watch it shrink).
+        let mut merged_partials: Vec<PartialAgg> = aggs
+            .iter()
+            .enumerate()
+            .map(|(ai, call)| PartialAgg::empty_like(&protos[ai], call, n_groups, ctx))
+            .collect::<Result<_>>()?;
+        for (p, map) in parts.into_iter().zip(&maps) {
+            for (global, local) in merged_partials.iter_mut().zip(p.partials) {
+                global.merge(local, map, &[])?;
+            }
+        }
+        ctx.tally.record(
+            0,
+            NodeCounters { busy_ns: t_keying.elapsed().as_nanos() as u64, ..Default::default() },
+        );
+        merged_partials
+    };
+
     let mut fields = Vec::with_capacity(group.len() + aggs.len());
     let mut columns = Vec::with_capacity(group.len() + aggs.len());
     for ((_, name), col) in group.iter().zip(rep_out_cols) {
@@ -1663,7 +2156,7 @@ fn frag_aggregate(
         columns.push(out);
     }
     let out = RowSet::new(Schema::new(fields), columns)?;
-    Ok((out, stage_totals, survivors))
+    Ok((out, stage_totals, survivors, shuffled))
 }
 
 /// One morsel's contribution to a sort-capped fragment: its post-stage
@@ -1680,11 +2173,16 @@ struct FragSortSeg {
 }
 
 /// Sort-capped fragment: per-morsel run generation over the post-stage
-/// survivors, then the leader's k-way merge under the same
-/// index-tiebroken total order (strict, so the merged order is the
-/// unique globally sorted order — identical to the legacy sort).
-/// Returns the output, per-stage row totals, and the rows that entered
-/// the sort.
+/// survivors, then the run merge under the same index-tiebroken total
+/// order (strict, so the merged order is the unique globally sorted
+/// order — identical to the legacy sort). With the shuffle on at
+/// `nodes > 1` the merge climbs a binary node tree — each node first
+/// k-way-merges its own runs, then pairs of node runs merge level by
+/// level, the sender charged modeled wire — instead of fanning every
+/// run into the leader; `limit` passes through every level because
+/// top-k distributes over merge under a strict total order. Returns the
+/// output, per-stage row totals, the rows that entered the sort, and
+/// whether the tree merge engaged.
 #[allow(clippy::too_many_arguments)]
 fn frag_sort(
     frag: &Fragment,
@@ -1694,7 +2192,7 @@ fn frag_sort(
     ctx: &ExecContext,
     keys: &[OrderKey],
     limit: Option<usize>,
-) -> Result<(RowSet, Vec<u64>, u64)> {
+) -> Result<(RowSet, Vec<u64>, u64, bool)> {
     let segs: Vec<FragSortSeg> = dispatch_morsels(
         ctx,
         &ship.schema.fields,
@@ -1750,8 +2248,88 @@ fn frag_sort(
     let cmp = |a: usize, b: usize| {
         cmp_decorated(&dk, a, b).then_with(|| gidx_all[a].cmp(&gidx_all[b]))
     };
-    let order = kway_merge(runs, limit, cmp);
-    Ok((all_rows.take(&order), stage_totals, survivors))
+    let nodes = ctx.nodes.clamp(1, runs.len().max(1));
+    let treed = ctx.shuffle && nodes > 1 && runs.len() >= 2;
+    let order = if treed {
+        // --- Tree-structured run merge ---
+        // Level 0: each node k-way-merges its *own* span's runs (the
+        // same node↔morsel assignment the dispatch used); the surviving
+        // per-node runs then climb a binary tree — node i absorbs node
+        // i+step's run, the sender charged modeled wire for the rows it
+        // ships. The comparator is a strict total order (global-index
+        // tiebreak), so any merge tree yields the unique sorted order,
+        // and each intermediate's top-`limit` keeps a superset of the
+        // global top-`limit` — the root is byte-identical to the flat
+        // leader merge.
+        let spans = morsel_ranges(runs.len(), nodes);
+        let mut run_iter = runs.into_iter();
+        let node_runs: Vec<Vec<Vec<usize>>> =
+            spans.iter().map(|&(_, mlen)| run_iter.by_ref().take(mlen).collect()).collect();
+        let cmp_ref = &cmp;
+        let level0: Vec<Vec<usize>> = std::thread::scope(|s| {
+            let handles: Vec<_> = node_runs
+                .into_iter()
+                .enumerate()
+                .map(|(node, nruns)| {
+                    s.spawn(move || {
+                        let t0 = Instant::now();
+                        let merged = kway_merge(nruns, limit, |a, b| cmp_ref(a, b));
+                        ctx.tally.record(
+                            node,
+                            NodeCounters {
+                                busy_ns: t0.elapsed().as_nanos() as u64,
+                                ..Default::default()
+                            },
+                        );
+                        merged
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+                .collect()
+        });
+        // Rows + evaluated key columns + the tiebreak index travel.
+        let row_width = (all_rows.num_columns() + all_keys.len() + 1) as u64;
+        let mut rung: Vec<Option<Vec<usize>>> = level0.into_iter().map(Some).collect();
+        let mut step = 1;
+        while step < nodes {
+            let mut i = 0;
+            while i + step < nodes {
+                let other = rung[i + step].take().expect("tree operand");
+                let bytes = 9 * row_width * other.len() as u64;
+                ctx.transport.charge_cpu(bytes);
+                ctx.tally
+                    .record(i + step, NodeCounters { wire_bytes: bytes, ..Default::default() });
+                let mine = rung[i].take().expect("tree accumulator");
+                let t0 = Instant::now();
+                let merged = kway_merge(vec![mine, other], limit, |a, b| cmp_ref(a, b));
+                ctx.tally.record(
+                    i,
+                    NodeCounters {
+                        busy_ns: t0.elapsed().as_nanos() as u64,
+                        ..Default::default()
+                    },
+                );
+                rung[i] = Some(merged);
+                i += 2 * step;
+            }
+            step *= 2;
+        }
+        rung[0].take().expect("tree root")
+    } else {
+        // Flat leader merge — the differential baseline (busy charged
+        // to node 0 so A15 can watch the leader share shrink).
+        let t0 = Instant::now();
+        let order = kway_merge(runs, limit, |a, b| cmp(a, b));
+        ctx.tally.record(
+            0,
+            NodeCounters { busy_ns: t0.elapsed().as_nanos() as u64, ..Default::default() },
+        );
+        order
+    };
+    Ok((all_rows.take(&order), stage_totals, survivors, treed))
 }
 
 /// ≈ wire bytes the operator-at-a-time dispatch would ship for this
@@ -1978,22 +2556,74 @@ fn exec_fragment(
     ctx: &ExecContext,
     stats: &mut QueryStats,
 ) -> Result<Option<RowSet>> {
-    let frag = match Fragment::extract(plan, &ctx.udfs) {
+    let mut frag = match Fragment::extract(plan, &ctx.udfs) {
         Some(f) => f,
         None => return Ok(None),
     };
-    let rows = exec(frag.source, ctx, stats)?;
+    // Predicate shipping: at multi-node shapes with the shuffle on, an
+    // embedded scan predicate travels WITH the fragment to the remote
+    // spans (prepended as the fragment's first filter stage) instead of
+    // being materialized on the leader first — the leader stops paying
+    // the whole table's filter CPU. Byte-identity holds because every
+    // breaker is already morsel-layout-independent; the only change is
+    // where the (deterministic) mask is computed.
+    let shipped_pred: Option<(&str, &Expr)> = match frag.source {
+        PhysicalPlan::Scan { table, predicate: Some(pred), .. }
+            if ctx.shuffle
+                && ctx.nodes > 1
+                && morsel_splittable(pred, &ctx.udfs)
+                && !has_vectorized_udf(pred, &ctx.udfs) =>
+        {
+            Some((table.as_str(), pred))
+        }
+        _ => None,
+    };
+    let rows = if let Some((_, pred)) = shipped_pred {
+        let PhysicalPlan::Scan { table, alias, live, .. } = frag.source else {
+            unreachable!("shipped_pred only matches a scan source");
+        };
+        let bare = PhysicalPlan::Scan {
+            table: table.clone(),
+            alias: alias.clone(),
+            predicate: None,
+            live: live.clone(),
+        };
+        frag = frag.with_prepended_filter(pred);
+        exec(&bare, ctx, stats)?
+    } else {
+        exec(frag.source, ctx, stats)?
+    };
     let plan_parts = (frag_ship_plan(&frag, &rows.schema), parallel_ranges(rows.num_rows(), ctx));
     let (ship, ranges) = match plan_parts {
         (Some(s), Some(r)) => (s, r),
-        _ => return exec_fragment_fallback(&frag, rows, ctx, stats).map(Some),
+        _ => {
+            // Undo the shipped predicate: evaluate it leader-side
+            // exactly like the scan arm does (single node, no fault
+            // injection — the mask is deterministic either way), then
+            // run the original fragment over the survivors.
+            let (frag, rows) = if let Some((table, pred)) = shipped_pred {
+                let t0 = Instant::now();
+                let before = ctx.tally.totals();
+                let local =
+                    ExecContext { nodes: 1, fragments: false, fault: None, ..ctx.clone() };
+                let n = rows.num_rows() as u64;
+                let mask = eval_pred(pred, &rows, &local)?;
+                let out = rows.filter(&mask);
+                ctx.catalog.stats().observe(table, pred, n, out.num_rows() as u64);
+                stats.filter.record_op(n, out.num_rows() as u64, 1, before, ctx, t0);
+                (frag.without_prepended_filter(), out)
+            } else {
+                (frag, rows)
+            };
+            return exec_fragment_fallback(&frag, rows, ctx, stats).map(Some);
+        }
     };
     let t0 = Instant::now();
     let before = ctx.tally.totals();
     let threads = parallel_threads(rows.num_rows(), ctx) as u64;
     let rows_in = rows.num_rows() as u64;
     let cols: Vec<&Column> = ship.needed.iter().map(|&i| rows.column(i)).collect();
-    let ops = frag.op_names();
+    let mut ops = frag.op_names();
     let (out, stage_totals) = match &frag.cap {
         FragCap::Chain => {
             let (out, stage_totals) = frag_chain(&frag, &ship, &cols, &ranges, ctx)?;
@@ -2006,20 +2636,32 @@ fn exec_fragment(
             (out, stage_totals)
         }
         FragCap::Aggregate { group, aggs } => {
-            let (out, stage_totals, cap_in) =
+            let (out, stage_totals, cap_in, shuffled) =
                 frag_aggregate(&frag, &ship, &cols, &ranges, ctx, group, aggs)?;
+            if shuffled {
+                ops.push("shuffle");
+            }
             record_stage_stats(stats, &frag.stages, rows_in, &stage_totals);
             stats.aggregate.record_op(cap_in, out.num_rows() as u64, threads, before, ctx, t0);
             (out, stage_totals)
         }
         FragCap::Sort { keys, limit, .. } => {
-            let (out, stage_totals, cap_in) =
+            let (out, stage_totals, cap_in, shuffled) =
                 frag_sort(&frag, &ship, &cols, &ranges, ctx, keys, *limit)?;
+            if shuffled {
+                ops.push("shuffle");
+            }
             record_stage_stats(stats, &frag.stages, rows_in, &stage_totals);
             stats.sort.record_op(cap_in, out.num_rows() as u64, threads, before, ctx, t0);
             (out, stage_totals)
         }
     };
+    if let Some((table, pred)) = shipped_pred {
+        // The prepended stage measured the predicate's true selectivity
+        // over the whole table — feed it back just like the scan arm's
+        // leader-side evaluation would have.
+        ctx.catalog.stats().observe(table, pred, rows_in, stage_totals.first().copied().unwrap_or(0));
+    }
     let after = ctx.tally.totals();
     stats.fragments.push(FragmentStats {
         ops,
@@ -3139,6 +3781,114 @@ impl PartialAgg {
             }
         })
     }
+
+    /// Repartition this partial's per-group states: local group `l`
+    /// travels to partition `assign[l]`, keeping ascending local-group
+    /// order inside each partition (the order the owner's translated
+    /// merge map expects). Consumes `self` exactly once — UDAF states
+    /// are moved, never cloned — which is what lets one morsel's
+    /// partial feed several partition owners without a copyable state
+    /// requirement. Raw MIN/MAX row indices cannot travel (same rule as
+    /// [`PartialAgg::empty_like`]); fragment morsels value-convert
+    /// before the leader ever routes them.
+    fn split(self, assign: &[u32], n_parts: usize) -> Result<Vec<PartialAgg>> {
+        fn scatter<T>(v: Vec<T>, assign: &[u32], n_parts: usize) -> Vec<Vec<T>> {
+            let mut out: Vec<Vec<T>> = (0..n_parts).map(|_| Vec::new()).collect();
+            for (x, &p) in v.into_iter().zip(assign) {
+                out[p as usize].push(x);
+            }
+            out
+        }
+        Ok(match self {
+            PartialAgg::CountStar(c) => scatter(c, assign, n_parts)
+                .into_iter()
+                .map(PartialAgg::CountStar)
+                .collect(),
+            PartialAgg::Count(c) => {
+                scatter(c, assign, n_parts).into_iter().map(PartialAgg::Count).collect()
+            }
+            PartialAgg::IntSum { isums, fsums, overflowed, any } => {
+                let isums = scatter(isums, assign, n_parts);
+                let fsums = scatter(fsums, assign, n_parts);
+                let overflowed = scatter(overflowed, assign, n_parts);
+                let any = scatter(any, assign, n_parts);
+                isums
+                    .into_iter()
+                    .zip(fsums)
+                    .zip(overflowed)
+                    .zip(any)
+                    .map(|(((isums, fsums), overflowed), any)| PartialAgg::IntSum {
+                        isums,
+                        fsums,
+                        overflowed,
+                        any,
+                    })
+                    .collect()
+            }
+            PartialAgg::FloatSum { sums, any } => scatter(sums, assign, n_parts)
+                .into_iter()
+                .zip(scatter(any, assign, n_parts))
+                .map(|(sums, any)| PartialAgg::FloatSum { sums, any })
+                .collect(),
+            PartialAgg::NullAgg => (0..n_parts).map(|_| PartialAgg::NullAgg).collect(),
+            PartialAgg::Avg { sums, counts } => scatter(sums, assign, n_parts)
+                .into_iter()
+                .zip(scatter(counts, assign, n_parts))
+                .map(|(sums, counts)| PartialAgg::Avg { sums, counts })
+                .collect(),
+            PartialAgg::MinMax { .. } => {
+                bail!("row-index MIN/MAX partials must be value-converted before repartitioning")
+            }
+            PartialAgg::MinMaxVals { vals, dt, is_min } => scatter(vals, assign, n_parts)
+                .into_iter()
+                .map(|vals| PartialAgg::MinMaxVals { vals, dt, is_min })
+                .collect(),
+            PartialAgg::Udaf(states) => {
+                scatter(states, assign, n_parts).into_iter().map(PartialAgg::Udaf).collect()
+            }
+        })
+    }
+
+    /// Is this partial's merge *exactly associative* — safe to fold in
+    /// any grouping, not just the leader's strict morsel order? Counts,
+    /// value-carried MIN/MAX (comparison-based, first-seen ties keep
+    /// the earlier side), and the all-NULL sentinel qualify
+    /// unconditionally. Float sums, averages, and UDAF states
+    /// re-associate under a tree and are only bit-stable for exactly
+    /// representable data, so they stay on the leader's ordered fold.
+    /// An Int64 SUM is exact — any association yields the same result —
+    /// *unless* some grouping could overflow i64 mid-fold; the i128
+    /// magnitude bound proves every possible partial sum stays in
+    /// range.
+    fn tree_mergeable(partials: &[&PartialAgg]) -> bool {
+        match partials.first() {
+            Some(PartialAgg::CountStar(_))
+            | Some(PartialAgg::Count(_))
+            | Some(PartialAgg::NullAgg) => true,
+            // MIN/MAX over a *totally ordered* dtype is an associative
+            // selection (ties keep the earlier side, and tree pairs are
+            // contiguous). Float is excluded: a NaN current-best absorbs
+            // every later candidate, so which rows it shadows depends on
+            // the fold grouping.
+            Some(PartialAgg::MinMaxVals { dt, .. }) => *dt != DataType::Float64,
+            Some(PartialAgg::IntSum { .. }) => {
+                let mut bound: i128 = 0;
+                for p in partials {
+                    match p {
+                        PartialAgg::IntSum { isums, overflowed, .. } => {
+                            if overflowed.iter().any(|&o| o) {
+                                return false;
+                            }
+                            bound += isums.iter().map(|&s| (s as i128).abs()).sum::<i128>();
+                        }
+                        _ => return false,
+                    }
+                }
+                bound <= i64::MAX as i128
+            }
+            _ => false,
+        }
+    }
 }
 
 /// Morsel-dispatched aggregation: every morsel builds a local key-codec
@@ -3614,16 +4364,39 @@ fn join_pairs(
             // equal ids; one hash per row, zero key clones.
             let mut dict = KeyDict::new();
             let build_keys = EncodedKeys::encode(&rkey_cols, KeyMode::Join, &mut dict);
-            // Build the shared table, hash-partitioned across workers
-            // when the build side is large: one O(n) pass routes each
-            // non-NULL build row to its partition, then the sub-tables
-            // build concurrently from their (ascending) row lists. Equal
-            // keys share a hash, so every partition owns all rows of its
-            // keys and the combined table behaves exactly like a
-            // single-table build. The build runs on the leader, so it
-            // gets the leader's per-node worker budget (the partitioned
-            // table is probe-identical at any partition count).
-            let n_parts = parallel_threads(r.num_rows(), ctx).min(ctx.parallelism.max(1));
+            // Build the shared table, hash-partitioned: one O(n) pass
+            // routes each non-NULL build row to its partition, then the
+            // sub-tables build concurrently from their (ascending) row
+            // lists. Equal keys share a hash, so every partition owns
+            // all rows of its keys and the combined table behaves
+            // exactly like a single-table build (probe-identical at any
+            // partition count). Two regimes:
+            //
+            // - **Partitioned build** (shuffle on, multi-node, build
+            //   side at least a morsel whose key NDV — estimated by the
+            //   same HyperLogLog sketch registration stats use — spans
+            //   the warehouse): one partition per *node*; each node is
+            //   charged its own partition's build plus modeled wire for
+            //   the key span it receives, replacing the leader-built
+            //   broadcast.
+            // - **Leader build** otherwise: partitioned across the
+            //   leader's worker budget when large, single-table when
+            //   small; busy charged to node 0 (that is the bottleneck
+            //   A15 measures).
+            let distributed = ctx.shuffle && ctx.nodes > 1 && r.num_rows() >= MORSEL_MIN_ROWS && {
+                let mut sketch = crate::util::hll::Hll::new();
+                for row in 0..build_keys.len() {
+                    if !build_keys.has_null(row) {
+                        sketch.insert(build_keys.hash(row));
+                    }
+                }
+                sketch.estimate() >= ctx.nodes as f64
+            };
+            let n_parts = if distributed {
+                ctx.nodes
+            } else {
+                parallel_threads(r.num_rows(), ctx).min(ctx.parallelism.max(1))
+            };
             let parts: Vec<JoinTable> = if n_parts > 1 {
                 let mut part_rows: Vec<Vec<u32>> = vec![Vec::new(); n_parts];
                 for row in 0..build_keys.len() {
@@ -3633,18 +4406,50 @@ fn join_pairs(
                     }
                 }
                 let bk = &build_keys;
-                std::thread::scope(|s| {
+                let built: Vec<(JoinTable, u64, u64)> = std::thread::scope(|s| {
                     let handles: Vec<_> = part_rows
                         .into_iter()
-                        .map(|rows| s.spawn(move || JoinTable::build_from_rows(bk, rows)))
+                        .map(|rows| {
+                            s.spawn(move || {
+                                let t0 = Instant::now();
+                                let n = rows.len() as u64;
+                                let t = JoinTable::build_from_rows(bk, rows);
+                                (t, t0.elapsed().as_nanos() as u64, n)
+                            })
+                        })
                         .collect();
                     handles
                         .into_iter()
                         .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
                         .collect()
-                })
+                });
+                built
+                    .into_iter()
+                    .enumerate()
+                    .map(|(p, (t, busy_ns, rows))| {
+                        if distributed && p != 0 {
+                            let wire_bytes = 9 * rkey_cols.len().max(1) as u64 * rows;
+                            ctx.transport.charge_cpu(wire_bytes);
+                            ctx.tally.record(
+                                p,
+                                NodeCounters { wire_bytes, busy_ns, ..Default::default() },
+                            );
+                        } else {
+                            let node = if distributed { p } else { 0 };
+                            ctx.tally
+                                .record(node, NodeCounters { busy_ns, ..Default::default() });
+                        }
+                        t
+                    })
+                    .collect()
             } else {
-                vec![JoinTable::build(&build_keys)]
+                let t0 = Instant::now();
+                let t = vec![JoinTable::build(&build_keys)];
+                ctx.tally.record(
+                    0,
+                    NodeCounters { busy_ns: t0.elapsed().as_nanos() as u64, ..Default::default() },
+                );
+                t
             };
             let table = PartitionedJoinTable::from_parts(parts);
             // Probe in row order; per-row match enumeration is what the
@@ -4665,7 +5470,13 @@ mod tests {
                 "no fragment recorded at ({nodes},{threads})"
             );
             let f = &frag_stats.fragments[0];
-            assert_eq!(f.ops, vec!["filter", "project", "aggregate"]);
+            if nodes > 1 {
+                // The shuffled finalize engages by default at multi-node
+                // shapes and tags the fragment's breaker.
+                assert_eq!(f.ops, vec!["filter", "project", "aggregate", "shuffle"]);
+            } else {
+                assert_eq!(f.ops, vec!["filter", "project", "aggregate"]);
+            }
             assert!(legacy_stats.fragments.is_empty());
             if nodes > 1 {
                 let (fw, lw) = (frag_stats.total_wire_bytes(), legacy_stats.total_wire_bytes());

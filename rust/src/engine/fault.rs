@@ -8,7 +8,12 @@
 //! module gives our own warehouse dispatch the managed-service failure
 //! semantics — so `engine/exec.rs::dispatch_morsels` can retry a failed
 //! node span with capped backoff, blacklist repeat offenders, degrade to
-//! the leader, and honor per-query deadlines.
+//! the leader, and honor per-query deadlines. The PR 10 shuffle's
+//! per-partition dispatch (`exec::dispatch_partitions`) runs its
+//! shipment gauntlet through the same scope: a blacklisted partition
+//! owner's partitions reroute to surviving nodes (ultimately the
+//! leader) before any state is consumed, so recovery never replays a
+//! partial merge.
 //!
 //! Everything is deterministic: a [`FaultPlan`] is parsed from a seeded
 //! spec string (`SNOWPARK_FAULT_PLAN` / `run-sql --fault-plan`) and fires

@@ -57,6 +57,22 @@
 //! re-encodes its input columns from the leader's materialized source
 //! and recomputes every stage — so a retried or rerouted span is
 //! bit-identical to the first attempt at any shape.
+//!
+//! **The shuffle boundary** (PR 10): with `ExecContext::shuffle` on at
+//! multi-node shapes, a fragment's breaker gains a second exchange hop —
+//! its own breaker kind, reported as a `"shuffle"` op on the fragment.
+//! After the morsel dispatch returns the node-local halves, the leader
+//! *routes* instead of merging: each global group (aggregate cap) is
+//! hash-partitioned to an owning node that folds its groups' partials
+//! in morsel order via `exec::dispatch_partitions` (per-partition task
+//! dispatch with the same retry/reroute recovery as span dispatch — a
+//! blacklisted owner's partitions redistribute to survivors), and sorted
+//! runs climb a binary node tree instead of fanning into a flat leader
+//! k-way merge. First-seen group order survives repartitioning because
+//! partition routing happens *after* the leader assigns global dense
+//! ids, and within a partition groups stay in ascending global-id
+//! order. `SNOWPARK_SHUFFLE=0` pins the flat leader-merge breaker as
+//! the differential baseline.
 
 use crate::sql::ast::{Expr, OrderKey};
 use crate::udf::UdfRegistry;
@@ -260,6 +276,22 @@ impl<'p> Fragment<'p> {
             return None;
         }
         Some((stages, FragCap::Sort { keys, limit, tail }, source))
+    }
+
+    /// Prepend a filter stage (an embedded scan predicate being shipped
+    /// with the fragment to remote spans instead of materialized on the
+    /// leader). The predicate borrows from the same plan as every other
+    /// stage, so the fragment's lifetime is unchanged.
+    pub(crate) fn with_prepended_filter(mut self, pred: &'p Expr) -> Fragment<'p> {
+        self.stages.insert(0, FragStage::Filter(pred));
+        self
+    }
+
+    /// Undo [`Fragment::with_prepended_filter`] when the ship plan
+    /// declines and the caller falls back to leader-side evaluation.
+    pub(crate) fn without_prepended_filter(mut self) -> Fragment<'p> {
+        self.stages.remove(0);
+        self
     }
 
     /// Operator names fused into this fragment, in execution order

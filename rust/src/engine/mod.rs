@@ -15,7 +15,13 @@
 //! `fragment`): each remote node receives its span of a fragment's
 //! input columns once and returns only the fragment outputs (column
 //! segments, aggregate partials, sorted runs) for the leader's
-//! pipeline-breaker step. Node-span dispatch is fault-tolerant: under a
+//! pipeline-breaker step. At multi-node shapes the breakers themselves
+//! distribute ([`ExecContext::shuffle`], `SNOWPARK_SHUFFLE=0` pins the
+//! leader-merge baseline): aggregate groups hash-partition to owning
+//! nodes that fold their partials in place, sorted runs climb a binary
+//! merge tree, and large join build sides build partitioned per node
+//! instead of as a leader-built broadcast. Node-span dispatch is
+//! fault-tolerant: under a
 //! [`fault::FaultPlan`] a failed span retries with capped backoff,
 //! repeat offenders are blacklisted and their spans reroute to
 //! survivors (degrading to the leader), and a [`fault::CancelToken`]
@@ -44,9 +50,9 @@ pub use catalog::{parse_csv, Catalog};
 pub use config::EngineConfig;
 pub use fragment::FuseNote;
 pub use exec::{
-    default_fragments, default_nodes, default_parallelism, default_rewrite, execute_plan,
-    execute_plan_with_stats, run_sql, run_sql_with_stats, ExecContext, FragmentStats, OpStats,
-    QueryStats, MORSEL_MIN_ROWS,
+    default_fragments, default_nodes, default_parallelism, default_rewrite, default_shuffle,
+    execute_plan, execute_plan_with_stats, run_sql, run_sql_with_stats, ExecContext,
+    FragmentStats, OpStats, QueryStats, MORSEL_MIN_ROWS,
 };
 pub use fault::{CancelToken, DeadlineExceeded, FaultPlan, FaultScope, InjectedFault};
 pub use morsel::{

@@ -24,6 +24,15 @@
 //! matter which worker ran which morsel. The first error in *task* order
 //! wins, matching sequential evaluation.
 //!
+//! Two dispatch granularities share this module's [`ExecTally`] /
+//! [`NodeCounters`] accounting: the *span* dispatch
+//! (`exec::dispatch_morsels` — contiguous morsel ranges per node) and,
+//! since PR 10, the *partition* dispatch (`exec::dispatch_partitions` —
+//! one shuffle partition per owning node, used by the hash-partitioned
+//! breaker finalize). Both record per-node busy/wire/retry counters
+//! here, so the balance history the adaptive shape policy consumes sees
+//! shuffle skew exactly like morsel skew.
+//!
 //! [`StealConfig::steal`]` = false` degrades to the PR 3 static plan
 //! (contiguous pre-seeded blocks, no refill, no stealing) — kept as the
 //! ablation baseline (`distributed_morsels`, A10).

@@ -6,7 +6,11 @@
 //! distributed morsel dispatch: the per-query [`NodeBalance`] history
 //! the stats framework records (§IV.B machinery, §IV.C signal) drives
 //! the `(nodes, parallelism)` shape the next execution of the same
-//! query runs with. Every *morsel-parallel* shape is bit-identical, so
+//! query runs with. Since PR 10 that history also carries the
+//! hash-partitioned shuffle's per-node busy/wire counters (partition
+//! owners fold their groups' partials in place), so shuffle skew — a
+//! hot partition under Zipf keys — feeds the same balance signal and
+//! halves the fan-out exactly like morsel skew does. Every *morsel-parallel* shape is bit-identical, so
 //! shape changes trade only wire bytes and balance; the one caveat is
 //! the engine's documented sequential-vs-parallel float-association
 //! difference — it applies only when a pick crosses the

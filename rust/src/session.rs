@@ -391,6 +391,7 @@ impl Session {
             cancel: self.query_timeout.map(CancelToken::with_deadline),
             fault_retry: true,
             rewrite: self.engine.rewrite,
+            shuffle: self.engine.shuffle,
         }
     }
 

@@ -5,6 +5,12 @@
 //! contiguous row range of a source [`RowSet`] (no intermediate sliced
 //! rowset, no per-row `RowSet::row` → `Vec<Value>` round trip), and the
 //! receiver decodes it back with typed bulk appends into column buffers.
+//! The engine's shuffle (PR 10) ships each partition's gathered
+//! representative-key columns as an ordinary batch whose synthetic
+//! `__g{i}` field names tag the shipment as partition payload; the
+//! destination node is carried by the exchange call, not the frame, so
+//! the codec stays position-independent and `wire_len()` keeps costing
+//! exactly what travels.
 //!
 //! ## Byte layout (all integers little-endian)
 //!

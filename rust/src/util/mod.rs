@@ -1,12 +1,14 @@
 //! Foundation utilities built from scratch for the offline environment
 //! (no rand / serde / clap / criterion / proptest crates are available):
 //! deterministic PRNG + distributions, wall/virtual clocks, percentile
-//! histograms, a byte-budgeted LRU, a TOML-subset config parser, a CLI
-//! argument parser, and a miniature property-testing framework.
+//! histograms, a hybrid-exact HyperLogLog distinct-count sketch, a
+//! byte-budgeted LRU, a TOML-subset config parser, a CLI argument
+//! parser, and a miniature property-testing framework.
 
 pub mod cli;
 pub mod clock;
 pub mod histogram;
+pub mod hll;
 pub mod ids;
 pub mod lru;
 pub mod quick;

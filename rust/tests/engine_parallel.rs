@@ -296,7 +296,9 @@ fn fragment_dispatch_ships_strictly_fewer_wire_bytes() {
         );
         assert_eq!(frag.fragments.len(), 1, "{:?}", frag.fragments);
         let f = &frag.fragments[0];
-        assert_eq!(f.ops, vec!["filter", "project", "aggregate"]);
+        // Both shapes are multi-node, so the shuffled finalize engages
+        // (and tags the breaker) by default.
+        assert_eq!(f.ops, vec!["filter", "project", "aggregate", "shuffle"]);
         assert_eq!(f.wire_bytes, fw, "all shipping happened in the fragment");
         assert!(f.est_operator_wire_bytes > f.wire_bytes, "{f:?}");
         assert!(op.fragments.is_empty());
@@ -315,6 +317,75 @@ fn fragment_static_matches_stealing() {
         let fixed = run_sql(q, &ctx(cat.clone(), 4).with_nodes(2).with_stealing(false))
             .unwrap_or_else(|e| panic!("static: {q}: {e}"));
         assert_eq!(fixed, steal, "static vs stealing: {q}");
+    }
+}
+
+/// The ISSUE 10 acceptance matrix: the hash-partitioned shuffle
+/// finalize (grouped aggregation folded on owning partitions,
+/// tree-structured scalar and sorted-run merges, partitioned join
+/// builds) must be byte-identical to the leader-merge baseline
+/// (`SNOWPARK_SHUFFLE=0` / `with_shuffle(false)`) AND to the
+/// sequential path at `(nodes, threads)` ∈
+/// {(1,1), (1,8), (2,4), (4,2), (8,2)} — the widest shape exceeds the
+/// morsel count, exercising the partition-count clamp — over uniform
+/// and Zipf-1.2 keys.
+#[test]
+fn shuffle_matches_leader_merge_at_every_shape() {
+    for (seed, zipf) in [(61u64, None), (62, Some(1.2))] {
+        let cat = catalog(30_000, 600, zipf, seed);
+        for q in FRAGMENT_QUERIES.iter().chain(QUERIES) {
+            let base = run_sql(q, &ctx(cat.clone(), 1).with_nodes(1).with_shuffle(false))
+                .unwrap_or_else(|e| panic!("seed {seed}: {q}: {e}"));
+            for (nodes, threads) in [(1usize, 1usize), (1, 8), (2, 4), (4, 2), (8, 2)] {
+                for shuffle in [true, false] {
+                    let out = run_sql(
+                        q,
+                        &ctx(cat.clone(), threads).with_nodes(nodes).with_shuffle(shuffle),
+                    )
+                    .unwrap_or_else(|e| {
+                        panic!("seed {seed} ({nodes},{threads}) shuffle={shuffle}: {q}: {e}")
+                    });
+                    assert_eq!(
+                        out, base,
+                        "seed {seed} ({nodes},{threads}) shuffle={shuffle}: {q}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Shuffle + chaos: a killed partition owner's partitions reroute to
+/// survivors without disturbing a single byte. With the shuffle pinned
+/// on, permanently dead remotes (blacklist → reroute, degrading to the
+/// leader), an injected panic, and a mixed ship/eval plan all leave
+/// every query identical to the fault-free sequential run — and on the
+/// permanent-death plan the recovery is visible in the retry and
+/// blacklist counters.
+#[test]
+fn shuffle_reroutes_killed_partition_owners_byte_identically() {
+    let cat = catalog(30_000, 600, Some(1.2), 63);
+    for plan in ["seed=16;ship=1:99", "seed=17;panic=2:1", "seed=18;ship=1:99;eval=3:99"] {
+        for q in FAULT_QUERIES {
+            let base = run_sql(q, &ctx(cat.clone(), 1).with_nodes(1))
+                .unwrap_or_else(|e| panic!("{q}: {e}"));
+            for (nodes, threads) in [(2usize, 4usize), (4, 2), (8, 2)] {
+                let c = fault_ctx(cat.clone(), threads, nodes, plan).with_shuffle(true);
+                let (out, stats) = run_sql_with_stats(q, &c)
+                    .unwrap_or_else(|e| panic!("({nodes},{threads}) {plan}: {q}: {e}"));
+                assert_eq!(out, base, "({nodes},{threads}) {plan}: {q}");
+                if plan == "seed=16;ship=1:99" {
+                    assert!(
+                        stats.total_retries() >= 2,
+                        "({nodes},{threads}) {plan}: no retries recorded: {stats:?}"
+                    );
+                    assert!(
+                        stats.total_blacklisted() >= 1,
+                        "({nodes},{threads}) {plan}: owner never blacklisted: {stats:?}"
+                    );
+                }
+            }
+        }
     }
 }
 
